@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/ -q` work from the root
+by putting the `python/` package directory on sys.path (the suite imports
+`compile.*`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

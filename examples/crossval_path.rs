@@ -1,0 +1,143 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): model selection by
+//! K-fold cross-validation over a 100-point λ-grid on a realistic
+//! (simulated gene-expression) workload — the exact scenario the paper's
+//! introduction motivates for sequential screening.
+//!
+//! The full system composes here: dataset generation → trial scheduler
+//! (coordinator) → per-fold screened paths (EDPP + CD, warm starts) →
+//! validation-error selection of λ̂ → headline metrics (rejection ratio,
+//! speedup vs the unscreened baseline) printed and appended to results/.
+//!
+//!     cargo run --release --example crossval_path [--full]
+
+use dpp_screen::coordinator::run_trials;
+use dpp_screen::data::{Dataset, RealDataset};
+use dpp_screen::linalg::DenseMatrix;
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::util::benchkit::Report;
+use dpp_screen::util::timer::timed;
+
+/// Split rows into K folds; returns per-fold (train, valid) row indices.
+fn kfold(n: usize, k: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    (0..k)
+        .map(|f| {
+            let valid: Vec<usize> = (0..n).filter(|i| i % k == f).collect();
+            let train: Vec<usize> = (0..n).filter(|i| i % k != f).collect();
+            (train, valid)
+        })
+        .collect()
+}
+
+/// Row-subset copy of a problem.
+fn subset(ds: &Dataset, rows: &[usize]) -> (DenseMatrix, Vec<f64>) {
+    let mut x = DenseMatrix::zeros(rows.len(), ds.p());
+    for j in 0..ds.p() {
+        let src = ds.x.col(j);
+        let dst = x.col_mut(j);
+        for (ri, &r) in rows.iter().enumerate() {
+            dst[ri] = src[r];
+        }
+    }
+    let y = rows.iter().map(|&r| ds.y[r]).collect();
+    (x, y)
+}
+
+fn validation_mse(ds: &Dataset, rows: &[usize], beta: &[f64]) -> f64 {
+    let mut err = 0.0;
+    for &r in rows {
+        let mut pred = 0.0;
+        for j in 0..ds.p() {
+            if beta[j] != 0.0 {
+                pred += ds.x.get(r, j) * beta[j];
+            }
+        }
+        let e = ds.y[r] - pred;
+        err += e * e;
+    }
+    err / rows.len().max(1) as f64
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full")
+        || dpp_screen::util::full_scale();
+    let k_folds = 5;
+    let grid_k = dpp_screen::util::grid_size(100);
+
+    // a lung-cancer-like expression problem: the intro's motivating setting
+    let ds = RealDataset::LungCancer.generate(full, 7);
+    println!(
+        "workload: {} ({}×{}), {k_folds}-fold CV over {grid_k} λ values",
+        ds.name,
+        ds.n(),
+        ds.p()
+    );
+
+    let folds = kfold(ds.n(), k_folds);
+    let cfg = PathConfig::default();
+
+    // --- screened CV (EDPP), folds fanned out via the coordinator ---
+    let ds_ref = &ds;
+    let folds_ref = &folds;
+    let (cv_results, edpp_secs) = timed(|| {
+        run_trials(k_folds, dpp_screen::coordinator::default_workers(), |f| {
+            let (x, y) = subset(ds_ref, &folds_ref[f].0);
+            let grid = LambdaGrid::relative(&x, &y, grid_k, 0.05, 1.0);
+            let out = solve_path(&x, &y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+            let errs: Vec<f64> = out
+                .betas
+                .iter()
+                .map(|b| validation_mse(ds_ref, &folds_ref[f].1, b))
+                .collect();
+            (out.mean_rejection_ratio(), errs, grid.values.clone(), grid.lam_max)
+        })
+    });
+
+    // --- unscreened baseline (same folds) for the speedup metric ---
+    let (_, base_secs) = timed(|| {
+        run_trials(k_folds, dpp_screen::coordinator::default_workers(), |f| {
+            let (x, y) = subset(ds_ref, &folds_ref[f].0);
+            let grid = LambdaGrid::relative(&x, &y, grid_k, 0.05, 1.0);
+            solve_path(&x, &y, &grid, RuleKind::None, SolverKind::Cd, &cfg).total_secs()
+        })
+    });
+
+    // aggregate CV curve (mean over folds at each λ index)
+    let mut cv_curve = vec![0.0; grid_k];
+    for (_, errs, _, _) in &cv_results {
+        for (i, e) in errs.iter().enumerate() {
+            cv_curve[i] += e / k_folds as f64;
+        }
+    }
+    let best = cv_curve
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let frac = 1.0 - (1.0 - 0.05) * best as f64 / (grid_k - 1) as f64;
+    let mean_rej: f64 =
+        cv_results.iter().map(|(r, _, _, _)| r).sum::<f64>() / k_folds as f64;
+
+    println!("\nselected λ̂/λmax = {frac:.3} (CV-MSE {:.4})", cv_curve[best]);
+    println!("mean rejection ratio (EDPP): {mean_rej:.4}");
+    println!(
+        "CV wall time: {base_secs:.2}s unscreened → {edpp_secs:.2}s with EDPP  ({:.1}× speedup)",
+        base_secs / edpp_secs.max(1e-12)
+    );
+
+    let mut rep = Report::new(
+        "crossval_path end-to-end run",
+        &["workload", "folds", "grid", "λ̂/λmax", "mean rejection", "base(s)", "edpp(s)", "speedup"],
+    );
+    rep.row(&[
+        ds.name.clone(),
+        k_folds.to_string(),
+        grid_k.to_string(),
+        format!("{frac:.3}"),
+        format!("{mean_rej:.4}"),
+        format!("{base_secs:.2}"),
+        format!("{edpp_secs:.2}"),
+        format!("{:.1}x", base_secs / edpp_secs.max(1e-12)),
+    ]);
+    rep.emit("end_to_end.md");
+}

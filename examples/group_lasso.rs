@@ -1,0 +1,49 @@
+//! Group-Lasso screening demo (paper §3 / §4.2): the group EDPP rule —
+//! the first *safe* screening rule for group Lasso — against the heuristic
+//! group strong rule, across group counts.
+//!
+//!     cargo run --release --example group_lasso [--full]
+
+use dpp_screen::data::synthetic;
+use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
+use dpp_screen::path::LambdaGrid;
+use dpp_screen::solver::dual::group_lambda_max;
+use dpp_screen::solver::SolveOptions;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full")
+        || dpp_screen::util::full_scale();
+    // paper: X is 250×200000; scaled default keeps the demo seconds-scale
+    let (n, p) = if full { (250, 200_000) } else { (80, 4_000) };
+    let group_counts: [usize; 3] = if full { [10_000, 20_000, 40_000] } else { [200, 400, 800] };
+    let grid_k = dpp_screen::util::grid_size(50);
+    let opts = SolveOptions::default();
+
+    println!("group-Lasso screening on {n}×{p} gaussian design (paper §4.2)\n");
+    println!("  n_g   s_g   rule          mean-rejection  screen(s)  solve(s)  speedup");
+    for ng in group_counts {
+        let ds = synthetic::group_synthetic(n, p, ng, 99);
+        let groups = ds.groups.clone().unwrap();
+        let (glm, _) = group_lambda_max(&ds.x, &ds.y, &groups);
+        let grid = LambdaGrid::relative_to(glm, grid_k, 0.05, 1.0);
+
+        let base = solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::None, &opts);
+        for rule in [GroupRuleKind::Strong, GroupRuleKind::Edpp] {
+            let out = solve_group_path(&ds.x, &ds.y, &groups, &grid, rule, &opts);
+            println!(
+                "  {:5} {:4}  {:12}  {:14.4}  {:9.3}  {:8.3}  {:6.1}x",
+                ng,
+                p / ng,
+                out.rule,
+                out.mean_rejection_ratio(),
+                out.total_screen_secs(),
+                out.total_solve_secs(),
+                base.total_secs() / out.total_secs().max(1e-12),
+            );
+        }
+    }
+    println!(
+        "\nPaper Fig. 6 shape: rejection rises with n_g (smaller groups ⇒ tighter\n\
+         dual estimate), and group-EDPP ≥ group-strong while staying safe."
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX graphs, AOT export.
+
+Never imported at runtime - the rust binary consumes only the HLO-text
+artifacts this package writes (DESIGN.md section 1).
+"""

@@ -1,0 +1,76 @@
+"""AOT pipeline: lower the L2 graphs (with their L1 Pallas kernels inlined)
+to HLO text artifacts + a manifest the rust runtime consumes.
+
+Run via `make artifacts` (no-op when inputs are unchanged — make tracks the
+dependency on this package). Usage:
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model, shapes
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def artifact_specs():
+    """Yield (name, n, p, fn, example_args) for every export."""
+    for n, p in shapes.xt_w_shapes():
+        yield ("xt_w", n, p, model.xt_w, (f32((n, p)), f32((n,))))
+    for n, p in shapes.xt_w_pallas_shapes():
+        yield ("xt_w_pallas", n, p, model.xt_w_pallas, (f32((n, p)), f32((n,))))
+    for n, p in shapes.edpp_screen_shapes():
+        yield (
+            "edpp_screen",
+            n,
+            p,
+            model.edpp_screen,
+            (f32((n, p)), f32((n,)), f32((n,)), scalar(), scalar(), f32((p,))),
+        )
+    for n, p in shapes.fista_epoch_shapes():
+        yield (
+            "fista_epoch",
+            n,
+            p,
+            model.fista_epoch,
+            (f32((n, p)), f32((n,)), f32((p,)), f32((p,)), scalar(), scalar(), scalar()),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = [
+        "# dpp-screen AOT manifest: name<TAB>n<TAB>p<TAB>file (HLO text)"
+    ]
+    for name, n, p, fn, ex_args in artifact_specs():
+        fname = f"{name}_n{n}_p{p}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        text = model.lower_to_hlo_text(fn, ex_args)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{n}\t{p}\t{fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(manifest_lines) - 1} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

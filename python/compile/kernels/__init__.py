@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from . import ref, screen_kernel  # noqa: F401

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every kernel in this package must match its `*_ref` twin to float32
+tolerance; `python/tests/test_kernels.py` sweeps shapes with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def xt_w_ref(x, w):
+    """Correlation sweep `Xᵀw` — the O(Np) hot spot of every screening rule."""
+    return x.T @ w
+
+
+def screen_mask_ref(scores, col_norms, radius):
+    """Sphere test (paper eq. (14) / rule (R1')): keep feature i when
+    `|score_i| + radius * ||x_i|| >= 1`. Returns float32 {0,1} keep mask."""
+    return (jnp.abs(scores) + radius * col_norms >= 1.0).astype(jnp.float32)
+
+
+def v2_perp_ref(v1, v2):
+    """v2_perp = v2 - (<v1,v2>/||v1||^2) * v1 (paper eq. (19)), guarded like
+    the rust implementation: fall back to v2 when <v1,v2> < 0."""
+    ip = jnp.vdot(v1, v2)
+    denom = jnp.vdot(v1, v1)
+    coef = jnp.where((denom > 0.0) & (ip >= 0.0), ip / jnp.maximum(denom, 1e-30), 0.0)
+    return v2 - coef * v1
+
+
+def edpp_screen_ref(x, y, theta, inv_lam0, inv_lam, col_norms):
+    """EDPP step (interior case lam0 < lam_max, Corollary 17) — oracle for
+    the L2 `edpp_screen` graph. Returns (scores, radius, mask)."""
+    v1 = y * inv_lam0 - theta
+    v2 = y * inv_lam - theta
+    perp = v2_perp_ref(v1, v2)
+    center = theta + 0.5 * perp
+    scores = xt_w_ref(x, center)
+    radius = 0.5 * jnp.sqrt(jnp.vdot(perp, perp))
+    mask = screen_mask_ref(scores, col_norms, radius)
+    return scores, radius, mask
+
+
+def fista_epoch_ref(x, y, beta, w, t, inv_lip, lam):
+    """One FISTA iteration (oracle for the L2 `fista_epoch` graph)."""
+    grad = x.T @ (x @ w - y)
+    z = w - inv_lip * grad
+    thr = lam * inv_lip
+    beta_new = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+    w_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
+    return beta_new, w_new, t_new

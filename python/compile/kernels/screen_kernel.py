@@ -1,0 +1,116 @@
+"""L1 Pallas kernels: the tiled correlation sweep `Xᵀw` and the fused
+sphere-test threshold.
+
+Hardware adaptation (DESIGN.md §2): the paper's hot spot is the dense
+correlation sweep over all p features. On TPU we tile X into
+(BLOCK_N × BLOCK_P) panels held in VMEM via `BlockSpec`, stream panels
+HBM→VMEM along the reduction (N) axis with a VMEM accumulator, and shape
+each panel product as a (BLOCK_P × BLOCK_N)·(BLOCK_N) contraction so the
+MXU systolic array is engaged. The threshold compare is fused into a second
+elementwise kernel so the keep-mask never round-trips through HBM
+separately from the scores.
+
+All kernels run with `interpret=True`: the CPU image cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust PJRT CPU
+client executes (see /opt/xla-example/README.md). Real-TPU tile-size
+estimates are recorded in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU-friendly defaults: BLOCK_P is a multiple of the 128-lane vector width,
+# BLOCK_N a multiple of 8 (sublane) — VMEM footprint per panel:
+# 256·128·4B = 128 KiB, well under the ~16 MiB/core budget even with
+# double-buffering.
+BLOCK_N = 256
+BLOCK_P = 128
+
+
+def _xt_w_kernel(x_ref, w_ref, o_ref):
+    """One (n-tile, p-tile) grid step: o[pb] += x[nb, pb]ᵀ · w[nb]."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BLOCK_P, BLOCK_N) · (BLOCK_N,) contraction — MXU-shaped on real TPU
+    o_ref[...] += x_ref[...].T @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p"))
+def xt_w(x, w, *, block_n: int = BLOCK_N, block_p: int = BLOCK_P):
+    """Tiled `Xᵀw` for x of shape (n, p) and w of shape (n,).
+
+    Shapes are padded up to tile multiples with zeros (zero rows/columns
+    contribute nothing to the dot products, and padded output columns are
+    sliced off).
+    """
+    n, p = x.shape
+    n_pad = (-n) % block_n
+    p_pad = (-p) % block_p
+    if n_pad or p_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, p_pad)))
+        w = jnp.pad(w, (0, n_pad))
+    np_, pp = x.shape
+    grid = (pp // block_p, np_ // block_n)
+    out = pl.pallas_call(
+        _xt_w_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_p), lambda pi, ni: (ni, pi)),
+            pl.BlockSpec((block_n,), lambda pi, ni: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda pi, ni: (pi,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), x.dtype),
+        interpret=True,
+    )(x, w)
+    return out[:p]
+
+
+def _mask_kernel(scores_ref, norms_ref, radius_ref, o_ref):
+    """Fused sphere test: keep_i = |score_i| + radius·norm_i ≥ 1."""
+    radius = radius_ref[0]
+    sup = jnp.abs(scores_ref[...]) + radius * norms_ref[...]
+    o_ref[...] = (sup >= 1.0).astype(jnp.float32)
+
+
+@jax.jit
+def screen_mask(scores, col_norms, radius):
+    """Fused threshold over all p features; radius is a scalar (passed as a
+    length-1 array so the kernel stays shape-polymorphic in p only)."""
+    p = scores.shape[0]
+    block = min(BLOCK_P, p) if p % BLOCK_P else BLOCK_P
+    p_pad = (-p) % block
+    if p_pad:
+        scores = jnp.pad(scores, (0, p_pad))
+        # pad norms with a huge value so padded lanes are "kept" and sliced off
+        col_norms = jnp.pad(col_norms, (0, p_pad), constant_values=1e30)
+    pp = scores.shape[0]
+    radius_arr = jnp.reshape(radius.astype(jnp.float32), (1,))
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(pp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(scores, col_norms, radius_arr)
+    return out[:p]
+
+
+def vmem_footprint_bytes(block_n: int = BLOCK_N, block_p: int = BLOCK_P) -> int:
+    """Estimated VMEM bytes per grid step of `xt_w` (f32, double-buffered
+    inputs + accumulator) — used by the §Perf structural check."""
+    panel = block_n * block_p * 4
+    w_tile = block_n * 4
+    acc = block_p * 4
+    return 2 * (panel + w_tile) + acc

@@ -1,0 +1,90 @@
+"""L2 JAX graphs: the EDPP screening step and a FISTA epoch, built on the
+L1 Pallas kernels and lowered once to HLO text by `aot.py`.
+
+Python never runs on the request path: these functions exist only to be
+`jax.jit(...).lower(...)`-ed into `artifacts/*.hlo.txt`, which the rust
+runtime (`rust/src/runtime/`) loads and executes through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, screen_kernel
+from .kernels.ref import v2_perp_ref
+
+
+def xt_w(x, w):
+    """The deployed correlation sweep: signed scores `Xᵀw` (length p).
+
+    This is the artifact the rust `ArtifactSweep` binds to — it matches the
+    native `DenseMatrix::gemv_t` contract exactly (signed, unnormalized).
+
+    Backend selection (perf iteration 4, EXPERIMENTS.md §Perf): on the CPU
+    PJRT plugin, interpret-mode Pallas lowers to a while-loop of dynamic
+    slices that runs ~100× slower than XLA's fused dot; the deployed CPU
+    artifact therefore uses the XLA-native lowering of the *same*
+    computation, while `xt_w_pallas` exports the Pallas kernel (the real-TPU
+    path) for cross-verification — `python/tests` pin them equal.
+    """
+    return (ref.xt_w_ref(x, w),)
+
+
+def xt_w_pallas(x, w):
+    """The L1 Pallas kernel as its own artifact (verification + the lowering
+    that Mosaic compiles on real TPU)."""
+    return (screen_kernel.xt_w(x, w),)
+
+
+def edpp_screen(x, y, theta, inv_lam0, inv_lam, col_norms):
+    """Full EDPP step for the interior case λ₀ ∈ (0, λmax) (Corollary 17).
+
+    Inputs:  x (n,p), y (n,), theta = θ*(λ₀) (n,), scalars 1/λ₀ and 1/λ
+             (passed as rank-0 arrays), col_norms (p,).
+    Outputs: (scores, radius, mask) — scores = Xᵀ(θ*(λ₀) + ½v₂⊥),
+             radius = ½‖v₂⊥‖, mask = fused sphere test.
+
+    The rust side re-applies the threshold in f64 with the safety slack
+    (DESIGN.md §1); the mask output is consumed by tests and by pure-PJRT
+    demos.
+    """
+    v1 = y * inv_lam0 - theta
+    v2 = y * inv_lam - theta
+    perp = v2_perp_ref(v1, v2)
+    center = theta + 0.5 * perp
+    scores = screen_kernel.xt_w(x, center)
+    radius = 0.5 * jnp.sqrt(jnp.vdot(perp, perp))
+    mask = screen_kernel.screen_mask(scores, col_norms, radius)
+    return scores, radius, mask
+
+
+def fista_epoch(x, y, beta, w, t, inv_lip, lam):
+    """One FISTA iteration over the full (fixed-shape) problem, with the
+    gradient correlation `Xᵀr` routed through the Pallas kernel.
+
+    Exported so a pure-PJRT solver loop can be driven from rust (used by the
+    runtime integration tests and the `screening_service` example's
+    warm-path); the production solvers operate on dynamically-shaped reduced
+    problems and therefore stay native (DESIGN.md §1).
+    """
+    r = x @ w - y
+    grad = screen_kernel.xt_w(x, r)
+    z = w - inv_lip * grad
+    thr = lam * inv_lip
+    beta_new = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+    w_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
+    return beta_new, w_new, t_new
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """Lower a jax function to HLO **text** — the interchange format the
+    image's xla_extension 0.5.1 accepts (jax ≥ 0.5 serialized protos carry
+    64-bit instruction ids it rejects; the text parser reassigns ids)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

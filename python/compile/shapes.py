@@ -1,0 +1,61 @@
+"""Artifact shape registry: which (function, n, p) combinations `aot.py`
+exports.
+
+Screening always runs on the full, fixed-shape matrix, so one `xt_w`
+executable per dataset shape suffices (DESIGN.md §1). The list mirrors the
+scaled-down shapes of `rust/src/data/mod.rs::RealDataset::small_shape` plus
+the synthetic/demo shapes used by examples and integration tests. Set
+DPP_AOT_FULL=1 to additionally export the paper-scale shapes.
+"""
+
+import os
+
+# (n, p) — keep in sync with RealDataset::small_shape on the rust side.
+SMALL_DATASET_SHAPES = {
+    "prostate": (96, 1600),
+    "pie": (196, 1200),
+    "mnist": (196, 2400),
+    "colon": (62, 800),
+    "lung": (128, 1400),
+    "coil100": (196, 1008),
+    "breast": (44, 1000),
+    "leukemia": (52, 1200),
+    "svhn": (300, 3000),
+}
+
+PAPER_DATASET_SHAPES = {
+    "prostate": (132, 15154),
+    "pie": (1024, 11553),
+    "mnist": (784, 50000),
+    "colon": (62, 2000),
+    "lung": (203, 12600),
+    "coil100": (1024, 7199),
+    "breast": (44, 7129),
+    "leukemia": (52, 11225),
+    "svhn": (3072, 99288),
+}
+
+# demo / test shapes
+DEMO_SHAPES = [(64, 256), (100, 1000), (100, 2000)]
+
+
+def xt_w_shapes():
+    shapes = list(DEMO_SHAPES) + sorted(set(SMALL_DATASET_SHAPES.values()))
+    if os.environ.get("DPP_AOT_FULL") == "1":
+        shapes += sorted(set(PAPER_DATASET_SHAPES.values()))
+    return shapes
+
+
+def xt_w_pallas_shapes():
+    # the Pallas lowering kept as a verification artifact (CPU deploy uses
+    # the XLA-native lowering — see model.xt_w)
+    return [(64, 256), (300, 3000)]
+
+
+def edpp_screen_shapes():
+    # the full-graph artifact: demo shape + one dataset shape
+    return [(64, 256), SMALL_DATASET_SHAPES["prostate"]]
+
+
+def fista_epoch_shapes():
+    return [(64, 256)]

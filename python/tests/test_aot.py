@@ -1,0 +1,77 @@
+"""AOT pipeline checks: artifact inventory consistency and HLO-text format
+(the rust runtime parses these files with xla_extension 0.5.1's text
+parser — serialized protos would be rejected, DESIGN.md §3)."""
+
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.tsv")),
+    reason="run `make artifacts` first",
+)
+
+
+def test_spec_inventory_covers_shapes():
+    specs = list(aot.artifact_specs())
+    names = {(s[0], s[1], s[2]) for s in specs}
+    for n, p in shapes.xt_w_shapes():
+        assert ("xt_w", n, p) in names
+    for n, p in shapes.xt_w_pallas_shapes():
+        assert ("xt_w_pallas", n, p) in names
+    for n, p in shapes.edpp_screen_shapes():
+        assert ("edpp_screen", n, p) in names
+    for n, p in shapes.fista_epoch_shapes():
+        assert ("fista_epoch", n, p) in names
+    # no duplicate (name, shape)
+    assert len(names) == len(specs)
+
+
+def test_small_shapes_match_rust_registry():
+    """Guards the cross-language shape contract: these constants mirror
+    RealDataset::small_shape in rust/src/data/mod.rs."""
+    rust_src = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "src", "data", "mod.rs"
+    )
+    text = open(rust_src).read()
+    for name, (n, p) in shapes.SMALL_DATASET_SHAPES.items():
+        assert f"({n}, {p})" in text, f"{name} small shape ({n},{p}) drifted from rust"
+    for name, (n, p) in shapes.PAPER_DATASET_SHAPES.items():
+        assert f"({n}, {p})" in text, f"{name} paper shape ({n},{p}) drifted from rust"
+
+
+@needs_artifacts
+def test_manifest_lists_existing_hlo_text_files():
+    manifest = os.path.join(ARTIFACT_DIR, "manifest.tsv")
+    entries = [
+        line.split("\t")
+        for line in open(manifest).read().splitlines()
+        if line and not line.startswith("#")
+    ]
+    assert entries, "empty manifest"
+    for name, n, p, fname in entries:
+        path = os.path.join(ARTIFACT_DIR, fname)
+        assert os.path.exists(path), fname
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), f"{fname} is not HLO text"
+        assert int(n) > 0 and int(p) > 0 and name
+
+
+@needs_artifacts
+def test_artifacts_cover_manifest_spec():
+    manifest = os.path.join(ARTIFACT_DIR, "manifest.tsv")
+    listed = {
+        (f[0], int(f[1]), int(f[2]))
+        for f in (
+            line.split("\t")
+            for line in open(manifest).read().splitlines()
+            if line and not line.startswith("#")
+        )
+    }
+    expected = {(s[0], s[1], s[2]) for s in aot.artifact_specs()}
+    # manifest may be a superset (e.g. built with DPP_AOT_FULL=1)
+    assert expected <= listed

@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, hypothesis-swept
+over shapes (the CORE correctness signal for the kernel layer)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, screen_kernel
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    p=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_xt_w_matches_ref_hypothesis(n, p, seed):
+    x = rand((n, p), seed)
+    w = rand((n,), seed + 1)
+    got = np.asarray(screen_kernel.xt_w(jnp.array(x), jnp.array(w)))
+    want = np.asarray(ref.xt_w_ref(jnp.array(x), jnp.array(w)))
+    scale = np.abs(want).max() + 1.0
+    np.testing.assert_allclose(got, want, rtol=0, atol=3e-5 * scale)
+
+
+@pytest.mark.parametrize(
+    "n,p",
+    [(1, 1), (255, 127), (256, 128), (257, 129), (512, 384), (64, 256)],
+)
+def test_xt_w_tile_boundaries(n, p):
+    """Exact tile multiples, off-by-one, and sub-tile shapes."""
+    x = rand((n, p), 42)
+    w = rand((n,), 43)
+    got = np.asarray(screen_kernel.xt_w(jnp.array(x), jnp.array(w)))
+    want = x.T @ w
+    scale = np.abs(want).max() + 1.0
+    np.testing.assert_allclose(got, want, rtol=0, atol=3e-5 * scale)
+
+
+def test_xt_w_alternative_blocks():
+    """Block-shape ablation: every legal tiling gives the same numbers."""
+    x = rand((100, 200), 7)
+    w = rand((100,), 8)
+    want = x.T @ w
+    for bn, bp in [(32, 32), (64, 128), (256, 128), (8, 8)]:
+        got = np.asarray(
+            screen_kernel.xt_w(jnp.array(x), jnp.array(w), block_n=bn, block_p=bp)
+        )
+        np.testing.assert_allclose(got, want, rtol=0, atol=3e-5 * (np.abs(want).max() + 1))
+
+
+@given(
+    p=st.integers(min_value=1, max_value=600),
+    radius=st.floats(min_value=0.0, max_value=5.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_screen_mask_matches_ref_hypothesis(p, radius, seed):
+    scores = rand((p,), seed)
+    norms = np.abs(rand((p,), seed + 1)) + 0.01
+    got = np.asarray(
+        screen_mask := screen_kernel.screen_mask(
+            jnp.array(scores), jnp.array(norms), jnp.float32(radius)
+        )
+    )
+    want = np.asarray(
+        ref.screen_mask_ref(jnp.array(scores), jnp.array(norms), radius)
+    )
+    # boundary disagreements possible only within float epsilon of the
+    # threshold; exclude those lanes
+    sup = np.abs(scores) + radius * norms
+    inexact = np.abs(sup - 1.0) < 1e-5
+    np.testing.assert_array_equal(got[~inexact], want[~inexact])
+    assert screen_mask.dtype == jnp.float32
+
+
+def test_screen_mask_keep_semantics():
+    scores = jnp.array([0.99, 0.5, 1.01, -1.2], dtype=jnp.float32)
+    norms = jnp.ones(4, dtype=jnp.float32)
+    m = np.asarray(screen_kernel.screen_mask(scores, norms, jnp.float32(0.0)))
+    np.testing.assert_array_equal(m, [0.0, 0.0, 1.0, 1.0])
+    m = np.asarray(screen_kernel.screen_mask(scores, norms, jnp.float32(0.6)))
+    np.testing.assert_array_equal(m, [1.0, 1.0, 1.0, 1.0])
+
+
+def test_vmem_footprint_under_budget():
+    """§Perf structural check: default tiling fits VMEM comfortably."""
+    assert screen_kernel.vmem_footprint_bytes() < 16 * 1024 * 1024 // 4
+
+
+def test_v2_perp_orthogonal():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        v1 = rng.standard_normal(30).astype(np.float32)
+        v2 = rng.standard_normal(30).astype(np.float32)
+        if float(np.dot(v1, v2)) < 0:
+            v2 = -v2
+        perp = np.asarray(ref.v2_perp_ref(jnp.array(v1), jnp.array(v2)))
+        assert abs(float(np.dot(perp, v1))) < 1e-3 * (np.linalg.norm(v1) + 1)
+        assert np.linalg.norm(perp) <= np.linalg.norm(v2) + 1e-5

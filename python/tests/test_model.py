@@ -1,0 +1,115 @@
+"""L2 correctness: the exported graphs against numpy references and
+against each other (kernel-backed vs pure-jnp)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def problem(n, p, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    return x, y
+
+
+@given(
+    n=st.integers(min_value=2, max_value=128),
+    p=st.integers(min_value=2, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_edpp_screen_matches_oracle(n, p, seed):
+    x, y = problem(n, p, seed)
+    rng = np.random.default_rng(seed + 9)
+    theta = (y / (np.abs(x.T @ y).max() + 1.0)).astype(np.float32)
+    norms = np.linalg.norm(x, axis=0).astype(np.float32) + 1e-3
+    inv_lam0 = np.float32(1.0 / (0.7 * np.abs(x.T @ y).max() + 1e-3))
+    inv_lam = np.float32(inv_lam0 * rng.uniform(1.05, 3.0))
+    got_scores, got_radius, got_mask = model.edpp_screen(
+        jnp.array(x), jnp.array(y), jnp.array(theta), inv_lam0, inv_lam, jnp.array(norms)
+    )
+    want_scores, want_radius, want_mask = ref.edpp_screen_ref(
+        jnp.array(x), jnp.array(y), jnp.array(theta), inv_lam0, inv_lam, jnp.array(norms)
+    )
+    s = float(np.abs(np.asarray(want_scores)).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(got_scores), np.asarray(want_scores), atol=5e-5 * s)
+    np.testing.assert_allclose(float(got_radius), float(want_radius), rtol=1e-5, atol=1e-6)
+    # masks agree except within epsilon of the decision boundary
+    sup = np.abs(np.asarray(want_scores)) + float(want_radius) * norms
+    inexact = np.abs(sup - 1.0) < 1e-4 * s
+    np.testing.assert_array_equal(
+        np.asarray(got_mask)[~inexact], np.asarray(want_mask)[~inexact]
+    )
+
+
+def test_edpp_radius_shrinks_ball_vs_dpp():
+    """‖v₂⊥‖ ≤ ‖v₂‖ — Theorem 7's containment, on the L2 graph."""
+    x, y = problem(40, 80, 3)
+    lam_max = float(np.abs(x.T @ y).max())
+    theta = (y / lam_max).astype(np.float32)
+    norms = np.linalg.norm(x, axis=0).astype(np.float32)
+    inv_lam0 = np.float32(1.0 / (0.8 * lam_max))
+    inv_lam = np.float32(1.0 / (0.4 * lam_max))
+    _, radius, _ = model.edpp_screen(
+        jnp.array(x), jnp.array(y), jnp.array(theta), inv_lam0, inv_lam, jnp.array(norms)
+    )
+    v2 = y * float(inv_lam) - theta
+    dpp_radius = 0.5 * np.linalg.norm(v2)  # EDPP radius is ½‖v₂⊥‖ ≤ ½‖v₂‖
+    assert float(radius) <= dpp_radius + 1e-5
+
+
+def test_fista_epoch_matches_oracle_and_descends():
+    x, y = problem(60, 90, 4)
+    lip = np.float32(np.linalg.norm(x, 2) ** 2 * 1.01)
+    lam = np.float32(0.3 * np.abs(x.T @ y).max())
+    beta = np.zeros(90, dtype=np.float32)
+    w = beta.copy()
+    t = np.float32(1.0)
+
+    def obj(b):
+        r = y - x @ b
+        return 0.5 * float(r @ r) + float(lam) * float(np.abs(b).sum())
+
+    prev = obj(beta)
+    bj, wj, tj = jnp.array(beta), jnp.array(w), jnp.float32(t)
+    for i in range(25):
+        b_ref, w_ref, t_ref = ref.fista_epoch_ref(
+            jnp.array(x), jnp.array(y), bj, wj, tj, 1.0 / lip, lam
+        )
+        bj, wj, tj = model.fista_epoch(
+            jnp.array(x), jnp.array(y), bj, wj, tj, np.float32(1.0 / lip), lam
+        )
+        np.testing.assert_allclose(np.asarray(bj), np.asarray(b_ref), atol=1e-4)
+        np.testing.assert_allclose(float(tj), float(t_ref), rtol=1e-6)
+    # monotone-ish decrease over the run (FISTA is not strictly monotone,
+    # but 25 iterations must improve on β = 0 substantially)
+    assert obj(np.asarray(bj)) < prev * 0.9
+
+
+def test_deploy_and_pallas_xt_w_agree():
+    """Perf It.4 contract: the CPU-deployed XLA-native sweep and the Pallas
+    (TPU-path) sweep are the same computation."""
+    x, y = problem(70, 130, 11)
+    a = np.asarray(model.xt_w(jnp.array(x), jnp.array(y))[0])
+    b = np.asarray(model.xt_w_pallas(jnp.array(x), jnp.array(y))[0])
+    np.testing.assert_allclose(a, b, atol=3e-5 * (np.abs(a).max() + 1))
+
+
+def test_lowering_produces_hlo_text():
+    import jax
+
+    text = model.lower_to_hlo_text(
+        model.xt_w,
+        (
+            jax.ShapeDtypeStruct((8, 16), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ),
+    )
+    assert text.startswith("HloModule")
+    assert "f32[8,16]" in text

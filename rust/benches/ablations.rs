@@ -1,0 +1,166 @@
+//! Ablation benches for the design choices DESIGN.md §4 calls out:
+//!
+//! · λ-grid density vs rejection (sequential rules tighten with density —
+//!   Remark 2's mechanism, quantified)
+//! · basic vs sequential EDPP (the §4.1.1 comparison as one number)
+//! · elastic-net EDPP (γ sweep): the paper's §5 extension direction
+//! · sparse (CSC) vs dense screening sweep at matched shapes
+//! · warm-start on/off for the screened path
+//!
+//! Run: `cargo bench --bench ablations` → results/ablations.md
+
+use dpp_screen::data::synthetic;
+use dpp_screen::linalg::CscMatrix;
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::screening::CorrelationSweep;
+use dpp_screen::solver::dual;
+use dpp_screen::solver::enet::{screen_enet_edpp, EnetCdSolver};
+use dpp_screen::solver::{LassoSolver, SolveOptions};
+use dpp_screen::util::benchkit::{black_box, Bench, Report};
+use dpp_screen::util::rng::Rng;
+
+fn main() {
+    grid_density();
+    basic_vs_sequential();
+    enet_gamma_sweep();
+    sparse_vs_dense_sweep();
+    warm_start();
+}
+
+fn grid_density() {
+    let ds = synthetic::synthetic1(100, 1500, 60, 0.1, 0xA0);
+    let cfg = PathConfig::default();
+    let mut rep = Report::new(
+        "ablation: λ-grid density vs EDPP rejection (100×1500)",
+        &["grid points", "mean rejection", "total secs"],
+    );
+    for k in [10usize, 25, 50, 100, 200] {
+        let grid = LambdaGrid::relative(&ds.x, &ds.y, k, 0.05, 1.0);
+        let out = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        rep.row(&[
+            k.to_string(),
+            format!("{:.4}", out.mean_rejection_ratio()),
+            format!("{:.3}", out.total_secs()),
+        ]);
+    }
+    rep.emit("ablations.md");
+}
+
+fn basic_vs_sequential() {
+    let ds = synthetic::synthetic1(100, 1500, 60, 0.1, 0xA1);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 100, 0.05, 1.0);
+    let mut rep = Report::new(
+        "ablation: basic vs sequential (100-pt grid, 100×1500)",
+        &["rule", "mode", "mean rejection"],
+    );
+    for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Edpp] {
+        for (mode, sequential) in [("basic", false), ("sequential", true)] {
+            let cfg = PathConfig { sequential, ..Default::default() };
+            let out = solve_path(&ds.x, &ds.y, &grid, rule, SolverKind::Cd, &cfg);
+            rep.row(&[
+                rule.name().to_string(),
+                mode.to_string(),
+                format!("{:.4}", out.mean_rejection_ratio()),
+            ]);
+        }
+    }
+    rep.emit("ablations.md");
+}
+
+fn enet_gamma_sweep() {
+    let ds = synthetic::synthetic1(80, 800, 40, 0.1, 0xA2);
+    let lam_max = dual::lambda_max(&ds.x, &ds.y);
+    let cols: Vec<usize> = (0..ds.p()).collect();
+    let opts = SolveOptions { tol_gap: 1e-9, ..Default::default() };
+    let mut rep = Report::new(
+        "ablation: elastic-net EDPP across γ (80×800, λ₀=0.5→λ=0.45·λmax)",
+        &["γ", "rejected", "support at λ", "safe?"],
+    );
+    for gamma in [0.0, 0.1, 1.0, 10.0] {
+        let solver = EnetCdSolver { gamma };
+        let prev = solver
+            .solve(&ds.x, &ds.y, &cols, 0.5 * lam_max, None, &opts)
+            .scatter(&cols, ds.p());
+        let mut keep = vec![true; ds.p()];
+        screen_enet_edpp(
+            &ds.x, &ds.y, gamma, &prev, 0.5 * lam_max, 0.45 * lam_max, lam_max, &mut keep,
+        );
+        let exact = solver
+            .solve(&ds.x, &ds.y, &cols, 0.45 * lam_max, None, &opts)
+            .scatter(&cols, ds.p());
+        let rejected = keep.iter().filter(|k| !**k).count();
+        let support = exact.iter().filter(|b| **b != 0.0).count();
+        let safe = (0..ds.p()).all(|j| keep[j] || exact[j].abs() < 1e-9);
+        rep.row(&[
+            format!("{gamma}"),
+            rejected.to_string(),
+            support.to_string(),
+            safe.to_string(),
+        ]);
+    }
+    rep.emit("ablations.md");
+}
+
+fn sparse_vs_dense_sweep() {
+    // stroke-like sparse data at 15% density
+    let mut rng = Rng::new(0xA3);
+    let (n, p) = (300, 3000);
+    let mut x = dpp_screen::linalg::DenseMatrix::zeros(n, p);
+    for j in 0..p {
+        let c = x.col_mut(j);
+        for v in c.iter_mut() {
+            if rng.f64() < 0.15 {
+                *v = rng.normal();
+            }
+        }
+    }
+    let csc = CscMatrix::from_dense(&x);
+    let mut w = vec![0.0; n];
+    rng.fill_normal(&mut w);
+    let mut out = vec![0.0; p];
+    let bench = Bench::new(3, 10);
+    let m_dense = bench.run("dense sweep", || {
+        x.gemv_t(&w, &mut out);
+        black_box(out[0])
+    });
+    let m_sparse = bench.run("csc sweep", || {
+        csc.xt_w(&w, &mut out);
+        black_box(out[0])
+    });
+    let mut rep = Report::new(
+        &format!(
+            "ablation: sparse vs dense sweep ({}×{}, density {:.0}%)",
+            n,
+            p,
+            csc.density() * 100.0
+        ),
+        &["kernel", "mean", "speedup"],
+    );
+    rep.row(&["dense gemv_t".into(), format!("{:.3}ms", m_dense.mean_s * 1e3), "1.00x".into()]);
+    rep.row(&[
+        "csc gemv_t".into(),
+        format!("{:.3}ms", m_sparse.mean_s * 1e3),
+        format!("{:.2}x", m_dense.mean_s / m_sparse.mean_s),
+    ]);
+    rep.emit("ablations.md");
+}
+
+fn warm_start() {
+    let ds = synthetic::synthetic1(100, 1500, 60, 0.1, 0xA4);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 50, 0.05, 1.0);
+    let mut rep = Report::new(
+        "ablation: warm starts on the screened path (100×1500, 50-pt grid)",
+        &["warm start", "total secs", "total solver iters"],
+    );
+    for warm in [true, false] {
+        let cfg = PathConfig { warm_start: warm, ..Default::default() };
+        let out = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        let iters: usize = out.records.iter().map(|r| r.solver_iters).sum();
+        rep.row(&[
+            warm.to_string(),
+            format!("{:.3}", out.total_secs()),
+            iters.to_string(),
+        ]);
+    }
+    rep.emit("ablations.md");
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 1 + Table 1 — DPP family (DPP, Improvement 1/2, EDPP).
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 1 + Table 1 — DPP family (DPP, Improvement 1/2, EDPP) ==");
+    dpp_screen::experiments::fig1_dpp_family();
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 2 — basic SAFE / DOME / strong / EDPP.
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 2 — basic SAFE / DOME / strong / EDPP ==");
+    dpp_screen::experiments::fig2_basic_rules();
+}

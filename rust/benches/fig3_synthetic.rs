@@ -1,0 +1,9 @@
+//! Bench: Fig. 3 + Table 2 — synthetic datasets.
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 3 + Table 2 — synthetic datasets ==");
+    dpp_screen::experiments::fig3_synthetic();
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 4 + Table 3 — six (simulated) real datasets.
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 4 + Table 3 — six (simulated) real datasets ==");
+    dpp_screen::experiments::fig4_real();
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 5 + Table 4 — LARS solver.
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 5 + Table 4 — LARS solver ==");
+    dpp_screen::experiments::fig5_lars();
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 6 + Table 5 — group Lasso.
+//! Regenerates the paper artifact via the shared experiment harness
+//! (dpp_screen::experiments). Output: stdout + results/*.md.
+//! Scale knobs: DPP_SCALE=full, DPP_TRIALS=…, DPP_GRID=…
+
+fn main() {
+    println!("== Fig. 6 + Table 5 — group Lasso ==");
+    dpp_screen::experiments::fig6_group();
+}

@@ -1,0 +1,165 @@
+//! Microbenches for the §Perf pass: the screening hot path at each layer.
+//!
+//! · native gemv_t (unrolled) vs a naive per-column loop — L3 ablation
+//! · full EDPP screen step vs one bare sweep — the "screening overhead ≤
+//!   1.3× one sweep" target of DESIGN.md §7
+//! · PJRT artifact sweep vs native — the AOT-vs-native ablation
+//! · end-to-end screened vs unscreened path at bench scale
+//!
+//! Run: `cargo bench --bench kernels` (results appended to results/perf.md)
+
+use dpp_screen::data::synthetic;
+use dpp_screen::linalg::{dot, DenseMatrix};
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::runtime::ArtifactRuntime;
+use dpp_screen::screening::{
+    edpp::EdppRule, CorrelationSweep, ScreenContext, ScreeningRule, StepInput,
+};
+use dpp_screen::util::benchkit::{black_box, Bench, Report};
+use dpp_screen::util::rng::Rng;
+
+fn naive_gemv_t(x: &DenseMatrix, w: &[f64], out: &mut [f64]) {
+    for j in 0..x.n_cols() {
+        out[j] = dot(x.col(j), w);
+    }
+}
+
+fn main() {
+    let bench = Bench::new(3, 10);
+    let mut rep = Report::new(
+        "kernel microbenches (§Perf)",
+        &["case", "mean", "min", "σ", "vs-baseline"],
+    );
+
+    // --- L3: sweep kernels at a representative shape ---
+    let (n, p) = (300, 3000);
+    let mut rng = Rng::new(1);
+    let mut data = vec![0.0; n * p];
+    rng.fill_normal(&mut data);
+    let x = DenseMatrix::from_col_major(n, p, data);
+    let mut w = vec![0.0; n];
+    rng.fill_normal(&mut w);
+    let mut out = vec![0.0; p];
+
+    let m_naive = bench.run("gemv_t naive", || {
+        naive_gemv_t(&x, &w, &mut out);
+        black_box(out[0])
+    });
+    let m_fast = bench.run("gemv_t unrolled", || {
+        x.gemv_t(&w, &mut out);
+        black_box(out[0])
+    });
+    rep.row(&[
+        format!("gemv_t naive {n}x{p}"),
+        format!("{:.3}ms", m_naive.mean_s * 1e3),
+        format!("{:.3}ms", m_naive.min_s * 1e3),
+        format!("{:.3}ms", m_naive.std_s * 1e3),
+        "1.00x".into(),
+    ]);
+    rep.row(&[
+        format!("gemv_t unrolled {n}x{p}"),
+        format!("{:.3}ms", m_fast.mean_s * 1e3),
+        format!("{:.3}ms", m_fast.min_s * 1e3),
+        format!("{:.3}ms", m_fast.std_s * 1e3),
+        format!("{:.2}x", m_naive.mean_s / m_fast.mean_s),
+    ]);
+
+    // --- EDPP step overhead vs one sweep (target ≤ ~1.3×) ---
+    let ds = synthetic::synthetic1(n, p, p / 10, 0.1, 2);
+    let ctx = ScreenContext::new(&ds.x, &ds.y);
+    let theta: Vec<f64> = ds.y.iter().map(|v| v / ctx.lam_max).collect();
+    let step = StepInput {
+        lam_prev: 0.6 * ctx.lam_max,
+        lam: 0.5 * ctx.lam_max,
+        theta_prev: &theta,
+    };
+    let mut keep = vec![true; p];
+    let m_edpp = bench.run("edpp screen step", || {
+        EdppRule.screen(&ctx, &step, &mut keep);
+        black_box(keep[0])
+    });
+    let m_sweep = bench.run("bare sweep", || {
+        ds.x.gemv_t(&theta, &mut out);
+        black_box(out[0])
+    });
+    rep.row(&[
+        format!("EDPP step {n}x{p}"),
+        format!("{:.3}ms", m_edpp.mean_s * 1e3),
+        format!("{:.3}ms", m_edpp.min_s * 1e3),
+        format!("{:.3}ms", m_edpp.std_s * 1e3),
+        format!("{:.2}x one sweep", m_edpp.mean_s / m_sweep.mean_s),
+    ]);
+
+    // --- PJRT artifact sweep vs native, small AND large shapes ---
+    if let Some(rt) = ArtifactRuntime::load_default() {
+        // large shape (300×3000): amortizes the per-dispatch overhead
+        if let Some(sweep_big) = rt.sweep_for(&x) {
+            let mut ob = vec![0.0; p];
+            let m_art = bench.run("pjrt sweep big", || {
+                sweep_big.xt_w(&w, &mut ob);
+                black_box(ob[0])
+            });
+            rep.row(&[
+                format!("xt_w artifact (PJRT) {n}x{p}"),
+                format!("{:.1}us", m_art.mean_s * 1e6),
+                format!("{:.1}us", m_art.min_s * 1e6),
+                format!("{:.1}us", m_art.std_s * 1e6),
+                format!("{:.2}x native", m_art.mean_s / m_fast.mean_s),
+            ]);
+        }
+        let dsq = synthetic::synthetic1(64, 256, 20, 0.1, 3);
+        if let Some(sweep) = rt.sweep_for(&dsq.x) {
+            let mut w2 = vec![0.0; 64];
+            Rng::new(4).fill_normal(&mut w2);
+            let mut o2 = vec![0.0; 256];
+            let m_art = bench.run("pjrt sweep", || {
+                sweep.xt_w(&w2, &mut o2);
+                black_box(o2[0])
+            });
+            let m_nat = bench.run("native sweep 64x256", || {
+                dsq.x.gemv_t(&w2, &mut o2);
+                black_box(o2[0])
+            });
+            rep.row(&[
+                "xt_w artifact (PJRT) 64x256".into(),
+                format!("{:.1}us", m_art.mean_s * 1e6),
+                format!("{:.1}us", m_art.min_s * 1e6),
+                format!("{:.1}us", m_art.std_s * 1e6),
+                format!("{:.2}x native", m_art.mean_s / m_nat.mean_s),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts not built — skipping PJRT ablation)");
+    }
+
+    // --- end-to-end: screened vs unscreened path at bench scale ---
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 20, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let quick = Bench::new(1, 3);
+    let m_base = quick.run("path no screening", || {
+        black_box(
+            solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg).total_secs(),
+        )
+    });
+    let m_scr = quick.run("path edpp", || {
+        black_box(
+            solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg).total_secs(),
+        )
+    });
+    rep.row(&[
+        format!("20-λ path {n}x{p} (no screen)"),
+        format!("{:.3}s", m_base.mean_s),
+        format!("{:.3}s", m_base.min_s),
+        format!("{:.3}s", m_base.std_s),
+        "1.00x".into(),
+    ]);
+    rep.row(&[
+        format!("20-λ path {n}x{p} (EDPP)"),
+        format!("{:.3}s", m_scr.mean_s),
+        format!("{:.3}s", m_scr.min_s),
+        format!("{:.3}s", m_scr.std_s),
+        format!("{:.1}x faster", m_base.mean_s / m_scr.mean_s),
+    ]);
+
+    rep.emit("perf.md");
+}

@@ -1,0 +1,79 @@
+//! Service metrics: request latency, batch sizes, screening effectiveness.
+
+use crate::util::stats::OnlineStats;
+
+/// Aggregated metrics for the screening service.
+#[derive(Debug, Default, Clone)]
+pub struct ServiceMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub latency: OnlineStats,
+    pub batch_size: OnlineStats,
+    pub rejection_ratio: OnlineStats,
+    pub kept_features: OnlineStats,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, latency_s: f64) {
+        self.requests += 1;
+        self.latency.push(latency_s);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_size.push(size as f64);
+    }
+
+    pub fn record_screen(&mut self, kept: usize, discarded: usize, true_zeros: usize) {
+        self.kept_features.push(kept as f64);
+        let ratio = if true_zeros == 0 {
+            1.0
+        } else {
+            discarded as f64 / true_zeros as f64
+        };
+        self.rejection_ratio.push(ratio);
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} p50_latency≈{:.2}ms mean_rejection={:.3} mean_kept={:.0}",
+            self.requests,
+            self.batches,
+            self.batch_size.mean(),
+            self.latency.mean() * 1e3,
+            self.rejection_ratio.mean(),
+            self.kept_features.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = ServiceMetrics::new();
+        m.record_request(0.010);
+        m.record_request(0.020);
+        m.record_batch(2);
+        m.record_screen(10, 90, 95);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        assert!((m.latency.mean() - 0.015).abs() < 1e-12);
+        assert!((m.rejection_ratio.mean() - 90.0 / 95.0).abs() < 1e-12);
+        assert!(m.summary().contains("requests=2"));
+    }
+
+    #[test]
+    fn zero_true_zeros_counts_as_full_rejection() {
+        let mut m = ServiceMetrics::new();
+        m.record_screen(5, 0, 0);
+        assert_eq!(m.rejection_ratio.mean(), 1.0);
+    }
+}

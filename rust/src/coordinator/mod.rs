@@ -1,0 +1,118 @@
+//! L3 coordinator: the system layer that turns the path driver into a
+//! deployable service.
+//!
+//! The paper's protocol averages 100 trials per dataset and sweeps many
+//! (rule × dataset × λ-grid) combinations; [`TrialScheduler`] fans trials
+//! out over worker threads (std::thread + mpsc — tokio is not available in
+//! the offline image, DESIGN.md §3). [`service::ScreeningService`] exposes
+//! screening as a request/response loop with λ-descending batching, the
+//! shape a model-selection server would deploy.
+
+pub mod metrics;
+pub mod service;
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Fan `n_trials` evaluations of `job` over `workers` threads and collect
+/// results in trial order. `job` receives the trial index and must be
+/// deterministic per index (seeding discipline lives with the caller).
+pub fn run_trials<T, F>(n_trials: usize, workers: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers >= 1);
+    if n_trials == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n_trials);
+    let (task_tx, task_rx) = mpsc::channel::<usize>();
+    let task_rx = std::sync::Mutex::new(task_rx);
+    let (res_tx, res_rx) = mpsc::channel::<(usize, T)>();
+    for t in 0..n_trials {
+        task_tx.send(t).unwrap();
+    }
+    drop(task_tx);
+
+    let mut out: Vec<Option<T>> = (0..n_trials).map(|_| None).collect();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let res_tx = res_tx.clone();
+            let task_rx = &task_rx;
+            let job = &job;
+            scope.spawn(move || {
+                loop {
+                    let next = { task_rx.lock().unwrap().recv() };
+                    match next {
+                        Ok(idx) => {
+                            let r = job(idx);
+                            if res_tx.send((idx, r)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        drop(res_tx);
+        while let Ok((idx, r)) = res_rx.recv() {
+            out[idx] = Some(r);
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker dropped a trial")).collect()
+}
+
+/// Number of worker threads to use (`DPP_WORKERS`, default = available
+/// parallelism).
+pub fn default_workers() -> usize {
+    std::env::var("DPP_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn trials_in_order_and_complete() {
+        let out = run_trials(17, 4, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_trials_run_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = run_trials(25, 3, |i| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 25);
+        assert_eq!(out.len(), 25);
+    }
+
+    #[test]
+    fn zero_trials() {
+        let out: Vec<usize> = run_trials(0, 2, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_matches_multi() {
+        let a = run_trials(10, 1, |i| i + 1);
+        let b = run_trials(10, 4, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! Screening-as-a-service: a request/response loop around the sequential
+//! screening state machine.
+//!
+//! Model-selection workloads (cross-validation, stability selection) issue
+//! many λ-evaluations against one dataset. The service owns the dataset and
+//! the sequential state (exact solution at the last solved λ), **batches**
+//! concurrently-arriving requests, and processes each batch in descending-λ
+//! order so every request benefits from the tightest available θ*(λ₀) — the
+//! same trick that makes sequential rules dominate basic ones (§4.1.1).
+//!
+//! Threading: one worker thread owns all state; clients talk over mpsc
+//! channels (the offline image has no tokio — DESIGN.md §3).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::metrics::ServiceMetrics;
+use crate::linalg::DenseMatrix;
+use crate::path::{PathConfig, RuleKind, SolverKind};
+use crate::screening::{theta_from_solution, ScreenContext, ScreeningRule, StepInput};
+use crate::solver::LassoSolver;
+
+/// A screening/solve request at one λ.
+pub struct ScreenRequest {
+    pub lam: f64,
+    pub reply: Sender<ScreenResponse>,
+}
+
+/// Response: the surviving features and the exact solution at λ.
+#[derive(Clone, Debug)]
+pub struct ScreenResponse {
+    pub lam: f64,
+    pub kept: Vec<usize>,
+    pub beta: Vec<f64>,
+    pub discarded: usize,
+    pub true_zeros: usize,
+    pub latency_s: f64,
+}
+
+enum Msg {
+    Request(ScreenRequest, Instant),
+    Shutdown(Sender<ServiceMetrics>),
+}
+
+/// Handle to a running screening service.
+pub struct ScreeningService {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl ScreeningService {
+    /// Spawn the service worker owning `x`, `y`.
+    pub fn spawn(
+        x: DenseMatrix,
+        y: Vec<f64>,
+        rule: RuleKind,
+        solver: SolverKind,
+        cfg: PathConfig,
+    ) -> ScreeningService {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || worker_loop(x, y, rule, solver, cfg, rx));
+        ScreeningService { tx, worker: Some(worker) }
+    }
+
+    /// Fire a request; the response arrives on the returned receiver.
+    pub fn request(&self, lam: f64) -> Receiver<ScreenResponse> {
+        let (reply, rx) = channel();
+        let _ = self
+            .tx
+            .send(Msg::Request(ScreenRequest { lam, reply }, Instant::now()));
+        rx
+    }
+
+    /// Convenience: blocking request.
+    pub fn screen(&self, lam: f64) -> ScreenResponse {
+        self.request(lam).recv().expect("service dropped")
+    }
+
+    /// Stop the worker and collect metrics.
+    pub fn shutdown(mut self) -> ServiceMetrics {
+        let (mtx, mrx) = channel();
+        let _ = self.tx.send(Msg::Shutdown(mtx));
+        let metrics = mrx.recv().unwrap_or_default();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        metrics
+    }
+}
+
+impl Drop for ScreeningService {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let (mtx, _mrx) = channel();
+            let _ = self.tx.send(Msg::Shutdown(mtx));
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    x: DenseMatrix,
+    y: Vec<f64>,
+    rule_kind: RuleKind,
+    solver_kind: SolverKind,
+    cfg: PathConfig,
+    rx: Receiver<Msg>,
+) {
+    let ctx = ScreenContext::new(&x, &y);
+    let rule: Option<Box<dyn ScreeningRule>> = match rule_kind {
+        RuleKind::None => None,
+        RuleKind::Edpp => Some(Box::new(crate::screening::edpp::EdppRule)),
+        RuleKind::Dpp => Some(Box::new(crate::screening::dpp::DppRule)),
+        RuleKind::Safe => Some(Box::new(crate::screening::safe::SafeRule)),
+        RuleKind::Strong => Some(Box::new(crate::screening::strong::StrongRule)),
+        _ => Some(Box::new(crate::screening::edpp::EdppRule)),
+    };
+    let solver: Box<dyn LassoSolver> = match solver_kind {
+        SolverKind::Cd => Box::new(crate::solver::cd::CdSolver),
+        SolverKind::Fista => Box::new(crate::solver::fista::FistaSolver),
+        SolverKind::Lars => Box::new(crate::solver::lars::LarsSolver),
+    };
+    let p = x.n_cols();
+    let mut metrics = ServiceMetrics::new();
+
+    // sequential screening state: the *smallest* λ solved so far with its
+    // exact solution; requests at smaller λ chain from it
+    let mut lam_state = ctx.lam_max;
+    let mut theta_state: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
+    let mut beta_state: Vec<f64> = vec![0.0; p];
+
+    loop {
+        // block for one message, then drain whatever else arrived → a batch
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut batch: Vec<(ScreenRequest, Instant)> = Vec::new();
+        let mut shutdown: Option<Sender<ServiceMetrics>> = None;
+        match first {
+            Msg::Request(r, t) => batch.push((r, t)),
+            Msg::Shutdown(s) => shutdown = Some(s),
+        }
+        while let Ok(m) = rx.try_recv() {
+            match m {
+                Msg::Request(r, t) => batch.push((r, t)),
+                Msg::Shutdown(s) => shutdown = Some(s),
+            }
+        }
+        if !batch.is_empty() {
+            metrics.record_batch(batch.len());
+            // λ-descending order: larger λ solved first tightens θ for the rest
+            batch.sort_by(|a, b| b.0.lam.partial_cmp(&a.0.lam).unwrap());
+            for (req, t0) in batch {
+                let lam = req.lam.min(ctx.lam_max);
+                // screen from the best available anchor: state if its λ is
+                // ≥ lam (sequential), else fall back to λmax anchor
+                let (anchor_lam, anchor_theta) = if lam_state >= lam {
+                    (lam_state, theta_state.clone())
+                } else {
+                    (ctx.lam_max, y.iter().map(|v| v / ctx.lam_max).collect())
+                };
+                let mut keep = vec![true; p];
+                if let Some(rule) = &rule {
+                    let step = StepInput {
+                        lam_prev: anchor_lam,
+                        lam,
+                        theta_prev: &anchor_theta,
+                    };
+                    rule.screen(&ctx, &step, &mut keep);
+                }
+                let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+                let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
+                let res = loop {
+                    let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
+                    let r = solver.solve(&x, &y, &cols, lam, Some(&warm), &cfg.solve_opts);
+                    if is_safe || !cfg.kkt_repair {
+                        break r;
+                    }
+                    let full = r.scatter(&cols, p);
+                    let mut resid = y.to_vec();
+                    for (j, b) in full.iter().enumerate() {
+                        if *b != 0.0 {
+                            crate::linalg::axpy(-b, x.col(j), &mut resid);
+                        }
+                    }
+                    let viol =
+                        crate::screening::strong::kkt_violations(&ctx, &resid, lam, &keep);
+                    if viol.is_empty() {
+                        break r;
+                    }
+                    for j in viol {
+                        keep[j] = true;
+                    }
+                    cols = (0..p).filter(|&j| keep[j]).collect();
+                };
+                let beta = res.scatter(&cols, p);
+                let true_zeros = beta.iter().filter(|b| **b == 0.0).count();
+                let discarded = p - keep.iter().filter(|k| **k).count();
+                // advance state if this is the deepest λ seen
+                if lam < lam_state {
+                    theta_state = theta_from_solution(&x, &y, &beta, lam);
+                    lam_state = lam;
+                    beta_state = beta.clone();
+                }
+                let latency = t0.elapsed().as_secs_f64();
+                metrics.record_request(latency);
+                metrics.record_screen(cols.len(), discarded, true_zeros);
+                let _ = req.reply.send(ScreenResponse {
+                    lam,
+                    kept: cols,
+                    beta,
+                    discarded,
+                    true_zeros,
+                    latency_s: latency,
+                });
+            }
+        }
+        if let Some(s) = shutdown {
+            let _ = s.send(metrics.clone());
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::{cd::CdSolver, SolveOptions};
+
+    fn service(seed: u64) -> (ScreeningService, crate::data::Dataset, f64) {
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, seed);
+        let lam_max = crate::solver::dual::lambda_max(&ds.x, &ds.y);
+        let svc = ScreeningService::spawn(
+            ds.x.clone(),
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        );
+        (svc, ds, lam_max)
+    }
+
+    #[test]
+    fn serves_exact_solutions() {
+        let (svc, ds, lam_max) = service(1);
+        let resp = svc.screen(0.5 * lam_max);
+        // compare against direct solve
+        let cols: Vec<usize> = (0..ds.p()).collect();
+        let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
+        let direct = CdSolver
+            .solve(&ds.x, &ds.y, &cols, 0.5 * lam_max, None, &opts)
+            .scatter(&cols, ds.p());
+        for j in 0..ds.p() {
+            assert!(
+                (resp.beta[j] - direct[j]).abs() < 1e-4 * (1.0 + direct[j].abs()),
+                "feature {j}"
+            );
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.requests, 1);
+    }
+
+    #[test]
+    fn sequential_state_reused_descending() {
+        let (svc, _ds, lam_max) = service(2);
+        // descending λ sequence: each response exact, screening effective
+        let mut last_kept = usize::MAX;
+        for f in [0.8, 0.6, 0.4, 0.2] {
+            let resp = svc.screen(f * lam_max);
+            assert!(resp.kept.len() <= resp.beta.len());
+            last_kept = resp.kept.len();
+        }
+        assert!(last_kept > 0);
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.requests, 4);
+        assert!(metrics.rejection_ratio.mean() > 0.5);
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let (svc, _ds, lam_max) = service(3);
+        // fire several requests before reading replies → they arrive as a batch
+        let rxs: Vec<_> =
+            [0.7, 0.5, 0.3].iter().map(|f| svc.request(f * lam_max)).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(!resp.beta.is_empty());
+        }
+        let metrics = svc.shutdown();
+        assert_eq!(metrics.requests, 3);
+        // at least one multi-request batch must have formed OR requests were
+        // processed in ≤3 batches
+        assert!(metrics.batches <= 3);
+    }
+
+    #[test]
+    fn lam_above_lambda_max_clamped() {
+        let (svc, ds, lam_max) = service(4);
+        let resp = svc.screen(lam_max * 2.0);
+        assert!(resp.beta.iter().all(|b| *b == 0.0));
+        assert_eq!(resp.true_zeros, ds.p());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,249 @@
+//! Dataset I/O: CSV and (sparse) LIBSVM formats, so downstream users can run
+//! the screening framework on their own data (`dpp path --file …`).
+//!
+//! CSV layout: one sample per line, `y,x1,x2,…,xp` (optional `#` comments).
+//! LIBSVM layout: `y idx:val idx:val …` with 1-based indices.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+use crate::linalg::DenseMatrix;
+
+/// Parse a CSV dataset (`y,x1,…,xp` per line).
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    parse_csv(BufReader::new(f), path.as_ref().display().to_string())
+}
+
+fn parse_csv(reader: impl BufRead, name: String) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut y = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut vals = line.split(',').map(|t| t.trim().parse::<f64>());
+        let yi = vals
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+            .with_context(|| format!("line {}: bad y", lineno + 1))?;
+        let feat: Result<Vec<f64>, _> = vals.collect();
+        let feat = feat.with_context(|| format!("line {}: bad feature", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if feat.len() != first.len() {
+                bail!(
+                    "line {}: {} features, expected {}",
+                    lineno + 1,
+                    feat.len(),
+                    first.len()
+                );
+            }
+        }
+        y.push(yi);
+        rows.push(feat);
+    }
+    if rows.is_empty() {
+        bail!("no data rows");
+    }
+    Ok(Dataset {
+        name,
+        x: DenseMatrix::from_rows(&rows),
+        y,
+        beta_true: None,
+        groups: None,
+    })
+}
+
+/// Write a dataset as CSV.
+pub fn write_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    for i in 0..ds.n() {
+        let mut line = format!("{}", ds.y[i]);
+        for j in 0..ds.p() {
+            line.push(',');
+            line.push_str(&format!("{}", ds.x.get(i, j)));
+        }
+        line.push('\n');
+        f.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Parse LIBSVM format (`y idx:val …`, 1-based indices). `p_hint` can force
+/// the feature count (otherwise the max index seen is used).
+pub fn read_libsvm(path: impl AsRef<Path>, p_hint: Option<usize>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    parse_libsvm(BufReader::new(f), path.as_ref().display().to_string(), p_hint)
+}
+
+fn parse_libsvm(reader: impl BufRead, name: String, p_hint: Option<usize>) -> Result<Dataset> {
+    let mut entries: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut p_max = p_hint.unwrap_or(0);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let yi: f64 = toks
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut row = Vec::new();
+        for t in toks {
+            let (idx, val) = t
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair `{t}`", lineno + 1))?;
+            let idx: usize =
+                idx.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+            }
+            let val: f64 =
+                val.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
+            p_max = p_max.max(idx);
+            row.push((idx - 1, val));
+        }
+        y.push(yi);
+        entries.push(row);
+    }
+    if entries.is_empty() {
+        bail!("no data rows");
+    }
+    if let Some(p) = p_hint {
+        if p_max > p {
+            bail!("index {} exceeds p_hint {}", p_max, p);
+        }
+        p_max = p;
+    }
+    let n = entries.len();
+    let mut x = DenseMatrix::zeros(n, p_max);
+    for (i, row) in entries.iter().enumerate() {
+        for &(j, v) in row {
+            x.set(i, j, v);
+        }
+    }
+    Ok(Dataset { name, x, y, beta_true: None, groups: None })
+}
+
+/// Write a dataset in LIBSVM format (zeros skipped).
+pub fn write_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    for i in 0..ds.n() {
+        let mut line = format!("{}", ds.y[i]);
+        for j in 0..ds.p() {
+            let v = ds.x.get(i, j);
+            if v != 0.0 {
+                line.push_str(&format!(" {}:{}", j + 1, v));
+            }
+        }
+        line.push('\n');
+        f.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use std::io::Cursor;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dpp-io-tests");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = synthetic::synthetic1(10, 7, 3, 0.1, 1);
+        let path = tmp("round.csv");
+        write_csv(&ds, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!((back.n(), back.p()), (10, 7));
+        for i in 0..10 {
+            assert!((back.y[i] - ds.y[i]).abs() < 1e-12);
+            for j in 0..7 {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_rejects_ragged_and_garbage() {
+        assert!(parse_csv(Cursor::new("1,2,3\n4,5\n"), "t".into()).is_err());
+        assert!(parse_csv(Cursor::new("1,abc\n"), "t".into()).is_err());
+        assert!(parse_csv(Cursor::new("# only comments\n"), "t".into()).is_err());
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let ds =
+            parse_csv(Cursor::new("# header\n1,2,3\n\n-1,0,4\n"), "t".into()).unwrap();
+        assert_eq!((ds.n(), ds.p()), (2, 2));
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn libsvm_roundtrip_sparse() {
+        let mut ds = synthetic::synthetic1(8, 6, 2, 0.1, 2);
+        // sparsify
+        for j in 0..6 {
+            for v in ds.x.col_mut(j).iter_mut() {
+                if v.abs() < 0.8 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let path = tmp("round.svm");
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, Some(6)).unwrap();
+        assert_eq!((back.n(), back.p()), (8, 6));
+        for i in 0..8 {
+            for j in 0..6 {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn libsvm_rejects_bad_input() {
+        assert!(parse_libsvm(Cursor::new("1 0:3\n"), "t".into(), None).is_err()); // 0-based
+        assert!(parse_libsvm(Cursor::new("1 a:3\n"), "t".into(), None).is_err());
+        assert!(parse_libsvm(Cursor::new("1 5:1\n"), "t".into(), Some(3)).is_err()); // exceeds hint
+        assert!(parse_libsvm(Cursor::new(""), "t".into(), None).is_err());
+    }
+
+    #[test]
+    fn loaded_dataset_solves() {
+        // end to end: write → read → screened path
+        let ds = synthetic::synthetic1(20, 30, 4, 0.1, 3);
+        let path = tmp("solve.csv");
+        write_csv(&ds, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        let grid = crate::path::LambdaGrid::relative(&back.x, &back.y, 5, 0.1, 1.0);
+        let out = crate::path::solve_path(
+            &back.x,
+            &back.y,
+            &grid,
+            crate::path::RuleKind::Edpp,
+            crate::path::SolverKind::Cd,
+            &crate::path::PathConfig::default(),
+        );
+        assert_eq!(out.records.len(), 5);
+    }
+}

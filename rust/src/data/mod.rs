@@ -1,0 +1,168 @@
+//! Datasets: the paper's synthetic problems and simulated stand-ins for its
+//! nine real datasets (substitution rationale in DESIGN.md §5).
+
+pub mod io;
+pub mod realsim;
+pub mod synthetic;
+
+use crate::linalg::DenseMatrix;
+
+/// A regression problem instance: response `y` (length N) and feature matrix
+/// `x` (N×p). Group-Lasso problems additionally carry `groups`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: DenseMatrix,
+    pub y: Vec<f64>,
+    /// Ground-truth coefficients when generated from a linear model
+    /// (used to verify support recovery in tests; `None` for label-style y).
+    pub beta_true: Option<Vec<f64>>,
+    /// Group boundaries for group-Lasso problems: `groups[g] = (start, len)`.
+    pub groups: Option<Vec<(usize, usize)>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+    pub fn p(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Scale every feature column to unit ℓ2 norm (required by DOME; the
+    /// DPP family works either way — the paper explicitly does *not* assume
+    /// unit length, §2.1).
+    pub fn normalize_features(&mut self) {
+        self.x.normalize_columns();
+    }
+}
+
+/// Identifier for the nine real datasets the paper evaluates on, simulated
+/// here (DESIGN.md §5). Shapes follow the paper; `full=false` scales them to
+/// 1-core-friendly sizes while keeping N:p character.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RealDataset {
+    ProstateCancer,
+    Pie,
+    Mnist,
+    ColonCancer,
+    LungCancer,
+    Coil100,
+    BreastCancer,
+    Leukemia,
+    Svhn,
+}
+
+impl RealDataset {
+    pub const ALL: [RealDataset; 9] = [
+        RealDataset::ProstateCancer,
+        RealDataset::Pie,
+        RealDataset::Mnist,
+        RealDataset::ColonCancer,
+        RealDataset::LungCancer,
+        RealDataset::Coil100,
+        RealDataset::BreastCancer,
+        RealDataset::Leukemia,
+        RealDataset::Svhn,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealDataset::ProstateCancer => "prostate",
+            RealDataset::Pie => "pie",
+            RealDataset::Mnist => "mnist",
+            RealDataset::ColonCancer => "colon",
+            RealDataset::LungCancer => "lung",
+            RealDataset::Coil100 => "coil100",
+            RealDataset::BreastCancer => "breast",
+            RealDataset::Leukemia => "leukemia",
+            RealDataset::Svhn => "svhn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RealDataset> {
+        RealDataset::ALL.iter().copied().find(|d| d.name() == s)
+    }
+
+    /// (N, p) as reported in the paper.
+    pub fn paper_shape(&self) -> (usize, usize) {
+        match self {
+            RealDataset::ProstateCancer => (132, 15154),
+            RealDataset::Pie => (1024, 11553),
+            RealDataset::Mnist => (784, 50000),
+            RealDataset::ColonCancer => (62, 2000),
+            RealDataset::LungCancer => (203, 12600),
+            RealDataset::Coil100 => (1024, 7199),
+            RealDataset::BreastCancer => (44, 7129),
+            RealDataset::Leukemia => (52, 11225),
+            RealDataset::Svhn => (3072, 99288),
+        }
+    }
+
+    /// Scaled-down shape used by default (`DPP_SCALE != full`).
+    pub fn small_shape(&self) -> (usize, usize) {
+        match self {
+            RealDataset::ProstateCancer => (96, 1600),
+            RealDataset::Pie => (196, 1200),
+            RealDataset::Mnist => (196, 2400),
+            RealDataset::ColonCancer => (62, 800),
+            RealDataset::LungCancer => (128, 1400),
+            RealDataset::Coil100 => (196, 1008),
+            RealDataset::BreastCancer => (44, 1000),
+            RealDataset::Leukemia => (52, 1200),
+            RealDataset::Svhn => (300, 3000),
+        }
+    }
+
+    /// Shape honoring the global scale knob.
+    pub fn shape(&self, full: bool) -> (usize, usize) {
+        if full {
+            self.paper_shape()
+        } else {
+            self.small_shape()
+        }
+    }
+
+    /// Generate the simulated stand-in for this dataset.
+    pub fn generate(&self, full: bool, seed: u64) -> Dataset {
+        realsim::generate(*self, full, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        for d in RealDataset::ALL {
+            assert_eq!(RealDataset::from_name(d.name()), Some(d));
+        }
+        assert_eq!(RealDataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn paper_shapes_match_text() {
+        assert_eq!(RealDataset::ProstateCancer.paper_shape(), (132, 15154));
+        assert_eq!(RealDataset::Svhn.paper_shape(), (3072, 99288));
+        assert_eq!(RealDataset::Mnist.paper_shape(), (784, 50000));
+    }
+
+    #[test]
+    fn small_shapes_are_smaller() {
+        for d in RealDataset::ALL {
+            let (n, p) = d.paper_shape();
+            let (sn, sp) = d.small_shape();
+            assert!(sn <= n && sp <= p, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn normalize_features_unit_norm() {
+        let mut ds = RealDataset::ColonCancer.generate(false, 3);
+        ds.normalize_features();
+        for n in ds.x.col_norms() {
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+}

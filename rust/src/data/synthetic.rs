@@ -1,0 +1,187 @@
+//! The paper's synthetic benchmarks (§4.1.2, eq. (74)):
+//! `y = Xβ* + σ·ε`, ε ~ N(0,1), σ = 0.1; β* has `p̄` nonzeros drawn from
+//! U[-1,1]; X is 250×10000 with either i.i.d. N(0,1) entries (Synthetic 1)
+//! or pairwise feature correlation 0.5^{|i−j|} (Synthetic 2).
+
+use super::Dataset;
+use crate::linalg::DenseMatrix;
+use crate::util::rng::Rng;
+
+/// i.i.d. standard Gaussian design matrix.
+pub fn gaussian_iid(n: usize, p: usize, rng: &mut Rng) -> DenseMatrix {
+    let mut data = vec![0.0; n * p];
+    rng.fill_normal(&mut data);
+    DenseMatrix::from_col_major(n, p, data)
+}
+
+/// Design with feature correlation `corr(x_i, x_j) = rho^{|i−j|}` (AR(1)
+/// across the feature index, independently per sample/row): for each row,
+/// x₀ = ε₀ and x_j = ρ·x_{j−1} + √(1−ρ²)·ε_j, which gives exactly the
+/// stationary AR(1) autocorrelation ρ^{|i−j|} with unit marginal variance.
+pub fn gaussian_ar1(n: usize, p: usize, rho: f64, rng: &mut Rng) -> DenseMatrix {
+    assert!((0.0..1.0).contains(&rho));
+    let mut m = DenseMatrix::zeros(n, p);
+    let innov = (1.0 - rho * rho).sqrt();
+    // Row-wise recursion; generation is O(np) once, so strided writes are fine.
+    let mut prev = vec![0.0; n];
+    for i in 0..n {
+        prev[i] = rng.normal();
+        m.set(i, 0, prev[i]);
+    }
+    for j in 1..p {
+        for i in 0..n {
+            let v = rho * prev[i] + innov * rng.normal();
+            m.set(i, j, v);
+            prev[i] = v;
+        }
+    }
+    m
+}
+
+/// Ground truth β*: `nnz` random positions populated from U[-1,1].
+pub fn sparse_ground_truth(p: usize, nnz: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut beta = vec![0.0; p];
+    for j in rng.sample_indices(p, nnz.min(p)) {
+        beta[j] = rng.uniform(-1.0, 1.0);
+    }
+    beta
+}
+
+/// Assemble `y = Xβ* + σ·ε`.
+pub fn linear_response(x: &DenseMatrix, beta: &[f64], sigma: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut y = vec![0.0; x.n_rows()];
+    x.gemv(beta, &mut y);
+    for v in y.iter_mut() {
+        *v += sigma * rng.normal();
+    }
+    y
+}
+
+/// Synthetic 1: i.i.d. design (paper default 250×10000, σ = 0.1).
+pub fn synthetic1(n: usize, p: usize, nnz: usize, sigma: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5E01);
+    let x = gaussian_iid(n, p, &mut rng);
+    let beta = sparse_ground_truth(p, nnz, &mut rng);
+    let y = linear_response(&x, &beta, sigma, &mut rng);
+    Dataset { name: format!("synthetic1-nnz{nnz}"), x, y, beta_true: Some(beta), groups: None }
+}
+
+/// Synthetic 2: correlated design, corr(x_i, x_j) = 0.5^{|i−j|}.
+pub fn synthetic2(n: usize, p: usize, nnz: usize, sigma: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5E02);
+    let x = gaussian_ar1(n, p, 0.5, &mut rng);
+    let beta = sparse_ground_truth(p, nnz, &mut rng);
+    let y = linear_response(&x, &beta, sigma, &mut rng);
+    Dataset { name: format!("synthetic2-nnz{nnz}"), x, y, beta_true: Some(beta), groups: None }
+}
+
+/// Group-Lasso synthetic problem (§4.2): X is N×p i.i.d. standard Gaussian,
+/// y i.i.d. standard Gaussian, p split into `n_groups` equal groups.
+pub fn group_synthetic(n: usize, p: usize, n_groups: usize, seed: u64) -> Dataset {
+    assert!(n_groups > 0 && p % n_groups == 0, "p must divide into equal groups");
+    let mut rng = Rng::new(seed ^ 0x6E0);
+    let x = gaussian_iid(n, p, &mut rng);
+    let mut y = vec![0.0; n];
+    rng.fill_normal(&mut y);
+    let gsize = p / n_groups;
+    let groups = (0..n_groups).map(|g| (g * gsize, gsize)).collect();
+    Dataset {
+        name: format!("group-ng{n_groups}"),
+        x,
+        y,
+        beta_true: None,
+        groups: Some(groups),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+    use crate::util::stats;
+
+    #[test]
+    fn iid_columns_nearly_unit_variance() {
+        let mut rng = Rng::new(1);
+        let x = gaussian_iid(2000, 4, &mut rng);
+        for j in 0..4 {
+            let c = x.col(j);
+            let var = dot(c, c) / c.len() as f64;
+            assert!((var - 1.0).abs() < 0.1, "var={var}");
+        }
+    }
+
+    #[test]
+    fn ar1_adjacent_correlation_near_rho() {
+        let mut rng = Rng::new(2);
+        let rho = 0.5;
+        let x = gaussian_ar1(4000, 6, rho, &mut rng);
+        // sample correlation between adjacent feature columns ≈ 0.5,
+        // lag-2 ≈ 0.25
+        let corr = |a: &[f64], b: &[f64]| {
+            let n = a.len() as f64;
+            let (ma, mb) = (stats::mean(a), stats::mean(b));
+            let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum::<f64>() / n;
+            let (sa, sb) = (
+                (a.iter().map(|v| (v - ma) * (v - ma)).sum::<f64>() / n).sqrt(),
+                (b.iter().map(|v| (v - mb) * (v - mb)).sum::<f64>() / n).sqrt(),
+            );
+            cov / (sa * sb)
+        };
+        let c1 = corr(x.col(2), x.col(3));
+        let c2 = corr(x.col(2), x.col(4));
+        assert!((c1 - rho).abs() < 0.06, "lag1 corr={c1}");
+        assert!((c2 - rho * rho).abs() < 0.06, "lag2 corr={c2}");
+    }
+
+    #[test]
+    fn ground_truth_sparsity() {
+        let mut rng = Rng::new(3);
+        let b = sparse_ground_truth(1000, 50, &mut rng);
+        let nnz = b.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 50);
+        assert!(b.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn synthetic_datasets_shape_and_determinism() {
+        let a = synthetic1(50, 200, 10, 0.1, 9);
+        let b = synthetic1(50, 200, 10, 0.1, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!((a.n(), a.p()), (50, 200));
+        let c = synthetic2(50, 200, 10, 0.1, 9);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn response_reflects_model() {
+        // with sigma=0 the response is exactly X beta*
+        let ds = synthetic1(30, 60, 5, 0.0, 4);
+        let beta = ds.beta_true.as_ref().unwrap();
+        let mut y = vec![0.0; 30];
+        ds.x.gemv(beta, &mut y);
+        for (a, b) in y.iter().zip(ds.y.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn group_synthetic_partitions() {
+        let ds = group_synthetic(40, 120, 30, 5);
+        let groups = ds.groups.as_ref().unwrap();
+        assert_eq!(groups.len(), 30);
+        let total: usize = groups.iter().map(|(_, l)| l).sum();
+        assert_eq!(total, 120);
+        // contiguous, non-overlapping
+        for w in groups.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_synthetic_requires_divisible_p() {
+        group_synthetic(10, 100, 33, 1);
+    }
+}

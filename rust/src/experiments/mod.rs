@@ -1,0 +1,521 @@
+//! Experiment harness: regenerates every figure and table of the paper's
+//! evaluation (§2.3.3, §4). Each `figN` function prints the same
+//! rows/series the paper reports (markdown) and appends them to
+//! `results/*.md`; the benches in `rust/benches/` and `dpp exp …` both call
+//! into here (DESIGN.md §4 experiment index).
+//!
+//! Scale: `DPP_SCALE=full` uses the paper's exact shapes; the default uses
+//! the scaled-down shapes of `RealDataset::small_shape` so the whole suite
+//! is minutes-scale on one core. `DPP_TRIALS` / `DPP_GRID` override the
+//! trial count and λ-grid size (paper: 100 trials / 100-point grid).
+
+use crate::coordinator::run_trials;
+use crate::data::{synthetic, Dataset, RealDataset};
+use crate::path::group::{solve_group_path, GroupRuleKind};
+use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
+use crate::solver::SolveOptions;
+use crate::util::benchkit::Report;
+use crate::util::{full_scale, grid_size, n_trials};
+
+/// Dispatch an experiment by name.
+pub fn run(which: &str) {
+    match which {
+        "fig1" | "table1" => fig1_dpp_family(),
+        "fig2" => fig2_basic_rules(),
+        "fig3" | "table2" => fig3_synthetic(),
+        "fig4" | "table3" => fig4_real(),
+        "fig5" | "table4" => fig5_lars(),
+        "fig6" | "table5" => fig6_group(),
+        "all" => {
+            fig1_dpp_family();
+            fig2_basic_rules();
+            fig3_synthetic();
+            fig4_real();
+            fig5_lars();
+            fig6_group();
+        }
+        other => {
+            eprintln!("unknown experiment `{other}` (fig1..fig6|all)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Paper's λ-grid: `grid_size` points on λ/λmax ∈ [0.05, 1].
+fn paper_grid(ds: &Dataset, k: usize) -> LambdaGrid {
+    LambdaGrid::relative(&ds.x, &ds.y, k, 0.05, 1.0)
+}
+
+/// Indices at which the rejection-ratio series is printed (≈10 samples).
+fn series_samples(k: usize) -> Vec<usize> {
+    let step = (k / 10).max(1);
+    (0..k).step_by(step).chain(std::iter::once(k - 1)).collect()
+}
+
+struct LassoRun {
+    rule: RuleKind,
+    out: PathOutput,
+}
+
+/// Run a set of rules plus the no-screening baseline on one dataset and
+/// average over `trials` (dataset regenerated per trial seed, paper
+/// protocol for the image datasets).
+fn run_rules(
+    make_ds: &(dyn Fn(u64) -> Dataset + Sync),
+    rules: &[RuleKind],
+    solver: SolverKind,
+    sequential: bool,
+    trials: usize,
+    k: usize,
+) -> (Vec<LassoRun>, f64, Vec<Vec<f64>>) {
+    let cfg = PathConfig { sequential, ..Default::default() };
+    let workers = crate::coordinator::default_workers();
+    // per-trial: baseline time + per-rule outputs
+    let per_trial = run_trials(trials, workers, |t| {
+        let ds = make_ds(1000 + t as u64);
+        let grid = paper_grid(&ds, k);
+        let base = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, solver, &cfg);
+        let outs: Vec<PathOutput> = rules
+            .iter()
+            .map(|&r| solve_path(&ds.x, &ds.y, &grid, r, solver, &cfg))
+            .collect();
+        (base.total_secs(), outs)
+    });
+    // aggregate: mean baseline time; concatenate rule outputs (mean ratios
+    // computed per-λ across trials)
+    let base_secs: f64 =
+        per_trial.iter().map(|(b, _)| *b).sum::<f64>() / trials as f64;
+    let mut runs: Vec<LassoRun> = Vec::new();
+    let mut ratio_series: Vec<Vec<f64>> = Vec::new();
+    for (ri, &rule) in rules.iter().enumerate() {
+        // mean rejection ratio per λ-index across trials
+        let kk = per_trial[0].1[ri].records.len();
+        let mut series = vec![0.0; kk];
+        for (_, outs) in &per_trial {
+            for (i, rec) in outs[ri].records.iter().enumerate() {
+                series[i] += rec.rejection_ratio() / trials as f64;
+            }
+        }
+        ratio_series.push(series);
+        // representative output: the first trial's (times averaged below)
+        runs.push(LassoRun { rule, out: per_trial[0].1[ri].clone() });
+        // overwrite times with the cross-trial means
+        let mean_screen: f64 = per_trial
+            .iter()
+            .map(|(_, outs)| outs[ri].total_screen_secs())
+            .sum::<f64>()
+            / trials as f64;
+        let mean_solve: f64 = per_trial
+            .iter()
+            .map(|(_, outs)| outs[ri].total_solve_secs())
+            .sum::<f64>()
+            / trials as f64;
+        let nrec = runs[ri].out.records.len() as f64;
+        for rec in &mut runs[ri].out.records {
+            rec.screen_secs = mean_screen / nrec;
+            rec.solve_secs = mean_solve / nrec;
+        }
+    }
+    (runs, base_secs, ratio_series)
+}
+
+fn emit_rejection_series(
+    title: &str,
+    file: &str,
+    grid_k: usize,
+    lam_fracs: &[f64],
+    rule_names: &[&str],
+    series: &[Vec<f64>],
+) {
+    let mut header = vec!["λ/λmax"];
+    header.extend(rule_names);
+    let mut rep = Report::new(title, &header);
+    for &i in &series_samples(grid_k) {
+        let mut row = vec![format!("{:.3}", lam_fracs[i])];
+        for s in series {
+            row.push(format!("{:.3}", s[i]));
+        }
+        rep.row(&row);
+    }
+    rep.emit(file);
+}
+
+fn emit_speedup_table(
+    title: &str,
+    file: &str,
+    rows: &[(String, f64, Vec<(String, f64, f64)>)],
+) {
+    // rows: (dataset, baseline_secs, [(rule, total_secs_with_rule, screen_secs)])
+    let mut header = vec!["data".to_string(), "solver(s)".to_string()];
+    for (rule, _, _) in &rows[0].2 {
+        header.push(format!("{rule}+solver(s)"));
+    }
+    for (rule, _, _) in &rows[0].2 {
+        header.push(format!("{rule} screen(s)"));
+    }
+    for (rule, _, _) in &rows[0].2 {
+        header.push(format!("{rule} speedup"));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rep = Report::new(title, &hdr);
+    for (ds, base, rules) in rows {
+        let mut row = vec![ds.clone(), format!("{base:.2}")];
+        for (_, total, _) in rules {
+            row.push(format!("{total:.2}"));
+        }
+        for (_, _, screen) in rules {
+            row.push(format!("{screen:.3}"));
+        }
+        for (_, total, _) in rules {
+            row.push(format!("{:.1}x", base / total.max(1e-12)));
+        }
+        rep.row(&row);
+    }
+    rep.emit(file);
+}
+
+fn real_ds_maker(d: RealDataset, normalize: bool) -> impl Fn(u64) -> Dataset + Sync {
+    let full = full_scale();
+    move |seed| {
+        let mut ds = d.generate(full, seed);
+        if normalize {
+            ds.normalize_features();
+        }
+        ds
+    }
+}
+
+/// Fig. 1 + Table 1 — the DPP family (DPP, Improvement 1/2, EDPP) on
+/// sim-Prostate / sim-PIE / sim-MNIST: rejection ratios and speedups.
+pub fn fig1_dpp_family() {
+    let k = grid_size(100);
+    let trials = n_trials(3);
+    let rules = [
+        RuleKind::Dpp,
+        RuleKind::Improvement1,
+        RuleKind::Improvement2,
+        RuleKind::Edpp,
+    ];
+    let rule_names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+    let mut table_rows = Vec::new();
+    for d in [RealDataset::ProstateCancer, RealDataset::Pie, RealDataset::Mnist] {
+        let maker = real_ds_maker(d, false);
+        let (runs, base, series) =
+            run_rules(&maker, &rules, SolverKind::Cd, true, trials, k);
+        let fr: Vec<f64> = runs[0]
+            .out
+            .records
+            .iter()
+            .map(|r| r.lam / runs[0].out.records[0].lam)
+            .collect();
+        emit_rejection_series(
+            &format!("Fig.1 rejection ratios — {} (trials={trials})", d.name()),
+            "fig1.md",
+            k,
+            &fr,
+            &rule_names,
+            &series,
+        );
+        table_rows.push((
+            d.name().to_string(),
+            base,
+            runs.iter()
+                .map(|r| {
+                    (
+                        r.rule.name().to_string(),
+                        r.out.total_secs(),
+                        r.out.total_screen_secs(),
+                    )
+                })
+                .collect(),
+        ));
+    }
+    emit_speedup_table("Table 1 — DPP family runtimes", "fig1.md", &table_rows);
+}
+
+/// Fig. 2 — basic versions of SAFE, DOME, strong rule and EDPP on six
+/// unit-norm datasets.
+pub fn fig2_basic_rules() {
+    let k = grid_size(100);
+    let trials = n_trials(2);
+    let rules = [RuleKind::Safe, RuleKind::Dome, RuleKind::Strong, RuleKind::Edpp];
+    let rule_names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+    for d in [
+        RealDataset::ColonCancer,
+        RealDataset::LungCancer,
+        RealDataset::ProstateCancer,
+        RealDataset::Pie,
+        RealDataset::Mnist,
+        RealDataset::Coil100,
+    ] {
+        // DOME requires unit-norm features (§4.1.1)
+        let maker = real_ds_maker(d, true);
+        let (runs, _base, series) =
+            run_rules(&maker, &rules, SolverKind::Cd, /*sequential=*/ false, trials, k);
+        let fr: Vec<f64> = runs[0]
+            .out
+            .records
+            .iter()
+            .map(|r| r.lam / runs[0].out.records[0].lam)
+            .collect();
+        emit_rejection_series(
+            &format!("Fig.2 basic-rule rejection ratios — {} (trials={trials})", d.name()),
+            "fig2.md",
+            k,
+            &fr,
+            &rule_names,
+            &series,
+        );
+    }
+}
+
+/// Fig. 3 + Table 2 — sequential SAFE / strong / EDPP on Synthetic 1 & 2
+/// with p̄ ∈ {100, 1000, 5000} nonzeros (scaled at small sizes).
+pub fn fig3_synthetic() {
+    let k = grid_size(100);
+    let trials = n_trials(3);
+    let full = full_scale();
+    let (n, p) = if full { (250, 10_000) } else { (100, 2_000) };
+    let nnzs: [usize; 3] = if full { [100, 1000, 5000] } else { [20, 200, 1000] };
+    let rules = [RuleKind::Safe, RuleKind::Strong, RuleKind::Edpp];
+    let rule_names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+    let mut table_rows = Vec::new();
+    for (variant, gen) in [
+        ("synthetic1", synthetic::synthetic1 as fn(usize, usize, usize, f64, u64) -> Dataset),
+        ("synthetic2", synthetic::synthetic2 as fn(usize, usize, usize, f64, u64) -> Dataset),
+    ] {
+        for &nnz in &nnzs {
+            let maker = move |seed: u64| gen(n, p, nnz, 0.1, seed);
+            let (runs, base, series) =
+                run_rules(&maker, &rules, SolverKind::Cd, true, trials, k);
+            let fr: Vec<f64> = runs[0]
+                .out
+                .records
+                .iter()
+                .map(|r| r.lam / runs[0].out.records[0].lam)
+                .collect();
+            emit_rejection_series(
+                &format!("Fig.3 {variant} p̄={nnz} (trials={trials})"),
+                "fig3.md",
+                k,
+                &fr,
+                &rule_names,
+                &series,
+            );
+            table_rows.push((
+                format!("{variant} p̄={nnz}"),
+                base,
+                runs.iter()
+                    .map(|r| {
+                        (
+                            r.rule.name().to_string(),
+                            r.out.total_secs(),
+                            r.out.total_screen_secs(),
+                        )
+                    })
+                    .collect(),
+            ));
+        }
+    }
+    emit_speedup_table("Table 2 — synthetic runtimes", "fig3.md", &table_rows);
+}
+
+/// Fig. 4 + Table 3 — sequential SAFE / strong / EDPP on six (simulated)
+/// real datasets.
+pub fn fig4_real() {
+    let k = grid_size(100);
+    let trials = n_trials(2);
+    let rules = [RuleKind::Safe, RuleKind::Strong, RuleKind::Edpp];
+    let rule_names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+    let mut table_rows = Vec::new();
+    for d in [
+        RealDataset::BreastCancer,
+        RealDataset::Leukemia,
+        RealDataset::ProstateCancer,
+        RealDataset::Pie,
+        RealDataset::Mnist,
+        RealDataset::Svhn,
+    ] {
+        let maker = real_ds_maker(d, false);
+        let (runs, base, series) =
+            run_rules(&maker, &rules, SolverKind::Cd, true, trials, k);
+        let fr: Vec<f64> = runs[0]
+            .out
+            .records
+            .iter()
+            .map(|r| r.lam / runs[0].out.records[0].lam)
+            .collect();
+        emit_rejection_series(
+            &format!("Fig.4 rejection ratios — {} (trials={trials})", d.name()),
+            "fig4.md",
+            k,
+            &fr,
+            &rule_names,
+            &series,
+        );
+        table_rows.push((
+            d.name().to_string(),
+            base,
+            runs.iter()
+                .map(|r| {
+                    (
+                        r.rule.name().to_string(),
+                        r.out.total_secs(),
+                        r.out.total_screen_secs(),
+                    )
+                })
+                .collect(),
+        ));
+    }
+    emit_speedup_table("Table 3 — real-data runtimes (CD solver)", "fig4.md", &table_rows);
+}
+
+/// Fig. 5 + Table 4 — strong rule and EDPP with the LARS solver.
+pub fn fig5_lars() {
+    let k = grid_size(100);
+    let trials = n_trials(1);
+    let rules = [RuleKind::Strong, RuleKind::Edpp];
+    let mut table_rows = Vec::new();
+    for d in [
+        RealDataset::BreastCancer,
+        RealDataset::Leukemia,
+        RealDataset::ProstateCancer,
+        RealDataset::Pie,
+        RealDataset::Mnist,
+        RealDataset::Svhn,
+    ] {
+        let maker = real_ds_maker(d, false);
+        let (runs, base, _series) =
+            run_rules(&maker, &rules, SolverKind::Lars, true, trials, k);
+        table_rows.push((
+            d.name().to_string(),
+            base,
+            runs.iter()
+                .map(|r| {
+                    (
+                        r.rule.name().to_string(),
+                        r.out.total_secs(),
+                        r.out.total_screen_secs(),
+                    )
+                })
+                .collect(),
+        ));
+    }
+    emit_speedup_table(
+        "Fig.5 / Table 4 — LARS solver: runtimes and speedup",
+        "fig5.md",
+        &table_rows,
+    );
+}
+
+/// Fig. 6 + Table 5 — group EDPP vs group strong rule with varying group
+/// counts on the 250×200000 synthetic problem (scaled by default).
+pub fn fig6_group() {
+    let k = grid_size(100);
+    let trials = n_trials(2);
+    let full = full_scale();
+    let (n, p) = if full { (250, 200_000) } else { (100, 6_000) };
+    let ngroups: [usize; 3] = if full { [10_000, 20_000, 40_000] } else { [300, 600, 1_200] };
+    let opts = SolveOptions::default();
+    let mut table_rows = Vec::new();
+    for &ng in &ngroups {
+        let workers = crate::coordinator::default_workers();
+        let per_trial = run_trials(trials, workers, |t| {
+            let ds = synthetic::group_synthetic(n, p, ng, 3000 + t as u64);
+            let groups = ds.groups.clone().unwrap();
+            let (glm, _) = crate::solver::dual::group_lambda_max(&ds.x, &ds.y, &groups);
+            let grid = LambdaGrid::relative_to(glm, k, 0.05, 1.0);
+            let base =
+                solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::None, &opts);
+            let strong =
+                solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::Strong, &opts);
+            let edpp =
+                solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::Edpp, &opts);
+            (base, strong, edpp)
+        });
+        // rejection series (mean across trials)
+        let kk = per_trial[0].1.records.len();
+        let mut s_strong = vec![0.0; kk];
+        let mut s_edpp = vec![0.0; kk];
+        for (_, st, ed) in &per_trial {
+            for i in 0..kk {
+                s_strong[i] += st.records[i].rejection_ratio() / trials as f64;
+                s_edpp[i] += ed.records[i].rejection_ratio() / trials as f64;
+            }
+        }
+        let fr: Vec<f64> = per_trial[0]
+            .1
+            .records
+            .iter()
+            .map(|r| r.lam / per_trial[0].1.records[0].lam)
+            .collect();
+        emit_rejection_series(
+            &format!("Fig.6 group rejection ratios — n_g={ng} (trials={trials})"),
+            "fig6.md",
+            k,
+            &fr,
+            &["group-strong", "group-edpp"],
+            &[s_strong, s_edpp],
+        );
+        let base: f64 =
+            per_trial.iter().map(|(b, _, _)| b.total_secs()).sum::<f64>() / trials as f64;
+        let strong_total: f64 =
+            per_trial.iter().map(|(_, s, _)| s.total_secs()).sum::<f64>() / trials as f64;
+        let strong_screen: f64 = per_trial
+            .iter()
+            .map(|(_, s, _)| s.total_screen_secs())
+            .sum::<f64>()
+            / trials as f64;
+        let edpp_total: f64 =
+            per_trial.iter().map(|(_, _, e)| e.total_secs()).sum::<f64>() / trials as f64;
+        let edpp_screen: f64 = per_trial
+            .iter()
+            .map(|(_, _, e)| e.total_screen_secs())
+            .sum::<f64>()
+            / trials as f64;
+        table_rows.push((
+            format!("n_g={ng}"),
+            base,
+            vec![
+                ("group-strong".to_string(), strong_total, strong_screen),
+                ("group-edpp".to_string(), edpp_total, edpp_screen),
+            ],
+        ));
+    }
+    emit_speedup_table("Table 5 — group-Lasso runtimes", "fig6.md", &table_rows);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_samples_cover_range() {
+        let s = series_samples(100);
+        assert_eq!(*s.first().unwrap(), 0);
+        assert_eq!(*s.last().unwrap(), 99);
+        assert!(s.len() >= 10);
+        let s1 = series_samples(3);
+        assert!(s1.contains(&0) && s1.contains(&2));
+    }
+
+    #[test]
+    fn run_rules_smoke() {
+        // tiny end-to-end harness run: 1 trial, 2 rules, small grid
+        let maker = |seed: u64| synthetic::synthetic1(30, 120, 10, 0.1, seed);
+        let (runs, base, series) = run_rules(
+            &maker,
+            &[RuleKind::Dpp, RuleKind::Edpp],
+            SolverKind::Cd,
+            true,
+            1,
+            6,
+        );
+        assert_eq!(runs.len(), 2);
+        assert_eq!(series.len(), 2);
+        assert!(base > 0.0);
+        // EDPP mean rejection ≥ DPP mean rejection
+        let mean = |s: &Vec<f64>| s.iter().sum::<f64>() / s.len() as f64;
+        assert!(mean(&series[1]) >= mean(&series[0]) - 1e-9);
+    }
+}

@@ -1,0 +1,61 @@
+//! # dpp-screen
+//!
+//! A production-shaped reproduction of **"Lasso Screening Rules via Dual
+//! Polytope Projection"** (Wang, Wonka, Ye — NIPS 2013).
+//!
+//! The library implements the paper's entire system as a three-layer
+//! rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * **Screening rules** ([`screening`]): the DPP family (DPP, Improvement 1,
+//!   Improvement 2, EDPP — Corollaries 4/5/17, Theorems 11/14/16), the safe
+//!   baselines SAFE/ST1 and DOME, the heuristic baselines (sequential strong
+//!   rules with KKT repair, SIS), and the group-Lasso extensions
+//!   (Corollary 21, group strong rules).
+//! * **Solver substrates** ([`solver`]): coordinate descent (the role of the
+//!   paper's SLEP solver), FISTA, LARS, and block coordinate descent for
+//!   group Lasso, with duality-gap stopping ([`solver::dual`]).
+//! * **Pathwise driver** ([`path`]): solves a Lasso problem along a λ-grid
+//!   with sequential screening and warm starts, collecting the paper's two
+//!   metrics — rejection ratio and speedup.
+//! * **L3 coordinator** ([`coordinator`]): multi-trial scheduler, a
+//!   request/response screening service with batching, and metrics.
+//! * **PJRT runtime** ([`runtime`]): loads AOT artifacts (`artifacts/*.hlo.txt`,
+//!   lowered from the JAX/Pallas layers at build time) and executes the
+//!   fixed-shape screening sweep through XLA, with a native fallback.
+//! * **Substrates**: dense linear algebra ([`linalg`]), dataset generators
+//!   matching the paper's synthetic and (simulated) real datasets ([`data`]),
+//!   and utilities ([`util`]) — RNG, stats, CLI, bench harness, property
+//!   testing — hand-rolled because the build image is offline (DESIGN.md §3).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dpp_screen::prelude::*;
+//!
+//! // A small synthetic Lasso problem (Synthetic-1 family, eq. (74)).
+//! let ds = dpp_screen::data::synthetic::synthetic1(64, 256, 16, 0.1, 7);
+//! let grid = LambdaGrid::relative(&ds.x, &ds.y, 20, 0.05, 1.0);
+//! let cfg = PathConfig::default();
+//! let out = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+//! // EDPP is safe: every rejection is a true zero of the reference solution.
+//! assert!(out.mean_rejection_ratio() <= 1.0 + 1e-12);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod path;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::data::Dataset;
+    pub use crate::linalg::DenseMatrix;
+    pub use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
+    pub use crate::screening::{ScreenContext, ScreeningRule};
+    pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+}

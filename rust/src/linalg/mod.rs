@@ -1,0 +1,358 @@
+//! Dense linear-algebra substrate.
+//!
+//! The feature matrix X (N×p) is stored **column-major**: screening and
+//! coordinate descent both sweep features, and a contiguous column makes
+//! `xᵢᵀw` a streaming dot product. The two hot operations are
+//! [`DenseMatrix::gemv_t`] (the screening sweep `Xᵀw`, O(Np)) and per-column
+//! dots/axpys inside the solvers.
+
+pub mod ops;
+pub mod sparse;
+
+pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale};
+pub use sparse::CscMatrix;
+
+/// Column-major dense matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        DenseMatrix { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    /// Build from a column-major data vector (len must be n_rows*n_cols).
+    pub fn from_col_major(n_rows: usize, n_cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n_rows * n_cols, "shape/data mismatch");
+        DenseMatrix { n_rows, n_cols, data }
+    }
+
+    /// Build from a row-major iterator of rows (convenience for tests).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n_rows = rows.len();
+        let n_cols = if n_rows == 0 { 0 } else { rows[0].len() };
+        let mut m = DenseMatrix::zeros(n_rows, n_cols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n_cols);
+            for (j, &v) in r.iter().enumerate() {
+                m.data[j * n_rows + i] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.n_cols);
+        &self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    /// Mutable column slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.n_cols);
+        &mut self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n_rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n_rows + i] = v;
+    }
+
+    /// Raw column-major storage (used by the PJRT runtime to build literals).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Screening sweep: `out[j] = xⱼᵀ w` for every column j. This is the
+    /// O(Np) hot spot of every screening rule (DESIGN.md §7 L3 target).
+    ///
+    /// Eight columns per pass (perf iteration 2, EXPERIMENTS.md §Perf):
+    /// `w` is re-used from L1/L2 across the column block, cutting its
+    /// memory traffic 8×, and eight independent accumulators keep the FMA
+    /// pipeline full.
+    pub fn gemv_t(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        let n = self.n_rows;
+        let mut j = 0;
+        while j + 8 <= self.n_cols {
+            let base = j * n;
+            let block = &self.data[base..base + 8 * n];
+            let (c0, rest) = block.split_at(n);
+            let (c1, rest) = rest.split_at(n);
+            let (c2, rest) = rest.split_at(n);
+            let (c3, rest) = rest.split_at(n);
+            let (c4, rest) = rest.split_at(n);
+            let (c5, rest) = rest.split_at(n);
+            let (c6, c7) = rest.split_at(n);
+            let mut s = [0.0f64; 8];
+            for i in 0..n {
+                let wi = w[i];
+                s[0] += c0[i] * wi;
+                s[1] += c1[i] * wi;
+                s[2] += c2[i] * wi;
+                s[3] += c3[i] * wi;
+                s[4] += c4[i] * wi;
+                s[5] += c5[i] * wi;
+                s[6] += c6[i] * wi;
+                s[7] += c7[i] * wi;
+            }
+            out[j..j + 8].copy_from_slice(&s);
+            j += 8;
+        }
+        while j < self.n_cols {
+            out[j] = dot(self.col(j), w);
+            j += 1;
+        }
+    }
+
+    /// Like [`gemv_t`] but only over the listed columns (screened problems).
+    pub fn gemv_t_subset(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        for (k, &j) in cols.iter().enumerate() {
+            out[k] = dot(self.col(j), w);
+        }
+    }
+
+    /// `out += Σⱼ betaⱼ · xⱼ` over the given (column, coefficient) pairs —
+    /// how solvers materialize Xβ for a sparse β.
+    pub fn accum_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), beta.len());
+        assert_eq!(out.len(), self.n_rows);
+        for (k, &j) in cols.iter().enumerate() {
+            if beta[k] != 0.0 {
+                axpy(beta[k], self.col(j), out);
+            }
+        }
+    }
+
+    /// Dense `y = X β` for a full-length β (test/reference use).
+    pub fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        out.fill(0.0);
+        for j in 0..self.n_cols {
+            if beta[j] != 0.0 {
+                axpy(beta[j], self.col(j), out);
+            }
+        }
+    }
+
+    /// ℓ2 norm of every column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.n_cols).map(|j| nrm2(self.col(j))).collect()
+    }
+
+    /// Spectral-norm upper bound per column subset via power iteration on
+    /// XᵀX restricted to `cols` (used for FISTA step sizes).
+    pub fn op_norm_sq_subset(&self, cols: &[usize], iters: usize, seed: u64) -> f64 {
+        if cols.is_empty() {
+            return 0.0;
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut v: Vec<f64> = (0..cols.len()).map(|_| rng.normal()).collect();
+        let nv = nrm2(&v);
+        if nv == 0.0 {
+            return 0.0;
+        }
+        scale(1.0 / nv, &mut v);
+        let mut xb = vec![0.0; self.n_rows];
+        let mut w = vec![0.0; cols.len()];
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            xb.fill(0.0);
+            self.accum_cols(cols, &v, &mut xb);
+            self.gemv_t_subset(cols, &xb, &mut w);
+            lam = nrm2(&w);
+            if lam == 0.0 {
+                return 0.0;
+            }
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi / lam;
+            }
+        }
+        lam
+    }
+
+    /// Scale every column to unit ℓ2 norm (zero columns left untouched).
+    /// Returns the original norms. DOME requires unit-norm features (§4.1.1).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.n_cols);
+        let n = self.n_rows;
+        for j in 0..self.n_cols {
+            let c = &mut self.data[j * n..(j + 1) * n];
+            let nj = nrm2(c);
+            norms.push(nj);
+            if nj > 0.0 {
+                scale(1.0 / nj, c);
+            }
+        }
+        norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn small() -> DenseMatrix {
+        DenseMatrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn shape_and_access() {
+        let m = small();
+        assert_eq!((m.n_rows(), m.n_cols()), (2, 3));
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn gemv_t_matches_manual() {
+        let m = small();
+        let w = [1.0, -1.0];
+        let mut out = [0.0; 3];
+        m.gemv_t(&w, &mut out);
+        assert_eq!(out, [-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn gemv_t_unrolled_matches_naive_randomized() {
+        prop::check("gemv_t unrolled == naive", 0xA1, 30, |rng| {
+            let n = 1 + rng.usize(17);
+            let p = 1 + rng.usize(23);
+            let mut data = vec![0.0; n * p];
+            rng.fill_normal(&mut data);
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let mut w = vec![0.0; n];
+            rng.fill_normal(&mut w);
+            let mut fast = vec![0.0; p];
+            m.gemv_t(&w, &mut fast);
+            for j in 0..p {
+                let naive = dot(m.col(j), &w);
+                assert!((fast[j] - naive).abs() <= 1e-10 * (1.0 + naive.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_roundtrip_transpose() {
+        // (Xβ)·w == β·(Xᵀw)
+        prop::check("gemv adjoint identity", 0xA2, 20, |rng| {
+            let n = 1 + rng.usize(10);
+            let p = 1 + rng.usize(10);
+            let mut data = vec![0.0; n * p];
+            rng.fill_normal(&mut data);
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let mut beta = vec![0.0; p];
+            rng.fill_normal(&mut beta);
+            let mut w = vec![0.0; n];
+            rng.fill_normal(&mut w);
+            let mut xb = vec![0.0; n];
+            m.gemv(&beta, &mut xb);
+            let mut xtw = vec![0.0; p];
+            m.gemv_t(&w, &mut xtw);
+            let lhs = dot(&xb, &w);
+            let rhs = dot(&beta, &xtw);
+            assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        });
+    }
+
+    #[test]
+    fn accum_cols_matches_gemv() {
+        let m = small();
+        let mut full = vec![0.0; 2];
+        m.gemv(&[0.5, 0.0, -2.0], &mut full);
+        let mut sparse = vec![0.0; 2];
+        m.accum_cols(&[0, 2], &[0.5, -2.0], &mut sparse);
+        assert_eq!(full, sparse);
+    }
+
+    #[test]
+    fn col_norms_and_normalize() {
+        let mut m = small();
+        let norms = m.col_norms();
+        assert!((norms[0] - (17.0f64).sqrt()).abs() < 1e-12);
+        let orig = m.normalize_columns();
+        assert_eq!(orig, norms);
+        for j in 0..3 {
+            assert!((nrm2(m.col(j)) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn op_norm_matches_gram_eig_small() {
+        // For a 2-column orthogonal design, ||X_A||^2 = max column norm^2.
+        let m = DenseMatrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        let lam = m.op_norm_sq_subset(&[0, 1], 50, 1);
+        assert!((lam - 16.0).abs() < 1e-6, "{lam}");
+    }
+
+    #[test]
+    fn op_norm_upper_bounds_rayleigh() {
+        prop::check("power iteration dominates random Rayleigh quotients", 0xA3, 10, |rng| {
+            let n = 4 + rng.usize(8);
+            let p = 3 + rng.usize(6);
+            let mut data = vec![0.0; n * p];
+            rng.fill_normal(&mut data);
+            let m = DenseMatrix::from_col_major(n, p, data);
+            let cols: Vec<usize> = (0..p).collect();
+            let lam = m.op_norm_sq_subset(&cols, 100, 7);
+            // Rayleigh quotient of any unit vector must be ≤ λmax (+ slack).
+            let mut v = vec![0.0; p];
+            rng.fill_normal(&mut v);
+            let nv = nrm2(&v);
+            scale(1.0 / nv, &mut v);
+            let mut xb = vec![0.0; n];
+            m.accum_cols(&cols, &v, &mut xb);
+            let q = dot(&xb, &xb);
+            assert!(q <= lam * 1.0 + 1e-6 + lam * 0.05, "rayleigh {q} > lam {lam}");
+        });
+    }
+
+    #[test]
+    fn from_rows_empty() {
+        let m = DenseMatrix::from_rows(&[]);
+        assert_eq!((m.n_rows(), m.n_cols()), (0, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        DenseMatrix::from_col_major(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn rng_matrix_deterministic() {
+        let mk = || {
+            let mut r = Rng::new(5);
+            let mut d = vec![0.0; 12];
+            r.fill_normal(&mut d);
+            DenseMatrix::from_col_major(3, 4, d)
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,146 @@
+//! Vector micro-kernels (BLAS level-1 equivalents) with 4-way unrolling.
+
+/// Dot product `x·y`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y += a·x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// `x *= a`.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// ℓ2 norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn nrm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ℓ∞ norm.
+#[inline]
+pub fn nrm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// Soft-threshold operator `S(z, t) = sign(z)·max(|z|−t, 0)` — the Lasso
+/// proximal map, used by CD and FISTA.
+#[inline]
+pub fn soft_threshold(z: f64, t: f64) -> f64 {
+    if z > t {
+        z - t
+    } else if z < -t {
+        z + t
+    } else {
+        0.0
+    }
+}
+
+/// Squared euclidean distance.
+#[inline]
+pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y.iter()).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+/// `‖s·x − y‖²` without materializing `s·x` (screening-rule radii).
+#[inline]
+pub fn dist_sq_scaled(x: &[f64], s: f64, y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y.iter()).map(|(a, b)| (s * a - b) * (s * a - b)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        prop::check("dot unrolled == naive", 0xB1, 50, |rng| {
+            let n = rng.usize(33);
+            let mut x = vec![0.0; n];
+            let mut y = vec![0.0; n];
+            rng.fill_normal(&mut x);
+            rng.fill_normal(&mut y);
+            let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-10 * (1.0 + naive.abs()));
+        });
+    }
+
+    #[test]
+    fn axpy_scale_norms() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(2.0, &[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![1.5, 2.0, 2.5]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert_eq!(nrm1(&[-1.0, 2.0, -3.0]), 6.0);
+        assert_eq!(nrm_inf(&[-1.0, 2.0, -3.0]), 3.0);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn soft_threshold_is_prox_of_abs() {
+        // S(z,t) minimizes 0.5(b−z)² + t|b|: check stationarity numerically.
+        prop::check("soft-threshold prox optimality", 0xB2, 40, |rng| {
+            let z = rng.uniform(-5.0, 5.0);
+            let t = rng.uniform(0.0, 3.0);
+            let b = soft_threshold(z, t);
+            let obj = |b: f64| 0.5 * (b - z) * (b - z) + t * b.abs();
+            let fb = obj(b);
+            for db in [-1e-4, 1e-4, -0.1, 0.1] {
+                assert!(obj(b + db) >= fb - 1e-12, "z={z} t={t} b={b}");
+            }
+        });
+    }
+
+    #[test]
+    fn dist_sq_basic() {
+        assert_eq!(dist_sq(&[1.0, 2.0], &[4.0, 6.0]), 25.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! `dpp` — CLI for the dpp-screen library (leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         environment + artifact inventory
+//!   path      --dataset … --rule … --solver …      run a screened λ-path
+//!   group     --ngroups …        run a group-Lasso screened path
+//!   service   --requests …       demo the batching screening service
+//!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
+
+use dpp_screen::coordinator::service::ScreeningService;
+use dpp_screen::data::{synthetic, RealDataset};
+use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::runtime::ArtifactRuntime;
+use dpp_screen::solver::SolveOptions;
+use dpp_screen::util::cli::Args;
+use dpp_screen::util::{benchkit, full_scale, grid_size};
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("info") => cmd_info(),
+        Some("path") => cmd_path(&args),
+        Some("group") => cmd_group(&args),
+        Some("service") => cmd_service(&args),
+        Some("exp") => cmd_exp(&args),
+        _ => {
+            eprintln!(
+                "usage: dpp <info|path|group|service|exp> [--options]\n\
+                 \n\
+                 dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
+                 dpp group --ngroups 100 --rule group-edpp\n\
+                 dpp service --requests 20 --rule edpp\n\
+                 dpp exp fig1        # regenerate a paper figure/table\n\
+                 dpp exp all"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> dpp_screen::data::Dataset {
+    // user-supplied data: --file data.csv (y,x1,…,xp) or --file data.svm
+    if let Some(path) = args.get("file") {
+        let res = if path.ends_with(".svm") || path.ends_with(".libsvm") {
+            dpp_screen::data::io::read_libsvm(path, None)
+        } else {
+            dpp_screen::data::io::read_csv(path)
+        };
+        match res {
+            Ok(ds) => return ds,
+            Err(e) => {
+                eprintln!("failed to load {path}: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let name = args.get_or("dataset", "synthetic1");
+    let seed = args.get_parse::<u64>("seed", 42);
+    let full = full_scale() || args.flag("full");
+    match name.as_str() {
+        "synthetic1" => {
+            let (n, p) = if full { (250, 10000) } else { (100, 1000) };
+            synthetic::synthetic1(n, p, args.get_parse("nnz", p / 10), 0.1, seed)
+        }
+        "synthetic2" => {
+            let (n, p) = if full { (250, 10000) } else { (100, 1000) };
+            synthetic::synthetic2(n, p, args.get_parse("nnz", p / 10), 0.1, seed)
+        }
+        other => match RealDataset::from_name(other) {
+            Some(d) => d.generate(full, seed),
+            None => {
+                eprintln!("unknown dataset `{other}`");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+fn cmd_info() {
+    println!("dpp-screen — Lasso screening via dual polytope projection (NIPS'13)");
+    println!(
+        "datasets: synthetic1 synthetic2 {}",
+        RealDataset::ALL.map(|d| d.name()).join(" ")
+    );
+    println!("rules:    {} none", RuleKind::ALL_LASSO.map(|r| r.name()).join(" "));
+    println!("solvers:  cd fista lars");
+    match ArtifactRuntime::load_default() {
+        Some(rt) => {
+            println!("artifacts ({}):", rt.artifact_dir().display());
+            for (name, n, p) in rt.available() {
+                println!("  {name}  {n}x{p}");
+            }
+        }
+        None => println!("artifacts: none (run `make artifacts`; native fallback active)"),
+    }
+}
+
+fn cmd_path(args: &Args) {
+    let ds = load_dataset(args);
+    let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
+    let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
+    let k = args.get_parse("grid", grid_size(100));
+    let lo = args.get_parse("lo", 0.05);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, k, lo, 1.0);
+    let cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
+    println!(
+        "dataset={} ({}x{}), rule={}, solver={}, grid={}x[{}..1.0]·λmax",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        rule.name(),
+        solver.name(),
+        k,
+        lo
+    );
+    let out = solve_path(&ds.x, &ds.y, &grid, rule, solver, &cfg);
+    let mut report = benchkit::Report::new(
+        &format!("path: {} / {} / {}", ds.name, rule.name(), solver.name()),
+        &["λ/λmax", "kept", "discarded", "rejection", "screen(s)", "solve(s)", "iters", "repairs"],
+    );
+    for r in &out.records {
+        report.row(&[
+            format!("{:.3}", r.lam / grid.lam_max),
+            r.kept.to_string(),
+            r.discarded.to_string(),
+            format!("{:.3}", r.rejection_ratio()),
+            format!("{:.4}", r.screen_secs),
+            format!("{:.4}", r.solve_secs),
+            r.solver_iters.to_string(),
+            r.kkt_repairs.to_string(),
+        ]);
+    }
+    report.emit("path_runs.md");
+    println!(
+        "mean rejection ratio: {:.4}   total screen {:.3}s   total solve {:.3}s",
+        out.mean_rejection_ratio(),
+        out.total_screen_secs(),
+        out.total_solve_secs()
+    );
+}
+
+fn cmd_group(args: &Args) {
+    let seed = args.get_parse::<u64>("seed", 42);
+    let full = full_scale() || args.flag("full");
+    let (n, p) = if full { (250, 200_000) } else { (80, 2000) };
+    let ngroups = args.get_parse("ngroups", if full { 10_000 } else { 400 });
+    let ds = synthetic::group_synthetic(n, p, ngroups, seed);
+    let groups = ds.groups.clone().unwrap();
+    let (glm, _) = dpp_screen::solver::dual::group_lambda_max(&ds.x, &ds.y, &groups);
+    let grid =
+        LambdaGrid::relative_to(glm, args.get_parse("grid", grid_size(100)), 0.05, 1.0);
+    let rule = match args.get_or("rule", "group-edpp").as_str() {
+        "group-edpp" => GroupRuleKind::Edpp,
+        "group-strong" => GroupRuleKind::Strong,
+        "none" => GroupRuleKind::None,
+        other => {
+            eprintln!("unknown group rule `{other}`");
+            std::process::exit(2);
+        }
+    };
+    let out = solve_group_path(&ds.x, &ds.y, &groups, &grid, rule, &SolveOptions::default());
+    println!(
+        "group path: {} groups of size {}, rule={} → mean rejection {:.4}, screen {:.3}s, solve {:.3}s",
+        ngroups,
+        p / ngroups,
+        out.rule,
+        out.mean_rejection_ratio(),
+        out.total_screen_secs(),
+        out.total_solve_secs()
+    );
+}
+
+fn cmd_service(args: &Args) {
+    let ds = load_dataset(args);
+    let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
+    let n_req = args.get_parse("requests", 20usize);
+    let lam_max = dpp_screen::solver::dual::lambda_max(&ds.x, &ds.y);
+    let svc = ScreeningService::spawn(
+        ds.x.clone(),
+        ds.y.clone(),
+        rule,
+        SolverKind::Cd,
+        PathConfig::default(),
+    );
+    // fire a burst of requests across the λ range (arrivals out of order)
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let f = 0.05 + 0.9 * ((i * 7919) % n_req) as f64 / n_req as f64;
+        rxs.push(svc.request(f * lam_max));
+    }
+    for rx in rxs {
+        let resp = rx.recv().expect("service died");
+        println!(
+            "λ/λmax={:.3} kept={} discarded={} latency={:.2}ms",
+            resp.lam / lam_max,
+            resp.kept.len(),
+            resp.discarded,
+            resp.latency_s * 1e3
+        );
+    }
+    let m = svc.shutdown();
+    println!("metrics: {}", m.summary());
+}
+
+fn cmd_exp(args: &Args) {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    dpp_screen::experiments::run(which);
+}

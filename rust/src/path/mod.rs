@@ -1,0 +1,495 @@
+//! Pathwise λ-grid driver: the paper's experimental protocol (solve the
+//! Lasso along 100 values of λ/λmax ∈ [0.05, 1.0], screening sequentially
+//! with the exact solution at the previous λ, warm-starting the solver, and
+//! recording the two headline metrics — *rejection ratio* and *speedup*).
+
+pub mod group;
+pub mod stability;
+
+use crate::linalg::DenseMatrix;
+use crate::screening::{
+    dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
+    edpp::Improvement2Rule, safe::SafeRule, sis::SisRule, strong::kkt_violations,
+    strong::StrongRule, theta_from_solution, ScreenContext, ScreeningRule, StepInput,
+};
+use crate::solver::{
+    cd::CdSolver, fista::FistaSolver, lars::LarsSolver, LassoSolver, SolveOptions,
+};
+use crate::util::timer::timed;
+
+/// Descending λ grid, the paper's protocol: equally spaced on the λ/λmax
+/// scale.
+#[derive(Clone, Debug)]
+pub struct LambdaGrid {
+    pub lam_max: f64,
+    /// Descending λ values (λmax-relative grid 1.0 → lo).
+    pub values: Vec<f64>,
+}
+
+impl LambdaGrid {
+    /// `k` values equally spaced on λ/λmax ∈ [lo, hi], descending.
+    /// The paper uses k = 100, lo = 0.05, hi = 1.0.
+    pub fn relative(x: &DenseMatrix, y: &[f64], k: usize, lo: f64, hi: f64) -> LambdaGrid {
+        let lam_max = crate::solver::dual::lambda_max(x, y);
+        Self::relative_to(lam_max, k, lo, hi)
+    }
+
+    /// Same but from a precomputed λmax (group-Lasso paths etc.).
+    pub fn relative_to(lam_max: f64, k: usize, lo: f64, hi: f64) -> LambdaGrid {
+        assert!(k >= 1 && lo > 0.0 && hi >= lo);
+        let mut values = Vec::with_capacity(k);
+        for i in 0..k {
+            let t = if k == 1 { hi } else { hi - (hi - lo) * i as f64 / (k - 1) as f64 };
+            values.push(t * lam_max);
+        }
+        LambdaGrid { lam_max, values }
+    }
+}
+
+/// Which screening rule a path run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleKind {
+    /// No screening — the baseline solver timing.
+    None,
+    Safe,
+    Dome,
+    Dpp,
+    Improvement1,
+    Improvement2,
+    Edpp,
+    Strong,
+    Sis,
+}
+
+impl RuleKind {
+    pub const ALL_LASSO: [RuleKind; 8] = [
+        RuleKind::Safe,
+        RuleKind::Dome,
+        RuleKind::Dpp,
+        RuleKind::Improvement1,
+        RuleKind::Improvement2,
+        RuleKind::Edpp,
+        RuleKind::Strong,
+        RuleKind::Sis,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::None => "none",
+            RuleKind::Safe => "safe",
+            RuleKind::Dome => "dome",
+            RuleKind::Dpp => "dpp",
+            RuleKind::Improvement1 => "improvement1",
+            RuleKind::Improvement2 => "improvement2",
+            RuleKind::Edpp => "edpp",
+            RuleKind::Strong => "strong",
+            RuleKind::Sis => "sis",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RuleKind> {
+        let mut all = RuleKind::ALL_LASSO.to_vec();
+        all.push(RuleKind::None);
+        all.into_iter().find(|r| r.name() == s)
+    }
+
+    fn make(&self, n: usize) -> Option<Box<dyn ScreeningRule>> {
+        match self {
+            RuleKind::None => None,
+            RuleKind::Safe => Some(Box::new(SafeRule)),
+            RuleKind::Dome => Some(Box::new(DomeRule::default())),
+            RuleKind::Dpp => Some(Box::new(DppRule)),
+            RuleKind::Improvement1 => Some(Box::new(Improvement1Rule)),
+            RuleKind::Improvement2 => Some(Box::new(Improvement2Rule)),
+            RuleKind::Edpp => Some(Box::new(EdppRule)),
+            RuleKind::Strong => Some(Box::new(StrongRule)),
+            RuleKind::Sis => Some(Box::new(SisRule::with_default_count(n))),
+        }
+    }
+}
+
+/// Which solver substrate the path uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Cd,
+    Fista,
+    Lars,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cd => "cd",
+            SolverKind::Fista => "fista",
+            SolverKind::Lars => "lars",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SolverKind> {
+        [SolverKind::Cd, SolverKind::Fista, SolverKind::Lars]
+            .into_iter()
+            .find(|k| k.name() == s)
+    }
+
+    fn make(&self) -> Box<dyn LassoSolver> {
+        match self {
+            SolverKind::Cd => Box::new(CdSolver),
+            SolverKind::Fista => Box::new(FistaSolver),
+            SolverKind::Lars => Box::new(LarsSolver),
+        }
+    }
+}
+
+/// Path-run configuration.
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    /// Sequential rules (paper default). When false, every step anchors at
+    /// λ₀ = λmax with θ = y/λmax — the "basic" versions of §4.1.1.
+    pub sequential: bool,
+    /// Run the KKT violation/repair loop after heuristic-rule solves.
+    pub kkt_repair: bool,
+    /// Warm-start each solve from the previous λ's solution.
+    pub warm_start: bool,
+    pub solve_opts: SolveOptions,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            sequential: true,
+            kkt_repair: true,
+            warm_start: true,
+            solve_opts: SolveOptions::default(),
+        }
+    }
+}
+
+/// Per-λ record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub lam: f64,
+    /// Features surviving screening (before KKT repair additions).
+    pub kept: usize,
+    /// Features discarded by the final mask (after repairs).
+    pub discarded: usize,
+    /// Exactly-zero coefficients in the solution at this λ.
+    pub true_zeros: usize,
+    pub screen_secs: f64,
+    pub solve_secs: f64,
+    pub solver_iters: usize,
+    /// KKT repair rounds triggered (heuristic rules only).
+    pub kkt_repairs: usize,
+    pub gap: f64,
+}
+
+impl StepRecord {
+    /// The paper's rejection ratio: discarded / true zeros (≤ 1 for safe
+    /// rules; repaired heuristics also end ≤ 1).
+    pub fn rejection_ratio(&self) -> f64 {
+        if self.true_zeros == 0 {
+            if self.discarded == 0 { 1.0 } else { 0.0 }
+        } else {
+            self.discarded as f64 / self.true_zeros as f64
+        }
+    }
+}
+
+/// Output of a full path run.
+#[derive(Clone, Debug)]
+pub struct PathOutput {
+    pub rule: &'static str,
+    pub solver: &'static str,
+    pub records: Vec<StepRecord>,
+    /// Full-length solutions per λ (same order as `records`).
+    pub betas: Vec<Vec<f64>>,
+}
+
+impl PathOutput {
+    pub fn mean_rejection_ratio(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.rejection_ratio()).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    pub fn total_screen_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.screen_secs).sum()
+    }
+
+    pub fn total_solve_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.solve_secs).sum()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_screen_secs() + self.total_solve_secs()
+    }
+
+    pub fn total_kkt_repairs(&self) -> usize {
+        self.records.iter().map(|r| r.kkt_repairs).sum()
+    }
+}
+
+/// Solve the Lasso along `grid` with screening `rule` and solver `solver`.
+///
+/// This is the library's primary entry point (the coordinator and all
+/// benches build on it).
+pub fn solve_path(
+    x: &DenseMatrix,
+    y: &[f64],
+    grid: &LambdaGrid,
+    rule: RuleKind,
+    solver: SolverKind,
+    cfg: &PathConfig,
+) -> PathOutput {
+    let ctx = ScreenContext::new(x, y);
+    solve_path_with_ctx(&ctx, grid, rule, solver, cfg)
+}
+
+/// Like [`solve_path`] but with a caller-provided context (so the PJRT
+/// runtime sweep can be injected via [`ScreenContext::with_sweep`]).
+pub fn solve_path_with_ctx(
+    ctx: &ScreenContext,
+    grid: &LambdaGrid,
+    rule_kind: RuleKind,
+    solver_kind: SolverKind,
+    cfg: &PathConfig,
+) -> PathOutput {
+    let x = ctx.x;
+    let y = ctx.y;
+    let p = x.n_cols();
+    let rule = rule_kind.make(x.n_rows());
+    let solver = solver_kind.make();
+
+    let mut records = Vec::with_capacity(grid.values.len());
+    let mut betas = Vec::with_capacity(grid.values.len());
+
+    // sequential state: exact solution/dual at the previous grid point
+    let mut lam_prev = ctx.lam_max;
+    let mut theta_prev: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
+    let mut beta_prev: Vec<f64> = vec![0.0; p];
+
+    // basic-mode anchor (θ at λmax) reused across steps
+    let theta_max: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
+
+    for &lam in &grid.values {
+        if lam >= ctx.lam_max * (1.0 - 1e-12) {
+            // trivial solution (eq. (8)); everything is screened by eq. (9)
+            records.push(StepRecord {
+                lam,
+                kept: 0,
+                discarded: p,
+                true_zeros: p,
+                screen_secs: 0.0,
+                solve_secs: 0.0,
+                solver_iters: 0,
+                kkt_repairs: 0,
+                gap: 0.0,
+            });
+            betas.push(vec![0.0; p]);
+            lam_prev = ctx.lam_max;
+            theta_prev.copy_from_slice(&theta_max);
+            beta_prev.fill(0.0);
+            continue;
+        }
+
+        // ---- screening ----
+        let mut keep = vec![true; p];
+        let (_, screen_secs) = timed(|| {
+            if let Some(rule) = &rule {
+                let step = if cfg.sequential {
+                    StepInput { lam_prev, lam, theta_prev: &theta_prev }
+                } else {
+                    StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta_max }
+                };
+                rule.screen(ctx, &step, &mut keep);
+            }
+        });
+        let kept0 = keep.iter().filter(|k| **k).count();
+
+        // ---- reduced solve (+ KKT repair loop for heuristic rules) ----
+        let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
+        let mut kkt_repairs = 0usize;
+        let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+        let mut result: Option<crate::solver::SolveResult> = None;
+        let (res, solve_secs) = timed(|| {
+            loop {
+                let warm: Option<Vec<f64>> = if cfg.warm_start {
+                    Some(cols.iter().map(|&j| beta_prev[j]).collect())
+                } else {
+                    None
+                };
+                result =
+                    Some(solver.solve(x, y, &cols, lam, warm.as_deref(), &cfg.solve_opts));
+                if is_safe || !cfg.kkt_repair {
+                    break;
+                }
+                // heuristic: check KKT on the full problem
+                let res = result.as_ref().unwrap();
+                let full = res.scatter(&cols, p);
+                let mut r = y.to_vec();
+                for (j, b) in full.iter().enumerate() {
+                    if *b != 0.0 {
+                        crate::linalg::axpy(-b, x.col(j), &mut r);
+                    }
+                }
+                let viol = kkt_violations(ctx, &r, lam, &keep);
+                if viol.is_empty() {
+                    break;
+                }
+                kkt_repairs += 1;
+                for j in viol {
+                    keep[j] = true;
+                }
+                cols = (0..p).filter(|&j| keep[j]).collect();
+            }
+            result.take().unwrap()
+        });
+
+        let full = res.scatter(&cols, p);
+        let true_zeros = full.iter().filter(|b| **b == 0.0).count();
+        let discarded = keep.iter().filter(|k| !**k).count();
+
+        records.push(StepRecord {
+            lam,
+            kept: kept0,
+            discarded,
+            true_zeros,
+            screen_secs,
+            solve_secs,
+            solver_iters: res.iters,
+            kkt_repairs,
+            gap: res.gap,
+        });
+
+        // advance sequential state
+        theta_prev = theta_from_solution(x, y, &full, lam);
+        lam_prev = lam;
+        beta_prev = full.clone();
+        betas.push(full);
+    }
+
+    PathOutput {
+        rule: rule_kind.name(),
+        solver: solver_kind.name(),
+        records,
+        betas,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn grid_for(ds: &crate::data::Dataset, k: usize) -> LambdaGrid {
+        LambdaGrid::relative(&ds.x, &ds.y, k, 0.05, 1.0)
+    }
+
+    #[test]
+    fn grid_is_descending_and_spans() {
+        let ds = synthetic::synthetic1(20, 40, 4, 0.1, 1);
+        let g = grid_for(&ds, 10);
+        assert_eq!(g.values.len(), 10);
+        assert!((g.values[0] - g.lam_max).abs() < 1e-12);
+        assert!((g.values[9] - 0.05 * g.lam_max).abs() < 1e-12);
+        for w in g.values.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn edpp_path_safe_and_exact() {
+        // the screened path must reproduce the unscreened solutions exactly
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 2);
+        let g = grid_for(&ds, 12);
+        let cfg = PathConfig::default();
+        let screened = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        let baseline = solve_path(&ds.x, &ds.y, &g, RuleKind::None, SolverKind::Cd, &cfg);
+        for (k, (bs, bb)) in screened.betas.iter().zip(baseline.betas.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (bs[j] - bb[j]).abs() < 1e-4 * (1.0 + bb[j].abs()),
+                    "λ-index {k}, feature {j}: {} vs {}",
+                    bs[j],
+                    bb[j]
+                );
+            }
+        }
+        assert!(screened.mean_rejection_ratio() <= 1.0 + 1e-12);
+        assert!(screened.mean_rejection_ratio() > 0.8);
+    }
+
+    #[test]
+    fn strong_path_with_repair_is_exact() {
+        let ds = synthetic::synthetic2(25, 100, 10, 0.1, 3);
+        let g = grid_for(&ds, 10);
+        let cfg = PathConfig::default();
+        let strong = solve_path(&ds.x, &ds.y, &g, RuleKind::Strong, SolverKind::Cd, &cfg);
+        let baseline = solve_path(&ds.x, &ds.y, &g, RuleKind::None, SolverKind::Cd, &cfg);
+        for (bs, bb) in strong.betas.iter().zip(baseline.betas.iter()) {
+            for j in 0..ds.p() {
+                assert!((bs[j] - bb[j]).abs() < 1e-4 * (1.0 + bb[j].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn basic_mode_weaker_than_sequential() {
+        // §4.1: sequential rules dominate their basic versions
+        let ds = synthetic::synthetic1(30, 150, 12, 0.1, 4);
+        let g = grid_for(&ds, 15);
+        let seq_cfg = PathConfig::default();
+        let basic_cfg = PathConfig { sequential: false, ..Default::default() };
+        let seq = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &seq_cfg);
+        let basic = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &basic_cfg);
+        assert!(
+            seq.mean_rejection_ratio() >= basic.mean_rejection_ratio() - 1e-9,
+            "seq {} < basic {}",
+            seq.mean_rejection_ratio(),
+            basic.mean_rejection_ratio()
+        );
+    }
+
+    #[test]
+    fn rejection_ratios_bounded_for_safe_rules() {
+        let ds = synthetic::synthetic1(25, 80, 8, 0.1, 5);
+        let g = grid_for(&ds, 8);
+        for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Edpp] {
+            let out = solve_path(&ds.x, &ds.y, &g, rule, SolverKind::Cd, &PathConfig::default());
+            for r in &out.records {
+                assert!(
+                    r.rejection_ratio() <= 1.0 + 1e-12,
+                    "{}: ratio {}",
+                    rule.name(),
+                    r.rejection_ratio()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lars_path_matches_cd_path() {
+        let ds = synthetic::synthetic1(20, 60, 6, 0.1, 6);
+        let g = grid_for(&ds, 6);
+        let cfg = PathConfig::default();
+        let lars = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Lars, &cfg);
+        let cd = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        for (bl, bc) in lars.betas.iter().zip(cd.betas.iter()) {
+            for j in 0..ds.p() {
+                assert!((bl[j] - bc[j]).abs() < 1e-3 * (1.0 + bc[j].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn rule_and_solver_name_roundtrip() {
+        for r in RuleKind::ALL_LASSO {
+            assert_eq!(RuleKind::from_name(r.name()), Some(r));
+        }
+        assert_eq!(RuleKind::from_name("none"), Some(RuleKind::None));
+        for s in [SolverKind::Cd, SolverKind::Fista, SolverKind::Lars] {
+            assert_eq!(SolverKind::from_name(s.name()), Some(s));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Stability selection (Meinshausen & Bühlmann) — the second model-selection
+//! workload the paper's introduction names as a driver for sequential
+//! screening ("commonly used approaches such as cross validation and
+//! stability selection involve solving the Lasso problems over a grid of
+//! tuning parameters", §1).
+//!
+//! B subsample rounds of ⌊N/2⌋ rows each; every round runs a full screened
+//! λ-path; the output is, per feature, the maximum over λ of the fraction
+//! of rounds in which the feature entered the support — the stability score
+//! used to select features at a threshold (typically 0.6–0.9).
+
+use super::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use crate::coordinator::run_trials;
+use crate::linalg::DenseMatrix;
+use crate::util::rng::Rng;
+
+/// Configuration for a stability-selection run.
+#[derive(Clone, Debug)]
+pub struct StabilityConfig {
+    /// Subsample rounds (B). Meinshausen–Bühlmann suggest ≥ 100; benches
+    /// use fewer.
+    pub rounds: usize,
+    /// λ-grid size per round (on λ/λmax ∈ [lo, 1]).
+    pub grid: usize,
+    pub grid_lo: f64,
+    pub rule: RuleKind,
+    pub solver: SolverKind,
+    pub seed: u64,
+}
+
+impl Default for StabilityConfig {
+    fn default() -> Self {
+        StabilityConfig {
+            rounds: 50,
+            grid: 50,
+            grid_lo: 0.1,
+            rule: RuleKind::Edpp,
+            solver: SolverKind::Cd,
+            seed: 0x57AB,
+        }
+    }
+}
+
+/// Result: per-feature selection probabilities.
+#[derive(Clone, Debug)]
+pub struct StabilityOutput {
+    /// max over λ of the selection frequency, per feature ∈ [0, 1].
+    pub scores: Vec<f64>,
+    /// mean rejection ratio across all rounds (screening effectiveness).
+    pub mean_rejection: f64,
+    /// total screen+solve seconds across rounds.
+    pub total_secs: f64,
+}
+
+impl StabilityOutput {
+    /// Features whose stability score passes `threshold`.
+    pub fn selected(&self, threshold: f64) -> Vec<usize> {
+        (0..self.scores.len()).filter(|&j| self.scores[j] >= threshold).collect()
+    }
+}
+
+/// Row-subsample copy (without replacement).
+fn subsample(x: &DenseMatrix, y: &[f64], rows: &[usize]) -> (DenseMatrix, Vec<f64>) {
+    let mut xs = DenseMatrix::zeros(rows.len(), x.n_cols());
+    for j in 0..x.n_cols() {
+        let src = x.col(j);
+        let dst = xs.col_mut(j);
+        for (ri, &r) in rows.iter().enumerate() {
+            dst[ri] = src[r];
+        }
+    }
+    (xs, rows.iter().map(|&r| y[r]).collect())
+}
+
+/// Run stability selection with screened paths, rounds fanned out over the
+/// coordinator's worker pool.
+pub fn stability_selection(
+    x: &DenseMatrix,
+    y: &[f64],
+    cfg: &StabilityConfig,
+) -> StabilityOutput {
+    let p = x.n_cols();
+    let n = x.n_rows();
+    let half = (n / 2).max(1);
+    let path_cfg = PathConfig::default();
+    let workers = crate::coordinator::default_workers();
+    let per_round = run_trials(cfg.rounds, workers, |b| {
+        let mut rng = Rng::new(cfg.seed ^ (b as u64).wrapping_mul(0x9E37_79B9));
+        let rows = rng.sample_indices(n, half);
+        let (xs, ys) = subsample(x, y, &rows);
+        let grid = LambdaGrid::relative(&xs, &ys, cfg.grid, cfg.grid_lo, 1.0);
+        let out = solve_path(&xs, &ys, &grid, cfg.rule, cfg.solver, &path_cfg);
+        // per-feature: selected at any λ this round?
+        let mut hit = vec![false; p];
+        for beta in &out.betas {
+            for j in 0..p {
+                if beta[j] != 0.0 {
+                    hit[j] = true;
+                }
+            }
+        }
+        (hit, out.mean_rejection_ratio(), out.total_secs())
+    });
+
+    let mut scores = vec![0.0; p];
+    let mut rej = 0.0;
+    let mut secs = 0.0;
+    for (hit, r, s) in &per_round {
+        for j in 0..p {
+            if hit[j] {
+                scores[j] += 1.0 / cfg.rounds as f64;
+            }
+        }
+        rej += r / cfg.rounds as f64;
+        secs += s;
+    }
+    StabilityOutput { scores, mean_rejection: rej, total_secs: secs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn recovers_strong_signals() {
+        // planted support with large coefficients must dominate the scores
+        let ds = synthetic::synthetic1(60, 150, 8, 0.05, 9);
+        let truth = ds.beta_true.clone().unwrap();
+        let cfg = StabilityConfig { rounds: 12, grid: 15, ..Default::default() };
+        let out = stability_selection(&ds.x, &ds.y, &cfg);
+        // every strong true feature (|β*| > 0.5) should score higher than
+        // the median null feature
+        let null_scores: Vec<f64> = (0..150).filter(|&j| truth[j] == 0.0).map(|j| out.scores[j]).collect();
+        let null_med = crate::util::stats::median(&null_scores);
+        for j in 0..150 {
+            if truth[j].abs() > 0.5 {
+                assert!(
+                    out.scores[j] >= null_med,
+                    "strong feature {j} scored {} < null median {null_med}",
+                    out.scores[j]
+                );
+            }
+        }
+        assert!(out.mean_rejection > 0.5);
+    }
+
+    #[test]
+    fn selected_threshold_monotone() {
+        let ds = synthetic::synthetic1(40, 80, 6, 0.1, 10);
+        let cfg = StabilityConfig { rounds: 6, grid: 8, ..Default::default() };
+        let out = stability_selection(&ds.x, &ds.y, &cfg);
+        assert!(out.selected(0.9).len() <= out.selected(0.5).len());
+        assert!(out.selected(0.0).len() == 80);
+        assert!(out.scores.iter().all(|s| (0.0..=1.0 + 1e-12).contains(s)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = synthetic::synthetic1(30, 60, 5, 0.1, 11);
+        let cfg = StabilityConfig { rounds: 4, grid: 6, ..Default::default() };
+        let a = stability_selection(&ds.x, &ds.y, &cfg);
+        let b = stability_selection(&ds.x, &ds.y, &cfg);
+        assert_eq!(a.scores, b.scores);
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — the image's xla_extension 0.5.1 rejects jax≥0.5 protos,
+//! see DESIGN.md §3) and serves the fixed-shape screening sweep `Xᵀw`
+//! through XLA.
+//!
+//! Screening always runs on the *full* N×p matrix, so one executable per
+//! dataset shape is compiled at load and the matrix is uploaded to the
+//! device once ([`ArtifactSweep`] keeps the `PjRtBuffer` resident); each
+//! sweep transfers only the length-N vector `w`.
+//!
+//! Everything here is optional: when `artifacts/` is absent or no entry
+//! matches the problem shape, callers fall back to the native f64 sweep.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::DenseMatrix;
+use crate::screening::CorrelationSweep;
+
+/// One artifact from `artifacts/manifest.tsv`:
+/// `name <TAB> n <TAB> p <TAB> file`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub file: String,
+}
+
+/// Parse a manifest file (TSV; `#` comments and blank lines ignored).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            bail!("manifest line {}: expected 4 tab-separated fields", lineno + 1);
+        }
+        entries.push(ManifestEntry {
+            name: parts[0].to_string(),
+            n: parts[1].parse().context("bad n")?,
+            p: parts[2].parse().context("bad p")?,
+            file: parts[3].to_string(),
+        });
+    }
+    Ok(entries)
+}
+
+/// Loaded artifact store: a PJRT CPU client plus compiled executables keyed
+/// by `(name, n, p)`.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for e in entries {
+            let path = dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+            exes.insert((e.name.clone(), e.n, e.p), exe);
+        }
+        Ok(ArtifactRuntime { client, exes, dir })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the CWD;
+    /// `None` (not an error) when the directory or manifest is missing.
+    pub fn load_default() -> Option<ArtifactRuntime> {
+        let dir = std::env::var("DPP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        ArtifactRuntime::load(dir).ok()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names/shapes available.
+    pub fn available(&self) -> Vec<(String, usize, usize)> {
+        let mut v: Vec<_> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str, n: usize, p: usize) -> bool {
+        self.exes.contains_key(&(name.to_string(), n, p))
+    }
+
+    /// Execute an artifact with f32 literal inputs, returning the flattened
+    /// f32 outputs of the 1-tuple result (jax lowers with return_tuple).
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        n: usize,
+        p: usize,
+        inputs: &[(&[f32], Vec<usize>)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .exes
+            .get(&(name.to_string(), n, p))
+            .with_context(|| format!("no artifact {name} for shape {n}x{p}"))?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                    .context("uploading input")
+            })
+            .collect::<Result<_>>()?;
+        let out = exe.execute_b(&bufs).context("executing artifact")?;
+        let lit = out[0][0].to_literal_sync().context("fetching result")?;
+        let parts = lit.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+
+    /// Build a resident-matrix sweep for `x` when an `xt_w` artifact with
+    /// the matching shape exists.
+    pub fn sweep_for(&self, x: &DenseMatrix) -> Option<ArtifactSweep<'_>> {
+        let (n, p) = (x.n_rows(), x.n_cols());
+        let exe = self.exes.get(&("xt_w".to_string(), n, p))?;
+        // jax expects row-major (C-order) f32
+        let mut host = vec![0f32; n * p];
+        for j in 0..p {
+            let col = x.col(j);
+            for i in 0..n {
+                host[i * p + j] = col[i] as f32;
+            }
+        }
+        let x_buf = self.client.buffer_from_host_buffer::<f32>(&host, &[n, p], None).ok()?;
+        Some(ArtifactSweep { client: &self.client, exe, x_buf, n, p })
+    }
+}
+
+/// [`CorrelationSweep`] backed by the AOT `xt_w` executable with the feature
+/// matrix resident on the device.
+///
+/// **Safety discipline** (DESIGN.md §1): the artifact computes in f32;
+/// screening decisions must stay *safe*, so consumers must widen the keep
+/// condition by [`ArtifactSweep::SAFETY_SLACK`] (ScreenContext applies it
+/// automatically via `with_sweep_slack`).
+pub struct ArtifactSweep<'a> {
+    client: &'a xla::PjRtClient,
+    exe: &'a xla::PjRtLoadedExecutable,
+    x_buf: xla::PjRtBuffer,
+    n: usize,
+    p: usize,
+}
+
+impl ArtifactSweep<'_> {
+    /// Conservative relative slack covering f32 accumulation error of the
+    /// sweep (ULP ≈ 1.2e-7; a length-N dot accumulates ≲ N·ulp relative —
+    /// 1e-4 covers N up to ~10⁵ with two orders of margin).
+    pub const SAFETY_SLACK: f64 = 1e-4;
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.p)
+    }
+}
+
+impl CorrelationSweep for ArtifactSweep<'_> {
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        let w32: Vec<f32> = w.iter().map(|v| *v as f32).collect();
+        let mut run = || -> Result<()> {
+            let w_buf = self.client.buffer_from_host_buffer::<f32>(&w32, &[self.n], None)?;
+            let res = self.exe.execute_b(&[&self.x_buf, &w_buf])?;
+            let lit = res[0][0].to_literal_sync()?;
+            let scores = lit.to_tuple1()?.to_vec::<f32>()?;
+            for (o, s) in out.iter_mut().zip(scores.iter()) {
+                *o = *s as f64;
+            }
+            Ok(())
+        };
+        // The artifact path is an accelerator; on any PJRT failure we must
+        // not corrupt screening — panic loudly rather than return garbage.
+        run().expect("PJRT sweep execution failed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_rejects() {
+        let text = "# comment\nxt_w\t96\t1600\txt_w.hlo.txt\n\nfista\t64\t256\tf.hlo.txt\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(
+            m[0],
+            ManifestEntry {
+                name: "xt_w".into(),
+                n: 96,
+                p: 1600,
+                file: "xt_w.hlo.txt".into()
+            }
+        );
+        assert!(parse_manifest("too\tfew\tfields").is_err());
+        assert!(parse_manifest("xt_w\tNaN\t2\tf").is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_is_none() {
+        std::env::set_var("DPP_ARTIFACTS", "/nonexistent-dpp-artifacts");
+        assert!(ArtifactRuntime::load_default().is_none());
+        std::env::remove_var("DPP_ARTIFACTS");
+    }
+
+    // PJRT round-trip tests live in rust/tests/runtime_integration.rs —
+    // they need `make artifacts` to have run first.
+}

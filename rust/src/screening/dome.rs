@@ -1,0 +1,167 @@
+//! DOME (Xiang, Xu, Ramadge [36]; Xiang, Ramadge [35]) — sphere ∩ half-space
+//! ("dome") test. Basic-only: the paper notes it is unclear whether a
+//! sequential DOME exists (§1), and it assumes unit-norm features (§4.1.1).
+//!
+//! Region: the SAFE sphere `B(y/λ, ρ)`, ρ = ‖y‖(1/λ − 1/λmax), intersected
+//! with the half-space `{θ : ñᵀθ ≤ 1}` where `ñ = sign(x*ᵀy)·x*` is the
+//! λmax-attaining constraint — θ*(λ) lies in both (it is feasible, and the
+//! projection of y/λ is no farther from y/λ than the feasible y/λmax).
+//!
+//! Closed-form sup over the dome for a unit-norm feature x:
+//! let `q = y/λ`, `d = 1 − ñᵀq` (signed margin of the plane past the
+//! center), `a = xᵀñ`. The unconstrained sphere maximizer `q + ρx` is used
+//! when it satisfies the half-space; otherwise the maximum sits on the
+//! sphere–plane circle: `xᵀq + d·a + √(ρ²−d²)·√(1−a²)` (derived by
+//! parametrizing θ = q + d·ñ + √(ρ²−d²)·u with u ⊥ ñ, ‖u‖ = 1).
+
+use super::{ScreenContext, ScreeningRule, StepInput};
+
+/// Basic DOME test (requires unit-norm features; callers should
+/// `Dataset::normalize_features` first — asserted loosely at runtime).
+///
+/// Perf (EXPERIMENTS.md §Perf It.5): `a = Xᵀñ` is λ-independent (ñ is the
+/// λmax-attaining feature), so it is computed once and cached across the
+/// whole path instead of re-sweeping at every λ — halving DOME's per-step
+/// cost from 2 sweeps to 1.
+#[derive(Default)]
+pub struct DomeRule {
+    xn_cache: std::cell::RefCell<Option<Vec<f64>>>,
+}
+
+impl DomeRule {
+    /// sup over the dome of `xᵀθ` for a *unit-norm* feature column x,
+    /// given precomputed `xᵀq` and `a = xᵀñ`.
+    fn sup_dome(xq: f64, a: f64, rho: f64, d: f64) -> f64 {
+        // plane entirely outside the sphere ⇒ plain sphere test
+        if d >= rho {
+            return xq + rho;
+        }
+        // direction of the sphere maximizer relative to the plane normal:
+        // ñᵀ(q + ρx) ≤ 1  ⇔  ρ·a ≤ d
+        if rho * a <= d {
+            xq + rho
+        } else {
+            let cap = (rho * rho - d * d).max(0.0).sqrt();
+            xq + d * a + cap * (1.0 - a * a).max(0.0).sqrt()
+        }
+    }
+}
+
+impl ScreeningRule for DomeRule {
+    fn name(&self) -> &'static str {
+        "dome"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        // Basic rule: ignores θ*(λ₀) and always anchors at λmax.
+        let p = ctx.p();
+        let lam = step.lam;
+        let rho = ctx.y_norm * (1.0 / lam - 1.0 / ctx.lam_max).max(0.0);
+        let s = ctx.xty[ctx.lam_max_arg].signum();
+        let nstar_norm = ctx.col_norms[ctx.lam_max_arg];
+        debug_assert!(
+            (nstar_norm - 1.0).abs() < 1e-6,
+            "DOME requires unit-norm features (got ‖x*‖ = {nstar_norm})"
+        );
+        // ñᵀq = sign(x*ᵀy)·x*ᵀy/λ = λmax/λ (for the attaining feature)
+        let nq = s * ctx.xty[ctx.lam_max_arg] / lam; // = λmax/λ ≥ 1
+        let d = 1.0 - nq; // ≤ 0: the center is beyond the plane
+        // xᵀq for all features in one sweep; xᵀñ = s·(Xᵀx*) needs a second
+        // sweep against the x* column.
+        let mut xq = vec![0.0; p];
+        let q: Vec<f64> = ctx.y.iter().map(|v| v / lam).collect();
+        ctx.sweep.xt_w(&q, &mut xq);
+        // λ-independent second sweep, cached across the path (§Perf It.5)
+        let mut cache = self.xn_cache.borrow_mut();
+        let xn: &Vec<f64> = cache.get_or_insert_with(|| {
+            let mut xn = vec![0.0; p];
+            let nstar: Vec<f64> =
+                ctx.x.col(ctx.lam_max_arg).iter().map(|v| s * v).collect();
+            ctx.sweep.xt_w(&nstar, &mut xn);
+            xn
+        });
+        for j in 0..p {
+            // account for non-exactly-unit norms defensively
+            let nj = ctx.col_norms[j].max(1e-300);
+            let sup_pos = Self::sup_dome(xq[j] / nj, xn[j] / nj, rho, d) * nj;
+            let sup_neg = Self::sup_dome(-xq[j] / nj, -xn[j] / nj, rho, d) * nj;
+            let sup = sup_pos.max(sup_neg);
+            // boundary tolerance: active features can sit exactly on the
+            // dual constraint (sup = 1); round-off must not flip them into
+            // an unsafe discard
+            keep[j] = sup >= 1.0 - 1e-9 * (1.0 + xq[j].abs() + rho);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::testutil::check_rule;
+    use crate::screening::{safe::SafeRule, theta_at_lambda_max};
+    use crate::util::prop;
+
+    fn unit_norm_ds(seed: u64, n: usize, p: usize) -> crate::data::Dataset {
+        let mut ds = synthetic::synthetic1(n, p, p / 5 + 1, 0.1, seed);
+        ds.normalize_features();
+        ds
+    }
+
+    #[test]
+    fn dome_is_safe_randomized() {
+        prop::check("DOME safety", 0xD0E, 12, |rng| {
+            let ds = unit_norm_ds(rng.next_u64(), 15 + rng.usize(20), 30 + rng.usize(60));
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f = rng.uniform(0.1, 0.95);
+            // basic rule: λ₀ = λmax
+            let chk =
+                check_rule(&DomeRule::default(), &ds.x, &ds.y, ctx.lam_max, f * ctx.lam_max);
+            assert_eq!(chk.false_discards, 0, "unsafe at f={f}");
+        });
+    }
+
+    #[test]
+    fn dome_dominates_basic_safe() {
+        // the dome is a subset of the SAFE sphere ⇒ rejects at least as many
+        prop::check("DOME ≥ SAFE(basic) rejections", 0xD0E2, 10, |rng| {
+            let ds = unit_norm_ds(rng.next_u64(), 20, 80);
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f = rng.uniform(0.1, 0.9);
+            let theta = theta_at_lambda_max(&ctx);
+            let step = StepInput {
+                lam_prev: ctx.lam_max,
+                lam: f * ctx.lam_max,
+                theta_prev: &theta,
+            };
+            let mut keep_dome = vec![true; 80];
+            let mut keep_safe = vec![true; 80];
+            DomeRule::default().screen(&ctx, &step, &mut keep_dome);
+            SafeRule.screen(&ctx, &step, &mut keep_safe);
+            for j in 0..80 {
+                if !keep_safe[j] {
+                    assert!(!keep_dome[j], "SAFE rejected {j} but DOME kept it");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sup_dome_reduces_to_sphere_when_plane_far() {
+        // d ≥ ρ: the half-space doesn't cut the ball
+        let v = DomeRule::sup_dome(0.3, 0.5, 0.2, 0.5);
+        assert!((v - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sup_dome_caps_at_plane() {
+        // x == ñ (a=1): maximum over the dome is exactly xᵀq + d
+        let xq = 0.7;
+        let v = DomeRule::sup_dome(xq, 1.0, 0.5, 0.1);
+        assert!((v - (xq + 0.1)).abs() < 1e-12);
+    }
+}

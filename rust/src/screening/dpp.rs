@@ -1,0 +1,107 @@
+//! DPP — the fundamental Dual Polytope Projection rule (paper §2.2).
+//!
+//! Estimation: by nonexpansiveness of the projection onto the dual polytope
+//! F (Theorems 1–2), `θ*(λ) ∈ B(θ*(λ₀), (1/λ − 1/λ₀)·‖y‖)` (eq. (12)).
+//! Sequential form (Corollary 5): discard i when
+//! `|xᵢᵀθ*(λ₀)| < 1 − (1/λ − 1/λ₀)·‖xᵢ‖·‖y‖`; the basic rule (Corollary 4)
+//! is the special case λ₀ = λmax, θ*(λmax) = y/λmax.
+
+use super::{sphere_screen, ScreenContext, ScreeningRule, StepInput};
+
+/// Sequential DPP (Corollary 5). With `lam_prev = λmax` and
+/// `theta_prev = y/λmax` it reduces to basic DPP (Corollary 4, Remark 3).
+pub struct DppRule;
+
+impl ScreeningRule for DppRule {
+    fn name(&self) -> &'static str {
+        "dpp"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        debug_assert!(step.lam <= step.lam_prev);
+        let radius = (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0) * ctx.y_norm;
+        sphere_screen(ctx, step.theta_prev, radius, keep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::testutil::check_rule;
+    use crate::screening::theta_at_lambda_max;
+    use crate::util::prop;
+
+    #[test]
+    fn basic_dpp_matches_corollary4_formula() {
+        // screen at λ₀=λmax must equal the Corollary-4 closed form
+        let ds = synthetic::synthetic1(25, 60, 6, 0.1, 1);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let lam = 0.4 * ctx.lam_max;
+        let step = StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta };
+        let mut keep = vec![true; 60];
+        DppRule.screen(&ctx, &step, &mut keep);
+        for j in 0..60 {
+            let lhs = (ctx.xty[j] / ctx.lam_max).abs();
+            let rhs =
+                1.0 - (1.0 / lam - 1.0 / ctx.lam_max) * ctx.col_norms[j] * ctx.y_norm;
+            assert_eq!(keep[j], lhs >= rhs, "feature {j}");
+        }
+    }
+
+    #[test]
+    fn dpp_is_safe_randomized() {
+        // the paper's central claim: no active feature is ever discarded
+        prop::check("DPP safety", 0xD99, 12, |rng| {
+            let n = 15 + rng.usize(25);
+            let p = 20 + rng.usize(60);
+            let ds = synthetic::synthetic2(n, p, p / 5 + 1, 0.1, rng.next_u64());
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f1 = rng.uniform(0.3, 1.0);
+            let f2 = rng.uniform(0.1, f1);
+            let chk =
+                check_rule(&DppRule, &ds.x, &ds.y, f1 * ctx.lam_max, f2 * ctx.lam_max);
+            assert_eq!(chk.false_discards, 0, "unsafe discard");
+        });
+    }
+
+    #[test]
+    fn rejects_everything_just_below_lambda_max() {
+        // for λ→λmax⁻ the radius →0 and all strictly-inactive features with
+        // |xᵢᵀy|/λmax < 1 are discarded
+        let ds = synthetic::synthetic1(20, 50, 5, 0.1, 2);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let lam = 0.999999 * ctx.lam_max;
+        let step = StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta };
+        let mut keep = vec![true; 50];
+        DppRule.screen(&ctx, &step, &mut keep);
+        let kept = keep.iter().filter(|k| **k).count();
+        assert!(kept <= 3, "kept {kept} features at λ≈λmax");
+    }
+
+    #[test]
+    fn smaller_lambda_discards_fewer() {
+        // radius grows as λ decreases ⇒ rejection count shrinks
+        let ds = synthetic::synthetic1(20, 80, 8, 0.1, 3);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let count = |frac: f64| {
+            let step = StepInput {
+                lam_prev: ctx.lam_max,
+                lam: frac * ctx.lam_max,
+                theta_prev: &theta,
+            };
+            let mut keep = vec![true; 80];
+            DppRule.screen(&ctx, &step, &mut keep);
+            keep.iter().filter(|k| !**k).count()
+        };
+        assert!(count(0.9) >= count(0.5));
+        assert!(count(0.5) >= count(0.1));
+    }
+}

@@ -1,0 +1,180 @@
+//! The enhanced DPP family (paper §2.3): Improvement 1 (projections of
+//! rays, Theorem 11), Improvement 2 (firm nonexpansiveness, Theorem 14),
+//! and EDPP (both combined — Theorem 16 / Corollary 17), which the paper
+//! shows discards almost all inactive features along the whole path.
+
+use super::{sphere_screen, v1, v2, v2_perp, ScreenContext, ScreeningRule, StepInput};
+use crate::linalg::nrm2;
+
+/// Improvement 1 (Theorem 11): ball `B(θ*(λ₀), ‖v₂⊥‖)` — the ray-projection
+/// refinement shrinks the DPP radius from `(1/λ−1/λ₀)‖y‖` to `‖v₂⊥‖`.
+pub struct Improvement1Rule;
+
+impl ScreeningRule for Improvement1Rule {
+    fn name(&self) -> &'static str {
+        "improvement1"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let a = v1(ctx, step);
+        let b = v2(ctx, step);
+        let perp = v2_perp(&a, &b);
+        sphere_screen(ctx, step.theta_prev, nrm2(&perp), keep);
+    }
+}
+
+/// Improvement 2 (Theorem 14): firm nonexpansiveness halves the DPP ball —
+/// `B(θ*(λ₀) + ½(1/λ−1/λ₀)y, ½(1/λ−1/λ₀)‖y‖)`.
+pub struct Improvement2Rule;
+
+impl ScreeningRule for Improvement2Rule {
+    fn name(&self) -> &'static str {
+        "improvement2"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let half_d = 0.5 * (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0);
+        let center: Vec<f64> = step
+            .theta_prev
+            .iter()
+            .zip(ctx.y.iter())
+            .map(|(t, yi)| t + half_d * yi)
+            .collect();
+        sphere_screen(ctx, &center, half_d * ctx.y_norm, keep);
+    }
+}
+
+/// EDPP (Theorem 16 / Corollary 17): ball
+/// `B(θ*(λ₀) + ½v₂⊥, ½‖v₂⊥‖)` — the tightest estimate in the family.
+pub struct EdppRule;
+
+impl ScreeningRule for EdppRule {
+    fn name(&self) -> &'static str {
+        "edpp"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let a = v1(ctx, step);
+        let b = v2(ctx, step);
+        let perp = v2_perp(&a, &b);
+        let center: Vec<f64> = step
+            .theta_prev
+            .iter()
+            .zip(perp.iter())
+            .map(|(t, w)| t + 0.5 * w)
+            .collect();
+        sphere_screen(ctx, &center, 0.5 * nrm2(&perp), keep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::dpp::DppRule;
+    use crate::screening::testutil::check_rule;
+    use crate::screening::theta_from_solution;
+    use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+    use crate::util::prop;
+
+    fn rejections(
+        rule: &dyn ScreeningRule,
+        ds: &crate::data::Dataset,
+        f_prev: f64,
+        f: f64,
+    ) -> usize {
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let cols: Vec<usize> = (0..ds.p()).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let prev = CdSolver
+            .solve(&ds.x, &ds.y, &cols, f_prev * ctx.lam_max, None, &opts)
+            .scatter(&cols, ds.p());
+        let theta = theta_from_solution(&ds.x, &ds.y, &prev, f_prev * ctx.lam_max);
+        let step = StepInput {
+            lam_prev: f_prev * ctx.lam_max,
+            lam: f * ctx.lam_max,
+            theta_prev: &theta,
+        };
+        let mut keep = vec![true; ds.p()];
+        rule.screen(&ctx, &step, &mut keep);
+        keep.iter().filter(|k| !**k).count()
+    }
+
+    #[test]
+    fn all_rules_safe_randomized() {
+        prop::check("EDPP family safety", 0xED1, 10, |rng| {
+            let n = 15 + rng.usize(20);
+            let p = 20 + rng.usize(50);
+            let ds = synthetic::synthetic2(n, p, p / 5 + 1, 0.1, rng.next_u64());
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f1 = rng.uniform(0.3, 1.0);
+            let f2 = rng.uniform(0.08, f1);
+            for rule in [
+                &Improvement1Rule as &dyn ScreeningRule,
+                &Improvement2Rule,
+                &EdppRule,
+            ] {
+                let chk =
+                    check_rule(rule, &ds.x, &ds.y, f1 * ctx.lam_max, f2 * ctx.lam_max);
+                assert_eq!(chk.false_discards, 0, "{} unsafe", rule.name());
+            }
+        });
+    }
+
+    /// The ball-containment hierarchy (Theorems 7/13/15): EDPP discards at
+    /// least as many features as Improvement 1/2, which discard at least as
+    /// many as DPP — on every instance.
+    #[test]
+    fn dominance_hierarchy() {
+        prop::check("EDPP ⊇ Imp1/Imp2 ⊇ DPP rejections", 0xED2, 10, |rng| {
+            let n = 15 + rng.usize(20);
+            let p = 30 + rng.usize(50);
+            let ds = synthetic::synthetic1(n, p, p / 6 + 1, 0.1, rng.next_u64());
+            let f_prev = rng.uniform(0.5, 1.0);
+            let f = rng.uniform(0.1, f_prev * 0.95);
+            let r_dpp = rejections(&DppRule, &ds, f_prev, f);
+            let r_i1 = rejections(&Improvement1Rule, &ds, f_prev, f);
+            let r_i2 = rejections(&Improvement2Rule, &ds, f_prev, f);
+            let r_edpp = rejections(&EdppRule, &ds, f_prev, f);
+            assert!(r_i1 >= r_dpp, "imp1 {r_i1} < dpp {r_dpp}");
+            assert!(r_i2 >= r_dpp, "imp2 {r_i2} < dpp {r_dpp}");
+            assert!(r_edpp >= r_i1, "edpp {r_edpp} < imp1 {r_i1}");
+            assert!(r_edpp >= r_i2, "edpp {r_edpp} < imp2 {r_i2}");
+        });
+    }
+
+    #[test]
+    fn edpp_high_rejection_near_prev_lambda() {
+        // with an exact θ*(λ₀) and λ close to λ₀, EDPP should reject nearly
+        // all inactive features (paper Fig. 1: rejection ≈ 100%)
+        let ds = synthetic::synthetic1(50, 300, 15, 0.1, 7);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let chk = check_rule(&EdppRule, &ds.x, &ds.y, 0.5 * ctx.lam_max, 0.45 * ctx.lam_max);
+        assert_eq!(chk.false_discards, 0);
+        let ratio = chk.discarded as f64 / chk.true_zeros.max(1) as f64;
+        assert!(ratio > 0.9, "rejection ratio {ratio}");
+    }
+
+    #[test]
+    fn edpp_from_lambda_max_uses_xstar_ray() {
+        // λ₀ = λmax path must still be safe and strictly better than DPP
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 8);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let chk_edpp = check_rule(&EdppRule, &ds.x, &ds.y, ctx.lam_max, 0.6 * ctx.lam_max);
+        let chk_dpp = check_rule(&DppRule, &ds.x, &ds.y, ctx.lam_max, 0.6 * ctx.lam_max);
+        assert_eq!(chk_edpp.false_discards, 0);
+        assert!(chk_edpp.discarded >= chk_dpp.discarded);
+    }
+}

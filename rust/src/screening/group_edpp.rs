@@ -1,0 +1,278 @@
+//! EDPP for group Lasso (paper §3, Theorem 20 / Corollary 21) — to the
+//! paper's knowledge the first *exact* (safe) screening rule for group
+//! Lasso. The dual feasible set is an intersection of ellipsoids
+//! `{θ : ‖X_gᵀθ‖ ≤ √n_g}` (eq. (51)) — closed and convex, so the same
+//! projection machinery applies.
+
+use crate::linalg::{dot, nrm2, DenseMatrix};
+use crate::solver::dual;
+
+/// Precomputed context for group screening along a path.
+pub struct GroupScreenContext<'a> {
+    pub x: &'a DenseMatrix,
+    pub y: &'a [f64],
+    /// `(start, len)` per group.
+    pub groups: &'a [(usize, usize)],
+    /// Spectral norms ‖X_g‖₂ (Theorem 20's Lipschitz factor).
+    pub group_op_norms: Vec<f64>,
+    pub y_norm: f64,
+    /// λ̄max = max_g ‖X_gᵀy‖/√n_g (eq. (55)).
+    pub lam_max: f64,
+    /// The attaining group X* (eq. (58)).
+    pub lam_max_arg: usize,
+}
+
+impl<'a> GroupScreenContext<'a> {
+    pub fn new(x: &'a DenseMatrix, y: &'a [f64], groups: &'a [(usize, usize)]) -> Self {
+        let group_op_norms = groups
+            .iter()
+            .enumerate()
+            .map(|(g, &(start, len))| {
+                let cols: Vec<usize> = (start..start + len).collect();
+                x.op_norm_sq_subset(&cols, 20, 0x6E0 + g as u64).sqrt()
+            })
+            .collect();
+        let (lam_max, lam_max_arg) = dual::group_lambda_max(x, y, groups);
+        GroupScreenContext {
+            x,
+            y,
+            groups,
+            group_op_norms,
+            y_norm: nrm2(y),
+            lam_max,
+            lam_max_arg,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// ‖X_gᵀw‖₂ for one group.
+    pub fn group_corr_norm(&self, g: usize, w: &[f64]) -> f64 {
+        let (start, len) = self.groups[g];
+        let mut ss = 0.0;
+        for j in start..start + len {
+            let d = dot(self.x.col(j), w);
+            ss += d * d;
+        }
+        ss.sqrt()
+    }
+}
+
+/// Step input: λ₀ → λ with θ*(λ₀) known (= y/λ̄max at λ₀ = λ̄max, eq. (57)).
+pub struct GroupStepInput<'a> {
+    pub lam_prev: f64,
+    pub lam: f64,
+    pub theta_prev: &'a [f64],
+}
+
+/// A group-screening rule (keep mask is per *group*).
+pub trait GroupScreeningRule {
+    fn name(&self) -> &'static str;
+    fn is_safe(&self) -> bool;
+    fn screen(&self, ctx: &GroupScreenContext, step: &GroupStepInput, keep: &mut [bool]);
+}
+
+/// v̄₁(λ₀) of eq. (59): `y/λ₀ − θ*(λ₀)` below λ̄max, `X*X*ᵀy` at λ̄max.
+pub fn group_v1(ctx: &GroupScreenContext, step: &GroupStepInput) -> Vec<f64> {
+    let n = ctx.y.len();
+    if step.lam_prev < ctx.lam_max * (1.0 - 1e-12) {
+        (0..n).map(|i| ctx.y[i] / step.lam_prev - step.theta_prev[i]).collect()
+    } else {
+        // X*X*ᵀy
+        let (start, len) = ctx.groups[ctx.lam_max_arg];
+        let mut out = vec![0.0; n];
+        for j in start..start + len {
+            let c = ctx.x.col(j);
+            let cj = dot(c, ctx.y);
+            crate::linalg::axpy(cj, c, &mut out);
+        }
+        out
+    }
+}
+
+/// Group EDPP (Corollary 21): discard group g when
+/// `‖X_gᵀ(θ*(λ₀) + ½v̄₂⊥)‖ < √n_g − ½‖v̄₂⊥‖·‖X_g‖₂`.
+pub struct GroupEdppRule;
+
+impl GroupScreeningRule for GroupEdppRule {
+    fn name(&self) -> &'static str {
+        "group-edpp"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &GroupScreenContext, step: &GroupStepInput, keep: &mut [bool]) {
+        assert_eq!(keep.len(), ctx.n_groups());
+        let a = group_v1(ctx, step);
+        let b: Vec<f64> = ctx
+            .y
+            .iter()
+            .zip(step.theta_prev.iter())
+            .map(|(yi, t)| yi / step.lam - t)
+            .collect();
+        let perp = super::v2_perp(&a, &b);
+        let r = 0.5 * nrm2(&perp);
+        let center: Vec<f64> = step
+            .theta_prev
+            .iter()
+            .zip(perp.iter())
+            .map(|(t, w)| t + 0.5 * w)
+            .collect();
+        for g in 0..ctx.n_groups() {
+            let (_, len) = ctx.groups[g];
+            let lhs = ctx.group_corr_norm(g, &center);
+            let rhs = (len as f64).sqrt() - r * ctx.group_op_norms[g];
+            keep[g] = lhs >= rhs;
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::solver::{group::GroupBcdSolver, SolveOptions};
+
+    /// Exact solve at λ_prev, screen λ_prev→λ, exact solve at λ; returns
+    /// (discarded groups, false discards, truly-zero groups).
+    pub fn check_group_rule(
+        rule: &dyn GroupScreeningRule,
+        x: &DenseMatrix,
+        y: &[f64],
+        groups: &[(usize, usize)],
+        lam_prev: f64,
+        lam: f64,
+    ) -> (usize, usize, usize) {
+        let ctx = GroupScreenContext::new(x, y, groups);
+        let active: Vec<usize> = (0..groups.len()).collect();
+        let opts = SolveOptions { tol_gap: 1e-11, ..Default::default() };
+        let prev = GroupBcdSolver.solve(x, y, groups, &active, lam_prev, None, &opts);
+        let full_prev = prev.scatter(groups, &active, x.n_cols());
+        // θ*(λ_prev) = (y − Xβ)/λ_prev
+        let mut theta = y.to_vec();
+        for (j, b) in full_prev.iter().enumerate() {
+            if *b != 0.0 {
+                crate::linalg::axpy(-b, x.col(j), &mut theta);
+            }
+        }
+        for t in theta.iter_mut() {
+            *t /= lam_prev;
+        }
+        let step = GroupStepInput { lam_prev, lam, theta_prev: &theta };
+        let mut keep = vec![true; groups.len()];
+        rule.screen(&ctx, &step, &mut keep);
+
+        let exact = GroupBcdSolver.solve(x, y, groups, &active, lam, None, &opts);
+        let mut discarded = 0;
+        let mut false_discards = 0;
+        let mut true_zero = 0;
+        for g in 0..groups.len() {
+            let zero = exact.beta[g].iter().all(|v| v.abs() < 1e-12);
+            if zero {
+                true_zero += 1;
+            }
+            if !keep[g] {
+                discarded += 1;
+                if !zero {
+                    false_discards += 1;
+                }
+            }
+        }
+        (discarded, false_discards, true_zero)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::check_group_rule;
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::prop;
+
+    #[test]
+    fn context_lambda_max_matches_eq55() {
+        let ds = synthetic::group_synthetic(30, 80, 16, 1);
+        let groups = ds.groups.clone().unwrap();
+        let ctx = GroupScreenContext::new(&ds.x, &ds.y, &groups);
+        let mut manual = 0.0f64;
+        for &(start, len) in &groups {
+            let mut ss = 0.0;
+            for j in start..start + len {
+                let d = dot(ds.x.col(j), &ds.y);
+                ss += d * d;
+            }
+            manual = manual.max((ss / len as f64).sqrt());
+        }
+        assert!((ctx.lam_max - manual).abs() < 1e-10);
+    }
+
+    #[test]
+    fn group_v1_at_lambda_max_is_xstar_xstar_t_y() {
+        let ds = synthetic::group_synthetic(20, 40, 8, 2);
+        let groups = ds.groups.clone().unwrap();
+        let ctx = GroupScreenContext::new(&ds.x, &ds.y, &groups);
+        let theta: Vec<f64> = ds.y.iter().map(|v| v / ctx.lam_max).collect();
+        let step = GroupStepInput {
+            lam_prev: ctx.lam_max,
+            lam: 0.5 * ctx.lam_max,
+            theta_prev: &theta,
+        };
+        let v = group_v1(&ctx, &step);
+        // manual X* X*ᵀ y
+        let (start, len) = groups[ctx.lam_max_arg];
+        let mut manual = vec![0.0; 20];
+        for j in start..start + len {
+            let c = ds.x.col(j);
+            crate::linalg::axpy(dot(c, &ds.y), c, &mut manual);
+        }
+        for (a, b) in v.iter().zip(manual.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn group_edpp_is_safe_randomized() {
+        prop::check("group EDPP safety", 0x6ED, 8, |rng| {
+            let ng = 6 + rng.usize(10);
+            let gsize = 2 + rng.usize(4);
+            let n = 15 + rng.usize(15);
+            let ds = synthetic::group_synthetic(n, ng * gsize, ng, rng.next_u64());
+            let groups = ds.groups.clone().unwrap();
+            let ctx = GroupScreenContext::new(&ds.x, &ds.y, &groups);
+            let f1 = rng.uniform(0.4, 1.0);
+            let f2 = rng.uniform(0.15, f1 * 0.95);
+            let (_, false_discards, _) = check_group_rule(
+                &GroupEdppRule,
+                &ds.x,
+                &ds.y,
+                &groups,
+                f1 * ctx.lam_max,
+                f2 * ctx.lam_max,
+            );
+            assert_eq!(false_discards, 0, "unsafe group discard");
+        });
+    }
+
+    #[test]
+    fn rejects_many_near_prev_lambda() {
+        let ds = synthetic::group_synthetic(40, 400, 100, 5);
+        let groups = ds.groups.clone().unwrap();
+        let ctx = GroupScreenContext::new(&ds.x, &ds.y, &groups);
+        let (discarded, fd, true_zero) = check_group_rule(
+            &GroupEdppRule,
+            &ds.x,
+            &ds.y,
+            &groups,
+            0.5 * ctx.lam_max,
+            0.45 * ctx.lam_max,
+        );
+        assert_eq!(fd, 0);
+        assert!(
+            discarded as f64 >= 0.8 * true_zero as f64,
+            "discarded {discarded}/{true_zero}"
+        );
+    }
+}

@@ -1,0 +1,363 @@
+//! Screening rules — the paper's contribution plus every baseline it
+//! compares against.
+//!
+//! All *safe* sphere rules share one shape (paper §2.1, rule (R1')): given a
+//! ball `B(c, ρ)` known to contain the dual optimum θ*(λ), discard feature i
+//! when `sup_{θ∈B} |xᵢᵀθ| = |xᵢᵀc| + ρ‖xᵢ‖ < 1` (eq. (14)). The rules
+//! differ only in the ball:
+//!
+//! | rule | center c | radius ρ |
+//! |---|---|---|
+//! | SAFE/ST1 (seq.) | y/λ | ‖y/λ − θ*(λ₀)‖ |
+//! | DPP (Cor. 5) | θ*(λ₀) | (1/λ − 1/λ₀)·‖y‖ |
+//! | Improvement 1 (Thm 11) | θ*(λ₀) | ‖v₂⊥‖ |
+//! | Improvement 2 (Thm 14) | θ*(λ₀) + ½(1/λ−1/λ₀)y | ½(1/λ−1/λ₀)‖y‖ |
+//! | EDPP (Cor. 17) | θ*(λ₀) + ½v₂⊥ | ½‖v₂⊥‖ |
+//!
+//! DOME refines the SAFE sphere with a half-space cut; strong rules and SIS
+//! are heuristic (not safe) and are paired with the KKT repair loop in
+//! [`crate::path`].
+//!
+//! The O(Np) part of every rule is one correlation sweep `Xᵀw`; rules route
+//! it through [`CorrelationSweep`] so the PJRT runtime can substitute the
+//! AOT-compiled Pallas kernel for the native loop ([`crate::runtime`]).
+
+pub mod dome;
+pub mod dpp;
+pub mod edpp;
+pub mod group_edpp;
+pub mod group_strong;
+pub mod safe;
+pub mod sis;
+pub mod strong;
+
+use crate::linalg::DenseMatrix;
+#[cfg(test)]
+use crate::solver::dual;
+
+/// Abstraction over the `Xᵀw` sweep so it can be served either by the
+/// native unrolled loop or by the AOT-compiled XLA executable.
+pub trait CorrelationSweep {
+    /// `out[j] = xⱼᵀ w` for every column j of the full matrix.
+    fn xt_w(&self, w: &[f64], out: &mut [f64]);
+}
+
+impl CorrelationSweep for DenseMatrix {
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        self.gemv_t(w, out);
+    }
+}
+
+/// Precomputed per-problem quantities shared by every rule along a path.
+pub struct ScreenContext<'a> {
+    pub x: &'a DenseMatrix,
+    pub y: &'a [f64],
+    /// ‖xᵢ‖₂ for every feature.
+    pub col_norms: Vec<f64>,
+    /// Xᵀy (used by basic rules and λmax).
+    pub xty: Vec<f64>,
+    pub y_norm: f64,
+    /// λmax = ‖Xᵀy‖∞ (eq. (7)).
+    pub lam_max: f64,
+    /// argmax feature x* of eq. (17).
+    pub lam_max_arg: usize,
+    /// Sweep provider (native matrix by default; PJRT artifact optionally).
+    pub sweep: &'a dyn CorrelationSweep,
+    /// Relative slack widening keep-decisions when the sweep is computed in
+    /// reduced precision (0.0 for the native f64 sweep; see
+    /// [`crate::runtime::ArtifactSweep::SAFETY_SLACK`]). Keeping *more*
+    /// features can never break safety — only discard fewer.
+    pub safety_slack: f64,
+}
+
+impl<'a> ScreenContext<'a> {
+    /// Build a context using the native sweep.
+    pub fn new(x: &'a DenseMatrix, y: &'a [f64]) -> Self {
+        Self::with_sweep(x, y, x)
+    }
+
+    /// Build a context with an explicit sweep provider (e.g. the PJRT
+    /// artifact runtime) and its required safety slack.
+    pub fn with_sweep_slack(
+        x: &'a DenseMatrix,
+        y: &'a [f64],
+        sweep: &'a dyn CorrelationSweep,
+        safety_slack: f64,
+    ) -> Self {
+        let mut ctx = Self::with_sweep(x, y, sweep);
+        ctx.safety_slack = safety_slack;
+        ctx
+    }
+
+    /// Build a context with an explicit sweep provider (e.g. the PJRT
+    /// artifact runtime).
+    pub fn with_sweep(
+        x: &'a DenseMatrix,
+        y: &'a [f64],
+        sweep: &'a dyn CorrelationSweep,
+    ) -> Self {
+        let col_norms = x.col_norms();
+        let mut xty = vec![0.0; x.n_cols()];
+        x.gemv_t(y, &mut xty);
+        let mut lam_max = 0.0f64;
+        let mut lam_max_arg = 0usize;
+        for (j, v) in xty.iter().enumerate() {
+            if v.abs() > lam_max {
+                lam_max = v.abs();
+                lam_max_arg = j;
+            }
+        }
+        ScreenContext {
+            x,
+            y,
+            col_norms,
+            xty,
+            y_norm: crate::linalg::nrm2(y),
+            lam_max,
+            lam_max_arg,
+            sweep,
+            safety_slack: 0.0,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.n_cols()
+    }
+}
+
+/// Inputs for one sequential screening step λ₀ → λ (λ < λ₀ ≤ λmax).
+pub struct StepInput<'a> {
+    /// λ₀ — the larger parameter whose exact solution is known.
+    pub lam_prev: f64,
+    /// λ — the parameter we are about to solve.
+    pub lam: f64,
+    /// θ*(λ₀) = (y − Xβ*(λ₀))/λ₀ (KKT eq. (3)); equals y/λmax at λ₀ = λmax.
+    pub theta_prev: &'a [f64],
+}
+
+/// A feature-screening rule. `screen` fills `keep` (true = feature survives,
+/// false = discarded). Safe rules guarantee discarded ⇒ [β*(λ)]ᵢ = 0.
+pub trait ScreeningRule {
+    fn name(&self) -> &'static str;
+    /// Whether discards are guaranteed correct (drives the KKT repair loop).
+    fn is_safe(&self) -> bool;
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]);
+}
+
+/// Shared sphere test: keep[i] = false when `|xᵢᵀc| + ρ‖xᵢ‖ < 1`.
+/// `center` is a dual-space (length-N) vector. One `Xᵀ·center` sweep.
+pub fn sphere_screen(ctx: &ScreenContext, center: &[f64], radius: f64, keep: &mut [bool]) {
+    let p = ctx.p();
+    assert_eq!(keep.len(), p);
+    let mut scores = vec![0.0; p];
+    ctx.sweep.xt_w(center, &mut scores);
+    // widen the keep-condition by the sweep's precision slack (reduced-
+    // precision sweeps must never turn a keep into an unsafe discard)
+    let slack = ctx.safety_slack * (1.0 + crate::linalg::nrm2(center));
+    for j in 0..p {
+        let sup = scores[j].abs() + (radius + slack) * ctx.col_norms[j];
+        // boundary tolerance: an active feature can satisfy sup == 1 exactly
+        // (e.g. radius → 0 with |xᵢᵀθ*| = 1); round-off must not discard it
+        keep[j] = sup >= 1.0 - 1e-9 * (1.0 + sup.abs());
+    }
+}
+
+/// v₁(λ₀) of eq. (17): the ray direction whose projection stays at θ*(λ₀).
+pub fn v1(ctx: &ScreenContext, step: &StepInput) -> Vec<f64> {
+    let n = ctx.y.len();
+    if step.lam_prev < ctx.lam_max * (1.0 - 1e-12) {
+        // y/λ₀ − θ*(λ₀)
+        (0..n).map(|i| ctx.y[i] / step.lam_prev - step.theta_prev[i]).collect()
+    } else {
+        // sign(x*ᵀy)·x*
+        let s = ctx.xty[ctx.lam_max_arg].signum();
+        ctx.x.col(ctx.lam_max_arg).iter().map(|v| s * v).collect()
+    }
+}
+
+/// v₂(λ, λ₀) = y/λ − θ*(λ₀) (eq. (18)).
+pub fn v2(ctx: &ScreenContext, step: &StepInput) -> Vec<f64> {
+    ctx.y
+        .iter()
+        .zip(step.theta_prev.iter())
+        .map(|(yi, ti)| yi / step.lam - ti)
+        .collect()
+}
+
+/// v₂⊥ = v₂ − (⟨v₁,v₂⟩/‖v₁‖²)·v₁ (eq. (19)). Theorem 7 proves ⟨v₁,v₂⟩ ≥ 0;
+/// we guard numerically and fall back to v₂ itself when the inner product is
+/// (floating-point) negative, which keeps the ball valid (eq. (25)).
+pub fn v2_perp(v1: &[f64], v2: &[f64]) -> Vec<f64> {
+    let v1v2 = crate::linalg::dot(v1, v2);
+    let v1v1 = crate::linalg::dot(v1, v1);
+    if v1v1 <= 0.0 || v1v2 < 0.0 {
+        return v2.to_vec();
+    }
+    let c = v1v2 / v1v1;
+    v2.iter().zip(v1.iter()).map(|(b, a)| b - c * a).collect()
+}
+
+/// Exact dual point from a full-length primal solution (KKT eq. (3)).
+pub fn theta_from_solution(x: &DenseMatrix, y: &[f64], beta: &[f64], lam: f64) -> Vec<f64> {
+    let mut theta = y.to_vec();
+    for j in 0..x.n_cols() {
+        if beta[j] != 0.0 {
+            crate::linalg::axpy(-beta[j], x.col(j), &mut theta);
+        }
+    }
+    for t in theta.iter_mut() {
+        *t /= lam;
+    }
+    theta
+}
+
+/// Convenience: θ*(λmax) = y/λmax (eq. (9)).
+pub fn theta_at_lambda_max(ctx: &ScreenContext) -> Vec<f64> {
+    ctx.y.iter().map(|v| v / ctx.lam_max).collect()
+}
+
+/// Shared test-support: verify a rule's discards against a high-precision
+/// reference solution; returns (discarded, false_discards, true_zeros).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+
+    pub struct RuleCheck {
+        pub discarded: usize,
+        pub false_discards: usize,
+        pub true_zeros: usize,
+    }
+
+    /// Screen λ_prev→λ with `rule` (θ from exact solve at λ_prev) and
+    /// compare against the exact support at λ.
+    pub fn check_rule(
+        rule: &dyn ScreeningRule,
+        x: &DenseMatrix,
+        y: &[f64],
+        lam_prev: f64,
+        lam: f64,
+    ) -> RuleCheck {
+        let ctx = ScreenContext::new(x, y);
+        let cols: Vec<usize> = (0..x.n_cols()).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let prev = CdSolver.solve(x, y, &cols, lam_prev, None, &opts);
+        let theta = theta_from_solution(x, y, &prev.scatter(&cols, x.n_cols()), lam_prev);
+        let step = StepInput { lam_prev, lam, theta_prev: &theta };
+        let mut keep = vec![true; x.n_cols()];
+        rule.screen(&ctx, &step, &mut keep);
+
+        let exact = CdSolver.solve(x, y, &cols, lam, None, &opts);
+        let beta = exact.scatter(&cols, x.n_cols());
+        let mut discarded = 0;
+        let mut false_discards = 0;
+        let mut true_zeros = 0;
+        for j in 0..x.n_cols() {
+            if beta[j] == 0.0 {
+                true_zeros += 1;
+            }
+            if !keep[j] {
+                discarded += 1;
+                if beta[j] != 0.0 {
+                    false_discards += 1;
+                }
+            }
+        }
+        RuleCheck { discarded, false_discards, true_zeros }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::prop;
+
+    #[test]
+    fn context_precomputations() {
+        let ds = synthetic::synthetic1(20, 40, 5, 0.1, 1);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        assert_eq!(ctx.col_norms.len(), 40);
+        assert!((ctx.lam_max - dual::lambda_max(&ds.x, &ds.y)).abs() < 1e-12);
+        assert!((ctx.xty[ctx.lam_max_arg].abs() - ctx.lam_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v1_matches_cases() {
+        let ds = synthetic::synthetic1(15, 30, 4, 0.1, 2);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta_max = theta_at_lambda_max(&ctx);
+        // at λ₀ = λmax: v1 = sign(x*ᵀy)·x*
+        let step =
+            StepInput { lam_prev: ctx.lam_max, lam: 0.5 * ctx.lam_max, theta_prev: &theta_max };
+        let v = v1(&ctx, &step);
+        let s = ctx.xty[ctx.lam_max_arg].signum();
+        for (a, b) in v.iter().zip(ctx.x.col(ctx.lam_max_arg)) {
+            assert!((a - s * b).abs() < 1e-14);
+        }
+        // below λmax: v1 = y/λ₀ − θ
+        let theta = vec![0.0; 15];
+        let step =
+            StepInput { lam_prev: 0.7 * ctx.lam_max, lam: 0.5 * ctx.lam_max, theta_prev: &theta };
+        let v = v1(&ctx, &step);
+        for (a, yi) in v.iter().zip(ds.y.iter()) {
+            assert!((a - yi / (0.7 * ctx.lam_max)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn v2_perp_orthogonal_and_shorter() {
+        prop::check("v2perp ⊥ v1 and ‖v2perp‖ ≤ ‖v2‖", 0x51, 40, |rng| {
+            let n = 2 + rng.usize(20);
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            // force nonneg inner product as Theorem 7 guarantees
+            if crate::linalg::dot(&a, &b) < 0.0 {
+                for v in b.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            let perp = v2_perp(&a, &b);
+            let ip = crate::linalg::dot(&perp, &a);
+            assert!(ip.abs() < 1e-8 * (1.0 + crate::linalg::nrm2(&a)), "ip={ip}");
+            assert!(crate::linalg::nrm2(&perp) <= crate::linalg::nrm2(&b) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn sphere_screen_monotone_in_radius() {
+        // larger radius ⇒ superset of kept features
+        let ds = synthetic::synthetic1(20, 50, 6, 0.1, 3);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let center = theta_at_lambda_max(&ctx);
+        let mut keep_small = vec![true; 50];
+        let mut keep_big = vec![true; 50];
+        sphere_screen(&ctx, &center, 0.01, &mut keep_small);
+        sphere_screen(&ctx, &center, 0.5, &mut keep_big);
+        for j in 0..50 {
+            if keep_small[j] {
+                assert!(keep_big[j], "radius monotonicity violated at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn theta_from_solution_kkt_feasible() {
+        let ds = synthetic::synthetic1(25, 60, 8, 0.1, 4);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let cols: Vec<usize> = (0..60).collect();
+        let lam = 0.3 * ctx.lam_max;
+        use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let res = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        let theta = theta_from_solution(&ds.x, &ds.y, &res.scatter(&cols, 60), lam);
+        // θ* must be dual feasible: |xᵢᵀθ*| ≤ 1 (+tolerance)
+        let mut sc = vec![0.0; 60];
+        ds.x.gemv_t(&theta, &mut sc);
+        for (j, v) in sc.iter().enumerate() {
+            assert!(v.abs() <= 1.0 + 1e-5, "θ infeasible at {j}: {v}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! SAFE / ST1 (El Ghaoui et al. [16]; Xiang et al. [36]) — the sphere test
+//! centered at y/λ.
+//!
+//! Basic form (paper eq. (15)): discard i when
+//! `|xᵢᵀy| < λ − ‖xᵢ‖‖y‖·(λmax−λ)/λmax`. Equivalently (divide by λ): the
+//! sphere test with center `y/λ` and radius `‖y‖·(1/λ − 1/λmax)`.
+//!
+//! Recursive/sequential SAFE: with θ*(λ₀) ∈ F known, projection optimality
+//! gives `‖θ*(λ) − y/λ‖ ≤ ‖θ*(λ₀) − y/λ‖`, i.e. the ball
+//! `B(y/λ, ‖y/λ − θ*(λ₀)‖)`; at λ₀ = λmax this reduces exactly to ST1.
+
+use super::{sphere_screen, ScreenContext, ScreeningRule, StepInput};
+use crate::linalg::dist_sq_scaled;
+
+/// Recursive SAFE (sequential); reduces to SAFE/ST1 when λ₀ = λmax.
+pub struct SafeRule;
+
+impl ScreeningRule for SafeRule {
+    fn name(&self) -> &'static str {
+        "safe"
+    }
+
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let n = ctx.y.len();
+        let center: Vec<f64> = (0..n).map(|i| ctx.y[i] / step.lam).collect();
+        // ‖y/λ − θ*(λ₀)‖
+        let radius = dist_sq_scaled(ctx.y, 1.0 / step.lam, step.theta_prev).sqrt();
+        sphere_screen(ctx, &center, radius, keep);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::testutil::check_rule;
+    use crate::screening::{edpp::EdppRule, theta_at_lambda_max};
+    use crate::util::prop;
+
+    #[test]
+    fn basic_form_matches_eq15() {
+        // at λ₀ = λmax the rule must coincide with eq. (15)
+        let ds = synthetic::synthetic1(25, 70, 6, 0.1, 1);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let lam = 0.35 * ctx.lam_max;
+        let step = StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta };
+        let mut keep = vec![true; 70];
+        SafeRule.screen(&ctx, &step, &mut keep);
+        for j in 0..70 {
+            let lhs = ctx.xty[j].abs();
+            let rhs = lam
+                - ctx.col_norms[j] * ctx.y_norm * (ctx.lam_max - lam) / ctx.lam_max;
+            assert_eq!(keep[j], lhs >= rhs, "feature {j}: eq(15) mismatch");
+        }
+    }
+
+    #[test]
+    fn safe_rule_is_safe_randomized() {
+        prop::check("SAFE safety", 0x5AFE, 12, |rng| {
+            let n = 15 + rng.usize(20);
+            let p = 20 + rng.usize(50);
+            let ds = synthetic::synthetic1(n, p, p / 5 + 1, 0.1, rng.next_u64());
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f1 = rng.uniform(0.3, 1.0);
+            let f2 = rng.uniform(0.1, f1);
+            let chk =
+                check_rule(&SafeRule, &ds.x, &ds.y, f1 * ctx.lam_max, f2 * ctx.lam_max);
+            assert_eq!(chk.false_discards, 0);
+        });
+    }
+
+    #[test]
+    fn edpp_dominates_safe() {
+        // paper Figs. 2–4: EDPP discards far more than SAFE
+        prop::check("EDPP ≥ SAFE rejections", 0x5AF2, 8, |rng| {
+            let ds = synthetic::synthetic1(25, 120, 10, 0.1, rng.next_u64());
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let f1 = rng.uniform(0.5, 1.0);
+            let f2 = rng.uniform(0.1, f1 * 0.9);
+            let s = check_rule(&SafeRule, &ds.x, &ds.y, f1 * ctx.lam_max, f2 * ctx.lam_max);
+            let e = check_rule(&EdppRule, &ds.x, &ds.y, f1 * ctx.lam_max, f2 * ctx.lam_max);
+            assert!(e.discarded >= s.discarded, "edpp {} < safe {}", e.discarded, s.discarded);
+        });
+    }
+}

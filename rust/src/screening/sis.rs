@@ -1,0 +1,90 @@
+//! SIS — Sure Independence Screening (Fan & Lv [17]).
+//!
+//! The paper's intro cites SIS as the canonical *heuristic* marginal-
+//! correlation screen: keep the d features with the largest |xᵢᵀy|,
+//! irrespective of λ. Not safe and not λ-adaptive; included as the ablation
+//! baseline (DESIGN.md §4) and paired with KKT repair when used on a path.
+
+use super::{ScreenContext, ScreeningRule, StepInput};
+
+/// Keep the `d` features with the largest marginal correlation |xᵢᵀy|.
+/// Fan & Lv suggest d on the order of n/log n or n.
+pub struct SisRule {
+    pub keep_count: usize,
+}
+
+impl SisRule {
+    /// The classical d = ⌈n/log n⌉ choice.
+    pub fn with_default_count(n: usize) -> Self {
+        let d = ((n as f64) / (n as f64).ln().max(1.0)).ceil() as usize;
+        SisRule { keep_count: d.max(1) }
+    }
+}
+
+impl ScreeningRule for SisRule {
+    fn name(&self) -> &'static str {
+        "sis"
+    }
+
+    fn is_safe(&self) -> bool {
+        false
+    }
+
+    fn screen(&self, ctx: &ScreenContext, _step: &StepInput, keep: &mut [bool]) {
+        let p = ctx.p();
+        let d = self.keep_count.min(p);
+        let mut idx: Vec<usize> = (0..p).collect();
+        idx.sort_by(|&a, &b| {
+            ctx.xty[b].abs().partial_cmp(&ctx.xty[a].abs()).unwrap()
+        });
+        keep.iter_mut().for_each(|k| *k = false);
+        for &j in idx.iter().take(d) {
+            keep[j] = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn keeps_exactly_d_top_features() {
+        let ds = synthetic::synthetic1(30, 100, 10, 0.1, 1);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let rule = SisRule { keep_count: 25 };
+        let step = StepInput { lam_prev: ctx.lam_max, lam: 0.5, theta_prev: &ds.y };
+        let mut keep = vec![true; 100];
+        rule.screen(&ctx, &step, &mut keep);
+        assert_eq!(keep.iter().filter(|k| **k).count(), 25);
+        // every kept feature has |xᵀy| ≥ every discarded one
+        let min_kept = (0..100)
+            .filter(|&j| keep[j])
+            .map(|j| ctx.xty[j].abs())
+            .fold(f64::INFINITY, f64::min);
+        let max_drop = (0..100)
+            .filter(|&j| !keep[j])
+            .map(|j| ctx.xty[j].abs())
+            .fold(0.0, f64::max);
+        assert!(min_kept >= max_drop);
+    }
+
+    #[test]
+    fn default_count_formula() {
+        let r = SisRule::with_default_count(100);
+        assert_eq!(r.keep_count, (100.0f64 / 100.0f64.ln()).ceil() as usize);
+        assert!(SisRule::with_default_count(1).keep_count >= 1);
+    }
+
+    #[test]
+    fn keep_count_capped_at_p() {
+        let ds = synthetic::synthetic1(10, 20, 3, 0.1, 2);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let rule = SisRule { keep_count: 500 };
+        let step = StepInput { lam_prev: ctx.lam_max, lam: 0.5, theta_prev: &ds.y };
+        let mut keep = vec![false; 20];
+        rule.screen(&ctx, &step, &mut keep);
+        assert!(keep.iter().all(|k| *k));
+    }
+}

@@ -1,0 +1,154 @@
+//! Strong rules (Tibshirani et al. [32]) — the heuristic state of the art
+//! the paper benchmarks against.
+//!
+//! Sequential form: discard i when `|xᵢᵀ(y − Xβ*(λ₀))| < 2λ − λ₀`, i.e.
+//! `|xᵢᵀθ*(λ₀)|·λ₀ < 2λ − λ₀`. Rests on a unit-slope nonexpansiveness
+//! assumption on λ ↦ xᵢᵀ(y−Xβ*(λ)) that can fail, so discards must be
+//! verified against the KKT conditions and repaired
+//! ([`crate::path`] implements the violation loop, as [32] prescribes).
+//! Basic form: λ₀ = λmax, test `|xᵢᵀy| < 2λ − λmax`.
+
+use super::{ScreenContext, ScreeningRule, StepInput};
+
+/// Sequential strong rule (heuristic).
+pub struct StrongRule;
+
+impl ScreeningRule for StrongRule {
+    fn name(&self) -> &'static str {
+        "strong"
+    }
+
+    fn is_safe(&self) -> bool {
+        false
+    }
+
+    fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let p = ctx.p();
+        let thr = 2.0 * step.lam - step.lam_prev;
+        if thr <= 0.0 {
+            // rule is vacuous (keeps everything) when λ < λ₀/2
+            keep.iter_mut().for_each(|k| *k = true);
+            return;
+        }
+        // c(λ₀) = Xᵀ(y − Xβ*(λ₀)) = λ₀·Xᵀθ*(λ₀)
+        let mut corr = vec![0.0; p];
+        ctx.sweep.xt_w(step.theta_prev, &mut corr);
+        for j in 0..p {
+            keep[j] = (corr[j] * step.lam_prev).abs() >= thr;
+        }
+    }
+}
+
+/// KKT verification for heuristic rules: given the residual `r = y − Xβ` of
+/// the *reduced* solve at λ, any discarded feature with `|xⱼᵀr| > λ` is a
+/// violation and must be added back. Returns the violating indices.
+pub fn kkt_violations(
+    ctx: &ScreenContext,
+    r: &[f64],
+    lam: f64,
+    keep: &[bool],
+) -> Vec<usize> {
+    let p = ctx.p();
+    let mut corr = vec![0.0; p];
+    ctx.sweep.xt_w(r, &mut corr);
+    // small relative slack so solver tolerance doesn't trigger spurious adds
+    let tol = lam * (1.0 + 1e-7);
+    (0..p).filter(|&j| !keep[j] && corr[j].abs() > tol).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::testutil::check_rule;
+    use crate::screening::{theta_at_lambda_max, theta_from_solution};
+    use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+    use crate::util::prop;
+
+    #[test]
+    fn basic_strong_matches_closed_form() {
+        let ds = synthetic::synthetic1(20, 60, 6, 0.1, 1);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let lam = 0.7 * ctx.lam_max;
+        let step = StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta };
+        let mut keep = vec![true; 60];
+        StrongRule.screen(&ctx, &step, &mut keep);
+        for j in 0..60 {
+            assert_eq!(keep[j], ctx.xty[j].abs() >= 2.0 * lam - ctx.lam_max, "feature {j}");
+        }
+    }
+
+    #[test]
+    fn vacuous_when_lambda_below_half() {
+        let ds = synthetic::synthetic1(20, 40, 4, 0.1, 2);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let theta = theta_at_lambda_max(&ctx);
+        let step = StepInput {
+            lam_prev: ctx.lam_max,
+            lam: 0.4 * ctx.lam_max,
+            theta_prev: &theta,
+        };
+        let mut keep = vec![false; 40];
+        StrongRule.screen(&ctx, &step, &mut keep);
+        assert!(keep.iter().all(|k| *k));
+    }
+
+    #[test]
+    fn strong_rule_discards_aggressively() {
+        // strong typically rejects ≥ as many as safe rules — that is its
+        // selling point; verify it is competitive with EDPP on a random case
+        let ds = synthetic::synthetic1(40, 200, 12, 0.1, 3);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let chk = check_rule(&StrongRule, &ds.x, &ds.y, 0.5 * ctx.lam_max, 0.45 * ctx.lam_max);
+        let ratio = chk.discarded as f64 / chk.true_zeros.max(1) as f64;
+        assert!(ratio > 0.8, "strong rejection ratio {ratio}");
+    }
+
+    #[test]
+    fn kkt_violation_detection_and_injection() {
+        // inject a fake violation: discard the strongest feature, solve the
+        // reduced problem, and verify the checker flags it
+        let ds = synthetic::synthetic1(30, 80, 8, 0.1, 4);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.2 * ctx.lam_max;
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let cols: Vec<usize> = (0..80).collect();
+        let full = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, 80);
+        // the feature with the largest |β| is certainly active
+        let strongest = (0..80)
+            .max_by(|&a, &b| full[a].abs().partial_cmp(&full[b].abs()).unwrap())
+            .unwrap();
+        assert!(full[strongest] != 0.0);
+        let mut keep = vec![true; 80];
+        keep[strongest] = false;
+        let reduced: Vec<usize> = (0..80).filter(|&j| keep[j]).collect();
+        let res = CdSolver.solve(&ds.x, &ds.y, &reduced, lam, None, &opts);
+        let beta_red = res.scatter(&reduced, 80);
+        let mut r = ds.y.clone();
+        for j in 0..80 {
+            if beta_red[j] != 0.0 {
+                crate::linalg::axpy(-beta_red[j], ds.x.col(j), &mut r);
+            }
+        }
+        let viol = kkt_violations(&ctx, &r, lam, &keep);
+        assert!(viol.contains(&strongest), "violation not detected: {viol:?}");
+    }
+
+    #[test]
+    fn no_violations_when_nothing_discarded() {
+        prop::check("KKT checker silent on exact solves", 0x57A, 8, |rng| {
+            let ds = synthetic::synthetic1(20, 50, 5, 0.1, rng.next_u64());
+            let ctx = ScreenContext::new(&ds.x, &ds.y);
+            let lam = rng.uniform(0.2, 0.8) * ctx.lam_max;
+            let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+            let cols: Vec<usize> = (0..50).collect();
+            let res = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+            let beta = res.scatter(&cols, 50);
+            let theta = theta_from_solution(&ds.x, &ds.y, &beta, lam);
+            let r: Vec<f64> = theta.iter().map(|t| t * lam).collect();
+            let keep = vec![true; 50];
+            assert!(kkt_violations(&ctx, &r, lam, &keep).is_empty());
+        });
+    }
+}

@@ -1,0 +1,233 @@
+//! Cyclic coordinate descent with an active-set strategy — the workhorse
+//! solver, standing in for the paper's SLEP solver [22].
+//!
+//! Classic glmnet-style scheme: maintain the residual `r = y − Xβ`; a
+//! coordinate update is `βⱼ ← S(xⱼᵀr + ‖xⱼ‖²βⱼ, λ)/‖xⱼ‖²`. After one full
+//! sweep, iterate only over the current support until stationary, then do a
+//! verification sweep over all columns; converged when a full sweep changes
+//! nothing and the duality gap is below tolerance.
+
+use super::{dual, LassoSolver, SolveOptions, SolveResult};
+use crate::linalg::{axpy, dot, ops::soft_threshold, DenseMatrix};
+
+/// Cyclic CD with active-set outer loop and duality-gap stopping.
+pub struct CdSolver;
+
+impl CdSolver {
+    /// One coordinate sweep over `work` (indices into `cols`). Returns the
+    /// largest |Δβⱼ|·‖xⱼ‖ seen (a scale-aware progress measure).
+    #[allow(clippy::too_many_arguments)]
+    fn sweep(
+        x: &DenseMatrix,
+        cols: &[usize],
+        work: &[usize],
+        sq_norms: &[f64],
+        lam: f64,
+        beta: &mut [f64],
+        r: &mut [f64],
+    ) -> f64 {
+        let mut max_delta = 0.0f64;
+        for &k in work {
+            let sq = sq_norms[k];
+            if sq == 0.0 {
+                continue;
+            }
+            let xj = x.col(cols[k]);
+            let old = beta[k];
+            // c = xⱼᵀ r + ‖xⱼ‖² βⱼ  (partial residual correlation)
+            let c = dot(xj, r) + sq * old;
+            let new = soft_threshold(c, lam) / sq;
+            if new != old {
+                axpy(old - new, xj, r);
+                beta[k] = new;
+                max_delta = max_delta.max((new - old).abs() * sq.sqrt());
+            }
+        }
+        max_delta
+    }
+}
+
+impl LassoSolver for CdSolver {
+    fn solve(
+        &self,
+        x: &DenseMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let m = cols.len();
+        let mut beta = match beta0 {
+            Some(b) => {
+                assert_eq!(b.len(), m);
+                b.to_vec()
+            }
+            None => vec![0.0; m],
+        };
+        // residual r = y − Xβ
+        let mut r = y.to_vec();
+        for (k, &j) in cols.iter().enumerate() {
+            if beta[k] != 0.0 {
+                axpy(-beta[k], x.col(j), &mut r);
+            }
+        }
+        let sq_norms: Vec<f64> = cols.iter().map(|&j| dot(x.col(j), x.col(j))).collect();
+        let all: Vec<usize> = (0..m).collect();
+        let y_scale = dot(y, y).sqrt().max(1.0);
+
+        let mut gap = f64::INFINITY;
+        let mut epoch = 0;
+        while epoch < opts.max_iters {
+            // full verification sweep
+            let delta_full = Self::sweep(x, cols, &all, &sq_norms, lam, &mut beta, &mut r);
+            epoch += 1;
+            // inner active-set sweeps — cheap, over the support only
+            let support: Vec<usize> = (0..m).filter(|&k| beta[k] != 0.0).collect();
+            if !support.is_empty() {
+                for _ in 0..opts.gap_check_every.max(1) {
+                    if epoch >= opts.max_iters {
+                        break;
+                    }
+                    let d =
+                        Self::sweep(x, cols, &support, &sq_norms, lam, &mut beta, &mut r);
+                    epoch += 1;
+                    if d <= 1e-12 * y_scale {
+                        break;
+                    }
+                }
+            }
+            // convergence test: full-sweep stationarity + certified gap
+            if delta_full <= 1e-10 * y_scale {
+                gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
+                if gap <= opts.tol_gap {
+                    break;
+                }
+            } else if epoch % opts.gap_check_every == 0 {
+                gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
+                if gap <= opts.tol_gap {
+                    break;
+                }
+            }
+        }
+        if gap.is_infinite() {
+            gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
+        }
+        SolveResult { beta, iters: epoch, gap }
+    }
+
+    fn name(&self) -> &'static str {
+        "cd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::testutil::small_problem;
+    use crate::util::prop;
+
+    #[test]
+    fn orthogonal_design_closed_form() {
+        // X = I (n=p), lasso solution is soft-threshold of y.
+        let n = 6;
+        let mut rows = vec![vec![0.0; n]; n];
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        let x = DenseMatrix::from_rows(&rows);
+        let y = vec![3.0, -2.0, 0.5, -0.1, 1.0, 0.0];
+        let cols: Vec<usize> = (0..n).collect();
+        let lam = 1.0;
+        let res = CdSolver.solve(&x, &y, &cols, lam, None, &SolveOptions::default());
+        for (bi, yi) in res.beta.iter().zip(y.iter()) {
+            assert!((bi - soft_threshold(*yi, lam)).abs() < 1e-9, "{bi} vs {yi}");
+        }
+        assert!(res.gap <= 1e-7);
+    }
+
+    #[test]
+    fn zero_solution_at_lambda_max() {
+        let (x, y, _) = small_problem(3, 30, 60, 1.0);
+        let lm = dual::lambda_max(&x, &y);
+        let cols: Vec<usize> = (0..60).collect();
+        let res = CdSolver.solve(&x, &y, &cols, lm * 1.0001, None, &SolveOptions::default());
+        assert!(res.beta.iter().all(|b| *b == 0.0));
+    }
+
+    #[test]
+    fn gap_certified_small() {
+        let (x, y, lam) = small_problem(4, 40, 100, 0.2);
+        let cols: Vec<usize> = (0..100).collect();
+        let res = CdSolver.solve(&x, &y, &cols, lam, None, &SolveOptions::default());
+        assert!(res.gap <= 1e-7, "gap={}", res.gap);
+        // KKT: |xⱼᵀr| ≤ λ(1+ε) for all j; == λ on support
+        let full = res.scatter(&cols, 100);
+        let mut r = y.clone();
+        for (j, b) in full.iter().enumerate() {
+            if *b != 0.0 {
+                axpy(-b, x.col(j), &mut r);
+            }
+        }
+        for j in 0..100 {
+            let c = dot(x.col(j), &r);
+            assert!(c.abs() <= lam * (1.0 + 1e-4), "KKT violated at {j}: {c} vs {lam}");
+            if full[j] != 0.0 {
+                assert!((c.abs() - lam).abs() <= lam * 1e-3, "support KKT at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let (x, y, lam) = small_problem(5, 50, 150, 0.3);
+        let cols: Vec<usize> = (0..150).collect();
+        let opts = SolveOptions::default();
+        let cold = CdSolver.solve(&x, &y, &cols, lam, None, &opts);
+        // warm start at a nearby λ
+        let warm_src = CdSolver.solve(&x, &y, &cols, lam * 1.1, None, &opts);
+        let warm = CdSolver.solve(&x, &y, &cols, lam, Some(&warm_src.beta), &opts);
+        assert!(warm.iters <= cold.iters, "warm {} vs cold {}", warm.iters, cold.iters);
+        assert!(warm.gap <= 1e-7);
+    }
+
+    #[test]
+    fn subset_solve_matches_full_when_inactive_removed() {
+        // removing truly-inactive columns must not change the solution
+        let (x, y, lam) = small_problem(6, 30, 80, 0.5);
+        let cols: Vec<usize> = (0..80).collect();
+        let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
+        let full = CdSolver.solve(&x, &y, &cols, lam, None, &opts);
+        let full_beta = full.scatter(&cols, 80);
+        let support: Vec<usize> = (0..80).filter(|&j| full_beta[j] != 0.0).collect();
+        if support.is_empty() {
+            return;
+        }
+        let red = CdSolver.solve(&x, &y, &support, lam, None, &opts);
+        let red_beta = red.scatter(&support, 80);
+        for j in 0..80 {
+            assert!((full_beta[j] - red_beta[j]).abs() < 1e-5, "col {j}");
+        }
+    }
+
+    #[test]
+    fn randomized_kkt_property() {
+        prop::check("CD satisfies KKT on random problems", 0xCD1, 15, |rng| {
+            let n = 10 + rng.usize(30);
+            let p = 10 + rng.usize(60);
+            let ds = synthetic::synthetic2(n, p, p / 6 + 1, 0.1, rng.next_u64());
+            let lam = rng.uniform(0.1, 0.9) * dual::lambda_max(&ds.x, &ds.y);
+            let cols: Vec<usize> = (0..p).collect();
+            let res = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &SolveOptions::default());
+            assert!(res.gap <= 1e-6, "gap={}", res.gap);
+        });
+    }
+
+    #[test]
+    fn empty_column_set() {
+        let (x, y, lam) = small_problem(7, 10, 20, 0.5);
+        let res = CdSolver.solve(&x, &y, &[], lam, None, &SolveOptions::default());
+        assert!(res.beta.is_empty());
+    }
+}

@@ -1,0 +1,268 @@
+//! Duality machinery for the Lasso (paper §2.1, eq. (2)–(4)) and group
+//! Lasso (§3.1, eq. (51)–(53)).
+//!
+//! The dual feasible set is `F = {θ : |xᵢᵀθ| ≤ 1}`; the dual optimum is the
+//! projection of `y/λ` onto F (eq. (6)). From any primal β with residual
+//! `r = y − Xβ` we build a feasible dual point by scaling `r/λ` into F,
+//! which yields the duality gap used as the solvers' stopping criterion and
+//! by tests as the certificate of exactness.
+
+use crate::linalg::{dot, nrm1, DenseMatrix};
+
+/// Primal objective `½‖y − X[:,cols]β‖² + λ‖β‖₁`.
+pub fn primal_objective(x: &DenseMatrix, y: &[f64], cols: &[usize], beta: &[f64], lam: f64) -> f64 {
+    let mut r = y.to_vec();
+    for (k, &j) in cols.iter().enumerate() {
+        if beta[k] != 0.0 {
+            crate::linalg::axpy(-beta[k], x.col(j), &mut r);
+        }
+    }
+    0.5 * dot(&r, &r) + lam * nrm1(beta)
+}
+
+/// Dual objective `½‖y‖² − λ²/2·‖θ − y/λ‖²` (eq. (2)).
+pub fn dual_objective(y: &[f64], theta: &[f64], lam: f64) -> f64 {
+    let mut d = 0.0;
+    for (t, yi) in theta.iter().zip(y.iter()) {
+        let e = t - yi / lam;
+        d += e * e;
+    }
+    0.5 * dot(y, y) - 0.5 * lam * lam * d
+}
+
+/// Scale factor that maps the residual into the dual feasible set:
+/// `θ = r · s` with `s = min(1/λ, 1/‖Xᵀr‖∞ restricted to cols)` — the
+/// standard feasible dual point (e.g. [16]). For the *exact* solution the
+/// scaled residual equals θ*(λ) = r/λ by KKT eq. (3).
+pub fn dual_scale(x: &DenseMatrix, cols: &[usize], r: &[f64], lam: f64) -> f64 {
+    let mut xtr_inf = 0.0f64;
+    for &j in cols {
+        xtr_inf = xtr_inf.max(dot(x.col(j), r).abs());
+    }
+    if xtr_inf <= lam || xtr_inf == 0.0 {
+        1.0 / lam
+    } else {
+        1.0 / xtr_inf
+    }
+}
+
+/// Duality gap of the reduced problem given the residual `r = y − X[:,cols]β`.
+/// Returned *relative* to `max(1, ½‖y‖²)` so tolerances are scale-free.
+pub fn duality_gap(
+    x: &DenseMatrix,
+    y: &[f64],
+    cols: &[usize],
+    beta: &[f64],
+    r: &[f64],
+    lam: f64,
+) -> f64 {
+    let s = dual_scale(x, cols, r, lam);
+    let primal = 0.5 * dot(r, r) + lam * nrm1(beta);
+    // D(θ) with θ = s·r, expanded to avoid allocating θ:
+    // ‖θ − y/λ‖² = s²‖r‖² − 2s/λ·⟨r,y⟩ + ‖y‖²/λ²
+    let rr = dot(r, r);
+    let ry = dot(r, y);
+    let yy = dot(y, y);
+    let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
+    let dual = 0.5 * yy - 0.5 * lam * lam * dist;
+    let scale = (0.5 * yy).max(1.0);
+    ((primal - dual) / scale).max(0.0)
+}
+
+/// The exact dual optimum at λ from the exact primal solution:
+/// `θ*(λ) = (y − Xβ*(λ))/λ` (KKT eq. (3)). Screening rules consume this.
+pub fn dual_point_from_beta(
+    x: &DenseMatrix,
+    y: &[f64],
+    cols: &[usize],
+    beta: &[f64],
+    lam: f64,
+) -> Vec<f64> {
+    let mut theta = y.to_vec();
+    for (k, &j) in cols.iter().enumerate() {
+        if beta[k] != 0.0 {
+            crate::linalg::axpy(-beta[k], x.col(j), &mut theta);
+        }
+    }
+    for t in theta.iter_mut() {
+        *t /= lam;
+    }
+    theta
+}
+
+/// λmax = ‖Xᵀy‖∞ (eq. (7)): the smallest λ with β*(λ) = 0.
+pub fn lambda_max(x: &DenseMatrix, y: &[f64]) -> f64 {
+    let mut scores = vec![0.0; x.n_cols()];
+    x.gemv_t(y, &mut scores);
+    scores.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// argmax index for λmax — the feature `x*` of eq. (17).
+pub fn lambda_max_arg(x: &DenseMatrix, y: &[f64]) -> (f64, usize) {
+    let mut scores = vec![0.0; x.n_cols()];
+    x.gemv_t(y, &mut scores);
+    let mut best = (0.0f64, 0usize);
+    for (j, s) in scores.iter().enumerate() {
+        if s.abs() > best.0 {
+            best = (s.abs(), j);
+        }
+    }
+    best
+}
+
+/// Group-Lasso λmax = max_g ‖X_gᵀ y‖₂/√n_g (eq. (55)) with its argmax group.
+pub fn group_lambda_max(
+    x: &DenseMatrix,
+    y: &[f64],
+    groups: &[(usize, usize)],
+) -> (f64, usize) {
+    let mut best = (0.0f64, 0usize);
+    for (g, &(start, len)) in groups.iter().enumerate() {
+        let mut ss = 0.0;
+        for j in start..start + len {
+            let d = dot(x.col(j), y);
+            ss += d * d;
+        }
+        let v = (ss / len as f64).sqrt();
+        if v > best.0 {
+            best = (v, g);
+        }
+    }
+    best
+}
+
+/// Group-Lasso duality gap (problem (50)/(51)), given residual r.
+pub fn group_duality_gap(
+    x: &DenseMatrix,
+    y: &[f64],
+    groups: &[(usize, usize)],
+    active: &[usize],
+    beta: &[f64],
+    r: &[f64],
+    lam: f64,
+) -> f64 {
+    // dual scale: bring r into {θ : ‖X_gᵀθ‖ ≤ √n_g} after the /λ scaling
+    let mut max_ratio = 0.0f64;
+    for &g in active {
+        let (start, len) = groups[g];
+        let mut ss = 0.0;
+        for j in start..start + len {
+            let d = dot(x.col(j), r);
+            ss += d * d;
+        }
+        max_ratio = max_ratio.max((ss / len as f64).sqrt());
+    }
+    let s = if max_ratio <= lam || max_ratio == 0.0 { 1.0 / lam } else { 1.0 / max_ratio };
+    // primal: ½‖r‖² + λ Σ_g √n_g ‖β_g‖
+    let mut pen = 0.0;
+    let mut off = 0;
+    for &g in active {
+        let (_, len) = groups[g];
+        let bg = &beta[off..off + len];
+        pen += (len as f64).sqrt() * dot(bg, bg).sqrt();
+        off += len;
+    }
+    let rr = dot(r, r);
+    let ry = dot(r, y);
+    let yy = dot(y, y);
+    let primal = 0.5 * rr + lam * pen;
+    let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
+    let dual = 0.5 * yy - 0.5 * lam * lam * dist;
+    let scale = (0.5 * yy).max(1.0);
+    ((primal - dual) / scale).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::prop;
+
+    #[test]
+    fn lambda_max_gives_zero_solution_threshold() {
+        let ds = synthetic::synthetic1(30, 50, 5, 0.1, 1);
+        let cols: Vec<usize> = (0..50).collect();
+        let (lm, arg) = lambda_max_arg(&ds.x, &ds.y);
+        assert!((lambda_max(&ds.x, &ds.y) - lm).abs() < 1e-12);
+        assert!(arg < 50);
+        // at λ = λmax the zero vector has zero duality gap
+        let beta = vec![0.0; 50];
+        let gap = duality_gap(&ds.x, &ds.y, &cols, &beta, &ds.y, lm);
+        assert!(gap < 1e-10, "gap={gap}");
+        // slightly below λmax, zero is no longer optimal
+        let gap2 = duality_gap(&ds.x, &ds.y, &cols, &beta, &ds.y, 0.5 * lm);
+        assert!(gap2 > 1e-8, "gap2={gap2}");
+    }
+
+    #[test]
+    fn weak_duality_randomized() {
+        // gap ≥ 0 for arbitrary (β, λ) — weak duality
+        prop::check("weak duality", 0xD1, 30, |rng| {
+            let n = 5 + rng.usize(20);
+            let p = 5 + rng.usize(30);
+            let ds = synthetic::synthetic1(n, p, p / 4, 0.1, rng.next_u64());
+            let cols: Vec<usize> = (0..p).collect();
+            let mut beta = vec![0.0; p];
+            for b in beta.iter_mut() {
+                if rng.f64() < 0.2 {
+                    *b = rng.uniform(-1.0, 1.0);
+                }
+            }
+            let mut r = ds.y.clone();
+            for (k, &j) in cols.iter().enumerate() {
+                crate::linalg::axpy(-beta[k], ds.x.col(j), &mut r);
+            }
+            let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
+            let gap = duality_gap(&ds.x, &ds.y, &cols, &beta, &r, lam);
+            assert!(gap >= 0.0);
+        });
+    }
+
+    #[test]
+    fn dual_point_matches_kkt_at_lambda_max() {
+        // θ*(λmax) = y/λmax (eq. 9)
+        let ds = synthetic::synthetic1(20, 40, 4, 0.1, 2);
+        let lm = lambda_max(&ds.x, &ds.y);
+        let theta = dual_point_from_beta(&ds.x, &ds.y, &[], &[], lm);
+        for (t, yi) in theta.iter().zip(ds.y.iter()) {
+            assert!((t - yi / lm).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dual_scale_feasibility() {
+        prop::check("scaled residual is dual feasible", 0xD2, 30, |rng| {
+            let n = 5 + rng.usize(15);
+            let p = 5 + rng.usize(25);
+            let ds = synthetic::synthetic1(n, p, 3, 0.1, rng.next_u64());
+            let cols: Vec<usize> = (0..p).collect();
+            let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
+            let s = dual_scale(&ds.x, &cols, &ds.y, lam);
+            for &j in &cols {
+                let v = dot(ds.x.col(j), &ds.y) * s;
+                assert!(v.abs() <= 1.0 + 1e-10, "infeasible: {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn group_lambda_max_consistency() {
+        // with singleton groups, group λmax == lasso λmax
+        let ds = synthetic::synthetic1(20, 30, 3, 0.1, 5);
+        let groups: Vec<(usize, usize)> = (0..30).map(|j| (j, 1)).collect();
+        let (glm, _) = group_lambda_max(&ds.x, &ds.y, &groups);
+        assert!((glm - lambda_max(&ds.x, &ds.y)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn group_gap_zero_at_lambda_max() {
+        let ds = synthetic::group_synthetic(25, 60, 12, 6);
+        let groups = ds.groups.clone().unwrap();
+        let (glm, _) = group_lambda_max(&ds.x, &ds.y, &groups);
+        let active: Vec<usize> = (0..groups.len()).collect();
+        let beta = vec![0.0; 60];
+        let gap =
+            group_duality_gap(&ds.x, &ds.y, &groups, &active, &beta, &ds.y, glm);
+        assert!(gap < 1e-10, "gap={gap}");
+    }
+}

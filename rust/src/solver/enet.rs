@@ -1,0 +1,288 @@
+//! Elastic-net extension (paper §5 names generalizing the DPP family to
+//! further sparse formulations as future work; the elastic net is the
+//! canonical first step).
+//!
+//! Problem: `min ½‖y − Xβ‖² + λ‖β‖₁ + (γ/2)‖β‖²`. This is exactly a Lasso
+//! on the augmented design `X̃ = [X; √γ·I], ỹ = [y; 0]`, so the whole dual-
+//! polytope machinery transfers: `θ̃*(λ) = (ỹ − X̃β*)/λ` stacks the residual
+//! block `r/λ` on top of `−√γ·β*/λ`, `‖x̃ᵢ‖² = ‖xᵢ‖² + γ`, and
+//! `x̃ᵢᵀθ̃ = (xᵢᵀr − γβᵢ)/λ`. [`screen_enet_edpp`] evaluates EDPP on the
+//! augmented geometry without ever materializing X̃.
+
+use super::{LassoSolver, SolveOptions, SolveResult};
+use crate::linalg::{axpy, dot, nrm2, ops::soft_threshold, DenseMatrix};
+
+/// Elastic-net coordinate descent: `βⱼ ← S(xⱼᵀr + ‖xⱼ‖²βⱼ, λ)/(‖xⱼ‖² + γ)`.
+pub struct EnetCdSolver {
+    /// ℓ2 weight γ ≥ 0 (γ = 0 reduces to the Lasso CD solver).
+    pub gamma: f64,
+}
+
+impl LassoSolver for EnetCdSolver {
+    fn solve(
+        &self,
+        x: &DenseMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let m = cols.len();
+        let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; m]);
+        let mut r = y.to_vec();
+        for (k, &j) in cols.iter().enumerate() {
+            if beta[k] != 0.0 {
+                axpy(-beta[k], x.col(j), &mut r);
+            }
+        }
+        let sq: Vec<f64> = cols.iter().map(|&j| dot(x.col(j), x.col(j))).collect();
+        let y_scale = nrm2(y).max(1.0);
+        let mut epoch = 0;
+        let mut gap = f64::INFINITY;
+        while epoch < opts.max_iters {
+            let mut max_delta = 0.0f64;
+            for k in 0..m {
+                if sq[k] == 0.0 && self.gamma == 0.0 {
+                    continue;
+                }
+                let xj = x.col(cols[k]);
+                let old = beta[k];
+                let c = dot(xj, &r) + sq[k] * old;
+                let new = soft_threshold(c, lam) / (sq[k] + self.gamma);
+                if new != old {
+                    axpy(old - new, xj, &mut r);
+                    beta[k] = new;
+                    max_delta = max_delta.max((new - old).abs() * (sq[k] + self.gamma).sqrt());
+                }
+            }
+            epoch += 1;
+            if max_delta <= 1e-11 * y_scale || epoch % opts.gap_check_every == 0 {
+                gap = self.duality_gap(x, y, cols, &beta, &r, lam);
+                if gap <= opts.tol_gap {
+                    break;
+                }
+                if max_delta <= 1e-13 * y_scale {
+                    break;
+                }
+            }
+        }
+        if gap.is_infinite() {
+            gap = self.duality_gap(x, y, cols, &beta, &r, lam);
+        }
+        SolveResult { beta, iters: epoch, gap }
+    }
+
+    fn name(&self) -> &'static str {
+        "enet-cd"
+    }
+}
+
+impl EnetCdSolver {
+    /// Duality gap on the augmented Lasso: residual block is `(r, −√γ·β)`.
+    fn duality_gap(
+        &self,
+        x: &DenseMatrix,
+        y: &[f64],
+        cols: &[usize],
+        beta: &[f64],
+        r: &[f64],
+        lam: f64,
+    ) -> f64 {
+        let g = self.gamma;
+        // augmented correlations: x̃ⱼᵀr̃ = xⱼᵀr − γ·βⱼ
+        let mut xtr_inf = 0.0f64;
+        for (k, &j) in cols.iter().enumerate() {
+            xtr_inf = xtr_inf.max((dot(x.col(j), r) - g * beta[k]).abs());
+        }
+        let s = if xtr_inf <= lam || xtr_inf == 0.0 { 1.0 / lam } else { 1.0 / xtr_inf };
+        let bb = dot(beta, beta);
+        let rr = dot(r, r) + g * bb; // ‖r̃‖²
+        let ry = dot(r, y); // ỹ has a zero tail ⇒ ⟨r̃, ỹ⟩ = ⟨r, y⟩
+        let yy = dot(y, y);
+        // augmented primal ½‖r̃‖² + λ‖β‖₁ (the γ/2·‖β‖² lives inside ‖r̃‖²)
+        let primal = 0.5 * rr + lam * crate::linalg::nrm1(beta);
+        let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
+        let dual = 0.5 * yy - 0.5 * lam * lam * dist;
+        let scale = (0.5 * yy).max(1.0);
+        ((primal - dual) / scale).max(0.0)
+    }
+}
+
+/// EDPP screening for the elastic net on the augmented geometry. Given the
+/// exact solution `beta_prev` (full length) at `lam_prev`, fills `keep` for
+/// the problem at `lam`. Safe for any γ ≥ 0; γ = 0 matches Lasso EDPP.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_enet_edpp(
+    x: &DenseMatrix,
+    y: &[f64],
+    gamma: f64,
+    beta_prev: &[f64],
+    lam_prev: f64,
+    lam: f64,
+    lam_max: f64,
+    keep: &mut [bool],
+) {
+    let n = x.n_rows();
+    let p = x.n_cols();
+    assert_eq!(keep.len(), p);
+    // θ̃*(λ₀) blocks: top = r/λ₀, tail = −√γ·β/λ₀ (kept implicit as β/λ₀)
+    let mut r = y.to_vec();
+    for j in 0..p {
+        if beta_prev[j] != 0.0 {
+            axpy(-beta_prev[j], x.col(j), &mut r);
+        }
+    }
+    let sqg = gamma.sqrt();
+    let theta_top: Vec<f64> = r.iter().map(|v| v / lam_prev).collect();
+    let theta_tail: Vec<f64> = beta_prev.iter().map(|b| -sqg * b / lam_prev).collect();
+
+    // v1 = ỹ/λ₀ − θ̃₀ (interior case; at λ₀ = λ̃max fall back to the same ray
+    // since ỹ/λ₀ = θ̃₀ there makes v1 = 0 → use the argmax feature as in
+    // eq. (17); the augmented argmax feature has tail √γ·e_j)
+    let interior = lam_prev < lam_max * (1.0 - 1e-12);
+    let (v1_top, v1_tail): (Vec<f64>, Vec<f64>) = if interior {
+        (
+            (0..n).map(|i| y[i] / lam_prev - theta_top[i]).collect(),
+            theta_tail.iter().map(|t| -t).collect(),
+        )
+    } else {
+        // x̃* = (x*, √γ e_*)·sign(x*ᵀy)
+        let mut xty = vec![0.0; p];
+        x.gemv_t(y, &mut xty);
+        let (mut best, mut arg) = (0.0f64, 0usize);
+        for (j, v) in xty.iter().enumerate() {
+            if v.abs() > best {
+                best = v.abs();
+                arg = j;
+            }
+        }
+        let s = xty[arg].signum();
+        let mut tail = vec![0.0; p];
+        tail[arg] = s * sqg;
+        (x.col(arg).iter().map(|v| s * v).collect(), tail)
+    };
+    // v2 = ỹ/λ − θ̃₀
+    let v2_top: Vec<f64> = (0..n).map(|i| y[i] / lam - theta_top[i]).collect();
+    let v2_tail: Vec<f64> = theta_tail.iter().map(|t| -t).collect();
+    // v2⊥ over the stacked vectors
+    let ip = dot(&v1_top, &v2_top) + dot(&v1_tail, &v2_tail);
+    let v1v1 = dot(&v1_top, &v1_top) + dot(&v1_tail, &v1_tail);
+    let coef = if v1v1 > 0.0 && ip >= 0.0 { ip / v1v1 } else { 0.0 };
+    let perp_top: Vec<f64> =
+        v2_top.iter().zip(v1_top.iter()).map(|(b, a)| b - coef * a).collect();
+    let perp_tail: Vec<f64> =
+        v2_tail.iter().zip(v1_tail.iter()).map(|(b, a)| b - coef * a).collect();
+    let radius = 0.5
+        * (dot(&perp_top, &perp_top) + dot(&perp_tail, &perp_tail)).sqrt();
+    // center blocks
+    let center_top: Vec<f64> =
+        theta_top.iter().zip(perp_top.iter()).map(|(t, w)| t + 0.5 * w).collect();
+    let center_tail: Vec<f64> =
+        theta_tail.iter().zip(perp_tail.iter()).map(|(t, w)| t + 0.5 * w).collect();
+    // test per feature: |x̃ⱼᵀc̃| + ρ‖x̃ⱼ‖ ≥ 1
+    let mut scores = vec![0.0; p];
+    x.gemv_t(&center_top, &mut scores);
+    for j in 0..p {
+        let score = scores[j] + sqg * center_tail[j];
+        let norm = (dot(x.col(j), x.col(j)) + gamma).sqrt();
+        let sup = score.abs() + radius * norm;
+        keep[j] = sup >= 1.0 - 1e-9 * (1.0 + sup.abs());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::{cd::CdSolver, dual};
+    use crate::util::prop;
+
+    #[test]
+    fn gamma_zero_matches_lasso_cd() {
+        let ds = synthetic::synthetic1(25, 60, 8, 0.1, 1);
+        let cols: Vec<usize> = (0..60).collect();
+        let lam = 0.3 * dual::lambda_max(&ds.x, &ds.y);
+        let opts = SolveOptions { tol_gap: 1e-11, ..Default::default() };
+        let a = EnetCdSolver { gamma: 0.0 }.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        let b = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        for (x, y) in a.beta.iter().zip(b.beta.iter()) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn ridge_term_shrinks_coefficients() {
+        let ds = synthetic::synthetic1(30, 50, 6, 0.1, 2);
+        let cols: Vec<usize> = (0..50).collect();
+        let lam = 0.2 * dual::lambda_max(&ds.x, &ds.y);
+        let opts = SolveOptions::default();
+        let l1 = EnetCdSolver { gamma: 0.0 }.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        let en = EnetCdSolver { gamma: 5.0 }.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        let n1: f64 = l1.beta.iter().map(|b| b * b).sum();
+        let n2: f64 = en.beta.iter().map(|b| b * b).sum();
+        assert!(n2 < n1, "ridge term failed to shrink: {n2} !< {n1}");
+    }
+
+    #[test]
+    fn enet_kkt_via_augmented_gap() {
+        let ds = synthetic::synthetic2(30, 70, 8, 0.1, 3);
+        let cols: Vec<usize> = (0..70).collect();
+        let lam = 0.3 * dual::lambda_max(&ds.x, &ds.y);
+        let res = EnetCdSolver { gamma: 1.0 }.solve(
+            &ds.x,
+            &ds.y,
+            &cols,
+            lam,
+            None,
+            &SolveOptions::default(),
+        );
+        assert!(res.gap <= 1e-7, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn enet_edpp_is_safe_randomized() {
+        prop::check("enet EDPP safety", 0xE9E7, 10, |rng| {
+            let n = 15 + rng.usize(20);
+            let p = 20 + rng.usize(50);
+            let ds = synthetic::synthetic1(n, p, p / 5 + 1, 0.1, rng.next_u64());
+            let gamma = rng.uniform(0.0, 2.0);
+            let lam_max = dual::lambda_max(&ds.x, &ds.y);
+            let f1 = rng.uniform(0.35, 0.95);
+            let f2 = rng.uniform(0.1, f1 * 0.95);
+            let (lam0, lam) = (f1 * lam_max, f2 * lam_max);
+            let cols: Vec<usize> = (0..p).collect();
+            let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+            let solver = EnetCdSolver { gamma };
+            let prev = solver.solve(&ds.x, &ds.y, &cols, lam0, None, &opts).scatter(&cols, p);
+            let mut keep = vec![true; p];
+            screen_enet_edpp(&ds.x, &ds.y, gamma, &prev, lam0, lam, lam_max, &mut keep);
+            let exact = solver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, p);
+            for j in 0..p {
+                if !keep[j] {
+                    assert!(
+                        exact[j].abs() < 1e-9,
+                        "enet EDPP discarded active {j} (β={}, γ={gamma})",
+                        exact[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn enet_edpp_rejects_effectively() {
+        let ds = synthetic::synthetic1(40, 300, 15, 0.1, 5);
+        let lam_max = dual::lambda_max(&ds.x, &ds.y);
+        let cols: Vec<usize> = (0..300).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let solver = EnetCdSolver { gamma: 0.5 };
+        let prev = solver
+            .solve(&ds.x, &ds.y, &cols, 0.5 * lam_max, None, &opts)
+            .scatter(&cols, 300);
+        let mut keep = vec![true; 300];
+        screen_enet_edpp(&ds.x, &ds.y, 0.5, &prev, 0.5 * lam_max, 0.45 * lam_max, lam_max, &mut keep);
+        let rejected = keep.iter().filter(|k| !**k).count();
+        assert!(rejected > 200, "only rejected {rejected}/300");
+    }
+}

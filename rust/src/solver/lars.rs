@@ -1,0 +1,333 @@
+//! LARS with the Lasso modification (Efron et al. [15]) as a λ-homotopy:
+//! the solution path is piecewise linear in λ — on a segment with active set
+//! A and signs s, `β_A(λ) = u − λ·v` with `u = G⁻¹X_Aᵀy`, `v = G⁻¹s`,
+//! `G = X_AᵀX_A`. We walk knots (feature joins / sign-zero drops) downward
+//! from λmax until the target λ, exactly as the paper's §4.1.2 "EDPP with
+//! LARS" experiments require (LARS restarts per λ; screening shrinks p).
+//!
+//! The Cholesky factor of G is rank-1 *updated* on joins (O(k²)) and
+//! recomputed on the (rare) drops.
+
+use super::{dual, LassoSolver, SolveOptions, SolveResult};
+use crate::linalg::{dot, DenseMatrix};
+
+/// Lower-triangular Cholesky factor with append-column update.
+struct Chol {
+    l: Vec<Vec<f64>>, // row i holds L[i][0..=i]
+}
+
+impl Chol {
+    fn new() -> Self {
+        Chol { l: Vec::new() }
+    }
+
+    fn dim(&self) -> usize {
+        self.l.len()
+    }
+
+    /// Append a new variable with cross products `g = X_Aᵀx_new` (len k) and
+    /// `gamma = x_newᵀx_new`. Returns false if the new pivot is not positive
+    /// (numerically dependent column).
+    fn push(&mut self, g: &[f64], gamma: f64) -> bool {
+        let k = self.dim();
+        debug_assert_eq!(g.len(), k);
+        // solve L w = g by forward substitution
+        let mut w = vec![0.0; k];
+        for i in 0..k {
+            let mut s = g[i];
+            for j in 0..i {
+                s -= self.l[i][j] * w[j];
+            }
+            w[i] = s / self.l[i][i];
+        }
+        let pivot = gamma - dot(&w, &w);
+        if pivot <= 1e-12 {
+            return false;
+        }
+        w.push(pivot.sqrt());
+        self.l.push(w);
+        true
+    }
+
+    /// Solve G x = b (forward then backward substitution).
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let k = self.dim();
+        debug_assert_eq!(b.len(), k);
+        let mut y = vec![0.0; k];
+        for i in 0..k {
+            let mut s = b[i];
+            for j in 0..i {
+                s -= self.l[i][j] * y[j];
+            }
+            y[i] = s / self.l[i][i];
+        }
+        let mut x = vec![0.0; k];
+        for i in (0..k).rev() {
+            let mut s = y[i];
+            for j in i + 1..k {
+                s -= self.l[j][i] * x[j];
+            }
+            x[i] = s / self.l[i][i];
+        }
+        x
+    }
+
+    /// Rebuild from scratch for the given Gram matrix (used after drops).
+    fn rebuild(gram: &[Vec<f64>]) -> Option<Chol> {
+        let k = gram.len();
+        let mut c = Chol::new();
+        for i in 0..k {
+            let g: Vec<f64> = (0..i).map(|j| gram[i][j]).collect();
+            if !c.push(&g, gram[i][i]) {
+                return None;
+            }
+        }
+        Some(c)
+    }
+}
+
+/// LARS-Lasso homotopy solver.
+pub struct LarsSolver;
+
+impl LassoSolver for LarsSolver {
+    fn solve(
+        &self,
+        x: &DenseMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam_target: f64,
+        _beta0: Option<&[f64]>, // homotopy always starts at λmax
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let m = cols.len();
+        let mut beta = vec![0.0; m];
+        if m == 0 {
+            return SolveResult { beta, iters: 0, gap: 0.0 };
+        }
+        let n = x.n_rows();
+
+        // initial correlations c0 = Xᵀy over the subset
+        let mut c0 = vec![0.0; m];
+        x.gemv_t_subset(cols, y, &mut c0);
+        let (mut lam_cur, first) = c0
+            .iter()
+            .enumerate()
+            .map(|(k, v)| (v.abs(), k))
+            .fold((0.0, 0), |a, b| if b.0 > a.0 { b } else { a });
+        if lam_cur <= lam_target {
+            // target above λmax of the subset: zero solution
+            return SolveResult { beta, iters: 0, gap: 0.0 };
+        }
+
+        let mut active: Vec<usize> = vec![first]; // indices into cols
+        let mut signs: Vec<f64> = vec![c0[first].signum()];
+        let mut in_active = vec![false; m];
+        in_active[first] = true;
+        let mut chol = Chol::new();
+        chol.push(&[], dot(x.col(cols[first]), x.col(cols[first])));
+        let mut xty: Vec<f64> = vec![c0[first]];
+
+        let mut steps = 0usize;
+        let mut xa_u = vec![0.0; n];
+        let mut xa_v = vec![0.0; n];
+        let max_steps = opts.max_iters.min(4 * m + 16);
+
+        while steps < max_steps {
+            steps += 1;
+            let u = chol.solve(&xty);
+            let v = chol.solve(&signs);
+
+            // X_A u and X_A v (for inactive-feature event coefficients)
+            xa_u.fill(0.0);
+            xa_v.fill(0.0);
+            for (k, &a) in active.iter().enumerate() {
+                crate::linalg::axpy(u[k], x.col(cols[a]), &mut xa_u);
+                crate::linalg::axpy(v[k], x.col(cols[a]), &mut xa_v);
+            }
+
+            // next event: the largest λ < lam_cur among joins and drops
+            let tol = 1e-10 * (1.0 + lam_cur);
+            let mut lam_next = lam_target;
+            let mut event: Option<(bool, usize, f64)> = None; // (is_join, idx, sign)
+
+            // joins: |cⱼ(λ)| = λ with cⱼ(λ) = dⱼ + λ·aⱼ
+            for k in 0..m {
+                if in_active[k] {
+                    continue;
+                }
+                let xj = x.col(cols[k]);
+                let d = c0[k] - dot(xj, &xa_u);
+                let a = dot(xj, &xa_v);
+                for sgn in [1.0f64, -1.0] {
+                    // cⱼ(λ) = d + λ·a meets the boundary sgn·λ at
+                    // λ = d / (sgn − a)
+                    let denom = sgn - a;
+                    if denom.abs() < 1e-14 {
+                        continue;
+                    }
+                    let cand = d / denom;
+                    if cand < lam_cur - tol && cand > lam_next + tol {
+                        lam_next = cand;
+                        event = Some((true, k, sgn));
+                    }
+                }
+            }
+
+            // drops: β_k(λ) = u_k − λ·v_k = 0 ⇒ λ = u_k / v_k
+            for (k, &_a) in active.iter().enumerate() {
+                if v[k].abs() < 1e-14 {
+                    continue;
+                }
+                let cand = u[k] / v[k];
+                if cand < lam_cur - tol && cand > lam_next + tol {
+                    lam_next = cand;
+                    event = Some((false, k, 0.0));
+                }
+            }
+
+            // set β at λ_next on the current segment
+            for (k, &a) in active.iter().enumerate() {
+                beta[a] = u[k] - lam_next * v[k];
+            }
+            lam_cur = lam_next;
+
+            match event {
+                None => break, // reached λ_target
+                Some((true, k, sgn)) => {
+                    // join feature k with sign sgn
+                    let xk = x.col(cols[k]);
+                    let g: Vec<f64> =
+                        active.iter().map(|&a| dot(xk, x.col(cols[a]))).collect();
+                    if chol.push(&g, dot(xk, xk)) {
+                        active.push(k);
+                        signs.push(sgn);
+                        xty.push(c0[k]);
+                        in_active[k] = true;
+                        beta[k] = 0.0;
+                    }
+                    // if push failed the column is linearly dependent —
+                    // skip it (its correlation cannot exceed the active ones)
+                }
+                Some((false, k, _)) => {
+                    // drop active position k
+                    let a = active.remove(k);
+                    signs.remove(k);
+                    xty.remove(k);
+                    in_active[a] = false;
+                    beta[a] = 0.0;
+                    // rebuild the Cholesky for the reduced active set
+                    let gram: Vec<Vec<f64>> = active
+                        .iter()
+                        .map(|&ai| {
+                            active
+                                .iter()
+                                .map(|&aj| dot(x.col(cols[ai]), x.col(cols[aj])))
+                                .collect()
+                        })
+                        .collect();
+                    match Chol::rebuild(&gram) {
+                        Some(c) => chol = c,
+                        None => break, // should not happen; bail safely
+                    }
+                    if active.is_empty() {
+                        // re-seed from the current max correlation
+                        let mut best = (0.0f64, usize::MAX);
+                        for j in 0..m {
+                            if !in_active[j] && c0[j].abs() > best.0 {
+                                best = (c0[j].abs(), j);
+                            }
+                        }
+                        if best.1 == usize::MAX || best.0 <= lam_target {
+                            break;
+                        }
+                        let j = best.1;
+                        active.push(j);
+                        signs.push(c0[j].signum());
+                        xty.push(c0[j]);
+                        in_active[j] = true;
+                        chol = Chol::new();
+                        chol.push(&[], dot(x.col(cols[j]), x.col(cols[j])));
+                    }
+                }
+            }
+        }
+
+        // certify with the duality gap
+        let mut r = y.to_vec();
+        for (k, &j) in cols.iter().enumerate() {
+            if beta[k] != 0.0 {
+                crate::linalg::axpy(-beta[k], x.col(j), &mut r);
+            }
+        }
+        let gap = dual::duality_gap(x, y, cols, &beta, &r, lam_target);
+        SolveResult { beta, iters: steps, gap }
+    }
+
+    fn name(&self) -> &'static str {
+        "lars"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::soft_threshold;
+    use crate::solver::testutil::small_problem;
+    use crate::solver::{cd::CdSolver, SolveOptions};
+    use crate::util::prop;
+
+    #[test]
+    fn orthogonal_design_closed_form() {
+        let n = 5;
+        let mut rows = vec![vec![0.0; n]; n];
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        let x = DenseMatrix::from_rows(&rows);
+        let y = vec![3.0, -2.0, 0.7, 0.0, -5.0];
+        let cols: Vec<usize> = (0..n).collect();
+        let lam = 1.0;
+        let res = LarsSolver.solve(&x, &y, &cols, lam, None, &SolveOptions::default());
+        for (bi, yi) in res.beta.iter().zip(y.iter()) {
+            assert!((bi - soft_threshold(*yi, lam)).abs() < 1e-8, "{bi} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn matches_cd_on_random_problems() {
+        prop::check("LARS == CD objective", 0x1A45, 10, |rng| {
+            let n = 10 + rng.usize(20);
+            let p = 10 + rng.usize(30);
+            let (x, y, lam) = small_problem(rng.next_u64(), n, p, rng.uniform(0.1, 0.8));
+            let cols: Vec<usize> = (0..p).collect();
+            let opts = SolveOptions { tol_gap: 1e-11, ..Default::default() };
+            let b_lars = LarsSolver.solve(&x, &y, &cols, lam, None, &opts);
+            let b_cd = CdSolver.solve(&x, &y, &cols, lam, None, &opts);
+            let o_lars = dual::primal_objective(&x, &y, &cols, &b_lars.beta, lam);
+            let o_cd = dual::primal_objective(&x, &y, &cols, &b_cd.beta, lam);
+            let scale = o_cd.abs().max(1.0);
+            assert!(
+                (o_lars - o_cd).abs() < 1e-6 * scale,
+                "lars={o_lars} cd={o_cd} gap_lars={}",
+                b_lars.gap
+            );
+        });
+    }
+
+    #[test]
+    fn gap_certificate() {
+        let (x, y, lam) = small_problem(21, 40, 90, 0.25);
+        let cols: Vec<usize> = (0..90).collect();
+        let res = LarsSolver.solve(&x, &y, &cols, lam, None, &SolveOptions::default());
+        assert!(res.gap < 1e-8, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn above_lambda_max_zero() {
+        let (x, y, _) = small_problem(22, 20, 40, 1.0);
+        let lm = dual::lambda_max(&x, &y);
+        let cols: Vec<usize> = (0..40).collect();
+        let res = LarsSolver.solve(&x, &y, &cols, lm * 1.1, None, &SolveOptions::default());
+        assert!(res.beta.iter().all(|b| *b == 0.0));
+    }
+}

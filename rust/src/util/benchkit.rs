@@ -1,0 +1,177 @@
+//! Criterion-style bench harness (criterion is not available offline).
+//!
+//! Benches in `rust/benches/` are `harness = false` binaries that use
+//! [`Bench`] for warmup + timed iterations and [`Report`] to print
+//! paper-style markdown tables; `cargo bench` runs them all.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Timed micro-benchmark: warms up, then runs `iters` measured iterations.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, iters: 5 }
+    }
+}
+
+/// One measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub samples: usize,
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bench { warmup_iters, iters }
+    }
+
+    /// Run `f` with warmup and return timing statistics. `f` must not be
+    /// optimized away — return something and let the caller black-box it.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            mean_s: stats::mean(&times),
+            std_s: stats::std_dev(&times),
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            samples: times.len(),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Collects rows and renders a markdown table — used to print the same rows
+/// the paper's tables report, plus to append results to `results/*.md`.
+#[derive(Debug, Default)]
+pub struct Report {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Report {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render the table as markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Print to stdout and append to `results/<file>` (creating the dir).
+    pub fn emit(&self, file: &str) {
+        let md = self.to_markdown();
+        println!("{md}");
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{file}");
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let _ = f.write_all(md.as_bytes());
+        }
+    }
+}
+
+/// Format seconds with sensible precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let b = Bench::new(1, 3);
+        let m = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s);
+        assert_eq!(m.samples, 3);
+    }
+
+    #[test]
+    fn report_markdown_shape() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row_strs(&["1", "2"]);
+        let md = r.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn report_arity_checked() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(1.5), "1.50");
+        assert_eq!(fmt_secs(0.0015), "1.50ms");
+        assert_eq!(fmt_secs(2e-5), "20.0us");
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (clap is not available offline — DESIGN.md §3).
+//!
+//! Grammar: `dpp <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` options and bare `--flag`s (flags map to "true").
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(key) = t.strip_prefix("--") {
+                // --key=value, --key value, or bare --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("path --dataset pie --grid 100 --full");
+        assert_eq!(a.command.as_deref(), Some("path"));
+        assert_eq!(a.get("dataset"), Some("pie"));
+        assert_eq!(a.get_parse::<usize>("grid", 0), 100);
+        assert!(a.flag("full"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn equals_form_and_positionals() {
+        let a = parse("exp fig1 --trials=5 extra");
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig1", "extra"]);
+        assert_eq!(a.get_parse::<usize>("trials", 0), 5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --verbose --seed 9");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_parse::<u64>("seed", 0), 9);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_parse::<f64>("missing", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,34 @@
+//! Utility substrates: RNG, statistics, timing, CLI parsing, the bench
+//! harness, and the property-test driver.
+//!
+//! The build image has no network registry access and only the `xla` crate's
+//! dependency closure vendored, so `rand`, `clap`, `criterion`, and
+//! `proptest` are unavailable; these modules are the in-repo replacements
+//! (DESIGN.md §3 "Environment deviations").
+
+pub mod benchkit;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Read a scale knob from the environment.
+///
+/// `DPP_SCALE=full` makes dataset generators use the paper's exact shapes;
+/// anything else (default) uses scaled-down shapes that keep every bench
+/// minutes-scale on the 1-core image (DESIGN.md §4).
+pub fn full_scale() -> bool {
+    std::env::var("DPP_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+/// Number of trials for averaged experiments (paper uses 100; default here
+/// is small for CI-speed; override with `DPP_TRIALS`).
+pub fn n_trials(default: usize) -> usize {
+    std::env::var("DPP_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// λ-grid size (paper uses 100 points on λ/λmax ∈ [0.05, 1]).
+pub fn grid_size(default: usize) -> usize {
+    std::env::var("DPP_GRID").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

@@ -1,0 +1,77 @@
+//! Property-test driver (proptest is unavailable offline — DESIGN.md §3).
+//!
+//! A property is a closure over a seeded [`Rng`]; the driver runs it for many
+//! derived seeds and, on failure, reports the exact failing seed so the case
+//! is replayable with `check_one`.
+
+use super::rng::Rng;
+
+/// Run `cases` instances of `property`, each with an independent RNG derived
+/// from `base_seed`. Panics (with the failing seed) on the first failure.
+pub fn check(name: &str, base_seed: u64, cases: usize, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = derive_seed(base_seed, case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (used to debug a reported failure).
+pub fn check_one(seed: u64, mut property: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    property(&mut rng);
+}
+
+fn derive_seed(base: u64, case: u64) -> u64 {
+    // splitmix-style mix so adjacent cases are decorrelated
+    let mut z = base ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 25, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("always-fails", 2, 3, |_rng| panic!("boom"));
+        }));
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn derived_seeds_distinct() {
+        let a = derive_seed(1, 0);
+        let b = derive_seed(1, 1);
+        let c = derive_seed(2, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

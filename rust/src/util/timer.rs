@@ -1,0 +1,96 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// A simple stopwatch accumulating named phases — the path driver uses one
+/// to split screening time from solver time (the paper reports both).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and accumulate under `name`. Returns the closure value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Add `secs` to the phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            p.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    /// Accumulated seconds for `name` (0.0 if never recorded).
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Merge another timer's phases into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (n, s) in &other.phases {
+            self.add(n, *s);
+        }
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+}
+
+/// Time a single closure, returning (value, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.add("screen", 0.5);
+        t.add("solve", 1.0);
+        t.add("screen", 0.25);
+        assert!((t.get("screen") - 0.75).abs() < 1e-12);
+        assert!((t.total() - 1.75).abs() < 1e-12);
+        assert_eq!(t.get("missing"), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! CLI integration: drive the `dpp` binary end to end (env var
+//! `CARGO_BIN_EXE_dpp` is provided by cargo for integration tests).
+
+use std::process::Command;
+
+fn dpp() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dpp"))
+}
+
+#[test]
+fn info_lists_inventory() {
+    let out = dpp().arg("info").output().expect("spawn dpp");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("edpp"));
+    assert!(text.contains("synthetic1"));
+    assert!(text.contains("solvers:"));
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = dpp().output().expect("spawn dpp");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
+
+#[test]
+fn path_on_synthetic_reports_rejection() {
+    let out = dpp()
+        .args(["path", "--dataset", "synthetic1", "--grid", "8", "--seed", "3"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mean rejection ratio"), "{text}");
+}
+
+#[test]
+fn path_on_csv_file() {
+    // write a small CSV, run a path on it
+    let ds = dpp_screen::data::synthetic::synthetic1(20, 30, 4, 0.1, 5);
+    let dir = std::env::temp_dir().join("dpp-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.csv");
+    dpp_screen::data::io::write_csv(&ds, &path).unwrap();
+    let out = dpp()
+        .args(["path", "--file", path.to_str().unwrap(), "--grid", "5"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("20x30"));
+}
+
+#[test]
+fn bad_rule_or_dataset_fail_cleanly() {
+    let out = dpp().args(["path", "--dataset", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = dpp().args(["exp", "figZZ"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn group_command_runs() {
+    let out = dpp()
+        .args(["group", "--ngroups", "40", "--grid", "6"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("mean rejection"));
+}
+
+#[test]
+fn service_command_runs() {
+    let out = dpp()
+        .args(["service", "--requests", "5", "--dataset", "synthetic1"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("metrics:"));
+}

@@ -1,0 +1,133 @@
+//! Integration: pathwise driver × coordinator × dataset generators —
+//! the paper's experimental protocol end to end at test scale.
+
+use dpp_screen::coordinator::run_trials;
+use dpp_screen::data::{synthetic, RealDataset};
+use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::solver::SolveOptions;
+
+#[test]
+fn edpp_dominates_safe_on_simulated_real_data() {
+    // Fig. 4's qualitative claim at test scale: EDPP rejects far more than
+    // SAFE on every dataset family
+    for d in [RealDataset::BreastCancer, RealDataset::ColonCancer] {
+        let ds = d.generate(false, 11);
+        // sequential screening tightens with grid density (Remark 2); use a
+        // moderately dense grid as the paper's 100-point protocol does
+        let grid = LambdaGrid::relative(&ds.x, &ds.y, 30, 0.05, 1.0);
+        let cfg = PathConfig::default();
+        let safe = solve_path(&ds.x, &ds.y, &grid, RuleKind::Safe, SolverKind::Cd, &cfg);
+        let edpp = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        assert!(
+            edpp.mean_rejection_ratio() >= safe.mean_rejection_ratio(),
+            "{}: edpp {} < safe {}",
+            d.name(),
+            edpp.mean_rejection_ratio(),
+            safe.mean_rejection_ratio()
+        );
+        assert!(
+            edpp.mean_rejection_ratio() > 0.85,
+            "{}: edpp rejection only {}",
+            d.name(),
+            edpp.mean_rejection_ratio()
+        );
+    }
+}
+
+#[test]
+fn edpp_reduces_solver_work_massively() {
+    // the mechanism behind the paper's speedups: total kept features along
+    // the path is a small fraction of p × grid
+    let ds = RealDataset::Leukemia.generate(false, 5);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 12, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let edpp = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let kept: usize = edpp.records.iter().map(|r| r.kept).sum();
+    let total = ds.p() * edpp.records.len();
+    assert!(
+        (kept as f64) < 0.25 * total as f64,
+        "kept {kept}/{total} — screening ineffective"
+    );
+}
+
+#[test]
+fn trials_scheduler_composes_with_paths() {
+    // multi-trial protocol: deterministic per-seed results through the pool
+    let run = |seed: u64| {
+        let ds = synthetic::synthetic1(25, 80, 8, 0.1, seed);
+        let grid = LambdaGrid::relative(&ds.x, &ds.y, 5, 0.1, 1.0);
+        solve_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            &PathConfig::default(),
+        )
+        .mean_rejection_ratio()
+    };
+    let a = run_trials(4, 2, |t| run(100 + t as u64));
+    let b = run_trials(4, 1, |t| run(100 + t as u64));
+    assert_eq!(a, b, "trial results must be deterministic per seed");
+}
+
+#[test]
+fn group_path_protocol() {
+    // Fig. 6's qualitative claims at test scale: more groups (smaller
+    // groups) ⇒ higher rejection; EDPP ≥ strong in rejection
+    let opts = SolveOptions::default();
+    let mut prev_ratio = 0.0;
+    for ng in [20usize, 40, 80] {
+        let ds = synthetic::group_synthetic(40, 320, ng, 77);
+        let groups = ds.groups.clone().unwrap();
+        let (glm, _) =
+            dpp_screen::solver::dual::group_lambda_max(&ds.x, &ds.y, &groups);
+        let grid = LambdaGrid::relative_to(glm, 8, 0.1, 1.0);
+        let edpp =
+            solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::Edpp, &opts);
+        let ratio = edpp.mean_rejection_ratio();
+        assert!(
+            ratio >= prev_ratio - 0.15,
+            "rejection should trend up with n_g: {ratio} after {prev_ratio}"
+        );
+        prev_ratio = ratio;
+    }
+}
+
+#[test]
+fn solver_swap_invariance_of_rejection() {
+    // rejection ratios are a property of the rule, not the solver (§4.1.2
+    // "the rejection ratios of screening methods are irrelevant to the
+    // solvers")
+    let ds = synthetic::synthetic1(30, 100, 10, 0.1, 21);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 6, 0.1, 1.0);
+    let cfg = PathConfig::default();
+    let cd = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let fista = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Fista, &cfg);
+    let lars = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Lars, &cfg);
+    for ((a, b), c) in cd.records.iter().zip(&fista.records).zip(&lars.records) {
+        assert_eq!(a.kept, b.kept, "cd vs fista kept");
+        assert_eq!(a.kept, c.kept, "cd vs lars kept");
+    }
+}
+
+#[test]
+fn sis_with_kkt_repair_recovers_exactness() {
+    // SIS is aggressively wrong by design; the repair loop must fix it
+    let ds = synthetic::synthetic1(30, 100, 10, 0.1, 31);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 6, 0.1, 1.0);
+    let cfg = PathConfig::default();
+    let sis = solve_path(&ds.x, &ds.y, &grid, RuleKind::Sis, SolverKind::Cd, &cfg);
+    let reference = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+    for (bs, bb) in sis.betas.iter().zip(reference.betas.iter()) {
+        for j in 0..ds.p() {
+            assert!(
+                (bs[j] - bb[j]).abs() < 2e-4 * (1.0 + bb[j].abs()),
+                "SIS+repair diverged"
+            );
+        }
+    }
+    // and repairs must actually have fired at small λ
+    assert!(sis.total_kkt_repairs() > 0, "expected KKT repairs for SIS");
+}

@@ -1,0 +1,249 @@
+//! Integration: rust PJRT runtime × AOT artifacts (requires `make artifacts`).
+//!
+//! Verifies the whole interchange: jax/Pallas → HLO text → xla-crate compile
+//! → execute → numbers match the native f64 implementations within the
+//! documented f32 slack, and that screening through the artifact sweep stays
+//! *safe* end-to-end.
+
+use dpp_screen::data::synthetic;
+use dpp_screen::linalg::DenseMatrix;
+use dpp_screen::path::{solve_path_with_ctx, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::runtime::{ArtifactRuntime, ArtifactSweep};
+use dpp_screen::screening::{CorrelationSweep, ScreenContext};
+use dpp_screen::util::rng::Rng;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let rt = ArtifactRuntime::load_default();
+    if rt.is_none() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    rt
+}
+
+fn demo_matrix(n: usize, p: usize, seed: u64) -> (DenseMatrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0; n * p];
+    rng.fill_normal(&mut data);
+    let x = DenseMatrix::from_col_major(n, p, data);
+    let mut w = vec![0.0; n];
+    rng.fill_normal(&mut w);
+    (x, w)
+}
+
+fn to_row_major_f32(x: &DenseMatrix) -> Vec<f32> {
+    let (n, p) = (x.n_rows(), x.n_cols());
+    let mut out = vec![0f32; n * p];
+    for j in 0..p {
+        let c = x.col(j);
+        for i in 0..n {
+            out[i * p + j] = c[i] as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn xt_w_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (x, w) = demo_matrix(64, 256, 1);
+    let sweep = rt.sweep_for(&x).expect("xt_w artifact for 64x256");
+    let mut from_artifact = vec![0.0; 256];
+    sweep.xt_w(&w, &mut from_artifact);
+    let mut native = vec![0.0; 256];
+    x.gemv_t(&w, &mut native);
+    let scale = native.iter().fold(0.0f64, |m, v| m.max(v.abs())) + 1.0;
+    for j in 0..256 {
+        assert!(
+            (from_artifact[j] - native[j]).abs() < 1e-4 * scale,
+            "feature {j}: artifact {} vs native {}",
+            from_artifact[j],
+            native[j]
+        );
+    }
+}
+
+#[test]
+fn sweep_reusable_across_calls() {
+    // the matrix buffer stays resident; repeated sweeps must agree
+    let Some(rt) = runtime() else { return };
+    let (x, _) = demo_matrix(64, 256, 2);
+    let sweep = rt.sweep_for(&x).unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..5 {
+        let mut w = vec![0.0; 64];
+        rng.fill_normal(&mut w);
+        let mut a = vec![0.0; 256];
+        let mut b = vec![0.0; 256];
+        sweep.xt_w(&w, &mut a);
+        x.gemv_t(&w, &mut b);
+        let scale = b.iter().fold(0.0f64, |m, v| m.max(v.abs())) + 1.0;
+        for j in 0..256 {
+            assert!((a[j] - b[j]).abs() < 1e-4 * scale);
+        }
+    }
+}
+
+#[test]
+fn no_artifact_for_unknown_shape() {
+    let Some(rt) = runtime() else { return };
+    let (x, _) = demo_matrix(13, 17, 4);
+    assert!(rt.sweep_for(&x).is_none());
+}
+
+#[test]
+fn edpp_screen_artifact_matches_native_rule() {
+    // full-graph artifact (edpp_screen 64x256) vs the rust EDPP internals
+    let Some(rt) = runtime() else { return };
+    if !rt.has("edpp_screen", 64, 256) {
+        return;
+    }
+    let ds = synthetic::synthetic1(64, 256, 20, 0.1, 5);
+    let ctx = ScreenContext::new(&ds.x, &ds.y);
+    // interior-case anchor: exact solve at 0.6·λmax
+    use dpp_screen::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+    let cols: Vec<usize> = (0..256).collect();
+    let lam0 = 0.6 * ctx.lam_max;
+    let lam = 0.4 * ctx.lam_max;
+    let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+    let prev = CdSolver.solve(&ds.x, &ds.y, &cols, lam0, None, &opts).scatter(&cols, 256);
+    let theta = dpp_screen::screening::theta_from_solution(&ds.x, &ds.y, &prev, lam0);
+
+    // native EDPP pieces
+    let step = dpp_screen::screening::StepInput { lam_prev: lam0, lam, theta_prev: &theta };
+    let v1 = dpp_screen::screening::v1(&ctx, &step);
+    let v2 = dpp_screen::screening::v2(&ctx, &step);
+    let perp = dpp_screen::screening::v2_perp(&v1, &v2);
+    let native_radius = 0.5 * dpp_screen::linalg::nrm2(&perp);
+
+    // artifact inputs (f32, row-major X)
+    let (n, p) = (64usize, 256usize);
+    let x32 = to_row_major_f32(&ds.x);
+    let y32: Vec<f32> = ds.y.iter().map(|v| *v as f32).collect();
+    let th32: Vec<f32> = theta.iter().map(|v| *v as f32).collect();
+    let norms32: Vec<f32> = ctx.col_norms.iter().map(|v| *v as f32).collect();
+    let inv0 = [1.0f32 / lam0 as f32];
+    let invl = [1.0f32 / lam as f32];
+    let outs = rt
+        .execute_f32(
+            "edpp_screen",
+            n,
+            p,
+            &[
+                (&x32, vec![n, p]),
+                (&y32, vec![n]),
+                (&th32, vec![n]),
+                (&inv0, vec![]),
+                (&invl, vec![]),
+                (&norms32, vec![p]),
+            ],
+        )
+        .expect("edpp_screen execution");
+    assert_eq!(outs.len(), 3, "scores, radius, mask");
+    let scores = &outs[0];
+    let radius = outs[1][0] as f64;
+    let mask = &outs[2];
+    assert!(
+        (radius - native_radius).abs() < 1e-3 * (1.0 + native_radius),
+        "radius {radius} vs {native_radius}"
+    );
+    // native scores at the same center
+    let center: Vec<f64> =
+        theta.iter().zip(perp.iter()).map(|(t, w)| t + 0.5 * w).collect();
+    let mut native_scores = vec![0.0; p];
+    ds.x.gemv_t(&center, &mut native_scores);
+    let scale = native_scores.iter().fold(0.0f64, |m, v| m.max(v.abs())) + 1.0;
+    for j in 0..p {
+        assert!(
+            (scores[j] as f64 - native_scores[j]).abs() < 2e-4 * scale,
+            "score {j}"
+        );
+    }
+    // mask sanity: anything the artifact clearly discards must be a true zero
+    let exact = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, 256);
+    for j in 0..p {
+        let sup = (scores[j] as f64).abs() + radius * ctx.col_norms[j];
+        if mask[j] == 0.0 && sup < 1.0 - 1e-3 {
+            assert_eq!(exact[j], 0.0, "artifact mask unsafe at {j}");
+        }
+    }
+}
+
+#[test]
+fn fista_epoch_artifact_steps_match_native_objective() {
+    let Some(rt) = runtime() else { return };
+    if !rt.has("fista_epoch", 64, 256) {
+        return;
+    }
+    let ds = synthetic::synthetic1(64, 256, 20, 0.1, 6);
+    let ctx = ScreenContext::new(&ds.x, &ds.y);
+    let lam = 0.3 * ctx.lam_max;
+    let cols: Vec<usize> = (0..256).collect();
+    let lip = ds.x.op_norm_sq_subset(&cols, 40, 9) * 1.01;
+
+    let (n, p) = (64usize, 256usize);
+    let x32 = to_row_major_f32(&ds.x);
+    let y32: Vec<f32> = ds.y.iter().map(|v| *v as f32).collect();
+    let mut beta = vec![0f32; p];
+    let mut w = vec![0f32; p];
+    let mut t = 1.0f32;
+    for _ in 0..60 {
+        let outs = rt
+            .execute_f32(
+                "fista_epoch",
+                n,
+                p,
+                &[
+                    (&x32, vec![n, p]),
+                    (&y32, vec![n]),
+                    (&beta, vec![p]),
+                    (&w, vec![p]),
+                    (&[t], vec![]),
+                    (&[(1.0 / lip) as f32], vec![]),
+                    (&[lam as f32], vec![]),
+                ],
+            )
+            .expect("fista_epoch execution");
+        beta = outs[0].clone();
+        w = outs[1].clone();
+        t = outs[2][0];
+    }
+    // objective from the PJRT loop ≈ native CD optimum
+    use dpp_screen::solver::{cd::CdSolver, dual, LassoSolver, SolveOptions};
+    let beta64: Vec<f64> = beta.iter().map(|v| *v as f64).collect();
+    let obj_pjrt = dual::primal_objective(&ds.x, &ds.y, &cols, &beta64, lam);
+    let exact = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &SolveOptions::default());
+    let obj_cd = dual::primal_objective(&ds.x, &ds.y, &cols, &exact.beta, lam);
+    assert!(
+        obj_pjrt <= obj_cd * 1.05 + 1e-6,
+        "PJRT FISTA objective {obj_pjrt} vs CD {obj_cd}"
+    );
+}
+
+#[test]
+fn full_path_through_artifact_sweep_is_safe_and_exact() {
+    // end-to-end: EDPP path where every Xᵀw sweep runs through XLA
+    let Some(rt) = runtime() else { return };
+    let ds = synthetic::synthetic1(64, 256, 20, 0.1, 7);
+    let Some(sweep) = rt.sweep_for(&ds.x) else { return };
+    let ctx = ScreenContext::with_sweep_slack(
+        &ds.x,
+        &ds.y,
+        &sweep,
+        ArtifactSweep::SAFETY_SLACK,
+    );
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 20, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let out = solve_path_with_ctx(&ctx, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let native_ctx = ScreenContext::new(&ds.x, &ds.y);
+    let base = solve_path_with_ctx(&native_ctx, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+    for (bs, bb) in out.betas.iter().zip(base.betas.iter()) {
+        for j in 0..ds.p() {
+            assert!(
+                (bs[j] - bb[j]).abs() < 1e-4 * (1.0 + bb[j].abs()),
+                "artifact-swept path diverged at {j}"
+            );
+        }
+    }
+    // f32 safety slack + modest grid density cost a little rejection
+    assert!(out.mean_rejection_ratio() > 0.7, "ratio {}", out.mean_rejection_ratio());
+}

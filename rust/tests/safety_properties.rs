@@ -1,0 +1,202 @@
+//! Cross-module property suite: the paper's correctness claims, checked on
+//! randomized problems across every rule × dataset family (DESIGN.md §6).
+
+use dpp_screen::data::{synthetic, RealDataset};
+use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::screening::{
+    dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
+    edpp::Improvement2Rule, safe::SafeRule, theta_from_solution, ScreenContext,
+    ScreeningRule, StepInput,
+};
+use dpp_screen::solver::{cd::CdSolver, dual, LassoSolver, SolveOptions};
+use dpp_screen::util::prop;
+
+/// Every safe rule on every dataset family: a discarded feature is a true
+/// zero of the high-precision reference solution (the paper's Theorem 16
+/// correctness claim, and its analogues for each baseline).
+#[test]
+fn safe_rules_never_discard_active_features() {
+    let rules: Vec<(&str, Box<dyn ScreeningRule>)> = vec![
+        ("safe", Box::new(SafeRule)),
+        ("dpp", Box::new(DppRule)),
+        ("imp1", Box::new(Improvement1Rule)),
+        ("imp2", Box::new(Improvement2Rule)),
+        ("edpp", Box::new(EdppRule)),
+    ];
+    prop::check("safe rules on mixed generators", 0x5AFE7, 8, |rng| {
+        let pick = rng.usize(4);
+        let mut ds = match pick {
+            0 => synthetic::synthetic1(20 + rng.usize(20), 40 + rng.usize(60), 8, 0.1, rng.next_u64()),
+            1 => synthetic::synthetic2(20 + rng.usize(20), 40 + rng.usize(60), 8, 0.1, rng.next_u64()),
+            2 => RealDataset::ColonCancer.generate(false, rng.next_u64()),
+            _ => RealDataset::BreastCancer.generate(false, rng.next_u64()),
+        };
+        if pick >= 2 {
+            // keep the real-sim problems small enough for a tight loop
+            ds.normalize_features();
+        }
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let f1 = rng.uniform(0.4, 1.0);
+        let f2 = rng.uniform(0.1, f1 * 0.95);
+        let (lam0, lam) = (f1 * ctx.lam_max, f2 * ctx.lam_max);
+        let p = ds.p();
+        let cols: Vec<usize> = (0..p).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let prev = CdSolver.solve(&ds.x, &ds.y, &cols, lam0, None, &opts).scatter(&cols, p);
+        let theta = theta_from_solution(&ds.x, &ds.y, &prev, lam0);
+        let exact = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, p);
+        let step = StepInput { lam_prev: lam0, lam, theta_prev: &theta };
+        for (name, rule) in &rules {
+            let mut keep = vec![true; p];
+            rule.screen(&ctx, &step, &mut keep);
+            for j in 0..p {
+                if !keep[j] {
+                    assert_eq!(
+                        exact[j], 0.0,
+                        "{name} discarded active feature {j} (β={})",
+                        exact[j]
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// DOME on unit-norm problems (its required preconditioning).
+#[test]
+fn dome_safe_on_unit_norm_problems() {
+    prop::check("dome basic safety", 0xD0ED, 8, |rng| {
+        let seed = rng.next_u64();
+        let mut ds = synthetic::synthetic2(25 + rng.usize(15), 50 + rng.usize(50), 10, 0.1, seed);
+        ds.normalize_features();
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = rng.uniform(0.1, 0.9) * ctx.lam_max;
+        let p = ds.p();
+        let theta_max: Vec<f64> = ds.y.iter().map(|v| v / ctx.lam_max).collect();
+        let step = StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta_max };
+        let mut keep = vec![true; p];
+        DomeRule::default().screen(&ctx, &step, &mut keep);
+        let cols: Vec<usize> = (0..p).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let exact = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, p);
+        for j in 0..p {
+            if !keep[j] {
+                assert_eq!(exact[j], 0.0, "dome discarded active {j}");
+            }
+        }
+    });
+}
+
+/// Full paths: screened (safe or repaired-heuristic) solutions equal the
+/// unscreened reference along the whole grid, for every rule × solver.
+#[test]
+fn screened_paths_reproduce_reference_solutions() {
+    let ds = synthetic::synthetic1(40, 160, 14, 0.1, 0xBEEF);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 8, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let reference = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+    for rule in [
+        RuleKind::Safe,
+        RuleKind::Dpp,
+        RuleKind::Improvement1,
+        RuleKind::Improvement2,
+        RuleKind::Edpp,
+        RuleKind::Strong,
+    ] {
+        let out = solve_path(&ds.x, &ds.y, &grid, rule, SolverKind::Cd, &cfg);
+        for (k, (bs, bb)) in out.betas.iter().zip(reference.betas.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (bs[j] - bb[j]).abs() < 2e-4 * (1.0 + bb[j].abs()),
+                    "{} diverged at λ-index {k}, feature {j}",
+                    rule.name()
+                );
+            }
+        }
+    }
+}
+
+/// λmax boundary behaviour (paper eq. (7)–(9)): zero solution above λmax,
+/// θ*(λmax) = y/λmax, and every rule discards everything at λ ≥ λmax.
+#[test]
+fn lambda_max_boundary() {
+    prop::check("λmax boundary", 0x1AB, 10, |rng| {
+        let ds = synthetic::synthetic1(
+            10 + rng.usize(30),
+            20 + rng.usize(60),
+            6,
+            0.1,
+            rng.next_u64(),
+        );
+        let lam_max = dual::lambda_max(&ds.x, &ds.y);
+        let cols: Vec<usize> = (0..ds.p()).collect();
+        let res = CdSolver.solve(
+            &ds.x,
+            &ds.y,
+            &cols,
+            lam_max * (1.0 + 1e-9),
+            None,
+            &SolveOptions::default(),
+        );
+        assert!(res.beta.iter().all(|b| *b == 0.0));
+    });
+}
+
+/// The dominance chain holds along full paths, not just single steps:
+/// mean rejection EDPP ≥ Imp1, Imp2 ≥ DPP ≥ nothing.
+#[test]
+fn rejection_dominance_along_paths() {
+    let ds = synthetic::synthetic2(35, 140, 12, 0.1, 0xCAFE);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 10, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let mean = |rule| {
+        solve_path(&ds.x, &ds.y, &grid, rule, SolverKind::Cd, &cfg).mean_rejection_ratio()
+    };
+    let dpp = mean(RuleKind::Dpp);
+    let i1 = mean(RuleKind::Improvement1);
+    let i2 = mean(RuleKind::Improvement2);
+    let edpp = mean(RuleKind::Edpp);
+    assert!(i1 >= dpp - 1e-9, "imp1 {i1} < dpp {dpp}");
+    assert!(i2 >= dpp - 1e-9, "imp2 {i2} < dpp {dpp}");
+    assert!(edpp >= i1 - 1e-9, "edpp {edpp} < imp1 {i1}");
+    assert!(edpp >= i2 - 1e-9, "edpp {edpp} < imp2 {i2}");
+}
+
+/// Failure injection: feed the path driver a grid that dips below and then
+/// jumps back above λmax — records must stay consistent (trivial steps).
+#[test]
+fn non_monotone_grid_handled() {
+    let ds = synthetic::synthetic1(20, 60, 6, 0.1, 0xF00D);
+    let lam_max = dual::lambda_max(&ds.x, &ds.y);
+    let grid = LambdaGrid {
+        lam_max,
+        values: vec![lam_max * 2.0, lam_max, 0.5 * lam_max, lam_max * 1.5, 0.3 * lam_max],
+    };
+    let out = solve_path(
+        &ds.x,
+        &ds.y,
+        &grid,
+        RuleKind::Edpp,
+        SolverKind::Cd,
+        &PathConfig::default(),
+    );
+    assert_eq!(out.records.len(), 5);
+    // λ ≥ λmax steps are trivial
+    assert!(out.betas[0].iter().all(|b| *b == 0.0));
+    assert!(out.betas[3].iter().all(|b| *b == 0.0));
+    // the small-λ steps are exact
+    let cols: Vec<usize> = (0..60).collect();
+    let exact = CdSolver
+        .solve(
+            &ds.x,
+            &ds.y,
+            &cols,
+            0.3 * lam_max,
+            None,
+            &SolveOptions { tol_gap: 1e-12, ..Default::default() },
+        )
+        .scatter(&cols, 60);
+    for j in 0..60 {
+        assert!((out.betas[4][j] - exact[j]).abs() < 2e-4 * (1.0 + exact[j].abs()));
+    }
+}
