@@ -1,9 +1,16 @@
 //! Quickstart: solve a Lasso path with EDPP screening and inspect the two
 //! paper metrics (rejection ratio, speedup).
 //!
+//! Every entry point (`LambdaGrid::relative`, `solve_path`,
+//! `ScreenContext::new`, `LassoSolver::solve`) takes `&dyn DesignMatrix`,
+//! so `&ds.x` (dense) and `&CscMatrix` are interchangeable — see
+//! `examples/sparse_bigp.rs` for the sparse-backend version of this demo
+//! and DESIGN.md §2 for the trait contract.
+//!
 //!     cargo run --release --example quickstart
 
 use dpp_screen::data::synthetic;
+use dpp_screen::linalg::CscMatrix;
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 
 fn main() {
@@ -19,6 +26,17 @@ fn main() {
     // Screened path (sequential EDPP, Corollary 17) vs unscreened baseline.
     let edpp = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
     let base = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+
+    // The same protocol on the sparse backend — identical API, same
+    // screening behaviour (the exact dense/CSC parity properties live in
+    // rust/tests/backend_parity.rs; here we just demo the call).
+    let csc = CscMatrix::from_dense(&ds.x);
+    let sparse = solve_path(&csc, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    println!(
+        "csc backend: mean rejection {:.4} (dense {:.4})",
+        sparse.mean_rejection_ratio(),
+        edpp.mean_rejection_ratio()
+    );
 
     println!("\n  λ/λmax   kept  discarded  rejection");
     for r in edpp.records.iter().step_by(10) {

@@ -10,9 +10,8 @@
 //! Run: `cargo bench --bench ablations` → results/ablations.md
 
 use dpp_screen::data::synthetic;
-use dpp_screen::linalg::CscMatrix;
+use dpp_screen::linalg::{CscMatrix, DesignMatrix};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
-use dpp_screen::screening::CorrelationSweep;
 use dpp_screen::solver::dual;
 use dpp_screen::solver::enet::{screen_enet_edpp, EnetCdSolver};
 use dpp_screen::solver::{LassoSolver, SolveOptions};

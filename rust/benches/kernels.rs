@@ -3,18 +3,18 @@
 //! · native gemv_t (unrolled) vs a naive per-column loop — L3 ablation
 //! · full EDPP screen step vs one bare sweep — the "screening overhead ≤
 //!   1.3× one sweep" target of DESIGN.md §7
+//! · dense vs CSC backend for the sweep and a full EDPP path — the
+//!   `DesignMatrix` backend ablation
 //! · PJRT artifact sweep vs native — the AOT-vs-native ablation
 //! · end-to-end screened vs unscreened path at bench scale
 //!
 //! Run: `cargo bench --bench kernels` (results appended to results/perf.md)
 
 use dpp_screen::data::synthetic;
-use dpp_screen::linalg::{dot, DenseMatrix};
+use dpp_screen::linalg::{dot, CscMatrix, DenseMatrix, DesignMatrix};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 use dpp_screen::runtime::ArtifactRuntime;
-use dpp_screen::screening::{
-    edpp::EdppRule, CorrelationSweep, ScreenContext, ScreeningRule, StepInput,
-};
+use dpp_screen::screening::{edpp::EdppRule, ScreenContext, ScreeningRule, StepInput};
 use dpp_screen::util::benchkit::{black_box, Bench, Report};
 use dpp_screen::util::rng::Rng;
 
@@ -89,6 +89,83 @@ fn main() {
         format!("{:.3}ms", m_edpp.std_s * 1e3),
         format!("{:.2}x one sweep", m_edpp.mean_s / m_sweep.mean_s),
     ]);
+
+    // --- DesignMatrix backends: dense vs CSC on sparse data ---
+    {
+        // stroke-like 10%-dense data at the same representative shape
+        let mut srng = Rng::new(5);
+        let mut xs = DenseMatrix::zeros(n, p);
+        for j in 0..p {
+            for v in xs.col_mut(j).iter_mut() {
+                if srng.f64() < 0.10 {
+                    *v = srng.normal();
+                }
+            }
+        }
+        let csc = CscMatrix::from_dense(&xs);
+        let mut ws = vec![0.0; n];
+        srng.fill_normal(&mut ws);
+        let m_dense = bench.run("sweep dense backend", || {
+            DesignMatrix::xt_w(&xs, &ws, &mut out);
+            black_box(out[0])
+        });
+        let m_csc = bench.run("sweep csc backend", || {
+            DesignMatrix::xt_w(&csc, &ws, &mut out);
+            black_box(out[0])
+        });
+        rep.row(&[
+            format!("xt_w dense {n}x{p} (10% fill)"),
+            format!("{:.3}ms", m_dense.mean_s * 1e3),
+            format!("{:.3}ms", m_dense.min_s * 1e3),
+            format!("{:.3}ms", m_dense.std_s * 1e3),
+            "1.00x".into(),
+        ]);
+        rep.row(&[
+            format!("xt_w csc {n}x{p} (10% fill)"),
+            format!("{:.3}ms", m_csc.mean_s * 1e3),
+            format!("{:.3}ms", m_csc.min_s * 1e3),
+            format!("{:.3}ms", m_csc.std_s * 1e3),
+            format!("{:.2}x dense", m_dense.mean_s / m_csc.mean_s),
+        ]);
+        // full EDPP path on each backend — same protocol, different kernels
+        let mut beta = vec![0.0; p];
+        for j in (0..p).step_by(p / 24 + 1) {
+            beta[j] = srng.normal();
+        }
+        let mut ys = vec![0.0; n];
+        DesignMatrix::gemv(&xs, &beta, &mut ys);
+        for v in ys.iter_mut() {
+            *v += 0.05 * srng.normal();
+        }
+        let sgrid = LambdaGrid::relative(&xs, &ys, 10, 0.1, 1.0);
+        let quick = Bench::new(1, 3);
+        let m_pd = quick.run("edpp path dense backend", || {
+            black_box(
+                solve_path(&xs, &ys, &sgrid, RuleKind::Edpp, SolverKind::Cd, &PathConfig::default())
+                    .total_secs(),
+            )
+        });
+        let m_pc = quick.run("edpp path csc backend", || {
+            black_box(
+                solve_path(&csc, &ys, &sgrid, RuleKind::Edpp, SolverKind::Cd, &PathConfig::default())
+                    .total_secs(),
+            )
+        });
+        rep.row(&[
+            format!("10-λ EDPP path dense (10% fill)"),
+            format!("{:.3}s", m_pd.mean_s),
+            format!("{:.3}s", m_pd.min_s),
+            format!("{:.3}s", m_pd.std_s),
+            "1.00x".into(),
+        ]);
+        rep.row(&[
+            format!("10-λ EDPP path csc (10% fill)"),
+            format!("{:.3}s", m_pc.mean_s),
+            format!("{:.3}s", m_pc.min_s),
+            format!("{:.3}s", m_pc.std_s),
+            format!("{:.2}x dense", m_pd.mean_s / m_pc.mean_s),
+        ]);
+    }
 
     // --- PJRT artifact sweep vs native, small AND large shapes ---
     if let Some(rt) = ArtifactRuntime::load_default() {

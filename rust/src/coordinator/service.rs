@@ -16,7 +16,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::metrics::ServiceMetrics;
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 use crate::path::{PathConfig, RuleKind, SolverKind};
 use crate::screening::{theta_from_solution, ScreenContext, ScreeningRule, StepInput};
 use crate::solver::LassoSolver;
@@ -50,9 +50,22 @@ pub struct ScreeningService {
 }
 
 impl ScreeningService {
-    /// Spawn the service worker owning `x`, `y`.
-    pub fn spawn(
-        x: DenseMatrix,
+    /// Spawn the service worker owning `x`, `y`. Accepts any matrix backend
+    /// (dense, CSC, …) — one service binary handles them all.
+    pub fn spawn<M: DesignMatrix + Send + 'static>(
+        x: M,
+        y: Vec<f64>,
+        rule: RuleKind,
+        solver: SolverKind,
+        cfg: PathConfig,
+    ) -> ScreeningService {
+        Self::spawn_boxed(Box::new(x), y, rule, solver, cfg)
+    }
+
+    /// Spawn from an already-boxed backend (the CLI picks dense/CSC at
+    /// runtime and hands the box over directly).
+    pub fn spawn_boxed(
+        x: Box<dyn DesignMatrix + Send>,
         y: Vec<f64>,
         rule: RuleKind,
         solver: SolverKind,
@@ -100,14 +113,15 @@ impl Drop for ScreeningService {
 }
 
 fn worker_loop(
-    x: DenseMatrix,
+    x: Box<dyn DesignMatrix + Send>,
     y: Vec<f64>,
     rule_kind: RuleKind,
     solver_kind: SolverKind,
     cfg: PathConfig,
     rx: Receiver<Msg>,
 ) {
-    let ctx = ScreenContext::new(&x, &y);
+    let x: &dyn DesignMatrix = &*x;
+    let ctx = ScreenContext::new(x, &y);
     let rule: Option<Box<dyn ScreeningRule>> = match rule_kind {
         RuleKind::None => None,
         RuleKind::Edpp => Some(Box::new(crate::screening::edpp::EdppRule)),
@@ -174,7 +188,7 @@ fn worker_loop(
                 let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
                 let res = loop {
                     let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
-                    let r = solver.solve(&x, &y, &cols, lam, Some(&warm), &cfg.solve_opts);
+                    let r = solver.solve(x, &y, &cols, lam, Some(&warm), &cfg.solve_opts);
                     if is_safe || !cfg.kkt_repair {
                         break r;
                     }
@@ -182,7 +196,7 @@ fn worker_loop(
                     let mut resid = y.to_vec();
                     for (j, b) in full.iter().enumerate() {
                         if *b != 0.0 {
-                            crate::linalg::axpy(-b, x.col(j), &mut resid);
+                            x.col_axpy_into(j, -b, &mut resid);
                         }
                     }
                     let viol =
@@ -200,7 +214,7 @@ fn worker_loop(
                 let discarded = p - keep.iter().filter(|k| **k).count();
                 // advance state if this is the deepest λ seen
                 if lam < lam_state {
-                    theta_state = theta_from_solution(&x, &y, &beta, lam);
+                    theta_state = theta_from_solution(x, &y, &beta, lam);
                     lam_state = lam;
                     beta_state = beta.clone();
                 }

@@ -8,14 +8,24 @@
 //! the scaled-down shapes of `RealDataset::small_shape` so the whole suite
 //! is minutes-scale on one core. `DPP_TRIALS` / `DPP_GRID` override the
 //! trial count and λ-grid size (paper: 100 trials / 100-point grid).
+//! `DPP_MATRIX=csc` runs every Lasso path through the sparse CSC backend
+//! instead of the dense one (the rules/solvers are backend-generic, so the
+//! numbers must match; only the runtimes differ).
 
 use crate::coordinator::run_trials;
 use crate::data::{synthetic, Dataset, RealDataset};
+use crate::linalg::{CscMatrix, DesignMatrix};
 use crate::path::group::{solve_group_path, GroupRuleKind};
 use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
 use crate::solver::SolveOptions;
 use crate::util::benchkit::Report;
 use crate::util::{full_scale, grid_size, n_trials};
+
+/// Whether the experiment harness should run Lasso paths on the CSC
+/// backend (`DPP_MATRIX=csc`; default dense).
+fn use_csc_backend() -> bool {
+    std::env::var("DPP_MATRIX").map(|v| v == "csc").unwrap_or(false)
+}
 
 /// Dispatch an experiment by name.
 pub fn run(which: &str) {
@@ -70,14 +80,20 @@ fn run_rules(
 ) -> (Vec<LassoRun>, f64, Vec<Vec<f64>>) {
     let cfg = PathConfig { sequential, ..Default::default() };
     let workers = crate::coordinator::default_workers();
+    let csc = use_csc_backend();
     // per-trial: baseline time + per-rule outputs
     let per_trial = run_trials(trials, workers, |t| {
         let ds = make_ds(1000 + t as u64);
+        let sparse = if csc { Some(CscMatrix::from_dense(&ds.x)) } else { None };
+        let x: &dyn DesignMatrix = match &sparse {
+            Some(m) => m,
+            None => &ds.x,
+        };
         let grid = paper_grid(&ds, k);
-        let base = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, solver, &cfg);
+        let base = solve_path(x, &ds.y, &grid, RuleKind::None, solver, &cfg);
         let outs: Vec<PathOutput> = rules
             .iter()
-            .map(|&r| solve_path(&ds.x, &ds.y, &grid, r, solver, &cfg))
+            .map(|&r| solve_path(x, &ds.y, &grid, r, solver, &cfg))
             .collect();
         (base.total_secs(), outs)
     });

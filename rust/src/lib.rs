@@ -22,10 +22,18 @@
 //! * **PJRT runtime** ([`runtime`]): loads AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
-//! * **Substrates**: dense linear algebra ([`linalg`]), dataset generators
-//!   matching the paper's synthetic and (simulated) real datasets ([`data`]),
-//!   and utilities ([`util`]) — RNG, stats, CLI, bench harness, property
+//! * **Substrates**: the matrix-free [`linalg::DesignMatrix`] trait with its
+//!   dense and CSC backends ([`linalg`]), dataset generators matching the
+//!   paper's synthetic and (simulated) real datasets ([`data`]), and
+//!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
 //!   testing — hand-rolled because the build image is offline (DESIGN.md §3).
+//!
+//! Every rule, solver, path driver and the service is generic over
+//! [`linalg::DesignMatrix`] (`&dyn DesignMatrix` / `Box<dyn DesignMatrix +
+//! Send>`), so the same code runs the paper's protocol on a dense matrix or
+//! a [`linalg::CscMatrix`] without densifying — the paper's own motivation
+//! (§1: at MNIST/SVHN scale "we may not even be able to load the data
+//! matrix into main memory"). See DESIGN.md §2 for the trait contract.
 //!
 //! ## Quickstart
 //!
@@ -36,9 +44,16 @@
 //! let ds = dpp_screen::data::synthetic::synthetic1(64, 256, 16, 0.1, 7);
 //! let grid = LambdaGrid::relative(&ds.x, &ds.y, 20, 0.05, 1.0);
 //! let cfg = PathConfig::default();
+//! // `solve_path` takes `&dyn DesignMatrix`: pass `&ds.x` (dense) or a
+//! // `&CscMatrix` interchangeably.
 //! let out = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
 //! // EDPP is safe: every rejection is a true zero of the reference solution.
 //! assert!(out.mean_rejection_ratio() <= 1.0 + 1e-12);
+//!
+//! // The identical protocol on the sparse backend, no densify round-trip:
+//! let csc = CscMatrix::from_dense(&ds.x);
+//! let sparse_out = solve_path(&csc, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+//! assert_eq!(out.records.len(), sparse_out.records.len());
 //! ```
 
 pub mod coordinator;
@@ -54,7 +69,7 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::data::Dataset;
-    pub use crate::linalg::DenseMatrix;
+    pub use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
     pub use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
     pub use crate::screening::{ScreenContext, ScreeningRule};
     pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};

@@ -1,0 +1,250 @@
+//! The matrix-free `DesignMatrix` abstraction (DESIGN.md §2).
+//!
+//! Every screening rule in the paper is stated in terms of two primitives —
+//! the correlation sweep `Xᵀw` and per-column inner products — never element
+//! access, and every solver substrate adds only column-local axpy/dot
+//! updates. `DesignMatrix` captures exactly that contract, so screening,
+//! solvers, path drivers, and the service run unchanged over a dense
+//! column-major matrix, a CSC sparse matrix, or any future out-of-core /
+//! sharded backend. The paper's §1 motivation ("we may not even be able to
+//! load the data matrix into main memory") is the reason the contract is
+//! matrix-free: nothing in the rule/solver layers may assume O(1) element
+//! access or a materialized column slice.
+//!
+//! Required methods are the minimal per-backend kernels; everything else
+//! (subset sweeps, accumulation, power iteration, column norms) has a
+//! default implementation built on them. Backends override defaults only
+//! when a faster fused kernel exists (e.g. the 8-way unrolled dense sweep).
+
+use super::ops::{nrm2, scale};
+
+/// Matrix-free view of the N×p feature matrix X.
+///
+/// Object safe: the screening context, solvers and the service hold
+/// `&dyn DesignMatrix` / `Box<dyn DesignMatrix + Send>`.
+pub trait DesignMatrix {
+    /// N — number of samples (rows).
+    fn n_rows(&self) -> usize;
+
+    /// p — number of features (columns).
+    fn n_cols(&self) -> usize;
+
+    /// Correlation sweep: `out[j] = xⱼᵀ w` for every column j. The O(nnz)
+    /// hot spot of every screening rule.
+    fn xt_w(&self, w: &[f64], out: &mut [f64]);
+
+    /// `xⱼᵀ w` for a single column (coordinate-descent inner step).
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64;
+
+    /// `out += a·xⱼ` (scatter-axpy; residual updates).
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]);
+
+    /// `‖xⱼ‖²`.
+    fn col_sq_norm(&self, j: usize) -> f64;
+
+    /// Gram entry `xᵢᵀxⱼ` (LARS Cholesky updates).
+    fn col_dot_col(&self, i: usize, j: usize) -> f64;
+
+    /// Densify column j into `out` (length N, overwritten). Used only on
+    /// O(1)-many columns per path (the λmax-attaining feature of eq. (17)),
+    /// never inside per-feature loops.
+    fn col_into(&self, j: usize, out: &mut [f64]);
+
+    /// Gather a row subset of column j: `out[k] = X[rows[k], j]`
+    /// (row-subsampling workloads — stability selection, CV folds).
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]);
+
+    /// Stored entries (dense: N·p; sparse: actual non-zeros).
+    fn nnz(&self) -> usize;
+
+    /// Fill fraction `nnz / (N·p)`.
+    fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows() * self.n_cols()).max(1) as f64
+    }
+
+    /// ℓ2 norm of every column.
+    fn col_norms(&self) -> Vec<f64> {
+        (0..self.n_cols()).map(|j| self.col_sq_norm(j).sqrt()).collect()
+    }
+
+    /// Like [`DesignMatrix::xt_w`] but only over the listed columns
+    /// (screened / reduced problems).
+    fn xt_w_subset(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        for (k, &j) in cols.iter().enumerate() {
+            out[k] = self.col_dot_w(j, w);
+        }
+    }
+
+    /// `out += Σₖ betaₖ·x_{cols[k]}` — how solvers materialize Xβ for a
+    /// reduced β.
+    fn accum_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), beta.len());
+        assert_eq!(out.len(), self.n_rows());
+        for (k, &j) in cols.iter().enumerate() {
+            if beta[k] != 0.0 {
+                self.col_axpy_into(j, beta[k], out);
+            }
+        }
+    }
+
+    /// Dense `out = Xβ` for a full-length β (tests / reference use).
+    fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.n_cols());
+        assert_eq!(out.len(), self.n_rows());
+        out.fill(0.0);
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                self.col_axpy_into(j, b, out);
+            }
+        }
+    }
+
+    /// Spectral-norm upper bound `‖X[:,cols]‖²` via power iteration on the
+    /// restricted XᵀX (FISTA step sizes, group Lipschitz constants).
+    fn op_norm_sq_subset(&self, cols: &[usize], iters: usize, seed: u64) -> f64 {
+        if cols.is_empty() {
+            return 0.0;
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut v: Vec<f64> = (0..cols.len()).map(|_| rng.normal()).collect();
+        let nv = nrm2(&v);
+        if nv == 0.0 {
+            return 0.0;
+        }
+        scale(1.0 / nv, &mut v);
+        let mut xb = vec![0.0; self.n_rows()];
+        let mut w = vec![0.0; cols.len()];
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            xb.fill(0.0);
+            self.accum_cols(cols, &v, &mut xb);
+            self.xt_w_subset(cols, &xb, &mut w);
+            lam = nrm2(&w);
+            if lam == 0.0 {
+                return 0.0;
+            }
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi / lam;
+            }
+        }
+        lam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CscMatrix, DenseMatrix};
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_sparse(n: usize, p: usize, density: f64, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut x = DenseMatrix::zeros(n, p);
+        for j in 0..p {
+            for v in x.col_mut(j).iter_mut() {
+                if rng.f64() < density {
+                    *v = rng.normal();
+                }
+            }
+        }
+        x
+    }
+
+    /// Every trait method must agree between the dense backend and the CSC
+    /// backend built from the same data — the contract the whole crate
+    /// relies on after the matrix-free redesign.
+    #[test]
+    fn dense_and_csc_agree_on_all_ops() {
+        prop::check("DesignMatrix dense == csc", 0xDE51, 15, |rng| {
+            let n = 2 + rng.usize(25);
+            let p = 2 + rng.usize(35);
+            let x = random_sparse(n, p, rng.uniform(0.1, 0.9), rng.next_u64());
+            let csc = CscMatrix::from_dense(&x);
+            let d: &dyn DesignMatrix = &x;
+            let s: &dyn DesignMatrix = &csc;
+            assert_eq!((d.n_rows(), d.n_cols()), (s.n_rows(), s.n_cols()));
+
+            let mut w = vec![0.0; n];
+            rng.fill_normal(&mut w);
+            let mut a = vec![0.0; p];
+            let mut b = vec![0.0; p];
+            d.xt_w(&w, &mut a);
+            s.xt_w(&w, &mut b);
+            for j in 0..p {
+                assert!((a[j] - b[j]).abs() < 1e-10 * (1.0 + a[j].abs()), "xt_w col {j}");
+                assert!(
+                    (d.col_dot_w(j, &w) - s.col_dot_w(j, &w)).abs() < 1e-10,
+                    "col_dot_w {j}"
+                );
+                assert!(
+                    (d.col_sq_norm(j) - s.col_sq_norm(j)).abs() < 1e-10,
+                    "col_sq_norm {j}"
+                );
+            }
+
+            let i = rng.usize(p);
+            let j = rng.usize(p);
+            assert!(
+                (d.col_dot_col(i, j) - s.col_dot_col(i, j)).abs() < 1e-10,
+                "col_dot_col ({i},{j})"
+            );
+
+            let mut da = vec![0.0; n];
+            let mut sa = vec![0.0; n];
+            d.col_axpy_into(j, 1.7, &mut da);
+            s.col_axpy_into(j, 1.7, &mut sa);
+            assert_eq!(da, sa, "col_axpy_into {j}");
+
+            let mut dc = vec![1.0; n];
+            let mut sc = vec![1.0; n];
+            d.col_into(j, &mut dc);
+            s.col_into(j, &mut sc);
+            assert_eq!(dc, sc, "col_into {j}");
+
+            let rows: Vec<usize> = (0..n).filter(|r| r % 2 == 0).collect();
+            let mut dr = vec![0.0; rows.len()];
+            let mut sr = vec![0.0; rows.len()];
+            d.col_gather(j, &rows, &mut dr);
+            s.col_gather(j, &rows, &mut sr);
+            assert_eq!(dr, sr, "col_gather {j}");
+
+            let mut beta = vec![0.0; p];
+            rng.fill_normal(&mut beta);
+            let mut dg = vec![0.0; n];
+            let mut sg = vec![0.0; n];
+            d.gemv(&beta, &mut dg);
+            s.gemv(&beta, &mut sg);
+            for i in 0..n {
+                assert!((dg[i] - sg[i]).abs() < 1e-10 * (1.0 + dg[i].abs()), "gemv {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn nnz_and_density() {
+        let x = random_sparse(10, 20, 0.3, 7);
+        let csc = CscMatrix::from_dense(&x);
+        let d: &dyn DesignMatrix = &x;
+        let s: &dyn DesignMatrix = &csc;
+        assert_eq!(d.nnz(), 200);
+        assert!((d.density() - 1.0).abs() < 1e-15);
+        assert!(s.nnz() < 200);
+        assert!(s.density() < 1.0);
+        // stored entries of the CSC match the dense matrix's true non-zeros
+        let true_nnz = (0..20).map(|j| x.col(j).iter().filter(|v| **v != 0.0).count()).sum::<usize>();
+        assert_eq!(s.nnz(), true_nnz);
+    }
+
+    #[test]
+    fn op_norm_consistent_across_backends() {
+        // one shared power iteration, running on each backend's kernels —
+        // identical numbers for identical seeds
+        let x = random_sparse(15, 12, 0.5, 9);
+        let csc = CscMatrix::from_dense(&x);
+        let cols: Vec<usize> = (0..12).collect();
+        let a = DesignMatrix::op_norm_sq_subset(&x, &cols, 30, 42);
+        let b = DesignMatrix::op_norm_sq_subset(&csc, &cols, 30, 42);
+        assert!((a - b).abs() < 1e-9 * (1.0 + a), "{a} vs {b}");
+    }
+}

@@ -1,14 +1,19 @@
-//! Dense linear-algebra substrate.
+//! Linear-algebra substrate: the matrix-free [`DesignMatrix`] trait
+//! (DESIGN.md §2) and its two in-memory backends.
 //!
-//! The feature matrix X (N×p) is stored **column-major**: screening and
+//! The dense backend stores X (N×p) **column-major**: screening and
 //! coordinate descent both sweep features, and a contiguous column makes
-//! `xᵢᵀw` a streaming dot product. The two hot operations are
-//! [`DenseMatrix::gemv_t`] (the screening sweep `Xᵀw`, O(Np)) and per-column
-//! dots/axpys inside the solvers.
+//! `xᵢᵀw` a streaming dot product. The sparse backend ([`CscMatrix`]) stores
+//! only non-zeros, so the same sweep costs O(nnz). All consumers (screening
+//! rules, solvers, path drivers, the service) talk to `&dyn DesignMatrix`;
+//! the two hot operations are [`DesignMatrix::xt_w`] (the screening sweep
+//! `Xᵀw`) and the per-column dots/axpys inside the solvers.
 
+pub mod design;
 pub mod ops;
 pub mod sparse;
 
+pub use design::DesignMatrix;
 pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale};
 pub use sparse::CscMatrix;
 
@@ -87,7 +92,7 @@ impl DenseMatrix {
     /// Screening sweep: `out[j] = xⱼᵀ w` for every column j. This is the
     /// O(Np) hot spot of every screening rule (DESIGN.md §7 L3 target).
     ///
-    /// Eight columns per pass (perf iteration 2, EXPERIMENTS.md §Perf):
+    /// Eight columns per pass (perf iteration 2, DESIGN.md §7):
     /// `w` is re-used from L1/L2 across the column block, cutting its
     /// memory traffic 8×, and eight independent accumulators keep the FMA
     /// pipeline full.
@@ -164,37 +169,6 @@ impl DenseMatrix {
         (0..self.n_cols).map(|j| nrm2(self.col(j))).collect()
     }
 
-    /// Spectral-norm upper bound per column subset via power iteration on
-    /// XᵀX restricted to `cols` (used for FISTA step sizes).
-    pub fn op_norm_sq_subset(&self, cols: &[usize], iters: usize, seed: u64) -> f64 {
-        if cols.is_empty() {
-            return 0.0;
-        }
-        let mut rng = crate::util::rng::Rng::new(seed);
-        let mut v: Vec<f64> = (0..cols.len()).map(|_| rng.normal()).collect();
-        let nv = nrm2(&v);
-        if nv == 0.0 {
-            return 0.0;
-        }
-        scale(1.0 / nv, &mut v);
-        let mut xb = vec![0.0; self.n_rows];
-        let mut w = vec![0.0; cols.len()];
-        let mut lam = 0.0;
-        for _ in 0..iters {
-            xb.fill(0.0);
-            self.accum_cols(cols, &v, &mut xb);
-            self.gemv_t_subset(cols, &xb, &mut w);
-            lam = nrm2(&w);
-            if lam == 0.0 {
-                return 0.0;
-            }
-            for (vi, wi) in v.iter_mut().zip(w.iter()) {
-                *vi = wi / lam;
-            }
-        }
-        lam
-    }
-
     /// Scale every column to unit ℓ2 norm (zero columns left untouched).
     /// Returns the original norms. DOME requires unit-norm features (§4.1.1).
     pub fn normalize_columns(&mut self) -> Vec<f64> {
@@ -210,6 +184,72 @@ impl DenseMatrix {
         }
         norms
     }
+}
+
+impl DesignMatrix for DenseMatrix {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        self.gemv_t(w, out);
+    }
+
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        dot(self.col(j), w)
+    }
+
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        axpy(a, self.col(j), out);
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        let c = self.col(j);
+        dot(c, c)
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        dot(self.col(i), self.col(j))
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.col(j));
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len());
+        let c = self.col(j);
+        for (o, &r) in out.iter_mut().zip(rows.iter()) {
+            *o = c[r];
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.n_rows * self.n_cols
+    }
+
+    fn col_norms(&self) -> Vec<f64> {
+        DenseMatrix::col_norms(self)
+    }
+
+    fn xt_w_subset(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        self.gemv_t_subset(cols, w, out);
+    }
+
+    fn accum_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        DenseMatrix::accum_cols(self, cols, beta, out);
+    }
+
+    fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        DenseMatrix::gemv(self, beta, out);
+    }
+
+    // op_norm_sq_subset: the trait default's power iteration already runs
+    // on this backend's fused accum_cols/xt_w_subset kernels.
 }
 
 #[cfg(test)]

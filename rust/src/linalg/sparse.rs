@@ -1,15 +1,13 @@
-//! Sparse (CSC) feature-matrix substrate.
+//! Sparse (CSC) feature-matrix backend.
 //!
 //! The paper's motivation (§1) is that at MNIST/SVHN scale "we may not even
 //! be able to load the data matrix into main memory"; image/stroke data is
-//! naturally sparse. The CSC matrix implements the same correlation-sweep
-//! contract as [`DenseMatrix`] ([`crate::screening::CorrelationSweep`]), so
-//! every screening rule runs unchanged on sparse data, and
-//! [`sparse_cd_solve`] provides a reduced-problem solver whose epoch cost is
-//! O(nnz of the surviving columns).
+//! naturally sparse. [`CscMatrix`] implements the full [`DesignMatrix`]
+//! contract, so every screening rule, every solver, the path drivers and
+//! the service run on sparse data unchanged — a CD epoch on a reduced
+//! problem costs O(Σ_{j∈cols} nnz(xⱼ)) instead of O(N·|cols|).
 
-use super::DenseMatrix;
-use crate::screening::CorrelationSweep;
+use super::{DenseMatrix, DesignMatrix};
 
 /// Compressed-sparse-column matrix (f64 values).
 #[derive(Clone, Debug, PartialEq)]
@@ -22,6 +20,41 @@ pub struct CscMatrix {
 }
 
 impl CscMatrix {
+    /// Build from raw CSC parts — the constructor for callers that stream
+    /// sparse data in directly (libsvm readers, sparse generators) without
+    /// ever materializing a dense matrix. Row indices must be strictly
+    /// increasing within each column.
+    pub fn from_parts(
+        n_rows: usize,
+        n_cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> CscMatrix {
+        assert!(n_rows <= u32::MAX as usize);
+        assert_eq!(col_ptr.len(), n_cols + 1, "col_ptr must have n_cols+1 entries");
+        assert_eq!(col_ptr[0], 0);
+        assert_eq!(*col_ptr.last().unwrap(), values.len());
+        assert_eq!(row_idx.len(), values.len());
+        // validate the whole pointer array before slicing any column, so a
+        // bad col_ptr reports its own diagnostic rather than a raw
+        // out-of-bounds panic below
+        for j in 0..n_cols {
+            assert!(col_ptr[j] <= col_ptr[j + 1], "col_ptr must be nondecreasing at {j}");
+            assert!(col_ptr[j + 1] <= values.len(), "col_ptr out of range at {j}");
+        }
+        for j in 0..n_cols {
+            let col = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            for w in col.windows(2) {
+                assert!(w[0] < w[1], "row indices must be strictly increasing in column {j}");
+            }
+            if let Some(&last) = col.last() {
+                assert!((last as usize) < n_rows, "row index out of range in column {j}");
+            }
+        }
+        CscMatrix { n_rows, n_cols, col_ptr, row_idx, values }
+    }
+
     /// Build from a dense matrix, dropping exact zeros.
     pub fn from_dense(x: &DenseMatrix) -> CscMatrix {
         let (n, p) = (x.n_rows(), x.n_cols());
@@ -103,6 +136,26 @@ impl CscMatrix {
             .collect()
     }
 
+    /// Sparse-sparse dot `xᵢᵀxⱼ` by merge-join on the sorted row indices.
+    pub fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        let (ai, av) = self.col(i);
+        let (bi, bv) = self.col(j);
+        let (mut a, mut b) = (0usize, 0usize);
+        let mut s = 0.0;
+        while a < ai.len() && b < bi.len() {
+            match ai[a].cmp(&bi[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    s += av[a] * bv[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        s
+    }
+
     /// Densify (tests / small problems).
     pub fn to_dense(&self) -> DenseMatrix {
         let mut x = DenseMatrix::zeros(self.n_rows, self.n_cols);
@@ -117,91 +170,64 @@ impl CscMatrix {
     }
 }
 
-impl CorrelationSweep for CscMatrix {
+impl DesignMatrix for CscMatrix {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
     fn xt_w(&self, w: &[f64], out: &mut [f64]) {
         self.gemv_t(w, out);
     }
-}
 
-/// Coordinate descent on a column subset of a CSC matrix — epoch cost
-/// O(Σ_{j∈cols} nnz(xⱼ)) instead of O(N·|cols|).
-pub fn sparse_cd_solve(
-    x: &CscMatrix,
-    y: &[f64],
-    cols: &[usize],
-    lam: f64,
-    beta0: Option<&[f64]>,
-    opts: &crate::solver::SolveOptions,
-) -> crate::solver::SolveResult {
-    use crate::linalg::ops::soft_threshold;
-    let m = cols.len();
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; m]);
-    let mut r = y.to_vec();
-    for (k, &j) in cols.iter().enumerate() {
-        if beta[k] != 0.0 {
-            x.col_axpy(j, -beta[k], &mut r);
-        }
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        self.col_dot(j, w)
     }
-    let sq: Vec<f64> = cols
-        .iter()
-        .map(|&j| {
-            let (_, vals) = x.col(j);
-            vals.iter().map(|v| v * v).sum::<f64>()
-        })
-        .collect();
-    let y_scale = crate::linalg::nrm2(y).max(1.0);
-    let mut epoch = 0;
-    let mut gap = f64::INFINITY;
-    while epoch < opts.max_iters {
-        let mut max_delta = 0.0f64;
-        for k in 0..m {
-            if sq[k] == 0.0 {
-                continue;
-            }
-            let old = beta[k];
-            let c = x.col_dot(cols[k], &r) + sq[k] * old;
-            let new = soft_threshold(c, lam) / sq[k];
-            if new != old {
-                x.col_axpy(cols[k], old - new, &mut r);
-                beta[k] = new;
-                max_delta = max_delta.max((new - old).abs() * sq[k].sqrt());
-            }
-        }
-        epoch += 1;
-        if max_delta <= 1e-11 * y_scale || epoch % opts.gap_check_every == 0 {
-            gap = sparse_gap(x, y, cols, &beta, &r, lam);
-            if gap <= opts.tol_gap || max_delta <= 1e-13 * y_scale {
-                break;
-            }
-        }
-    }
-    if gap.is_infinite() {
-        gap = sparse_gap(x, y, cols, &beta, &r, lam);
-    }
-    crate::solver::SolveResult { beta, iters: epoch, gap }
-}
 
-fn sparse_gap(
-    x: &CscMatrix,
-    y: &[f64],
-    cols: &[usize],
-    beta: &[f64],
-    r: &[f64],
-    lam: f64,
-) -> f64 {
-    use crate::linalg::{dot, nrm1};
-    let mut xtr_inf = 0.0f64;
-    for &j in cols {
-        xtr_inf = xtr_inf.max(x.col_dot(j, r).abs());
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        self.col_axpy(j, a, out);
     }
-    let s = if xtr_inf <= lam || xtr_inf == 0.0 { 1.0 / lam } else { 1.0 / xtr_inf };
-    let rr = dot(r, r);
-    let ry = dot(r, y);
-    let yy = dot(y, y);
-    let primal = 0.5 * rr + lam * nrm1(beta);
-    let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
-    let dual = 0.5 * yy - 0.5 * lam * lam * dist;
-    ((primal - dual) / (0.5 * yy).max(1.0)).max(0.0)
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        let (_, vals) = self.col(j);
+        vals.iter().map(|v| v * v).sum()
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        CscMatrix::col_dot_col(self, i, j)
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n_rows);
+        out.fill(0.0);
+        let (idx, vals) = self.col(j);
+        for (i, v) in idx.iter().zip(vals.iter()) {
+            out[*i as usize] = *v;
+        }
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len());
+        // row indices are sorted within a column — binary search per row
+        let (idx, vals) = self.col(j);
+        for (o, &r) in out.iter_mut().zip(rows.iter()) {
+            *o = match idx.binary_search(&(r as u32)) {
+                Ok(k) => vals[k],
+                Err(_) => 0.0,
+            };
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn col_norms(&self) -> Vec<f64> {
+        CscMatrix::col_norms(self)
+    }
 }
 
 #[cfg(test)]
@@ -236,6 +262,32 @@ mod tests {
     }
 
     #[test]
+    fn from_parts_matches_from_dense() {
+        let (x, _) = sparse_problem(15, 10, 0.3, 2);
+        let via_dense = CscMatrix::from_dense(&x);
+        let mut col_ptr = vec![0usize];
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        for j in 0..10 {
+            for (i, &v) in x.col(j).iter().enumerate() {
+                if v != 0.0 {
+                    row_idx.push(i as u32);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(values.len());
+        }
+        let direct = CscMatrix::from_parts(15, 10, col_ptr, row_idx, values);
+        assert_eq!(direct, via_dense);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_rejects_unsorted_rows() {
+        CscMatrix::from_parts(4, 1, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
     fn sweep_matches_dense_randomized() {
         prop::check("csc gemv_t == dense gemv_t", 0xC5C, 20, |rng| {
             let n = 1 + rng.usize(30);
@@ -264,28 +316,45 @@ mod tests {
     }
 
     #[test]
-    fn sparse_cd_matches_dense_cd() {
+    fn col_dot_col_matches_dense_gram() {
+        prop::check("csc gram == dense gram", 0xC5D, 15, |rng| {
+            let n = 1 + rng.usize(20);
+            let p = 2 + rng.usize(15);
+            let (x, _) = sparse_problem(n, p, rng.uniform(0.1, 0.7), rng.next_u64());
+            let csc = CscMatrix::from_dense(&x);
+            let i = rng.usize(p);
+            let j = rng.usize(p);
+            let dense = crate::linalg::dot(x.col(i), x.col(j));
+            assert!((csc.col_dot_col(i, j) - dense).abs() < 1e-10 * (1.0 + dense.abs()));
+        });
+    }
+
+    /// The CD solver through the `DesignMatrix` trait is the sparse solver:
+    /// its epoch cost on CSC is O(nnz of the surviving columns), and its
+    /// answers match the dense backend to gap tolerance.
+    #[test]
+    fn cd_on_csc_matches_cd_on_dense() {
         let (x, y) = sparse_problem(40, 120, 0.15, 4);
         let csc = CscMatrix::from_dense(&x);
         let lam = 0.3 * dual::lambda_max(&x, &y);
         let cols: Vec<usize> = (0..120).collect();
         let opts = SolveOptions { tol_gap: 1e-11, ..Default::default() };
-        let sp = sparse_cd_solve(&csc, &y, &cols, lam, None, &opts);
+        let sp = CdSolver.solve(&csc, &y, &cols, lam, None, &opts);
         let de = CdSolver.solve(&x, &y, &cols, lam, None, &opts);
-        let o_sp = dual::primal_objective(&x, &y, &cols, &sp.beta, lam);
+        let o_sp = dual::primal_objective(&csc, &y, &cols, &sp.beta, lam);
         let o_de = dual::primal_objective(&x, &y, &cols, &de.beta, lam);
         assert!((o_sp - o_de).abs() < 1e-6 * (1.0 + o_de.abs()));
         assert!(sp.gap < 1e-7);
     }
 
     #[test]
-    fn screening_rules_run_on_sparse_sweep() {
-        // EDPP through the CSC CorrelationSweep must equal the dense path
+    fn screening_rules_run_on_sparse_backend() {
+        // EDPP on a context built over the CSC backend must equal dense
         use crate::screening::{edpp::EdppRule, ScreenContext, ScreeningRule, StepInput};
         let (x, y) = sparse_problem(30, 80, 0.2, 5);
         let csc = CscMatrix::from_dense(&x);
         let dense_ctx = ScreenContext::new(&x, &y);
-        let sparse_ctx = ScreenContext::with_sweep(&x, &y, &csc);
+        let sparse_ctx = ScreenContext::new(&csc, &y);
         let theta: Vec<f64> = y.iter().map(|v| v / dense_ctx.lam_max).collect();
         let step = StepInput {
             lam_prev: dense_ctx.lam_max,
@@ -307,7 +376,7 @@ mod tests {
         let mut out = vec![1.0; 3];
         csc.gemv_t(&[1.0; 5], &mut out);
         assert_eq!(out, vec![0.0; 3]);
-        let res = sparse_cd_solve(
+        let res = CdSolver.solve(
             &csc,
             &[1.0; 5],
             &[0, 1, 2],

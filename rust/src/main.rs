@@ -6,9 +6,14 @@
 //!   group     --ngroups …        run a group-Lasso screened path
 //!   service   --requests …       demo the batching screening service
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
+//!
+//! `path` and `service` accept `--matrix dense|csc|auto` (default auto):
+//! auto picks the CSC backend when the loaded data is sparse enough that
+//! the O(nnz) sweep wins.
 
 use dpp_screen::coordinator::service::ScreeningService;
 use dpp_screen::data::{synthetic, RealDataset};
+use dpp_screen::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
 use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 use dpp_screen::runtime::ArtifactRuntime;
@@ -29,12 +34,69 @@ fn main() {
                 "usage: dpp <info|path|group|service|exp> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
+                 dpp path --dataset mnist --matrix csc      # sparse backend\n\
                  dpp group --ngroups 100 --rule group-edpp\n\
-                 dpp service --requests 20 --rule edpp\n\
+                 dpp service --requests 20 --rule edpp --matrix auto\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
                  dpp exp all"
             );
             std::process::exit(2);
+        }
+    }
+}
+
+/// Matrix backend chosen at the CLI boundary (`--matrix dense|csc|auto`).
+enum Backend {
+    Dense(DenseMatrix),
+    Csc(CscMatrix),
+}
+
+/// Auto-pick threshold: below this fill fraction the O(nnz) CSC sweep beats
+/// the unrolled dense kernel comfortably (see benches/kernels.rs).
+const AUTO_CSC_DENSITY: f64 = 0.25;
+
+impl Backend {
+    fn pick(x: DenseMatrix, choice: &str) -> Backend {
+        match choice {
+            "dense" => Backend::Dense(x),
+            "csc" => Backend::Csc(CscMatrix::from_dense(&x)),
+            "auto" => {
+                // count first, convert after: building the CSC just to
+                // measure density would spike peak memory ~2.5x on large
+                // dense data — exactly the datasets where memory matters
+                let nnz = x.data().iter().filter(|v| **v != 0.0).count();
+                let density = nnz as f64 / x.data().len().max(1) as f64;
+                if density < AUTO_CSC_DENSITY {
+                    Backend::Csc(CscMatrix::from_dense(&x))
+                } else {
+                    Backend::Dense(x)
+                }
+            }
+            other => {
+                eprintln!("unknown --matrix `{other}` (dense|csc|auto)");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn as_design(&self) -> &dyn DesignMatrix {
+        match self {
+            Backend::Dense(x) => x,
+            Backend::Csc(x) => x,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Dense(_) => "dense",
+            Backend::Csc(_) => "csc",
+        }
+    }
+
+    fn into_boxed(self) -> Box<dyn DesignMatrix + Send> {
+        match self {
+            Backend::Dense(x) => Box::new(x),
+            Backend::Csc(x) => Box::new(x),
         }
     }
 }
@@ -102,21 +164,27 @@ fn cmd_path(args: &Args) {
     let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
     let k = args.get_parse("grid", grid_size(100));
     let lo = args.get_parse("lo", 0.05);
-    let grid = LambdaGrid::relative(&ds.x, &ds.y, k, lo, 1.0);
     let cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
+    let name = ds.name.clone();
+    let (n, p) = (ds.n(), ds.p());
+    let y = ds.y.clone();
+    let backend = Backend::pick(ds.x, &args.get_or("matrix", "auto"));
+    let x = backend.as_design();
+    let grid = LambdaGrid::relative(x, &y, k, lo, 1.0);
     println!(
-        "dataset={} ({}x{}), rule={}, solver={}, grid={}x[{}..1.0]·λmax",
-        ds.name,
-        ds.n(),
-        ds.p(),
+        "dataset={} ({}x{}), matrix={}, rule={}, solver={}, grid={}x[{}..1.0]·λmax",
+        name,
+        n,
+        p,
+        backend.name(),
         rule.name(),
         solver.name(),
         k,
         lo
     );
-    let out = solve_path(&ds.x, &ds.y, &grid, rule, solver, &cfg);
+    let out = solve_path(x, &y, &grid, rule, solver, &cfg);
     let mut report = benchkit::Report::new(
-        &format!("path: {} / {} / {}", ds.name, rule.name(), solver.name()),
+        &format!("path: {name} / {} / {} [{}]", rule.name(), solver.name(), backend.name()),
         &["λ/λmax", "kept", "discarded", "rejection", "screen(s)", "solve(s)", "iters", "repairs"],
     );
     for r in &out.records {
@@ -175,10 +243,13 @@ fn cmd_service(args: &Args) {
     let ds = load_dataset(args);
     let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
     let n_req = args.get_parse("requests", 20usize);
-    let lam_max = dpp_screen::solver::dual::lambda_max(&ds.x, &ds.y);
-    let svc = ScreeningService::spawn(
-        ds.x.clone(),
-        ds.y.clone(),
+    let y = ds.y.clone();
+    let backend = Backend::pick(ds.x, &args.get_or("matrix", "auto"));
+    let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
+    println!("service backend: {}", backend.name());
+    let svc = ScreeningService::spawn_boxed(
+        backend.into_boxed(),
+        y,
         rule,
         SolverKind::Cd,
         PathConfig::default(),

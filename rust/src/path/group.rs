@@ -2,7 +2,7 @@
 //! below λ̄max with sequential group screening and warm starts.
 
 use super::StepRecord;
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 use crate::screening::group_edpp::{
     GroupEdppRule, GroupScreenContext, GroupScreeningRule, GroupStepInput,
 };
@@ -67,9 +67,10 @@ impl GroupPathOutput {
     }
 }
 
-/// Solve the group Lasso along `grid_fracs·λ̄max` with the given rule.
+/// Solve the group Lasso along `grid_fracs·λ̄max` with the given rule, on
+/// any [`DesignMatrix`] backend.
 pub fn solve_group_path(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     groups: &[(usize, usize)],
     grid: &super::LambdaGrid,
@@ -147,7 +148,7 @@ pub fn solve_group_path(
                 let mut r = y.to_vec();
                 for (j, b) in full.iter().enumerate() {
                     if *b != 0.0 {
-                        crate::linalg::axpy(-b, x.col(j), &mut r);
+                        x.col_axpy_into(j, -b, &mut r);
                     }
                 }
                 let viol = group_kkt_violations(&ctx, &r, lam, &keep);
@@ -187,7 +188,7 @@ pub fn solve_group_path(
         let mut theta = y.to_vec();
         for (j, b) in full.iter().enumerate() {
             if *b != 0.0 {
-                crate::linalg::axpy(-b, x.col(j), &mut theta);
+                x.col_axpy_into(j, -b, &mut theta);
             }
         }
         for t in theta.iter_mut() {

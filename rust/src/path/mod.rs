@@ -6,11 +6,11 @@
 pub mod group;
 pub mod stability;
 
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 use crate::screening::{
     dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
     edpp::Improvement2Rule, safe::SafeRule, sis::SisRule, strong::kkt_violations,
-    strong::StrongRule, theta_from_solution, ScreenContext, ScreeningRule, StepInput,
+    strong::StrongRule, theta_from_solution_into, ScreenContext, ScreeningRule, StepInput,
 };
 use crate::solver::{
     cd::CdSolver, fista::FistaSolver, lars::LarsSolver, LassoSolver, SolveOptions,
@@ -29,7 +29,13 @@ pub struct LambdaGrid {
 impl LambdaGrid {
     /// `k` values equally spaced on λ/λmax ∈ [lo, hi], descending.
     /// The paper uses k = 100, lo = 0.05, hi = 1.0.
-    pub fn relative(x: &DenseMatrix, y: &[f64], k: usize, lo: f64, hi: f64) -> LambdaGrid {
+    pub fn relative(
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        k: usize,
+        lo: f64,
+        hi: f64,
+    ) -> LambdaGrid {
         let lam_max = crate::solver::dual::lambda_max(x, y);
         Self::relative_to(lam_max, k, lo, hi)
     }
@@ -233,9 +239,10 @@ impl PathOutput {
 /// Solve the Lasso along `grid` with screening `rule` and solver `solver`.
 ///
 /// This is the library's primary entry point (the coordinator and all
-/// benches build on it).
+/// benches build on it). `x` is any [`DesignMatrix`] backend — dense or
+/// CSC — and the whole EDPP protocol runs matrix-free on it.
 pub fn solve_path(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     grid: &LambdaGrid,
     rule: RuleKind,
@@ -272,6 +279,11 @@ pub fn solve_path_with_ctx(
     // basic-mode anchor (θ at λmax) reused across steps
     let theta_max: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
 
+    // scratch hoisted out of the λ loop (§Perf): the keep mask and the
+    // KKT-repair residual are reused at every step instead of reallocated
+    let mut keep = vec![true; p];
+    let mut resid = vec![0.0; y.len()];
+
     for &lam in &grid.values {
         if lam >= ctx.lam_max * (1.0 - 1e-12) {
             // trivial solution (eq. (8)); everything is screened by eq. (9)
@@ -294,7 +306,7 @@ pub fn solve_path_with_ctx(
         }
 
         // ---- screening ----
-        let mut keep = vec![true; p];
+        keep.fill(true);
         let (_, screen_secs) = timed(|| {
             if let Some(rule) = &rule {
                 let step = if cfg.sequential {
@@ -326,14 +338,13 @@ pub fn solve_path_with_ctx(
                 }
                 // heuristic: check KKT on the full problem
                 let res = result.as_ref().unwrap();
-                let full = res.scatter(&cols, p);
-                let mut r = y.to_vec();
-                for (j, b) in full.iter().enumerate() {
-                    if *b != 0.0 {
-                        crate::linalg::axpy(-b, x.col(j), &mut r);
+                resid.copy_from_slice(y);
+                for (k, &j) in cols.iter().enumerate() {
+                    if res.beta[k] != 0.0 {
+                        x.col_axpy_into(j, -res.beta[k], &mut resid);
                     }
                 }
-                let viol = kkt_violations(ctx, &r, lam, &keep);
+                let viol = kkt_violations(ctx, &resid, lam, &keep);
                 if viol.is_empty() {
                     break;
                 }
@@ -362,10 +373,10 @@ pub fn solve_path_with_ctx(
             gap: res.gap,
         });
 
-        // advance sequential state
-        theta_prev = theta_from_solution(x, y, &full, lam);
+        // advance sequential state (θ updated in place — no reallocation)
+        theta_from_solution_into(x, y, &full, lam, &mut theta_prev);
         lam_prev = lam;
-        beta_prev = full.clone();
+        beta_prev.copy_from_slice(&full);
         betas.push(full);
     }
 

@@ -11,7 +11,7 @@
 
 use super::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 use crate::coordinator::run_trials;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{DenseMatrix, DesignMatrix};
 use crate::util::rng::Rng;
 
 /// Configuration for a stability-selection run.
@@ -59,23 +59,27 @@ impl StabilityOutput {
     }
 }
 
-/// Row-subsample copy (without replacement).
-fn subsample(x: &DenseMatrix, y: &[f64], rows: &[usize]) -> (DenseMatrix, Vec<f64>) {
+/// Row-subsample copy (without replacement). Matrix-free: columns are read
+/// through [`DesignMatrix::col_gather`] (direct indexing on dense, binary
+/// search on CSC); the per-round working set is dense — a half-row
+/// subsample is small, and the round is solver-bound anyway.
+fn subsample(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    rows: &[usize],
+) -> (DenseMatrix, Vec<f64>) {
     let mut xs = DenseMatrix::zeros(rows.len(), x.n_cols());
     for j in 0..x.n_cols() {
-        let src = x.col(j);
-        let dst = xs.col_mut(j);
-        for (ri, &r) in rows.iter().enumerate() {
-            dst[ri] = src[r];
-        }
+        x.col_gather(j, rows, xs.col_mut(j));
     }
     (xs, rows.iter().map(|&r| y[r]).collect())
 }
 
 /// Run stability selection with screened paths, rounds fanned out over the
-/// coordinator's worker pool.
+/// coordinator's worker pool. `Sync` because the backend is shared across
+/// the worker threads.
 pub fn stability_selection(
-    x: &DenseMatrix,
+    x: &(dyn DesignMatrix + Sync),
     y: &[f64],
     cfg: &StabilityConfig,
 ) -> StabilityOutput {

@@ -16,8 +16,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::linalg::DenseMatrix;
-use crate::screening::CorrelationSweep;
+use crate::linalg::{DenseMatrix, DesignMatrix};
 
 /// One artifact from `artifacts/manifest.tsv`:
 /// `name <TAB> n <TAB> p <TAB> file`.
@@ -135,8 +134,11 @@ impl ArtifactRuntime {
     }
 
     /// Build a resident-matrix sweep for `x` when an `xt_w` artifact with
-    /// the matching shape exists.
-    pub fn sweep_for(&self, x: &DenseMatrix) -> Option<ArtifactSweep<'_>> {
+    /// the matching shape exists. The returned sweep is a full
+    /// [`DesignMatrix`]: `xt_w` dispatches to XLA while every column-local
+    /// op delegates to the host matrix, so it can serve as a
+    /// [`crate::screening::ScreenContext`] sweep provider directly.
+    pub fn sweep_for<'a>(&'a self, x: &'a DenseMatrix) -> Option<ArtifactSweep<'a>> {
         let (n, p) = (x.n_rows(), x.n_cols());
         let exe = self.exes.get(&("xt_w".to_string(), n, p))?;
         // jax expects row-major (C-order) f32
@@ -148,12 +150,13 @@ impl ArtifactRuntime {
             }
         }
         let x_buf = self.client.buffer_from_host_buffer::<f32>(&host, &[n, p], None).ok()?;
-        Some(ArtifactSweep { client: &self.client, exe, x_buf, n, p })
+        Some(ArtifactSweep { client: &self.client, exe, x_buf, host: x, n, p })
     }
 }
 
-/// [`CorrelationSweep`] backed by the AOT `xt_w` executable with the feature
-/// matrix resident on the device.
+/// [`DesignMatrix`] backed by the AOT `xt_w` executable with the feature
+/// matrix resident on the device: the `Xᵀw` sweep dispatches to XLA, every
+/// other (column-local) operation delegates to the host matrix.
 ///
 /// **Safety discipline** (DESIGN.md §1): the artifact computes in f32;
 /// screening decisions must stay *safe*, so consumers must widen the keep
@@ -163,6 +166,7 @@ pub struct ArtifactSweep<'a> {
     client: &'a xla::PjRtClient,
     exe: &'a xla::PjRtLoadedExecutable,
     x_buf: xla::PjRtBuffer,
+    host: &'a DenseMatrix,
     n: usize,
     p: usize,
 }
@@ -178,7 +182,15 @@ impl ArtifactSweep<'_> {
     }
 }
 
-impl CorrelationSweep for ArtifactSweep<'_> {
+impl DesignMatrix for ArtifactSweep<'_> {
+    fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    fn n_cols(&self) -> usize {
+        self.p
+    }
+
     fn xt_w(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.n);
         assert_eq!(out.len(), self.p);
@@ -188,6 +200,9 @@ impl CorrelationSweep for ArtifactSweep<'_> {
             let res = self.exe.execute_b(&[&self.x_buf, &w_buf])?;
             let lit = res[0][0].to_literal_sync()?;
             let scores = lit.to_tuple1()?.to_vec::<f32>()?;
+            // `out` may be a reused scratch buffer holding the previous
+            // step's scores — a short result must never leave a stale tail
+            assert_eq!(scores.len(), self.p, "artifact returned wrong score count");
             for (o, s) in out.iter_mut().zip(scores.iter()) {
                 *o = *s as f64;
             }
@@ -196,6 +211,34 @@ impl CorrelationSweep for ArtifactSweep<'_> {
         // The artifact path is an accelerator; on any PJRT failure we must
         // not corrupt screening — panic loudly rather than return garbage.
         run().expect("PJRT sweep execution failed");
+    }
+
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        self.host.col_dot_w(j, w)
+    }
+
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        self.host.col_axpy_into(j, a, out);
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        self.host.col_sq_norm(j)
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        self.host.col_dot_col(i, j)
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        self.host.col_into(j, out);
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        self.host.col_gather(j, rows, out);
+    }
+
+    fn nnz(&self) -> usize {
+        DesignMatrix::nnz(self.host)
     }
 }
 

@@ -19,7 +19,7 @@ use super::{ScreenContext, ScreeningRule, StepInput};
 /// Basic DOME test (requires unit-norm features; callers should
 /// `Dataset::normalize_features` first — asserted loosely at runtime).
 ///
-/// Perf (EXPERIMENTS.md §Perf It.5): `a = Xᵀñ` is λ-independent (ñ is the
+/// Perf (DESIGN.md §7): `a = Xᵀñ` is λ-independent (ñ is the
 /// λmax-attaining feature), so it is computed once and cached across the
 /// whole path instead of re-sweeping at every λ — halving DOME's per-step
 /// cost from 2 sweeps to 1.
@@ -70,17 +70,20 @@ impl ScreeningRule for DomeRule {
         // ñᵀq = sign(x*ᵀy)·x*ᵀy/λ = λmax/λ (for the attaining feature)
         let nq = s * ctx.xty[ctx.lam_max_arg] / lam; // = λmax/λ ≥ 1
         let d = 1.0 - nq; // ≤ 0: the center is beyond the plane
-        // xᵀq for all features in one sweep; xᵀñ = s·(Xᵀx*) needs a second
-        // sweep against the x* column.
-        let mut xq = vec![0.0; p];
+        // xᵀq for all features in one sweep into the context scratch buffer;
+        // xᵀñ = s·(Xᵀx*) needs a second sweep against the x* column.
+        let mut xq = ctx.sweep_scratch();
         let q: Vec<f64> = ctx.y.iter().map(|v| v / lam).collect();
-        ctx.sweep.xt_w(&q, &mut xq);
-        // λ-independent second sweep, cached across the path (§Perf It.5)
+        ctx.sweep.xt_w(&q, &mut xq[..]);
+        // λ-independent second sweep, cached across the path (DESIGN.md §7)
         let mut cache = self.xn_cache.borrow_mut();
         let xn: &Vec<f64> = cache.get_or_insert_with(|| {
             let mut xn = vec![0.0; p];
-            let nstar: Vec<f64> =
-                ctx.x.col(ctx.lam_max_arg).iter().map(|v| s * v).collect();
+            let mut nstar = vec![0.0; ctx.y.len()];
+            ctx.x.col_into(ctx.lam_max_arg, &mut nstar);
+            for v in nstar.iter_mut() {
+                *v *= s;
+            }
             ctx.sweep.xt_w(&nstar, &mut xn);
             xn
         });

@@ -4,12 +4,14 @@
 //! `{θ : ‖X_gᵀθ‖ ≤ √n_g}` (eq. (51)) — closed and convex, so the same
 //! projection machinery applies.
 
-use crate::linalg::{dot, nrm2, DenseMatrix};
+use crate::linalg::{nrm2, DesignMatrix};
 use crate::solver::dual;
 
-/// Precomputed context for group screening along a path.
+/// Precomputed context for group screening along a path. Matrix-free: the
+/// design matrix is seen only through the [`DesignMatrix`] trait, so group
+/// screening runs on dense or CSC backends alike.
 pub struct GroupScreenContext<'a> {
-    pub x: &'a DenseMatrix,
+    pub x: &'a dyn DesignMatrix,
     pub y: &'a [f64],
     /// `(start, len)` per group.
     pub groups: &'a [(usize, usize)],
@@ -23,7 +25,11 @@ pub struct GroupScreenContext<'a> {
 }
 
 impl<'a> GroupScreenContext<'a> {
-    pub fn new(x: &'a DenseMatrix, y: &'a [f64], groups: &'a [(usize, usize)]) -> Self {
+    pub fn new(
+        x: &'a dyn DesignMatrix,
+        y: &'a [f64],
+        groups: &'a [(usize, usize)],
+    ) -> Self {
         let group_op_norms = groups
             .iter()
             .enumerate()
@@ -53,7 +59,7 @@ impl<'a> GroupScreenContext<'a> {
         let (start, len) = self.groups[g];
         let mut ss = 0.0;
         for j in start..start + len {
-            let d = dot(self.x.col(j), w);
+            let d = self.x.col_dot_w(j, w);
             ss += d * d;
         }
         ss.sqrt()
@@ -84,9 +90,8 @@ pub fn group_v1(ctx: &GroupScreenContext, step: &GroupStepInput) -> Vec<f64> {
         let (start, len) = ctx.groups[ctx.lam_max_arg];
         let mut out = vec![0.0; n];
         for j in start..start + len {
-            let c = ctx.x.col(j);
-            let cj = dot(c, ctx.y);
-            crate::linalg::axpy(cj, c, &mut out);
+            let cj = ctx.x.col_dot_w(j, ctx.y);
+            ctx.x.col_axpy_into(j, cj, &mut out);
         }
         out
     }
@@ -140,7 +145,7 @@ pub(crate) mod testutil {
     /// (discarded groups, false discards, truly-zero groups).
     pub fn check_group_rule(
         rule: &dyn GroupScreeningRule,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         groups: &[(usize, usize)],
         lam_prev: f64,
@@ -155,7 +160,7 @@ pub(crate) mod testutil {
         let mut theta = y.to_vec();
         for (j, b) in full_prev.iter().enumerate() {
             if *b != 0.0 {
-                crate::linalg::axpy(-b, x.col(j), &mut theta);
+                x.col_axpy_into(j, -b, &mut theta);
             }
         }
         for t in theta.iter_mut() {
@@ -190,6 +195,7 @@ mod tests {
     use super::testutil::check_group_rule;
     use super::*;
     use crate::data::synthetic;
+    use crate::linalg::dot;
     use crate::util::prop;
 
     #[test]

@@ -18,9 +18,11 @@
 //! are heuristic (not safe) and are paired with the KKT repair loop in
 //! [`crate::path`].
 //!
-//! The O(Np) part of every rule is one correlation sweep `Xᵀw`; rules route
-//! it through [`CorrelationSweep`] so the PJRT runtime can substitute the
-//! AOT-compiled Pallas kernel for the native loop ([`crate::runtime`]).
+//! The O(nnz) part of every rule is one correlation sweep `Xᵀw`; rules are
+//! **matrix-free**: they see the feature matrix only through the
+//! [`DesignMatrix`] trait (DESIGN.md §2), so the same code runs on the
+//! dense backend, the CSC backend, or the AOT-compiled PJRT sweep
+//! ([`crate::runtime::ArtifactSweep`]).
 
 pub mod dome;
 pub mod dpp;
@@ -31,26 +33,16 @@ pub mod safe;
 pub mod sis;
 pub mod strong;
 
-use crate::linalg::DenseMatrix;
+use std::cell::RefCell;
+
+use crate::linalg::DesignMatrix;
 #[cfg(test)]
 use crate::solver::dual;
 
-/// Abstraction over the `Xᵀw` sweep so it can be served either by the
-/// native unrolled loop or by the AOT-compiled XLA executable.
-pub trait CorrelationSweep {
-    /// `out[j] = xⱼᵀ w` for every column j of the full matrix.
-    fn xt_w(&self, w: &[f64], out: &mut [f64]);
-}
-
-impl CorrelationSweep for DenseMatrix {
-    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
-        self.gemv_t(w, out);
-    }
-}
-
 /// Precomputed per-problem quantities shared by every rule along a path.
 pub struct ScreenContext<'a> {
-    pub x: &'a DenseMatrix,
+    /// The design matrix, seen matrix-free.
+    pub x: &'a dyn DesignMatrix,
     pub y: &'a [f64],
     /// ‖xᵢ‖₂ for every feature.
     pub col_norms: Vec<f64>,
@@ -61,27 +53,33 @@ pub struct ScreenContext<'a> {
     pub lam_max: f64,
     /// argmax feature x* of eq. (17).
     pub lam_max_arg: usize,
-    /// Sweep provider (native matrix by default; PJRT artifact optionally).
-    pub sweep: &'a dyn CorrelationSweep,
+    /// Sweep provider for `Xᵀw` (the matrix itself by default; the PJRT
+    /// artifact runtime optionally).
+    pub sweep: &'a dyn DesignMatrix,
     /// Relative slack widening keep-decisions when the sweep is computed in
     /// reduced precision (0.0 for the native f64 sweep; see
     /// [`crate::runtime::ArtifactSweep::SAFETY_SLACK`]). Keeping *more*
     /// features can never break safety — only discard fewer.
     pub safety_slack: f64,
+    /// Reusable p-length sweep buffer: [`sphere_screen`], the strong rule
+    /// and the KKT checker run once per λ step, and hoisting their score
+    /// vector here removes a p-sized allocation per step (§Perf).
+    scratch: RefCell<Vec<f64>>,
 }
 
 impl<'a> ScreenContext<'a> {
-    /// Build a context using the native sweep.
-    pub fn new(x: &'a DenseMatrix, y: &'a [f64]) -> Self {
+    /// Build a context over any [`DesignMatrix`] backend using its native
+    /// sweep.
+    pub fn new(x: &'a dyn DesignMatrix, y: &'a [f64]) -> Self {
         Self::with_sweep(x, y, x)
     }
 
     /// Build a context with an explicit sweep provider (e.g. the PJRT
     /// artifact runtime) and its required safety slack.
     pub fn with_sweep_slack(
-        x: &'a DenseMatrix,
+        x: &'a dyn DesignMatrix,
         y: &'a [f64],
-        sweep: &'a dyn CorrelationSweep,
+        sweep: &'a dyn DesignMatrix,
         safety_slack: f64,
     ) -> Self {
         let mut ctx = Self::with_sweep(x, y, sweep);
@@ -90,15 +88,16 @@ impl<'a> ScreenContext<'a> {
     }
 
     /// Build a context with an explicit sweep provider (e.g. the PJRT
-    /// artifact runtime).
+    /// artifact runtime). The precomputed statistics (`xty`, λmax, column
+    /// norms) always come from `x`'s exact native kernels.
     pub fn with_sweep(
-        x: &'a DenseMatrix,
+        x: &'a dyn DesignMatrix,
         y: &'a [f64],
-        sweep: &'a dyn CorrelationSweep,
+        sweep: &'a dyn DesignMatrix,
     ) -> Self {
         let col_norms = x.col_norms();
         let mut xty = vec![0.0; x.n_cols()];
-        x.gemv_t(y, &mut xty);
+        x.xt_w(y, &mut xty);
         let mut lam_max = 0.0f64;
         let mut lam_max_arg = 0usize;
         for (j, v) in xty.iter().enumerate() {
@@ -107,6 +106,7 @@ impl<'a> ScreenContext<'a> {
                 lam_max_arg = j;
             }
         }
+        let p = x.n_cols();
         ScreenContext {
             x,
             y,
@@ -117,11 +117,19 @@ impl<'a> ScreenContext<'a> {
             lam_max_arg,
             sweep,
             safety_slack: 0.0,
+            scratch: RefCell::new(vec![0.0; p]),
         }
     }
 
     pub fn p(&self) -> usize {
         self.x.n_cols()
+    }
+
+    /// Borrow the reusable sweep buffer (resized to p).
+    pub(crate) fn sweep_scratch(&self) -> std::cell::RefMut<'_, Vec<f64>> {
+        let mut s = self.scratch.borrow_mut();
+        s.resize(self.p(), 0.0);
+        s
     }
 }
 
@@ -145,12 +153,13 @@ pub trait ScreeningRule {
 }
 
 /// Shared sphere test: keep[i] = false when `|xᵢᵀc| + ρ‖xᵢ‖ < 1`.
-/// `center` is a dual-space (length-N) vector. One `Xᵀ·center` sweep.
+/// `center` is a dual-space (length-N) vector. One `Xᵀ·center` sweep into
+/// the context's reusable scratch buffer (no per-step allocation).
 pub fn sphere_screen(ctx: &ScreenContext, center: &[f64], radius: f64, keep: &mut [bool]) {
     let p = ctx.p();
     assert_eq!(keep.len(), p);
-    let mut scores = vec![0.0; p];
-    ctx.sweep.xt_w(center, &mut scores);
+    let mut scores = ctx.sweep_scratch();
+    ctx.sweep.xt_w(center, &mut scores[..]);
     // widen the keep-condition by the sweep's precision slack (reduced-
     // precision sweeps must never turn a keep into an unsafe discard)
     let slack = ctx.safety_slack * (1.0 + crate::linalg::nrm2(center));
@@ -171,7 +180,12 @@ pub fn v1(ctx: &ScreenContext, step: &StepInput) -> Vec<f64> {
     } else {
         // sign(x*ᵀy)·x*
         let s = ctx.xty[ctx.lam_max_arg].signum();
-        ctx.x.col(ctx.lam_max_arg).iter().map(|v| s * v).collect()
+        let mut v = vec![0.0; n];
+        ctx.x.col_into(ctx.lam_max_arg, &mut v);
+        for vi in v.iter_mut() {
+            *vi *= s;
+        }
+        v
     }
 }
 
@@ -197,17 +211,37 @@ pub fn v2_perp(v1: &[f64], v2: &[f64]) -> Vec<f64> {
     v2.iter().zip(v1.iter()).map(|(b, a)| b - c * a).collect()
 }
 
-/// Exact dual point from a full-length primal solution (KKT eq. (3)).
-pub fn theta_from_solution(x: &DenseMatrix, y: &[f64], beta: &[f64], lam: f64) -> Vec<f64> {
-    let mut theta = y.to_vec();
-    for j in 0..x.n_cols() {
-        if beta[j] != 0.0 {
-            crate::linalg::axpy(-beta[j], x.col(j), &mut theta);
+/// Exact dual point from a full-length primal solution (KKT eq. (3)),
+/// written into `theta` (length N) — the allocation-free form the path
+/// driver uses at every λ step.
+pub fn theta_from_solution_into(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    beta: &[f64],
+    lam: f64,
+    theta: &mut [f64],
+) {
+    assert_eq!(theta.len(), y.len());
+    theta.copy_from_slice(y);
+    for (j, b) in beta.iter().enumerate() {
+        if *b != 0.0 {
+            x.col_axpy_into(j, -b, theta);
         }
     }
     for t in theta.iter_mut() {
         *t /= lam;
     }
+}
+
+/// Exact dual point from a full-length primal solution (KKT eq. (3)).
+pub fn theta_from_solution(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    beta: &[f64],
+    lam: f64,
+) -> Vec<f64> {
+    let mut theta = vec![0.0; y.len()];
+    theta_from_solution_into(x, y, beta, lam, &mut theta);
     theta
 }
 
@@ -233,7 +267,7 @@ pub(crate) mod testutil {
     /// compare against the exact support at λ.
     pub fn check_rule(
         rule: &dyn ScreeningRule,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         lam_prev: f64,
         lam: f64,
@@ -292,7 +326,7 @@ mod tests {
             StepInput { lam_prev: ctx.lam_max, lam: 0.5 * ctx.lam_max, theta_prev: &theta_max };
         let v = v1(&ctx, &step);
         let s = ctx.xty[ctx.lam_max_arg].signum();
-        for (a, b) in v.iter().zip(ctx.x.col(ctx.lam_max_arg)) {
+        for (a, b) in v.iter().zip(ds.x.col(ctx.lam_max_arg)) {
             assert!((a - s * b).abs() < 1e-14);
         }
         // below λmax: v1 = y/λ₀ − θ
@@ -359,5 +393,17 @@ mod tests {
         for (j, v) in sc.iter().enumerate() {
             assert!(v.abs() <= 1.0 + 1e-5, "θ infeasible at {j}: {v}");
         }
+    }
+
+    #[test]
+    fn theta_into_matches_allocating_form() {
+        let ds = synthetic::synthetic1(12, 18, 3, 0.1, 6);
+        let mut beta = vec![0.0; 18];
+        beta[2] = 1.5;
+        beta[9] = -0.3;
+        let a = theta_from_solution(&ds.x, &ds.y, &beta, 0.7);
+        let mut b = vec![9.0; 12];
+        theta_from_solution_into(&ds.x, &ds.y, &beta, 0.7, &mut b);
+        assert_eq!(a, b);
     }
 }

@@ -31,8 +31,8 @@ impl ScreeningRule for StrongRule {
             return;
         }
         // c(λ₀) = Xᵀ(y − Xβ*(λ₀)) = λ₀·Xᵀθ*(λ₀)
-        let mut corr = vec![0.0; p];
-        ctx.sweep.xt_w(step.theta_prev, &mut corr);
+        let mut corr = ctx.sweep_scratch();
+        ctx.sweep.xt_w(step.theta_prev, &mut corr[..]);
         for j in 0..p {
             keep[j] = (corr[j] * step.lam_prev).abs() >= thr;
         }
@@ -49,8 +49,8 @@ pub fn kkt_violations(
     keep: &[bool],
 ) -> Vec<usize> {
     let p = ctx.p();
-    let mut corr = vec![0.0; p];
-    ctx.sweep.xt_w(r, &mut corr);
+    let mut corr = ctx.sweep_scratch();
+    ctx.sweep.xt_w(r, &mut corr[..]);
     // small relative slack so solver tolerance doesn't trigger spurious adds
     let tol = lam * (1.0 + 1e-7);
     (0..p).filter(|&j| !keep[j] && corr[j].abs() > tol).collect()

@@ -6,9 +6,14 @@
 //! sweep, iterate only over the current support until stationary, then do a
 //! verification sweep over all columns; converged when a full sweep changes
 //! nothing and the duality gap is below tolerance.
+//!
+//! Matrix-free: every coordinate update is one `col_dot_w` plus one
+//! `col_axpy_into` through [`DesignMatrix`], so on the CSC backend an epoch
+//! over the surviving columns costs O(Σ nnz(xⱼ)) — the sparse solver the
+//! old `sparse_cd_solve` provided is now just this solver on a `CscMatrix`.
 
 use super::{dual, LassoSolver, SolveOptions, SolveResult};
-use crate::linalg::{axpy, dot, ops::soft_threshold, DenseMatrix};
+use crate::linalg::{ops::soft_threshold, DesignMatrix};
 
 /// Cyclic CD with active-set outer loop and duality-gap stopping.
 pub struct CdSolver;
@@ -18,7 +23,7 @@ impl CdSolver {
     /// largest |Δβⱼ|·‖xⱼ‖ seen (a scale-aware progress measure).
     #[allow(clippy::too_many_arguments)]
     fn sweep(
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         cols: &[usize],
         work: &[usize],
         sq_norms: &[f64],
@@ -32,13 +37,12 @@ impl CdSolver {
             if sq == 0.0 {
                 continue;
             }
-            let xj = x.col(cols[k]);
             let old = beta[k];
             // c = xⱼᵀ r + ‖xⱼ‖² βⱼ  (partial residual correlation)
-            let c = dot(xj, r) + sq * old;
+            let c = x.col_dot_w(cols[k], r) + sq * old;
             let new = soft_threshold(c, lam) / sq;
             if new != old {
-                axpy(old - new, xj, r);
+                x.col_axpy_into(cols[k], old - new, r);
                 beta[k] = new;
                 max_delta = max_delta.max((new - old).abs() * sq.sqrt());
             }
@@ -50,7 +54,7 @@ impl CdSolver {
 impl LassoSolver for CdSolver {
     fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         lam: f64,
@@ -69,12 +73,12 @@ impl LassoSolver for CdSolver {
         let mut r = y.to_vec();
         for (k, &j) in cols.iter().enumerate() {
             if beta[k] != 0.0 {
-                axpy(-beta[k], x.col(j), &mut r);
+                x.col_axpy_into(j, -beta[k], &mut r);
             }
         }
-        let sq_norms: Vec<f64> = cols.iter().map(|&j| dot(x.col(j), x.col(j))).collect();
+        let sq_norms: Vec<f64> = cols.iter().map(|&j| x.col_sq_norm(j)).collect();
         let all: Vec<usize> = (0..m).collect();
-        let y_scale = dot(y, y).sqrt().max(1.0);
+        let y_scale = crate::linalg::nrm2(y).max(1.0);
 
         let mut gap = f64::INFINITY;
         let mut epoch = 0;
@@ -125,6 +129,7 @@ impl LassoSolver for CdSolver {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::linalg::{axpy, dot, DenseMatrix};
     use crate::solver::testutil::small_problem;
     use crate::util::prop;
 

@@ -7,14 +7,20 @@
 //! which yields the duality gap used as the solvers' stopping criterion and
 //! by tests as the certificate of exactness.
 
-use crate::linalg::{dot, nrm1, DenseMatrix};
+use crate::linalg::{dot, nrm1, DesignMatrix};
 
 /// Primal objective `½‖y − X[:,cols]β‖² + λ‖β‖₁`.
-pub fn primal_objective(x: &DenseMatrix, y: &[f64], cols: &[usize], beta: &[f64], lam: f64) -> f64 {
+pub fn primal_objective(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    cols: &[usize],
+    beta: &[f64],
+    lam: f64,
+) -> f64 {
     let mut r = y.to_vec();
     for (k, &j) in cols.iter().enumerate() {
         if beta[k] != 0.0 {
-            crate::linalg::axpy(-beta[k], x.col(j), &mut r);
+            x.col_axpy_into(j, -beta[k], &mut r);
         }
     }
     0.5 * dot(&r, &r) + lam * nrm1(beta)
@@ -34,10 +40,10 @@ pub fn dual_objective(y: &[f64], theta: &[f64], lam: f64) -> f64 {
 /// `θ = r · s` with `s = min(1/λ, 1/‖Xᵀr‖∞ restricted to cols)` — the
 /// standard feasible dual point (e.g. [16]). For the *exact* solution the
 /// scaled residual equals θ*(λ) = r/λ by KKT eq. (3).
-pub fn dual_scale(x: &DenseMatrix, cols: &[usize], r: &[f64], lam: f64) -> f64 {
+pub fn dual_scale(x: &dyn DesignMatrix, cols: &[usize], r: &[f64], lam: f64) -> f64 {
     let mut xtr_inf = 0.0f64;
     for &j in cols {
-        xtr_inf = xtr_inf.max(dot(x.col(j), r).abs());
+        xtr_inf = xtr_inf.max(x.col_dot_w(j, r).abs());
     }
     if xtr_inf <= lam || xtr_inf == 0.0 {
         1.0 / lam
@@ -49,7 +55,7 @@ pub fn dual_scale(x: &DenseMatrix, cols: &[usize], r: &[f64], lam: f64) -> f64 {
 /// Duality gap of the reduced problem given the residual `r = y − X[:,cols]β`.
 /// Returned *relative* to `max(1, ½‖y‖²)` so tolerances are scale-free.
 pub fn duality_gap(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     cols: &[usize],
     beta: &[f64],
@@ -72,7 +78,7 @@ pub fn duality_gap(
 /// The exact dual optimum at λ from the exact primal solution:
 /// `θ*(λ) = (y − Xβ*(λ))/λ` (KKT eq. (3)). Screening rules consume this.
 pub fn dual_point_from_beta(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     cols: &[usize],
     beta: &[f64],
@@ -81,7 +87,7 @@ pub fn dual_point_from_beta(
     let mut theta = y.to_vec();
     for (k, &j) in cols.iter().enumerate() {
         if beta[k] != 0.0 {
-            crate::linalg::axpy(-beta[k], x.col(j), &mut theta);
+            x.col_axpy_into(j, -beta[k], &mut theta);
         }
     }
     for t in theta.iter_mut() {
@@ -91,16 +97,16 @@ pub fn dual_point_from_beta(
 }
 
 /// λmax = ‖Xᵀy‖∞ (eq. (7)): the smallest λ with β*(λ) = 0.
-pub fn lambda_max(x: &DenseMatrix, y: &[f64]) -> f64 {
+pub fn lambda_max(x: &dyn DesignMatrix, y: &[f64]) -> f64 {
     let mut scores = vec![0.0; x.n_cols()];
-    x.gemv_t(y, &mut scores);
+    x.xt_w(y, &mut scores);
     scores.iter().fold(0.0f64, |m, v| m.max(v.abs()))
 }
 
 /// argmax index for λmax — the feature `x*` of eq. (17).
-pub fn lambda_max_arg(x: &DenseMatrix, y: &[f64]) -> (f64, usize) {
+pub fn lambda_max_arg(x: &dyn DesignMatrix, y: &[f64]) -> (f64, usize) {
     let mut scores = vec![0.0; x.n_cols()];
-    x.gemv_t(y, &mut scores);
+    x.xt_w(y, &mut scores);
     let mut best = (0.0f64, 0usize);
     for (j, s) in scores.iter().enumerate() {
         if s.abs() > best.0 {
@@ -112,7 +118,7 @@ pub fn lambda_max_arg(x: &DenseMatrix, y: &[f64]) -> (f64, usize) {
 
 /// Group-Lasso λmax = max_g ‖X_gᵀ y‖₂/√n_g (eq. (55)) with its argmax group.
 pub fn group_lambda_max(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     groups: &[(usize, usize)],
 ) -> (f64, usize) {
@@ -120,7 +126,7 @@ pub fn group_lambda_max(
     for (g, &(start, len)) in groups.iter().enumerate() {
         let mut ss = 0.0;
         for j in start..start + len {
-            let d = dot(x.col(j), y);
+            let d = x.col_dot_w(j, y);
             ss += d * d;
         }
         let v = (ss / len as f64).sqrt();
@@ -133,7 +139,7 @@ pub fn group_lambda_max(
 
 /// Group-Lasso duality gap (problem (50)/(51)), given residual r.
 pub fn group_duality_gap(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     groups: &[(usize, usize)],
     active: &[usize],
@@ -147,7 +153,7 @@ pub fn group_duality_gap(
         let (start, len) = groups[g];
         let mut ss = 0.0;
         for j in start..start + len {
-            let d = dot(x.col(j), r);
+            let d = x.col_dot_w(j, r);
             ss += d * d;
         }
         max_ratio = max_ratio.max((ss / len as f64).sqrt());

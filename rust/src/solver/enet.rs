@@ -10,7 +10,7 @@
 //! augmented geometry without ever materializing X̃.
 
 use super::{LassoSolver, SolveOptions, SolveResult};
-use crate::linalg::{axpy, dot, nrm2, ops::soft_threshold, DenseMatrix};
+use crate::linalg::{dot, nrm2, ops::soft_threshold, DesignMatrix};
 
 /// Elastic-net coordinate descent: `βⱼ ← S(xⱼᵀr + ‖xⱼ‖²βⱼ, λ)/(‖xⱼ‖² + γ)`.
 pub struct EnetCdSolver {
@@ -21,7 +21,7 @@ pub struct EnetCdSolver {
 impl LassoSolver for EnetCdSolver {
     fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         lam: f64,
@@ -33,10 +33,10 @@ impl LassoSolver for EnetCdSolver {
         let mut r = y.to_vec();
         for (k, &j) in cols.iter().enumerate() {
             if beta[k] != 0.0 {
-                axpy(-beta[k], x.col(j), &mut r);
+                x.col_axpy_into(j, -beta[k], &mut r);
             }
         }
-        let sq: Vec<f64> = cols.iter().map(|&j| dot(x.col(j), x.col(j))).collect();
+        let sq: Vec<f64> = cols.iter().map(|&j| x.col_sq_norm(j)).collect();
         let y_scale = nrm2(y).max(1.0);
         let mut epoch = 0;
         let mut gap = f64::INFINITY;
@@ -46,12 +46,11 @@ impl LassoSolver for EnetCdSolver {
                 if sq[k] == 0.0 && self.gamma == 0.0 {
                     continue;
                 }
-                let xj = x.col(cols[k]);
                 let old = beta[k];
-                let c = dot(xj, &r) + sq[k] * old;
+                let c = x.col_dot_w(cols[k], &r) + sq[k] * old;
                 let new = soft_threshold(c, lam) / (sq[k] + self.gamma);
                 if new != old {
-                    axpy(old - new, xj, &mut r);
+                    x.col_axpy_into(cols[k], old - new, &mut r);
                     beta[k] = new;
                     max_delta = max_delta.max((new - old).abs() * (sq[k] + self.gamma).sqrt());
                 }
@@ -82,7 +81,7 @@ impl EnetCdSolver {
     /// Duality gap on the augmented Lasso: residual block is `(r, −√γ·β)`.
     fn duality_gap(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         beta: &[f64],
@@ -93,7 +92,7 @@ impl EnetCdSolver {
         // augmented correlations: x̃ⱼᵀr̃ = xⱼᵀr − γ·βⱼ
         let mut xtr_inf = 0.0f64;
         for (k, &j) in cols.iter().enumerate() {
-            xtr_inf = xtr_inf.max((dot(x.col(j), r) - g * beta[k]).abs());
+            xtr_inf = xtr_inf.max((x.col_dot_w(j, r) - g * beta[k]).abs());
         }
         let s = if xtr_inf <= lam || xtr_inf == 0.0 { 1.0 / lam } else { 1.0 / xtr_inf };
         let bb = dot(beta, beta);
@@ -114,7 +113,7 @@ impl EnetCdSolver {
 /// the problem at `lam`. Safe for any γ ≥ 0; γ = 0 matches Lasso EDPP.
 #[allow(clippy::too_many_arguments)]
 pub fn screen_enet_edpp(
-    x: &DenseMatrix,
+    x: &dyn DesignMatrix,
     y: &[f64],
     gamma: f64,
     beta_prev: &[f64],
@@ -130,7 +129,7 @@ pub fn screen_enet_edpp(
     let mut r = y.to_vec();
     for j in 0..p {
         if beta_prev[j] != 0.0 {
-            axpy(-beta_prev[j], x.col(j), &mut r);
+            x.col_axpy_into(j, -beta_prev[j], &mut r);
         }
     }
     let sqg = gamma.sqrt();
@@ -149,7 +148,7 @@ pub fn screen_enet_edpp(
     } else {
         // x̃* = (x*, √γ e_*)·sign(x*ᵀy)
         let mut xty = vec![0.0; p];
-        x.gemv_t(y, &mut xty);
+        x.xt_w(y, &mut xty);
         let (mut best, mut arg) = (0.0f64, 0usize);
         for (j, v) in xty.iter().enumerate() {
             if v.abs() > best {
@@ -160,7 +159,12 @@ pub fn screen_enet_edpp(
         let s = xty[arg].signum();
         let mut tail = vec![0.0; p];
         tail[arg] = s * sqg;
-        (x.col(arg).iter().map(|v| s * v).collect(), tail)
+        let mut top = vec![0.0; n];
+        x.col_into(arg, &mut top);
+        for v in top.iter_mut() {
+            *v *= s;
+        }
+        (top, tail)
     };
     // v2 = ỹ/λ − θ̃₀
     let v2_top: Vec<f64> = (0..n).map(|i| y[i] / lam - theta_top[i]).collect();
@@ -182,10 +186,10 @@ pub fn screen_enet_edpp(
         theta_tail.iter().zip(perp_tail.iter()).map(|(t, w)| t + 0.5 * w).collect();
     // test per feature: |x̃ⱼᵀc̃| + ρ‖x̃ⱼ‖ ≥ 1
     let mut scores = vec![0.0; p];
-    x.gemv_t(&center_top, &mut scores);
+    x.xt_w(&center_top, &mut scores);
     for j in 0..p {
         let score = scores[j] + sqg * center_tail[j];
-        let norm = (dot(x.col(j), x.col(j)) + gamma).sqrt();
+        let norm = (x.col_sq_norm(j) + gamma).sqrt();
         let sup = score.abs() + radius * norm;
         keep[j] = sup >= 1.0 - 1e-9 * (1.0 + sup.abs());
     }

@@ -6,7 +6,7 @@
 //! matvecs) is what the L2 JAX `fista_epoch` artifact mirrors.
 
 use super::{dual, LassoSolver, SolveOptions, SolveResult};
-use crate::linalg::{axpy, ops::soft_threshold, DenseMatrix};
+use crate::linalg::{axpy, ops::soft_threshold, DesignMatrix};
 
 /// FISTA with constant step 1/L and duality-gap stopping.
 pub struct FistaSolver;
@@ -14,7 +14,7 @@ pub struct FistaSolver;
 impl LassoSolver for FistaSolver {
     fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         lam: f64,
@@ -42,7 +42,7 @@ impl LassoSolver for FistaSolver {
             for i in 0..xw.len() {
                 r[i] = xw[i] - y[i];
             }
-            x.gemv_t_subset(cols, &r, &mut grad);
+            x.xt_w_subset(cols, &r, &mut grad);
             let beta_prev = beta.clone();
             for k in 0..m {
                 beta[k] = soft_threshold(w[k] - grad[k] / lip, lam / lip);

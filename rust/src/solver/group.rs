@@ -7,7 +7,7 @@
 //! standard SLEP-style block descent the paper's §4.2 substrate used.
 
 use super::{dual, SolveOptions};
-use crate::linalg::{axpy, dot, nrm2, DenseMatrix};
+use crate::linalg::{nrm2, DesignMatrix};
 
 /// Result of a group-Lasso solve over a subset of groups.
 #[derive(Clone, Debug)]
@@ -54,7 +54,7 @@ pub struct GroupBcdSolver;
 impl GroupBcdSolver {
     pub fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         groups: &[(usize, usize)],
         active: &[usize],
@@ -76,7 +76,7 @@ impl GroupBcdSolver {
             let (start, len) = groups[g];
             for (c, j) in (start..start + len).enumerate() {
                 if beta[k][c] != 0.0 {
-                    axpy(-beta[k][c], x.col(j), &mut r);
+                    x.col_axpy_into(j, -beta[k][c], &mut r);
                 }
             }
         }
@@ -104,14 +104,14 @@ impl GroupBcdSolver {
                 grad.resize(len, 0.0);
                 // z = β_g + X_gᵀ r / L_g
                 for (c, j) in (start..start + len).enumerate() {
-                    grad[c] = beta[k][c] + dot(x.col(j), &r) / lg;
+                    grad[c] = beta[k][c] + x.col_dot_w(j, &r) / lg;
                 }
                 block_soft_threshold(&mut grad, t);
                 // apply delta to residual
                 for (c, j) in (start..start + len).enumerate() {
                     let d = grad[c] - beta[k][c];
                     if d != 0.0 {
-                        axpy(-d, x.col(j), &mut r);
+                        x.col_axpy_into(j, -d, &mut r);
                         max_delta = max_delta.max(d.abs());
                         beta[k][c] = grad[c];
                     }
@@ -138,6 +138,7 @@ impl GroupBcdSolver {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::linalg::{axpy, dot, DenseMatrix};
     use crate::solver::dual::group_lambda_max;
 
     fn problem(seed: u64) -> (DenseMatrix, Vec<f64>, Vec<(usize, usize)>) {

@@ -9,7 +9,7 @@
 //! recomputed on the (rare) drops.
 
 use super::{dual, LassoSolver, SolveOptions, SolveResult};
-use crate::linalg::{dot, DenseMatrix};
+use crate::linalg::{dot, DesignMatrix};
 
 /// Lower-triangular Cholesky factor with append-column update.
 struct Chol {
@@ -92,7 +92,7 @@ pub struct LarsSolver;
 impl LassoSolver for LarsSolver {
     fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         lam_target: f64,
@@ -108,7 +108,7 @@ impl LassoSolver for LarsSolver {
 
         // initial correlations c0 = Xᵀy over the subset
         let mut c0 = vec![0.0; m];
-        x.gemv_t_subset(cols, y, &mut c0);
+        x.xt_w_subset(cols, y, &mut c0);
         let (mut lam_cur, first) = c0
             .iter()
             .enumerate()
@@ -124,7 +124,7 @@ impl LassoSolver for LarsSolver {
         let mut in_active = vec![false; m];
         in_active[first] = true;
         let mut chol = Chol::new();
-        chol.push(&[], dot(x.col(cols[first]), x.col(cols[first])));
+        chol.push(&[], x.col_sq_norm(cols[first]));
         let mut xty: Vec<f64> = vec![c0[first]];
 
         let mut steps = 0usize;
@@ -141,8 +141,8 @@ impl LassoSolver for LarsSolver {
             xa_u.fill(0.0);
             xa_v.fill(0.0);
             for (k, &a) in active.iter().enumerate() {
-                crate::linalg::axpy(u[k], x.col(cols[a]), &mut xa_u);
-                crate::linalg::axpy(v[k], x.col(cols[a]), &mut xa_v);
+                x.col_axpy_into(cols[a], u[k], &mut xa_u);
+                x.col_axpy_into(cols[a], v[k], &mut xa_v);
             }
 
             // next event: the largest λ < lam_cur among joins and drops
@@ -155,9 +155,8 @@ impl LassoSolver for LarsSolver {
                 if in_active[k] {
                     continue;
                 }
-                let xj = x.col(cols[k]);
-                let d = c0[k] - dot(xj, &xa_u);
-                let a = dot(xj, &xa_v);
+                let d = c0[k] - x.col_dot_w(cols[k], &xa_u);
+                let a = x.col_dot_w(cols[k], &xa_v);
                 for sgn in [1.0f64, -1.0] {
                     // cⱼ(λ) = d + λ·a meets the boundary sgn·λ at
                     // λ = d / (sgn − a)
@@ -195,10 +194,11 @@ impl LassoSolver for LarsSolver {
                 None => break, // reached λ_target
                 Some((true, k, sgn)) => {
                     // join feature k with sign sgn
-                    let xk = x.col(cols[k]);
-                    let g: Vec<f64> =
-                        active.iter().map(|&a| dot(xk, x.col(cols[a]))).collect();
-                    if chol.push(&g, dot(xk, xk)) {
+                    let g: Vec<f64> = active
+                        .iter()
+                        .map(|&a| x.col_dot_col(cols[k], cols[a]))
+                        .collect();
+                    if chol.push(&g, x.col_sq_norm(cols[k])) {
                         active.push(k);
                         signs.push(sgn);
                         xty.push(c0[k]);
@@ -221,7 +221,7 @@ impl LassoSolver for LarsSolver {
                         .map(|&ai| {
                             active
                                 .iter()
-                                .map(|&aj| dot(x.col(cols[ai]), x.col(cols[aj])))
+                                .map(|&aj| x.col_dot_col(cols[ai], cols[aj]))
                                 .collect()
                         })
                         .collect();
@@ -246,7 +246,7 @@ impl LassoSolver for LarsSolver {
                         xty.push(c0[j]);
                         in_active[j] = true;
                         chol = Chol::new();
-                        chol.push(&[], dot(x.col(cols[j]), x.col(cols[j])));
+                        chol.push(&[], x.col_sq_norm(cols[j]));
                     }
                 }
             }
@@ -256,7 +256,7 @@ impl LassoSolver for LarsSolver {
         let mut r = y.to_vec();
         for (k, &j) in cols.iter().enumerate() {
             if beta[k] != 0.0 {
-                crate::linalg::axpy(-beta[k], x.col(j), &mut r);
+                x.col_axpy_into(j, -beta[k], &mut r);
             }
         }
         let gap = dual::duality_gap(x, y, cols, &beta, &r, lam_target);
@@ -271,7 +271,7 @@ impl LassoSolver for LarsSolver {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::ops::soft_threshold;
+    use crate::linalg::{ops::soft_threshold, DenseMatrix};
     use crate::solver::testutil::small_problem;
     use crate::solver::{cd::CdSolver, SolveOptions};
     use crate::util::prop;

@@ -9,8 +9,11 @@
 //! ([`dual`]), so "exact solution" means gap ≤ `tol_gap`.
 //!
 //! Solvers operate on a **column subset** of the full matrix (the features
-//! that survived screening) without copying: columns are contiguous in the
-//! col-major [`DenseMatrix`], so the reduced problem is just an index list.
+//! that survived screening) without copying: the reduced problem is just an
+//! index list, and every solver is **matrix-free** — it sees the design
+//! matrix only through [`DesignMatrix`] (DESIGN.md §2), so one solver
+//! implementation serves the dense and CSC backends. On CSC a CD epoch
+//! costs O(Σ nnz of the surviving columns) instead of O(N·|cols|).
 
 pub mod cd;
 pub mod dual;
@@ -19,7 +22,7 @@ pub mod fista;
 pub mod group;
 pub mod lars;
 
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 
 /// Convergence options shared by all iterative solvers.
 #[derive(Clone, Debug)]
@@ -62,13 +65,13 @@ impl SolveResult {
 }
 
 /// A Lasso solver over a column-subset problem
-/// `min ½‖y − X[:,cols]·β‖² + λ‖β‖₁`.
+/// `min ½‖y − X[:,cols]·β‖² + λ‖β‖₁`, generic over the matrix backend.
 pub trait LassoSolver {
     /// `beta0` (if given) must be aligned with `cols` and is used as a warm
     /// start where the algorithm supports it.
     fn solve(
         &self,
-        x: &DenseMatrix,
+        x: &dyn DesignMatrix,
         y: &[f64],
         cols: &[usize],
         lam: f64,
@@ -81,8 +84,8 @@ pub trait LassoSolver {
 
 #[cfg(test)]
 pub(crate) mod testutil {
-    use super::*;
     use crate::data::synthetic;
+    use crate::linalg::DenseMatrix;
 
     /// Random small problem + a λ at the given fraction of λmax.
     pub fn small_problem(

@@ -8,8 +8,9 @@
 use dpp_screen::data::synthetic;
 use dpp_screen::linalg::DenseMatrix;
 use dpp_screen::path::{solve_path_with_ctx, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::linalg::DesignMatrix;
 use dpp_screen::runtime::{ArtifactRuntime, ArtifactSweep};
-use dpp_screen::screening::{CorrelationSweep, ScreenContext};
+use dpp_screen::screening::ScreenContext;
 use dpp_screen::util::rng::Rng;
 
 fn runtime() -> Option<ArtifactRuntime> {
