@@ -10,7 +10,6 @@
 //!     cargo run --release --example quickstart
 
 use dpp_screen::data::synthetic;
-use dpp_screen::linalg::CscMatrix;
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 
 fn main() {
@@ -30,7 +29,7 @@ fn main() {
     // The same protocol on the sparse backend — identical API, same
     // screening behaviour (the exact dense/CSC parity properties live in
     // rust/tests/backend_parity.rs; here we just demo the call).
-    let csc = CscMatrix::from_dense(&ds.x);
+    let csc = ds.x.to_csc();
     let sparse = solve_path(&csc, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
     println!(
         "csc backend: mean rejection {:.4} (dense {:.4})",

@@ -1,0 +1,471 @@
+//! Streaming conversion of row-major text datasets (LIBSVM / CSV) into the
+//! on-disk `dppcsc` shard format that [`crate::linalg::MmapCscMatrix`]
+//! pages from (`dpp convert`; layout in DESIGN.md §2b).
+//!
+//! The transpose (row-major input → column-major CSC) is done in **two
+//! passes over the input file** so peak memory is O(p) counters plus one
+//! line buffer — independent of N and nnz:
+//!
+//! 1. count non-zeros per column (and stream `y.bin` out as labels are
+//!    seen), then prefix-sum the counts into `col_ptr.bin`;
+//! 2. re-read the input and scatter each entry to its final offset in
+//!    `row_idx.bin` / `values.bin` with positioned writes (one cursor per
+//!    column; the OS page cache absorbs the small writes, and a
+//!    bounded sorted-run buffer that coalesces them into contiguous
+//!    writes is the known follow-up if syscall overhead ever dominates
+//!    at the 10⁸-nnz scale).
+//!
+//! Rows are processed in order, so each column receives its row indices
+//! already strictly increasing — the CSC invariant holds by construction
+//! once per-line indices are sorted and duplicates rejected
+//! (`io::parse_libsvm_pairs`).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::io::{parse_csv_fields, parse_libsvm_pairs};
+use crate::linalg::mmap::{COL_PTR_FILE, META_FILE, ROW_IDX_FILE, VALUES_FILE, Y_FILE};
+use crate::linalg::DesignMatrix;
+
+/// What a conversion produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvertSummary {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    /// Whether `y.bin` was written (the text converters always write it;
+    /// `shard_from_design` only when given a response vector).
+    pub has_y: bool,
+}
+
+impl ConvertSummary {
+    /// Total shard bytes on disk (entry arrays + col_ptr, + y if written).
+    pub fn disk_bytes(&self) -> usize {
+        let y = if self.has_y { self.n_rows * 8 } else { 0 };
+        self.nnz * 12 + (self.n_cols + 1) * 8 + y
+    }
+}
+
+/// After the pass-2 scatter, every column cursor must have landed exactly
+/// on the next column's start — otherwise the input lost entries between
+/// the passes and `set_len`'s zero-filled tail would masquerade as
+/// spurious `(row 0, 0.0)` entries in the shard.
+fn verify_cursors(cursor: &[u64], col_ptr: &[u64], input: &Path) -> Result<()> {
+    for (j, &c) in cursor.iter().enumerate() {
+        if c != col_ptr[j + 1] {
+            bail!(
+                "{input:?} changed between convert passes (column {j} underfilled: \
+                 {c} of {} entries)",
+                col_ptr[j + 1]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Convert `input` into a shard at `out_dir`, dispatching on the file
+/// extension (`.svm`/`.libsvm` → LIBSVM, anything else → CSV).
+pub fn convert_to_shard(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    p_hint: Option<usize>,
+) -> Result<ConvertSummary> {
+    let path = input.as_ref();
+    let name = path.to_string_lossy();
+    if name.ends_with(".svm") || name.ends_with(".libsvm") {
+        libsvm_to_shard(path, out_dir, p_hint)
+    } else {
+        csv_to_shard(path, out_dir)
+    }
+}
+
+/// LIBSVM (`y idx:val …`, 1-based indices) → shard, two bounded-memory
+/// passes. `p_hint` forces the feature count (else max index seen).
+pub fn libsvm_to_shard(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    p_hint: Option<usize>,
+) -> Result<ConvertSummary> {
+    let input = input.as_ref();
+    let out_dir = out_dir.as_ref();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard dir {out_dir:?}"))?;
+
+    // ---- pass 1: per-column counts, n, p, y.bin ----
+    let mut counts: Vec<u64> = Vec::new();
+    let mut n_rows = 0usize;
+    let mut pairs: Vec<(u32, f64)> = Vec::new();
+    {
+        let f = File::open(input).with_context(|| format!("opening {input:?}"))?;
+        let mut y_out = BufWriter::new(
+            File::create(out_dir.join(Y_FILE))
+                .with_context(|| format!("creating {:?}", out_dir.join(Y_FILE)))?,
+        );
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line.context("reading line")?;
+            let Some(yi) = parse_libsvm_pairs(&line, lineno, &mut pairs)? else {
+                continue;
+            };
+            y_out.write_all(&yi.to_le_bytes())?;
+            for &(j, _) in &pairs {
+                let j = j as usize;
+                if j >= counts.len() {
+                    counts.resize(j + 1, 0);
+                }
+                counts[j] += 1;
+            }
+            n_rows += 1;
+        }
+        y_out.flush()?;
+    }
+    if n_rows == 0 {
+        bail!("no data rows in {input:?}");
+    }
+    if n_rows > u32::MAX as usize {
+        bail!("{} rows exceed u32 row-index range", n_rows);
+    }
+    let n_cols = match p_hint {
+        Some(p) => {
+            if counts.len() > p {
+                bail!("index {} exceeds p_hint {}", counts.len(), p);
+            }
+            p
+        }
+        None => counts.len(),
+    };
+    counts.resize(n_cols, 0);
+
+    let col_ptr = write_col_ptr(out_dir, &counts)?;
+    let nnz = col_ptr[n_cols] as usize;
+
+    // ---- pass 2: scatter entries to their final offsets ----
+    {
+        let idx_out = File::create(out_dir.join(ROW_IDX_FILE))?;
+        let val_out = File::create(out_dir.join(VALUES_FILE))?;
+        idx_out.set_len((nnz * 4) as u64)?;
+        val_out.set_len((nnz * 8) as u64)?;
+        let mut cursor: Vec<u64> = col_ptr[..n_cols].to_vec();
+        let f = File::open(input)?;
+        let mut row = 0u32;
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line.context("reading line")?;
+            let Some(_) = parse_libsvm_pairs(&line, lineno, &mut pairs)? else {
+                continue;
+            };
+            for &(j, v) in &pairs {
+                let j = j as usize;
+                if j >= n_cols || cursor[j] >= col_ptr[j + 1] {
+                    bail!("{input:?} changed between convert passes (column {j} overflow)");
+                }
+                idx_out.write_all_at(&row.to_le_bytes(), cursor[j] * 4)?;
+                val_out.write_all_at(&v.to_le_bytes(), cursor[j] * 8)?;
+                cursor[j] += 1;
+            }
+            row += 1;
+        }
+        if row as usize != n_rows {
+            bail!("{input:?} changed between convert passes (row count)");
+        }
+        verify_cursors(&cursor, &col_ptr, input)?;
+    }
+
+    write_meta(out_dir, n_rows, n_cols, nnz)?;
+    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true })
+}
+
+/// CSV (`y,x1,…,xp` per line) → shard, two bounded-memory passes; exact
+/// zeros are dropped (CSV is a dense format, the shard is sparse).
+pub fn csv_to_shard(input: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Result<ConvertSummary> {
+    let input = input.as_ref();
+    let out_dir = out_dir.as_ref();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard dir {out_dir:?}"))?;
+
+    // ---- pass 1 ----
+    let mut counts: Vec<u64> = Vec::new();
+    let mut n_rows = 0usize;
+    let mut n_cols = 0usize;
+    let mut fields: Vec<f64> = Vec::new();
+    let mut pairs: Vec<(usize, f64)> = Vec::new();
+    {
+        let f = File::open(input).with_context(|| format!("opening {input:?}"))?;
+        let mut y_out = BufWriter::new(File::create(out_dir.join(Y_FILE))?);
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line.context("reading line")?;
+            let Some((yi, ncols)) = parse_csv_entries(&line, lineno, &mut fields, &mut pairs)?
+            else {
+                continue;
+            };
+            if n_rows == 0 {
+                n_cols = ncols;
+            } else if ncols != n_cols {
+                bail!("line {}: {} features, expected {}", lineno + 1, ncols, n_cols);
+            }
+            for &(j, _) in &pairs {
+                if j >= counts.len() {
+                    counts.resize(j + 1, 0);
+                }
+                counts[j] += 1;
+            }
+            y_out.write_all(&yi.to_le_bytes())?;
+            n_rows += 1;
+        }
+        y_out.flush()?;
+    }
+    if n_rows == 0 {
+        bail!("no data rows in {input:?}");
+    }
+    if n_rows > u32::MAX as usize {
+        bail!("{} rows exceed u32 row-index range", n_rows);
+    }
+    counts.resize(n_cols, 0);
+
+    let col_ptr = write_col_ptr(out_dir, &counts)?;
+    let nnz = col_ptr[n_cols] as usize;
+
+    // ---- pass 2 ----
+    {
+        let idx_out = File::create(out_dir.join(ROW_IDX_FILE))?;
+        let val_out = File::create(out_dir.join(VALUES_FILE))?;
+        idx_out.set_len((nnz * 4) as u64)?;
+        val_out.set_len((nnz * 8) as u64)?;
+        let mut cursor: Vec<u64> = col_ptr[..n_cols].to_vec();
+        let f = File::open(input)?;
+        let mut row = 0u32;
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line.context("reading line")?;
+            if parse_csv_entries(&line, lineno, &mut fields, &mut pairs)?.is_none() {
+                continue;
+            }
+            for &(j, v) in &pairs {
+                if j >= n_cols || cursor[j] >= col_ptr[j + 1] {
+                    bail!("{input:?} changed between convert passes (column {j} overflow)");
+                }
+                idx_out.write_all_at(&row.to_le_bytes(), cursor[j] * 4)?;
+                val_out.write_all_at(&v.to_le_bytes(), cursor[j] * 8)?;
+                cursor[j] += 1;
+            }
+            row += 1;
+        }
+        if row as usize != n_rows {
+            bail!("{input:?} changed between convert passes (row count)");
+        }
+        verify_cursors(&cursor, &col_ptr, input)?;
+    }
+
+    write_meta(out_dir, n_rows, n_cols, nnz)?;
+    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true })
+}
+
+/// Write a shard directly from an in-process backend (tests, benches, the
+/// experiments runner's `DPP_MATRIX=mmap` mode). Streams one densified
+/// column at a time — O(N) scratch, never the whole matrix.
+pub fn shard_from_design(
+    x: &dyn DesignMatrix,
+    y: Option<&[f64]>,
+    out_dir: impl AsRef<Path>,
+) -> Result<ConvertSummary> {
+    let out_dir = out_dir.as_ref();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard dir {out_dir:?}"))?;
+    let (n, p) = (x.n_rows(), x.n_cols());
+    if n > u32::MAX as usize {
+        bail!("n_rows {} exceeds u32 row-index range", n);
+    }
+    let mut idx_out = BufWriter::new(File::create(out_dir.join(ROW_IDX_FILE))?);
+    let mut val_out = BufWriter::new(File::create(out_dir.join(VALUES_FILE))?);
+    let mut ptr_out = BufWriter::new(File::create(out_dir.join(COL_PTR_FILE))?);
+    let mut col = vec![0.0; n];
+    let mut nnz = 0u64;
+    ptr_out.write_all(&0u64.to_le_bytes())?;
+    for j in 0..p {
+        x.col_into(j, &mut col);
+        for (i, v) in col.iter().enumerate() {
+            if *v != 0.0 {
+                idx_out.write_all(&(i as u32).to_le_bytes())?;
+                val_out.write_all(&v.to_le_bytes())?;
+                nnz += 1;
+            }
+        }
+        ptr_out.write_all(&nnz.to_le_bytes())?;
+    }
+    idx_out.flush()?;
+    val_out.flush()?;
+    ptr_out.flush()?;
+    if let Some(y) = y {
+        let mut y_out = BufWriter::new(File::create(out_dir.join(Y_FILE))?);
+        for v in y {
+            y_out.write_all(&v.to_le_bytes())?;
+        }
+        y_out.flush()?;
+    }
+    write_meta(out_dir, n, p, nnz as usize)?;
+    Ok(ConvertSummary { n_rows: n, n_cols: p, nnz: nnz as usize, has_y: y.is_some() })
+}
+
+/// Load the shard's response vector, if the converter wrote one.
+pub fn read_shard_y(dir: impl AsRef<Path>) -> Result<Option<Vec<f64>>> {
+    let path = dir.as_ref().join(Y_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let raw = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+    if raw.len() % 8 != 0 {
+        bail!("{path:?} length {} is not a multiple of 8", raw.len());
+    }
+    Ok(Some(
+        raw.chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect(),
+    ))
+}
+
+/// Prefix-sum `counts` into `col_ptr.bin`; returns the in-RAM pointer
+/// array (O(p), also needed for the scatter cursors).
+fn write_col_ptr(out_dir: &Path, counts: &[u64]) -> Result<Vec<u64>> {
+    let mut col_ptr = Vec::with_capacity(counts.len() + 1);
+    col_ptr.push(0u64);
+    for &c in counts {
+        col_ptr.push(col_ptr.last().unwrap() + c);
+    }
+    let mut out = BufWriter::new(File::create(out_dir.join(COL_PTR_FILE))?);
+    for v in &col_ptr {
+        out.write_all(&v.to_le_bytes())?;
+    }
+    out.flush()?;
+    Ok(col_ptr)
+}
+
+fn write_meta(out_dir: &Path, n_rows: usize, n_cols: usize, nnz: usize) -> Result<()> {
+    let text = format!(
+        "format=dppcsc\nversion=1\nn_rows={n_rows}\nn_cols={n_cols}\nnnz={nnz}\n"
+    );
+    std::fs::write(out_dir.join(META_FILE), text)
+        .with_context(|| format!("writing {:?}", out_dir.join(META_FILE)))
+}
+
+/// Parse one CSV line into **non-zero** `(column, value)` entries (reusing
+/// `fields` as tokenizer scratch and `out` for the entries). Tokenization
+/// is `io::parse_csv_fields` — the same parser the in-RAM CSV reader uses,
+/// so the two paths can never drift apart (the LIBSVM converter shares
+/// `io::parse_libsvm_pairs` the same way). Returns `None` for
+/// blank/comment lines, else `(y, n_features)`.
+fn parse_csv_entries(
+    line: &str,
+    lineno: usize,
+    fields: &mut Vec<f64>,
+    out: &mut Vec<(usize, f64)>,
+) -> Result<Option<(f64, usize)>> {
+    let Some(yi) = parse_csv_fields(line, lineno, fields)? else {
+        return Ok(None);
+    };
+    out.clear();
+    for (j, &v) in fields.iter().enumerate() {
+        if v != 0.0 {
+            out.push((j, v));
+        }
+    }
+    Ok(Some((yi, fields.len())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::{read_libsvm, write_csv, write_libsvm};
+    use crate::data::synthetic;
+    use crate::linalg::MmapCscMatrix;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dpp-convert-tests");
+        let _ = std::fs::create_dir_all(&dir);
+        let p = dir.join(name);
+        let _ = std::fs::remove_dir_all(&p);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sparse_dataset(seed: u64) -> crate::data::Dataset {
+        let mut ds = synthetic::synthetic1(12, 9, 3, 0.1, seed);
+        for j in 0..9 {
+            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+                if v.abs() < 0.7 {
+                    *v = 0.0;
+                }
+            }
+        }
+        ds
+    }
+
+    #[test]
+    fn libsvm_conversion_matches_in_ram_reader() {
+        let ds = sparse_dataset(1);
+        let svm = tmp("conv.svm");
+        write_libsvm(&ds, &svm).unwrap();
+        let shard = tmp("conv.dppcsc");
+        let sum = libsvm_to_shard(&svm, &shard, Some(9)).unwrap();
+        assert_eq!((sum.n_rows, sum.n_cols), (12, 9));
+        // the two code paths must build the identical CSC
+        let in_ram = read_libsvm(&svm, Some(9)).unwrap();
+        let mm = MmapCscMatrix::open_with_budget(&shard, 64).unwrap();
+        assert_eq!(mm.to_csc(), in_ram.x.to_csc());
+        assert_eq!(sum.nnz, in_ram.x.nnz());
+        // y round-trips through y.bin
+        let y = read_shard_y(&shard).unwrap().unwrap();
+        assert_eq!(y.len(), 12);
+        for (a, b) in y.iter().zip(in_ram.y.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn csv_conversion_matches_in_ram_reader() {
+        let ds = sparse_dataset(2);
+        let csv = tmp("conv.csv");
+        write_csv(&ds, &csv).unwrap();
+        let shard = tmp("convcsv.dppcsc");
+        let sum = csv_to_shard(&csv, &shard).unwrap();
+        assert_eq!((sum.n_rows, sum.n_cols), (12, 9));
+        let mm = MmapCscMatrix::open_with_budget(&shard, 64).unwrap();
+        let dense = crate::data::io::read_csv(&csv).unwrap();
+        assert_eq!(mm.to_csc().to_dense(), dense.x.to_dense());
+        assert_eq!(read_shard_y(&shard).unwrap().unwrap(), dense.y);
+    }
+
+    #[test]
+    fn shard_from_design_round_trips() {
+        let ds = sparse_dataset(3);
+        let csc = ds.x.to_csc();
+        let dir = tmp("direct.dppcsc");
+        let sum = shard_from_design(&csc, Some(&ds.y), &dir).unwrap();
+        assert_eq!(sum.nnz, csc.nnz());
+        assert!(sum.disk_bytes() > 0);
+        let mm = MmapCscMatrix::open_with_budget(&dir, 48).unwrap();
+        assert_eq!(mm.to_csc(), csc);
+        assert_eq!(read_shard_y(&dir).unwrap().unwrap(), ds.y);
+    }
+
+    #[test]
+    fn p_hint_violation_and_empty_input_fail() {
+        let svm = tmp("hint.svm");
+        std::fs::write(&svm, "1 5:2.0\n").unwrap();
+        assert!(libsvm_to_shard(&svm, tmp("hint.dppcsc"), Some(3)).is_err());
+        let empty = tmp("empty.svm");
+        std::fs::write(&empty, "# nothing\n").unwrap();
+        assert!(libsvm_to_shard(&empty, tmp("empty.dppcsc"), None).is_err());
+    }
+
+    #[test]
+    fn duplicate_indices_error_with_line_number() {
+        let svm = tmp("dup.svm");
+        std::fs::write(&svm, "1 1:1.0\n-1 3:2.0 3:4.0\n").unwrap();
+        let err = libsvm_to_shard(&svm, tmp("dup.dppcsc"), None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate"), "{msg}");
+    }
+}

@@ -1,8 +1,22 @@
 //! Dataset I/O: CSV and (sparse) LIBSVM formats, so downstream users can run
 //! the screening framework on their own data (`dpp path --file …`).
 //!
-//! CSV layout: one sample per line, `y,x1,x2,…,xp` (optional `#` comments).
-//! LIBSVM layout: `y idx:val idx:val …` with 1-based indices.
+//! CSV layout: one sample per line, `y,x1,x2,…,xp` (optional `#` comments);
+//! it is a dense format and loads into the dense backend. LIBSVM layout:
+//! `y idx:val idx:val …` with 1-based indices; it is a sparse format and
+//! loads **straight into the CSC backend** — the entries stream through a
+//! counting sort into `CscMatrix::from_parts` and no dense N×p buffer is
+//! ever allocated, so `Dataset` carries the sparse matrix end-to-end to
+//! `Backend` selection, screening and the solvers. (Before this fix the
+//! reader densified every sparse dataset, which silently forced the whole
+//! EDPP-on-sparse pipeline onto the dense backend.)
+//!
+//! Per-line `idx:val` pairs are sorted by index (LIBSVM in the wild is not
+//! always ordered) and duplicate indices are rejected as parse errors with
+//! line numbers — they used to fall through to `from_parts` asserts and
+//! panic. For datasets larger than RAM, `data::convert` turns the same
+//! formats into an on-disk shard for the `mmap` backend in one
+//! bounded-memory pass.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -10,7 +24,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::Dataset;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{CscMatrix, DenseMatrix};
 
 /// Parse a CSV dataset (`y,x1,…,xp` per line).
 pub fn read_csv(path: impl AsRef<Path>) -> Result<Dataset> {
@@ -19,22 +33,41 @@ pub fn read_csv(path: impl AsRef<Path>) -> Result<Dataset> {
     parse_csv(BufReader::new(f), path.as_ref().display().to_string())
 }
 
+/// Parse one CSV line into its label and feature fields (reusing `out`).
+/// Returns `Ok(None)` for blank/comment lines, else `Ok(Some(label))`.
+/// Shared by the in-RAM reader and the shard converter so the two paths
+/// accept exactly the same inputs (the LIBSVM twin is
+/// [`parse_libsvm_pairs`]).
+pub(crate) fn parse_csv_fields(
+    line: &str,
+    lineno: usize,
+    out: &mut Vec<f64>,
+) -> Result<Option<f64>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    out.clear();
+    let mut vals = line.split(',').map(|t| t.trim().parse::<f64>());
+    let yi = vals
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+        .with_context(|| format!("line {}: bad y", lineno + 1))?;
+    for v in vals {
+        out.push(v.with_context(|| format!("line {}: bad feature", lineno + 1))?);
+    }
+    Ok(Some(yi))
+}
+
 fn parse_csv(reader: impl BufRead, name: String) -> Result<Dataset> {
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut y = Vec::new();
+    let mut feat = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line.context("reading line")?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(yi) = parse_csv_fields(&line, lineno, &mut feat)? else {
             continue;
-        }
-        let mut vals = line.split(',').map(|t| t.trim().parse::<f64>());
-        let yi = vals
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
-            .with_context(|| format!("line {}: bad y", lineno + 1))?;
-        let feat: Result<Vec<f64>, _> = vals.collect();
-        let feat = feat.with_context(|| format!("line {}: bad feature", lineno + 1))?;
+        };
         if let Some(first) = rows.first() {
             if feat.len() != first.len() {
                 bail!(
@@ -46,14 +79,14 @@ fn parse_csv(reader: impl BufRead, name: String) -> Result<Dataset> {
             }
         }
         y.push(yi);
-        rows.push(feat);
+        rows.push(feat.clone());
     }
     if rows.is_empty() {
         bail!("no data rows");
     }
     Ok(Dataset {
         name,
-        x: DenseMatrix::from_rows(&rows),
+        x: DenseMatrix::from_rows(&rows).into(),
         y,
         beta_true: None,
         groups: None,
@@ -76,8 +109,56 @@ pub fn write_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Parse LIBSVM format (`y idx:val …`, 1-based indices). `p_hint` can force
-/// the feature count (otherwise the max index seen is used).
+/// Parse one LIBSVM line into sorted, validated 0-based `(index, value)`
+/// pairs (reusing `out`). Returns `Ok(None)` for blank/comment lines, else
+/// `Ok(Some(label))`. Out-of-order pairs are sorted; duplicate indices,
+/// 0-based indices and malformed tokens are errors carrying the 1-based
+/// line number. Shared by the in-RAM reader and the shard converter so the
+/// two paths accept exactly the same inputs.
+pub(crate) fn parse_libsvm_pairs(
+    line: &str,
+    lineno: usize,
+    out: &mut Vec<(u32, f64)>,
+) -> Result<Option<f64>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    out.clear();
+    let mut toks = line.split_whitespace();
+    let yi: f64 = toks
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+        .parse()
+        .with_context(|| format!("line {}: bad label", lineno + 1))?;
+    for t in toks {
+        let (idx, val) = t
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad pair `{t}`", lineno + 1))?;
+        let idx: usize =
+            idx.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
+        if idx == 0 {
+            bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+        }
+        if idx - 1 > u32::MAX as usize {
+            bail!("line {}: index {} exceeds u32 range", lineno + 1, idx);
+        }
+        let val: f64 =
+            val.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
+        out.push(((idx - 1) as u32, val));
+    }
+    out.sort_unstable_by_key(|(j, _)| *j);
+    for w in out.windows(2) {
+        if w[0].0 == w[1].0 {
+            bail!("line {}: duplicate feature index {}", lineno + 1, w[0].0 + 1);
+        }
+    }
+    Ok(Some(yi))
+}
+
+/// Parse LIBSVM format (`y idx:val …`, 1-based indices) into a **CSC**
+/// dataset. `p_hint` can force the feature count (otherwise the max index
+/// seen is used).
 pub fn read_libsvm(path: impl AsRef<Path>, p_hint: Option<usize>) -> Result<Dataset> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
@@ -85,59 +166,74 @@ pub fn read_libsvm(path: impl AsRef<Path>, p_hint: Option<usize>) -> Result<Data
 }
 
 fn parse_libsvm(reader: impl BufRead, name: String, p_hint: Option<usize>) -> Result<Dataset> {
-    let mut entries: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
     let mut y = Vec::new();
-    let mut p_max = p_hint.unwrap_or(0);
+    let mut p_max = 0usize;
+    let mut pairs = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line.context("reading line")?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(yi) = parse_libsvm_pairs(&line, lineno, &mut pairs)? else {
             continue;
-        }
-        let mut toks = line.split_whitespace();
-        let yi: f64 = toks
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
-            .parse()
-            .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        let mut row = Vec::new();
-        for t in toks {
-            let (idx, val) = t
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair `{t}`", lineno + 1))?;
-            let idx: usize =
-                idx.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
-            if idx == 0 {
-                bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
-            }
-            let val: f64 =
-                val.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
-            p_max = p_max.max(idx);
-            row.push((idx - 1, val));
+        };
+        if let Some(&(j, _)) = pairs.last() {
+            p_max = p_max.max(j as usize + 1);
         }
         y.push(yi);
-        entries.push(row);
+        rows.push(pairs.clone());
     }
-    if entries.is_empty() {
+    if rows.is_empty() {
         bail!("no data rows");
     }
-    if let Some(p) = p_hint {
-        if p_max > p {
-            bail!("index {} exceeds p_hint {}", p_max, p);
+    let p = match p_hint {
+        Some(p) => {
+            if p_max > p {
+                bail!("index {} exceeds p_hint {}", p_max, p);
+            }
+            p
         }
-        p_max = p;
+        None => p_max,
+    };
+    let n = rows.len();
+    if n > u32::MAX as usize {
+        bail!("{} rows exceed u32 row-index range", n);
     }
-    let n = entries.len();
-    let mut x = DenseMatrix::zeros(n, p_max);
-    for (i, row) in entries.iter().enumerate() {
+
+    // counting sort into CSC — O(nnz) memory, no dense buffer: rows are
+    // visited in order, so each column's row indices come out strictly
+    // increasing (the `from_parts` invariant) by construction
+    let mut counts = vec![0usize; p];
+    for row in &rows {
+        for &(j, _) in row {
+            counts[j as usize] += 1;
+        }
+    }
+    let mut col_ptr = vec![0usize; p + 1];
+    for j in 0..p {
+        col_ptr[j + 1] = col_ptr[j] + counts[j];
+    }
+    let nnz = col_ptr[p];
+    let mut row_idx = vec![0u32; nnz];
+    let mut values = vec![0.0; nnz];
+    let mut cursor = col_ptr.clone();
+    for (i, row) in rows.iter().enumerate() {
         for &(j, v) in row {
-            x.set(i, j, v);
+            let k = cursor[j as usize];
+            row_idx[k] = i as u32;
+            values[k] = v;
+            cursor[j as usize] += 1;
         }
     }
-    Ok(Dataset { name, x, y, beta_true: None, groups: None })
+    let x = CscMatrix::from_parts(n, p, col_ptr, row_idx, values);
+    Ok(Dataset { name, x: x.into(), y, beta_true: None, groups: None })
 }
 
-/// Write a dataset in LIBSVM format (zeros skipped).
+/// Write a dataset in LIBSVM format (zeros skipped; any backend).
+///
+/// Element access is `DesignStore::get`, which on the out-of-core `mmap`
+/// backend streams the column per element — fine for the in-RAM backends
+/// and small shards these writers serve, O(N·nnz) disk traffic on a big
+/// shard (a text export of a larger-than-RAM dataset wants a dedicated
+/// column-streaming transpose, which `dpp convert` is the inverse of).
 pub fn write_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     let mut f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
@@ -174,6 +270,7 @@ mod tests {
         write_csv(&ds, &path).unwrap();
         let back = read_csv(&path).unwrap();
         assert_eq!((back.n(), back.p()), (10, 7));
+        assert!(back.x.is_dense());
         for i in 0..10 {
             assert!((back.y[i] - ds.y[i]).abs() < 1e-12);
             for j in 0..7 {
@@ -198,12 +295,15 @@ mod tests {
         assert_eq!(ds.x.get(1, 1), 4.0);
     }
 
+    /// The CSC mirror of `csv_roundtrip`: write → read must land on the
+    /// sparse backend and reproduce every entry (the satellite fix — the
+    /// reader used to densify here).
     #[test]
-    fn libsvm_roundtrip_sparse() {
+    fn libsvm_roundtrip_stays_csc() {
         let mut ds = synthetic::synthetic1(8, 6, 2, 0.1, 2);
         // sparsify
         for j in 0..6 {
-            for v in ds.x.col_mut(j).iter_mut() {
+            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
                 if v.abs() < 0.8 {
                     *v = 0.0;
                 }
@@ -213,11 +313,41 @@ mod tests {
         write_libsvm(&ds, &path).unwrap();
         let back = read_libsvm(&path, Some(6)).unwrap();
         assert_eq!((back.n(), back.p()), (8, 6));
+        assert_eq!(back.x.backend_name(), "csc", "sparse input must stay sparse");
+        // stored entries are exactly the dense matrix's non-zeros
+        assert_eq!(back.x.to_csc(), ds.x.to_csc());
         for i in 0..8 {
             for j in 0..6 {
                 assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn libsvm_unordered_pairs_are_sorted_not_panicked() {
+        let ds = parse_libsvm(
+            Cursor::new("1 3:3.0 1:1.0 2:2.0\n-1 2:5.0\n"),
+            "t".into(),
+            None,
+        )
+        .unwrap();
+        assert_eq!((ds.n(), ds.p()), (2, 3));
+        assert_eq!(ds.x.get(0, 0), 1.0);
+        assert_eq!(ds.x.get(0, 1), 2.0);
+        assert_eq!(ds.x.get(0, 2), 3.0);
+        assert_eq!(ds.x.get(1, 1), 5.0);
+        assert_eq!(ds.x.nnz(), 4);
+    }
+
+    #[test]
+    fn libsvm_duplicate_index_is_an_error_with_line_number() {
+        let err =
+            parse_libsvm(Cursor::new("1 1:1.0\n1 2:1.0 2:9.0\n"), "t".into(), None)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate"), "{msg}");
+        assert!(msg.contains('2'), "{msg}");
     }
 
     #[test]
@@ -235,6 +365,34 @@ mod tests {
         let path = tmp("solve.csv");
         write_csv(&ds, &path).unwrap();
         let back = read_csv(&path).unwrap();
+        let grid = crate::path::LambdaGrid::relative(&back.x, &back.y, 5, 0.1, 1.0);
+        let out = crate::path::solve_path(
+            &back.x,
+            &back.y,
+            &grid,
+            crate::path::RuleKind::Edpp,
+            crate::path::SolverKind::Cd,
+            &crate::path::PathConfig::default(),
+        );
+        assert_eq!(out.records.len(), 5);
+    }
+
+    #[test]
+    fn loaded_sparse_dataset_solves_on_csc() {
+        // the same end-to-end guarantee for the sparse reader: the path
+        // runs on the CSC backend the reader produced, no densify
+        let mut ds = synthetic::synthetic1(20, 30, 4, 0.1, 4);
+        for j in 0..30 {
+            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+                if v.abs() < 0.9 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let path = tmp("solve.svm");
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, Some(30)).unwrap();
+        assert_eq!(back.x.backend_name(), "csc");
         let grid = crate::path::LambdaGrid::relative(&back.x, &back.y, 5, 0.1, 1.0);
         let out = crate::path::solve_path(
             &back.x,

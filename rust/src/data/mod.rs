@@ -1,18 +1,24 @@
 //! Datasets: the paper's synthetic problems and simulated stand-ins for its
 //! nine real datasets (substitution rationale in DESIGN.md §5).
 
+pub mod convert;
 pub mod io;
 pub mod realsim;
 pub mod synthetic;
 
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignStore;
 
 /// A regression problem instance: response `y` (length N) and feature matrix
 /// `x` (N×p). Group-Lasso problems additionally carry `groups`.
+///
+/// `x` is a [`DesignStore`]: generators produce the dense backend, the
+/// LIBSVM reader produces CSC, and shard directories open as the
+/// out-of-core `mmap` backend — whatever the source, `&ds.x` coerces to
+/// `&dyn DesignMatrix` at every screening/solver/path call site.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
-    pub x: DenseMatrix,
+    pub x: DesignStore,
     pub y: Vec<f64>,
     /// Ground-truth coefficients when generated from a linear model
     /// (used to verify support recovery in tests; `None` for label-style y).
@@ -31,7 +37,8 @@ impl Dataset {
 
     /// Scale every feature column to unit ℓ2 norm (required by DOME; the
     /// DPP family works either way — the paper explicitly does *not* assume
-    /// unit length, §2.1).
+    /// unit length, §2.1). In-RAM backends only; normalize before
+    /// converting to an on-disk shard.
     pub fn normalize_features(&mut self) {
         self.x.normalize_columns();
     }

@@ -24,7 +24,7 @@ use crate::util::rng::Rng;
 pub fn generate(which: RealDataset, full: bool, seed: u64) -> Dataset {
     let (n, p) = which.shape(full);
     let mut rng = Rng::new(seed ^ 0xDA7A ^ (which.name().len() as u64) << 17);
-    let (x, y, style) = match which {
+    let (mut x, mut y, style) = match which {
         RealDataset::ProstateCancer => {
             // protein mass spectrometry: sharp peaks over a smooth baseline
             let x = spectrometry(n, p, &mut rng);
@@ -51,16 +51,15 @@ pub fn generate(which: RealDataset, full: bool, seed: u64) -> Dataset {
             (x, y, "digits")
         }
     };
-    let mut ds = Dataset {
+    center_columns(&mut x);
+    center(&mut y);
+    Dataset {
         name: format!("{}-sim-{}", which.name(), style),
-        x,
+        x: x.into(),
         y,
         beta_true: None,
         groups: None,
-    };
-    center_columns(&mut ds.x);
-    center(&mut ds.y);
-    ds
+    }
 }
 
 fn center(v: &mut [f64]) {
@@ -251,7 +250,7 @@ mod tests {
             let (n, p) = d.small_shape();
             assert_eq!((ds.n(), ds.p()), (n, p), "{}", d.name());
             assert!(ds.y.iter().all(|v| v.is_finite()));
-            assert!(ds.x.data().iter().all(|v| v.is_finite()));
+            assert!(ds.x.dense().data().iter().all(|v| v.is_finite()));
         }
     }
 
@@ -270,7 +269,7 @@ mod tests {
         let ds = generate(RealDataset::BreastCancer, false, 2);
         let mut zero_cols = 0;
         for j in 0..ds.p() {
-            let c = ds.x.col(j);
+            let c = ds.x.dense().col(j);
             assert!(stats::mean(c).abs() < 1e-9, "col {j} not centered");
             if nrm2(c) < 1e-12 {
                 zero_cols += 1;
@@ -285,7 +284,8 @@ mod tests {
         // must correlate far more than generic gaussian pairs would
         let ds = generate(RealDataset::Pie, false, 3);
         let n_protos = (ds.p() / 64).clamp(4, 128);
-        let (a, b) = (ds.x.col(0), ds.x.col(n_protos)); // same prototype class
+        let x = ds.x.dense();
+        let (a, b) = (x.col(0), x.col(n_protos)); // same prototype class
         let corr = dot(a, b) / (nrm2(a) * nrm2(b));
         assert!(corr.abs() > 0.05, "corr={corr}");
     }

@@ -63,7 +63,13 @@ pub fn synthetic1(n: usize, p: usize, nnz: usize, sigma: f64, seed: u64) -> Data
     let x = gaussian_iid(n, p, &mut rng);
     let beta = sparse_ground_truth(p, nnz, &mut rng);
     let y = linear_response(&x, &beta, sigma, &mut rng);
-    Dataset { name: format!("synthetic1-nnz{nnz}"), x, y, beta_true: Some(beta), groups: None }
+    Dataset {
+        name: format!("synthetic1-nnz{nnz}"),
+        x: x.into(),
+        y,
+        beta_true: Some(beta),
+        groups: None,
+    }
 }
 
 /// Synthetic 2: correlated design, corr(x_i, x_j) = 0.5^{|i−j|}.
@@ -72,7 +78,13 @@ pub fn synthetic2(n: usize, p: usize, nnz: usize, sigma: f64, seed: u64) -> Data
     let x = gaussian_ar1(n, p, 0.5, &mut rng);
     let beta = sparse_ground_truth(p, nnz, &mut rng);
     let y = linear_response(&x, &beta, sigma, &mut rng);
-    Dataset { name: format!("synthetic2-nnz{nnz}"), x, y, beta_true: Some(beta), groups: None }
+    Dataset {
+        name: format!("synthetic2-nnz{nnz}"),
+        x: x.into(),
+        y,
+        beta_true: Some(beta),
+        groups: None,
+    }
 }
 
 /// Group-Lasso synthetic problem (§4.2): X is N×p i.i.d. standard Gaussian,
@@ -87,7 +99,7 @@ pub fn group_synthetic(n: usize, p: usize, n_groups: usize, seed: u64) -> Datase
     let groups = (0..n_groups).map(|g| (g * gsize, gsize)).collect();
     Dataset {
         name: format!("group-ng{n_groups}"),
-        x,
+        x: x.into(),
         y,
         beta_true: None,
         groups: Some(groups),

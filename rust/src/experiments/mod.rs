@@ -9,22 +9,54 @@
 //! is minutes-scale on one core. `DPP_TRIALS` / `DPP_GRID` override the
 //! trial count and λ-grid size (paper: 100 trials / 100-point grid).
 //! `DPP_MATRIX=csc` runs every Lasso path through the sparse CSC backend
-//! instead of the dense one (the rules/solvers are backend-generic, so the
-//! numbers must match; only the runtimes differ).
+//! instead of the dense one, and `DPP_MATRIX=mmap` through the out-of-core
+//! shard backend (each trial's matrix is written to a temp shard and paged
+//! back under the window budget — the rules/solvers are backend-generic,
+//! so the numbers must match; only the runtimes differ).
 
 use crate::coordinator::run_trials;
-use crate::data::{synthetic, Dataset, RealDataset};
-use crate::linalg::{CscMatrix, DesignMatrix};
+use crate::data::{convert, synthetic, Dataset, RealDataset};
+use crate::linalg::{DesignMatrix, DesignStore, MmapCscMatrix};
 use crate::path::group::{solve_group_path, GroupRuleKind};
 use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
 use crate::solver::SolveOptions;
 use crate::util::benchkit::Report;
 use crate::util::{full_scale, grid_size, n_trials};
 
-/// Whether the experiment harness should run Lasso paths on the CSC
-/// backend (`DPP_MATRIX=csc`; default dense).
-fn use_csc_backend() -> bool {
-    std::env::var("DPP_MATRIX").map(|v| v == "csc").unwrap_or(false)
+/// Which backend the experiment harness runs Lasso paths on
+/// (`DPP_MATRIX=dense|csc|mmap`; default dense — the generators produce
+/// dense matrices).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum MatrixEnv {
+    Dense,
+    Csc,
+    Mmap,
+}
+
+fn matrix_env() -> MatrixEnv {
+    match std::env::var("DPP_MATRIX").as_deref() {
+        Err(_) | Ok("") | Ok("dense") => MatrixEnv::Dense,
+        Ok("csc") => MatrixEnv::Csc,
+        Ok("mmap") => MatrixEnv::Mmap,
+        Ok(other) => {
+            // a typo must not silently mislabel a whole experiment run as
+            // another backend's numbers
+            eprintln!("unknown DPP_MATRIX `{other}` (dense|csc|mmap)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Write this trial's matrix to a temp shard and reopen it out-of-core.
+/// Returns the store plus the shard dir to clean up afterwards.
+fn mmap_trial_store(ds: &Dataset, tag: u64) -> (DesignStore, std::path::PathBuf) {
+    let dir = std::env::temp_dir()
+        .join(format!("dpp-exp-shard-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    convert::shard_from_design(ds.x.as_design(), Some(&ds.y), &dir)
+        .expect("writing experiment shard");
+    let mm = MmapCscMatrix::open(&dir).expect("opening experiment shard");
+    (DesignStore::Mmap(mm), dir)
 }
 
 /// Dispatch an experiment by name.
@@ -80,13 +112,20 @@ fn run_rules(
 ) -> (Vec<LassoRun>, f64, Vec<Vec<f64>>) {
     let cfg = PathConfig { sequential, ..Default::default() };
     let workers = crate::coordinator::default_workers();
-    let csc = use_csc_backend();
+    let backend = matrix_env();
     // per-trial: baseline time + per-rule outputs
     let per_trial = run_trials(trials, workers, |t| {
         let ds = make_ds(1000 + t as u64);
-        let sparse = if csc { Some(CscMatrix::from_dense(&ds.x)) } else { None };
-        let x: &dyn DesignMatrix = match &sparse {
-            Some(m) => m,
+        let (store, shard_dir) = match backend {
+            MatrixEnv::Dense => (None, None),
+            MatrixEnv::Csc => (Some(DesignStore::Csc(ds.x.to_csc())), None),
+            MatrixEnv::Mmap => {
+                let (s, dir) = mmap_trial_store(&ds, t as u64);
+                (Some(s), Some(dir))
+            }
+        };
+        let x: &dyn DesignMatrix = match &store {
+            Some(s) => s.as_design(),
             None => &ds.x,
         };
         let grid = paper_grid(&ds, k);
@@ -95,6 +134,10 @@ fn run_rules(
             .iter()
             .map(|&r| solve_path(x, &ds.y, &grid, r, solver, &cfg))
             .collect();
+        drop(store);
+        if let Some(dir) = shard_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
         (base.total_secs(), outs)
     });
     // aggregate: mean baseline time; concatenate rule outputs (mean ratios

@@ -23,7 +23,8 @@
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
 //! * **Substrates**: the matrix-free [`linalg::DesignMatrix`] trait with its
-//!   dense and CSC backends ([`linalg`]), dataset generators matching the
+//!   dense, CSC and out-of-core mmap-shard backends ([`linalg`]), dataset
+//!   generators matching the
 //!   paper's synthetic and (simulated) real datasets ([`data`]), and
 //!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
 //!   testing — hand-rolled because the build image is offline (DESIGN.md §3).
@@ -50,8 +51,11 @@
 //! // EDPP is safe: every rejection is a true zero of the reference solution.
 //! assert!(out.mean_rejection_ratio() <= 1.0 + 1e-12);
 //!
-//! // The identical protocol on the sparse backend, no densify round-trip:
-//! let csc = CscMatrix::from_dense(&ds.x);
+//! // The identical protocol on the sparse backend, no densify round-trip
+//! // (datasets loaded from LIBSVM via `data::io::read_libsvm` arrive in
+//! // CSC form already, and on-disk shards open as the out-of-core
+//! // `MmapCscMatrix` backend — see `data::convert`):
+//! let csc = ds.x.to_csc();
 //! let sparse_out = solve_path(&csc, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
 //! assert_eq!(out.records.len(), sparse_out.records.len());
 //! ```
@@ -69,7 +73,7 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::data::Dataset;
-    pub use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
+    pub use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix};
     pub use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
     pub use crate::screening::{ScreenContext, ScreeningRule};
     pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};

@@ -1,0 +1,565 @@
+//! Out-of-core CSC backend: the paper's §1 motivation ("we may not even be
+//! able to load the data matrix into main memory") at full scale.
+//!
+//! [`MmapCscMatrix`] implements the complete [`DesignMatrix`] contract over
+//! an on-disk **shard**: a directory holding the raw CSC triple
+//! (`col_ptr.bin` / `row_idx.bin` / `values.bin`, little-endian) plus a
+//! small `meta.txt` header and optionally the response `y.bin`
+//! (DESIGN.md §2b documents the byte layout; `data::convert` writes it
+//! in one bounded-memory pass from LIBSVM/CSV input).
+//!
+//! Only `col_ptr` (8·(p+1) bytes) and one sliding **window** of the entry
+//! arrays are ever resident; the window is bounded by a configurable byte
+//! budget (`open_with_budget`, or the `DPP_MMAP_BUDGET` env var), so the
+//! peak footprint is independent of nnz. Every column-local kernel streams
+//! its entries through the window in index order, which keeps the floating
+//! point accumulation order identical to [`CscMatrix`] — the parity tests
+//! in `rust/tests/backend_parity.rs` pin keep-sets and CD trajectories
+//! bit-identical between the two sparse backends.
+//!
+//! The offline build image has no mmap-capable dependency (only `anyhow`
+//! and the `xla` closure are vendored, DESIGN.md §3) and `std` exposes no
+//! `mmap(2)` wrapper, so the window is filled with positioned
+//! `read_exact_at` calls; the OS page cache plays the role of the mapped
+//! pages. The behavioural contract is the same: X itself is never held in
+//! process memory.
+
+use std::fs::File;
+use std::io::Read;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CscMatrix, DesignMatrix};
+
+/// Shard file names (all inside the shard directory).
+pub const META_FILE: &str = "meta.txt";
+pub const COL_PTR_FILE: &str = "col_ptr.bin";
+pub const ROW_IDX_FILE: &str = "row_idx.bin";
+pub const VALUES_FILE: &str = "values.bin";
+pub const Y_FILE: &str = "y.bin";
+
+/// Bytes of resident window per stored entry (u32 row index + f64 value).
+pub const ENTRY_BYTES: usize = 12;
+
+/// Default window budget: 4 MiB ≈ 350k entries per refill.
+pub const DEFAULT_WINDOW_BYTES: usize = 4 << 20;
+
+/// Env var overriding the default window budget (bytes).
+pub const BUDGET_ENV: &str = "DPP_MMAP_BUDGET";
+
+/// Sliding decoded window over the entry arrays: entries
+/// `[start, start + idx.len())` of `row_idx.bin` / `values.bin`.
+struct Pager {
+    idx_file: File,
+    val_file: File,
+    start: usize,
+    idx: Vec<u32>,
+    vals: Vec<f64>,
+    raw: Vec<u8>,
+    /// Max entries per window (≥ 1).
+    cap: usize,
+}
+
+impl Pager {
+    /// Ensure entry `lo` is inside the window, refilling forward from `lo`
+    /// (up to `cap` entries) if not. `total` is the shard's nnz.
+    fn ensure(&mut self, lo: usize, total: usize) {
+        if lo >= self.start && lo < self.start + self.idx.len() {
+            return;
+        }
+        let end = total.min(lo + self.cap);
+        let len = end - lo;
+        self.raw.resize(len * 4, 0);
+        self.idx_file
+            .read_exact_at(&mut self.raw, (lo * 4) as u64)
+            .expect("shard row_idx.bin read failed");
+        self.idx.clear();
+        self.idx.extend(
+            self.raw.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        self.raw.resize(len * 8, 0);
+        self.val_file
+            .read_exact_at(&mut self.raw, (lo * 8) as u64)
+            .expect("shard values.bin read failed");
+        self.vals.clear();
+        self.vals.extend(
+            self.raw
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])),
+        );
+        // drop the byte scratch between refills: resident memory stays at
+        // the documented 12 B/entry (idx + vals), not 20 B/entry — the
+        // re-allocation per refill is noise next to the disk read itself
+        self.raw = Vec::new();
+        self.start = lo;
+    }
+}
+
+/// Out-of-core CSC matrix paging `row_idx`/`values` from an on-disk shard.
+///
+/// One matrix owns **one** sliding window behind a `Mutex`, which makes it
+/// `Sync` but serializes concurrent sweeps and lets threads at distant
+/// offsets evict each other's window. For parallel workloads
+/// (`stability_selection` rounds, multi-threaded trials), give each worker
+/// its own handle via [`Clone`] — cloning reopens the shard with an
+/// independent window, so readers never contend or thrash.
+pub struct MmapCscMatrix {
+    dir: PathBuf,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    col_ptr: Vec<u64>,
+    budget: usize,
+    pager: Mutex<Pager>,
+}
+
+impl MmapCscMatrix {
+    /// Open a shard directory with the default window budget
+    /// (`DPP_MMAP_BUDGET` bytes if set, else [`DEFAULT_WINDOW_BYTES`]).
+    pub fn open(dir: impl AsRef<Path>) -> Result<MmapCscMatrix> {
+        let budget = std::env::var(BUDGET_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_WINDOW_BYTES);
+        Self::open_with_budget(dir, budget)
+    }
+
+    /// Open a shard directory, holding at most ~`budget_bytes` of decoded
+    /// entries resident at a time (plus the 8·(p+1)-byte `col_ptr`).
+    pub fn open_with_budget(dir: impl AsRef<Path>, budget_bytes: usize) -> Result<MmapCscMatrix> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = read_meta(&dir.join(META_FILE))
+            .with_context(|| format!("reading shard meta {:?}", dir.join(META_FILE)))?;
+        let (n_rows, n_cols, nnz) = meta;
+        if n_rows > u32::MAX as usize {
+            bail!("shard n_rows {} exceeds u32 row-index range", n_rows);
+        }
+
+        let mut col_ptr = vec![0u64; n_cols + 1];
+        {
+            let mut f = File::open(dir.join(COL_PTR_FILE))
+                .with_context(|| format!("opening {:?}", dir.join(COL_PTR_FILE)))?;
+            let mut raw = vec![0u8; (n_cols + 1) * 8];
+            f.read_exact(&mut raw).context("col_ptr.bin shorter than meta n_cols")?;
+            for (dst, c) in col_ptr.iter_mut().zip(raw.chunks_exact(8)) {
+                *dst = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+            }
+        }
+        if col_ptr[0] != 0 {
+            bail!("shard col_ptr[0] = {} (expected 0)", col_ptr[0]);
+        }
+        for j in 0..n_cols {
+            if col_ptr[j] > col_ptr[j + 1] {
+                bail!("shard col_ptr decreases at column {j}");
+            }
+        }
+        if col_ptr[n_cols] != nnz as u64 {
+            bail!("shard col_ptr end {} != meta nnz {}", col_ptr[n_cols], nnz);
+        }
+
+        let idx_file = File::open(dir.join(ROW_IDX_FILE))
+            .with_context(|| format!("opening {:?}", dir.join(ROW_IDX_FILE)))?;
+        let val_file = File::open(dir.join(VALUES_FILE))
+            .with_context(|| format!("opening {:?}", dir.join(VALUES_FILE)))?;
+        let idx_len = idx_file.metadata()?.len();
+        let val_len = val_file.metadata()?.len();
+        if idx_len != (nnz * 4) as u64 {
+            bail!("row_idx.bin is {} bytes, expected {} (nnz {})", idx_len, nnz * 4, nnz);
+        }
+        if val_len != (nnz * 8) as u64 {
+            bail!("values.bin is {} bytes, expected {} (nnz {})", val_len, nnz * 8, nnz);
+        }
+
+        let cap = (budget_bytes / ENTRY_BYTES).max(1);
+        Ok(MmapCscMatrix {
+            dir,
+            n_rows,
+            n_cols,
+            nnz,
+            col_ptr,
+            budget: budget_bytes,
+            pager: Mutex::new(Pager {
+                idx_file,
+                val_file,
+                start: 0,
+                idx: Vec::new(),
+                vals: Vec::new(),
+                raw: Vec::new(),
+                cap,
+            }),
+        })
+    }
+
+    /// The shard directory this matrix pages from.
+    pub fn shard_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Configured window budget in bytes.
+    pub fn window_budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+    /// Stored non-zeros (on disk, not resident).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stream column `j`'s `(row_idx, values)` entries through the window
+    /// in row order, invoking `f` once per resident chunk. The window lock
+    /// is held across the call — `f` must not touch this matrix.
+    pub fn for_col(&self, j: usize, mut f: impl FnMut(&[u32], &[f64])) {
+        let lo = self.col_ptr[j] as usize;
+        let hi = self.col_ptr[j + 1] as usize;
+        let mut pager = self.pager.lock().unwrap();
+        let mut s = lo;
+        while s < hi {
+            pager.ensure(s, self.nnz);
+            let off = s - pager.start;
+            let end = (pager.start + pager.idx.len()).min(hi);
+            let n = end - s;
+            f(&pager.idx[off..off + n], &pager.vals[off..off + n]);
+            s = end;
+        }
+    }
+
+    /// Copy one column's entries into owned buffers (bounded by the
+    /// column's nnz — used only for merge-joins, never whole-matrix).
+    fn materialize_col(&self, j: usize) -> (Vec<u32>, Vec<f64>) {
+        let len = (self.col_ptr[j + 1] - self.col_ptr[j]) as usize;
+        let mut idx = Vec::with_capacity(len);
+        let mut vals = Vec::with_capacity(len);
+        self.for_col(j, |i, v| {
+            idx.extend_from_slice(i);
+            vals.extend_from_slice(v);
+        });
+        (idx, vals)
+    }
+
+    /// Load the whole shard into an in-RAM [`CscMatrix`] (small problems,
+    /// `--matrix csc` on a shard input, tests).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(self.n_cols + 1);
+        col_ptr.push(0usize);
+        let mut row_idx = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        for j in 0..self.n_cols {
+            self.for_col(j, |i, v| {
+                row_idx.extend_from_slice(i);
+                values.extend_from_slice(v);
+            });
+            col_ptr.push(values.len());
+        }
+        CscMatrix::from_parts(self.n_rows, self.n_cols, col_ptr, row_idx, values)
+    }
+}
+
+impl Clone for MmapCscMatrix {
+    fn clone(&self) -> MmapCscMatrix {
+        MmapCscMatrix::open_with_budget(&self.dir, self.budget)
+            .expect("reopening shard for clone")
+    }
+}
+
+impl std::fmt::Debug for MmapCscMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapCscMatrix")
+            .field("dir", &self.dir)
+            .field("n_rows", &self.n_rows)
+            .field("n_cols", &self.n_cols)
+            .field("nnz", &self.nnz)
+            .field("budget", &self.budget)
+            .finish()
+    }
+}
+
+impl DesignMatrix for MmapCscMatrix {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        // consecutive columns are consecutive in entry space, so the sweep
+        // streams each window exactly once
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.col_dot_w(j, w);
+        }
+    }
+
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        let mut s = 0.0;
+        self.for_col(j, |idx, vals| {
+            for (i, v) in idx.iter().zip(vals.iter()) {
+                s += w[*i as usize] * v;
+            }
+        });
+        s
+    }
+
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        self.for_col(j, |idx, vals| {
+            for (i, v) in idx.iter().zip(vals.iter()) {
+                out[*i as usize] += a * v;
+            }
+        });
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        let mut s = 0.0;
+        self.for_col(j, |_, vals| {
+            for v in vals {
+                s += v * v;
+            }
+        });
+        s
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        // merge-join: column i materialized (bounded by its nnz), column j
+        // streamed through the window
+        let (ai, av) = self.materialize_col(i);
+        let mut a = 0usize;
+        let mut s = 0.0;
+        self.for_col(j, |bi, bv| {
+            for (b, v) in bi.iter().zip(bv.iter()) {
+                while a < ai.len() && ai[a] < *b {
+                    a += 1;
+                }
+                if a < ai.len() && ai[a] == *b {
+                    s += av[a] * v;
+                }
+            }
+        });
+        s
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n_rows);
+        out.fill(0.0);
+        self.for_col(j, |idx, vals| {
+            for (i, v) in idx.iter().zip(vals.iter()) {
+                out[*i as usize] = *v;
+            }
+        });
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len());
+        // requested rows sorted once, then one forward merge against the
+        // streamed column (rows need not be sorted or unique)
+        let mut order: Vec<(u32, usize)> =
+            rows.iter().enumerate().map(|(k, &r)| (r as u32, k)).collect();
+        order.sort_unstable();
+        out.fill(0.0);
+        let mut pos = 0usize;
+        self.for_col(j, |idx, vals| {
+            for (i, v) in idx.iter().zip(vals.iter()) {
+                while pos < order.len() && order[pos].0 < *i {
+                    pos += 1;
+                }
+                let mut q = pos;
+                while q < order.len() && order[q].0 == *i {
+                    out[order[q].1] = *v;
+                    q += 1;
+                }
+            }
+        });
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+}
+
+/// Parse `meta.txt` → (n_rows, n_cols, nnz).
+fn read_meta(path: &Path) -> Result<(usize, usize, usize)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut format = None;
+    let mut version = None;
+    let mut n_rows = None;
+    let mut n_cols = None;
+    let mut nnz = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("bad meta line `{line}`");
+        };
+        match k.trim() {
+            "format" => format = Some(v.trim().to_string()),
+            "version" => version = Some(v.trim().to_string()),
+            "n_rows" => n_rows = Some(v.trim().parse::<usize>().context("bad n_rows")?),
+            "n_cols" => n_cols = Some(v.trim().parse::<usize>().context("bad n_cols")?),
+            "nnz" => nnz = Some(v.trim().parse::<usize>().context("bad nnz")?),
+            _ => {} // forward-compatible: ignore unknown keys
+        }
+    }
+    match format.as_deref() {
+        Some("dppcsc") => {}
+        other => bail!("not a dppcsc shard (format={other:?})"),
+    }
+    match version.as_deref() {
+        Some("1") => {}
+        other => bail!("unsupported dppcsc version {other:?}"),
+    }
+    match (n_rows, n_cols, nnz) {
+        (Some(n), Some(p), Some(z)) => Ok((n, p, z)),
+        _ => bail!("meta.txt missing n_rows/n_cols/nnz"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::convert::shard_from_design;
+    use crate::linalg::DenseMatrix;
+    use crate::util::{prop, rng::Rng};
+
+    fn tmp_shard(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dpp-mmap-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn random_csc(n: usize, p: usize, density: f64, seed: u64) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let mut x = DenseMatrix::zeros(n, p);
+        for j in 0..p {
+            for v in x.col_mut(j).iter_mut() {
+                if rng.f64() < density {
+                    *v = rng.normal();
+                }
+            }
+        }
+        CscMatrix::from_dense(&x)
+    }
+
+    /// Every trait method must agree with the in-RAM CSC built from the
+    /// same data, even when the window budget forces many refills — the
+    /// out-of-core analogue of `design.rs::dense_and_csc_agree_on_all_ops`.
+    #[test]
+    fn mmap_matches_csc_on_all_ops_with_tiny_windows() {
+        prop::check("DesignMatrix mmap == csc", 0x33A9, 6, |rng| {
+            let n = 2 + rng.usize(20);
+            let p = 2 + rng.usize(25);
+            let csc = random_csc(n, p, rng.uniform(0.1, 0.8), rng.next_u64());
+            let dir = tmp_shard(&format!("ops-{n}-{p}"));
+            shard_from_design(&csc, None, &dir).unwrap();
+            // budgets from one-entry windows up: correctness must not
+            // depend on window placement
+            let budget = [1, 60, 4096][rng.usize(3)];
+            let mm = MmapCscMatrix::open_with_budget(&dir, budget).unwrap();
+            let s: &dyn DesignMatrix = &csc;
+            let m: &dyn DesignMatrix = &mm;
+            assert_eq!((s.n_rows(), s.n_cols(), s.nnz()), (m.n_rows(), m.n_cols(), m.nnz()));
+
+            let mut w = vec![0.0; n];
+            rng.fill_normal(&mut w);
+            let mut a = vec![0.0; p];
+            let mut b = vec![0.0; p];
+            s.xt_w(&w, &mut a);
+            m.xt_w(&w, &mut b);
+            // identical accumulation order ⇒ bit-identical, not just close
+            assert_eq!(a, b, "xt_w");
+            for j in 0..p {
+                assert_eq!(s.col_dot_w(j, &w), m.col_dot_w(j, &w), "col_dot_w {j}");
+                assert_eq!(s.col_sq_norm(j), m.col_sq_norm(j), "col_sq_norm {j}");
+            }
+            let i = rng.usize(p);
+            let j = rng.usize(p);
+            assert_eq!(s.col_dot_col(i, j), m.col_dot_col(i, j), "col_dot_col ({i},{j})");
+
+            let mut sa = vec![0.0; n];
+            let mut ma = vec![0.0; n];
+            s.col_axpy_into(j, -2.5, &mut sa);
+            m.col_axpy_into(j, -2.5, &mut ma);
+            assert_eq!(sa, ma, "col_axpy_into {j}");
+
+            let mut sc = vec![1.0; n];
+            let mut mc = vec![1.0; n];
+            s.col_into(j, &mut sc);
+            m.col_into(j, &mut mc);
+            assert_eq!(sc, mc, "col_into {j}");
+
+            let rows: Vec<usize> = (0..n).rev().step_by(2).collect(); // unsorted on purpose
+            let mut sr = vec![0.0; rows.len()];
+            let mut mr = vec![0.0; rows.len()];
+            s.col_gather(j, &rows, &mut sr);
+            m.col_gather(j, &rows, &mut mr);
+            assert_eq!(sr, mr, "col_gather {j}");
+            let _ = std::fs::remove_dir_all(&dir);
+        });
+    }
+
+    #[test]
+    fn round_trips_through_to_csc() {
+        let csc = random_csc(17, 23, 0.3, 5);
+        let dir = tmp_shard("roundtrip");
+        shard_from_design(&csc, None, &dir).unwrap();
+        let mm = MmapCscMatrix::open_with_budget(&dir, 100).unwrap();
+        assert_eq!(mm.to_csc(), csc);
+        // clone reopens the shard and still agrees
+        let cl = mm.clone();
+        assert_eq!(cl.to_csc(), csc);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn window_stays_within_budget_while_data_exceeds_it() {
+        // the acceptance-criterion shape: values+indices far larger than
+        // the window budget, every op still exact
+        let csc = random_csc(40, 120, 0.4, 6);
+        let on_disk = csc.nnz() * ENTRY_BYTES;
+        let budget = 256;
+        assert!(on_disk > 4 * budget, "test problem too small: {on_disk} bytes");
+        let dir = tmp_shard("budget");
+        shard_from_design(&csc, None, &dir).unwrap();
+        let mm = MmapCscMatrix::open_with_budget(&dir, budget).unwrap();
+        {
+            let pager = mm.pager.lock().unwrap();
+            assert!(pager.cap * ENTRY_BYTES <= budget.max(ENTRY_BYTES));
+        }
+        let mut w = vec![0.0; 40];
+        Rng::new(7).fill_normal(&mut w);
+        let mut a = vec![0.0; 120];
+        let mut b = vec![0.0; 120];
+        csc.gemv_t(&w, &mut a);
+        mm.xt_w(&w, &mut b);
+        assert_eq!(a, b);
+        // after a full sweep the resident window is still ≤ cap entries
+        let pager = mm.pager.lock().unwrap();
+        assert!(pager.idx.len() <= pager.cap);
+    }
+
+    #[test]
+    fn open_rejects_missing_and_corrupt_shards() {
+        assert!(MmapCscMatrix::open(tmp_shard("nope")).is_err());
+        // corrupt: truncate values.bin after a valid write
+        let csc = random_csc(8, 6, 0.5, 8);
+        let dir = tmp_shard("corrupt");
+        shard_from_design(&csc, None, &dir).unwrap();
+        let vals = dir.join(VALUES_FILE);
+        let f = std::fs::OpenOptions::new().write(true).open(&vals).unwrap();
+        f.set_len(3).unwrap();
+        let err = MmapCscMatrix::open_with_budget(&dir, 1024).unwrap_err();
+        assert!(format!("{err:#}").contains("values.bin"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

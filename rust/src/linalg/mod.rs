@@ -1,21 +1,29 @@
 //! Linear-algebra substrate: the matrix-free [`DesignMatrix`] trait
-//! (DESIGN.md §2) and its two in-memory backends.
+//! (DESIGN.md §2) and its backends.
 //!
 //! The dense backend stores X (N×p) **column-major**: screening and
 //! coordinate descent both sweep features, and a contiguous column makes
 //! `xᵢᵀw` a streaming dot product. The sparse backend ([`CscMatrix`]) stores
-//! only non-zeros, so the same sweep costs O(nnz). All consumers (screening
-//! rules, solvers, path drivers, the service) talk to `&dyn DesignMatrix`;
-//! the two hot operations are [`DesignMatrix::xt_w`] (the screening sweep
-//! `Xᵀw`) and the per-column dots/axpys inside the solvers.
+//! only non-zeros, so the same sweep costs O(nnz). The out-of-core backend
+//! ([`MmapCscMatrix`]) pages the same CSC triple from an on-disk shard
+//! through a bounded window, so X never has to fit in memory at all.
+//! [`DesignStore`] is the owned enum over all three that `data::Dataset`
+//! carries. All consumers (screening rules, solvers, path drivers, the
+//! service) talk to `&dyn DesignMatrix`; the two hot operations are
+//! [`DesignMatrix::xt_w`] (the screening sweep `Xᵀw`) and the per-column
+//! dots/axpys inside the solvers.
 
 pub mod design;
+pub mod mmap;
 pub mod ops;
 pub mod sparse;
+pub mod store;
 
 pub use design::DesignMatrix;
+pub use mmap::MmapCscMatrix;
 pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale};
 pub use sparse::CscMatrix;
+pub use store::DesignStore;
 
 /// Column-major dense matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]

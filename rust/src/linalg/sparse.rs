@@ -97,6 +97,34 @@ impl CscMatrix {
         (&self.row_idx[a..b], &self.values[a..b])
     }
 
+    /// Single element (binary search over the column — I/O and tests, not
+    /// hot loops).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (idx, vals) = self.col(j);
+        match idx.binary_search(&(i as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Scale every column to unit ℓ2 norm in place (zero columns left
+    /// untouched). Returns the original norms — the sparse counterpart of
+    /// `DenseMatrix::normalize_columns`.
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.n_cols);
+        for j in 0..self.n_cols {
+            let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+            let nj = self.values[a..b].iter().map(|v| v * v).sum::<f64>().sqrt();
+            norms.push(nj);
+            if nj > 0.0 {
+                for v in self.values[a..b].iter_mut() {
+                    *v /= nj;
+                }
+            }
+        }
+        norms
+    }
+
     /// Sparse dot `xⱼᵀw`.
     #[inline]
     pub fn col_dot(&self, j: usize, w: &[f64]) -> f64 {

@@ -1,0 +1,335 @@
+//! Runtime-chosen matrix backend: [`DesignStore`] is the owned,
+//! enum-dispatched counterpart of `&dyn DesignMatrix`.
+//!
+//! `data::Dataset` carries its feature matrix as a `DesignStore`, so a
+//! dataset loaded from sparse LIBSVM input stays CSC end-to-end and a
+//! dataset opened from an on-disk shard stays out-of-core — nothing
+//! densifies on the way from I/O to screening (the bug this type fixes:
+//! `read_libsvm` used to materialize a `DenseMatrix` before the backend
+//! choice ever happened). The store implements [`DesignMatrix`] itself by
+//! delegation, so `&ds.x` keeps coercing to `&dyn DesignMatrix` at every
+//! rule/solver/path call site regardless of the variant inside.
+
+use super::{CscMatrix, DenseMatrix, DesignMatrix, MmapCscMatrix};
+
+/// Owned feature-matrix backend chosen at load time (or by `--matrix`).
+#[derive(Clone, Debug)]
+pub enum DesignStore {
+    Dense(DenseMatrix),
+    Csc(CscMatrix),
+    Mmap(MmapCscMatrix),
+}
+
+impl DesignStore {
+    /// Backend tag for reports (`dense` / `csc` / `mmap`).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            DesignStore::Dense(_) => "dense",
+            DesignStore::Csc(_) => "csc",
+            DesignStore::Mmap(_) => "mmap",
+        }
+    }
+
+    /// Borrow as the matrix-free trait object.
+    pub fn as_design(&self) -> &dyn DesignMatrix {
+        match self {
+            DesignStore::Dense(x) => x,
+            DesignStore::Csc(x) => x,
+            DesignStore::Mmap(x) => x,
+        }
+    }
+
+    /// Box the inner backend for `ScreeningService::spawn_boxed`.
+    pub fn into_boxed(self) -> Box<dyn DesignMatrix + Send> {
+        match self {
+            DesignStore::Dense(x) => Box::new(x),
+            DesignStore::Csc(x) => Box::new(x),
+            DesignStore::Mmap(x) => Box::new(x),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.as_design().n_rows()
+    }
+    pub fn n_cols(&self) -> usize {
+        self.as_design().n_cols()
+    }
+    /// Stored entries (dense: N·p; sparse backends: true non-zeros).
+    pub fn nnz(&self) -> usize {
+        self.as_design().nnz()
+    }
+    pub fn density(&self) -> f64 {
+        self.as_design().density()
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, DesignStore::Dense(_))
+    }
+
+    /// Single element (sparse backends: O(log nnz-of-column) or a column
+    /// stream — fine for I/O and tests, not for hot loops).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DesignStore::Dense(x) => x.get(i, j),
+            DesignStore::Csc(x) => x.get(i, j),
+            DesignStore::Mmap(x) => {
+                let mut out = [0.0];
+                x.col_gather(j, &[i], &mut out);
+                out[0]
+            }
+        }
+    }
+
+    /// The dense matrix inside, for dense-only call sites (PJRT literal
+    /// upload, column-slice tests). Panics on a sparse backend.
+    pub fn dense(&self) -> &DenseMatrix {
+        match self {
+            DesignStore::Dense(x) => x,
+            other => panic!("expected dense backend, found {}", other.backend_name()),
+        }
+    }
+
+    /// Mutable dense access (test fixtures that edit columns in place).
+    /// Panics on a sparse backend.
+    pub fn dense_mut(&mut self) -> &mut DenseMatrix {
+        match self {
+            DesignStore::Dense(x) => x,
+            other => panic!("expected dense backend, found {}", other.backend_name()),
+        }
+    }
+
+    /// Materialize as dense (no copy when already dense).
+    pub fn into_dense(self) -> DenseMatrix {
+        match self {
+            DesignStore::Dense(x) => x,
+            other => other.to_dense(),
+        }
+    }
+
+    /// Materialize as in-RAM CSC (no copy when already CSC).
+    pub fn into_csc(self) -> CscMatrix {
+        match self {
+            DesignStore::Csc(x) => x,
+            other => other.to_csc(),
+        }
+    }
+
+    /// Dense copy of any backend.
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            DesignStore::Dense(x) => x.clone(),
+            other => {
+                let d = other.as_design();
+                let mut out = DenseMatrix::zeros(d.n_rows(), d.n_cols());
+                for j in 0..d.n_cols() {
+                    d.col_into(j, out.col_mut(j));
+                }
+                out
+            }
+        }
+    }
+
+    /// In-RAM CSC copy of any backend (exact zeros dropped for dense).
+    pub fn to_csc(&self) -> CscMatrix {
+        match self {
+            DesignStore::Dense(x) => CscMatrix::from_dense(x),
+            DesignStore::Csc(x) => x.clone(),
+            DesignStore::Mmap(x) => x.to_csc(),
+        }
+    }
+
+    /// Screening sweep `out[j] = xⱼᵀw` (delegates to the backend kernel).
+    pub fn gemv_t(&self, w: &[f64], out: &mut [f64]) {
+        self.as_design().xt_w(w, out);
+    }
+
+    /// Dense `out = Xβ`.
+    pub fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        self.as_design().gemv(beta, out);
+    }
+
+    /// ℓ2 norm of every column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        self.as_design().col_norms()
+    }
+
+    /// Scale every column to unit ℓ2 norm in place, returning the original
+    /// norms. Supported for the in-RAM backends; an out-of-core shard is
+    /// read-only, so normalize before converting (or load it via
+    /// `to_csc()` first).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        match self {
+            DesignStore::Dense(x) => x.normalize_columns(),
+            DesignStore::Csc(x) => x.normalize_columns(),
+            DesignStore::Mmap(_) => panic!(
+                "cannot normalize an out-of-core shard in place; normalize before `dpp convert`"
+            ),
+        }
+    }
+}
+
+impl PartialEq for DesignStore {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (DesignStore::Dense(a), DesignStore::Dense(b)) => a == b,
+            (DesignStore::Csc(a), DesignStore::Csc(b)) => a == b,
+            (DesignStore::Mmap(a), DesignStore::Mmap(b)) => a.shard_dir() == b.shard_dir(),
+            _ => false,
+        }
+    }
+}
+
+impl From<DenseMatrix> for DesignStore {
+    fn from(x: DenseMatrix) -> DesignStore {
+        DesignStore::Dense(x)
+    }
+}
+
+impl From<CscMatrix> for DesignStore {
+    fn from(x: CscMatrix) -> DesignStore {
+        DesignStore::Csc(x)
+    }
+}
+
+impl From<MmapCscMatrix> for DesignStore {
+    fn from(x: MmapCscMatrix) -> DesignStore {
+        DesignStore::Mmap(x)
+    }
+}
+
+/// Full delegation, so the provided-method overrides of each backend (the
+/// 8-way dense sweep, CSC merge-joins, the shard's streaming kernels) are
+/// reached through the store exactly as through the inner type.
+impl DesignMatrix for DesignStore {
+    fn n_rows(&self) -> usize {
+        self.as_design().n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.as_design().n_cols()
+    }
+
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        self.as_design().xt_w(w, out);
+    }
+
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        self.as_design().col_dot_w(j, w)
+    }
+
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        self.as_design().col_axpy_into(j, a, out);
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        self.as_design().col_sq_norm(j)
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        self.as_design().col_dot_col(i, j)
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        self.as_design().col_into(j, out);
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        self.as_design().col_gather(j, rows, out);
+    }
+
+    fn nnz(&self) -> usize {
+        self.as_design().nnz()
+    }
+
+    fn density(&self) -> f64 {
+        self.as_design().density()
+    }
+
+    fn col_norms(&self) -> Vec<f64> {
+        self.as_design().col_norms()
+    }
+
+    fn xt_w_subset(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        self.as_design().xt_w_subset(cols, w, out);
+    }
+
+    fn accum_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        self.as_design().accum_cols(cols, beta, out);
+    }
+
+    fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        self.as_design().gemv(beta, out);
+    }
+
+    fn op_norm_sq_subset(&self, cols: &[usize], iters: usize, seed: u64) -> f64 {
+        self.as_design().op_norm_sq_subset(cols, iters, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dense() -> DenseMatrix {
+        DenseMatrix::from_rows(&[vec![1.0, 0.0, 3.0], vec![0.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn variants_agree_through_the_trait() {
+        let d = DesignStore::from(small_dense());
+        let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        assert_eq!((d.n_rows(), d.n_cols()), (2, 3));
+        assert_eq!((c.n_rows(), c.n_cols()), (2, 3));
+        assert_eq!(d.nnz(), 6); // dense counts stored entries
+        assert_eq!(c.nnz(), 4);
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        d.gemv_t(&[1.0, -1.0], &mut a);
+        c.gemv_t(&[1.0, -1.0], &mut b);
+        assert_eq!(a, b);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(d.get(i, j), c.get(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn conversions_round_trip() {
+        let d = DesignStore::from(small_dense());
+        let c = DesignStore::from(d.to_csc());
+        assert_eq!(c.to_dense(), small_dense());
+        assert_eq!(c.clone().into_csc(), d.to_csc());
+        assert_eq!(c.into_dense(), small_dense());
+        assert!(d.is_dense());
+        assert_eq!(d.backend_name(), "dense");
+    }
+
+    #[test]
+    fn equality_is_per_variant() {
+        let d1 = DesignStore::from(small_dense());
+        let d2 = DesignStore::from(small_dense());
+        let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        assert_eq!(d1, d2);
+        assert_ne!(d1, c); // cross-backend comparison is intentionally false
+    }
+
+    #[test]
+    fn normalize_matches_across_dense_and_csc() {
+        let mut d = DesignStore::from(small_dense());
+        let mut c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        let nd = d.normalize_columns();
+        let nc = c.normalize_columns();
+        assert_eq!(nd, nc);
+        for (a, b) in d.col_norms().iter().zip(c.col_norms()) {
+            assert!((a - 1.0).abs() < 1e-12 && (b - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dense_accessor_panics_on_sparse() {
+        let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        let _ = c.dense();
+    }
+}

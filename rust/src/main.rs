@@ -5,15 +5,21 @@
 //!   path      --dataset … --rule … --solver …      run a screened λ-path
 //!   group     --ngroups …        run a group-Lasso screened path
 //!   service   --requests …       demo the batching screening service
+//!   convert   --file in.svm --out shard.dppcsc     stream to an on-disk shard
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
 //!
-//! `path` and `service` accept `--matrix dense|csc|auto` (default auto):
-//! auto picks the CSC backend when the loaded data is sparse enough that
-//! the O(nnz) sweep wins.
+//! `path` and `service` accept `--matrix dense|csc|mmap|auto` (default
+//! auto): auto keeps an already-sparse input sparse (a LIBSVM file loads
+//! as CSC, a shard directory as the out-of-core mmap backend) and picks
+//! CSC for dense data sparse enough that the O(nnz) sweep wins. `mmap`
+//! requires a shard produced by `dpp convert`; `--mmap-budget BYTES`
+//! bounds its resident window. The chosen backend is reported on stderr.
+
+use std::path::Path;
 
 use dpp_screen::coordinator::service::ScreeningService;
-use dpp_screen::data::{synthetic, RealDataset};
-use dpp_screen::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
+use dpp_screen::data::{convert, synthetic, Dataset, RealDataset};
+use dpp_screen::linalg::{CscMatrix, DesignStore, MmapCscMatrix};
 use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 use dpp_screen::runtime::ArtifactRuntime;
@@ -28,13 +34,16 @@ fn main() {
         Some("path") => cmd_path(&args),
         Some("group") => cmd_group(&args),
         Some("service") => cmd_service(&args),
+        Some("convert") => cmd_convert(&args),
         Some("exp") => cmd_exp(&args),
         _ => {
             eprintln!(
-                "usage: dpp <info|path|group|service|exp> [--options]\n\
+                "usage: dpp <info|path|group|service|convert|exp> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
+                 dpp convert --file data.svm --out data.dppcsc\n\
+                 dpp path --file data.dppcsc --matrix mmap  # out-of-core backend\n\
                  dpp group --ngroups 100 --rule group-edpp\n\
                  dpp service --requests 20 --rule edpp --matrix auto\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
@@ -45,66 +54,99 @@ fn main() {
     }
 }
 
-/// Matrix backend chosen at the CLI boundary (`--matrix dense|csc|auto`).
-enum Backend {
-    Dense(DenseMatrix),
-    Csc(CscMatrix),
-}
-
 /// Auto-pick threshold: below this fill fraction the O(nnz) CSC sweep beats
 /// the unrolled dense kernel comfortably (see benches/kernels.rs).
 const AUTO_CSC_DENSITY: f64 = 0.25;
 
-impl Backend {
-    fn pick(x: DenseMatrix, choice: &str) -> Backend {
-        match choice {
-            "dense" => Backend::Dense(x),
-            "csc" => Backend::Csc(CscMatrix::from_dense(&x)),
-            "auto" => {
+/// Resolve `--matrix dense|csc|mmap|auto` against whatever backend the
+/// loader produced. An already-sparse input is never densified to "measure
+/// density" — auto keeps it as-is; only an explicit `--matrix dense`
+/// materializes a dense copy.
+fn pick_backend(x: DesignStore, choice: &str) -> DesignStore {
+    match choice {
+        "dense" => DesignStore::Dense(x.into_dense()),
+        "csc" => match x {
+            c @ DesignStore::Csc(_) => c,
+            other => DesignStore::Csc(other.into_csc()),
+        },
+        "mmap" => match x {
+            m @ DesignStore::Mmap(_) => m,
+            other => {
+                eprintln!(
+                    "--matrix mmap needs an on-disk shard, not a {} input: run \
+                     `dpp convert --file data.svm --out data.dppcsc` and pass \
+                     `--file data.dppcsc`",
+                    other.backend_name()
+                );
+                std::process::exit(2);
+            }
+        },
+        "auto" => match x {
+            DesignStore::Dense(d) => {
                 // count first, convert after: building the CSC just to
                 // measure density would spike peak memory ~2.5x on large
                 // dense data — exactly the datasets where memory matters
-                let nnz = x.data().iter().filter(|v| **v != 0.0).count();
-                let density = nnz as f64 / x.data().len().max(1) as f64;
+                let nnz = d.data().iter().filter(|v| **v != 0.0).count();
+                let density = nnz as f64 / d.data().len().max(1) as f64;
                 if density < AUTO_CSC_DENSITY {
-                    Backend::Csc(CscMatrix::from_dense(&x))
+                    DesignStore::Csc(CscMatrix::from_dense(&d))
                 } else {
-                    Backend::Dense(x)
+                    DesignStore::Dense(d)
                 }
             }
-            other => {
-                eprintln!("unknown --matrix `{other}` (dense|csc|auto)");
-                std::process::exit(2);
-            }
-        }
-    }
-
-    fn as_design(&self) -> &dyn DesignMatrix {
-        match self {
-            Backend::Dense(x) => x,
-            Backend::Csc(x) => x,
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        match self {
-            Backend::Dense(_) => "dense",
-            Backend::Csc(_) => "csc",
-        }
-    }
-
-    fn into_boxed(self) -> Box<dyn DesignMatrix + Send> {
-        match self {
-            Backend::Dense(x) => Box::new(x),
-            Backend::Csc(x) => Box::new(x),
+            sparse => sparse,
+        },
+        other => {
+            eprintln!("unknown --matrix `{other}` (dense|csc|mmap|auto)");
+            std::process::exit(2);
         }
     }
 }
 
-fn load_dataset(args: &Args) -> dpp_screen::data::Dataset {
-    // user-supplied data: --file data.csv (y,x1,…,xp) or --file data.svm
+/// One-line backend report, identical for `path` and `service`, on stderr
+/// so it never disturbs parseable stdout tables.
+fn report_backend(cmd: &str, x: &DesignStore) {
+    eprintln!(
+        "[dpp {cmd}] matrix backend: {} ({}x{}, nnz={}, density={:.4})",
+        x.backend_name(),
+        x.n_rows(),
+        x.n_cols(),
+        x.nnz(),
+        x.density()
+    );
+}
+
+/// Does `--file` point at a dppcsc shard (directory or `.dppcsc` suffix)?
+fn is_shard_path(path: &str) -> bool {
+    path.ends_with(".dppcsc") || Path::new(path).join("meta.txt").exists()
+}
+
+fn load_shard(path: &str, args: &Args) -> anyhow::Result<Dataset> {
+    let budget = args.get_parse::<usize>(
+        "mmap-budget",
+        dpp_screen::linalg::mmap::DEFAULT_WINDOW_BYTES,
+    );
+    let x = MmapCscMatrix::open_with_budget(path, budget)?;
+    let y = convert::read_shard_y(path)?.ok_or_else(|| {
+        anyhow::anyhow!("shard {path} has no y.bin (convert from a labeled dataset)")
+    })?;
+    if y.len() != x.n_rows() {
+        anyhow::bail!(
+            "shard {path}: y.bin has {} entries, matrix has {} rows",
+            y.len(),
+            x.n_rows()
+        );
+    }
+    Ok(Dataset { name: path.to_string(), x: x.into(), y, beta_true: None, groups: None })
+}
+
+fn load_dataset(args: &Args) -> Dataset {
+    // user-supplied data: --file data.csv (y,x1,…,xp), data.svm (LIBSVM,
+    // loads as CSC), or a data.dppcsc shard (loads out-of-core)
     if let Some(path) = args.get("file") {
-        let res = if path.ends_with(".svm") || path.ends_with(".libsvm") {
+        let res = if is_shard_path(path) {
+            load_shard(path, args)
+        } else if path.ends_with(".svm") || path.ends_with(".libsvm") {
             dpp_screen::data::io::read_libsvm(path, None)
         } else {
             dpp_screen::data::io::read_csv(path)
@@ -147,6 +189,7 @@ fn cmd_info() {
     );
     println!("rules:    {} none", RuleKind::ALL_LASSO.map(|r| r.name()).join(" "));
     println!("solvers:  cd fista lars");
+    println!("matrix:   dense csc mmap auto (shards via `dpp convert`)");
     match ArtifactRuntime::load_default() {
         Some(rt) => {
             println!("artifacts ({}):", rt.artifact_dir().display());
@@ -168,7 +211,8 @@ fn cmd_path(args: &Args) {
     let name = ds.name.clone();
     let (n, p) = (ds.n(), ds.p());
     let y = ds.y.clone();
-    let backend = Backend::pick(ds.x, &args.get_or("matrix", "auto"));
+    let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
+    report_backend("path", &backend);
     let x = backend.as_design();
     let grid = LambdaGrid::relative(x, &y, k, lo, 1.0);
     println!(
@@ -176,7 +220,7 @@ fn cmd_path(args: &Args) {
         name,
         n,
         p,
-        backend.name(),
+        backend.backend_name(),
         rule.name(),
         solver.name(),
         k,
@@ -184,7 +228,12 @@ fn cmd_path(args: &Args) {
     );
     let out = solve_path(x, &y, &grid, rule, solver, &cfg);
     let mut report = benchkit::Report::new(
-        &format!("path: {name} / {} / {} [{}]", rule.name(), solver.name(), backend.name()),
+        &format!(
+            "path: {name} / {} / {} [{}]",
+            rule.name(),
+            solver.name(),
+            backend.backend_name()
+        ),
         &["λ/λmax", "kept", "discarded", "rejection", "screen(s)", "solve(s)", "iters", "repairs"],
     );
     for r in &out.records {
@@ -244,9 +293,10 @@ fn cmd_service(args: &Args) {
     let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
     let n_req = args.get_parse("requests", 20usize);
     let y = ds.y.clone();
-    let backend = Backend::pick(ds.x, &args.get_or("matrix", "auto"));
+    let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
+    report_backend("service", &backend);
     let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
-    println!("service backend: {}", backend.name());
+    println!("service backend: {}", backend.backend_name());
     let svc = ScreeningService::spawn_boxed(
         backend.into_boxed(),
         y,
@@ -272,6 +322,43 @@ fn cmd_service(args: &Args) {
     }
     let m = svc.shutdown();
     println!("metrics: {}", m.summary());
+}
+
+fn cmd_convert(args: &Args) {
+    let Some(input) = args.get("file") else {
+        eprintln!("usage: dpp convert --file data.svm|data.csv [--out data.dppcsc] [--p N]");
+        std::process::exit(2);
+    };
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{input}.dppcsc"));
+    let p_hint = args.get("p").map(|v| match v.parse::<usize>() {
+        Ok(p) => p,
+        Err(_) => {
+            // a typo'd --p must not silently fall back to inferring the
+            // feature count from the data
+            eprintln!("bad --p `{v}` (expected a feature count)");
+            std::process::exit(2);
+        }
+    });
+    match convert::convert_to_shard(input, &out, p_hint) {
+        Ok(s) => {
+            println!(
+                "converted {input} -> {out}: {}x{} matrix, nnz={} ({:.1} MB on disk; \
+                 one bounded-memory pass per direction)",
+                s.n_rows,
+                s.n_cols,
+                s.nnz,
+                s.disk_bytes() as f64 / 1e6
+            );
+            println!("run it out-of-core:  dpp path --file {out} --matrix mmap");
+        }
+        Err(e) => {
+            eprintln!("convert failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_exp(args: &Args) {

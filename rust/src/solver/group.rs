@@ -144,7 +144,7 @@ mod tests {
     fn problem(seed: u64) -> (DenseMatrix, Vec<f64>, Vec<(usize, usize)>) {
         let ds = synthetic::group_synthetic(30, 80, 16, seed);
         let g = ds.groups.clone().unwrap();
-        (ds.x, ds.y, g)
+        (ds.x.into_dense(), ds.y, g)
     }
 
     #[test]

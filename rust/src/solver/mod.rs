@@ -95,10 +95,11 @@ pub(crate) mod testutil {
         frac: f64,
     ) -> (DenseMatrix, Vec<f64>, f64) {
         let ds = synthetic::synthetic1(n, p, p / 5, 0.1, seed);
+        let x = ds.x.into_dense();
         let mut scores = vec![0.0; p];
-        ds.x.gemv_t(&ds.y, &mut scores);
+        x.gemv_t(&ds.y, &mut scores);
         let lam_max = scores.iter().fold(0.0f64, |m, v| m.max(v.abs()));
-        (ds.x, ds.y, frac * lam_max)
+        (x, ds.y, frac * lam_max)
     }
 }
 

@@ -1,12 +1,23 @@
-//! Dense/sparse backend parity: the `DesignMatrix` redesign's contract is
-//! that every rule and solver is backend-agnostic. These properties pin it
-//! down: on the same data, every `ScreeningRule` must produce a
-//! bit-identical keep-set on `DenseMatrix` vs `CscMatrix::from_dense`, CD
-//! solutions must agree to gap tolerance, and a full EDPP path must run the
-//! paper's protocol on CSC without densifying.
+//! Dense/sparse/out-of-core backend parity: the `DesignMatrix` redesign's
+//! contract is that every rule and solver is backend-agnostic. These
+//! properties pin it down: on the same data, every `ScreeningRule` must
+//! produce a bit-identical keep-set on `DenseMatrix` vs
+//! `CscMatrix::from_dense` vs a disk-paged `MmapCscMatrix` whose window
+//! budget is far smaller than the data, CD solutions must agree to gap
+//! tolerance, and a full EDPP path must run the paper's protocol on CSC
+//! and on the shard without densifying. Because the mmap backend streams
+//! each column's entries in the same order CSC stores them, its keep-sets
+//! and CD trajectories are required to be **bit-identical** to CSC, not
+//! just gap-close.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dpp_screen::data::convert::{libsvm_to_shard, read_shard_y, shard_from_design};
+use dpp_screen::data::io::{read_libsvm, write_libsvm};
 use dpp_screen::data::Dataset;
-use dpp_screen::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
+use dpp_screen::linalg::mmap::ENTRY_BYTES;
+use dpp_screen::linalg::{DenseMatrix, DesignMatrix, MmapCscMatrix};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
 use dpp_screen::screening::{
     dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
@@ -38,7 +49,29 @@ fn sparse_problem(n: usize, p: usize, density: f64, seed: u64) -> Dataset {
     for v in y.iter_mut() {
         *v += 0.1 * rng.normal();
     }
-    Dataset { name: "parity".into(), x, y, beta_true: Some(beta), groups: None }
+    Dataset { name: "parity".into(), x: x.into(), y, beta_true: Some(beta), groups: None }
+}
+
+/// Fresh per-test shard dir (tests run concurrently in one process).
+fn shard_dir(tag: &str) -> PathBuf {
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let k = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let root = std::env::temp_dir().join("dpp-parity-tests");
+    let _ = std::fs::create_dir_all(&root);
+    let dir = root.join(format!("{tag}-{}-{k}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Write the dataset's matrix to a shard and reopen it with a window
+/// budget deliberately smaller than the on-disk entry data.
+fn mmap_backend(ds: &Dataset, tag: &str) -> (MmapCscMatrix, PathBuf) {
+    let dir = shard_dir(tag);
+    let nnz = shard_from_design(ds.x.as_design(), Some(&ds.y), &dir).unwrap().nnz;
+    let budget = (nnz * ENTRY_BYTES / 8).max(ENTRY_BYTES);
+    assert!(budget < nnz * ENTRY_BYTES, "budget must undercut the data");
+    let mm = MmapCscMatrix::open_with_budget(&dir, budget).unwrap();
+    (mm, dir)
 }
 
 fn all_rules(n_rows: usize) -> Vec<Box<dyn ScreeningRule>> {
@@ -55,19 +88,23 @@ fn all_rules(n_rows: usize) -> Vec<Box<dyn ScreeningRule>> {
 }
 
 #[test]
-fn every_rule_keep_set_identical_on_dense_and_csc() {
-    prop::check("rule keep-sets dense == csc", 0xBA17, 8, |rng| {
+fn every_rule_keep_set_identical_on_dense_csc_and_mmap() {
+    prop::check("rule keep-sets dense == csc == mmap", 0xBA17, 8, |rng| {
         let n = 20 + rng.usize(20);
         let p = 40 + rng.usize(60);
         let ds = sparse_problem(n, p, rng.uniform(0.1, 0.6), rng.next_u64());
-        let csc = CscMatrix::from_dense(&ds.x);
+        let csc = ds.x.to_csc();
+        let (mmap, dir) = mmap_backend(&ds, "rules");
 
         let dense_ctx = ScreenContext::new(&ds.x, &ds.y);
         let csc_ctx = ScreenContext::new(&csc, &ds.y);
+        let mmap_ctx = ScreenContext::new(&mmap, &ds.y);
         assert!(
             (dense_ctx.lam_max - csc_ctx.lam_max).abs() < 1e-12 * (1.0 + dense_ctx.lam_max),
             "λmax diverged across backends"
         );
+        // same entries in the same order ⇒ the sparse λmax values are equal bits
+        assert_eq!(csc_ctx.lam_max, mmap_ctx.lam_max, "csc vs mmap λmax");
 
         // exact sequential anchor: solve at λ₀ on the dense backend
         let f1 = rng.uniform(0.4, 1.0);
@@ -82,37 +119,51 @@ fn every_rule_keep_set_identical_on_dense_and_csc() {
 
         // fresh rule instances per backend: DomeRule caches its
         // λ-independent Xᵀñ sweep on first use, and sharing one instance
-        // would let the CSC run reuse the dense-derived cache, silently
-        // skipping the sparse code path this test exists to exercise
-        for (rule_d, rule_s) in all_rules(n).into_iter().zip(all_rules(n)) {
+        // would let later backends reuse the first backend's cache,
+        // silently skipping the code paths this test exists to exercise
+        for ((rule_d, rule_s), rule_m) in
+            all_rules(n).into_iter().zip(all_rules(n)).zip(all_rules(n))
+        {
             let mut keep_dense = vec![true; p];
             let mut keep_csc = vec![true; p];
+            let mut keep_mmap = vec![true; p];
             rule_d.screen(&dense_ctx, &step, &mut keep_dense);
             rule_s.screen(&csc_ctx, &step, &mut keep_csc);
+            rule_m.screen(&mmap_ctx, &step, &mut keep_mmap);
             assert_eq!(
                 keep_dense,
                 keep_csc,
                 "{} keep-set diverged between dense and csc backends",
                 rule_d.name()
             );
+            assert_eq!(
+                keep_csc,
+                keep_mmap,
+                "{} keep-set diverged between csc and mmap backends",
+                rule_s.name()
+            );
         }
+        let _ = std::fs::remove_dir_all(dir);
     });
 }
 
 #[test]
 fn cd_solutions_agree_across_backends_to_gap_tolerance() {
-    prop::check("CD dense == CD csc (gap tolerance)", 0xBA18, 8, |rng| {
+    prop::check("CD dense == CD csc == CD mmap (gap tolerance)", 0xBA18, 8, |rng| {
         let n = 20 + rng.usize(20);
         let p = 30 + rng.usize(50);
         let ds = sparse_problem(n, p, rng.uniform(0.1, 0.5), rng.next_u64());
-        let csc = CscMatrix::from_dense(&ds.x);
+        let csc = ds.x.to_csc();
+        let (mmap, dir) = mmap_backend(&ds, "cd");
         let lam = rng.uniform(0.2, 0.8) * dual::lambda_max(&ds.x, &ds.y);
         let cols: Vec<usize> = (0..p).collect();
         let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
         let de = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
         let sp = CdSolver.solve(&csc, &ds.y, &cols, lam, None, &opts);
+        let mm = CdSolver.solve(&mmap, &ds.y, &cols, lam, None, &opts);
         assert!(de.gap <= 1e-10, "dense gap {}", de.gap);
         assert!(sp.gap <= 1e-10, "csc gap {}", sp.gap);
+        assert!(mm.gap <= 1e-10, "mmap gap {}", mm.gap);
         let o_de = dual::primal_objective(&ds.x, &ds.y, &cols, &de.beta, lam);
         let o_sp = dual::primal_objective(&csc, &ds.y, &cols, &sp.beta, lam);
         assert!(
@@ -126,16 +177,65 @@ fn cd_solutions_agree_across_backends_to_gap_tolerance() {
                 de.beta[j],
                 sp.beta[j]
             );
+            // identical kernels in identical order: csc and the shard are
+            // bit-for-bit the same trajectory
+            assert_eq!(sp.beta[j], mm.beta[j], "β[{j}] csc vs mmap");
         }
+        assert_eq!(sp.iters, mm.iters, "csc vs mmap iteration counts");
+        let _ = std::fs::remove_dir_all(dir);
     });
+}
+
+/// The acceptance criterion end to end: LIBSVM input → `dpp convert`'s
+/// two-pass streaming converter → shard opened with a window budget the
+/// entry data exceeds several times over → the full sequential EDPP path,
+/// with keep-sets and solutions bit-identical to the CSC backend fed from
+/// the same file.
+#[test]
+fn full_edpp_path_on_mmap_shard_matches_csc_bit_identical() {
+    let ds = sparse_problem(40, 200, 0.15, 99);
+    let dir = shard_dir("path");
+    let svm = dir.with_extension("svm");
+    write_libsvm(&ds, &svm).unwrap();
+
+    let loaded = read_libsvm(&svm, Some(200)).unwrap();
+    assert_eq!(loaded.x.backend_name(), "csc", "reader must not densify");
+    let csc = loaded.x.to_csc();
+
+    let summary = libsvm_to_shard(&svm, &dir, Some(200)).unwrap();
+    assert_eq!(summary.nnz, csc.nnz(), "converter and reader disagree on nnz");
+    let budget = 1024;
+    assert!(
+        summary.nnz * ENTRY_BYTES > 8 * budget,
+        "values+indices ({} bytes) must exceed the window budget ({budget})",
+        summary.nnz * ENTRY_BYTES
+    );
+    let mmap = MmapCscMatrix::open_with_budget(&dir, budget).unwrap();
+    let y = read_shard_y(&dir).unwrap().expect("converter writes y.bin");
+    assert_eq!(y, loaded.y, "y must round-trip bit-exactly");
+
+    let grid = LambdaGrid::relative(&csc, &y, 12, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let sparse = solve_path(&csc, &y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let paged = solve_path(&mmap, &y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    assert!(sparse.mean_rejection_ratio() > 0.8, "{}", sparse.mean_rejection_ratio());
+    for (k, (rs, rm)) in sparse.records.iter().zip(paged.records.iter()).enumerate() {
+        assert_eq!(rs.kept, rm.kept, "kept count diverged at λ-index {k}");
+        assert_eq!(rs.discarded, rm.discarded, "discard count diverged at λ-index {k}");
+    }
+    for (k, (bs, bm)) in sparse.betas.iter().zip(paged.betas.iter()).enumerate() {
+        assert_eq!(bs, bm, "β diverged at λ-index {k}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_file(svm);
 }
 
 #[test]
 fn full_edpp_path_on_csc_matches_dense_and_stays_safe() {
-    // the acceptance criterion: solve_path runs the full EDPP protocol on a
-    // CscMatrix (no densify), and the sparse path reproduces the dense one
+    // solve_path runs the full EDPP protocol on a CscMatrix (no densify),
+    // and the sparse path reproduces the dense one
     let ds = sparse_problem(40, 200, 0.15, 99);
-    let csc = CscMatrix::from_dense(&ds.x);
+    let csc = ds.x.to_csc();
     let grid = LambdaGrid::relative(&csc, &ds.y, 12, 0.05, 1.0);
     let cfg = PathConfig::default();
     let sparse = solve_path(&csc, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
@@ -163,21 +263,23 @@ fn full_edpp_path_on_csc_matches_dense_and_stays_safe() {
 }
 
 #[test]
-fn lars_and_fista_also_run_on_csc() {
+fn lars_and_fista_also_run_on_csc_and_mmap() {
     use dpp_screen::solver::{fista::FistaSolver, lars::LarsSolver};
     let ds = sparse_problem(25, 60, 0.25, 7);
-    let csc = CscMatrix::from_dense(&ds.x);
+    let csc = ds.x.to_csc();
+    let (mmap, dir) = mmap_backend(&ds, "solvers");
     let lam = 0.3 * dual::lambda_max(&csc, &ds.y);
     let cols: Vec<usize> = (0..60).collect();
     let opts = SolveOptions { tol_gap: 1e-9, ..Default::default() };
     let cd = CdSolver.solve(&csc, &ds.y, &cols, lam, None, &opts);
-    let la = LarsSolver.solve(&csc, &ds.y, &cols, lam, None, &opts);
-    let fi = FistaSolver.solve(&csc, &ds.y, &cols, lam, None, &opts);
+    let la = LarsSolver.solve(&mmap, &ds.y, &cols, lam, None, &opts);
+    let fi = FistaSolver.solve(&mmap, &ds.y, &cols, lam, None, &opts);
     let obj = |b: &[f64]| dual::primal_objective(&csc, &ds.y, &cols, b, lam);
     let (o_cd, o_la, o_fi) = (obj(&cd.beta), obj(&la.beta), obj(&fi.beta));
     let scale = o_cd.abs().max(1.0);
     assert!((o_cd - o_la).abs() < 1e-6 * scale, "cd={o_cd} lars={o_la}");
     assert!((o_cd - o_fi).abs() < 1e-6 * scale, "cd={o_cd} fista={o_fi}");
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 #[test]
@@ -186,7 +288,7 @@ fn group_path_runs_on_csc() {
     use dpp_screen::solver::SolveOptions;
     let ds = dpp_screen::data::synthetic::group_synthetic(30, 120, 24, 3);
     let groups = ds.groups.clone().unwrap();
-    let csc = CscMatrix::from_dense(&ds.x);
+    let csc = ds.x.to_csc();
     let (glm_d, _) = dual::group_lambda_max(&ds.x, &ds.y, &groups);
     let (glm_s, _) = dual::group_lambda_max(&csc, &ds.y, &groups);
     assert!((glm_d - glm_s).abs() < 1e-12 * (1.0 + glm_d));

@@ -51,6 +51,100 @@ fn path_on_csv_file() {
     assert!(String::from_utf8_lossy(&out.stdout).contains("20x30"));
 }
 
+/// Sparse fixture on disk for the sparse-input CLI tests.
+fn write_sparse_svm(name: &str, seed: u64) -> std::path::PathBuf {
+    let mut ds = dpp_screen::data::synthetic::synthetic1(25, 40, 5, 0.1, seed);
+    for j in 0..40 {
+        for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+            if v.abs() < 0.6 {
+                *v = 0.0;
+            }
+        }
+    }
+    let dir = std::env::temp_dir().join("dpp-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    dpp_screen::data::io::write_libsvm(&ds, &path).unwrap();
+    path
+}
+
+#[test]
+fn libsvm_input_stays_sparse_and_backend_is_reported() {
+    // the io fix end to end: a .svm file must reach the path driver on the
+    // CSC backend (auto never densifies sparse input), reported on stderr
+    let svm = write_sparse_svm("sparse-report.svm", 11);
+    let out = dpp()
+        .args(["path", "--file", svm.to_str().unwrap(), "--grid", "4"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("matrix=csc"), "{stdout}");
+    assert!(stderr.contains("matrix backend: csc"), "{stderr}");
+    assert!(stderr.contains("nnz="), "{stderr}");
+}
+
+#[test]
+fn convert_then_mmap_path_end_to_end() {
+    // acceptance criterion: `dpp convert` + `dpp path --matrix mmap` with a
+    // window budget far below the shard's values+indices footprint
+    let svm = write_sparse_svm("oc.svm", 9);
+    let shard = std::env::temp_dir().join("dpp-cli-test").join("oc.dppcsc");
+    let _ = std::fs::remove_dir_all(&shard);
+    let out = dpp()
+        .args(["convert", "--file", svm.to_str().unwrap(), "--out", shard.to_str().unwrap()])
+        .output()
+        .expect("spawn dpp convert");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("converted"));
+
+    let out = dpp()
+        .args([
+            "path",
+            "--file",
+            shard.to_str().unwrap(),
+            "--matrix",
+            "mmap",
+            "--grid",
+            "5",
+            "--mmap-budget",
+            "512",
+        ])
+        .output()
+        .expect("spawn dpp path");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("matrix=mmap"), "{stdout}");
+    assert!(stdout.contains("mean rejection ratio"), "{stdout}");
+    assert!(stderr.contains("matrix backend: mmap"), "{stderr}");
+}
+
+#[test]
+fn mmap_without_a_shard_fails_with_guidance() {
+    let svm = write_sparse_svm("no-shard.svm", 13);
+    let out = dpp()
+        .args(["path", "--file", svm.to_str().unwrap(), "--matrix", "mmap"])
+        .output()
+        .expect("spawn dpp");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dpp convert"));
+}
+
+#[test]
+fn service_reports_backend_on_stderr() {
+    let svm = write_sparse_svm("svc.svm", 15);
+    let out = dpp()
+        .args(["service", "--file", svm.to_str().unwrap(), "--requests", "3"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("metrics:"));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("matrix backend: csc"), "{stderr}");
+}
+
 #[test]
 fn bad_rule_or_dataset_fail_cleanly() {
     let out = dpp().args(["path", "--dataset", "nope"]).output().unwrap();
