@@ -32,7 +32,7 @@ fn kfold(n: usize, k: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
 fn subset(ds: &Dataset, rows: &[usize]) -> (DenseMatrix, Vec<f64>) {
     let mut x = DenseMatrix::zeros(rows.len(), ds.p());
     for j in 0..ds.p() {
-        let src = ds.x.dense().col(j);
+        let src = ds.x.dense().unwrap().col(j);
         let dst = x.col_mut(j);
         for (ri, &r) in rows.iter().enumerate() {
             dst[ri] = src[r];

@@ -199,6 +199,32 @@ fn main() {
         ]);
         drop(mm);
         let _ = std::fs::remove_dir_all(&shard);
+
+        // --- sharded backend: xt_w scaling with the worker-pool size ---
+        // (4 row-range shards in RAM; the per-column shard-order fold keeps
+        // every thread count bit-identical to the csc numbers above)
+        {
+            use dpp_screen::linalg::ShardSetMatrix;
+            use dpp_screen::runtime::pool::WorkerPool;
+            use std::sync::Arc;
+            let mut m1 = None;
+            for threads in [1usize, 2, 4] {
+                let sh = ShardSetMatrix::split_csc(&csc, 4)
+                    .with_pool(Arc::new(WorkerPool::new(threads)));
+                let m_sh = bench.run("sweep sharded backend", || {
+                    DesignMatrix::xt_w(&sh, &ws, &mut out);
+                    black_box(out[0])
+                });
+                let base = *m1.get_or_insert(m_sh.mean_s);
+                rep.row(&[
+                    format!("xt_w sharded {n}x{p} (4 shards, {threads} thr)"),
+                    format!("{:.3}ms", m_sh.mean_s * 1e3),
+                    format!("{:.3}ms", m_sh.min_s * 1e3),
+                    format!("{:.3}ms", m_sh.std_s * 1e3),
+                    format!("{:.2}x 1-thr", base / m_sh.mean_s),
+                ]);
+            }
+        }
     }
 
     // --- PJRT artifact sweep vs native, small AND large shapes ---
@@ -219,7 +245,7 @@ fn main() {
             ]);
         }
         let dsq = synthetic::synthetic1(64, 256, 20, 0.1, 3);
-        if let Some(sweep) = rt.sweep_for(dsq.x.dense()) {
+        if let Some(sweep) = rt.sweep_for(dsq.x.dense().unwrap()) {
             let mut w2 = vec![0.0; 64];
             Rng::new(4).fill_normal(&mut w2);
             let mut o2 = vec![0.0; 256];

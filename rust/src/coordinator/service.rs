@@ -121,7 +121,9 @@ fn worker_loop(
     rx: Receiver<Msg>,
 ) {
     let x: &dyn DesignMatrix = &*x;
-    let ctx = ScreenContext::new(x, &y);
+    // slack > 0 widens keep-decisions for reduced-precision backends
+    // (f32 shards) — same discipline as the PJRT sweep, DESIGN.md §1
+    let ctx = ScreenContext::with_sweep_slack(x, &y, x, cfg.safety_slack);
     let rule: Option<Box<dyn ScreeningRule>> = match rule_kind {
         RuleKind::None => None,
         RuleKind::Edpp => Some(Box::new(crate::screening::edpp::EdppRule)),

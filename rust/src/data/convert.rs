@@ -29,7 +29,8 @@ use anyhow::{bail, Context, Result};
 
 use super::io::{parse_csv_fields, parse_libsvm_pairs};
 use crate::linalg::mmap::{COL_PTR_FILE, META_FILE, ROW_IDX_FILE, VALUES_FILE, Y_FILE};
-use crate::linalg::DesignMatrix;
+use crate::linalg::sharded::SHARDSET_FILE;
+use crate::linalg::{DesignMatrix, MmapCscMatrix};
 
 /// What a conversion produced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,13 +41,43 @@ pub struct ConvertSummary {
     /// Whether `y.bin` was written (the text converters always write it;
     /// `shard_from_design` only when given a response vector).
     pub has_y: bool,
+    /// `values.bin` stored as f32 (`dpp convert --f32`): halves the
+    /// window/shard traffic; widened to f64 on read with the safety-slack
+    /// discipline of DESIGN.md §1.
+    pub f32_values: bool,
 }
 
 impl ConvertSummary {
     /// Total shard bytes on disk (entry arrays + col_ptr, + y if written).
     pub fn disk_bytes(&self) -> usize {
         let y = if self.has_y { self.n_rows * 8 } else { 0 };
-        self.nnz * 12 + (self.n_cols + 1) * 8 + y
+        let entry = if self.f32_values { 8 } else { 12 };
+        self.nnz * entry + (self.n_cols + 1) * 8 + y
+    }
+}
+
+/// Narrow a value for an f32 shard, rejecting finite f64s that overflow to
+/// ±Inf — a silently-Inf shard would poison every later sweep with nothing
+/// pointing back at the conversion. Source NaN/Inf pass through (storing
+/// them is faithful) and subnormal flush-to-zero is accepted quantization
+/// loss the safety slack covers.
+fn narrow_f32(v: f64) -> std::io::Result<f32> {
+    let n = v as f32;
+    if v.is_finite() && !n.is_finite() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("value {v:e} overflows the f32 range; convert without --f32"),
+        ));
+    }
+    Ok(n)
+}
+
+/// Positioned write of one value in the shard's value dtype.
+fn write_value_at(out: &File, v: f64, entry: u64, f32_values: bool) -> std::io::Result<()> {
+    if f32_values {
+        out.write_all_at(&narrow_f32(v)?.to_le_bytes(), entry * 4)
+    } else {
+        out.write_all_at(&v.to_le_bytes(), entry * 8)
     }
 }
 
@@ -74,12 +105,23 @@ pub fn convert_to_shard(
     out_dir: impl AsRef<Path>,
     p_hint: Option<usize>,
 ) -> Result<ConvertSummary> {
+    convert_to_shard_opts(input, out_dir, p_hint, false)
+}
+
+/// [`convert_to_shard`] with the value dtype explicit (`f32_values` =
+/// `dpp convert --f32`).
+pub fn convert_to_shard_opts(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    p_hint: Option<usize>,
+    f32_values: bool,
+) -> Result<ConvertSummary> {
     let path = input.as_ref();
     let name = path.to_string_lossy();
     if name.ends_with(".svm") || name.ends_with(".libsvm") {
-        libsvm_to_shard(path, out_dir, p_hint)
+        libsvm_to_shard_opts(path, out_dir, p_hint, f32_values)
     } else {
-        csv_to_shard(path, out_dir)
+        csv_to_shard_opts(path, out_dir, f32_values)
     }
 }
 
@@ -89,6 +131,16 @@ pub fn libsvm_to_shard(
     input: impl AsRef<Path>,
     out_dir: impl AsRef<Path>,
     p_hint: Option<usize>,
+) -> Result<ConvertSummary> {
+    libsvm_to_shard_opts(input, out_dir, p_hint, false)
+}
+
+/// [`libsvm_to_shard`] with the value dtype explicit.
+pub fn libsvm_to_shard_opts(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    p_hint: Option<usize>,
+    f32_values: bool,
 ) -> Result<ConvertSummary> {
     let input = input.as_ref();
     let out_dir = out_dir.as_ref();
@@ -147,7 +199,7 @@ pub fn libsvm_to_shard(
         let idx_out = File::create(out_dir.join(ROW_IDX_FILE))?;
         let val_out = File::create(out_dir.join(VALUES_FILE))?;
         idx_out.set_len((nnz * 4) as u64)?;
-        val_out.set_len((nnz * 8) as u64)?;
+        val_out.set_len((nnz * if f32_values { 4 } else { 8 }) as u64)?;
         let mut cursor: Vec<u64> = col_ptr[..n_cols].to_vec();
         let f = File::open(input)?;
         let mut row = 0u32;
@@ -162,7 +214,7 @@ pub fn libsvm_to_shard(
                     bail!("{input:?} changed between convert passes (column {j} overflow)");
                 }
                 idx_out.write_all_at(&row.to_le_bytes(), cursor[j] * 4)?;
-                val_out.write_all_at(&v.to_le_bytes(), cursor[j] * 8)?;
+                write_value_at(&val_out, v, cursor[j], f32_values)?;
                 cursor[j] += 1;
             }
             row += 1;
@@ -173,13 +225,22 @@ pub fn libsvm_to_shard(
         verify_cursors(&cursor, &col_ptr, input)?;
     }
 
-    write_meta(out_dir, n_rows, n_cols, nnz)?;
-    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true })
+    write_meta(out_dir, n_rows, n_cols, nnz, f32_values, None)?;
+    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true, f32_values })
 }
 
 /// CSV (`y,x1,…,xp` per line) → shard, two bounded-memory passes; exact
 /// zeros are dropped (CSV is a dense format, the shard is sparse).
 pub fn csv_to_shard(input: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Result<ConvertSummary> {
+    csv_to_shard_opts(input, out_dir, false)
+}
+
+/// [`csv_to_shard`] with the value dtype explicit.
+pub fn csv_to_shard_opts(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    f32_values: bool,
+) -> Result<ConvertSummary> {
     let input = input.as_ref();
     let out_dir = out_dir.as_ref();
     std::fs::create_dir_all(out_dir)
@@ -232,7 +293,7 @@ pub fn csv_to_shard(input: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Resul
         let idx_out = File::create(out_dir.join(ROW_IDX_FILE))?;
         let val_out = File::create(out_dir.join(VALUES_FILE))?;
         idx_out.set_len((nnz * 4) as u64)?;
-        val_out.set_len((nnz * 8) as u64)?;
+        val_out.set_len((nnz * if f32_values { 4 } else { 8 }) as u64)?;
         let mut cursor: Vec<u64> = col_ptr[..n_cols].to_vec();
         let f = File::open(input)?;
         let mut row = 0u32;
@@ -246,7 +307,7 @@ pub fn csv_to_shard(input: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Resul
                     bail!("{input:?} changed between convert passes (column {j} overflow)");
                 }
                 idx_out.write_all_at(&row.to_le_bytes(), cursor[j] * 4)?;
-                val_out.write_all_at(&v.to_le_bytes(), cursor[j] * 8)?;
+                write_value_at(&val_out, v, cursor[j], f32_values)?;
                 cursor[j] += 1;
             }
             row += 1;
@@ -257,8 +318,8 @@ pub fn csv_to_shard(input: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Resul
         verify_cursors(&cursor, &col_ptr, input)?;
     }
 
-    write_meta(out_dir, n_rows, n_cols, nnz)?;
-    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true })
+    write_meta(out_dir, n_rows, n_cols, nnz, f32_values, None)?;
+    Ok(ConvertSummary { n_rows, n_cols, nnz, has_y: true, f32_values })
 }
 
 /// Write a shard directly from an in-process backend (tests, benches, the
@@ -268,6 +329,16 @@ pub fn shard_from_design(
     x: &dyn DesignMatrix,
     y: Option<&[f64]>,
     out_dir: impl AsRef<Path>,
+) -> Result<ConvertSummary> {
+    shard_from_design_opts(x, y, out_dir, false)
+}
+
+/// [`shard_from_design`] with the value dtype explicit.
+pub fn shard_from_design_opts(
+    x: &dyn DesignMatrix,
+    y: Option<&[f64]>,
+    out_dir: impl AsRef<Path>,
+    f32_values: bool,
 ) -> Result<ConvertSummary> {
     let out_dir = out_dir.as_ref();
     std::fs::create_dir_all(out_dir)
@@ -287,7 +358,11 @@ pub fn shard_from_design(
         for (i, v) in col.iter().enumerate() {
             if *v != 0.0 {
                 idx_out.write_all(&(i as u32).to_le_bytes())?;
-                val_out.write_all(&v.to_le_bytes())?;
+                if f32_values {
+                    val_out.write_all(&narrow_f32(*v)?.to_le_bytes())?;
+                } else {
+                    val_out.write_all(&v.to_le_bytes())?;
+                }
                 nnz += 1;
             }
         }
@@ -303,8 +378,14 @@ pub fn shard_from_design(
         }
         y_out.flush()?;
     }
-    write_meta(out_dir, n, p, nnz as usize)?;
-    Ok(ConvertSummary { n_rows: n, n_cols: p, nnz: nnz as usize, has_y: y.is_some() })
+    write_meta(out_dir, n, p, nnz as usize, f32_values, None)?;
+    Ok(ConvertSummary {
+        n_rows: n,
+        n_cols: p,
+        nnz: nnz as usize,
+        has_y: y.is_some(),
+        f32_values,
+    })
 }
 
 /// Load the shard's response vector, if the converter wrote one.
@@ -340,12 +421,185 @@ fn write_col_ptr(out_dir: &Path, counts: &[u64]) -> Result<Vec<u64>> {
     Ok(col_ptr)
 }
 
-fn write_meta(out_dir: &Path, n_rows: usize, n_cols: usize, nnz: usize) -> Result<()> {
-    let text = format!(
-        "format=dppcsc\nversion=1\nn_rows={n_rows}\nn_cols={n_cols}\nnnz={nnz}\n"
+fn write_meta(
+    out_dir: &Path,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    f32_values: bool,
+    row_offset: Option<usize>,
+) -> Result<()> {
+    let mut text = format!(
+        "format=dppcsc\nversion=1\nn_rows={n_rows}\nn_cols={n_cols}\nnnz={nnz}\ndtype={}\n",
+        if f32_values { "f32" } else { "f64" }
     );
+    if let Some(off) = row_offset {
+        // the shard's global row offset inside a shard set; plain readers
+        // ignore the key (forward-compatible), the manifest is authoritative
+        text.push_str(&format!("row_offset={off}\n"));
+    }
     std::fs::write(out_dir.join(META_FILE), text)
         .with_context(|| format!("writing {:?}", out_dir.join(META_FILE)))
+}
+
+/// What `split_shard` produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSetSummary {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    pub shards: usize,
+    pub has_y: bool,
+    pub f32_values: bool,
+}
+
+/// Split a converted `dppcsc` shard into a **shard set**: `k` row-range
+/// shards (each a complete `dppcsc` directory over its row slice, row
+/// indices rebased, `row_offset` recorded in its `meta.txt`) plus a
+/// top-level `shardset.txt` manifest and a copy of `y.bin` — the layout
+/// [`crate::linalg::ShardSetMatrix::open`] consumes (`dpp shard --shards K`,
+/// DESIGN.md §2c).
+///
+/// Streaming and bounded-memory: the source is paged through one window
+/// (`MmapCscMatrix`) and entries are appended to K open shard writers, so
+/// peak memory is O(window + K) regardless of nnz. The source dtype
+/// (f64/f32) is preserved.
+pub fn split_shard(
+    src: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    k: usize,
+) -> Result<ShardSetSummary> {
+    let src = src.as_ref();
+    let out_dir = out_dir.as_ref();
+    if k == 0 {
+        bail!("--shards must be ≥ 1");
+    }
+    let mm = MmapCscMatrix::open(src)
+        .with_context(|| format!("opening source shard {src:?} (run `dpp convert` first)"))?;
+    let (n, p) = (mm.n_rows(), mm.n_cols());
+    let f32_values = mm.is_f32();
+    let splits = crate::linalg::sharded::row_splits(n, k);
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard-set dir {out_dir:?}"))?;
+
+    struct ShardWriter {
+        idx: BufWriter<File>,
+        val: BufWriter<File>,
+        ptr: BufWriter<File>,
+        nnz: u64,
+    }
+    let mut writers: Vec<ShardWriter> = Vec::with_capacity(k);
+    let mut names: Vec<String> = Vec::with_capacity(k);
+    for s in 0..k {
+        let name = format!("shard-{s:04}");
+        let dir = out_dir.join(&name);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating shard dir {dir:?}"))?;
+        let mut ptr = BufWriter::new(File::create(dir.join(COL_PTR_FILE))?);
+        ptr.write_all(&0u64.to_le_bytes())?;
+        writers.push(ShardWriter {
+            idx: BufWriter::new(File::create(dir.join(ROW_IDX_FILE))?),
+            val: BufWriter::new(File::create(dir.join(VALUES_FILE))?),
+            ptr,
+            nnz: 0,
+        });
+        names.push(name);
+    }
+
+    // one pass over the source in column order; entries within a column
+    // ascend by row, so the owning shard index only moves forward
+    for j in 0..p {
+        let mut s_cur = 0usize;
+        let mut werr: Option<std::io::Error> = None;
+        mm.for_col(j, |idx, vals| {
+            if werr.is_some() {
+                return;
+            }
+            for (i, v) in idx.iter().zip(vals.iter()) {
+                let gi = *i as usize;
+                while gi >= splits[s_cur + 1] {
+                    s_cur += 1;
+                }
+                let w = &mut writers[s_cur];
+                let local = (gi - splits[s_cur]) as u32;
+                let r = w.idx.write_all(&local.to_le_bytes()).and_then(|_| {
+                    if f32_values {
+                        narrow_f32(*v).and_then(|nv| w.val.write_all(&nv.to_le_bytes()))
+                    } else {
+                        w.val.write_all(&v.to_le_bytes())
+                    }
+                });
+                if let Err(e) = r {
+                    werr = Some(e);
+                    return;
+                }
+                w.nnz += 1;
+            }
+        });
+        if let Some(e) = werr {
+            return Err(anyhow::Error::from(e)
+                .context(format!("writing shard set {out_dir:?} (column {j})")));
+        }
+        for w in writers.iter_mut() {
+            w.ptr.write_all(&w.nnz.to_le_bytes())?;
+        }
+    }
+
+    let mut total = 0u64;
+    for (s, w) in writers.iter_mut().enumerate() {
+        w.idx.flush()?;
+        w.val.flush()?;
+        w.ptr.flush()?;
+        total += w.nnz;
+        write_meta(
+            &out_dir.join(&names[s]),
+            splits[s + 1] - splits[s],
+            p,
+            w.nnz as usize,
+            f32_values,
+            Some(splits[s]),
+        )?;
+    }
+    if total as usize != mm.nnz() {
+        bail!(
+            "{src:?} changed while splitting: wrote {total} entries, source meta says {}",
+            mm.nnz()
+        );
+    }
+
+    // response vector travels at the set's top level
+    let y = read_shard_y(src)?;
+    if let Some(y) = &y {
+        let mut y_out = BufWriter::new(File::create(out_dir.join(Y_FILE))?);
+        for v in y {
+            y_out.write_all(&v.to_le_bytes())?;
+        }
+        y_out.flush()?;
+    }
+
+    let mut manifest = format!(
+        "format=dppshardset\nversion=1\nn_rows={n}\nn_cols={p}\nnnz={}\nshards={k}\n",
+        mm.nnz()
+    );
+    for (s, name) in names.iter().enumerate() {
+        manifest.push_str(&format!(
+            "shard={name}:{}:{}:{}\n",
+            splits[s],
+            splits[s + 1] - splits[s],
+            writers[s].nnz
+        ));
+    }
+    std::fs::write(out_dir.join(SHARDSET_FILE), manifest)
+        .with_context(|| format!("writing {:?}", out_dir.join(SHARDSET_FILE)))?;
+
+    Ok(ShardSetSummary {
+        n_rows: n,
+        n_cols: p,
+        nnz: mm.nnz(),
+        shards: k,
+        has_y: y.is_some(),
+        f32_values,
+    })
 }
 
 /// Parse one CSV line into **non-zero** `(column, value)` entries (reusing
@@ -392,7 +646,7 @@ mod tests {
     fn sparse_dataset(seed: u64) -> crate::data::Dataset {
         let mut ds = synthetic::synthetic1(12, 9, 3, 0.1, seed);
         for j in 0..9 {
-            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+            for v in ds.x.dense_mut().unwrap().col_mut(j).iter_mut() {
                 if v.abs() < 0.7 {
                     *v = 0.0;
                 }
@@ -467,5 +721,107 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("line 2"), "{msg}");
         assert!(msg.contains("duplicate"), "{msg}");
+    }
+
+    #[test]
+    fn split_shard_round_trips_through_the_shardset() {
+        use crate::linalg::ShardSetMatrix;
+        let ds = sparse_dataset(4);
+        let csc = ds.x.to_csc();
+        let shard = tmp("split-src.dppcsc");
+        shard_from_design(&csc, Some(&ds.y), &shard).unwrap();
+        let set = tmp("split.shards");
+        let sum = split_shard(&shard, &set, 3).unwrap();
+        assert_eq!((sum.n_rows, sum.n_cols, sum.shards), (12, 9, 3));
+        assert_eq!(sum.nnz, csc.nnz());
+        assert!(sum.has_y && !sum.f32_values);
+        // out-of-core and in-RAM openings both reproduce the source exactly
+        let sh = ShardSetMatrix::open_with_budget(&set, 64).unwrap();
+        assert_eq!(sh.shard_count(), 3);
+        assert_eq!(sh.to_csc(), csc);
+        assert_eq!(ShardSetMatrix::open_in_ram(&set).unwrap().to_csc(), csc);
+        // y travels at the set's top level
+        assert_eq!(read_shard_y(&set).unwrap().unwrap(), ds.y);
+        let _ = std::fs::remove_dir_all(&set);
+        let _ = std::fs::remove_dir_all(&shard);
+    }
+
+    #[test]
+    fn split_with_more_shards_than_rows_leaves_empty_shards() {
+        use crate::linalg::ShardSetMatrix;
+        let ds = sparse_dataset(5);
+        let csc = ds.x.to_csc(); // 12 rows
+        let shard = tmp("split-many.dppcsc");
+        shard_from_design(&csc, None, &shard).unwrap();
+        let set = tmp("split-many.shards");
+        let sum = split_shard(&shard, &set, 20).unwrap();
+        assert_eq!(sum.shards, 20);
+        let sh = ShardSetMatrix::open_with_budget(&set, 32).unwrap();
+        assert_eq!(sh.to_csc(), csc);
+        let _ = std::fs::remove_dir_all(&set);
+        let _ = std::fs::remove_dir_all(&shard);
+    }
+
+    #[test]
+    fn f32_shard_quantizes_and_round_trips() {
+        use crate::linalg::MmapCscMatrix;
+        let ds = sparse_dataset(6);
+        let csc = ds.x.to_csc();
+        let dir = tmp("f32.dppcsc");
+        let sum = shard_from_design_opts(&csc, Some(&ds.y), &dir, true).unwrap();
+        assert!(sum.f32_values);
+        // half the per-entry value bytes on disk
+        let vals_len = std::fs::metadata(dir.join(VALUES_FILE)).unwrap().len();
+        assert_eq!(vals_len, (sum.nnz * 4) as u64);
+        assert!(sum.disk_bytes() < sum.nnz * 12 + 200);
+        let mm = MmapCscMatrix::open_with_budget(&dir, 48).unwrap();
+        assert!(mm.is_f32());
+        // every stored value is exactly the f32-quantized source value,
+        // widened back to f64
+        let q = mm.to_csc();
+        let dense_src = csc.to_dense();
+        let dense_q = q.to_dense();
+        for j in 0..9 {
+            for i in 0..12 {
+                let want = dense_src.get(i, j) as f32 as f64;
+                assert_eq!(dense_q.get(i, j), want, "({i},{j})");
+            }
+        }
+        // y stays full-precision
+        assert_eq!(read_shard_y(&dir).unwrap().unwrap(), ds.y);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn f32_conversion_rejects_overflowing_values() {
+        let csv = tmp("overflow.csv");
+        std::fs::write(&csv, "1.0,1e39,0\n-1.0,2.0,3.0\n").unwrap();
+        let err = csv_to_shard_opts(&csv, tmp("overflow.dppcsc"), true).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("f32"), "{msg}");
+        // the same file converts fine at full precision
+        assert!(csv_to_shard(&csv, tmp("overflow64.dppcsc")).is_ok());
+    }
+
+    #[test]
+    fn split_preserves_the_f32_dtype() {
+        use crate::linalg::ShardSetMatrix;
+        let ds = sparse_dataset(7);
+        let csc = ds.x.to_csc();
+        let shard = tmp("f32-split.dppcsc");
+        shard_from_design_opts(&csc, None, &shard, true).unwrap();
+        let set = tmp("f32-split.shards");
+        let sum = split_shard(&shard, &set, 2).unwrap();
+        assert!(sum.f32_values);
+        let sh = ShardSetMatrix::open_with_budget(&set, 32).unwrap();
+        assert!(sh.is_f32());
+        // in-RAM loading widens the slices to f64 CSC but must still report
+        // the quantization, or the safety-slack contract silently vanishes
+        assert!(ShardSetMatrix::open_in_ram(&set).unwrap().is_f32());
+        // the split of the quantized shard equals the quantized source
+        let src = crate::linalg::MmapCscMatrix::open_with_budget(&shard, 32).unwrap();
+        assert_eq!(sh.to_csc(), src.to_csc());
+        let _ = std::fs::remove_dir_all(&set);
+        let _ = std::fs::remove_dir_all(&shard);
     }
 }

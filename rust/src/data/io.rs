@@ -303,7 +303,7 @@ mod tests {
         let mut ds = synthetic::synthetic1(8, 6, 2, 0.1, 2);
         // sparsify
         for j in 0..6 {
-            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+            for v in ds.x.dense_mut().unwrap().col_mut(j).iter_mut() {
                 if v.abs() < 0.8 {
                     *v = 0.0;
                 }
@@ -383,7 +383,7 @@ mod tests {
         // runs on the CSC backend the reader produced, no densify
         let mut ds = synthetic::synthetic1(20, 30, 4, 0.1, 4);
         for j in 0..30 {
-            for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+            for v in ds.x.dense_mut().unwrap().col_mut(j).iter_mut() {
                 if v.abs() < 0.9 {
                     *v = 0.0;
                 }

@@ -37,10 +37,12 @@ impl Dataset {
 
     /// Scale every feature column to unit ℓ2 norm (required by DOME; the
     /// DPP family works either way — the paper explicitly does *not* assume
-    /// unit length, §2.1). In-RAM backends only; normalize before
-    /// converting to an on-disk shard.
-    pub fn normalize_features(&mut self) {
-        self.x.normalize_columns();
+    /// unit length, §2.1). In-RAM backends only — errors (with the fix) on
+    /// a read-only out-of-core backend; normalize before converting to an
+    /// on-disk shard.
+    pub fn normalize_features(&mut self) -> anyhow::Result<()> {
+        self.x.normalize_columns()?;
+        Ok(())
     }
 }
 
@@ -167,7 +169,7 @@ mod tests {
     #[test]
     fn normalize_features_unit_norm() {
         let mut ds = RealDataset::ColonCancer.generate(false, 3);
-        ds.normalize_features();
+        ds.normalize_features().unwrap();
         for n in ds.x.col_norms() {
             assert!((n - 1.0).abs() < 1e-9);
         }

@@ -250,7 +250,7 @@ mod tests {
             let (n, p) = d.small_shape();
             assert_eq!((ds.n(), ds.p()), (n, p), "{}", d.name());
             assert!(ds.y.iter().all(|v| v.is_finite()));
-            assert!(ds.x.dense().data().iter().all(|v| v.is_finite()));
+            assert!(ds.x.dense().unwrap().data().iter().all(|v| v.is_finite()));
         }
     }
 
@@ -269,7 +269,7 @@ mod tests {
         let ds = generate(RealDataset::BreastCancer, false, 2);
         let mut zero_cols = 0;
         for j in 0..ds.p() {
-            let c = ds.x.dense().col(j);
+            let c = ds.x.dense().unwrap().col(j);
             assert!(stats::mean(c).abs() < 1e-9, "col {j} not centered");
             if nrm2(c) < 1e-12 {
                 zero_cols += 1;
@@ -284,7 +284,7 @@ mod tests {
         // must correlate far more than generic gaussian pairs would
         let ds = generate(RealDataset::Pie, false, 3);
         let n_protos = (ds.p() / 64).clamp(4, 128);
-        let x = ds.x.dense();
+        let x = ds.x.dense().unwrap();
         let (a, b) = (x.col(0), x.col(n_protos)); // same prototype class
         let corr = dot(a, b) / (nrm2(a) * nrm2(b));
         assert!(corr.abs() > 0.05, "corr={corr}");

@@ -9,10 +9,12 @@
 //! is minutes-scale on one core. `DPP_TRIALS` / `DPP_GRID` override the
 //! trial count and λ-grid size (paper: 100 trials / 100-point grid).
 //! `DPP_MATRIX=csc` runs every Lasso path through the sparse CSC backend
-//! instead of the dense one, and `DPP_MATRIX=mmap` through the out-of-core
+//! instead of the dense one, `DPP_MATRIX=mmap` through the out-of-core
 //! shard backend (each trial's matrix is written to a temp shard and paged
-//! back under the window budget — the rules/solvers are backend-generic,
-//! so the numbers must match; only the runtimes differ).
+//! back under the window budget), and `DPP_MATRIX=sharded` through the
+//! row-sharded pool-parallel backend (`DPP_SHARDS` row ranges,
+//! `DPP_POOL_THREADS` sweep threads) — the rules/solvers are
+//! backend-generic, so the numbers must match; only the runtimes differ.
 
 use crate::coordinator::run_trials;
 use crate::data::{convert, synthetic, Dataset, RealDataset};
@@ -24,13 +26,16 @@ use crate::util::benchkit::Report;
 use crate::util::{full_scale, grid_size, n_trials};
 
 /// Which backend the experiment harness runs Lasso paths on
-/// (`DPP_MATRIX=dense|csc|mmap`; default dense — the generators produce
-/// dense matrices).
+/// (`DPP_MATRIX=dense|csc|mmap|sharded`; default dense — the generators
+/// produce dense matrices). `sharded` splits each trial's matrix into
+/// `DPP_SHARDS` (default 3) in-RAM row-range shards swept on the worker
+/// pool (`DPP_POOL_THREADS`).
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum MatrixEnv {
     Dense,
     Csc,
     Mmap,
+    Sharded,
 }
 
 fn matrix_env() -> MatrixEnv {
@@ -38,13 +43,19 @@ fn matrix_env() -> MatrixEnv {
         Err(_) | Ok("") | Ok("dense") => MatrixEnv::Dense,
         Ok("csc") => MatrixEnv::Csc,
         Ok("mmap") => MatrixEnv::Mmap,
+        Ok("sharded") => MatrixEnv::Sharded,
         Ok(other) => {
             // a typo must not silently mislabel a whole experiment run as
             // another backend's numbers
-            eprintln!("unknown DPP_MATRIX `{other}` (dense|csc|mmap)");
+            eprintln!("unknown DPP_MATRIX `{other}` (dense|csc|mmap|sharded)");
             std::process::exit(2);
         }
     }
+}
+
+/// Shard count for `DPP_MATRIX=sharded` trials.
+fn shard_env() -> usize {
+    std::env::var("DPP_SHARDS").ok().and_then(|v| v.parse().ok()).unwrap_or(3).max(1)
 }
 
 /// Write this trial's matrix to a temp shard and reopen it out-of-core.
@@ -123,6 +134,13 @@ fn run_rules(
                 let (s, dir) = mmap_trial_store(&ds, t as u64);
                 (Some(s), Some(dir))
             }
+            MatrixEnv::Sharded => (
+                Some(DesignStore::Sharded(crate::linalg::ShardSetMatrix::split_csc(
+                    &ds.x.to_csc(),
+                    shard_env(),
+                ))),
+                None,
+            ),
         };
         let x: &dyn DesignMatrix = match &store {
             Some(s) => s.as_design(),
@@ -238,7 +256,7 @@ fn real_ds_maker(d: RealDataset, normalize: bool) -> impl Fn(u64) -> Dataset + S
     move |seed| {
         let mut ds = d.generate(full, seed);
         if normalize {
-            ds.normalize_features();
+            ds.normalize_features().expect("in-RAM backend");
         }
         ds
     }

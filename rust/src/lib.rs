@@ -23,7 +23,9 @@
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
 //! * **Substrates**: the matrix-free [`linalg::DesignMatrix`] trait with its
-//!   dense, CSC and out-of-core mmap-shard backends ([`linalg`]), dataset
+//!   dense, CSC, out-of-core mmap-shard and row-sharded pool-parallel
+//!   backends ([`linalg`]; the sharded backend's sweeps run on the
+//!   persistent [`runtime::pool`] worker pool), dataset
 //!   generators matching the
 //!   paper's synthetic and (simulated) real datasets ([`data`]), and
 //!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
@@ -73,7 +75,9 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::data::Dataset;
-    pub use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix};
+    pub use crate::linalg::{
+        CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix,
+    };
     pub use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
     pub use crate::screening::{ScreenContext, ScreeningRule};
     pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};

@@ -42,13 +42,28 @@ pub const VALUES_FILE: &str = "values.bin";
 pub const Y_FILE: &str = "y.bin";
 
 /// Bytes of resident window per stored entry (u32 row index + f64 value).
+/// The decoded window always holds f64 values, so this is the resident cost
+/// even for an f32 shard (whose *disk/IO* cost per entry is 8 bytes).
 pub const ENTRY_BYTES: usize = 12;
+
+/// On-disk bytes per entry for an f32 shard (u32 row index + f32 value).
+pub const ENTRY_BYTES_F32: usize = 8;
 
 /// Default window budget: 4 MiB ≈ 350k entries per refill.
 pub const DEFAULT_WINDOW_BYTES: usize = 4 << 20;
 
 /// Env var overriding the default window budget (bytes).
 pub const BUDGET_ENV: &str = "DPP_MMAP_BUDGET";
+
+/// Window-budget resolution shared by every opener (single shards and
+/// shard sets): `DPP_MMAP_BUDGET` if set and parseable, else
+/// [`DEFAULT_WINDOW_BYTES`].
+pub fn default_budget() -> usize {
+    std::env::var(BUDGET_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_WINDOW_BYTES)
+}
 
 /// Sliding decoded window over the entry arrays: entries
 /// `[start, start + idx.len())` of `row_idx.bin` / `values.bin`.
@@ -61,6 +76,8 @@ struct Pager {
     raw: Vec<u8>,
     /// Max entries per window (≥ 1).
     cap: usize,
+    /// `values.bin` stores f32 (meta `dtype=f32`); widened to f64 on read.
+    f32_values: bool,
 }
 
 impl Pager {
@@ -80,16 +97,23 @@ impl Pager {
         self.idx.extend(
             self.raw.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
         );
-        self.raw.resize(len * 8, 0);
+        let vb = if self.f32_values { 4 } else { 8 };
+        self.raw.resize(len * vb, 0);
         self.val_file
-            .read_exact_at(&mut self.raw, (lo * 8) as u64)
+            .read_exact_at(&mut self.raw, (lo * vb) as u64)
             .expect("shard values.bin read failed");
         self.vals.clear();
-        self.vals.extend(
-            self.raw
-                .chunks_exact(8)
-                .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])),
-        );
+        if self.f32_values {
+            self.vals.extend(
+                self.raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64),
+            );
+        } else {
+            self.vals.extend(self.raw.chunks_exact(8).map(|c| {
+                f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            }));
+        }
         // drop the byte scratch between refills: resident memory stays at
         // the documented 12 B/entry (idx + vals), not 20 B/entry — the
         // re-allocation per refill is noise next to the disk read itself
@@ -113,6 +137,11 @@ pub struct MmapCscMatrix {
     nnz: usize,
     col_ptr: Vec<u64>,
     budget: usize,
+    /// meta `dtype=f32`: values stored half-width, widened to f64 on read.
+    /// Consumers screening on such a shard must widen keep-decisions by a
+    /// safety slack (`ScreenContext::with_sweep_slack`, DESIGN.md §1) —
+    /// the CLI wires this up via `PathConfig::safety_slack`.
+    f32_values: bool,
     pager: Mutex<Pager>,
 }
 
@@ -120,11 +149,7 @@ impl MmapCscMatrix {
     /// Open a shard directory with the default window budget
     /// (`DPP_MMAP_BUDGET` bytes if set, else [`DEFAULT_WINDOW_BYTES`]).
     pub fn open(dir: impl AsRef<Path>) -> Result<MmapCscMatrix> {
-        let budget = std::env::var(BUDGET_ENV)
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(DEFAULT_WINDOW_BYTES);
-        Self::open_with_budget(dir, budget)
+        Self::open_with_budget(dir, default_budget())
     }
 
     /// Open a shard directory, holding at most ~`budget_bytes` of decoded
@@ -133,7 +158,7 @@ impl MmapCscMatrix {
         let dir = dir.as_ref().to_path_buf();
         let meta = read_meta(&dir.join(META_FILE))
             .with_context(|| format!("reading shard meta {:?}", dir.join(META_FILE)))?;
-        let (n_rows, n_cols, nnz) = meta;
+        let ShardMeta { n_rows, n_cols, nnz, f32_values } = meta;
         if n_rows > u32::MAX as usize {
             bail!("shard n_rows {} exceeds u32 row-index range", n_rows);
         }
@@ -169,8 +194,15 @@ impl MmapCscMatrix {
         if idx_len != (nnz * 4) as u64 {
             bail!("row_idx.bin is {} bytes, expected {} (nnz {})", idx_len, nnz * 4, nnz);
         }
-        if val_len != (nnz * 8) as u64 {
-            bail!("values.bin is {} bytes, expected {} (nnz {})", val_len, nnz * 8, nnz);
+        let vb = if f32_values { 4 } else { 8 };
+        if val_len != (nnz * vb) as u64 {
+            bail!(
+                "values.bin is {} bytes, expected {} (nnz {}, dtype {})",
+                val_len,
+                nnz * vb,
+                nnz,
+                if f32_values { "f32" } else { "f64" }
+            );
         }
 
         let cap = (budget_bytes / ENTRY_BYTES).max(1);
@@ -181,6 +213,7 @@ impl MmapCscMatrix {
             nnz,
             col_ptr,
             budget: budget_bytes,
+            f32_values,
             pager: Mutex::new(Pager {
                 idx_file,
                 val_file,
@@ -189,6 +222,7 @@ impl MmapCscMatrix {
                 vals: Vec::new(),
                 raw: Vec::new(),
                 cap,
+                f32_values,
             }),
         })
     }
@@ -201,6 +235,13 @@ impl MmapCscMatrix {
     /// Configured window budget in bytes.
     pub fn window_budget(&self) -> usize {
         self.budget
+    }
+
+    /// Whether `values.bin` stores f32 (half the on-disk/IO traffic; values
+    /// are widened to f64 in the window). Screening over f32-quantized data
+    /// should widen keep-decisions by a safety slack — see DESIGN.md §1.
+    pub fn is_f32(&self) -> bool {
+        self.f32_values
     }
 
     pub fn n_rows(&self) -> usize {
@@ -386,14 +427,23 @@ impl DesignMatrix for MmapCscMatrix {
     }
 }
 
-/// Parse `meta.txt` → (n_rows, n_cols, nnz).
-fn read_meta(path: &Path) -> Result<(usize, usize, usize)> {
+/// Parsed `meta.txt` header of one `dppcsc` shard.
+struct ShardMeta {
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    f32_values: bool,
+}
+
+/// Parse `meta.txt`.
+fn read_meta(path: &Path) -> Result<ShardMeta> {
     let text = std::fs::read_to_string(path)?;
     let mut format = None;
     let mut version = None;
     let mut n_rows = None;
     let mut n_cols = None;
     let mut nnz = None;
+    let mut f32_values = false;
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -408,7 +458,12 @@ fn read_meta(path: &Path) -> Result<(usize, usize, usize)> {
             "n_rows" => n_rows = Some(v.trim().parse::<usize>().context("bad n_rows")?),
             "n_cols" => n_cols = Some(v.trim().parse::<usize>().context("bad n_cols")?),
             "nnz" => nnz = Some(v.trim().parse::<usize>().context("bad nnz")?),
-            _ => {} // forward-compatible: ignore unknown keys
+            "dtype" => match v.trim() {
+                "f64" => f32_values = false,
+                "f32" => f32_values = true,
+                other => bail!("unsupported shard dtype `{other}` (f64|f32)"),
+            },
+            _ => {} // forward-compatible: ignore unknown keys (e.g. row_offset)
         }
     }
     match format.as_deref() {
@@ -420,7 +475,9 @@ fn read_meta(path: &Path) -> Result<(usize, usize, usize)> {
         other => bail!("unsupported dppcsc version {other:?}"),
     }
     match (n_rows, n_cols, nnz) {
-        (Some(n), Some(p), Some(z)) => Ok((n, p, z)),
+        (Some(n), Some(p), Some(z)) => {
+            Ok(ShardMeta { n_rows: n, n_cols: p, nnz: z, f32_values })
+        }
         _ => bail!("meta.txt missing n_rows/n_cols/nnz"),
     }
 }

@@ -7,7 +7,10 @@
 //! only non-zeros, so the same sweep costs O(nnz). The out-of-core backend
 //! ([`MmapCscMatrix`]) pages the same CSC triple from an on-disk shard
 //! through a bounded window, so X never has to fit in memory at all.
-//! [`DesignStore`] is the owned enum over all three that `data::Dataset`
+//! The row-sharded backend ([`ShardSetMatrix`]) stacks row-range shards
+//! (in-RAM CSC slices or out-of-core `dppcsc` directories) behind a
+//! reducing facade whose sweeps run on the persistent worker pool.
+//! [`DesignStore`] is the owned enum over all four that `data::Dataset`
 //! carries. All consumers (screening rules, solvers, path drivers, the
 //! service) talk to `&dyn DesignMatrix`; the two hot operations are
 //! [`DesignMatrix::xt_w`] (the screening sweep `Xᵀw`) and the per-column
@@ -16,12 +19,14 @@
 pub mod design;
 pub mod mmap;
 pub mod ops;
+pub mod sharded;
 pub mod sparse;
 pub mod store;
 
 pub use design::DesignMatrix;
 pub use mmap::MmapCscMatrix;
 pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale};
+pub use sharded::ShardSetMatrix;
 pub use sparse::CscMatrix;
 pub use store::DesignStore;
 

@@ -1,0 +1,1086 @@
+//! Row-sharded backend: [`ShardSetMatrix`] is a reducing facade that
+//! implements the full [`DesignMatrix`] contract over a set of **row-range
+//! shards** and executes its sweeps on the persistent worker pool
+//! ([`crate::runtime::pool`]).
+//!
+//! A shard set splits the N×p design by rows: shard s owns the contiguous
+//! row range `[row_start_s, row_start_{s+1})` and stores its slice as a
+//! complete CSC triple over all p columns — either in RAM ([`CscMatrix`])
+//! or out-of-core ([`MmapCscMatrix`] over a per-shard `dppcsc` directory,
+//! DESIGN.md §2c). `data::convert::split_shard` writes shard sets from a
+//! converted shard (`dpp shard --shards K`), and a `shardset.txt` manifest
+//! ties the pieces together.
+//!
+//! ## Reduce semantics (why parity stays bit-exact)
+//!
+//! Every kernel reduces in **deterministic shard order**, with the split
+//! chosen so each output element is produced by exactly one accumulator:
+//!
+//! * `xt_w` / `xt_w_subset` / `col_norms` parallelize over **column
+//!   blocks**. Each column j is computed whole by one worker, which folds
+//!   the shard contributions *in shard order into a single running
+//!   accumulator*, entry by entry — the identical floating-point op
+//!   sequence an in-RAM [`CscMatrix`] over the concatenated rows performs.
+//!   Results are therefore bit-identical to CSC and independent of the
+//!   thread count (`DPP_POOL_THREADS=1..k` all agree to the last bit —
+//!   pinned in `rust/tests/backend_parity.rs`).
+//! * `gemv` / `accum_cols` / `col_axpy_into` parallelize over **shards**:
+//!   row ranges are disjoint, so each worker writes its own slice of the
+//!   output, accumulating columns in the same order the CSC backend does.
+//! * Per-column reads (`col_into`, `col_gather`, `col_dot_col`) gather
+//!   per-shard segments in shard order.
+//!
+//! During a parallel sweep each worker takes a private window over every
+//! mmap shard (a [`Clone`] reopens the shard, DESIGN.md §2), so readers at
+//! different column offsets never thrash one shared pager.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CscMatrix, DesignMatrix, MmapCscMatrix};
+use crate::runtime::pool::{self, WorkerPool};
+
+/// Manifest file tying a shard-set directory together.
+pub const SHARDSET_FILE: &str = "shardset.txt";
+
+/// Column count below which sweeps stay single-threaded (dispatch overhead
+/// beats the win on toy problems; the serial path is the same fold, so this
+/// is a pure scheduling decision — never a numeric one).
+pub const PAR_MIN_COLS: usize = 64;
+
+/// One shard's storage: an in-RAM CSC slice or an out-of-core `dppcsc`
+/// directory. `n_rows` is the *local* row count of the slice; row indices
+/// inside are shard-local (global row − `row_start`).
+#[derive(Clone, Debug)]
+pub enum ShardBackend {
+    Csc(CscMatrix),
+    Mmap(MmapCscMatrix),
+}
+
+impl ShardBackend {
+    /// Local (slice) row count.
+    pub fn n_rows(&self) -> usize {
+        match self {
+            ShardBackend::Csc(x) => x.n_rows(),
+            ShardBackend::Mmap(x) => x.n_rows(),
+        }
+    }
+
+    /// Column count (always the full p of the set).
+    pub fn n_cols(&self) -> usize {
+        match self {
+            ShardBackend::Csc(x) => x.n_cols(),
+            ShardBackend::Mmap(x) => x.n_cols(),
+        }
+    }
+
+    /// Stored entries in this shard's row slice.
+    pub fn nnz(&self) -> usize {
+        match self {
+            ShardBackend::Csc(x) => x.nnz(),
+            ShardBackend::Mmap(x) => x.nnz(),
+        }
+    }
+
+    pub fn is_f32(&self) -> bool {
+        match self {
+            ShardBackend::Csc(_) => false,
+            ShardBackend::Mmap(x) => x.is_f32(),
+        }
+    }
+
+    /// Continue `*acc += Σ w_local[i]·v` over column j's entries, in row
+    /// order, with the caller's single running accumulator — the fold that
+    /// keeps the shard-order reduction bit-identical to one flat CSC sweep.
+    fn fold_col_dot(&self, j: usize, w_local: &[f64], acc: &mut f64) {
+        match self {
+            ShardBackend::Csc(x) => {
+                let (idx, vals) = x.col(j);
+                let mut s = *acc;
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    s += w_local[*i as usize] * v;
+                }
+                *acc = s;
+            }
+            ShardBackend::Mmap(x) => {
+                let mut s = *acc;
+                x.for_col(j, |idx, vals| {
+                    for (i, v) in idx.iter().zip(vals.iter()) {
+                        s += w_local[*i as usize] * v;
+                    }
+                });
+                *acc = s;
+            }
+        }
+    }
+
+    /// Continue `*acc += Σ v²` over column j's entries in row order.
+    fn fold_col_sq_norm(&self, j: usize, acc: &mut f64) {
+        match self {
+            ShardBackend::Csc(x) => {
+                let (_, vals) = x.col(j);
+                let mut s = *acc;
+                for v in vals {
+                    s += v * v;
+                }
+                *acc = s;
+            }
+            ShardBackend::Mmap(x) => {
+                let mut s = *acc;
+                x.for_col(j, |_, vals| {
+                    for v in vals {
+                        s += v * v;
+                    }
+                });
+                *acc = s;
+            }
+        }
+    }
+
+    /// Continue the Gram merge-join `*acc += Σ_{matched rows} xᵢ·xⱼ` over
+    /// this shard's (disjoint) row range, matches in row order.
+    fn fold_col_dot_col(&self, i: usize, j: usize, acc: &mut f64) {
+        match self {
+            ShardBackend::Csc(x) => {
+                let (ai, av) = x.col(i);
+                let (bi, bv) = x.col(j);
+                let (mut a, mut b) = (0usize, 0usize);
+                let mut s = *acc;
+                while a < ai.len() && b < bi.len() {
+                    match ai[a].cmp(&bi[b]) {
+                        std::cmp::Ordering::Less => a += 1,
+                        std::cmp::Ordering::Greater => b += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += av[a] * bv[b];
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+                *acc = s;
+            }
+            ShardBackend::Mmap(x) => {
+                // column i materialized (bounded by its local nnz), column j
+                // streamed — the same scheme MmapCscMatrix::col_dot_col uses
+                let mut ai: Vec<u32> = Vec::new();
+                let mut av: Vec<f64> = Vec::new();
+                x.for_col(i, |ii, vv| {
+                    ai.extend_from_slice(ii);
+                    av.extend_from_slice(vv);
+                });
+                let mut a = 0usize;
+                let mut s = *acc;
+                x.for_col(j, |bi, bv| {
+                    for (b, v) in bi.iter().zip(bv.iter()) {
+                        while a < ai.len() && ai[a] < *b {
+                            a += 1;
+                        }
+                        if a < ai.len() && ai[a] == *b {
+                            s += av[a] * v;
+                        }
+                    }
+                });
+                *acc = s;
+            }
+        }
+    }
+
+    /// `out_local += a·xⱼ` over this shard's row slice.
+    fn col_axpy_into(&self, j: usize, a: f64, out_local: &mut [f64]) {
+        match self {
+            ShardBackend::Csc(x) => x.col_axpy(j, a, out_local),
+            ShardBackend::Mmap(x) => DesignMatrix::col_axpy_into(x, j, a, out_local),
+        }
+    }
+
+    /// Densify column j into this shard's slice (overwrites all of it).
+    fn col_into(&self, j: usize, out_local: &mut [f64]) {
+        match self {
+            ShardBackend::Csc(x) => DesignMatrix::col_into(x, j, out_local),
+            ShardBackend::Mmap(x) => DesignMatrix::col_into(x, j, out_local),
+        }
+    }
+
+    /// Gather shard-local rows of column j.
+    fn col_gather(&self, j: usize, rows_local: &[usize], out: &mut [f64]) {
+        match self {
+            ShardBackend::Csc(x) => DesignMatrix::col_gather(x, j, rows_local, out),
+            ShardBackend::Mmap(x) => DesignMatrix::col_gather(x, j, rows_local, out),
+        }
+    }
+
+    /// Visit column j's `(local_row, value)` entries in row order.
+    fn for_col_entries(&self, j: usize, mut f: impl FnMut(u32, f64)) {
+        match self {
+            ShardBackend::Csc(x) => {
+                let (idx, vals) = x.col(j);
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    f(*i, *v);
+                }
+            }
+            ShardBackend::Mmap(x) => x.for_col(j, |idx, vals| {
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    f(*i, *v);
+                }
+            }),
+        }
+    }
+
+    /// A private-window handle for a parallel sweep worker: mmap shards are
+    /// reopened (independent pager, no lock contention or window thrash);
+    /// in-RAM shards are shared as-is (`None`). A failed reopen (fd
+    /// pressure, unlinked dir) also returns `None`, degrading to the shared
+    /// Mutex window — slower, never wrong, and never a worker panic. A
+    /// per-pool-worker persistent window cache (reopen once per worker
+    /// instead of once per job) is the known follow-up if reopen cost ever
+    /// shows up in `BENCH_screen.json`.
+    fn private_window_clone(&self) -> Option<ShardBackend> {
+        match self {
+            ShardBackend::Csc(_) => None,
+            ShardBackend::Mmap(x) => {
+                MmapCscMatrix::open_with_budget(x.shard_dir(), x.window_budget())
+                    .ok()
+                    .map(ShardBackend::Mmap)
+            }
+        }
+    }
+}
+
+/// One row-range shard: where its rows start globally, and its storage.
+#[derive(Clone, Debug)]
+pub struct RowShard {
+    pub row_start: usize,
+    backend: ShardBackend,
+}
+
+impl RowShard {
+    pub fn backend(&self) -> &ShardBackend {
+        &self.backend
+    }
+}
+
+/// Row-sharded design matrix: the reducing facade over a set of row-range
+/// shards. Implements the complete [`DesignMatrix`] contract, so screening
+/// rules, solvers, path drivers and `ScreeningService::spawn_boxed` take it
+/// unchanged (DESIGN.md §2).
+pub struct ShardSetMatrix {
+    shards: Vec<RowShard>,
+    /// Shard row offsets; `row_starts[s]..row_starts[s+1]` is shard s's
+    /// global row range, `row_starts[K] == n_rows`.
+    row_starts: Vec<usize>,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    /// Manifest directory when opened from disk (identity for `PartialEq`).
+    dir: Option<PathBuf>,
+    /// Any source shard stored f32 values. Tracked here (not only on the
+    /// backends) so `open_in_ram` — which widens the slices to in-RAM f64
+    /// CSC — still reports the quantization and keeps the safety-slack
+    /// contract (DESIGN.md §1).
+    f32_values: bool,
+    /// Pool override (benches sweep thread counts); `None` → the global
+    /// `DPP_POOL_THREADS`-sized pool.
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl Clone for ShardSetMatrix {
+    fn clone(&self) -> ShardSetMatrix {
+        ShardSetMatrix {
+            shards: self.shards.clone(),
+            row_starts: self.row_starts.clone(),
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            nnz: self.nnz,
+            dir: self.dir.clone(),
+            f32_values: self.f32_values,
+            pool: self.pool.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardSetMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardSetMatrix")
+            .field("shards", &self.shards.len())
+            .field("n_rows", &self.n_rows)
+            .field("n_cols", &self.n_cols)
+            .field("nnz", &self.nnz)
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+impl PartialEq for ShardSetMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        if let (Some(a), Some(b)) = (&self.dir, &other.dir) {
+            return a == b;
+        }
+        self.row_starts == other.row_starts
+            && self
+                .shards
+                .iter()
+                .zip(other.shards.iter())
+                .all(|(a, b)| match (&a.backend, &b.backend) {
+                    (ShardBackend::Csc(x), ShardBackend::Csc(y)) => x == y,
+                    (ShardBackend::Mmap(x), ShardBackend::Mmap(y)) => {
+                        x.shard_dir() == y.shard_dir()
+                    }
+                    _ => false,
+                })
+    }
+}
+
+/// Balanced row boundaries: `k+1` offsets with shard s owning
+/// `[splits[s], splits[s+1])`. Shards may be empty when `k > n`.
+pub fn row_splits(n: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1);
+    (0..=k).map(|s| s * n / k).collect()
+}
+
+impl ShardSetMatrix {
+    /// Assemble from in-RAM CSC slices stacked in row order (each over all
+    /// p columns). The main constructor for tests, benches and
+    /// `DPP_MATRIX=sharded` experiment runs.
+    pub fn from_csc_shards(parts: Vec<CscMatrix>) -> ShardSetMatrix {
+        assert!(!parts.is_empty(), "a shard set needs at least one shard");
+        let n_cols = parts[0].n_cols();
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut row_starts = Vec::with_capacity(parts.len() + 1);
+        let mut row = 0usize;
+        let mut nnz = 0usize;
+        row_starts.push(0);
+        for x in parts {
+            assert_eq!(x.n_cols(), n_cols, "all shards must span the same columns");
+            let start = row;
+            row += x.n_rows();
+            nnz += x.nnz();
+            row_starts.push(row);
+            shards.push(RowShard { row_start: start, backend: ShardBackend::Csc(x) });
+        }
+        ShardSetMatrix {
+            shards,
+            row_starts,
+            n_rows: row,
+            n_cols,
+            nnz,
+            dir: None,
+            f32_values: false,
+            pool: None,
+        }
+    }
+
+    /// Split an in-RAM CSC into `k` balanced row-range shards.
+    pub fn split_csc(x: &CscMatrix, k: usize) -> ShardSetMatrix {
+        Self::split_csc_at(x, &row_splits(x.n_rows(), k))
+    }
+
+    /// Split at explicit row boundaries (`splits[0] == 0`, ascending,
+    /// `splits[last] == n_rows`) — lets tests place a boundary anywhere,
+    /// including mid-way through a dense row block or creating empty shards.
+    pub fn split_csc_at(x: &CscMatrix, splits: &[usize]) -> ShardSetMatrix {
+        assert!(splits.len() >= 2, "need at least one shard");
+        assert_eq!(splits[0], 0);
+        assert_eq!(*splits.last().unwrap(), x.n_rows());
+        let p = x.n_cols();
+        let mut parts = Vec::with_capacity(splits.len() - 1);
+        for s in 0..splits.len() - 1 {
+            assert!(splits[s] <= splits[s + 1], "splits must ascend");
+            let (lo, hi) = (splits[s] as u32, splits[s + 1] as u32);
+            let mut col_ptr = Vec::with_capacity(p + 1);
+            col_ptr.push(0usize);
+            let mut row_idx = Vec::new();
+            let mut values = Vec::new();
+            for j in 0..p {
+                let (idx, vals) = x.col(j);
+                let a = idx.partition_point(|&i| i < lo);
+                let b = idx.partition_point(|&i| i < hi);
+                for (i, v) in idx[a..b].iter().zip(vals[a..b].iter()) {
+                    row_idx.push(i - lo);
+                    values.push(*v);
+                }
+                col_ptr.push(row_idx.len());
+            }
+            parts.push(CscMatrix::from_parts((hi - lo) as usize, p, col_ptr, row_idx, values));
+        }
+        Self::from_csc_shards(parts)
+    }
+
+    /// Open a shard-set directory (`shardset.txt` manifest written by
+    /// `dpp shard`) with every shard out-of-core, each paging through its
+    /// own `budget_bytes` window.
+    pub fn open_with_budget(
+        dir: impl AsRef<Path>,
+        budget_bytes: usize,
+    ) -> Result<ShardSetMatrix> {
+        Self::open_impl(dir.as_ref(), budget_bytes, false)
+    }
+
+    /// Open with the default window budget (`DPP_MMAP_BUDGET` if set).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardSetMatrix> {
+        Self::open_impl(dir.as_ref(), super::mmap::default_budget(), false)
+    }
+
+    /// Open a shard set with every shard loaded into RAM as CSC (small
+    /// problems / maximum sweep throughput).
+    pub fn open_in_ram(dir: impl AsRef<Path>) -> Result<ShardSetMatrix> {
+        Self::open_impl(dir.as_ref(), super::mmap::DEFAULT_WINDOW_BYTES, true)
+    }
+
+    fn open_impl(dir: &Path, budget_bytes: usize, in_ram: bool) -> Result<ShardSetMatrix> {
+        let meta = read_shardset_meta(dir)?;
+        let mut shards = Vec::with_capacity(meta.shards.len());
+        let mut row_starts = Vec::with_capacity(meta.shards.len() + 1);
+        row_starts.push(0);
+        let mut row = 0usize;
+        let mut nnz = 0usize;
+        let mut f32_values = false;
+        for e in &meta.shards {
+            if e.row_offset != row {
+                bail!(
+                    "shardset {dir:?}: shard `{}` starts at row {} (expected {row})",
+                    e.dir,
+                    e.row_offset
+                );
+            }
+            let mm = MmapCscMatrix::open_with_budget(dir.join(&e.dir), budget_bytes)
+                .with_context(|| format!("opening shard `{}` of {dir:?}", e.dir))?;
+            if mm.n_rows() != e.n_rows {
+                bail!(
+                    "shardset {dir:?}: shard `{}` has {} rows, manifest says {}",
+                    e.dir,
+                    mm.n_rows(),
+                    e.n_rows
+                );
+            }
+            if mm.n_cols() != meta.n_cols {
+                bail!(
+                    "shardset {dir:?}: shard `{}` spans {} columns, manifest says {}",
+                    e.dir,
+                    mm.n_cols(),
+                    meta.n_cols
+                );
+            }
+            if mm.nnz() != e.nnz {
+                bail!(
+                    "shardset {dir:?}: shard `{}` holds {} entries, manifest says {}",
+                    e.dir,
+                    mm.nnz(),
+                    e.nnz
+                );
+            }
+            row += e.n_rows;
+            nnz += e.nnz;
+            row_starts.push(row);
+            f32_values |= mm.is_f32();
+            let backend = if in_ram {
+                ShardBackend::Csc(mm.to_csc())
+            } else {
+                ShardBackend::Mmap(mm)
+            };
+            shards.push(RowShard { row_start: e.row_offset, backend });
+        }
+        if row != meta.n_rows {
+            bail!("shardset {dir:?}: shards cover {row} rows, manifest says {}", meta.n_rows);
+        }
+        if nnz != meta.nnz {
+            bail!("shardset {dir:?}: shards hold {nnz} entries, manifest says {}", meta.nnz);
+        }
+        Ok(ShardSetMatrix {
+            shards,
+            row_starts,
+            n_rows: meta.n_rows,
+            n_cols: meta.n_cols,
+            nnz,
+            dir: Some(dir.to_path_buf()),
+            f32_values,
+            pool: None,
+        })
+    }
+
+    /// Use a specific worker pool instead of the global one (benches sweep
+    /// thread counts this way; results are bit-identical either way).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> ShardSetMatrix {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> &WorkerPool {
+        match &self.pool {
+            Some(p) => p,
+            None => pool::global(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[RowShard] {
+        &self.shards
+    }
+
+    /// Shard row offsets (`len == shard_count() + 1`, last == n_rows).
+    pub fn row_starts(&self) -> &[usize] {
+        &self.row_starts
+    }
+
+    /// Manifest directory when opened from disk.
+    pub fn set_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Whether any shard stores (or was loaded from) f32-quantized values
+    /// — true even after `open_in_ram` widens the slices to f64 CSC, so
+    /// screening still applies the safety slack (DESIGN.md §1).
+    pub fn is_f32(&self) -> bool {
+        self.f32_values || self.shards.iter().any(|s| s.backend.is_f32())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Concatenate the shards back into one in-RAM [`CscMatrix`] (tests,
+    /// `--matrix csc` on a shard-set input).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(self.n_cols + 1);
+        col_ptr.push(0usize);
+        let mut row_idx: Vec<u32> = Vec::with_capacity(self.nnz);
+        let mut values: Vec<f64> = Vec::with_capacity(self.nnz);
+        for j in 0..self.n_cols {
+            for s in &self.shards {
+                let off = s.row_start as u32;
+                s.backend.for_col_entries(j, |i, v| {
+                    row_idx.push(i + off);
+                    values.push(v);
+                });
+            }
+            col_ptr.push(values.len());
+        }
+        CscMatrix::from_parts(self.n_rows, self.n_cols, col_ptr, row_idx, values)
+    }
+
+    /// Single element (shard lookup + per-shard gather — I/O and tests).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let mut out = [0.0];
+        DesignMatrix::col_gather(self, j, &[i], &mut out);
+        out[0]
+    }
+
+    /// Fold column j's dot product with `w` across shards in shard order
+    /// (one running accumulator — see the module docs on bit-exactness).
+    fn fold_full_col_dot(&self, j: usize, w: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+            s.backend.fold_col_dot(j, &w[win[0]..win[1]], &mut acc);
+        }
+        acc
+    }
+
+    /// Compute `out[k] = x_{cols[k]}ᵀ w` for a column block, optionally
+    /// through private mmap windows (parallel workers).
+    fn sweep_cols_into(
+        &self,
+        cols: ColBlock<'_>,
+        w: &[f64],
+        out: &mut [f64],
+        private_windows: bool,
+    ) {
+        let owned: Vec<Option<ShardBackend>> = if private_windows {
+            self.shards.iter().map(|s| s.backend.private_window_clone()).collect()
+        } else {
+            self.shards.iter().map(|_| None).collect()
+        };
+        for (k, o) in out.iter_mut().enumerate() {
+            let j = cols.get(k);
+            let mut acc = 0.0;
+            for ((s, win), ow) in
+                self.shards.iter().zip(self.row_starts.windows(2)).zip(owned.iter())
+            {
+                let b = ow.as_ref().unwrap_or(&s.backend);
+                b.fold_col_dot(j, &w[win[0]..win[1]], &mut acc);
+            }
+            *o = acc;
+        }
+    }
+
+    /// Run `f(backend, out_slice)` once per shard over its disjoint row
+    /// slice — in shard order serially, or as one pool job per shard
+    /// (bit-identical either way: the slices never overlap and each shard
+    /// applies columns in caller order). Shared by `gemv` / `accum_cols`.
+    fn for_row_slices(&self, out: &mut [f64], f: impl Fn(&ShardBackend, &mut [f64]) + Sync) {
+        assert_eq!(out.len(), self.n_rows);
+        if self.pool().threads() <= 1 || self.shards.len() <= 1 {
+            for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+                f(&s.backend, &mut out[win[0]..win[1]]);
+            }
+            return;
+        }
+        let f = &f; // shared by every job (jobs only borrow)
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        let mut rest = &mut out[..];
+        let mut prev = 0usize;
+        for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+            let (head, tail) = rest.split_at_mut(win[1] - prev);
+            rest = tail;
+            prev = win[1];
+            let backend = &s.backend;
+            jobs.push(Box::new(move || f(backend, head)));
+        }
+        self.pool().run(jobs);
+    }
+
+    /// Split `out` into contiguous column chunks and run
+    /// `f(base_index, chunk, private_windows)` on each — serially below
+    /// [`PAR_MIN_COLS`], else one pool job per chunk. Shared by `xt_w` /
+    /// `xt_w_subset` / `col_norms`.
+    fn for_col_chunks(&self, out: &mut [f64], f: impl Fn(usize, &mut [f64], bool) + Sync) {
+        let pool_threads = self.pool().threads();
+        if pool_threads <= 1 || out.len() < PAR_MIN_COLS {
+            f(0, out, false);
+            return;
+        }
+        let chunk = pool::chunk_len(out.len(), pool_threads);
+        let f = &f; // shared by every job (jobs only borrow)
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        let mut base = 0usize;
+        for head in out.chunks_mut(chunk) {
+            let start = base;
+            base += head.len();
+            jobs.push(Box::new(move || f(start, head, true)));
+        }
+        self.pool().run(jobs);
+    }
+
+    /// Compute column ℓ2 norms for `out.len()` columns starting at `base`
+    /// (the same shard-order fold as `CscMatrix::col_norms`, so the sums —
+    /// and their square roots — are bit-identical).
+    fn norms_cols_into(&self, base: usize, out: &mut [f64], private_windows: bool) {
+        let owned: Vec<Option<ShardBackend>> = if private_windows {
+            self.shards.iter().map(|s| s.backend.private_window_clone()).collect()
+        } else {
+            self.shards.iter().map(|_| None).collect()
+        };
+        for (k, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (s, ow) in self.shards.iter().zip(owned.iter()) {
+                ow.as_ref().unwrap_or(&s.backend).fold_col_sq_norm(base + k, &mut acc);
+            }
+            *o = acc.sqrt();
+        }
+    }
+}
+
+/// Either a contiguous column range starting at `base`, or an explicit
+/// column list (subset sweeps).
+#[derive(Clone, Copy)]
+enum ColBlock<'a> {
+    Range(usize),
+    List(&'a [usize]),
+}
+
+impl ColBlock<'_> {
+    #[inline]
+    fn get(&self, k: usize) -> usize {
+        match self {
+            ColBlock::Range(base) => base + k,
+            ColBlock::List(cols) => cols[k],
+        }
+    }
+}
+
+impl DesignMatrix for ShardSetMatrix {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        // disjoint column blocks, one job each; the fold inside each block
+        // is the bit-exact shard-order reduction
+        self.for_col_chunks(out, |base, chunk, private| {
+            self.sweep_cols_into(ColBlock::Range(base), w, chunk, private)
+        });
+    }
+
+    fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+        self.fold_full_col_dot(j, w)
+    }
+
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n_rows);
+        for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+            s.backend.col_axpy_into(j, a, &mut out[win[0]..win[1]]);
+        }
+    }
+
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        let mut acc = 0.0;
+        for s in &self.shards {
+            s.backend.fold_col_sq_norm(j, &mut acc);
+        }
+        acc
+    }
+
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        let mut acc = 0.0;
+        for s in &self.shards {
+            s.backend.fold_col_dot_col(i, j, &mut acc);
+        }
+        acc
+    }
+
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n_rows);
+        for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+            s.backend.col_into(j, &mut out[win[0]..win[1]]);
+        }
+    }
+
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        assert_eq!(rows.len(), out.len());
+        out.fill(0.0);
+        // group requested rows by owning shard → one backend gather each
+        let mut positions: Vec<usize> = Vec::new();
+        let mut local: Vec<usize> = Vec::new();
+        let mut buf: Vec<f64> = Vec::new();
+        for (s, win) in self.shards.iter().zip(self.row_starts.windows(2)) {
+            positions.clear();
+            local.clear();
+            for (k, &r) in rows.iter().enumerate() {
+                if r >= win[0] && r < win[1] {
+                    positions.push(k);
+                    local.push(r - win[0]);
+                }
+            }
+            if positions.is_empty() {
+                continue;
+            }
+            buf.clear();
+            buf.resize(positions.len(), 0.0);
+            s.backend.col_gather(j, &local, &mut buf);
+            for (k, v) in positions.iter().zip(buf.iter()) {
+                out[*k] = *v;
+            }
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn col_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_cols];
+        self.for_col_chunks(&mut out, |base, chunk, private| {
+            self.norms_cols_into(base, chunk, private)
+        });
+        out
+    }
+
+    fn xt_w_subset(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        self.for_col_chunks(out, |base, chunk, private| {
+            self.sweep_cols_into(ColBlock::List(&cols[base..base + chunk.len()]), w, chunk, private)
+        });
+    }
+
+    fn accum_cols(&self, cols: &[usize], beta: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), beta.len());
+        assert_eq!(out.len(), self.n_rows);
+        // row ranges are disjoint → one job per shard, each accumulating
+        // columns in caller order over its own slice (same per-element op
+        // order as flat CSC)
+        self.for_row_slices(out, |backend, out_local| {
+            for (k, &j) in cols.iter().enumerate() {
+                if beta[k] != 0.0 {
+                    backend.col_axpy_into(j, beta[k], out_local);
+                }
+            }
+        });
+    }
+
+    fn gemv(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        self.for_row_slices(out, |backend, out_local| {
+            out_local.fill(0.0);
+            for (j, &b) in beta.iter().enumerate() {
+                if b != 0.0 {
+                    backend.col_axpy_into(j, b, out_local);
+                }
+            }
+        });
+    }
+}
+
+/// One manifest entry of `shardset.txt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Shard directory name, relative to the shard-set directory.
+    pub dir: String,
+    pub row_offset: usize,
+    pub n_rows: usize,
+    pub nnz: usize,
+}
+
+/// Parsed `shardset.txt` manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSetMeta {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    /// Shards in row order.
+    pub shards: Vec<ShardEntry>,
+}
+
+/// Parse `<dir>/shardset.txt` (format documented in DESIGN.md §2c; written
+/// by `data::convert::split_shard`).
+pub fn read_shardset_meta(dir: &Path) -> Result<ShardSetMeta> {
+    let path = dir.join(SHARDSET_FILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading shard-set manifest {path:?}"))?;
+    let mut format = None;
+    let mut version = None;
+    let mut n_rows = None;
+    let mut n_cols = None;
+    let mut nnz = None;
+    let mut declared = None;
+    let mut shards: Vec<ShardEntry> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("bad manifest line `{line}` in {path:?}");
+        };
+        let v = v.trim();
+        match k.trim() {
+            "format" => format = Some(v.to_string()),
+            "version" => version = Some(v.to_string()),
+            "n_rows" => n_rows = Some(v.parse::<usize>().context("bad n_rows")?),
+            "n_cols" => n_cols = Some(v.parse::<usize>().context("bad n_cols")?),
+            "nnz" => nnz = Some(v.parse::<usize>().context("bad nnz")?),
+            "shards" => declared = Some(v.parse::<usize>().context("bad shards")?),
+            "shard" => {
+                let parts: Vec<&str> = v.split(':').collect();
+                if parts.len() != 4 {
+                    bail!("bad shard line `{line}` (dir:row_offset:n_rows:nnz)");
+                }
+                shards.push(ShardEntry {
+                    dir: parts[0].to_string(),
+                    row_offset: parts[1].parse().context("bad shard row_offset")?,
+                    n_rows: parts[2].parse().context("bad shard n_rows")?,
+                    nnz: parts[3].parse().context("bad shard nnz")?,
+                });
+            }
+            _ => {} // forward-compatible
+        }
+    }
+    match format.as_deref() {
+        Some("dppshardset") => {}
+        other => bail!("{path:?} is not a dppshardset manifest (format={other:?})"),
+    }
+    match version.as_deref() {
+        Some("1") => {}
+        other => bail!("unsupported dppshardset version {other:?}"),
+    }
+    let (Some(n_rows), Some(n_cols), Some(nnz)) = (n_rows, n_cols, nnz) else {
+        bail!("{path:?} missing n_rows/n_cols/nnz");
+    };
+    if shards.is_empty() {
+        bail!("{path:?} lists no shards");
+    }
+    if let Some(d) = declared {
+        if d != shards.len() {
+            bail!("{path:?} declares {d} shards but lists {}", shards.len());
+        }
+    }
+    Ok(ShardSetMeta { n_rows, n_cols, nnz, shards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_csc(n: usize, p: usize, density: f64, seed: u64) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let mut x = DenseMatrix::zeros(n, p);
+        for j in 0..p {
+            for v in x.col_mut(j).iter_mut() {
+                if rng.f64() < density {
+                    *v = rng.normal();
+                }
+            }
+        }
+        CscMatrix::from_dense(&x)
+    }
+
+    #[test]
+    fn row_splits_cover_and_allow_empty() {
+        assert_eq!(row_splits(10, 3), vec![0, 3, 6, 10]);
+        assert_eq!(row_splits(2, 3), vec![0, 0, 1, 2]); // leading empty shard
+        assert_eq!(row_splits(5, 1), vec![0, 5]);
+    }
+
+    /// The decisive property: every trait method on the sharded facade is
+    /// **bit-identical** to the in-RAM CSC over the concatenated rows —
+    /// the shard-order fold replays CSC's accumulation sequence exactly.
+    #[test]
+    fn sharded_matches_csc_bitwise_on_all_ops() {
+        prop::check("DesignMatrix sharded == csc (bitwise)", 0x5AAD, 8, |rng| {
+            let n = 3 + rng.usize(30);
+            let p = 2 + rng.usize(40);
+            let csc = random_csc(n, p, rng.uniform(0.1, 0.8), rng.next_u64());
+            let k = 1 + rng.usize(4);
+            let sh = ShardSetMatrix::split_csc(&csc, k);
+            let c: &dyn DesignMatrix = &csc;
+            let s: &dyn DesignMatrix = &sh;
+            assert_eq!((c.n_rows(), c.n_cols(), c.nnz()), (s.n_rows(), s.n_cols(), s.nnz()));
+
+            let mut w = vec![0.0; n];
+            rng.fill_normal(&mut w);
+            let mut a = vec![0.0; p];
+            let mut b = vec![0.0; p];
+            c.xt_w(&w, &mut a);
+            s.xt_w(&w, &mut b);
+            assert_eq!(a, b, "xt_w");
+            assert_eq!(c.col_norms(), s.col_norms(), "col_norms");
+            for j in 0..p {
+                assert_eq!(c.col_dot_w(j, &w), s.col_dot_w(j, &w), "col_dot_w {j}");
+                assert_eq!(c.col_sq_norm(j), s.col_sq_norm(j), "col_sq_norm {j}");
+            }
+            let i = rng.usize(p);
+            let j = rng.usize(p);
+            assert_eq!(c.col_dot_col(i, j), s.col_dot_col(i, j), "col_dot_col");
+
+            let mut ca = vec![0.5; n];
+            let mut sa = vec![0.5; n];
+            c.col_axpy_into(j, -1.25, &mut ca);
+            s.col_axpy_into(j, -1.25, &mut sa);
+            assert_eq!(ca, sa, "col_axpy_into");
+
+            let mut ci = vec![1.0; n];
+            let mut si = vec![1.0; n];
+            c.col_into(j, &mut ci);
+            s.col_into(j, &mut si);
+            assert_eq!(ci, si, "col_into");
+
+            let rows: Vec<usize> = (0..n).rev().step_by(2).collect();
+            let mut cg = vec![9.0; rows.len()];
+            let mut sg = vec![9.0; rows.len()];
+            c.col_gather(j, &rows, &mut cg);
+            s.col_gather(j, &rows, &mut sg);
+            assert_eq!(cg, sg, "col_gather");
+
+            let mut beta = vec![0.0; p];
+            rng.fill_normal(&mut beta);
+            let mut cm = vec![0.0; n];
+            let mut sm = vec![0.0; n];
+            c.gemv(&beta, &mut cm);
+            s.gemv(&beta, &mut sm);
+            assert_eq!(cm, sm, "gemv");
+
+            let cols: Vec<usize> = (0..p).step_by(2).collect();
+            let mut cs = vec![0.0; cols.len()];
+            let mut ss = vec![0.0; cols.len()];
+            c.xt_w_subset(&cols, &w, &mut cs);
+            s.xt_w_subset(&cols, &w, &mut ss);
+            assert_eq!(cs, ss, "xt_w_subset");
+
+            let red: Vec<f64> = cols.iter().map(|&j| beta[j]).collect();
+            let mut cr = vec![0.1; n];
+            let mut sr = vec![0.1; n];
+            c.accum_cols(&cols, &red, &mut cr);
+            s.accum_cols(&cols, &red, &mut sr);
+            assert_eq!(cr, sr, "accum_cols");
+        });
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let csc = random_csc(40, 256, 0.2, 42);
+        let sh1 = ShardSetMatrix::split_csc(&csc, 3).with_pool(Arc::new(WorkerPool::new(1)));
+        let sh4 = ShardSetMatrix::split_csc(&csc, 3).with_pool(Arc::new(WorkerPool::new(4)));
+        let mut w = vec![0.0; 40];
+        Rng::new(7).fill_normal(&mut w);
+        let mut a = vec![0.0; 256];
+        let mut b = vec![0.0; 256];
+        sh1.xt_w(&w, &mut a);
+        sh4.xt_w(&w, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(DesignMatrix::col_norms(&sh1), DesignMatrix::col_norms(&sh4));
+        let mut beta = vec![0.0; 256];
+        Rng::new(8).fill_normal(&mut beta);
+        let mut ga = vec![0.0; 40];
+        let mut gb = vec![0.0; 40];
+        sh1.gemv(&beta, &mut ga);
+        sh4.gemv(&beta, &mut gb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn boundary_through_dense_rows_and_empty_shards() {
+        // a fully dense matrix: every boundary cuts through "dense rows";
+        // plus explicit empty shards at both ends and in the middle
+        let mut rng = Rng::new(3);
+        let mut x = DenseMatrix::zeros(9, 7);
+        for j in 0..7 {
+            rng.fill_normal(x.col_mut(j));
+        }
+        let csc = CscMatrix::from_dense(&x);
+        let sh = ShardSetMatrix::split_csc_at(&csc, &[0, 0, 4, 4, 9, 9]);
+        assert_eq!(sh.shard_count(), 5);
+        assert_eq!(sh.to_csc(), csc);
+        let mut w = vec![0.0; 9];
+        rng.fill_normal(&mut w);
+        let mut a = vec![0.0; 7];
+        let mut b = vec![0.0; 7];
+        DesignMatrix::xt_w(&csc, &w, &mut a);
+        DesignMatrix::xt_w(&sh, &w, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn round_trips_to_csc() {
+        let csc = random_csc(23, 17, 0.35, 9);
+        for k in [1, 2, 3, 5, 40] {
+            let sh = ShardSetMatrix::split_csc(&csc, k);
+            assert_eq!(sh.to_csc(), csc, "k={k}");
+            assert_eq!(sh.clone().to_csc(), csc, "clone k={k}");
+        }
+    }
+
+    #[test]
+    fn manifest_parse_rejects_bad_input() {
+        let dir = std::env::temp_dir().join("dpp-shardset-meta-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(read_shardset_meta(&dir).is_err(), "missing manifest");
+        let write = |text: &str| std::fs::write(dir.join(SHARDSET_FILE), text).unwrap();
+        write("format=dppshardset\nversion=1\nn_rows=4\nn_cols=2\nnnz=3\nshards=1\nshard=s0:0:4:3\n");
+        let m = read_shardset_meta(&dir).unwrap();
+        assert_eq!(m.shards.len(), 1);
+        assert_eq!(m.shards[0], ShardEntry { dir: "s0".into(), row_offset: 0, n_rows: 4, nnz: 3 });
+        write("format=wrong\nversion=1\nn_rows=1\nn_cols=1\nnnz=0\nshard=s0:0:1:0\n");
+        assert!(read_shardset_meta(&dir).is_err(), "wrong format");
+        write("format=dppshardset\nversion=1\nn_rows=1\nn_cols=1\nnnz=0\nshards=2\nshard=s0:0:1:0\n");
+        assert!(read_shardset_meta(&dir).is_err(), "shard count mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

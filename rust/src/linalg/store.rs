@@ -2,15 +2,24 @@
 //! enum-dispatched counterpart of `&dyn DesignMatrix`.
 //!
 //! `data::Dataset` carries its feature matrix as a `DesignStore`, so a
-//! dataset loaded from sparse LIBSVM input stays CSC end-to-end and a
-//! dataset opened from an on-disk shard stays out-of-core — nothing
-//! densifies on the way from I/O to screening (the bug this type fixes:
-//! `read_libsvm` used to materialize a `DenseMatrix` before the backend
-//! choice ever happened). The store implements [`DesignMatrix`] itself by
-//! delegation, so `&ds.x` keeps coercing to `&dyn DesignMatrix` at every
+//! dataset loaded from sparse LIBSVM input stays CSC end-to-end, a dataset
+//! opened from an on-disk shard stays out-of-core, and a shard-set manifest
+//! opens as the row-sharded pool-parallel backend — nothing densifies on
+//! the way from I/O to screening (the bug this type fixes: `read_libsvm`
+//! used to materialize a `DenseMatrix` before the backend choice ever
+//! happened). The store implements [`DesignMatrix`] itself by delegation,
+//! so `&ds.x` keeps coercing to `&dyn DesignMatrix` at every
 //! rule/solver/path call site regardless of the variant inside.
+//!
+//! Dense-only accessors (`dense`, `dense_mut`, `normalize_columns`) return
+//! line-actionable `anyhow` errors on backends that cannot satisfy them —
+//! a CLI path must never abort the process because the user picked an
+//! out-of-core input; materializing is always available explicitly via
+//! [`DesignStore::to_dense`] / [`DesignStore::into_dense`].
 
-use super::{CscMatrix, DenseMatrix, DesignMatrix, MmapCscMatrix};
+use anyhow::{bail, Result};
+
+use super::{CscMatrix, DenseMatrix, DesignMatrix, MmapCscMatrix, ShardSetMatrix};
 
 /// Owned feature-matrix backend chosen at load time (or by `--matrix`).
 #[derive(Clone, Debug)]
@@ -18,15 +27,17 @@ pub enum DesignStore {
     Dense(DenseMatrix),
     Csc(CscMatrix),
     Mmap(MmapCscMatrix),
+    Sharded(ShardSetMatrix),
 }
 
 impl DesignStore {
-    /// Backend tag for reports (`dense` / `csc` / `mmap`).
+    /// Backend tag for reports (`dense` / `csc` / `mmap` / `sharded`).
     pub fn backend_name(&self) -> &'static str {
         match self {
             DesignStore::Dense(_) => "dense",
             DesignStore::Csc(_) => "csc",
             DesignStore::Mmap(_) => "mmap",
+            DesignStore::Sharded(_) => "sharded",
         }
     }
 
@@ -36,6 +47,7 @@ impl DesignStore {
             DesignStore::Dense(x) => x,
             DesignStore::Csc(x) => x,
             DesignStore::Mmap(x) => x,
+            DesignStore::Sharded(x) => x,
         }
     }
 
@@ -45,6 +57,7 @@ impl DesignStore {
             DesignStore::Dense(x) => Box::new(x),
             DesignStore::Csc(x) => Box::new(x),
             DesignStore::Mmap(x) => Box::new(x),
+            DesignStore::Sharded(x) => Box::new(x),
         }
     }
 
@@ -66,6 +79,17 @@ impl DesignStore {
         matches!(self, DesignStore::Dense(_))
     }
 
+    /// Whether the stored values are f32-quantized (f32 shard / shard set):
+    /// screening should widen keep-decisions by a safety slack
+    /// (`PathConfig::safety_slack`, DESIGN.md §1).
+    pub fn is_reduced_precision(&self) -> bool {
+        match self {
+            DesignStore::Mmap(x) => x.is_f32(),
+            DesignStore::Sharded(x) => x.is_f32(),
+            _ => false,
+        }
+    }
+
     /// Single element (sparse backends: O(log nnz-of-column) or a column
     /// stream — fine for I/O and tests, not for hot loops).
     pub fn get(&self, i: usize, j: usize) -> f64 {
@@ -77,24 +101,34 @@ impl DesignStore {
                 x.col_gather(j, &[i], &mut out);
                 out[0]
             }
+            DesignStore::Sharded(x) => x.get(i, j),
         }
     }
 
     /// The dense matrix inside, for dense-only call sites (PJRT literal
-    /// upload, column-slice tests). Panics on a sparse backend.
-    pub fn dense(&self) -> &DenseMatrix {
+    /// upload, column-slice tests). Errors on any other backend with the
+    /// explicit materialization routes — it must never abort a CLI path.
+    pub fn dense(&self) -> Result<&DenseMatrix> {
         match self {
-            DesignStore::Dense(x) => x,
-            other => panic!("expected dense backend, found {}", other.backend_name()),
+            DesignStore::Dense(x) => Ok(x),
+            other => bail!(
+                "expected the dense backend, found `{}`: materialize explicitly with \
+                 to_dense()/into_dense(), or rerun with `--matrix dense`",
+                other.backend_name()
+            ),
         }
     }
 
     /// Mutable dense access (test fixtures that edit columns in place).
-    /// Panics on a sparse backend.
-    pub fn dense_mut(&mut self) -> &mut DenseMatrix {
+    /// Errors on a non-dense backend (same contract as [`DesignStore::dense`]).
+    pub fn dense_mut(&mut self) -> Result<&mut DenseMatrix> {
         match self {
-            DesignStore::Dense(x) => x,
-            other => panic!("expected dense backend, found {}", other.backend_name()),
+            DesignStore::Dense(x) => Ok(x),
+            other => bail!(
+                "expected the dense backend, found `{}`: materialize explicitly with \
+                 to_dense()/into_dense(), or rerun with `--matrix dense`",
+                other.backend_name()
+            ),
         }
     }
 
@@ -135,6 +169,7 @@ impl DesignStore {
             DesignStore::Dense(x) => CscMatrix::from_dense(x),
             DesignStore::Csc(x) => x.clone(),
             DesignStore::Mmap(x) => x.to_csc(),
+            DesignStore::Sharded(x) => x.to_csc(),
         }
     }
 
@@ -154,15 +189,17 @@ impl DesignStore {
     }
 
     /// Scale every column to unit ℓ2 norm in place, returning the original
-    /// norms. Supported for the in-RAM backends; an out-of-core shard is
-    /// read-only, so normalize before converting (or load it via
-    /// `to_csc()` first).
-    pub fn normalize_columns(&mut self) -> Vec<f64> {
+    /// norms. Supported for the in-RAM backends; an on-disk shard (set) is
+    /// read-only, so this errors with the fix — normalize before
+    /// converting, or load via `to_csc()` first.
+    pub fn normalize_columns(&mut self) -> Result<Vec<f64>> {
         match self {
-            DesignStore::Dense(x) => x.normalize_columns(),
-            DesignStore::Csc(x) => x.normalize_columns(),
-            DesignStore::Mmap(_) => panic!(
-                "cannot normalize an out-of-core shard in place; normalize before `dpp convert`"
+            DesignStore::Dense(x) => Ok(x.normalize_columns()),
+            DesignStore::Csc(x) => Ok(x.normalize_columns()),
+            other => bail!(
+                "cannot normalize the read-only `{}` backend in place: normalize before \
+                 `dpp convert`, or materialize with to_csc() first",
+                other.backend_name()
             ),
         }
     }
@@ -174,6 +211,7 @@ impl PartialEq for DesignStore {
             (DesignStore::Dense(a), DesignStore::Dense(b)) => a == b,
             (DesignStore::Csc(a), DesignStore::Csc(b)) => a == b,
             (DesignStore::Mmap(a), DesignStore::Mmap(b)) => a.shard_dir() == b.shard_dir(),
+            (DesignStore::Sharded(a), DesignStore::Sharded(b)) => a == b,
             _ => false,
         }
     }
@@ -197,9 +235,16 @@ impl From<MmapCscMatrix> for DesignStore {
     }
 }
 
+impl From<ShardSetMatrix> for DesignStore {
+    fn from(x: ShardSetMatrix) -> DesignStore {
+        DesignStore::Sharded(x)
+    }
+}
+
 /// Full delegation, so the provided-method overrides of each backend (the
-/// 8-way dense sweep, CSC merge-joins, the shard's streaming kernels) are
-/// reached through the store exactly as through the inner type.
+/// 8-way dense sweep, CSC merge-joins, the shard's streaming kernels, the
+/// shard set's pool-parallel sweeps) are reached through the store exactly
+/// as through the inner type.
 impl DesignMatrix for DesignStore {
     fn n_rows(&self) -> usize {
         self.as_design().n_rows()
@@ -278,18 +323,28 @@ mod tests {
     fn variants_agree_through_the_trait() {
         let d = DesignStore::from(small_dense());
         let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        let s = DesignStore::from(ShardSetMatrix::split_csc(
+            &CscMatrix::from_dense(&small_dense()),
+            2,
+        ));
         assert_eq!((d.n_rows(), d.n_cols()), (2, 3));
         assert_eq!((c.n_rows(), c.n_cols()), (2, 3));
+        assert_eq!((s.n_rows(), s.n_cols()), (2, 3));
         assert_eq!(d.nnz(), 6); // dense counts stored entries
         assert_eq!(c.nnz(), 4);
+        assert_eq!(s.nnz(), 4);
         let mut a = vec![0.0; 3];
         let mut b = vec![0.0; 3];
+        let mut e = vec![0.0; 3];
         d.gemv_t(&[1.0, -1.0], &mut a);
         c.gemv_t(&[1.0, -1.0], &mut b);
+        s.gemv_t(&[1.0, -1.0], &mut e);
         assert_eq!(a, b);
+        assert_eq!(b, e);
         for i in 0..2 {
             for j in 0..3 {
                 assert_eq!(d.get(i, j), c.get(i, j), "({i},{j})");
+                assert_eq!(c.get(i, j), s.get(i, j), "sharded ({i},{j})");
             }
         }
     }
@@ -303,6 +358,11 @@ mod tests {
         assert_eq!(c.into_dense(), small_dense());
         assert!(d.is_dense());
         assert_eq!(d.backend_name(), "dense");
+        let s = DesignStore::from(ShardSetMatrix::split_csc(&d.to_csc(), 3));
+        assert_eq!(s.backend_name(), "sharded");
+        assert_eq!(s.to_dense(), small_dense());
+        assert_eq!(s.to_csc(), d.to_csc());
+        assert!(!s.is_reduced_precision());
     }
 
     #[test]
@@ -312,14 +372,18 @@ mod tests {
         let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
         assert_eq!(d1, d2);
         assert_ne!(d1, c); // cross-backend comparison is intentionally false
+        let s1 = DesignStore::from(ShardSetMatrix::split_csc(&d1.to_csc(), 2));
+        let s2 = DesignStore::from(ShardSetMatrix::split_csc(&d1.to_csc(), 2));
+        assert_eq!(s1, s2);
+        assert_ne!(s1, c);
     }
 
     #[test]
     fn normalize_matches_across_dense_and_csc() {
         let mut d = DesignStore::from(small_dense());
         let mut c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
-        let nd = d.normalize_columns();
-        let nc = c.normalize_columns();
+        let nd = d.normalize_columns().unwrap();
+        let nc = c.normalize_columns().unwrap();
         assert_eq!(nd, nc);
         for (a, b) in d.col_norms().iter().zip(c.col_norms()) {
             assert!((a - 1.0).abs() < 1e-12 && (b - 1.0).abs() < 1e-12);
@@ -327,9 +391,21 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn dense_accessor_panics_on_sparse() {
-        let c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
-        let _ = c.dense();
+    fn dense_only_accessors_error_on_sparse_with_guidance() {
+        // the store.rs satellite fix: no process aborts from accessor
+        // mismatches — a line-actionable error instead
+        let mut c = DesignStore::from(CscMatrix::from_dense(&small_dense()));
+        let err = format!("{:#}", c.dense().unwrap_err());
+        assert!(err.contains("csc"), "{err}");
+        assert!(err.contains("to_dense"), "{err}");
+        assert!(c.dense_mut().is_err());
+        let mut s = DesignStore::from(ShardSetMatrix::split_csc(
+            &CscMatrix::from_dense(&small_dense()),
+            2,
+        ));
+        let err = format!("{:#}", s.normalize_columns().unwrap_err());
+        assert!(err.contains("sharded"), "{err}");
+        assert!(err.contains("dpp convert"), "{err}");
+        assert!(s.dense().is_err());
     }
 }

@@ -5,25 +5,33 @@
 //!   path      --dataset … --rule … --solver …      run a screened λ-path
 //!   group     --ngroups …        run a group-Lasso screened path
 //!   service   --requests …       demo the batching screening service
-//!   convert   --file in.svm --out shard.dppcsc     stream to an on-disk shard
+//!   convert   --file in.svm --out shard.dppcsc [--f32]  stream to an on-disk shard
+//!   shard     --file shard.dppcsc --shards K   split into a row-range shard set
+//!   bench-screen                 perf harness → BENCH_screen.json
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
 //!
-//! `path` and `service` accept `--matrix dense|csc|mmap|auto` (default
-//! auto): auto keeps an already-sparse input sparse (a LIBSVM file loads
-//! as CSC, a shard directory as the out-of-core mmap backend) and picks
-//! CSC for dense data sparse enough that the O(nnz) sweep wins. `mmap`
-//! requires a shard produced by `dpp convert`; `--mmap-budget BYTES`
-//! bounds its resident window. The chosen backend is reported on stderr.
+//! `path` and `service` accept `--matrix dense|csc|mmap|sharded|auto`
+//! (default auto): auto keeps an already-sparse input sparse (a LIBSVM
+//! file loads as CSC, a shard directory as the out-of-core mmap backend, a
+//! shard-set manifest as the pool-parallel sharded backend) and picks CSC
+//! for dense data sparse enough that the O(nnz) sweep wins. `mmap`
+//! requires a shard produced by `dpp convert`, `sharded` a shard set
+//! produced by `dpp shard`; `--mmap-budget BYTES` bounds the resident
+//! window (per shard for a set), `DPP_POOL_THREADS` sizes the sweep pool.
+//! The chosen backend is reported on stderr.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use dpp_screen::coordinator::service::ScreeningService;
 use dpp_screen::data::{convert, synthetic, Dataset, RealDataset};
-use dpp_screen::linalg::{CscMatrix, DesignStore, MmapCscMatrix};
+use dpp_screen::linalg::{CscMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix};
 use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
 use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
-use dpp_screen::runtime::ArtifactRuntime;
+use dpp_screen::runtime::pool::{self, WorkerPool};
+use dpp_screen::runtime::{ArtifactRuntime, ArtifactSweep};
 use dpp_screen::solver::SolveOptions;
+use dpp_screen::util::benchkit::{black_box, Bench};
 use dpp_screen::util::cli::Args;
 use dpp_screen::util::{benchkit, full_scale, grid_size};
 
@@ -35,17 +43,22 @@ fn main() {
         Some("group") => cmd_group(&args),
         Some("service") => cmd_service(&args),
         Some("convert") => cmd_convert(&args),
+        Some("shard") => cmd_shard(&args),
+        Some("bench-screen") => cmd_bench_screen(&args),
         Some("exp") => cmd_exp(&args),
         _ => {
             eprintln!(
-                "usage: dpp <info|path|group|service|convert|exp> [--options]\n\
+                "usage: dpp <info|path|group|service|convert|shard|bench-screen|exp> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
-                 dpp convert --file data.svm --out data.dppcsc\n\
+                 dpp convert --file data.svm --out data.dppcsc [--f32]\n\
                  dpp path --file data.dppcsc --matrix mmap  # out-of-core backend\n\
+                 dpp shard --file data.dppcsc --out data.shards --shards 4\n\
+                 dpp path --file data.shards --matrix sharded  # pool-parallel shard set\n\
                  dpp group --ngroups 100 --rule group-edpp\n\
                  dpp service --requests 20 --rule edpp --matrix auto\n\
+                 dpp bench-screen --p 4000   # perf baseline -> BENCH_screen.json\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
                  dpp exp all"
             );
@@ -58,8 +71,8 @@ fn main() {
 /// the unrolled dense kernel comfortably (see benches/kernels.rs).
 const AUTO_CSC_DENSITY: f64 = 0.25;
 
-/// Resolve `--matrix dense|csc|mmap|auto` against whatever backend the
-/// loader produced. An already-sparse input is never densified to "measure
+/// Resolve `--matrix dense|csc|mmap|sharded|auto` against whatever backend
+/// the loader produced. An already-sparse input is never densified to "measure
 /// density" — auto keeps it as-is; only an explicit `--matrix dense`
 /// materializes a dense copy.
 fn pick_backend(x: DesignStore, choice: &str) -> DesignStore {
@@ -81,6 +94,18 @@ fn pick_backend(x: DesignStore, choice: &str) -> DesignStore {
                 std::process::exit(2);
             }
         },
+        "sharded" => match x {
+            s @ DesignStore::Sharded(_) => s,
+            other => {
+                eprintln!(
+                    "--matrix sharded needs a shard set, not a {} input: run \
+                     `dpp convert` then `dpp shard --file data.dppcsc --out \
+                     data.shards --shards K` and pass `--file data.shards`",
+                    other.backend_name()
+                );
+                std::process::exit(2);
+            }
+        },
         "auto" => match x {
             DesignStore::Dense(d) => {
                 // count first, convert after: building the CSC just to
@@ -97,7 +122,7 @@ fn pick_backend(x: DesignStore, choice: &str) -> DesignStore {
             sparse => sparse,
         },
         other => {
-            eprintln!("unknown --matrix `{other}` (dense|csc|mmap|auto)");
+            eprintln!("unknown --matrix `{other}` (dense|csc|mmap|sharded|auto)");
             std::process::exit(2);
         }
     }
@@ -121,10 +146,16 @@ fn is_shard_path(path: &str) -> bool {
     path.ends_with(".dppcsc") || Path::new(path).join("meta.txt").exists()
 }
 
+/// Does `--file` point at a shard-set directory (`shardset.txt` manifest)?
+fn is_shardset_path(path: &str) -> bool {
+    path.ends_with(".shards")
+        || Path::new(path).join(dpp_screen::linalg::sharded::SHARDSET_FILE).exists()
+}
+
 fn load_shard(path: &str, args: &Args) -> anyhow::Result<Dataset> {
     let budget = args.get_parse::<usize>(
         "mmap-budget",
-        dpp_screen::linalg::mmap::DEFAULT_WINDOW_BYTES,
+        dpp_screen::linalg::mmap::default_budget(),
     );
     let x = MmapCscMatrix::open_with_budget(path, budget)?;
     let y = convert::read_shard_y(path)?.ok_or_else(|| {
@@ -140,11 +171,33 @@ fn load_shard(path: &str, args: &Args) -> anyhow::Result<Dataset> {
     Ok(Dataset { name: path.to_string(), x: x.into(), y, beta_true: None, groups: None })
 }
 
+fn load_shardset(path: &str, args: &Args) -> anyhow::Result<Dataset> {
+    let budget = args.get_parse::<usize>(
+        "mmap-budget",
+        dpp_screen::linalg::mmap::default_budget(),
+    );
+    let x = ShardSetMatrix::open_with_budget(path, budget)?;
+    let y = convert::read_shard_y(path)?.ok_or_else(|| {
+        anyhow::anyhow!("shard set {path} has no y.bin (split a labeled shard)")
+    })?;
+    if y.len() != x.n_rows() {
+        anyhow::bail!(
+            "shard set {path}: y.bin has {} entries, matrix has {} rows",
+            y.len(),
+            x.n_rows()
+        );
+    }
+    Ok(Dataset { name: path.to_string(), x: x.into(), y, beta_true: None, groups: None })
+}
+
 fn load_dataset(args: &Args) -> Dataset {
     // user-supplied data: --file data.csv (y,x1,…,xp), data.svm (LIBSVM,
-    // loads as CSC), or a data.dppcsc shard (loads out-of-core)
+    // loads as CSC), a data.dppcsc shard (loads out-of-core), or a
+    // data.shards shard set (loads as the pool-parallel sharded backend)
     if let Some(path) = args.get("file") {
-        let res = if is_shard_path(path) {
+        let res = if is_shardset_path(path) {
+            load_shardset(path, args)
+        } else if is_shard_path(path) {
             load_shard(path, args)
         } else if path.ends_with(".svm") || path.ends_with(".libsvm") {
             dpp_screen::data::io::read_libsvm(path, None)
@@ -189,7 +242,11 @@ fn cmd_info() {
     );
     println!("rules:    {} none", RuleKind::ALL_LASSO.map(|r| r.name()).join(" "));
     println!("solvers:  cd fista lars");
-    println!("matrix:   dense csc mmap auto (shards via `dpp convert`)");
+    println!(
+        "matrix:   dense csc mmap sharded auto (shards via `dpp convert`, shard \
+         sets via `dpp shard`; sweeps use {} pool thread(s))",
+        pool::configured_threads()
+    );
     match ArtifactRuntime::load_default() {
         Some(rt) => {
             println!("artifacts ({}):", rt.artifact_dir().display());
@@ -207,11 +264,24 @@ fn cmd_path(args: &Args) {
     let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
     let k = args.get_parse("grid", grid_size(100));
     let lo = args.get_parse("lo", 0.05);
-    let cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
+    let mut cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
     let name = ds.name.clone();
     let (n, p) = (ds.n(), ds.p());
     let y = ds.y.clone();
+    // decided on the *loaded* store: rematerializing an f32 shard as
+    // csc/dense does not un-quantize the values, so the slack must survive
+    // the --matrix choice
+    let reduced_precision = ds.x.is_reduced_precision();
     let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
+    if reduced_precision {
+        // f32-stored values: widen keep-decisions exactly like the PJRT
+        // f32 sweep does (DESIGN.md §1)
+        cfg.safety_slack = ArtifactSweep::SAFETY_SLACK;
+        eprintln!(
+            "[dpp path] f32-stored values: screening widened by slack {:.0e}",
+            cfg.safety_slack
+        );
+    }
     report_backend("path", &backend);
     let x = backend.as_design();
     let grid = LambdaGrid::relative(x, &y, k, lo, 1.0);
@@ -293,17 +363,22 @@ fn cmd_service(args: &Args) {
     let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
     let n_req = args.get_parse("requests", 20usize);
     let y = ds.y.clone();
+    // decided before pick_backend — see cmd_path
+    let reduced_precision = ds.x.is_reduced_precision();
     let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
     report_backend("service", &backend);
+    let mut cfg = PathConfig::default();
+    if reduced_precision {
+        cfg.safety_slack = ArtifactSweep::SAFETY_SLACK;
+        eprintln!(
+            "[dpp service] f32-stored values: screening widened by slack {:.0e}",
+            cfg.safety_slack
+        );
+    }
     let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
     println!("service backend: {}", backend.backend_name());
-    let svc = ScreeningService::spawn_boxed(
-        backend.into_boxed(),
-        y,
-        rule,
-        SolverKind::Cd,
-        PathConfig::default(),
-    );
+    let svc =
+        ScreeningService::spawn_boxed(backend.into_boxed(), y, rule, SolverKind::Cd, cfg);
     // fire a burst of requests across the λ range (arrivals out of order)
     let mut rxs = Vec::new();
     for i in 0..n_req {
@@ -326,7 +401,9 @@ fn cmd_service(args: &Args) {
 
 fn cmd_convert(args: &Args) {
     let Some(input) = args.get("file") else {
-        eprintln!("usage: dpp convert --file data.svm|data.csv [--out data.dppcsc] [--p N]");
+        eprintln!(
+            "usage: dpp convert --file data.svm|data.csv [--out data.dppcsc] [--p N] [--f32]"
+        );
         std::process::exit(2);
     };
     let out = args
@@ -342,20 +419,193 @@ fn cmd_convert(args: &Args) {
             std::process::exit(2);
         }
     });
-    match convert::convert_to_shard(input, &out, p_hint) {
+    let f32_values = args.flag("f32");
+    match convert::convert_to_shard_opts(input, &out, p_hint, f32_values) {
         Ok(s) => {
             println!(
-                "converted {input} -> {out}: {}x{} matrix, nnz={} ({:.1} MB on disk; \
-                 one bounded-memory pass per direction)",
+                "converted {input} -> {out}: {}x{} matrix, nnz={}, dtype={} ({:.1} MB on \
+                 disk; one bounded-memory pass per direction)",
                 s.n_rows,
                 s.n_cols,
                 s.nnz,
+                if s.f32_values { "f32" } else { "f64" },
                 s.disk_bytes() as f64 / 1e6
             );
             println!("run it out-of-core:  dpp path --file {out} --matrix mmap");
         }
         Err(e) => {
             eprintln!("convert failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_shard(args: &Args) {
+    let Some(input) = args.get("file") else {
+        eprintln!("usage: dpp shard --file data.dppcsc [--out data.shards] --shards K");
+        std::process::exit(2);
+    };
+    let k = args.get_parse::<usize>("shards", 2);
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}.shards", input.trim_end_matches(".dppcsc")));
+    match convert::split_shard(input, &out, k) {
+        Ok(s) => {
+            println!(
+                "sharded {input} -> {out}: {}x{} matrix, nnz={}, {} row-range shard(s), \
+                 dtype={}",
+                s.n_rows,
+                s.n_cols,
+                s.nnz,
+                s.shards,
+                if s.f32_values { "f32" } else { "f64" }
+            );
+            println!("run it sharded:  dpp path --file {out} --matrix sharded");
+        }
+        Err(e) => {
+            eprintln!("shard failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Perf harness feeding the bench trajectory: screen-path wall-clock and
+/// rejection ratio per rule/backend/thread-count, plus raw `xt_w` sweep
+/// timings, written as `BENCH_screen.json` in the working directory (the
+/// repo root in CI) so future PRs diff against a pinned baseline.
+fn cmd_bench_screen(args: &Args) {
+    let n = args.get_parse("n", 200usize);
+    let p = args.get_parse("p", 2000usize);
+    let density = args.get_parse("density", 0.1f64);
+    let grid_k = args.get_parse("grid", 15usize);
+    let shards = args.get_parse("shards", 3usize);
+    let out_path = args.get_or("out", "BENCH_screen.json");
+
+    // sparse synthetic regression problem (same construction as the
+    // backend-parity fixtures)
+    let mut rng = dpp_screen::util::rng::Rng::new(args.get_parse("seed", 17u64));
+    let mut xd = dpp_screen::linalg::DenseMatrix::zeros(n, p);
+    for j in 0..p {
+        for v in xd.col_mut(j).iter_mut() {
+            if rng.f64() < density {
+                *v = rng.normal();
+            }
+        }
+    }
+    let csc = CscMatrix::from_dense(&xd);
+    let mut beta = vec![0.0; p];
+    for j in (0..p).step_by(p / 25 + 1) {
+        beta[j] = rng.normal() * 2.0;
+    }
+    let mut y = vec![0.0; n];
+    DesignMatrix::gemv(&csc, &beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.1 * rng.normal();
+    }
+    let mut w = vec![0.0; n];
+    rng.fill_normal(&mut w);
+
+    let max_threads = pool::configured_threads();
+    let mut thread_counts = vec![1usize];
+    let mut t = 2;
+    while t < max_threads {
+        thread_counts.push(t);
+        t *= 2;
+    }
+    if max_threads > 1 {
+        thread_counts.push(max_threads);
+    }
+
+    let bench = Bench::new(2, 8);
+    let grid = LambdaGrid::relative(&csc, &y, grid_k, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let rules = [RuleKind::Edpp, RuleKind::Dpp, RuleKind::Strong];
+    let mut cases: Vec<String> = Vec::new();
+    let mut rep = benchkit::Report::new(
+        "bench-screen (rule × backend × threads)",
+        &["rule", "backend", "threads", "xt_w", "path", "rejection"],
+    );
+
+    let mut record = |rule: &str,
+                      backend: &str,
+                      threads: usize,
+                      xt_w_secs: f64,
+                      path_secs: f64,
+                      rejection: f64,
+                      rep: &mut benchkit::Report| {
+        cases.push(format!(
+            "    {{\"rule\": \"{rule}\", \"backend\": \"{backend}\", \"threads\": {threads}, \
+             \"xt_w_secs\": {xt_w_secs:.9}, \"path_secs\": {path_secs:.6}, \
+             \"rejection_ratio\": {rejection:.6}}}"
+        ));
+        rep.row(&[
+            rule.to_string(),
+            backend.to_string(),
+            threads.to_string(),
+            format!("{:.3}ms", xt_w_secs * 1e3),
+            format!("{path_secs:.3}s"),
+            format!("{rejection:.4}"),
+        ]);
+    };
+
+    // CSC baseline (single-threaded by construction)
+    let mut out = vec![0.0; p];
+    let m_sweep = bench.run("xt_w csc", || {
+        DesignMatrix::xt_w(&csc, &w, &mut out);
+        black_box(out[0])
+    });
+    for rule in rules {
+        let t0 = std::time::Instant::now();
+        let run = solve_path(&csc, &y, &grid, rule, SolverKind::Cd, &cfg);
+        record(
+            rule.name(),
+            "csc",
+            1,
+            m_sweep.mean_s,
+            t0.elapsed().as_secs_f64(),
+            run.mean_rejection_ratio(),
+            &mut rep,
+        );
+    }
+
+    // sharded backend across thread counts (in-RAM shards isolate the
+    // pool-scaling signal from disk behavior)
+    for &threads in &thread_counts {
+        let sh = ShardSetMatrix::split_csc(&csc, shards)
+            .with_pool(Arc::new(WorkerPool::new(threads)));
+        let m_sweep = bench.run("xt_w sharded", || {
+            DesignMatrix::xt_w(&sh, &w, &mut out);
+            black_box(out[0])
+        });
+        for rule in rules {
+            let t0 = std::time::Instant::now();
+            let run = solve_path(&sh, &y, &grid, rule, SolverKind::Cd, &cfg);
+            record(
+                rule.name(),
+                "sharded",
+                threads,
+                m_sweep.mean_s,
+                t0.elapsed().as_secs_f64(),
+                run.mean_rejection_ratio(),
+                &mut rep,
+            );
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"screen\",\n  \"n\": {n},\n  \"p\": {p},\n  \
+         \"density\": {density},\n  \"grid\": {grid_k},\n  \"shards\": {shards},\n  \
+         \"max_threads\": {max_threads},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        cases.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => {
+            rep.emit("bench_screen.md");
+            println!("wrote {out_path} ({} cases)", cases.len());
+        }
+        Err(e) => {
+            eprintln!("failed to write {out_path}: {e}");
             std::process::exit(2);
         }
     }

@@ -156,6 +156,11 @@ pub struct PathConfig {
     pub kkt_repair: bool,
     /// Warm-start each solve from the previous λ's solution.
     pub warm_start: bool,
+    /// Relative slack widening keep-decisions when the matrix values are
+    /// reduced-precision (f32 shards, the PJRT sweep): keep *more*
+    /// features, never discard an active one (DESIGN.md §1). 0.0 for the
+    /// exact f64 backends.
+    pub safety_slack: f64,
     pub solve_opts: SolveOptions,
 }
 
@@ -165,6 +170,7 @@ impl Default for PathConfig {
             sequential: true,
             kkt_repair: true,
             warm_start: true,
+            safety_slack: 0.0,
             solve_opts: SolveOptions::default(),
         }
     }
@@ -249,7 +255,8 @@ pub fn solve_path(
     solver: SolverKind,
     cfg: &PathConfig,
 ) -> PathOutput {
-    let ctx = ScreenContext::new(x, y);
+    // with_sweep_slack(x, y, x, 0.0) is exactly ScreenContext::new
+    let ctx = ScreenContext::with_sweep_slack(x, y, x, cfg.safety_slack);
     solve_path_with_ctx(&ctx, grid, rule, solver, cfg)
 }
 

@@ -11,6 +11,8 @@
 //! Everything here is optional: when `artifacts/` is absent or no entry
 //! matches the problem shape, callers fall back to the native f64 sweep.
 
+pub mod pool;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

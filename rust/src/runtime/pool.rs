@@ -1,0 +1,339 @@
+//! Persistent compute worker pool (std threads + mpsc — the offline image
+//! has no tokio or rayon, DESIGN.md §3).
+//!
+//! This is the first subsystem in the repo that owns threads for *compute*
+//! rather than for request routing: the sharded backend
+//! ([`crate::linalg::ShardSetMatrix`]) dispatches its `Xᵀw` sweeps, subset
+//! sweeps and `gemv` partial sweeps here, one job per column block or per
+//! row shard. The pool is deliberately dumb — fixed thread count, one
+//! shared injector queue, blocking scoped execution — because every caller
+//! in the crate follows the same fork/join shape: split a sweep into
+//! disjoint jobs, run them, continue single-threaded.
+//!
+//! Determinism contract: the pool never changes *what* is computed, only
+//! *where*. Callers must partition work so that each output element is
+//! produced entirely by one job (the sharded backend computes each `out[j]`
+//! with a single sequential accumulator); under that discipline results are
+//! bit-identical for every thread count, including 1 — pinned by
+//! `backend_parity.rs`.
+//!
+//! Sizing: [`WorkerPool::new`] takes an explicit count (benches sweep it);
+//! [`global`] reads `DPP_POOL_THREADS` once, defaulting to the machine's
+//! available parallelism.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Env var fixing the global pool's thread count (read once, at first use).
+pub const THREADS_ENV: &str = "DPP_POOL_THREADS";
+
+/// A unit of work. Jobs are type-erased `'static` closures internally;
+/// [`WorkerPool::run`] is the only constructor and it blocks until every
+/// job has finished, which is what makes the borrowed-closure API sound.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Task {
+    job: Job,
+    /// Completion signal back to the submitting `run` call: `None` on
+    /// success, `Some(panic message)` when the job panicked — the payload
+    /// is preserved so a worker-side failure stays diagnosable.
+    done: Sender<Option<String>>,
+}
+
+thread_local! {
+    /// Set inside pool workers so a nested `run` call executes inline
+    /// instead of deadlocking a fully-busy pool.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Fixed-size persistent worker pool.
+///
+/// Threads are spawned once in `new` and live until the pool is dropped;
+/// submitting work allocates one box per job and nothing else. The pool is
+/// `Sync`: concurrent `run` calls interleave their jobs on the shared
+/// queue, each joining only its own completions.
+pub struct WorkerPool {
+    /// `None` only during shutdown (Drop takes it to close the channel).
+    tx: Mutex<Option<Sender<Task>>>,
+    threads: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|k| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dpp-pool-{k}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { tx: Mutex::new(Some(tx)), threads, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every job, blocking until all have completed. Jobs may
+    /// borrow from the caller's stack (`'scope`), because this function
+    /// does not return until the last job has run.
+    ///
+    /// Runs inline (no dispatch) when the pool has one thread, there is a
+    /// single job, or the caller is itself a pool worker (nested fork/join
+    /// must not wait on a queue it is blocking).
+    ///
+    /// Panics if any job panicked (after all jobs have settled, so borrowed
+    /// data is never observed mid-write by an unwinding caller).
+    pub fn run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.threads <= 1 || jobs.len() == 1 || IN_POOL_WORKER.with(|f| f.get()) {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let n = jobs.len();
+        let (done_tx, done_rx) = channel::<Option<String>>();
+        let tx = {
+            let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.as_ref().expect("worker pool already shut down").clone()
+        };
+        for job in jobs {
+            // SAFETY: the only lifetime-erasing cast in the crate. The job
+            // borrows data that outlives `'scope`; we block below until
+            // every job has signalled completion (worker panics are caught
+            // and still signal), so no job can run — or be dropped unrun
+            // later — after `run` returns and the borrows expire. We hold a
+            // live sender, so the queue cannot close with jobs stranded in
+            // it; if a worker thread dies anyway, `done_rx.recv()` errors
+            // and we panic here rather than return borrows to live jobs.
+            let job: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job) };
+            let task = Task { job, done: done_tx.clone() };
+            if let Err(std::sync::mpsc::SendError(t)) = tx.send(task) {
+                // unreachable while we hold `tx`, but never lose a job
+                (t.job)();
+                let _ = t.done.send(None);
+            }
+        }
+        drop(tx);
+        drop(done_tx);
+        let mut first_panic: Option<String> = None;
+        for _ in 0..n {
+            match done_rx.recv() {
+                Ok(None) => {}
+                Ok(Some(msg)) => {
+                    first_panic.get_or_insert(msg);
+                }
+                Err(_) => {
+                    first_panic
+                        .get_or_insert_with(|| "worker thread died mid-batch".to_string());
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = first_panic {
+            panic!("worker pool job panicked: {msg}");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the injector ends every worker's recv loop
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        drop(tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Task>>>) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let task = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Ok(task) = task else { return };
+        let payload = catch_unwind(AssertUnwindSafe(task.job)).err().map(panic_message);
+        let _ = task.done.send(payload);
+    }
+}
+
+/// Best-effort text of a caught panic payload (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Thread count the global pool uses: `DPP_POOL_THREADS` if set (≥ 1), else
+/// the machine's available parallelism.
+pub fn configured_threads() -> usize {
+    std::env::var(THREADS_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|t| t.max(1))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// The process-wide compute pool (lazily spawned on first use). Backends
+/// that don't carry their own pool ([`crate::linalg::ShardSetMatrix`]
+/// without `with_pool`) dispatch here.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(configured_threads()))
+}
+
+/// Split `len` work items into at most `threads` contiguous chunks of
+/// near-equal size (≥ 1). Deterministic — independent of scheduling.
+pub fn chunk_len(len: usize, threads: usize) -> usize {
+    let t = threads.max(1);
+    len.div_ceil(t).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 97];
+        {
+            let chunk = chunk_len(out.len(), pool.threads());
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut base = 0usize;
+            for part in out.chunks_mut(chunk) {
+                let start = base;
+                base += part.len();
+                jobs.push(Box::new(move || {
+                    for (k, v) in part.iter_mut().enumerate() {
+                        *v = start + k;
+                    }
+                }));
+            }
+            pool.run(jobs);
+        }
+        for (k, v) in out.iter().enumerate() {
+            assert_eq!(*v, k);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn nested_run_from_a_worker_does_not_deadlock() {
+        // two outer jobs so they really dispatch to workers (a single job
+        // would be inlined); each fans out again from inside its worker,
+        // which must execute inline rather than wait on the busy queue
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..2)
+            .map(|_| {
+                let p = Arc::clone(&pool);
+                let t = Arc::clone(&total);
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let t = Arc::clone(&t);
+                            Box::new(move || {
+                                t.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    p.run(inner);
+                }) as Box<dyn FnOnce() + Send + 'static>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(total.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn panicking_job_propagates_after_all_jobs_settle() {
+        let pool = WorkerPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'static>> = vec![
+            Box::new(|| panic!("boom")),
+            Box::new(move || {
+                d.fetch_add(1, Ordering::Relaxed);
+            }),
+        ];
+        let r = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)));
+        let msg = panic_message(r.unwrap_err());
+        assert!(msg.contains("boom"), "original payload preserved: {msg}");
+        assert_eq!(done.load(Ordering::Relaxed), 1, "healthy job still ran");
+        // the pool survives a panicked job
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|_| {
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn chunking_covers_everything() {
+        for len in [1usize, 7, 16, 97] {
+            for t in [1usize, 2, 3, 8, 100] {
+                let c = chunk_len(len, t);
+                assert!(c >= 1);
+                assert!(c * t >= len, "len {len} threads {t} chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn configured_threads_is_positive() {
+        assert!(configured_threads() >= 1);
+    }
+}

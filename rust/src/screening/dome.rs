@@ -111,7 +111,7 @@ mod tests {
 
     fn unit_norm_ds(seed: u64, n: usize, p: usize) -> crate::data::Dataset {
         let mut ds = synthetic::synthetic1(n, p, p / 5 + 1, 0.1, seed);
-        ds.normalize_features();
+        ds.normalize_features().expect("in-RAM backend");
         ds
     }
 

@@ -207,7 +207,7 @@ mod tests {
         for &(start, len) in &groups {
             let mut ss = 0.0;
             for j in start..start + len {
-                let d = dot(ds.x.dense().col(j), &ds.y);
+                let d = dot(ds.x.dense().unwrap().col(j), &ds.y);
                 ss += d * d;
             }
             manual = manual.max((ss / len as f64).sqrt());
@@ -231,7 +231,7 @@ mod tests {
         let (start, len) = groups[ctx.lam_max_arg];
         let mut manual = vec![0.0; 20];
         for j in start..start + len {
-            let c = ds.x.dense().col(j);
+            let c = ds.x.dense().unwrap().col(j);
             crate::linalg::axpy(dot(c, &ds.y), c, &mut manual);
         }
         for (a, b) in v.iter().zip(manual.iter()) {

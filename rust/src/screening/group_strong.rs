@@ -111,7 +111,7 @@ mod tests {
             let mut r = ds.y.clone();
             for (j, b) in full.iter().enumerate() {
                 if *b != 0.0 {
-                    crate::linalg::axpy(-b, ds.x.dense().col(j), &mut r);
+                    crate::linalg::axpy(-b, ds.x.dense().unwrap().col(j), &mut r);
                 }
             }
             // with keep = all-false on truly-active groups, violations appear

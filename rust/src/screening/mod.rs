@@ -326,7 +326,7 @@ mod tests {
             StepInput { lam_prev: ctx.lam_max, lam: 0.5 * ctx.lam_max, theta_prev: &theta_max };
         let v = v1(&ctx, &step);
         let s = ctx.xty[ctx.lam_max_arg].signum();
-        for (a, b) in v.iter().zip(ds.x.dense().col(ctx.lam_max_arg)) {
+        for (a, b) in v.iter().zip(ds.x.dense().unwrap().col(ctx.lam_max_arg)) {
             assert!((a - s * b).abs() < 1e-14);
         }
         // below λmax: v1 = y/λ₀ − θ

@@ -128,7 +128,7 @@ mod tests {
         let mut r = ds.y.clone();
         for j in 0..80 {
             if beta_red[j] != 0.0 {
-                crate::linalg::axpy(-beta_red[j], ds.x.dense().col(j), &mut r);
+                crate::linalg::axpy(-beta_red[j], ds.x.dense().unwrap().col(j), &mut r);
             }
         }
         let viol = kkt_violations(&ctx, &r, lam, &keep);

@@ -216,7 +216,7 @@ mod tests {
             }
             let mut r = ds.y.clone();
             for (k, &j) in cols.iter().enumerate() {
-                crate::linalg::axpy(-beta[k], ds.x.dense().col(j), &mut r);
+                crate::linalg::axpy(-beta[k], ds.x.dense().unwrap().col(j), &mut r);
             }
             let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
             let gap = duality_gap(&ds.x, &ds.y, &cols, &beta, &r, lam);
@@ -245,7 +245,7 @@ mod tests {
             let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
             let s = dual_scale(&ds.x, &cols, &ds.y, lam);
             for &j in &cols {
-                let v = dot(ds.x.dense().col(j), &ds.y) * s;
+                let v = dot(ds.x.dense().unwrap().col(j), &ds.y) * s;
                 assert!(v.abs() <= 1.0 + 1e-10, "infeasible: {v}");
             }
         });

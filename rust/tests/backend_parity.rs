@@ -282,6 +282,191 @@ fn lars_and_fista_also_run_on_csc_and_mmap() {
     let _ = std::fs::remove_dir_all(dir);
 }
 
+// ---------------------------------------------------------------------------
+// Row-sharded backend parity (`ShardSetMatrix` + worker pool): the reduce is
+// a deterministic shard-order fold with one accumulator per output element,
+// so keep-sets, CD trajectories and full EDPP paths are required to be
+// **bit-identical** to CSC at every shard count and every thread count.
+// ---------------------------------------------------------------------------
+
+use dpp_screen::data::convert::split_shard;
+use dpp_screen::linalg::ShardSetMatrix;
+use dpp_screen::runtime::pool::WorkerPool;
+use std::sync::Arc;
+
+#[test]
+fn every_rule_keep_set_identical_on_csc_and_sharded_at_1_2_3_shards() {
+    let ds = sparse_problem(36, 150, 0.25, 21);
+    let csc = ds.x.to_csc();
+    let csc_ctx = ScreenContext::new(&csc, &ds.y);
+
+    // exact sequential anchor from a high-precision solve at λ₀
+    let cols: Vec<usize> = (0..150).collect();
+    let opts = SolveOptions { tol_gap: 1e-11, ..Default::default() };
+    let lam0 = 0.7 * csc_ctx.lam_max;
+    let lam = 0.35 * csc_ctx.lam_max;
+    let prev = CdSolver.solve(&csc, &ds.y, &cols, lam0, None, &opts).scatter(&cols, 150);
+    let theta = theta_from_solution(&csc, &ds.y, &prev, lam0);
+    let step = StepInput { lam_prev: lam0, lam, theta_prev: &theta };
+
+    for k in [1usize, 2, 3] {
+        let sh = ShardSetMatrix::split_csc(&csc, k)
+            .with_pool(Arc::new(WorkerPool::new(k.max(2))));
+        let sh_ctx = ScreenContext::new(&sh, &ds.y);
+        // λmax and Xᵀy are sweep outputs: equal bits, not just close
+        assert_eq!(csc_ctx.lam_max, sh_ctx.lam_max, "λmax, k={k}");
+        assert_eq!(csc_ctx.xty, sh_ctx.xty, "Xᵀy, k={k}");
+        assert_eq!(csc_ctx.col_norms, sh_ctx.col_norms, "col_norms, k={k}");
+        for (rule_c, rule_s) in all_rules(36).into_iter().zip(all_rules(36)) {
+            let mut keep_c = vec![true; 150];
+            let mut keep_s = vec![true; 150];
+            rule_c.screen(&csc_ctx, &step, &mut keep_c);
+            rule_s.screen(&sh_ctx, &step, &mut keep_s);
+            assert_eq!(
+                keep_c,
+                keep_s,
+                "{} keep-set diverged between csc and {k}-shard backends",
+                rule_c.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn cd_trajectories_bit_identical_on_sharded_at_1_2_3_shards() {
+    let ds = sparse_problem(30, 90, 0.2, 22);
+    let csc = ds.x.to_csc();
+    let lam = 0.3 * dual::lambda_max(&csc, &ds.y);
+    let cols: Vec<usize> = (0..90).collect();
+    let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
+    let base = CdSolver.solve(&csc, &ds.y, &cols, lam, None, &opts);
+    for k in [1usize, 2, 3] {
+        let sh = ShardSetMatrix::split_csc(&csc, k);
+        let r = CdSolver.solve(&sh, &ds.y, &cols, lam, None, &opts);
+        assert_eq!(base.iters, r.iters, "iteration counts, k={k}");
+        assert_eq!(base.beta, r.beta, "CD trajectory, k={k}");
+        assert_eq!(base.gap, r.gap, "gap certificate, k={k}");
+    }
+}
+
+#[test]
+fn shard_boundary_through_a_dense_row_and_empty_shards_stay_exact() {
+    // rows 10..14 fully dense (every feature hit), and the boundary set
+    // places cuts *inside* that dense row block plus two empty shards
+    let mut ds = sparse_problem(24, 60, 0.15, 23);
+    {
+        let x = ds.x.dense_mut().unwrap();
+        let mut rng = Rng::new(99);
+        for j in 0..60 {
+            for i in 10..14 {
+                x.col_mut(j)[i] = rng.normal();
+            }
+        }
+    }
+    let csc = ds.x.to_csc();
+    let sh = ShardSetMatrix::split_csc_at(&csc, &[0, 0, 11, 12, 13, 24, 24]);
+    assert_eq!(sh.shard_count(), 6); // two empty, three cutting the dense block
+    assert_eq!(sh.to_csc(), csc);
+
+    let csc_ctx = ScreenContext::new(&csc, &ds.y);
+    let sh_ctx = ScreenContext::new(&sh, &ds.y);
+    assert_eq!(csc_ctx.lam_max, sh_ctx.lam_max);
+    let theta: Vec<f64> = ds.y.iter().map(|v| v / csc_ctx.lam_max).collect();
+    let step = StepInput {
+        lam_prev: csc_ctx.lam_max,
+        lam: 0.4 * csc_ctx.lam_max,
+        theta_prev: &theta,
+    };
+    let mut keep_c = vec![true; 60];
+    let mut keep_s = vec![true; 60];
+    EdppRule.screen(&csc_ctx, &step, &mut keep_c);
+    EdppRule.screen(&sh_ctx, &step, &mut keep_s);
+    assert_eq!(keep_c, keep_s);
+}
+
+/// The sharded acceptance criterion end to end: LIBSVM → `dpp convert`'s
+/// streaming converter → `dpp shard`'s splitter (3 row ranges) → the
+/// out-of-core `ShardSetMatrix` under a starved window → full sequential
+/// EDPP path + service-style solves, bit-identical to the CSC backend fed
+/// from the same file, at 1 and 3 pool threads.
+#[test]
+fn full_edpp_path_on_shardset_matches_csc_bit_identical() {
+    let ds = sparse_problem(40, 200, 0.15, 24);
+    let dir = shard_dir("shardset");
+    let svm = dir.with_extension("svm");
+    write_libsvm(&ds, &svm).unwrap();
+
+    let loaded = read_libsvm(&svm, Some(200)).unwrap();
+    let csc = loaded.x.to_csc();
+    let shard = dir.with_extension("dppcsc");
+    let summary = libsvm_to_shard(&svm, &shard, Some(200)).unwrap();
+    assert_eq!(summary.nnz, csc.nnz());
+
+    let set_dir = dir.with_extension("shards");
+    let set = split_shard(&shard, &set_dir, 3).unwrap();
+    assert_eq!(set.shards, 3);
+    assert_eq!(set.nnz, csc.nnz());
+    let y = read_shard_y(&set_dir).unwrap().expect("y.bin travels with the set");
+    assert_eq!(y, loaded.y);
+
+    let budget = 512; // far below any shard's entry data
+    let grid = LambdaGrid::relative(&csc, &y, 10, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let sparse = solve_path(&csc, &y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    assert!(sparse.mean_rejection_ratio() > 0.8);
+    for threads in [1usize, 3] {
+        let sh = ShardSetMatrix::open_with_budget(&set_dir, budget)
+            .unwrap()
+            .with_pool(Arc::new(WorkerPool::new(threads)));
+        assert_eq!(sh.shard_count(), 3);
+        assert_eq!(sh.to_csc(), csc, "shard set must reproduce the CSC exactly");
+        let paged = solve_path(&sh, &y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        for (k, (rs, rm)) in sparse.records.iter().zip(paged.records.iter()).enumerate() {
+            assert_eq!(rs.kept, rm.kept, "kept diverged at λ-index {k} ({threads} threads)");
+            assert_eq!(rs.discarded, rm.discarded, "discarded diverged at λ-index {k}");
+        }
+        for (k, (bs, bm)) in sparse.betas.iter().zip(paged.betas.iter()).enumerate() {
+            assert_eq!(bs, bm, "β diverged at λ-index {k} ({threads} threads)");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&set_dir);
+    let _ = std::fs::remove_dir_all(&shard);
+    let _ = std::fs::remove_file(&svm);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn service_on_sharded_matches_service_on_csc() {
+    use dpp_screen::coordinator::service::ScreeningService;
+    let ds = sparse_problem(30, 120, 0.2, 25);
+    let csc = ds.x.to_csc();
+    let sh = ShardSetMatrix::split_csc(&csc, 3);
+    let lam_max = dual::lambda_max(&csc, &ds.y);
+    let svc_c = ScreeningService::spawn(
+        csc,
+        ds.y.clone(),
+        RuleKind::Edpp,
+        SolverKind::Cd,
+        PathConfig::default(),
+    );
+    let svc_s = ScreeningService::spawn(
+        sh,
+        ds.y.clone(),
+        RuleKind::Edpp,
+        SolverKind::Cd,
+        PathConfig::default(),
+    );
+    for f in [0.7, 0.45, 0.2] {
+        let rc = svc_c.screen(f * lam_max);
+        let rs = svc_s.screen(f * lam_max);
+        assert_eq!(rc.kept, rs.kept, "kept sets at {f}λmax");
+        assert_eq!(rc.beta, rs.beta, "solutions at {f}λmax");
+        assert_eq!(rc.discarded, rs.discarded);
+    }
+    svc_c.shutdown();
+    svc_s.shutdown();
+}
+
 #[test]
 fn group_path_runs_on_csc() {
     use dpp_screen::path::group::{solve_group_path, GroupRuleKind};

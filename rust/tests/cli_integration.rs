@@ -55,7 +55,7 @@ fn path_on_csv_file() {
 fn write_sparse_svm(name: &str, seed: u64) -> std::path::PathBuf {
     let mut ds = dpp_screen::data::synthetic::synthetic1(25, 40, 5, 0.1, seed);
     for j in 0..40 {
-        for v in ds.x.dense_mut().col_mut(j).iter_mut() {
+        for v in ds.x.dense_mut().unwrap().col_mut(j).iter_mut() {
             if v.abs() < 0.6 {
                 *v = 0.0;
             }
@@ -143,6 +143,140 @@ fn service_reports_backend_on_stderr() {
     assert!(String::from_utf8_lossy(&out.stdout).contains("metrics:"));
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("matrix backend: csc"), "{stderr}");
+}
+
+#[test]
+fn convert_shard_then_sharded_path_and_service_end_to_end() {
+    // the sharded acceptance path: convert → shard --shards 3 → run the
+    // path and the service on `--matrix sharded` with a 2-thread pool
+    let svm = write_sparse_svm("set.svm", 17);
+    let root = std::env::temp_dir().join("dpp-cli-test");
+    let shard = root.join("set.dppcsc");
+    let set = root.join("set.shards");
+    let _ = std::fs::remove_dir_all(&shard);
+    let _ = std::fs::remove_dir_all(&set);
+
+    let out = dpp()
+        .args(["convert", "--file", svm.to_str().unwrap(), "--out", shard.to_str().unwrap()])
+        .output()
+        .expect("spawn dpp convert");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = dpp()
+        .args([
+            "shard",
+            "--file",
+            shard.to_str().unwrap(),
+            "--out",
+            set.to_str().unwrap(),
+            "--shards",
+            "3",
+        ])
+        .output()
+        .expect("spawn dpp shard");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("3 row-range shard(s)"));
+
+    let out = dpp()
+        .env("DPP_POOL_THREADS", "2")
+        .args(["path", "--file", set.to_str().unwrap(), "--matrix", "sharded", "--grid", "5"])
+        .output()
+        .expect("spawn dpp path");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("matrix=sharded"), "{stdout}");
+    assert!(stdout.contains("mean rejection ratio"), "{stdout}");
+    assert!(stderr.contains("matrix backend: sharded"), "{stderr}");
+
+    let out = dpp()
+        .env("DPP_POOL_THREADS", "2")
+        .args([
+            "service",
+            "--file",
+            set.to_str().unwrap(),
+            "--matrix",
+            "sharded",
+            "--requests",
+            "3",
+        ])
+        .output()
+        .expect("spawn dpp service");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("metrics:"));
+}
+
+#[test]
+fn sharded_without_a_shardset_fails_with_guidance() {
+    let svm = write_sparse_svm("no-set.svm", 19);
+    let out = dpp()
+        .args(["path", "--file", svm.to_str().unwrap(), "--matrix", "sharded"])
+        .output()
+        .expect("spawn dpp");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("dpp shard"));
+}
+
+#[test]
+fn f32_convert_runs_with_safety_slack() {
+    let svm = write_sparse_svm("f32.svm", 23);
+    let root = std::env::temp_dir().join("dpp-cli-test");
+    let shard = root.join("f32.dppcsc");
+    let _ = std::fs::remove_dir_all(&shard);
+    let out = dpp()
+        .args([
+            "convert",
+            "--file",
+            svm.to_str().unwrap(),
+            "--out",
+            shard.to_str().unwrap(),
+            "--f32",
+        ])
+        .output()
+        .expect("spawn dpp convert --f32");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("dtype=f32"));
+    let out = dpp()
+        .args(["path", "--file", shard.to_str().unwrap(), "--matrix", "mmap", "--grid", "4"])
+        .output()
+        .expect("spawn dpp path on f32 shard");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // the CLI must announce the safety-slack widening for quantized values
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("slack"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn bench_screen_emits_json_baseline() {
+    let root = std::env::temp_dir().join("dpp-cli-test");
+    std::fs::create_dir_all(&root).unwrap();
+    let json = root.join("BENCH_screen.json");
+    let _ = std::fs::remove_file(&json);
+    let out = dpp()
+        .env("DPP_POOL_THREADS", "2")
+        .args([
+            "bench-screen",
+            "--n",
+            "30",
+            "--p",
+            "150",
+            "--grid",
+            "3",
+            "--shards",
+            "2",
+            "--out",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn dpp bench-screen");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&json).expect("BENCH_screen.json written");
+    assert!(text.contains("\"backend\": \"sharded\""), "{text}");
+    assert!(text.contains("\"rejection_ratio\""), "{text}");
+    assert!(text.contains("\"threads\": 2"), "{text}");
 }
 
 #[test]

@@ -118,7 +118,7 @@ fn edpp_screen_artifact_matches_native_rule() {
 
     // artifact inputs (f32, row-major X)
     let (n, p) = (64usize, 256usize);
-    let x32 = to_row_major_f32(ds.x.dense());
+    let x32 = to_row_major_f32(ds.x.dense().unwrap());
     let y32: Vec<f32> = ds.y.iter().map(|v| *v as f32).collect();
     let th32: Vec<f32> = theta.iter().map(|v| *v as f32).collect();
     let norms32: Vec<f32> = ctx.col_norms.iter().map(|v| *v as f32).collect();
@@ -182,7 +182,7 @@ fn fista_epoch_artifact_steps_match_native_objective() {
     let lip = ds.x.op_norm_sq_subset(&cols, 40, 9) * 1.01;
 
     let (n, p) = (64usize, 256usize);
-    let x32 = to_row_major_f32(ds.x.dense());
+    let x32 = to_row_major_f32(ds.x.dense().unwrap());
     let y32: Vec<f32> = ds.y.iter().map(|v| *v as f32).collect();
     let mut beta = vec![0f32; p];
     let mut w = vec![0f32; p];
@@ -225,7 +225,7 @@ fn full_path_through_artifact_sweep_is_safe_and_exact() {
     // end-to-end: EDPP path where every Xᵀw sweep runs through XLA
     let Some(rt) = runtime() else { return };
     let ds = synthetic::synthetic1(64, 256, 20, 0.1, 7);
-    let Some(sweep) = rt.sweep_for(ds.x.dense()) else { return };
+    let Some(sweep) = rt.sweep_for(ds.x.dense().unwrap()) else { return };
     let ctx = ScreenContext::with_sweep_slack(
         &ds.x,
         &ds.y,

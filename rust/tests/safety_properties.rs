@@ -33,7 +33,7 @@ fn safe_rules_never_discard_active_features() {
         };
         if pick >= 2 {
             // keep the real-sim problems small enough for a tight loop
-            ds.normalize_features();
+            ds.normalize_features().expect("in-RAM backend");
         }
         let ctx = ScreenContext::new(&ds.x, &ds.y);
         let f1 = rng.uniform(0.4, 1.0);
@@ -68,7 +68,7 @@ fn dome_safe_on_unit_norm_problems() {
     prop::check("dome basic safety", 0xD0ED, 8, |rng| {
         let seed = rng.next_u64();
         let mut ds = synthetic::synthetic2(25 + rng.usize(15), 50 + rng.usize(50), 10, 0.1, seed);
-        ds.normalize_features();
+        ds.normalize_features().expect("in-RAM backend");
         let ctx = ScreenContext::new(&ds.x, &ds.y);
         let lam = rng.uniform(0.1, 0.9) * ctx.lam_max;
         let p = ds.p();
