@@ -2,7 +2,7 @@
 //! owning one dataset, batching concurrent λ-requests (descending-λ within
 //! a batch so every request reuses the tightest sequential anchor), with
 //! latency/throughput metrics — the model-selection-server shape described
-//! in DESIGN.md §3.
+//! in DESIGN.md §4.
 //!
 //!     cargo run --release --example screening_service
 

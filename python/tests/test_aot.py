@@ -1,6 +1,6 @@
 """AOT pipeline checks: artifact inventory consistency and HLO-text format
 (the rust runtime parses these files with xla_extension 0.5.1's text
-parser — serialized protos would be rejected, DESIGN.md §3)."""
+parser — serialized protos would be rejected, DESIGN.md §4)."""
 
 import os
 

@@ -4,7 +4,7 @@
 //! The paper's protocol averages 100 trials per dataset and sweeps many
 //! (rule × dataset × λ-grid) combinations; [`TrialScheduler`] fans trials
 //! out over worker threads (std::thread + mpsc — tokio is not available in
-//! the offline image, DESIGN.md §3). [`service::ScreeningService`] exposes
+//! the offline image, DESIGN.md §4). [`service::ScreeningService`] exposes
 //! screening as a request/response loop with λ-descending batching, the
 //! shape a model-selection server would deploy.
 

@@ -3,13 +3,16 @@
 //!
 //! Model-selection workloads (cross-validation, stability selection) issue
 //! many λ-evaluations against one dataset. The service owns the dataset and
-//! the sequential state (exact solution at the last solved λ), **batches**
+//! a stateful screening **pipeline** (DESIGN.md §3) whose sequential anchor
+//! is the exact solution at the smallest λ solved so far, **batches**
 //! concurrently-arriving requests, and processes each batch in descending-λ
 //! order so every request benefits from the tightest available θ*(λ₀) — the
 //! same trick that makes sequential rules dominate basic ones (§4.1.1).
+//! Requests above the anchor screen through a throwaway λmax-anchored
+//! pipeline (a sequential rule must never anchor below its target λ).
 //!
 //! Threading: one worker thread owns all state; clients talk over mpsc
-//! channels (the offline image has no tokio — DESIGN.md §3).
+//! channels (the offline image has no tokio — DESIGN.md §4).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -17,8 +20,11 @@ use std::time::Instant;
 
 use super::metrics::ServiceMetrics;
 use crate::linalg::DesignMatrix;
-use crate::path::{PathConfig, RuleKind, SolverKind};
-use crate::screening::{theta_from_solution, ScreenContext, ScreeningRule, StepInput};
+use crate::path::{PathConfig, SolverKind};
+use crate::screening::{
+    pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
+    GapSafeHook, ScreenContext, ScreenPipeline, Screener, StageCount,
+};
 use crate::solver::LassoSolver;
 
 /// A screening/solve request at one λ.
@@ -36,6 +42,10 @@ pub struct ScreenResponse {
     pub discarded: usize,
     pub true_zeros: usize,
     pub latency_s: f64,
+    /// Per-pipeline-stage discard counts in stage order.
+    pub stage_discards: Vec<StageCount>,
+    /// Features additionally discarded in-solver by the gap-safe hook.
+    pub dynamic_discards: usize,
 }
 
 enum Msg {
@@ -51,15 +61,17 @@ pub struct ScreeningService {
 
 impl ScreeningService {
     /// Spawn the service worker owning `x`, `y`. Accepts any matrix backend
-    /// (dense, CSC, …) — one service binary handles them all.
+    /// (dense, CSC, …) and any screening pipeline — a bare
+    /// [`crate::path::RuleKind`] converts implicitly, composed pipelines
+    /// come from [`ScreenPipeline::parse`].
     pub fn spawn<M: DesignMatrix + Send + 'static>(
         x: M,
         y: Vec<f64>,
-        rule: RuleKind,
+        pipeline: impl Into<ScreenPipeline>,
         solver: SolverKind,
         cfg: PathConfig,
     ) -> ScreeningService {
-        Self::spawn_boxed(Box::new(x), y, rule, solver, cfg)
+        Self::spawn_boxed(Box::new(x), y, pipeline, solver, cfg)
     }
 
     /// Spawn from an already-boxed backend (the CLI picks dense/CSC at
@@ -67,12 +79,14 @@ impl ScreeningService {
     pub fn spawn_boxed(
         x: Box<dyn DesignMatrix + Send>,
         y: Vec<f64>,
-        rule: RuleKind,
+        pipeline: impl Into<ScreenPipeline>,
         solver: SolverKind,
         cfg: PathConfig,
     ) -> ScreeningService {
+        let pipeline = pipeline.into();
         let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || worker_loop(x, y, rule, solver, cfg, rx));
+        let worker =
+            std::thread::spawn(move || worker_loop(x, y, pipeline, solver, cfg, rx));
         ScreeningService { tx, worker: Some(worker) }
     }
 
@@ -115,7 +129,7 @@ impl Drop for ScreeningService {
 fn worker_loop(
     x: Box<dyn DesignMatrix + Send>,
     y: Vec<f64>,
-    rule_kind: RuleKind,
+    pipeline: ScreenPipeline,
     solver_kind: SolverKind,
     cfg: PathConfig,
     rx: Receiver<Msg>,
@@ -124,14 +138,10 @@ fn worker_loop(
     // slack > 0 widens keep-decisions for reduced-precision backends
     // (f32 shards) — same discipline as the PJRT sweep, DESIGN.md §1
     let ctx = ScreenContext::with_sweep_slack(x, &y, x, cfg.safety_slack);
-    let rule: Option<Box<dyn ScreeningRule>> = match rule_kind {
-        RuleKind::None => None,
-        RuleKind::Edpp => Some(Box::new(crate::screening::edpp::EdppRule)),
-        RuleKind::Dpp => Some(Box::new(crate::screening::dpp::DppRule)),
-        RuleKind::Safe => Some(Box::new(crate::screening::safe::SafeRule)),
-        RuleKind::Strong => Some(Box::new(crate::screening::strong::StrongRule)),
-        _ => Some(Box::new(crate::screening::edpp::EdppRule)),
-    };
+    // the service's long-lived pipeline: its anchor is the exact solution
+    // at the smallest λ solved so far
+    let mut screener = pipeline.build(x.n_rows(), cfg.sequential);
+    screener.init(&ctx);
     let solver: Box<dyn LassoSolver> = match solver_kind {
         SolverKind::Cd => Box::new(crate::solver::cd::CdSolver),
         SolverKind::Fista => Box::new(crate::solver::fista::FistaSolver),
@@ -140,10 +150,11 @@ fn worker_loop(
     let p = x.n_cols();
     let mut metrics = ServiceMetrics::new();
 
-    // sequential screening state: the *smallest* λ solved so far with its
-    // exact solution; requests at smaller λ chain from it
+    // warm-start state: the solution at the deepest λ solved so far. The
+    // explicit tracker (rather than the screener's anchor) keeps warm
+    // starts monotone even for pipelines whose anchor never advances
+    // (`none`, basic mode).
     let mut lam_state = ctx.lam_max;
-    let mut theta_state: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
     let mut beta_state: Vec<f64> = vec![0.0; p];
 
     loop {
@@ -170,27 +181,48 @@ fn worker_loop(
             batch.sort_by(|a, b| b.0.lam.partial_cmp(&a.0.lam).unwrap());
             for (req, t0) in batch {
                 let lam = req.lam.min(ctx.lam_max);
-                // screen from the best available anchor: state if its λ is
-                // ≥ lam (sequential), else fall back to λmax anchor
-                let (anchor_lam, anchor_theta) = if lam_state >= lam {
-                    (lam_state, theta_state.clone())
-                } else {
-                    (ctx.lam_max, y.iter().map(|v| v / ctx.lam_max).collect())
-                };
                 let mut keep = vec![true; p];
-                if let Some(rule) = &rule {
-                    let step = StepInput {
-                        lam_prev: anchor_lam,
-                        lam,
-                        theta_prev: &anchor_theta,
-                    };
-                    rule.screen(&ctx, &step, &mut keep);
-                }
+                // screen from the best available anchor: the sequential
+                // pipeline if its λ₀ ≥ lam, else a throwaway λmax-anchored
+                // pipeline (a sequential rule must never anchor below λ)
+                let mut fresh;
+                let scr: &mut dyn Screener = if screener.anchor_lam() >= lam {
+                    screener.as_mut()
+                } else {
+                    fresh = pipeline.build(x.n_rows(), cfg.sequential);
+                    fresh.init(&ctx);
+                    fresh.as_mut()
+                };
+                let stage_discards = scr.screen_step(&ctx, lam, &mut keep);
                 let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
-                let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
+                let is_safe = scr.is_safe();
+                let mut hook =
+                    if scr.dynamic() { Some(GapSafeHook::new(&ctx)) } else { None };
+                let mut dynamic_discards = 0usize;
+                // heuristic pipeline: hook drops certified against a
+                // possibly-unrepaired reduced problem must be re-validated
+                // by the KKT check (see path::solve_path_with_screener)
+                let mut hook_dropped: Vec<bool> =
+                    if hook.is_some() && !is_safe { vec![false; p] } else { Vec::new() };
                 let res = loop {
                     let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
-                    let r = solver.solve(x, &y, &cols, lam, Some(&warm), &cfg.solve_opts);
+                    let r = match hook.as_mut() {
+                        Some(h) => solver.solve_with_hook(
+                            x,
+                            &y,
+                            &cols,
+                            lam,
+                            Some(&warm),
+                            &cfg.solve_opts,
+                            Some(h),
+                        ),
+                        None => solver.solve(x, &y, &cols, lam, Some(&warm), &cfg.solve_opts),
+                    };
+                    if let Some(h) = hook.as_mut() {
+                        let revalidate =
+                            if is_safe { None } else { Some(&mut hook_dropped) };
+                        dynamic_discards += h.fold_into(&mut keep, revalidate);
+                    }
                     if is_safe || !cfg.kkt_repair {
                         break r;
                     }
@@ -201,8 +233,17 @@ fn worker_loop(
                             x.col_axpy_into(j, -b, &mut resid);
                         }
                     }
-                    let viol =
-                        crate::screening::strong::kkt_violations(&ctx, &resid, lam, &keep);
+                    // only the pipeline's *uncertified* discards (plus any
+                    // in-solver hook drops) need the KKT check (hybrid
+                    // certification, DESIGN.md §3)
+                    let viol = match scr.uncertified() {
+                        Some(cand) if !hook_dropped.is_empty() => {
+                            let merged = merge_kkt_candidates(cand, &hook_dropped);
+                            kkt_violations_in(&ctx, &resid, lam, &keep, &merged)
+                        }
+                        Some(cand) => kkt_violations_in(&ctx, &resid, lam, &keep, cand),
+                        None => kkt_violations(&ctx, &resid, lam, &keep),
+                    };
                     if viol.is_empty() {
                         break r;
                     }
@@ -213,23 +254,26 @@ fn worker_loop(
                 };
                 let beta = res.scatter(&cols, p);
                 let true_zeros = beta.iter().filter(|b| **b == 0.0).count();
-                let discarded = p - keep.iter().filter(|k| **k).count();
-                // advance state if this is the deepest λ seen
+                let kept_cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+                let discarded = p - kept_cols.len();
+                // advance the sequential pipeline if this is the deepest λ
                 if lam < lam_state {
-                    theta_state = theta_from_solution(x, &y, &beta, lam);
+                    screener.observe(&ctx, lam, &beta);
+                    beta_state.copy_from_slice(&beta);
                     lam_state = lam;
-                    beta_state = beta.clone();
                 }
                 let latency = t0.elapsed().as_secs_f64();
                 metrics.record_request(latency);
-                metrics.record_screen(cols.len(), discarded, true_zeros);
+                metrics.record_screen(kept_cols.len(), discarded, true_zeros);
                 let _ = req.reply.send(ScreenResponse {
                     lam,
-                    kept: cols,
+                    kept: kept_cols,
                     beta,
                     discarded,
                     true_zeros,
                     latency_s: latency,
+                    stage_discards,
+                    dynamic_discards,
                 });
             }
         }
@@ -244,6 +288,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::path::RuleKind;
     use crate::solver::{cd::CdSolver, SolveOptions};
 
     fn service(seed: u64) -> (ScreeningService, crate::data::Dataset, f64) {
@@ -310,6 +355,50 @@ mod tests {
         // at least one multi-request batch must have formed OR requests were
         // processed in ≤3 batches
         assert!(metrics.batches <= 3);
+    }
+
+    #[test]
+    fn pipeline_service_reports_stages_and_exact_solutions() {
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 9);
+        let lam_max = crate::solver::dual::lambda_max(&ds.x, &ds.y);
+        let pipe = crate::screening::ScreenPipeline::parse("hybrid:strong+edpp")
+            .unwrap()
+            .with_dynamic(true);
+        let svc = ScreeningService::spawn(
+            ds.x.clone(),
+            ds.y.clone(),
+            pipe,
+            SolverKind::Cd,
+            PathConfig::default(),
+        );
+        let resp = svc.screen(0.4 * lam_max);
+        assert_eq!(resp.stage_discards.len(), 2);
+        assert_eq!(resp.stage_discards[0].stage, "edpp");
+        assert_eq!(resp.stage_discards[1].stage, "strong");
+        // the hybrid mask dominates the plain-EDPP service's at the same λ
+        let svc_edpp = ScreeningService::spawn(
+            ds.x.clone(),
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        );
+        let resp_edpp = svc_edpp.screen(0.4 * lam_max);
+        assert!(resp.discarded >= resp_edpp.discarded);
+        svc_edpp.shutdown();
+        // exactness: compare against a direct full solve
+        let cols: Vec<usize> = (0..ds.p()).collect();
+        let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
+        let direct = CdSolver
+            .solve(&ds.x, &ds.y, &cols, 0.4 * lam_max, None, &opts)
+            .scatter(&cols, ds.p());
+        for j in 0..ds.p() {
+            assert!(
+                (resp.beta[j] - direct[j]).abs() < 1e-4 * (1.0 + direct[j].abs()),
+                "feature {j}"
+            );
+        }
+        svc.shutdown();
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   Improvement 2, EDPP — Corollaries 4/5/17, Theorems 11/14/16), the safe
 //!   baselines SAFE/ST1 and DOME, the heuristic baselines (sequential strong
 //!   rules with KKT repair, SIS), and the group-Lasso extensions
-//!   (Corollary 21, group strong rules).
+//!   (Corollary 21, group strong rules) — composable into stateful
+//!   **pipelines** ([`screening::pipeline`], DESIGN.md §3): `cascade:`
+//!   staged survivors-only screens, `hybrid:` safe certification of
+//!   heuristic discards, and `dynamic:` in-solver gap-safe refinement.
 //! * **Solver substrates** ([`solver`]): coordinate descent (the role of the
 //!   paper's SLEP solver), FISTA, LARS, and block coordinate descent for
 //!   group Lasso, with duality-gap stopping ([`solver::dual`]).
@@ -29,7 +32,7 @@
 //!   generators matching the
 //!   paper's synthetic and (simulated) real datasets ([`data`]), and
 //!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
-//!   testing — hand-rolled because the build image is offline (DESIGN.md §3).
+//!   testing — hand-rolled because the build image is offline (DESIGN.md §4).
 //!
 //! Every rule, solver, path driver and the service is generic over
 //! [`linalg::DesignMatrix`] (`&dyn DesignMatrix` / `Box<dyn DesignMatrix +
@@ -78,7 +81,10 @@ pub mod prelude {
     pub use crate::linalg::{
         CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix,
     };
-    pub use crate::path::{solve_path, LambdaGrid, PathConfig, PathOutput, RuleKind, SolverKind};
-    pub use crate::screening::{ScreenContext, ScreeningRule};
+    pub use crate::path::{
+        solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathOutput, RuleKind,
+        SolverKind,
+    };
+    pub use crate::screening::{ScreenContext, ScreenPipeline, Screener, ScreeningRule};
     pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
 }

@@ -10,6 +10,12 @@
 //!   bench-screen                 perf harness → BENCH_screen.json
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
 //!
+//! `--rule` accepts the full screening-pipeline grammar (DESIGN.md §3):
+//! a plain rule (`edpp`, `strong`, …), `cascade:<r1>,<r2>[,…]`,
+//! `hybrid:<heuristic>+<safe>` (e.g. `hybrid:strong+edpp`), and a
+//! `dynamic:` prefix — or the `--dynamic` flag — for in-solver gap-safe
+//! refinement.
+//!
 //! `path` and `service` accept `--matrix dense|csc|mmap|sharded|auto`
 //! (default auto): auto keeps an already-sparse input sparse (a LIBSVM
 //! file loads as CSC, a shard directory as the out-of-core mmap backend, a
@@ -27,9 +33,12 @@ use dpp_screen::coordinator::service::ScreeningService;
 use dpp_screen::data::{convert, synthetic, Dataset, RealDataset};
 use dpp_screen::linalg::{CscMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix};
 use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
-use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::path::{
+    solve_path_pipeline, LambdaGrid, PathConfig, RuleKind, SolverKind,
+};
 use dpp_screen::runtime::pool::{self, WorkerPool};
 use dpp_screen::runtime::{ArtifactRuntime, ArtifactSweep};
+use dpp_screen::screening::ScreenPipeline;
 use dpp_screen::solver::SolveOptions;
 use dpp_screen::util::benchkit::{black_box, Bench};
 use dpp_screen::util::cli::Args;
@@ -52,16 +61,40 @@ fn main() {
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
+                 dpp path --rule hybrid:strong+edpp --dynamic  # composed pipeline\n\
+                 dpp path --rule cascade:sis,edpp           # cheap stage first\n\
                  dpp convert --file data.svm --out data.dppcsc [--f32]\n\
                  dpp path --file data.dppcsc --matrix mmap  # out-of-core backend\n\
                  dpp shard --file data.dppcsc --out data.shards --shards 4\n\
                  dpp path --file data.shards --matrix sharded  # pool-parallel shard set\n\
                  dpp group --ngroups 100 --rule group-edpp\n\
-                 dpp service --requests 20 --rule edpp --matrix auto\n\
+                 dpp service --requests 20 --rule dynamic:edpp --matrix auto\n\
                  dpp bench-screen --p 4000   # perf baseline -> BENCH_screen.json\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
-                 dpp exp all"
+                 dpp exp all\n\
+                 \n\
+                 {}",
+                ScreenPipeline::grammar()
             );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parse `--rule` (+ `--dynamic`) into a screening pipeline, exiting with
+/// the full grammar on error.
+fn parse_pipeline(args: &Args, default: &str) -> ScreenPipeline {
+    let spec = args.get_or("rule", default);
+    match ScreenPipeline::parse(&spec) {
+        Ok(p) => {
+            if args.flag("dynamic") && !p.dynamic {
+                p.with_dynamic(true)
+            } else {
+                p
+            }
+        }
+        Err(e) => {
+            eprintln!("bad --rule: {e}");
             std::process::exit(2);
         }
     }
@@ -241,6 +274,10 @@ fn cmd_info() {
         RealDataset::ALL.map(|d| d.name()).join(" ")
     );
     println!("rules:    {} none", RuleKind::ALL_LASSO.map(|r| r.name()).join(" "));
+    println!(
+        "pipelines: cascade:<r1>,<r2>[,…]  hybrid:<heur>+<safe>  dynamic:<pipeline> \
+         (--dynamic)"
+    );
     println!("solvers:  cd fista lars");
     println!(
         "matrix:   dense csc mmap sharded auto (shards via `dpp convert`, shard \
@@ -260,7 +297,7 @@ fn cmd_info() {
 
 fn cmd_path(args: &Args) {
     let ds = load_dataset(args);
-    let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
+    let pipeline = parse_pipeline(args, "edpp");
     let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
     let k = args.get_parse("grid", grid_size(100));
     let lo = args.get_parse("lo", 0.05);
@@ -291,20 +328,23 @@ fn cmd_path(args: &Args) {
         n,
         p,
         backend.backend_name(),
-        rule.name(),
+        pipeline.name(),
         solver.name(),
         k,
         lo
     );
-    let out = solve_path(x, &y, &grid, rule, solver, &cfg);
+    let out = solve_path_pipeline(x, &y, &grid, &pipeline, solver, &cfg);
     let mut report = benchkit::Report::new(
         &format!(
             "path: {name} / {} / {} [{}]",
-            rule.name(),
+            out.rule,
             solver.name(),
             backend.backend_name()
         ),
-        &["λ/λmax", "kept", "discarded", "rejection", "screen(s)", "solve(s)", "iters", "repairs"],
+        &[
+            "λ/λmax", "kept", "discarded", "rejection", "screen(s)", "solve(s)", "iters",
+            "repairs", "dyn",
+        ],
     );
     for r in &out.records {
         report.row(&[
@@ -316,6 +356,7 @@ fn cmd_path(args: &Args) {
             format!("{:.4}", r.solve_secs),
             r.solver_iters.to_string(),
             r.kkt_repairs.to_string(),
+            r.dynamic_discards.to_string(),
         ]);
     }
     report.emit("path_runs.md");
@@ -325,6 +366,16 @@ fn cmd_path(args: &Args) {
         out.total_screen_secs(),
         out.total_solve_secs()
     );
+    let stages = out.mean_stage_rejections();
+    if stages.len() > 1 || out.total_dynamic_discards() > 0 {
+        let parts: Vec<String> =
+            stages.iter().map(|(s, v)| format!("{s}={v:.4}")).collect();
+        println!(
+            "per-stage rejection: {}   dynamic discards: {}",
+            parts.join("  "),
+            out.total_dynamic_discards()
+        );
+    }
 }
 
 fn cmd_group(args: &Args) {
@@ -360,7 +411,7 @@ fn cmd_group(args: &Args) {
 
 fn cmd_service(args: &Args) {
     let ds = load_dataset(args);
-    let rule = RuleKind::from_name(&args.get_or("rule", "edpp")).expect("bad --rule");
+    let pipeline = parse_pipeline(args, "edpp");
     let n_req = args.get_parse("requests", 20usize);
     let y = ds.y.clone();
     // decided before pick_backend — see cmd_path
@@ -376,9 +427,14 @@ fn cmd_service(args: &Args) {
         );
     }
     let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
-    println!("service backend: {}", backend.backend_name());
-    let svc =
-        ScreeningService::spawn_boxed(backend.into_boxed(), y, rule, SolverKind::Cd, cfg);
+    println!("service backend: {}  pipeline: {}", backend.backend_name(), pipeline.name());
+    let svc = ScreeningService::spawn_boxed(
+        backend.into_boxed(),
+        y,
+        pipeline,
+        SolverKind::Cd,
+        cfg,
+    );
     // fire a burst of requests across the λ range (arrivals out of order)
     let mut rxs = Vec::new();
     for i in 0..n_req {
@@ -387,12 +443,27 @@ fn cmd_service(args: &Args) {
     }
     for rx in rxs {
         let resp = rx.recv().expect("service died");
+        let stages: Vec<String> = resp
+            .stage_discards
+            .iter()
+            .map(|s| format!("{}={}", s.stage, s.discarded))
+            .collect();
         println!(
-            "λ/λmax={:.3} kept={} discarded={} latency={:.2}ms",
+            "λ/λmax={:.3} kept={} discarded={} latency={:.2}ms{}{}",
             resp.lam / lam_max,
             resp.kept.len(),
             resp.discarded,
-            resp.latency_s * 1e3
+            resp.latency_s * 1e3,
+            if stages.len() > 1 {
+                format!("  stages[{}]", stages.join(" "))
+            } else {
+                String::new()
+            },
+            if resp.dynamic_discards > 0 {
+                format!("  dyn={}", resp.dynamic_discards)
+            } else {
+                String::new()
+            }
         );
     }
     let m = svc.shutdown();
@@ -520,32 +591,56 @@ fn cmd_bench_screen(args: &Args) {
     let bench = Bench::new(2, 8);
     let grid = LambdaGrid::relative(&csc, &y, grid_k, 0.05, 1.0);
     let cfg = PathConfig::default();
-    let rules = [RuleKind::Edpp, RuleKind::Dpp, RuleKind::Strong];
+    // plain rules plus the composed pipelines the redesign unlocks — the
+    // hybrid and dynamic rows are the headline comparison vs plain EDPP
+    let pipelines: Vec<ScreenPipeline> = [
+        "edpp",
+        "dpp",
+        "strong",
+        "hybrid:strong+edpp",
+        "dynamic:edpp",
+        "cascade:sis,edpp",
+    ]
+    .iter()
+    .map(|s| ScreenPipeline::parse(s).expect("bench pipeline"))
+    .collect();
     let mut cases: Vec<String> = Vec::new();
     let mut rep = benchkit::Report::new(
-        "bench-screen (rule × backend × threads)",
-        &["rule", "backend", "threads", "xt_w", "path", "rejection"],
+        "bench-screen (pipeline × backend × threads)",
+        &["pipeline", "backend", "threads", "xt_w", "path", "rejection", "stages/dyn"],
     );
 
-    let mut record = |rule: &str,
+    let mut record = |pipe_name: &str,
                       backend: &str,
                       threads: usize,
                       xt_w_secs: f64,
                       path_secs: f64,
-                      rejection: f64,
+                      run: &dpp_screen::path::PathOutput,
                       rep: &mut benchkit::Report| {
+        let rejection = run.mean_rejection_ratio();
+        let stages = run.mean_stage_rejections();
+        let stage_json: Vec<String> = stages
+            .iter()
+            .map(|(s, v)| format!("{{\"stage\": \"{s}\", \"rejection\": {v:.6}}}"))
+            .collect();
         cases.push(format!(
-            "    {{\"rule\": \"{rule}\", \"backend\": \"{backend}\", \"threads\": {threads}, \
+            "    {{\"rule\": \"{pipe_name}\", \"backend\": \"{backend}\", \"threads\": {threads}, \
              \"xt_w_secs\": {xt_w_secs:.9}, \"path_secs\": {path_secs:.6}, \
-             \"rejection_ratio\": {rejection:.6}}}"
+             \"rejection_ratio\": {rejection:.6}, \"dynamic_discards\": {}, \
+             \"stages\": [{}]}}",
+            run.total_dynamic_discards(),
+            stage_json.join(", ")
         ));
+        let stage_txt: Vec<String> =
+            stages.iter().map(|(s, v)| format!("{s}={v:.3}")).collect();
         rep.row(&[
-            rule.to_string(),
+            pipe_name.to_string(),
             backend.to_string(),
             threads.to_string(),
             format!("{:.3}ms", xt_w_secs * 1e3),
             format!("{path_secs:.3}s"),
             format!("{rejection:.4}"),
+            format!("{} dyn={}", stage_txt.join(" "), run.total_dynamic_discards()),
         ]);
     };
 
@@ -555,16 +650,16 @@ fn cmd_bench_screen(args: &Args) {
         DesignMatrix::xt_w(&csc, &w, &mut out);
         black_box(out[0])
     });
-    for rule in rules {
+    for pipe in &pipelines {
         let t0 = std::time::Instant::now();
-        let run = solve_path(&csc, &y, &grid, rule, SolverKind::Cd, &cfg);
+        let run = solve_path_pipeline(&csc, &y, &grid, pipe, SolverKind::Cd, &cfg);
         record(
-            rule.name(),
+            &pipe.name(),
             "csc",
             1,
             m_sweep.mean_s,
             t0.elapsed().as_secs_f64(),
-            run.mean_rejection_ratio(),
+            &run,
             &mut rep,
         );
     }
@@ -578,16 +673,16 @@ fn cmd_bench_screen(args: &Args) {
             DesignMatrix::xt_w(&sh, &w, &mut out);
             black_box(out[0])
         });
-        for rule in rules {
+        for pipe in &pipelines {
             let t0 = std::time::Instant::now();
-            let run = solve_path(&sh, &y, &grid, rule, SolverKind::Cd, &cfg);
+            let run = solve_path_pipeline(&sh, &y, &grid, pipe, SolverKind::Cd, &cfg);
             record(
-                rule.name(),
+                &pipe.name(),
                 "sharded",
                 threads,
                 m_sweep.mean_s,
                 t0.elapsed().as_secs_f64(),
-                run.mean_rejection_ratio(),
+                &run,
                 &mut rep,
             );
         }

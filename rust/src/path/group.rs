@@ -1,12 +1,13 @@
 //! Group-Lasso pathwise driver (paper §4.2 protocol): solve along a λ-grid
-//! below λ̄max with sequential group screening and warm starts.
+//! below λ̄max with sequential group screening and warm starts. Like the
+//! Lasso driver, it drives the stateful [`GroupScreener`] lifecycle — the
+//! screener owns the group θ-propagation (DESIGN.md §3).
 
 use super::StepRecord;
 use crate::linalg::DesignMatrix;
-use crate::screening::group_edpp::{
-    GroupEdppRule, GroupScreenContext, GroupScreeningRule, GroupStepInput,
-};
+use crate::screening::group_edpp::{GroupEdppRule, GroupScreenContext};
 use crate::screening::group_strong::{group_kkt_violations, GroupStrongRule};
+use crate::screening::pipeline::{GroupRuleScreener, GroupScreener};
 use crate::solver::{group::GroupBcdSolver, SolveOptions};
 use crate::util::timer::timed;
 
@@ -27,11 +28,12 @@ impl GroupRuleKind {
         }
     }
 
-    fn make(&self) -> Option<Box<dyn GroupScreeningRule>> {
+    /// Instantiate the lifecycle screener for this rule.
+    fn build(&self) -> GroupRuleScreener {
         match self {
-            GroupRuleKind::None => None,
-            GroupRuleKind::Edpp => Some(Box::new(GroupEdppRule)),
-            GroupRuleKind::Strong => Some(Box::new(GroupStrongRule)),
+            GroupRuleKind::None => GroupRuleScreener::none(),
+            GroupRuleKind::Edpp => GroupRuleScreener::new(Box::new(GroupEdppRule)),
+            GroupRuleKind::Strong => GroupRuleScreener::new(Box::new(GroupStrongRule)),
         }
     }
 }
@@ -40,7 +42,7 @@ impl GroupRuleKind {
 /// count *groups*).
 #[derive(Clone, Debug)]
 pub struct GroupPathOutput {
-    pub rule: &'static str,
+    pub rule: String,
     pub records: Vec<StepRecord>,
     pub betas: Vec<Vec<f64>>,
 }
@@ -78,15 +80,16 @@ pub fn solve_group_path(
     opts: &SolveOptions,
 ) -> GroupPathOutput {
     let ctx = GroupScreenContext::new(x, y, groups);
-    let rule = rule_kind.make();
+    let mut screener = rule_kind.build();
     let n_groups = groups.len();
     let p = x.n_cols();
 
     let mut records = Vec::with_capacity(grid.values.len());
     let mut betas = Vec::with_capacity(grid.values.len());
 
-    let mut lam_prev = ctx.lam_max;
-    let mut theta_prev: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
+    // the screener owns the group θ-propagation; the driver keeps only the
+    // per-group warm starts
+    screener.init(&ctx);
     let mut beta_prev: Vec<Vec<f64>> =
         groups.iter().map(|&(_, len)| vec![0.0; len]).collect();
 
@@ -102,12 +105,11 @@ pub fn solve_group_path(
                 solver_iters: 0,
                 kkt_repairs: 0,
                 gap: 0.0,
+                stage_discards: Vec::new(),
+                dynamic_discards: 0,
             });
             betas.push(vec![0.0; p]);
-            lam_prev = ctx.lam_max;
-            for (t, yi) in theta_prev.iter_mut().zip(y.iter()) {
-                *t = yi / ctx.lam_max;
-            }
+            screener.init(&ctx);
             for b in beta_prev.iter_mut() {
                 b.fill(0.0);
             }
@@ -115,15 +117,11 @@ pub fn solve_group_path(
         }
 
         let mut keep = vec![true; n_groups];
-        let (_, screen_secs) = timed(|| {
-            if let Some(rule) = &rule {
-                let step = GroupStepInput { lam_prev, lam, theta_prev: &theta_prev };
-                rule.screen(&ctx, &step, &mut keep);
-            }
-        });
+        let (stage_discards, screen_secs) =
+            timed(|| screener.screen_step(&ctx, lam, &mut keep));
         let kept0 = keep.iter().filter(|k| **k).count();
 
-        let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
+        let is_safe = screener.is_safe();
         let mut kkt_repairs = 0usize;
         let mut result: Option<crate::solver::group::GroupSolveResult> = None;
         let (res, solve_secs) = timed(|| {
@@ -182,27 +180,19 @@ pub fn solve_group_path(
             solver_iters: res.iters,
             kkt_repairs,
             gap: res.gap,
+            stage_discards,
+            dynamic_discards: 0,
         });
 
-        // advance sequential state
-        let mut theta = y.to_vec();
-        for (j, b) in full.iter().enumerate() {
-            if *b != 0.0 {
-                x.col_axpy_into(j, -b, &mut theta);
-            }
-        }
-        for t in theta.iter_mut() {
-            *t /= lam;
-        }
-        theta_prev = theta;
-        lam_prev = lam;
+        // advance the screener's sequential state; keep the warm starts
+        screener.observe(&ctx, lam, &full);
         for (g, &(start, len)) in groups.iter().enumerate() {
             beta_prev[g].copy_from_slice(&full[start..start + len]);
         }
         betas.push(full);
     }
 
-    GroupPathOutput { rule: rule_kind.name(), records, betas }
+    GroupPathOutput { rule: screener.name(), records, betas }
 }
 
 #[cfg(test)]

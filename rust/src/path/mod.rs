@@ -2,15 +2,21 @@
 //! Lasso along 100 values of λ/λmax ∈ [0.05, 1.0], screening sequentially
 //! with the exact solution at the previous λ, warm-starting the solver, and
 //! recording the two headline metrics — *rejection ratio* and *speedup*).
+//!
+//! Screening runs through the stateful [`Screener`] lifecycle
+//! (DESIGN.md §3): the driver `init`s the pipeline once, calls
+//! `screen_step` per λ and `observe`s each exact solution — the pipeline
+//! owns θ-propagation. Composed pipelines (`cascade:…`, `hybrid:…`,
+//! `dynamic:…`) report per-stage discard counts in each [`StepRecord`];
+//! single-rule pipelines are bit-identical to the pre-lifecycle driver.
 
 pub mod group;
 pub mod stability;
 
 use crate::linalg::DesignMatrix;
 use crate::screening::{
-    dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
-    edpp::Improvement2Rule, safe::SafeRule, sis::SisRule, strong::kkt_violations,
-    strong::StrongRule, theta_from_solution_into, ScreenContext, ScreeningRule, StepInput,
+    pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
+    GapSafeHook, ScreenContext, ScreenPipeline, Screener, StageCount,
 };
 use crate::solver::{
     cd::CdSolver, fista::FistaSolver, lars::LarsSolver, LassoSolver, SolveOptions,
@@ -52,7 +58,10 @@ impl LambdaGrid {
     }
 }
 
-/// Which screening rule a path run uses.
+/// Which base screening rule a path run uses. Composed pipelines
+/// (`cascade:…`, `hybrid:…`, `dynamic:…`) are expressed as a
+/// [`ScreenPipeline`]; every `RuleKind` converts into a single-rule
+/// pipeline via `Into<ScreenPipeline>`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RuleKind {
     /// No screening — the baseline solver timing.
@@ -79,6 +88,19 @@ impl RuleKind {
         RuleKind::Sis,
     ];
 
+    /// Every variant including `None` — the `from_name` lookup table.
+    pub const ALL_WITH_NONE: [RuleKind; 9] = [
+        RuleKind::Safe,
+        RuleKind::Dome,
+        RuleKind::Dpp,
+        RuleKind::Improvement1,
+        RuleKind::Improvement2,
+        RuleKind::Edpp,
+        RuleKind::Strong,
+        RuleKind::Sis,
+        RuleKind::None,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             RuleKind::None => "none",
@@ -93,24 +115,17 @@ impl RuleKind {
         }
     }
 
+    /// Name lookup over the const table — no per-call allocation. Plain
+    /// rule names only; for the full pipeline grammar (cascade/hybrid/
+    /// dynamic) parse a [`ScreenPipeline`] instead.
     pub fn from_name(s: &str) -> Option<RuleKind> {
-        let mut all = RuleKind::ALL_LASSO.to_vec();
-        all.push(RuleKind::None);
-        all.into_iter().find(|r| r.name() == s)
+        Self::ALL_WITH_NONE.iter().copied().find(|r| r.name() == s)
     }
+}
 
-    fn make(&self, n: usize) -> Option<Box<dyn ScreeningRule>> {
-        match self {
-            RuleKind::None => None,
-            RuleKind::Safe => Some(Box::new(SafeRule)),
-            RuleKind::Dome => Some(Box::new(DomeRule::default())),
-            RuleKind::Dpp => Some(Box::new(DppRule)),
-            RuleKind::Improvement1 => Some(Box::new(Improvement1Rule)),
-            RuleKind::Improvement2 => Some(Box::new(Improvement2Rule)),
-            RuleKind::Edpp => Some(Box::new(EdppRule)),
-            RuleKind::Strong => Some(Box::new(StrongRule)),
-            RuleKind::Sis => Some(Box::new(SisRule::with_default_count(n))),
-        }
+impl From<RuleKind> for ScreenPipeline {
+    fn from(rule: RuleKind) -> ScreenPipeline {
+        ScreenPipeline::single(rule.name())
     }
 }
 
@@ -182,7 +197,8 @@ pub struct StepRecord {
     pub lam: f64,
     /// Features surviving screening (before KKT repair additions).
     pub kept: usize,
-    /// Features discarded by the final mask (after repairs).
+    /// Features discarded by the final mask (after repairs; includes
+    /// in-solver dynamic discards).
     pub discarded: usize,
     /// Exactly-zero coefficients in the solution at this λ.
     pub true_zeros: usize,
@@ -192,14 +208,22 @@ pub struct StepRecord {
     /// KKT repair rounds triggered (heuristic rules only).
     pub kkt_repairs: usize,
     pub gap: f64,
+    /// Per-pipeline-stage discard counts in stage order (empty for the
+    /// trivial λ ≥ λmax steps).
+    pub stage_discards: Vec<StageCount>,
+    /// Features additionally discarded *inside* the solver by the gap-safe
+    /// hook (`dynamic:` pipelines only).
+    pub dynamic_discards: usize,
 }
 
 impl StepRecord {
     /// The paper's rejection ratio: discarded / true zeros (≤ 1 for safe
-    /// rules; repaired heuristics also end ≤ 1).
+    /// rules; repaired heuristics also end ≤ 1). Steps with no true zeros
+    /// (p = 0 degenerate problems, dense-support steps) have nothing to
+    /// reject and return 0.0 — never NaN.
     pub fn rejection_ratio(&self) -> f64 {
         if self.true_zeros == 0 {
-            if self.discarded == 0 { 1.0 } else { 0.0 }
+            0.0
         } else {
             self.discarded as f64 / self.true_zeros as f64
         }
@@ -209,7 +233,8 @@ impl StepRecord {
 /// Output of a full path run.
 #[derive(Clone, Debug)]
 pub struct PathOutput {
-    pub rule: &'static str,
+    /// Canonical pipeline name (`"edpp"`, `"hybrid:strong+edpp"`, …).
+    pub rule: String,
     pub solver: &'static str,
     pub records: Vec<StepRecord>,
     /// Full-length solutions per λ (same order as `records`).
@@ -223,6 +248,38 @@ impl PathOutput {
         }
         self.records.iter().map(|r| r.rejection_ratio()).sum::<f64>()
             / self.records.len() as f64
+    }
+
+    /// Mean per-stage rejection contribution: for each pipeline stage (in
+    /// pipeline order), the average over λ-steps of that stage's discards
+    /// divided by the step's true zeros (0 when there are none).
+    pub fn mean_stage_rejections(&self) -> Vec<(String, f64)> {
+        if self.records.is_empty() {
+            return Vec::new();
+        }
+        let mut out: Vec<(String, f64)> = Vec::new();
+        for r in &self.records {
+            for sc in &r.stage_discards {
+                let ratio = if r.true_zeros == 0 {
+                    0.0
+                } else {
+                    sc.discarded as f64 / r.true_zeros as f64
+                };
+                match out.iter_mut().find(|(n, _)| n == &sc.stage) {
+                    Some((_, s)) => *s += ratio,
+                    None => out.push((sc.stage.clone(), ratio)),
+                }
+            }
+        }
+        for (_, s) in out.iter_mut() {
+            *s /= self.records.len() as f64;
+        }
+        out
+    }
+
+    /// Total features dropped in-solver by the gap-safe hook.
+    pub fn total_dynamic_discards(&self) -> usize {
+        self.records.iter().map(|r| r.dynamic_discards).sum()
     }
 
     pub fn total_screen_secs(&self) -> f64 {
@@ -255,9 +312,23 @@ pub fn solve_path(
     solver: SolverKind,
     cfg: &PathConfig,
 ) -> PathOutput {
+    solve_path_pipeline(x, y, grid, &rule.into(), solver, cfg)
+}
+
+/// Like [`solve_path`] but with a composed screening pipeline — the
+/// `--rule cascade:…|hybrid:…|dynamic:…` entry point.
+pub fn solve_path_pipeline(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    grid: &LambdaGrid,
+    pipeline: &ScreenPipeline,
+    solver: SolverKind,
+    cfg: &PathConfig,
+) -> PathOutput {
     // with_sweep_slack(x, y, x, 0.0) is exactly ScreenContext::new
     let ctx = ScreenContext::with_sweep_slack(x, y, x, cfg.safety_slack);
-    solve_path_with_ctx(&ctx, grid, rule, solver, cfg)
+    let mut screener = pipeline.build(x.n_rows(), cfg.sequential);
+    solve_path_with_screener(&ctx, grid, screener.as_mut(), solver, cfg)
 }
 
 /// Like [`solve_path`] but with a caller-provided context (so the PJRT
@@ -269,22 +340,34 @@ pub fn solve_path_with_ctx(
     solver_kind: SolverKind,
     cfg: &PathConfig,
 ) -> PathOutput {
+    let mut screener =
+        ScreenPipeline::from(rule_kind).build(ctx.x.n_rows(), cfg.sequential);
+    solve_path_with_screener(ctx, grid, screener.as_mut(), solver_kind, cfg)
+}
+
+/// The lifecycle driver every other entry point funnels into: `init` the
+/// pipeline, `screen_step` each λ, solve (with the gap-safe hook when the
+/// pipeline asks for it), KKT-repair the *uncertified* discards, and
+/// `observe` the exact solution back into the pipeline.
+pub fn solve_path_with_screener(
+    ctx: &ScreenContext,
+    grid: &LambdaGrid,
+    screener: &mut dyn Screener,
+    solver_kind: SolverKind,
+    cfg: &PathConfig,
+) -> PathOutput {
     let x = ctx.x;
     let y = ctx.y;
     let p = x.n_cols();
-    let rule = rule_kind.make(x.n_rows());
     let solver = solver_kind.make();
 
     let mut records = Vec::with_capacity(grid.values.len());
     let mut betas = Vec::with_capacity(grid.values.len());
 
-    // sequential state: exact solution/dual at the previous grid point
-    let mut lam_prev = ctx.lam_max;
-    let mut theta_prev: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
+    // the pipeline owns θ-propagation; the driver only keeps the previous
+    // solution for warm starts
+    screener.init(ctx);
     let mut beta_prev: Vec<f64> = vec![0.0; p];
-
-    // basic-mode anchor (θ at λmax) reused across steps
-    let theta_max: Vec<f64> = y.iter().map(|v| v / ctx.lam_max).collect();
 
     // scratch hoisted out of the λ loop (§Perf): the keep mask and the
     // KKT-repair residual are reused at every step instead of reallocated
@@ -304,31 +387,32 @@ pub fn solve_path_with_ctx(
                 solver_iters: 0,
                 kkt_repairs: 0,
                 gap: 0.0,
+                stage_discards: Vec::new(),
+                dynamic_discards: 0,
             });
             betas.push(vec![0.0; p]);
-            lam_prev = ctx.lam_max;
-            theta_prev.copy_from_slice(&theta_max);
+            screener.init(ctx); // reset every stage to the λmax anchor
             beta_prev.fill(0.0);
             continue;
         }
 
-        // ---- screening ----
+        // ---- screening (staged pipeline) ----
         keep.fill(true);
-        let (_, screen_secs) = timed(|| {
-            if let Some(rule) = &rule {
-                let step = if cfg.sequential {
-                    StepInput { lam_prev, lam, theta_prev: &theta_prev }
-                } else {
-                    StepInput { lam_prev: ctx.lam_max, lam, theta_prev: &theta_max }
-                };
-                rule.screen(ctx, &step, &mut keep);
-            }
-        });
+        let (stage_discards, screen_secs) =
+            timed(|| screener.screen_step(ctx, lam, &mut keep));
         let kept0 = keep.iter().filter(|k| **k).count();
 
-        // ---- reduced solve (+ KKT repair loop for heuristic rules) ----
-        let is_safe = rule.as_ref().map(|r| r.is_safe()).unwrap_or(true);
+        // ---- reduced solve (+ KKT repair on the uncertified discards) ----
+        let is_safe = screener.is_safe();
         let mut kkt_repairs = 0usize;
+        let mut dynamic_discards = 0usize;
+        let mut hook =
+            if screener.dynamic() { Some(GapSafeHook::new(ctx)) } else { None };
+        // under a heuristic pipeline the hook's certificates are issued
+        // against a possibly-unrepaired reduced problem, so its drops must
+        // join the KKT-repair candidate set and be re-validated
+        let mut hook_dropped: Vec<bool> =
+            if hook.is_some() && !is_safe { vec![false; p] } else { Vec::new() };
         let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
         let mut result: Option<crate::solver::SolveResult> = None;
         let (res, solve_secs) = timed(|| {
@@ -338,12 +422,29 @@ pub fn solve_path_with_ctx(
                 } else {
                     None
                 };
-                result =
-                    Some(solver.solve(x, y, &cols, lam, warm.as_deref(), &cfg.solve_opts));
+                let r = match hook.as_mut() {
+                    Some(h) => solver.solve_with_hook(
+                        x,
+                        y,
+                        &cols,
+                        lam,
+                        warm.as_deref(),
+                        &cfg.solve_opts,
+                        Some(h),
+                    ),
+                    None => solver.solve(x, y, &cols, lam, warm.as_deref(), &cfg.solve_opts),
+                };
+                // fold in-solver gap-safe drops into the step's final mask
+                if let Some(h) = hook.as_mut() {
+                    let revalidate = if is_safe { None } else { Some(&mut hook_dropped) };
+                    dynamic_discards += h.fold_into(&mut keep, revalidate);
+                }
+                result = Some(r);
                 if is_safe || !cfg.kkt_repair {
                     break;
                 }
-                // heuristic: check KKT on the full problem
+                // heuristic: check KKT on the full problem — but only the
+                // *uncertified* discards when the pipeline certifies some
                 let res = result.as_ref().unwrap();
                 resid.copy_from_slice(y);
                 for (k, &j) in cols.iter().enumerate() {
@@ -351,7 +452,16 @@ pub fn solve_path_with_ctx(
                         x.col_axpy_into(j, -res.beta[k], &mut resid);
                     }
                 }
-                let viol = kkt_violations(ctx, &resid, lam, &keep);
+                let viol = match screener.uncertified() {
+                    Some(cand) if !hook_dropped.is_empty() => {
+                        // hook drops are not in the certifier's candidate
+                        // mask — merge them in so they get re-validated
+                        let merged = merge_kkt_candidates(cand, &hook_dropped);
+                        kkt_violations_in(ctx, &resid, lam, &keep, &merged)
+                    }
+                    Some(cand) => kkt_violations_in(ctx, &resid, lam, &keep, cand),
+                    None => kkt_violations(ctx, &resid, lam, &keep),
+                };
                 if viol.is_empty() {
                     break;
                 }
@@ -378,17 +488,18 @@ pub fn solve_path_with_ctx(
             solver_iters: res.iters,
             kkt_repairs,
             gap: res.gap,
+            stage_discards,
+            dynamic_discards,
         });
 
-        // advance sequential state (θ updated in place — no reallocation)
-        theta_from_solution_into(x, y, &full, lam, &mut theta_prev);
-        lam_prev = lam;
+        // advance the pipeline's sequential state with the exact solution
+        screener.observe(ctx, lam, &full);
         beta_prev.copy_from_slice(&full);
         betas.push(full);
     }
 
     PathOutput {
-        rule: rule_kind.name(),
+        rule: screener.name(),
         solver: solver_kind.name(),
         records,
         betas,
@@ -506,8 +617,112 @@ mod tests {
             assert_eq!(RuleKind::from_name(r.name()), Some(r));
         }
         assert_eq!(RuleKind::from_name("none"), Some(RuleKind::None));
+        assert_eq!(RuleKind::from_name("cascade:sis,edpp"), None);
         for s in [SolverKind::Cd, SolverKind::Fista, SolverKind::Lars] {
             assert_eq!(SolverKind::from_name(s.name()), Some(s));
+        }
+    }
+
+    /// Satellite: rejection_ratio must never be NaN — p = 0 problems and
+    /// dense-support steps (no true zeros) report 0.0, and an empty path
+    /// reports a 0.0 mean.
+    #[test]
+    fn rejection_ratio_degenerate_cases() {
+        let zero = StepRecord {
+            lam: 1.0,
+            kept: 0,
+            discarded: 0,
+            true_zeros: 0,
+            screen_secs: 0.0,
+            solve_secs: 0.0,
+            solver_iters: 0,
+            kkt_repairs: 0,
+            gap: 0.0,
+            stage_discards: Vec::new(),
+            dynamic_discards: 0,
+        };
+        assert_eq!(zero.rejection_ratio(), 0.0);
+        assert!(!zero.rejection_ratio().is_nan());
+        let dense_support = StepRecord { discarded: 3, ..zero.clone() };
+        assert_eq!(dense_support.rejection_ratio(), 0.0);
+        let empty = PathOutput {
+            rule: "edpp".to_string(),
+            solver: "cd",
+            records: Vec::new(),
+            betas: Vec::new(),
+        };
+        assert_eq!(empty.mean_rejection_ratio(), 0.0);
+        assert!(!empty.mean_rejection_ratio().is_nan());
+        assert!(empty.mean_stage_rejections().is_empty());
+    }
+
+    /// Hybrid pipeline along a full path: exact solutions, rejection at
+    /// least the certifier's, and per-stage counts that add up.
+    #[test]
+    fn hybrid_path_exact_and_dominates_certifier() {
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 7);
+        let g = grid_for(&ds, 10);
+        let cfg = PathConfig::default();
+        let pipe = ScreenPipeline::parse("hybrid:strong+edpp").unwrap();
+        let hyb = solve_path_pipeline(&ds.x, &ds.y, &g, &pipe, SolverKind::Cd, &cfg);
+        let edpp = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        let base = solve_path(&ds.x, &ds.y, &g, RuleKind::None, SolverKind::Cd, &cfg);
+        assert_eq!(hyb.rule, "hybrid:strong+edpp");
+        for (bs, bb) in hyb.betas.iter().zip(base.betas.iter()) {
+            for j in 0..ds.p() {
+                assert!((bs[j] - bb[j]).abs() < 2e-4 * (1.0 + bb[j].abs()));
+            }
+        }
+        // the hybrid mask is a subset of the certifier's keep-set, so its
+        // rejection ratio dominates plain EDPP at every step
+        for (h, e) in hyb.records.iter().zip(edpp.records.iter()) {
+            assert!(
+                h.discarded >= e.discarded,
+                "hybrid discarded {} < edpp {} at λ={}",
+                h.discarded,
+                e.discarded,
+                h.lam
+            );
+        }
+        assert!(hyb.mean_rejection_ratio() >= edpp.mean_rejection_ratio() - 1e-12);
+        // per-stage counts are recorded and consistent
+        let staged = hyb
+            .records
+            .iter()
+            .find(|r| !r.stage_discards.is_empty())
+            .expect("non-trivial steps have stage records");
+        assert_eq!(staged.stage_discards.len(), 2);
+        assert_eq!(staged.stage_discards[0].stage, "edpp");
+        assert_eq!(staged.stage_discards[1].stage, "strong");
+    }
+
+    /// Dynamic (gap-safe) pipeline: exact solutions and a final mask at
+    /// least as aggressive as the static rule's.
+    #[test]
+    fn dynamic_path_exact_and_counts_dynamic_discards() {
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 8);
+        let g = grid_for(&ds, 10);
+        let cfg = PathConfig::default();
+        let pipe = ScreenPipeline::parse("dynamic:edpp").unwrap();
+        let dynp = solve_path_pipeline(&ds.x, &ds.y, &g, &pipe, SolverKind::Cd, &cfg);
+        let edpp = solve_path(&ds.x, &ds.y, &g, RuleKind::Edpp, SolverKind::Cd, &cfg);
+        let base = solve_path(&ds.x, &ds.y, &g, RuleKind::None, SolverKind::Cd, &cfg);
+        assert_eq!(dynp.rule, "dynamic:edpp");
+        for (bs, bb) in dynp.betas.iter().zip(base.betas.iter()) {
+            for j in 0..ds.p() {
+                assert!((bs[j] - bb[j]).abs() < 2e-4 * (1.0 + bb[j].abs()));
+            }
+        }
+        for (d, e) in dynp.records.iter().zip(edpp.records.iter()) {
+            assert!(d.discarded >= e.discarded, "dynamic lost discards at λ={}", d.lam);
+            assert!(d.rejection_ratio() <= 1.0 + 1e-12, "unsafe dynamic discard");
+        }
+        assert!(dynp.mean_rejection_ratio() >= edpp.mean_rejection_ratio() - 1e-12);
+        // internal consistency: a safe dynamic pipeline's final mask is
+        // exactly (screen-stage discards + in-solver dynamic discards)
+        for r in dynp.records.iter().filter(|r| !r.stage_discards.is_empty()) {
+            let staged: usize = r.stage_discards.iter().map(|s| s.discarded).sum();
+            assert_eq!(staged + r.dynamic_discards, r.discarded, "λ={}", r.lam);
         }
     }
 }

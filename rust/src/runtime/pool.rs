@@ -1,5 +1,5 @@
 //! Persistent compute worker pool (std threads + mpsc — the offline image
-//! has no tokio or rayon, DESIGN.md §3).
+//! has no tokio or rayon, DESIGN.md §4).
 //!
 //! This is the first subsystem in the repo that owns threads for *compute*
 //! rather than for request routing: the sharded backend

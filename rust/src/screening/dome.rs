@@ -19,7 +19,7 @@ use super::{ScreenContext, ScreeningRule, StepInput};
 /// Basic DOME test (requires unit-norm features; callers should
 /// `Dataset::normalize_features` first — asserted loosely at runtime).
 ///
-/// Perf (DESIGN.md §7): `a = Xᵀñ` is λ-independent (ñ is the
+/// Perf (DESIGN.md §8): `a = Xᵀñ` is λ-independent (ñ is the
 /// λmax-attaining feature), so it is computed once and cached across the
 /// whole path instead of re-sweeping at every λ — halving DOME's per-step
 /// cost from 2 sweeps to 1.
@@ -45,6 +45,47 @@ impl DomeRule {
             xq + d * a + cap * (1.0 - a * a).max(0.0).sqrt()
         }
     }
+
+    /// The λ-independent second sweep `Xᵀñ` (cached across the path).
+    fn compute_xn(ctx: &ScreenContext) -> Vec<f64> {
+        let s = ctx.xty[ctx.lam_max_arg].signum();
+        let mut xn = vec![0.0; ctx.p()];
+        let mut nstar = vec![0.0; ctx.y.len()];
+        ctx.x.col_into(ctx.lam_max_arg, &mut nstar);
+        for v in nstar.iter_mut() {
+            *v *= s;
+        }
+        ctx.sweep.xt_w(&nstar, &mut xn);
+        xn
+    }
+
+    /// The λ-dependent dome parameters: radius ρ of the SAFE sphere and
+    /// the signed plane margin d past its center.
+    fn dome_params(ctx: &ScreenContext, lam: f64) -> (f64, f64) {
+        let rho = ctx.y_norm * (1.0 / lam - 1.0 / ctx.lam_max).max(0.0);
+        let s = ctx.xty[ctx.lam_max_arg].signum();
+        let nstar_norm = ctx.col_norms[ctx.lam_max_arg];
+        debug_assert!(
+            (nstar_norm - 1.0).abs() < 1e-6,
+            "DOME requires unit-norm features (got ‖x*‖ = {nstar_norm})"
+        );
+        // ñᵀq = sign(x*ᵀy)·x*ᵀy/λ = λmax/λ (for the attaining feature)
+        let nq = s * ctx.xty[ctx.lam_max_arg] / lam; // = λmax/λ ≥ 1
+        (rho, 1.0 - nq) // d ≤ 0: the center is beyond the plane
+    }
+
+    /// One feature's dome keep-decision given its `xᵀq` and cached `xᵀñ`.
+    fn keep_feature(ctx: &ScreenContext, j: usize, xqj: f64, xnj: f64, rho: f64, d: f64) -> bool {
+        // account for non-exactly-unit norms defensively
+        let nj = ctx.col_norms[j].max(1e-300);
+        let sup_pos = Self::sup_dome(xqj / nj, xnj / nj, rho, d) * nj;
+        let sup_neg = Self::sup_dome(-xqj / nj, -xnj / nj, rho, d) * nj;
+        let sup = sup_pos.max(sup_neg);
+        // boundary tolerance: active features can sit exactly on the
+        // dual constraint (sup = 1); round-off must not flip them into
+        // an unsafe discard
+        sup >= 1.0 - 1e-9 * (1.0 + xqj.abs() + rho)
+    }
 }
 
 impl ScreeningRule for DomeRule {
@@ -60,43 +101,33 @@ impl ScreeningRule for DomeRule {
         // Basic rule: ignores θ*(λ₀) and always anchors at λmax.
         let p = ctx.p();
         let lam = step.lam;
-        let rho = ctx.y_norm * (1.0 / lam - 1.0 / ctx.lam_max).max(0.0);
-        let s = ctx.xty[ctx.lam_max_arg].signum();
-        let nstar_norm = ctx.col_norms[ctx.lam_max_arg];
-        debug_assert!(
-            (nstar_norm - 1.0).abs() < 1e-6,
-            "DOME requires unit-norm features (got ‖x*‖ = {nstar_norm})"
-        );
-        // ñᵀq = sign(x*ᵀy)·x*ᵀy/λ = λmax/λ (for the attaining feature)
-        let nq = s * ctx.xty[ctx.lam_max_arg] / lam; // = λmax/λ ≥ 1
-        let d = 1.0 - nq; // ≤ 0: the center is beyond the plane
+        let (rho, d) = Self::dome_params(ctx, lam);
         // xᵀq for all features in one sweep into the context scratch buffer;
         // xᵀñ = s·(Xᵀx*) needs a second sweep against the x* column.
         let mut xq = ctx.sweep_scratch();
         let q: Vec<f64> = ctx.y.iter().map(|v| v / lam).collect();
         ctx.sweep.xt_w(&q, &mut xq[..]);
-        // λ-independent second sweep, cached across the path (DESIGN.md §7)
+        // λ-independent second sweep, cached across the path (DESIGN.md §8)
         let mut cache = self.xn_cache.borrow_mut();
-        let xn: &Vec<f64> = cache.get_or_insert_with(|| {
-            let mut xn = vec![0.0; p];
-            let mut nstar = vec![0.0; ctx.y.len()];
-            ctx.x.col_into(ctx.lam_max_arg, &mut nstar);
-            for v in nstar.iter_mut() {
-                *v *= s;
-            }
-            ctx.sweep.xt_w(&nstar, &mut xn);
-            xn
-        });
+        let xn: &Vec<f64> = cache.get_or_insert_with(|| Self::compute_xn(ctx));
         for j in 0..p {
-            // account for non-exactly-unit norms defensively
-            let nj = ctx.col_norms[j].max(1e-300);
-            let sup_pos = Self::sup_dome(xq[j] / nj, xn[j] / nj, rho, d) * nj;
-            let sup_neg = Self::sup_dome(-xq[j] / nj, -xn[j] / nj, rho, d) * nj;
-            let sup = sup_pos.max(sup_neg);
-            // boundary tolerance: active features can sit exactly on the
-            // dual constraint (sup = 1); round-off must not flip them into
-            // an unsafe discard
-            keep[j] = sup >= 1.0 - 1e-9 * (1.0 + xq[j].abs() + rho);
+            keep[j] = Self::keep_feature(ctx, j, xq[j], xn[j], rho, d);
+        }
+    }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        // cascade stage: one `xt_w_subset` over the survivors instead of a
+        // full sweep; the cached Xᵀñ is full-length and indexed directly
+        let lam = step.lam;
+        let (rho, d) = Self::dome_params(ctx, lam);
+        let cols: Vec<usize> = (0..ctx.p()).filter(|&j| keep[j]).collect();
+        let q: Vec<f64> = ctx.y.iter().map(|v| v / lam).collect();
+        let mut xq = vec![0.0; cols.len()];
+        ctx.sweep.xt_w_subset(&cols, &q, &mut xq);
+        let mut cache = self.xn_cache.borrow_mut();
+        let xn: &Vec<f64> = cache.get_or_insert_with(|| Self::compute_xn(ctx));
+        for (k, &j) in cols.iter().enumerate() {
+            keep[j] = Self::keep_feature(ctx, j, xq[k], xn[j], rho, d);
         }
     }
 }

@@ -6,7 +6,7 @@
 //! `|xᵢᵀθ*(λ₀)| < 1 − (1/λ − 1/λ₀)·‖xᵢ‖·‖y‖`; the basic rule (Corollary 4)
 //! is the special case λ₀ = λmax, θ*(λmax) = y/λmax.
 
-use super::{sphere_screen, ScreenContext, ScreeningRule, StepInput};
+use super::{sphere_screen, sphere_screen_masked, ScreenContext, ScreeningRule, StepInput};
 
 /// Sequential DPP (Corollary 5). With `lam_prev = λmax` and
 /// `theta_prev = y/λmax` it reduces to basic DPP (Corollary 4, Remark 3).
@@ -25,6 +25,11 @@ impl ScreeningRule for DppRule {
         debug_assert!(step.lam <= step.lam_prev);
         let radius = (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0) * ctx.y_norm;
         sphere_screen(ctx, step.theta_prev, radius, keep);
+    }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let radius = (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0) * ctx.y_norm;
+        sphere_screen_masked(ctx, step.theta_prev, radius, keep);
     }
 }
 

@@ -3,7 +3,10 @@
 //! and EDPP (both combined — Theorem 16 / Corollary 17), which the paper
 //! shows discards almost all inactive features along the whole path.
 
-use super::{sphere_screen, v1, v2, v2_perp, ScreenContext, ScreeningRule, StepInput};
+use super::{
+    sphere_screen, sphere_screen_masked, v1, v2, v2_perp, ScreenContext, ScreeningRule,
+    StepInput,
+};
 use crate::linalg::nrm2;
 
 /// Improvement 1 (Theorem 11): ball `B(θ*(λ₀), ‖v₂⊥‖)` — the ray-projection
@@ -25,6 +28,13 @@ impl ScreeningRule for Improvement1Rule {
         let perp = v2_perp(&a, &b);
         sphere_screen(ctx, step.theta_prev, nrm2(&perp), keep);
     }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let a = v1(ctx, step);
+        let b = v2(ctx, step);
+        let perp = v2_perp(&a, &b);
+        sphere_screen_masked(ctx, step.theta_prev, nrm2(&perp), keep);
+    }
 }
 
 /// Improvement 2 (Theorem 14): firm nonexpansiveness halves the DPP ball —
@@ -41,15 +51,26 @@ impl ScreeningRule for Improvement2Rule {
     }
 
     fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
-        let half_d = 0.5 * (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0);
-        let center: Vec<f64> = step
-            .theta_prev
-            .iter()
-            .zip(ctx.y.iter())
-            .map(|(t, yi)| t + half_d * yi)
-            .collect();
-        sphere_screen(ctx, &center, half_d * ctx.y_norm, keep);
+        let (center, radius) = imp2_ball(ctx, step);
+        sphere_screen(ctx, &center, radius, keep);
     }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let (center, radius) = imp2_ball(ctx, step);
+        sphere_screen_masked(ctx, &center, radius, keep);
+    }
+}
+
+/// Improvement 2's ball `B(θ*(λ₀) + ½(1/λ−1/λ₀)y, ½(1/λ−1/λ₀)‖y‖)`.
+fn imp2_ball(ctx: &ScreenContext, step: &StepInput) -> (Vec<f64>, f64) {
+    let half_d = 0.5 * (1.0 / step.lam - 1.0 / step.lam_prev).max(0.0);
+    let center: Vec<f64> = step
+        .theta_prev
+        .iter()
+        .zip(ctx.y.iter())
+        .map(|(t, yi)| t + half_d * yi)
+        .collect();
+    (center, half_d * ctx.y_norm)
 }
 
 /// EDPP (Theorem 16 / Corollary 17): ball
@@ -66,17 +87,28 @@ impl ScreeningRule for EdppRule {
     }
 
     fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
-        let a = v1(ctx, step);
-        let b = v2(ctx, step);
-        let perp = v2_perp(&a, &b);
-        let center: Vec<f64> = step
-            .theta_prev
-            .iter()
-            .zip(perp.iter())
-            .map(|(t, w)| t + 0.5 * w)
-            .collect();
-        sphere_screen(ctx, &center, 0.5 * nrm2(&perp), keep);
+        let (center, radius) = edpp_ball(ctx, step);
+        sphere_screen(ctx, &center, radius, keep);
     }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let (center, radius) = edpp_ball(ctx, step);
+        sphere_screen_masked(ctx, &center, radius, keep);
+    }
+}
+
+/// EDPP's ball `B(θ*(λ₀) + ½v₂⊥, ½‖v₂⊥‖)` (Corollary 17).
+fn edpp_ball(ctx: &ScreenContext, step: &StepInput) -> (Vec<f64>, f64) {
+    let a = v1(ctx, step);
+    let b = v2(ctx, step);
+    let perp = v2_perp(&a, &b);
+    let center: Vec<f64> = step
+        .theta_prev
+        .iter()
+        .zip(perp.iter())
+        .map(|(t, w)| t + 0.5 * w)
+        .collect();
+    (center, 0.5 * nrm2(&perp))
 }
 
 #[cfg(test)]

@@ -29,11 +29,16 @@ pub mod dpp;
 pub mod edpp;
 pub mod group_edpp;
 pub mod group_strong;
+pub mod pipeline;
 pub mod safe;
 pub mod sis;
 pub mod strong;
 
 use std::cell::RefCell;
+
+pub use pipeline::{
+    GapSafeHook, GroupScreener, RuleScreener, ScreenPipeline, Screener, StageCount,
+};
 
 use crate::linalg::DesignMatrix;
 #[cfg(test)]
@@ -150,6 +155,21 @@ pub trait ScreeningRule {
     /// Whether discards are guaranteed correct (drives the KKT repair loop).
     fn is_safe(&self) -> bool;
     fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]);
+
+    /// Masked form used by later stages of a [`pipeline::CascadeScreener`]:
+    /// `keep` may arrive with some features already discarded by an earlier
+    /// stage. The rule must only *clear* additional bits — never resurrect a
+    /// discard — and should restrict its sweep to the surviving columns
+    /// where its math allows (the sphere rules pay O(nnz of survivors)
+    /// instead of a full sweep). Default: full evaluation into a scratch
+    /// mask, then intersect.
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let mut full = vec![true; keep.len()];
+        self.screen(ctx, step, &mut full);
+        for (k, f) in keep.iter_mut().zip(full.into_iter()) {
+            *k = *k && f;
+        }
+    }
 }
 
 /// Shared sphere test: keep[i] = false when `|xᵢᵀc| + ρ‖xᵢ‖ < 1`.
@@ -167,6 +187,28 @@ pub fn sphere_screen(ctx: &ScreenContext, center: &[f64], radius: f64, keep: &mu
         let sup = scores[j].abs() + (radius + slack) * ctx.col_norms[j];
         // boundary tolerance: an active feature can satisfy sup == 1 exactly
         // (e.g. radius → 0 with |xᵢᵀθ*| = 1); round-off must not discard it
+        keep[j] = sup >= 1.0 - 1e-9 * (1.0 + sup.abs());
+    }
+}
+
+/// Masked sphere test for cascade stages: evaluate only the features still
+/// true in `keep` — one `xt_w_subset` over the survivors, O(nnz of the
+/// surviving columns) instead of a full sweep — and only *clear* bits.
+/// Same keep-condition (slack, boundary tolerance) as [`sphere_screen`].
+pub fn sphere_screen_masked(
+    ctx: &ScreenContext,
+    center: &[f64],
+    radius: f64,
+    keep: &mut [bool],
+) {
+    let p = ctx.p();
+    assert_eq!(keep.len(), p);
+    let cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+    let mut scores = vec![0.0; cols.len()];
+    ctx.sweep.xt_w_subset(&cols, center, &mut scores);
+    let slack = ctx.safety_slack * (1.0 + crate::linalg::nrm2(center));
+    for (k, &j) in cols.iter().enumerate() {
+        let sup = scores[k].abs() + (radius + slack) * ctx.col_norms[j];
         keep[j] = sup >= 1.0 - 1e-9 * (1.0 + sup.abs());
     }
 }

@@ -1,0 +1,1009 @@
+//! Composable screening pipelines (DESIGN.md §3): the stateful [`Screener`]
+//! lifecycle and its combinators.
+//!
+//! The paper's sequential rules (Theorem 3.3 / Corollary 17) are inherently
+//! *stateful*: each step λ₀ → λ consumes the exact dual point θ*(λ₀) of the
+//! previous solve. A [`Screener`] owns that state — `init` anchors it at
+//! λmax, `screen_step` screens the next λ from the internal anchor, and
+//! `observe` feeds the exact solution back in (θ-propagation) — so path
+//! drivers and the service no longer hand-thread `StepInput`.
+//!
+//! Composition is screeners all the way down:
+//!
+//! * [`CascadeScreener`] — `cascade:sis,edpp`: each stage screens only the
+//!   previous stage's survivors (masked subset sweeps), so a cheap
+//!   heuristic can shrink the working set before an expensive safe rule
+//!   pays its sweep.
+//! * [`HybridScreener`] — `hybrid:strong+edpp` (Zeng et al. 2017): the safe
+//!   certifier screens first, then the heuristic proposes additional
+//!   discards among the certified keeps. Discards beyond the certifier's
+//!   are *uncertified* and form the only KKT-repair candidates — the
+//!   repair loop no longer re-checks provably-safe discards.
+//! * [`GapSafeScreener`] — `dynamic:<pipeline>` / `--dynamic` (Fercoq,
+//!   Gramfort, Salmon 2015): in-solver dynamic screening. The solver calls
+//!   [`GapSafeHook`] at its duality-gap checks; the hook builds a feasible
+//!   dual point from the current residual and shrinks the working set with
+//!   the gap-sphere `B(θ, √(2G)/λ)` as the gap closes.
+//!
+//! Single-rule pipelines are **bit-identical** to driving the underlying
+//! [`ScreeningRule`] by hand: on a pristine (all-true) mask the adapter
+//! calls `ScreeningRule::screen` directly, and θ-propagation performs the
+//! same `theta_from_solution_into` update the path driver used to do.
+
+use super::group_edpp::{
+    GroupScreenContext, GroupScreeningRule, GroupStepInput,
+};
+use super::{
+    theta_from_solution_into, ScreenContext, ScreeningRule, StepInput,
+};
+use crate::linalg::{dot, nrm1};
+use crate::solver::SolverHook;
+
+/// All rule names the pipeline grammar accepts as components.
+pub const RULE_NAMES: [&str; 9] = [
+    "none",
+    "safe",
+    "dome",
+    "dpp",
+    "improvement1",
+    "improvement2",
+    "edpp",
+    "strong",
+    "sis",
+];
+
+/// The subset of [`RULE_NAMES`] that are safe rules (valid hybrid
+/// certifiers).
+pub const SAFE_RULE_NAMES: [&str; 6] =
+    ["safe", "dome", "dpp", "improvement1", "improvement2", "edpp"];
+
+/// Build a Lasso screening rule by name (`"none"` → `None`). This is the
+/// single rule factory shared by [`crate::path::RuleKind`], the service and
+/// the pipeline builder. Panics on unknown names — validate user input with
+/// [`ScreenPipeline::parse`] first.
+pub fn make_rule(name: &str, n_rows: usize) -> Option<Box<dyn ScreeningRule>> {
+    match name {
+        "none" => None,
+        "safe" => Some(Box::new(super::safe::SafeRule)),
+        "dome" => Some(Box::new(super::dome::DomeRule::default())),
+        "dpp" => Some(Box::new(super::dpp::DppRule)),
+        "improvement1" => Some(Box::new(super::edpp::Improvement1Rule)),
+        "improvement2" => Some(Box::new(super::edpp::Improvement2Rule)),
+        "edpp" => Some(Box::new(super::edpp::EdppRule)),
+        "strong" => Some(Box::new(super::strong::StrongRule)),
+        "sis" => Some(Box::new(super::sis::SisRule::with_default_count(n_rows))),
+        other => panic!("unknown screening rule `{other}` (parse the pipeline first)"),
+    }
+}
+
+/// Is `name` a safe rule? (Unknown names are not safe.)
+pub fn rule_name_is_safe(name: &str) -> bool {
+    SAFE_RULE_NAMES.contains(&name)
+}
+
+/// Per-stage discard count for one screening step: how many features this
+/// stage removed beyond everything before it in the pipeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageCount {
+    pub stage: String,
+    pub discarded: usize,
+}
+
+/// Stateful screening lifecycle. Contract:
+///
+/// 1. `init(ctx)` once per path/service — resets every stage to the λmax
+///    anchor θ*(λmax) = y/λmax;
+/// 2. `screen_step(ctx, lam, keep)` per λ — `keep` arrives all-true from
+///    drivers (combinators hand later stages a partially-cleared mask;
+///    stages must then only *clear* bits);
+/// 3. `observe(ctx, lam, beta)` after the exact solve at λ — the screener
+///    advances its own θ*(λ₀) state (λ must not exceed the current anchor
+///    for the sequential rules to stay safe; drivers guarantee descending
+///    order, the service re-`init`s when it must anchor above its state).
+pub trait Screener {
+    /// Canonical pipeline name (`"edpp"`, `"cascade:sis,edpp"`, …).
+    fn name(&self) -> String;
+    /// All discards provably correct ⇒ the driver skips KKT repair.
+    fn is_safe(&self) -> bool;
+    /// Reset per-path state to the λmax anchor.
+    fn init(&mut self, ctx: &ScreenContext);
+    /// λ₀ of the current sequential anchor (∞ before `init`).
+    fn anchor_lam(&self) -> f64;
+    /// Screen for λ from the internal anchor; returns per-stage discard
+    /// counts in stage order.
+    fn screen_step(
+        &mut self,
+        ctx: &ScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount>;
+    /// Feed back the exact full-length solution at λ (θ-propagation).
+    fn observe(&mut self, ctx: &ScreenContext, lam: f64, beta: &[f64]);
+    /// For heuristic pipelines: per-feature mask of discards that still
+    /// need KKT verification (valid after `screen_step`). `None` ⇒ verify
+    /// every discard (the pre-pipeline behaviour).
+    fn uncertified(&self) -> Option<&[bool]> {
+        None
+    }
+    /// Whether the pipeline wants the in-solver gap-safe refine hook.
+    fn dynamic(&self) -> bool {
+        false
+    }
+}
+
+/// Adapter: one stateless [`ScreeningRule`] driven through the stateful
+/// lifecycle. `sequential = false` reproduces the "basic" §4.1.1 variants
+/// (anchor pinned at λmax; `observe` is a no-op).
+pub struct RuleScreener {
+    rule: Option<Box<dyn ScreeningRule>>,
+    label: String,
+    sequential: bool,
+    lam_prev: f64,
+    theta_prev: Vec<f64>,
+}
+
+impl RuleScreener {
+    pub fn new(rule: Box<dyn ScreeningRule>, sequential: bool) -> Self {
+        let label = rule.name().to_string();
+        RuleScreener {
+            rule: Some(rule),
+            label,
+            sequential,
+            lam_prev: f64::INFINITY,
+            theta_prev: Vec::new(),
+        }
+    }
+
+    /// The `none` pipeline: screens nothing, discards nothing.
+    pub fn none() -> Self {
+        RuleScreener {
+            rule: None,
+            label: "none".to_string(),
+            sequential: true,
+            lam_prev: f64::INFINITY,
+            theta_prev: Vec::new(),
+        }
+    }
+}
+
+impl Screener for RuleScreener {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn is_safe(&self) -> bool {
+        self.rule.as_ref().map(|r| r.is_safe()).unwrap_or(true)
+    }
+
+    fn init(&mut self, ctx: &ScreenContext) {
+        self.lam_prev = ctx.lam_max;
+        self.theta_prev.clear();
+        self.theta_prev.extend(ctx.y.iter().map(|v| v / ctx.lam_max));
+    }
+
+    fn anchor_lam(&self) -> f64 {
+        self.lam_prev
+    }
+
+    fn screen_step(
+        &mut self,
+        ctx: &ScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount> {
+        let Some(rule) = &self.rule else {
+            return vec![StageCount { stage: self.label.clone(), discarded: 0 }];
+        };
+        assert!(
+            !self.theta_prev.is_empty(),
+            "Screener::init must run before screen_step"
+        );
+        let before = keep.iter().filter(|k| **k).count();
+        let step = StepInput {
+            lam_prev: self.lam_prev,
+            lam,
+            theta_prev: &self.theta_prev,
+        };
+        if before == keep.len() {
+            // pristine mask: the exact legacy call — single-rule pipelines
+            // stay bit-identical to the pre-lifecycle API
+            rule.screen(ctx, &step, keep);
+        } else {
+            rule.screen_masked(ctx, &step, keep);
+        }
+        let after = keep.iter().filter(|k| **k).count();
+        vec![StageCount { stage: self.label.clone(), discarded: before - after }]
+    }
+
+    fn observe(&mut self, ctx: &ScreenContext, lam: f64, beta: &[f64]) {
+        if !self.sequential || self.rule.is_none() {
+            return;
+        }
+        assert!(!self.theta_prev.is_empty(), "observe before init");
+        theta_from_solution_into(ctx.x, ctx.y, beta, lam, &mut self.theta_prev);
+        self.lam_prev = lam;
+    }
+}
+
+/// `cascade:r1,r2[,…]` — each stage screens only the previous stage's
+/// survivors; the pipeline's discard set is the union of its stages'.
+pub struct CascadeScreener {
+    stages: Vec<Box<dyn Screener>>,
+}
+
+impl CascadeScreener {
+    pub fn new(stages: Vec<Box<dyn Screener>>) -> Self {
+        assert!(stages.len() >= 2, "cascade needs at least two stages");
+        CascadeScreener { stages }
+    }
+}
+
+impl Screener for CascadeScreener {
+    fn name(&self) -> String {
+        format!(
+            "cascade:{}",
+            self.stages.iter().map(|s| s.name()).collect::<Vec<_>>().join(",")
+        )
+    }
+
+    fn is_safe(&self) -> bool {
+        // any unsafe stage can discard an active feature ⇒ repair needed
+        self.stages.iter().all(|s| s.is_safe())
+    }
+
+    fn init(&mut self, ctx: &ScreenContext) {
+        for s in &mut self.stages {
+            s.init(ctx);
+        }
+    }
+
+    fn anchor_lam(&self) -> f64 {
+        self.stages[0].anchor_lam()
+    }
+
+    fn screen_step(
+        &mut self,
+        ctx: &ScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount> {
+        let mut stats = Vec::with_capacity(self.stages.len());
+        for s in &mut self.stages {
+            stats.extend(s.screen_step(ctx, lam, keep));
+        }
+        stats
+    }
+
+    fn observe(&mut self, ctx: &ScreenContext, lam: f64, beta: &[f64]) {
+        for s in &mut self.stages {
+            s.observe(ctx, lam, beta);
+        }
+    }
+}
+
+/// `hybrid:heuristic+safe` — the safe certifier screens first (its discards
+/// are provably correct), then the heuristic proposes additional discards
+/// among the certified keeps. Only those extra discards are *uncertified*
+/// and need KKT verification, so the repair loop checks a residual set
+/// instead of every discarded feature (Zeng et al. 2017).
+pub struct HybridScreener {
+    heuristic: Box<dyn Screener>,
+    certifier: Box<dyn Screener>,
+    uncertified: Vec<bool>,
+}
+
+impl HybridScreener {
+    pub fn new(heuristic: Box<dyn Screener>, certifier: Box<dyn Screener>) -> Self {
+        assert!(certifier.is_safe(), "hybrid certifier must be a safe rule");
+        HybridScreener { heuristic, certifier, uncertified: Vec::new() }
+    }
+}
+
+impl Screener for HybridScreener {
+    fn name(&self) -> String {
+        format!("hybrid:{}+{}", self.heuristic.name(), self.certifier.name())
+    }
+
+    fn is_safe(&self) -> bool {
+        // e.g. hybrid:edpp+edpp: every discard certified ⇒ no repair
+        self.heuristic.is_safe() && self.certifier.is_safe()
+    }
+
+    fn init(&mut self, ctx: &ScreenContext) {
+        self.certifier.init(ctx);
+        self.heuristic.init(ctx);
+        self.uncertified.clear();
+    }
+
+    fn anchor_lam(&self) -> f64 {
+        self.certifier.anchor_lam()
+    }
+
+    fn screen_step(
+        &mut self,
+        ctx: &ScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount> {
+        // 1) safe certification pass
+        let mut stats = self.certifier.screen_step(ctx, lam, keep);
+        let cert_keep: Vec<bool> = keep.to_vec();
+        // 2) heuristic proposes extra discards among certified keeps
+        stats.extend(self.heuristic.screen_step(ctx, lam, keep));
+        // discards beyond the certifier's are the KKT-repair candidates
+        self.uncertified.clear();
+        self.uncertified.extend(
+            cert_keep.iter().zip(keep.iter()).map(|(c, k)| *c && !*k),
+        );
+        stats
+    }
+
+    fn observe(&mut self, ctx: &ScreenContext, lam: f64, beta: &[f64]) {
+        self.certifier.observe(ctx, lam, beta);
+        self.heuristic.observe(ctx, lam, beta);
+    }
+
+    fn uncertified(&self) -> Option<&[bool]> {
+        if self.is_safe() {
+            None
+        } else {
+            Some(&self.uncertified)
+        }
+    }
+}
+
+/// `dynamic:<pipeline>` — wraps any screener and additionally requests the
+/// in-solver gap-safe refine hook from the driver.
+pub struct GapSafeScreener {
+    inner: Box<dyn Screener>,
+}
+
+impl GapSafeScreener {
+    pub fn new(inner: Box<dyn Screener>) -> Self {
+        GapSafeScreener { inner }
+    }
+}
+
+impl Screener for GapSafeScreener {
+    fn name(&self) -> String {
+        format!("dynamic:{}", self.inner.name())
+    }
+
+    fn is_safe(&self) -> bool {
+        self.inner.is_safe()
+    }
+
+    fn init(&mut self, ctx: &ScreenContext) {
+        self.inner.init(ctx);
+    }
+
+    fn anchor_lam(&self) -> f64 {
+        self.inner.anchor_lam()
+    }
+
+    fn screen_step(
+        &mut self,
+        ctx: &ScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount> {
+        self.inner.screen_step(ctx, lam, keep)
+    }
+
+    fn observe(&mut self, ctx: &ScreenContext, lam: f64, beta: &[f64]) {
+        self.inner.observe(ctx, lam, beta);
+    }
+
+    fn uncertified(&self) -> Option<&[bool]> {
+        self.inner.uncertified()
+    }
+
+    fn dynamic(&self) -> bool {
+        true
+    }
+}
+
+/// In-solver gap-safe refinement (Fercoq, Gramfort, Salmon 2015). The
+/// solver calls [`SolverHook::refine`] at its duality-gap checks; the hook
+/// builds the feasible dual point θ = s·r (s = min(1/λ, 1/‖X_liveᵀr‖∞)),
+/// computes the *absolute* gap G(β, θ) for that exact θ, and applies the
+/// sphere test with center θ and radius √(2G)/λ. Certified features are
+/// zero in the exact solution, so the solver may drop them mid-iteration
+/// (zeroing their coefficient and restoring the residual). Cost: one
+/// subset sweep per gap check — the same order as the gap check itself.
+pub struct GapSafeHook<'a> {
+    ctx: &'a ScreenContext<'a>,
+    /// Global column indices dropped since the last [`Self::take_dropped`].
+    dropped: Vec<usize>,
+    /// Total drops over the hook's lifetime (one path step).
+    pub total_dropped: usize,
+}
+
+impl<'a> GapSafeHook<'a> {
+    pub fn new(ctx: &'a ScreenContext<'a>) -> Self {
+        GapSafeHook { ctx, dropped: Vec::new(), total_dropped: 0 }
+    }
+
+    /// Drain the global column indices dropped so far — the driver folds
+    /// them into the step's keep mask after each solve.
+    pub fn take_dropped(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    /// Drain the drops recorded since the last call into the step's keep
+    /// mask, returning how many features were newly discarded. When the
+    /// surrounding pipeline is *heuristic*, pass `revalidate`: certificates
+    /// issued against a possibly-unrepaired reduced problem cannot be
+    /// trusted, so the drops must rejoin the KKT-repair candidate set
+    /// (DESIGN.md §3) — this is the single shared implementation both the
+    /// path driver and the service use.
+    pub fn fold_into(
+        &mut self,
+        keep: &mut [bool],
+        revalidate: Option<&mut Vec<bool>>,
+    ) -> usize {
+        let dropped = self.take_dropped();
+        if let Some(rv) = revalidate {
+            for &j in &dropped {
+                rv[j] = true;
+            }
+        }
+        let mut newly = 0;
+        for j in dropped {
+            if keep[j] {
+                keep[j] = false;
+                newly += 1;
+            }
+        }
+        newly
+    }
+}
+
+/// The full KKT-repair candidate set for a heuristic dynamic pipeline:
+/// the certifier's uncertified discards plus any in-solver hook drops.
+pub fn merge_kkt_candidates(uncertified: &[bool], hook_dropped: &[bool]) -> Vec<bool> {
+    debug_assert_eq!(uncertified.len(), hook_dropped.len());
+    uncertified
+        .iter()
+        .zip(hook_dropped.iter())
+        .map(|(c, h)| *c || *h)
+        .collect()
+}
+
+impl SolverHook for GapSafeHook<'_> {
+    fn refine(
+        &mut self,
+        lam: f64,
+        cols: &[usize],
+        beta: &[f64],
+        r: &[f64],
+        _gap: f64,
+        keep_pos: &mut [bool],
+    ) -> usize {
+        debug_assert_eq!(cols.len(), beta.len());
+        debug_assert_eq!(cols.len(), keep_pos.len());
+        let live: Vec<usize> = (0..cols.len()).filter(|&k| keep_pos[k]).collect();
+        if live.is_empty() {
+            return 0;
+        }
+        let live_cols: Vec<usize> = live.iter().map(|&k| cols[k]).collect();
+        let mut corr = vec![0.0; live_cols.len()];
+        self.ctx.sweep.xt_w_subset(&live_cols, r, &mut corr);
+        let inf = corr.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let s = if inf <= lam || inf == 0.0 { 1.0 / lam } else { 1.0 / inf };
+        // absolute gap for θ = s·r — same algebra as dual::duality_gap but
+        // unscaled, and self-consistent with the θ we screen against
+        let rr = dot(r, r);
+        let ry = dot(r, self.ctx.y);
+        let yy = dot(self.ctx.y, self.ctx.y);
+        let primal = 0.5 * rr + lam * nrm1(beta);
+        let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
+        let dual = 0.5 * yy - 0.5 * lam * lam * dist;
+        let gap_abs = (primal - dual).max(0.0);
+        if !gap_abs.is_finite() {
+            return 0;
+        }
+        let radius = (2.0 * gap_abs).sqrt() / lam;
+        // same slack/boundary discipline as sphere_screen (DESIGN.md §1)
+        let slack = self.ctx.safety_slack * (1.0 + s * rr.sqrt());
+        let mut dropped_now = 0usize;
+        for (i, &k) in live.iter().enumerate() {
+            let sup =
+                (corr[i] * s).abs() + (radius + slack) * self.ctx.col_norms[cols[k]];
+            if sup < 1.0 - 1e-9 * (1.0 + sup.abs()) {
+                keep_pos[k] = false;
+                self.dropped.push(cols[k]);
+                dropped_now += 1;
+            }
+        }
+        self.total_dropped += dropped_now;
+        dropped_now
+    }
+}
+
+/// Parsed pipeline spec: which rules, how composed, dynamic or not.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum PipelineSpec {
+    Single(String),
+    Cascade(Vec<String>),
+    Hybrid { heuristic: String, certifier: String },
+}
+
+/// A validated, buildable screening pipeline — the thing `--rule` parses
+/// into and services/paths carry instead of a bare rule enum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScreenPipeline {
+    spec: PipelineSpec,
+    /// In-solver gap-safe refinement on top of the staged screen.
+    pub dynamic: bool,
+}
+
+impl ScreenPipeline {
+    /// Parse the pipeline grammar:
+    ///
+    /// ```text
+    /// <rule>                 one of RULE_NAMES
+    /// cascade:<r1>,<r2>[,…]  each rule screens the previous one's survivors
+    /// hybrid:<heur>+<safe>   heuristic proposes, safe rule certifies
+    /// dynamic:<pipeline>     in-solver gap-safe refinement (= --dynamic)
+    /// ```
+    pub fn parse(spec: &str) -> Result<ScreenPipeline, String> {
+        let spec = spec.trim();
+        if let Some(rest) = spec.strip_prefix("dynamic:") {
+            let inner = Self::parse(rest)?;
+            if inner.dynamic {
+                return Err(format!(
+                    "duplicate `dynamic:` prefix in `{spec}`\n{}",
+                    Self::grammar()
+                ));
+            }
+            return Ok(inner.with_dynamic(true));
+        }
+        if let Some(rest) = spec.strip_prefix("cascade:") {
+            let names: Vec<String> =
+                rest.split(',').map(|s| s.trim().to_string()).collect();
+            if names.len() < 2 {
+                return Err(format!(
+                    "cascade needs at least two comma-separated rules, got `{rest}`\n{}",
+                    Self::grammar()
+                ));
+            }
+            for n in &names {
+                Self::check_component(n)?;
+            }
+            return Ok(ScreenPipeline {
+                spec: PipelineSpec::Cascade(names),
+                dynamic: false,
+            });
+        }
+        if let Some(rest) = spec.strip_prefix("hybrid:") {
+            let Some((h, c)) = rest.split_once('+') else {
+                return Err(format!(
+                    "hybrid needs `<heuristic>+<safe>`, got `{rest}`\n{}",
+                    Self::grammar()
+                ));
+            };
+            let (h, c) = (h.trim(), c.trim());
+            Self::check_component(h)?;
+            Self::check_component(c)?;
+            if !rule_name_is_safe(c) {
+                return Err(format!(
+                    "hybrid certifier `{c}` is not a safe rule (pick one of: {})\n{}",
+                    SAFE_RULE_NAMES.join(" "),
+                    Self::grammar()
+                ));
+            }
+            return Ok(ScreenPipeline {
+                spec: PipelineSpec::Hybrid {
+                    heuristic: h.to_string(),
+                    certifier: c.to_string(),
+                },
+                dynamic: false,
+            });
+        }
+        if !RULE_NAMES.contains(&spec) {
+            return Err(format!("unknown rule `{spec}`\n{}", Self::grammar()));
+        }
+        Ok(ScreenPipeline {
+            spec: PipelineSpec::Single(spec.to_string()),
+            dynamic: false,
+        })
+    }
+
+    fn check_component(name: &str) -> Result<(), String> {
+        if name == "none" {
+            return Err(format!(
+                "`none` cannot appear inside a composed pipeline\n{}",
+                Self::grammar()
+            ));
+        }
+        if !RULE_NAMES.contains(&name) {
+            return Err(format!(
+                "unknown rule `{name}` in pipeline\n{}",
+                Self::grammar()
+            ));
+        }
+        Ok(())
+    }
+
+    /// The full grammar, for `--rule` error messages and `dpp info`.
+    pub fn grammar() -> String {
+        format!(
+            "screening pipeline grammar:\n  \
+             <rule>                 one of: {}\n  \
+             cascade:<r1>,<r2>[,…]  each rule screens the previous one's survivors\n  \
+             hybrid:<heur>+<safe>   heuristic proposes, safe rule certifies (safe: {})\n  \
+             dynamic:<pipeline>     in-solver gap-safe refinement (or pass --dynamic)",
+            RULE_NAMES.join(" "),
+            SAFE_RULE_NAMES.join(" ")
+        )
+    }
+
+    /// Single-rule pipeline from a known-good name (panics on bad names —
+    /// use [`Self::parse`] for user input).
+    pub fn single(name: &str) -> ScreenPipeline {
+        Self::parse(name).expect("invalid rule name")
+    }
+
+    pub fn with_dynamic(mut self, on: bool) -> ScreenPipeline {
+        self.dynamic = on;
+        self
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        let base = match &self.spec {
+            PipelineSpec::Single(n) => n.clone(),
+            PipelineSpec::Cascade(ns) => format!("cascade:{}", ns.join(",")),
+            PipelineSpec::Hybrid { heuristic, certifier } => {
+                format!("hybrid:{heuristic}+{certifier}")
+            }
+        };
+        if self.dynamic {
+            format!("dynamic:{base}")
+        } else {
+            base
+        }
+    }
+
+    /// Instantiate the screener tree. `sequential = false` pins every
+    /// stage's anchor at λmax (the §4.1.1 "basic" variants).
+    pub fn build(&self, n_rows: usize, sequential: bool) -> Box<dyn Screener> {
+        let leaf = |name: &str| -> Box<dyn Screener> {
+            Box::new(match make_rule(name, n_rows) {
+                Some(r) => RuleScreener::new(r, sequential),
+                None => RuleScreener::none(),
+            })
+        };
+        let base: Box<dyn Screener> = match &self.spec {
+            PipelineSpec::Single(n) => leaf(n),
+            PipelineSpec::Cascade(ns) => Box::new(CascadeScreener::new(
+                ns.iter().map(|n| leaf(n)).collect(),
+            )),
+            PipelineSpec::Hybrid { heuristic, certifier } => {
+                Box::new(HybridScreener::new(leaf(heuristic), leaf(certifier)))
+            }
+        };
+        if self.dynamic {
+            Box::new(GapSafeScreener::new(base))
+        } else {
+            base
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group-Lasso lifecycle (the group path driver drives the same shape).
+// ---------------------------------------------------------------------------
+
+/// Stateful lifecycle for group screening — the group analogue of
+/// [`Screener`] (keep mask is per *group*).
+pub trait GroupScreener {
+    fn name(&self) -> String;
+    fn is_safe(&self) -> bool;
+    fn init(&mut self, ctx: &GroupScreenContext);
+    fn anchor_lam(&self) -> f64;
+    fn screen_step(
+        &mut self,
+        ctx: &GroupScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount>;
+    /// Feed back the exact full-length solution at λ.
+    fn observe(&mut self, ctx: &GroupScreenContext, lam: f64, beta: &[f64]);
+}
+
+/// Adapter driving one stateless [`GroupScreeningRule`] through the
+/// lifecycle, owning the group θ-propagation the driver used to hand-roll.
+pub struct GroupRuleScreener {
+    rule: Option<Box<dyn GroupScreeningRule>>,
+    label: String,
+    lam_prev: f64,
+    theta_prev: Vec<f64>,
+}
+
+impl GroupRuleScreener {
+    pub fn new(rule: Box<dyn GroupScreeningRule>) -> Self {
+        let label = rule.name().to_string();
+        GroupRuleScreener {
+            rule: Some(rule),
+            label,
+            lam_prev: f64::INFINITY,
+            theta_prev: Vec::new(),
+        }
+    }
+
+    pub fn none() -> Self {
+        GroupRuleScreener {
+            rule: None,
+            label: "none".to_string(),
+            lam_prev: f64::INFINITY,
+            theta_prev: Vec::new(),
+        }
+    }
+}
+
+impl GroupScreener for GroupRuleScreener {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn is_safe(&self) -> bool {
+        self.rule.as_ref().map(|r| r.is_safe()).unwrap_or(true)
+    }
+
+    fn init(&mut self, ctx: &GroupScreenContext) {
+        self.lam_prev = ctx.lam_max;
+        self.theta_prev.clear();
+        self.theta_prev.extend(ctx.y.iter().map(|v| v / ctx.lam_max));
+    }
+
+    fn anchor_lam(&self) -> f64 {
+        self.lam_prev
+    }
+
+    fn screen_step(
+        &mut self,
+        ctx: &GroupScreenContext,
+        lam: f64,
+        keep: &mut [bool],
+    ) -> Vec<StageCount> {
+        let Some(rule) = &self.rule else {
+            return vec![StageCount { stage: self.label.clone(), discarded: 0 }];
+        };
+        assert!(!self.theta_prev.is_empty(), "init before screen_step");
+        let before = keep.iter().filter(|k| **k).count();
+        let step = GroupStepInput {
+            lam_prev: self.lam_prev,
+            lam,
+            theta_prev: &self.theta_prev,
+        };
+        rule.screen(ctx, &step, keep);
+        let after = keep.iter().filter(|k| **k).count();
+        vec![StageCount {
+            stage: self.label.clone(),
+            discarded: before.saturating_sub(after),
+        }]
+    }
+
+    fn observe(&mut self, ctx: &GroupScreenContext, lam: f64, beta: &[f64]) {
+        if self.rule.is_none() {
+            return;
+        }
+        assert!(!self.theta_prev.is_empty(), "observe before init");
+        // θ*(λ) = (y − Xβ)/λ — same update the Lasso adapter performs
+        theta_from_solution_into(ctx.x, ctx.y, beta, lam, &mut self.theta_prev);
+        self.lam_prev = lam;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::screening::theta_at_lambda_max;
+    use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
+
+    #[test]
+    fn parser_roundtrips_and_rejects() {
+        for s in [
+            "edpp",
+            "none",
+            "strong",
+            "cascade:sis,edpp",
+            "cascade:strong,dpp,edpp",
+            "hybrid:strong+edpp",
+            "dynamic:edpp",
+            "dynamic:hybrid:strong+edpp",
+        ] {
+            let p = ScreenPipeline::parse(s).expect(s);
+            assert_eq!(p.name(), s, "canonical name mismatch for {s}");
+            // canonical names re-parse to the same pipeline
+            assert_eq!(ScreenPipeline::parse(&p.name()).unwrap(), p);
+        }
+        for bad in [
+            "edppp",
+            "cascade:edpp",
+            "cascade:edpp,nope",
+            "hybrid:strong",
+            "hybrid:strong+sis",   // sis is not a safe certifier
+            "hybrid:edpp+strong",  // strong is not a safe certifier
+            "cascade:none,edpp",
+            "dynamic:dynamic:edpp",
+        ] {
+            let err = ScreenPipeline::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "error for `{bad}` lacks grammar: {err}");
+        }
+    }
+
+    #[test]
+    fn dynamic_flag_and_safety_flags() {
+        let p = ScreenPipeline::parse("hybrid:strong+edpp").unwrap();
+        let s = p.build(50, true);
+        assert!(!s.is_safe());
+        assert!(!s.dynamic());
+        let d = p.clone().with_dynamic(true).build(50, true);
+        assert!(d.dynamic());
+        assert_eq!(d.name(), "dynamic:hybrid:strong+edpp");
+        let safe_hybrid = ScreenPipeline::parse("hybrid:edpp+edpp").unwrap().build(50, true);
+        assert!(safe_hybrid.is_safe(), "hybrid of two safe rules is safe");
+        let casc = ScreenPipeline::parse("cascade:sis,edpp").unwrap().build(50, true);
+        assert!(!casc.is_safe(), "cascade containing sis is heuristic");
+    }
+
+    /// Single-rule screeners reproduce the legacy StepInput-driven calls
+    /// bit-for-bit: same keep mask at the λmax anchor and after observing
+    /// an exact solution.
+    #[test]
+    fn rule_screener_matches_legacy_protocol() {
+        let ds = synthetic::synthetic1(30, 100, 8, 0.1, 0x5C12);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let mut scr = ScreenPipeline::single("edpp").build(30, true);
+        scr.init(&ctx);
+        let lam1 = 0.6 * ctx.lam_max;
+
+        let mut keep_new = vec![true; 100];
+        scr.screen_step(&ctx, lam1, &mut keep_new);
+
+        let theta_max = theta_at_lambda_max(&ctx);
+        let step = StepInput { lam_prev: ctx.lam_max, lam: lam1, theta_prev: &theta_max };
+        let mut keep_old = vec![true; 100];
+        super::super::edpp::EdppRule.screen(&ctx, &step, &mut keep_old);
+        assert_eq!(keep_new, keep_old, "λmax-anchored step diverged");
+
+        // exact solve at lam1, observe, then screen lam2 both ways
+        let cols: Vec<usize> = (0..100).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let beta = CdSolver
+            .solve(&ds.x, &ds.y, &cols, lam1, None, &opts)
+            .scatter(&cols, 100);
+        scr.observe(&ctx, lam1, &beta);
+        assert_eq!(scr.anchor_lam(), lam1);
+        let lam2 = 0.4 * ctx.lam_max;
+        let mut keep_new2 = vec![true; 100];
+        scr.screen_step(&ctx, lam2, &mut keep_new2);
+
+        let theta = crate::screening::theta_from_solution(&ds.x, &ds.y, &beta, lam1);
+        let step2 = StepInput { lam_prev: lam1, lam: lam2, theta_prev: &theta };
+        let mut keep_old2 = vec![true; 100];
+        super::super::edpp::EdppRule.screen(&ctx, &step2, &mut keep_old2);
+        assert_eq!(keep_new2, keep_old2, "sequential step diverged");
+    }
+
+    /// Cascade: stage 1 runs on the pristine mask exactly as it would
+    /// alone; later stages only clear bits; per-stage counts add up.
+    #[test]
+    fn cascade_union_of_discards() {
+        let ds = synthetic::synthetic1(30, 120, 10, 0.1, 0xCA5C);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.5 * ctx.lam_max;
+
+        let mut casc = ScreenPipeline::parse("cascade:dpp,edpp").unwrap().build(30, true);
+        casc.init(&ctx);
+        let mut keep = vec![true; 120];
+        let stats = casc.screen_step(&ctx, lam, &mut keep);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].stage, "dpp");
+        assert_eq!(stats[1].stage, "edpp");
+        let total_discards = keep.iter().filter(|k| !**k).count();
+        assert_eq!(stats[0].discarded + stats[1].discarded, total_discards);
+
+        // stage 1 alone (pristine mask ⇒ identical call)
+        let mut solo = ScreenPipeline::single("dpp").build(30, true);
+        solo.init(&ctx);
+        let mut keep_solo = vec![true; 120];
+        solo.screen_step(&ctx, lam, &mut keep_solo);
+        for j in 0..120 {
+            if !keep_solo[j] {
+                assert!(!keep[j], "cascade resurrected stage-1 discard {j}");
+            }
+        }
+        // edpp dominates dpp ⇒ the cascade should discard strictly more on
+        // this well-separated problem
+        assert!(total_discards >= keep_solo.iter().filter(|k| !**k).count());
+    }
+
+    /// Hybrid: keep ⊆ certifier keep; uncertified = heuristic-only
+    /// discards; hybrid of a safe rule with itself has no uncertified
+    /// discards and equals the rule's own keep-set.
+    #[test]
+    fn hybrid_certification_masks() {
+        let ds = synthetic::synthetic1(40, 150, 12, 0.1, 0x4B1D);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.55 * ctx.lam_max;
+
+        let mut hyb =
+            ScreenPipeline::parse("hybrid:strong+edpp").unwrap().build(40, true);
+        hyb.init(&ctx);
+        let mut keep = vec![true; 150];
+        hyb.screen_step(&ctx, lam, &mut keep);
+
+        let mut cert = ScreenPipeline::single("edpp").build(40, true);
+        cert.init(&ctx);
+        let mut keep_cert = vec![true; 150];
+        cert.screen_step(&ctx, lam, &mut keep_cert);
+
+        let unc = hyb.uncertified().expect("heuristic hybrid has candidates");
+        for j in 0..150 {
+            if keep[j] {
+                assert!(keep_cert[j], "hybrid kept a feature edpp discarded: {j}");
+                assert!(!unc[j], "kept feature marked uncertified: {j}");
+            }
+            if !keep_cert[j] {
+                assert!(!unc[j], "certified discard marked uncertified: {j}");
+            }
+            assert_eq!(unc[j], keep_cert[j] && !keep[j]);
+        }
+
+        let mut selfhyb =
+            ScreenPipeline::parse("hybrid:edpp+edpp").unwrap().build(40, true);
+        selfhyb.init(&ctx);
+        let mut keep_self = vec![true; 150];
+        selfhyb.screen_step(&ctx, lam, &mut keep_self);
+        assert!(selfhyb.uncertified().is_none(), "safe hybrid needs no repair");
+        for j in 0..150 {
+            if !keep_cert[j] {
+                assert!(!keep_self[j], "self-hybrid kept an edpp discard: {j}");
+            }
+        }
+    }
+
+    /// The gap-safe hook only drops features that are exactly zero in the
+    /// high-precision reference solution, and CD with the hook reaches the
+    /// same solution as without.
+    #[test]
+    fn gap_safe_hook_drops_only_true_zeros() {
+        let ds = synthetic::synthetic1(30, 100, 8, 0.1, 0x6A95);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.3 * ctx.lam_max;
+        let cols: Vec<usize> = (0..100).collect();
+        let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
+
+        let reference = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts);
+        let ref_full = reference.scatter(&cols, 100);
+
+        let mut hook = GapSafeHook::new(&ctx);
+        let hooked = CdSolver.solve_with_hook(
+            &ds.x,
+            &ds.y,
+            &cols,
+            lam,
+            None,
+            &opts,
+            Some(&mut hook),
+        );
+        let hooked_full = hooked.scatter(&cols, 100);
+        for j in hook.take_dropped() {
+            assert_eq!(ref_full[j], 0.0, "hook dropped active feature {j}");
+        }
+        for j in 0..100 {
+            assert!(
+                (hooked_full[j] - ref_full[j]).abs() < 1e-4 * (1.0 + ref_full[j].abs()),
+                "dynamic solve diverged at {j}"
+            );
+        }
+        // on a gap-converged solve the sphere should have certified a
+        // meaningful share of the inactive features
+        assert!(hook.total_dropped > 0, "hook never dropped anything");
+    }
+}

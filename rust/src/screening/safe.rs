@@ -9,11 +9,21 @@
 //! gives `‖θ*(λ) − y/λ‖ ≤ ‖θ*(λ₀) − y/λ‖`, i.e. the ball
 //! `B(y/λ, ‖y/λ − θ*(λ₀)‖)`; at λ₀ = λmax this reduces exactly to ST1.
 
-use super::{sphere_screen, ScreenContext, ScreeningRule, StepInput};
+use super::{sphere_screen, sphere_screen_masked, ScreenContext, ScreeningRule, StepInput};
 use crate::linalg::dist_sq_scaled;
 
 /// Recursive SAFE (sequential); reduces to SAFE/ST1 when λ₀ = λmax.
 pub struct SafeRule;
+
+impl SafeRule {
+    fn ball(ctx: &ScreenContext, step: &StepInput) -> (Vec<f64>, f64) {
+        let n = ctx.y.len();
+        let center: Vec<f64> = (0..n).map(|i| ctx.y[i] / step.lam).collect();
+        // ‖y/λ − θ*(λ₀)‖
+        let radius = dist_sq_scaled(ctx.y, 1.0 / step.lam, step.theta_prev).sqrt();
+        (center, radius)
+    }
+}
 
 impl ScreeningRule for SafeRule {
     fn name(&self) -> &'static str {
@@ -25,11 +35,13 @@ impl ScreeningRule for SafeRule {
     }
 
     fn screen(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
-        let n = ctx.y.len();
-        let center: Vec<f64> = (0..n).map(|i| ctx.y[i] / step.lam).collect();
-        // ‖y/λ − θ*(λ₀)‖
-        let radius = dist_sq_scaled(ctx.y, 1.0 / step.lam, step.theta_prev).sqrt();
+        let (center, radius) = Self::ball(ctx, step);
         sphere_screen(ctx, &center, radius, keep);
+    }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let (center, radius) = Self::ball(ctx, step);
+        sphere_screen_masked(ctx, &center, radius, keep);
     }
 }
 

@@ -3,7 +3,7 @@
 //! The paper's intro cites SIS as the canonical *heuristic* marginal-
 //! correlation screen: keep the d features with the largest |xᵢᵀy|,
 //! irrespective of λ. Not safe and not λ-adaptive; included as the ablation
-//! baseline (DESIGN.md §4) and paired with KKT repair when used on a path.
+//! baseline (DESIGN.md §5) and paired with KKT repair when used on a path.
 
 use super::{ScreenContext, ScreeningRule, StepInput};
 
@@ -40,6 +40,20 @@ impl ScreeningRule for SisRule {
         keep.iter_mut().for_each(|k| *k = false);
         for &j in idx.iter().take(d) {
             keep[j] = true;
+        }
+    }
+
+    fn screen_masked(&self, ctx: &ScreenContext, _step: &StepInput, keep: &mut [bool]) {
+        // among the surviving features, keep the top-d by |xᵢᵀy| — no sweep
+        // at all (xty is precomputed), so SIS is the natural cheap first
+        // stage of a cascade
+        let mut idx: Vec<usize> = (0..ctx.p()).filter(|&j| keep[j]).collect();
+        let d = self.keep_count.min(idx.len());
+        idx.sort_by(|&a, &b| {
+            ctx.xty[b].abs().partial_cmp(&ctx.xty[a].abs()).unwrap()
+        });
+        for &j in idx.iter().skip(d) {
+            keep[j] = false;
         }
     }
 }

@@ -37,6 +37,20 @@ impl ScreeningRule for StrongRule {
             keep[j] = (corr[j] * step.lam_prev).abs() >= thr;
         }
     }
+
+    fn screen_masked(&self, ctx: &ScreenContext, step: &StepInput, keep: &mut [bool]) {
+        let thr = 2.0 * step.lam - step.lam_prev;
+        if thr <= 0.0 {
+            // vacuous: clears nothing (masked contract — never set bits)
+            return;
+        }
+        let cols: Vec<usize> = (0..ctx.p()).filter(|&j| keep[j]).collect();
+        let mut corr = vec![0.0; cols.len()];
+        ctx.sweep.xt_w_subset(&cols, step.theta_prev, &mut corr);
+        for (k, &j) in cols.iter().enumerate() {
+            keep[j] = (corr[k] * step.lam_prev).abs() >= thr;
+        }
+    }
 }
 
 /// KKT verification for heuristic rules: given the residual `r = y − Xβ` of
@@ -54,6 +68,36 @@ pub fn kkt_violations(
     // small relative slack so solver tolerance doesn't trigger spurious adds
     let tol = lam * (1.0 + 1e-7);
     (0..p).filter(|&j| !keep[j] && corr[j].abs() > tol).collect()
+}
+
+/// Like [`kkt_violations`] but restricted to `candidates` — the hybrid
+/// pipeline's *uncertified* discards. Sweeps only the candidate columns
+/// (one `xt_w_subset` over the residual set) instead of all p, which is the
+/// point of safe certification: the repair check shrinks with the
+/// certifier's coverage.
+pub fn kkt_violations_in(
+    ctx: &ScreenContext,
+    r: &[f64],
+    lam: f64,
+    keep: &[bool],
+    candidates: &[bool],
+) -> Vec<usize> {
+    let p = ctx.p();
+    debug_assert_eq!(candidates.len(), p);
+    let cand: Vec<usize> = (0..p).filter(|&j| !keep[j] && candidates[j]).collect();
+    if cand.is_empty() {
+        return Vec::new();
+    }
+    let mut corr = vec![0.0; cand.len()];
+    ctx.sweep.xt_w_subset(&cand, r, &mut corr);
+    let tol = lam * (1.0 + 1e-7);
+    let mut viol = Vec::new();
+    for (k, &j) in cand.iter().enumerate() {
+        if corr[k].abs() > tol {
+            viol.push(j);
+        }
+    }
+    viol
 }
 
 #[cfg(test)]

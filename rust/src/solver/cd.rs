@@ -12,20 +12,23 @@
 //! over the surviving columns costs O(Σ nnz(xⱼ)) — the sparse solver the
 //! old `sparse_cd_solve` provided is now just this solver on a `CscMatrix`.
 
-use super::{dual, LassoSolver, SolveOptions, SolveResult};
+use super::{dual, LassoSolver, SolveOptions, SolveResult, SolverHook};
 use crate::linalg::{ops::soft_threshold, DesignMatrix};
 
 /// Cyclic CD with active-set outer loop and duality-gap stopping.
 pub struct CdSolver;
 
 impl CdSolver {
-    /// One coordinate sweep over `work` (indices into `cols`). Returns the
+    /// One coordinate sweep over `work` (indices into `cols`), skipping
+    /// positions the dynamic hook has dropped (`alive` is all-true when no
+    /// hook runs, so the un-hooked trajectory is untouched). Returns the
     /// largest |Δβⱼ|·‖xⱼ‖ seen (a scale-aware progress measure).
     #[allow(clippy::too_many_arguments)]
     fn sweep(
         x: &dyn DesignMatrix,
         cols: &[usize],
         work: &[usize],
+        alive: &[bool],
         sq_norms: &[f64],
         lam: f64,
         beta: &mut [f64],
@@ -33,6 +36,9 @@ impl CdSolver {
     ) -> f64 {
         let mut max_delta = 0.0f64;
         for &k in work {
+            if !alive[k] {
+                continue;
+            }
             let sq = sq_norms[k];
             if sq == 0.0 {
                 continue;
@@ -49,10 +55,12 @@ impl CdSolver {
         }
         max_delta
     }
-}
 
-impl LassoSolver for CdSolver {
-    fn solve(
+    /// Shared body of `solve` / `solve_with_hook`. With `hook = None` the
+    /// `alive` mask stays all-true and the floating-point sequence is
+    /// identical to the pre-hook solver (backend_parity pins this).
+    #[allow(clippy::too_many_arguments)]
+    fn solve_impl(
         &self,
         x: &dyn DesignMatrix,
         y: &[f64],
@@ -60,6 +68,7 @@ impl LassoSolver for CdSolver {
         lam: f64,
         beta0: Option<&[f64]>,
         opts: &SolveOptions,
+        mut hook: Option<&mut dyn SolverHook>,
     ) -> SolveResult {
         let m = cols.len();
         let mut beta = match beta0 {
@@ -79,12 +88,30 @@ impl LassoSolver for CdSolver {
         let sq_norms: Vec<f64> = cols.iter().map(|&j| x.col_sq_norm(j)).collect();
         let all: Vec<usize> = (0..m).collect();
         let y_scale = crate::linalg::nrm2(y).max(1.0);
+        // gap-safe drop mask (hook runs only): dropped coordinates are
+        // certified zero at the optimum — zero them, restore the residual,
+        // and skip them in every later sweep
+        let mut alive = vec![true; m];
+        let mut refine = |gap: f64, alive: &mut [bool], beta: &mut [f64], r: &mut [f64]| {
+            let Some(h) = hook.as_deref_mut() else { return };
+            if h.refine(lam, cols, beta, r, gap, alive) == 0 {
+                return;
+            }
+            for k in 0..m {
+                // newly dropped: cleared but still carrying a coefficient
+                if !alive[k] && beta[k] != 0.0 {
+                    x.col_axpy_into(cols[k], beta[k], r);
+                    beta[k] = 0.0;
+                }
+            }
+        };
 
         let mut gap = f64::INFINITY;
         let mut epoch = 0;
         while epoch < opts.max_iters {
             // full verification sweep
-            let delta_full = Self::sweep(x, cols, &all, &sq_norms, lam, &mut beta, &mut r);
+            let delta_full =
+                Self::sweep(x, cols, &all, &alive, &sq_norms, lam, &mut beta, &mut r);
             epoch += 1;
             // inner active-set sweeps — cheap, over the support only
             let support: Vec<usize> = (0..m).filter(|&k| beta[k] != 0.0).collect();
@@ -93,8 +120,9 @@ impl LassoSolver for CdSolver {
                     if epoch >= opts.max_iters {
                         break;
                     }
-                    let d =
-                        Self::sweep(x, cols, &support, &sq_norms, lam, &mut beta, &mut r);
+                    let d = Self::sweep(
+                        x, cols, &support, &alive, &sq_norms, lam, &mut beta, &mut r,
+                    );
                     epoch += 1;
                     if d <= 1e-12 * y_scale {
                         break;
@@ -107,17 +135,46 @@ impl LassoSolver for CdSolver {
                 if gap <= opts.tol_gap {
                     break;
                 }
+                refine(gap, &mut alive, &mut beta, &mut r);
             } else if epoch % opts.gap_check_every == 0 {
                 gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
                 if gap <= opts.tol_gap {
                     break;
                 }
+                refine(gap, &mut alive, &mut beta, &mut r);
             }
         }
         if gap.is_infinite() {
             gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
         }
         SolveResult { beta, iters: epoch, gap }
+    }
+}
+
+impl LassoSolver for CdSolver {
+    fn solve(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_impl(x, y, cols, lam, beta0, opts, None)
+    }
+
+    fn solve_with_hook(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        hook: Option<&mut dyn SolverHook>,
+    ) -> SolveResult {
+        self.solve_impl(x, y, cols, lam, beta0, opts, hook)
     }
 
     fn name(&self) -> &'static str {

@@ -5,11 +5,123 @@
 //! exists both as a cross-check and because its epoch structure (two dense
 //! matvecs) is what the L2 JAX `fista_epoch` artifact mirrors.
 
-use super::{dual, LassoSolver, SolveOptions, SolveResult};
+use super::{dual, LassoSolver, SolveOptions, SolveResult, SolverHook};
 use crate::linalg::{axpy, ops::soft_threshold, DesignMatrix};
 
 /// FISTA with constant step 1/L and duality-gap stopping.
 pub struct FistaSolver;
+
+impl FistaSolver {
+    /// Shared body of `solve` / `solve_with_hook`. The dynamic hook runs at
+    /// gap checks; dropped coordinates are *compacted out* of the live
+    /// problem (the two dense matvecs per iteration shrink with them) and
+    /// momentum restarts (t = 1), which keeps the constant-step analysis
+    /// valid — `lip` over the original column set upper-bounds every
+    /// subset. With `hook = None` the live set never changes and the
+    /// iterate sequence is identical to the pre-hook solver.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_impl(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        mut hook: Option<&mut dyn SolverHook>,
+    ) -> SolveResult {
+        let m = cols.len();
+        if m == 0 {
+            return SolveResult { beta: vec![], iters: 0, gap: 0.0 };
+        }
+        let lip = x.op_norm_sq_subset(cols, 30, 0xF157A).max(1e-12) * 1.01;
+        let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; m]);
+        // live problem: positions into the ORIGINAL `cols` (identity until
+        // the hook drops something)
+        let mut pos: Vec<usize> = (0..m).collect();
+        let mut cur_cols: Vec<usize> = cols.to_vec();
+        let mut w = beta.clone(); // extrapolated point
+        let mut t = 1.0f64;
+        let mut xw = vec![0.0; x.n_rows()]; // X·w
+        let mut grad = vec![0.0; m];
+        let mut r = vec![0.0; x.n_rows()];
+        let mut gap = f64::INFINITY;
+        let mut iters = 0;
+
+        while iters < opts.max_iters {
+            let ml = cur_cols.len();
+            // ∇f(w) = Xᵀ(Xw − y)
+            xw.fill(0.0);
+            x.accum_cols(&cur_cols, &w, &mut xw);
+            for i in 0..xw.len() {
+                r[i] = xw[i] - y[i];
+            }
+            x.xt_w_subset(&cur_cols, &r, &mut grad[..ml]);
+            let beta_prev = beta.clone();
+            for k in 0..ml {
+                beta[k] = soft_threshold(w[k] - grad[k] / lip, lam / lip);
+            }
+            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+            let mom = (t - 1.0) / t_next;
+            for k in 0..ml {
+                w[k] = beta[k] + mom * (beta[k] - beta_prev[k]);
+            }
+            t = t_next;
+            iters += 1;
+
+            if iters % opts.gap_check_every == 0 {
+                // residual at β (not w)
+                xw.fill(0.0);
+                x.accum_cols(&cur_cols, &beta, &mut xw);
+                for i in 0..r.len() {
+                    r[i] = y[i] - xw[i];
+                }
+                gap = dual::duality_gap(x, y, &cur_cols, &beta, &r, lam);
+                if gap <= opts.tol_gap {
+                    break;
+                }
+                if let Some(h) = hook.as_deref_mut() {
+                    let mut keep_pos = vec![true; ml];
+                    if h.refine(lam, &cur_cols, &beta, &r, gap, &mut keep_pos) > 0 {
+                        // compact the live problem; momentum restarts
+                        let mut np = Vec::with_capacity(ml);
+                        let mut nc = Vec::with_capacity(ml);
+                        let mut nb = Vec::with_capacity(ml);
+                        for k in 0..ml {
+                            if keep_pos[k] {
+                                np.push(pos[k]);
+                                nc.push(cur_cols[k]);
+                                nb.push(beta[k]);
+                            }
+                        }
+                        pos = np;
+                        cur_cols = nc;
+                        beta = nb;
+                        w = beta.clone();
+                        t = 1.0;
+                    }
+                }
+            }
+        }
+        if gap.is_infinite() {
+            xw.fill(0.0);
+            x.accum_cols(&cur_cols, &beta, &mut xw);
+            let mut rr = y.to_vec();
+            axpy(-1.0, &xw, &mut rr);
+            gap = dual::duality_gap(x, y, &cur_cols, &beta, &rr, lam);
+        }
+        // scatter the live coefficients back to the original alignment
+        if pos.len() == m {
+            SolveResult { beta, iters, gap }
+        } else {
+            let mut full = vec![0.0; m];
+            for (i, &k) in pos.iter().enumerate() {
+                full[k] = beta[i];
+            }
+            SolveResult { beta: full, iters, gap }
+        }
+    }
+}
 
 impl LassoSolver for FistaSolver {
     fn solve(
@@ -21,61 +133,20 @@ impl LassoSolver for FistaSolver {
         beta0: Option<&[f64]>,
         opts: &SolveOptions,
     ) -> SolveResult {
-        let m = cols.len();
-        if m == 0 {
-            return SolveResult { beta: vec![], iters: 0, gap: 0.0 };
-        }
-        let lip = x.op_norm_sq_subset(cols, 30, 0xF157A).max(1e-12) * 1.01;
-        let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; m]);
-        let mut w = beta.clone(); // extrapolated point
-        let mut t = 1.0f64;
-        let mut xw = vec![0.0; x.n_rows()]; // X·w
-        let mut grad = vec![0.0; m];
-        let mut r = vec![0.0; x.n_rows()];
-        let mut gap = f64::INFINITY;
-        let mut iters = 0;
+        self.solve_impl(x, y, cols, lam, beta0, opts, None)
+    }
 
-        while iters < opts.max_iters {
-            // ∇f(w) = Xᵀ(Xw − y)
-            xw.fill(0.0);
-            x.accum_cols(cols, &w, &mut xw);
-            for i in 0..xw.len() {
-                r[i] = xw[i] - y[i];
-            }
-            x.xt_w_subset(cols, &r, &mut grad);
-            let beta_prev = beta.clone();
-            for k in 0..m {
-                beta[k] = soft_threshold(w[k] - grad[k] / lip, lam / lip);
-            }
-            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
-            let mom = (t - 1.0) / t_next;
-            for k in 0..m {
-                w[k] = beta[k] + mom * (beta[k] - beta_prev[k]);
-            }
-            t = t_next;
-            iters += 1;
-
-            if iters % opts.gap_check_every == 0 {
-                // residual at β (not w)
-                xw.fill(0.0);
-                x.accum_cols(cols, &beta, &mut xw);
-                for i in 0..r.len() {
-                    r[i] = y[i] - xw[i];
-                }
-                gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
-                if gap <= opts.tol_gap {
-                    break;
-                }
-            }
-        }
-        if gap.is_infinite() {
-            xw.fill(0.0);
-            x.accum_cols(cols, &beta, &mut xw);
-            let mut rr = y.to_vec();
-            axpy(-1.0, &xw, &mut rr);
-            gap = dual::duality_gap(x, y, cols, &beta, &rr, lam);
-        }
-        SolveResult { beta, iters, gap }
+    fn solve_with_hook(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        hook: Option<&mut dyn SolverHook>,
+    ) -> SolveResult {
+        self.solve_impl(x, y, cols, lam, beta0, opts, hook)
     }
 
     fn name(&self) -> &'static str {

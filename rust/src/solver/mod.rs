@@ -64,6 +64,28 @@ impl SolveResult {
     }
 }
 
+/// In-solver dynamic-screening hook (gap-safe screening): the solver calls
+/// it at its duality-gap checks with the current reduced-problem state.
+///
+/// `keep_pos` is aligned with `cols`; entries already false were dropped at
+/// an earlier check and must be skipped. The hook may only *clear* entries
+/// — each cleared position must be certified zero in the exact solution
+/// (the solver then zeroes the coefficient and restores the residual, so
+/// the final answer is unchanged). `beta` and `r = y − X[:,cols]·β`
+/// describe the current iterate; `gap` is the solver's latest *relative*
+/// duality gap. Returns the number of newly cleared positions.
+pub trait SolverHook {
+    fn refine(
+        &mut self,
+        lam: f64,
+        cols: &[usize],
+        beta: &[f64],
+        r: &[f64],
+        gap: f64,
+        keep_pos: &mut [bool],
+    ) -> usize;
+}
+
 /// A Lasso solver over a column-subset problem
 /// `min ½‖y − X[:,cols]·β‖² + λ‖β‖₁`, generic over the matrix backend.
 pub trait LassoSolver {
@@ -78,6 +100,27 @@ pub trait LassoSolver {
         beta0: Option<&[f64]>,
         opts: &SolveOptions,
     ) -> SolveResult;
+
+    /// Like [`LassoSolver::solve`] but with an optional in-iteration
+    /// dynamic-screening hook. Coordinates the hook certifies are dropped
+    /// mid-solve (their epochs are no longer paid) and come back as exact
+    /// zeros in the returned `beta`, still aligned with `cols`. With
+    /// `hook = None` this is *identical* to [`LassoSolver::solve`] — same
+    /// floating-point sequence, same iterate trajectory. Default
+    /// implementation ignores the hook (LARS has no gap-checked iterates).
+    fn solve_with_hook(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        hook: Option<&mut dyn SolverHook>,
+    ) -> SolveResult {
+        let _ = hook;
+        self.solve(x, y, cols, lam, beta0, opts)
+    }
 
     fn name(&self) -> &'static str;
 }

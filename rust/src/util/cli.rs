@@ -1,4 +1,4 @@
-//! Minimal CLI argument parser (clap is not available offline — DESIGN.md §3).
+//! Minimal CLI argument parser (clap is not available offline — DESIGN.md §4).
 //!
 //! Grammar: `dpp <subcommand> [--key value]... [--flag]... [positional]...`
 

@@ -467,6 +467,63 @@ fn service_on_sharded_matches_service_on_csc() {
     svc_s.shutdown();
 }
 
+/// Single-rule pipelines are bit-identical to the `RuleKind` entry point:
+/// the stateful `Screener` lifecycle must thread exactly the same θ*(λ₀)
+/// the legacy driver hand-threaded — keep-sets, CD trajectories and full
+/// EDPP paths equal bits, on CSC and on the sharded backend.
+#[test]
+fn single_rule_pipeline_bit_identical_to_rulekind_paths() {
+    use dpp_screen::path::{solve_path_pipeline, solve_path_with_screener};
+    use dpp_screen::screening::ScreenPipeline;
+
+    let ds = sparse_problem(36, 160, 0.2, 26);
+    let csc = ds.x.to_csc();
+    let grid = LambdaGrid::relative(&csc, &ds.y, 10, 0.05, 1.0);
+    let cfg = PathConfig::default();
+
+    for rule in [RuleKind::Edpp, RuleKind::Strong, RuleKind::Dpp] {
+        let legacy = solve_path(&csc, &ds.y, &grid, rule, SolverKind::Cd, &cfg);
+        let pipe = ScreenPipeline::single(rule.name());
+        let piped = solve_path_pipeline(&csc, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+        let ctx = ScreenContext::new(&csc, &ds.y);
+        let mut screener = pipe.build(csc.n_rows(), cfg.sequential);
+        let manual =
+            solve_path_with_screener(&ctx, &grid, screener.as_mut(), SolverKind::Cd, &cfg);
+        assert_eq!(legacy.rule, piped.rule);
+        for (k, ((bl, bp), bm)) in legacy
+            .betas
+            .iter()
+            .zip(piped.betas.iter())
+            .zip(manual.betas.iter())
+            .enumerate()
+        {
+            assert_eq!(bl, bp, "{}: rulekind vs pipeline β at λ-index {k}", rule.name());
+            assert_eq!(bp, bm, "{}: pipeline vs screener β at λ-index {k}", rule.name());
+        }
+        for ((rl, rp), rm) in legacy
+            .records
+            .iter()
+            .zip(piped.records.iter())
+            .zip(manual.records.iter())
+        {
+            assert_eq!(rl.kept, rp.kept, "{} kept", rule.name());
+            assert_eq!(rl.discarded, rp.discarded, "{} discarded", rule.name());
+            assert_eq!(rl.solver_iters, rp.solver_iters, "{} iters", rule.name());
+            assert_eq!(rp.kept, rm.kept);
+            assert_eq!(rp.solver_iters, rm.solver_iters);
+        }
+    }
+
+    // and on the sharded backend: pipeline == rulekind, still bit-identical
+    let sh = ShardSetMatrix::split_csc(&csc, 3).with_pool(Arc::new(WorkerPool::new(2)));
+    let pipe = ScreenPipeline::single("edpp");
+    let a = solve_path(&sh, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let b = solve_path_pipeline(&sh, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    for (k, (ba, bb)) in a.betas.iter().zip(b.betas.iter()).enumerate() {
+        assert_eq!(ba, bb, "sharded β diverged at λ-index {k}");
+    }
+}
+
 #[test]
 fn group_path_runs_on_csc() {
     use dpp_screen::path::group::{solve_group_path, GroupRuleKind};

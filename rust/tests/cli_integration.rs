@@ -277,6 +277,10 @@ fn bench_screen_emits_json_baseline() {
     assert!(text.contains("\"backend\": \"sharded\""), "{text}");
     assert!(text.contains("\"rejection_ratio\""), "{text}");
     assert!(text.contains("\"threads\": 2"), "{text}");
+    // pipeline rows with per-stage rejection ratios ride along
+    assert!(text.contains("\"rule\": \"hybrid:strong+edpp\""), "{text}");
+    assert!(text.contains("\"rule\": \"dynamic:edpp\""), "{text}");
+    assert!(text.contains("\"stages\""), "{text}");
 }
 
 #[test]
@@ -285,6 +289,86 @@ fn bad_rule_or_dataset_fail_cleanly() {
     assert!(!out.status.success());
     let out = dpp().args(["exp", "figZZ"]).output().unwrap();
     assert!(!out.status.success());
+}
+
+#[test]
+fn bad_pipeline_fails_with_grammar() {
+    for bad in ["cascade:edpp", "hybrid:strong+sis", "edppp"] {
+        let out = dpp()
+            .args(["path", "--dataset", "synthetic1", "--grid", "3", "--rule", bad])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "--rule {bad} should fail");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("grammar"), "--rule {bad}: {stderr}");
+        assert!(stderr.contains("cascade:"), "--rule {bad} error must enumerate forms");
+    }
+}
+
+#[test]
+fn hybrid_dynamic_pipeline_path_end_to_end() {
+    let out = dpp()
+        .args([
+            "path",
+            "--dataset",
+            "synthetic1",
+            "--grid",
+            "6",
+            "--seed",
+            "7",
+            "--rule",
+            "hybrid:strong+edpp",
+            "--dynamic",
+        ])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rule=dynamic:hybrid:strong+edpp"), "{text}");
+    assert!(text.contains("mean rejection ratio"), "{text}");
+    assert!(text.contains("per-stage rejection"), "{text}");
+}
+
+#[test]
+fn cascade_pipeline_path_runs() {
+    let out = dpp()
+        .args([
+            "path",
+            "--dataset",
+            "synthetic1",
+            "--grid",
+            "5",
+            "--seed",
+            "11",
+            "--rule",
+            "cascade:sis,edpp",
+        ])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rule=cascade:sis,edpp"), "{text}");
+    assert!(text.contains("mean rejection ratio"), "{text}");
+}
+
+#[test]
+fn pipeline_service_runs() {
+    let out = dpp()
+        .args([
+            "service",
+            "--requests",
+            "4",
+            "--dataset",
+            "synthetic1",
+            "--rule",
+            "dynamic:hybrid:strong+edpp",
+        ])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pipeline: dynamic:hybrid:strong+edpp"), "{text}");
+    assert!(text.contains("metrics:"), "{text}");
 }
 
 #[test]

@@ -1,12 +1,15 @@
 //! Cross-module property suite: the paper's correctness claims, checked on
-//! randomized problems across every rule × dataset family (DESIGN.md §6).
+//! randomized problems across every rule × dataset family (DESIGN.md §7),
+//! plus the composed-pipeline safety invariants (DESIGN.md §3).
 
 use dpp_screen::data::{synthetic, RealDataset};
-use dpp_screen::path::{solve_path, LambdaGrid, PathConfig, RuleKind, SolverKind};
+use dpp_screen::path::{
+    solve_path, solve_path_pipeline, LambdaGrid, PathConfig, RuleKind, SolverKind,
+};
 use dpp_screen::screening::{
     dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
     edpp::Improvement2Rule, safe::SafeRule, theta_from_solution, ScreenContext,
-    ScreeningRule, StepInput,
+    ScreenPipeline, ScreeningRule, StepInput,
 };
 use dpp_screen::solver::{cd::CdSolver, dual, LassoSolver, SolveOptions};
 use dpp_screen::util::prop;
@@ -160,6 +163,134 @@ fn rejection_dominance_along_paths() {
     assert!(i2 >= dpp - 1e-9, "imp2 {i2} < dpp {dpp}");
     assert!(edpp >= i1 - 1e-9, "edpp {edpp} < imp1 {i1}");
     assert!(edpp >= i2 - 1e-9, "edpp {edpp} < imp2 {i2}");
+}
+
+/// Pipeline safety invariant: a composed *safe* pipeline's discard set is
+/// the union of its stages' discards — per-stage counts add up to the
+/// step's discards — and never contains an active feature of the exact
+/// solution.
+#[test]
+fn composed_safe_pipeline_discards_union_and_never_active() {
+    prop::check("cascade of safe rules stays safe", 0xCA5CAD, 6, |rng| {
+        let n = 20 + rng.usize(20);
+        let p = 40 + rng.usize(80);
+        let ds = synthetic::synthetic1(n, p, p / 6 + 1, 0.1, rng.next_u64());
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = rng.uniform(0.15, 0.85) * ctx.lam_max;
+
+        let pipe = ScreenPipeline::parse("cascade:dpp,improvement2,edpp").unwrap();
+        let mut scr = pipe.build(n, true);
+        scr.init(&ctx);
+        assert!(scr.is_safe(), "cascade of safe rules must be safe");
+        let mut keep = vec![true; p];
+        let stages = scr.screen_step(&ctx, lam, &mut keep);
+        assert_eq!(stages.len(), 3);
+        let staged: usize = stages.iter().map(|s| s.discarded).sum();
+        let discarded = keep.iter().filter(|k| !**k).count();
+        assert_eq!(staged, discarded, "stage counts must sum to the union");
+
+        // no active feature of the exact solution is discarded
+        let cols: Vec<usize> = (0..p).collect();
+        let opts = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let exact = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, p);
+        for j in 0..p {
+            if !keep[j] {
+                assert_eq!(exact[j], 0.0, "cascade discarded active feature {j}");
+            }
+        }
+    });
+}
+
+/// Hybrid invariants along full paths: with a *safe* rule as its own
+/// certifier (`hybrid:edpp+edpp`) the pipeline is safe, triggers zero KKT
+/// repairs, and its keep-set is exactly the safe rule's; with a heuristic
+/// proposer (`hybrid:strong+edpp`) the repaired path reproduces the
+/// reference solutions and its final mask still discards everything the
+/// certifier discards.
+#[test]
+fn hybrid_pipeline_certification_invariants() {
+    let ds = synthetic::synthetic1(35, 140, 12, 0.1, 0x4B2D);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 8, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let edpp = solve_path(&ds.x, &ds.y, &grid, RuleKind::Edpp, SolverKind::Cd, &cfg);
+    let reference = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+
+    // safe certifier certifying itself: exactly the safe rule's screen
+    let self_pipe = ScreenPipeline::parse("hybrid:edpp+edpp").unwrap();
+    let selfhyb = solve_path_pipeline(&ds.x, &ds.y, &grid, &self_pipe, SolverKind::Cd, &cfg);
+    assert_eq!(selfhyb.total_kkt_repairs(), 0, "safe hybrid must not repair");
+    for (h, e) in selfhyb.records.iter().zip(edpp.records.iter()) {
+        assert_eq!(h.discarded, e.discarded, "λ={}: self-hybrid ≠ edpp keep-set", h.lam);
+    }
+    for (bh, be) in selfhyb.betas.iter().zip(edpp.betas.iter()) {
+        assert_eq!(bh, be, "self-hybrid trajectory diverged from edpp");
+    }
+
+    // heuristic proposer: exact after repair, mask dominates the certifier
+    let pipe = ScreenPipeline::parse("hybrid:strong+edpp").unwrap();
+    let hyb = solve_path_pipeline(&ds.x, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    for (k, (bh, br)) in hyb.betas.iter().zip(reference.betas.iter()).enumerate() {
+        for j in 0..ds.p() {
+            assert!(
+                (bh[j] - br[j]).abs() < 2e-4 * (1.0 + br[j].abs()),
+                "hybrid diverged at λ-index {k}, feature {j}"
+            );
+        }
+    }
+    for (h, e) in hyb.records.iter().zip(edpp.records.iter()) {
+        assert!(
+            h.discarded >= e.discarded,
+            "λ={}: hybrid discarded {} < certifier {}",
+            h.lam,
+            h.discarded,
+            e.discarded
+        );
+    }
+}
+
+/// Dynamic (gap-safe) refinement is safe end to end: the dynamic pipeline
+/// reproduces the reference solutions and every record stays within the
+/// safe rejection bound.
+#[test]
+fn dynamic_pipeline_safe_along_paths() {
+    let ds = synthetic::synthetic2(30, 120, 10, 0.1, 0xD12A);
+    let grid = LambdaGrid::relative(&ds.x, &ds.y, 8, 0.05, 1.0);
+    let cfg = PathConfig::default();
+    let reference = solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+    // dynamic:hybrid is the delicate combination: in-solver drops issued
+    // against a possibly-unrepaired heuristic reduced problem must be
+    // re-validated by the KKT check, so the path stays exact
+    let hybrid_dyn = ScreenPipeline::parse("dynamic:hybrid:strong+edpp").unwrap();
+    let hd = solve_path_pipeline(&ds.x, &ds.y, &grid, &hybrid_dyn, SolverKind::Cd, &cfg);
+    for (k, (bd, br)) in hd.betas.iter().zip(reference.betas.iter()).enumerate() {
+        for j in 0..ds.p() {
+            assert!(
+                (bd[j] - br[j]).abs() < 2e-3 * (1.0 + br[j].abs()),
+                "dynamic:hybrid diverged at λ-index {k}, feature {j}"
+            );
+        }
+    }
+    for solver in [SolverKind::Cd, SolverKind::Fista] {
+        let pipe = ScreenPipeline::parse("dynamic:edpp").unwrap();
+        let dynp = solve_path_pipeline(&ds.x, &ds.y, &grid, &pipe, solver, &cfg);
+        for (k, (bd, br)) in dynp.betas.iter().zip(reference.betas.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (bd[j] - br[j]).abs() < 2e-3 * (1.0 + br[j].abs()),
+                    "{}: dynamic diverged at λ-index {k}, feature {j}",
+                    solver.name()
+                );
+            }
+        }
+        for r in &dynp.records {
+            assert!(
+                r.rejection_ratio() <= 1.0 + 1e-12,
+                "{}: unsafe dynamic discard at λ={}",
+                solver.name(),
+                r.lam
+            );
+        }
+    }
 }
 
 /// Failure injection: feed the path driver a grid that dips below and then
