@@ -1,16 +1,19 @@
-//! The L3 coordinator as a deployable service: a screening/solve server
-//! owning one dataset, batching concurrent λ-requests (descending-λ within
-//! a batch so every request reuses the tightest sequential anchor), with
-//! latency/throughput metrics — the model-selection-server shape described
-//! in DESIGN.md §4.
+//! The L3 coordinator as a deployable service, in two acts: the classic
+//! single-session `ScreeningService` (batched concurrent λ-requests,
+//! descending-λ within a batch so every request reuses the tightest
+//! sequential anchor), then the multi-tenant serving protocol — one
+//! `Coordinator`, three sessions, a deadline-bounded request answered with
+//! a gap-tagged partial response (DESIGN.md §4).
 //!
 //!     cargo run --release --example screening_service
 
 use std::time::Instant;
 
 use dpp_screen::coordinator::service::ScreeningService;
+use dpp_screen::coordinator::{Coordinator, Request, RequestOptions, SessionSpec};
 use dpp_screen::data::RealDataset;
 use dpp_screen::path::{PathConfig, RuleKind, SolverKind};
+use dpp_screen::screening::ScreenPipeline;
 use dpp_screen::solver::dual::lambda_max;
 
 fn main() {
@@ -63,4 +66,64 @@ fn main() {
 
     let metrics = svc.shutdown();
     println!("service metrics: {}", metrics.summary());
+
+    // Part 2: the same shape, multi-tenant (DESIGN.md §4) — one coordinator
+    // serving three datasets concurrently on the shared worker pool, with a
+    // deadline-bounded request answered by a gap-tagged partial response.
+    let coord = Coordinator::new();
+    let mut lam_maxes = Vec::new();
+    for (i, seed) in [3u64, 5, 8].into_iter().enumerate() {
+        let ds = dpp_screen::data::synthetic::synthetic1(60, 400 + 100 * i, 20, 0.1, seed);
+        lam_maxes.push(lambda_max(&ds.x, &ds.y));
+        coord
+            .register(SessionSpec::new(
+                format!("tenant-{i}"),
+                ds.x.clone(),
+                ds.y.clone(),
+                ScreenPipeline::auto(ds.n(), ds.p(), 0.1, 8),
+                SolverKind::Cd,
+                PathConfig::default(),
+            ))
+            .expect("register session");
+    }
+    let t2 = Instant::now();
+    let slots: Vec<_> = (0..9)
+        .map(|k| {
+            let i = k % 3;
+            let lam = (0.9 - 0.1 * (k / 3) as f64) * lam_maxes[i];
+            coord.submit(
+                &format!("tenant-{i}"),
+                Request::Screen { lam, opts: RequestOptions::default() },
+            )
+        })
+        .collect();
+    for slot in slots {
+        slot.recv().expect("session answered");
+    }
+    println!(
+        "multi-tenant: 9 requests across 3 sessions in {:.1}ms",
+        t2.elapsed().as_secs_f64() * 1e3
+    );
+    // a 1ms deadline on a tight-tolerance solve → partial, gap-tagged
+    let partial = coord
+        .submit(
+            "tenant-0",
+            Request::Screen {
+                lam: 0.1 * lam_maxes[0],
+                opts: RequestOptions {
+                    deadline: Some(std::time::Duration::from_millis(1)),
+                    tol_gap: Some(1e-14),
+                    ..Default::default()
+                },
+            },
+        )
+        .recv()
+        .expect("deadline request answered");
+    println!(
+        "deadline request: partial={} achieved gap={:.2e}",
+        partial.partial, partial.gap
+    );
+    for (name, m) in coord.shutdown() {
+        println!("{name}: {}", m.summary());
+    }
 }

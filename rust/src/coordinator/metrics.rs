@@ -1,8 +1,14 @@
-//! Service metrics: request latency, batch sizes, screening effectiveness.
+//! Service metrics: request latency, batch sizes, screening effectiveness,
+//! deadline outcomes.
 
-use crate::util::stats::OnlineStats;
+use crate::util::stats::{quantile, OnlineStats};
 
-/// Aggregated metrics for the screening service.
+/// Latency samples kept for percentile reporting (`dpp bench-serve`,
+/// [`ServiceMetrics::latency_quantile`]). Beyond the cap only the streaming
+/// moments keep updating — serving benchmarks stay allocation-bounded.
+const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Aggregated metrics for one screening session.
 #[derive(Debug, Default, Clone)]
 pub struct ServiceMetrics {
     pub requests: u64,
@@ -11,6 +17,11 @@ pub struct ServiceMetrics {
     pub batch_size: OnlineStats,
     pub rejection_ratio: OnlineStats,
     pub kept_features: OnlineStats,
+    /// Deadline-bounded requests answered with a partial (gap-tagged)
+    /// result instead of an exact solution.
+    pub partials: u64,
+    /// First [`LATENCY_SAMPLE_CAP`] request latencies, for percentiles.
+    latency_samples: Vec<f64>,
 }
 
 impl ServiceMetrics {
@@ -21,6 +32,9 @@ impl ServiceMetrics {
     pub fn record_request(&mut self, latency_s: f64) {
         self.requests += 1;
         self.latency.push(latency_s);
+        if self.latency_samples.len() < LATENCY_SAMPLE_CAP {
+            self.latency_samples.push(latency_s);
+        }
     }
 
     pub fn record_batch(&mut self, size: usize) {
@@ -38,14 +52,27 @@ impl ServiceMetrics {
         self.rejection_ratio.push(ratio);
     }
 
+    /// A deadline stopped a solve early (the response was gap-tagged).
+    pub fn record_partial(&mut self) {
+        self.partials += 1;
+    }
+
+    /// q-th latency quantile (seconds) over the retained samples, q ∈ [0,1].
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        quantile(&self.latency_samples, q)
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.1} p50_latency≈{:.2}ms mean_rejection={:.3} mean_kept={:.0}",
+            "requests={} batches={} mean_batch={:.1} p50_latency≈{:.2}ms p95≈{:.2}ms \
+             partials={} mean_rejection={:.3} mean_kept={:.0}",
             self.requests,
             self.batches,
             self.batch_size.mean(),
-            self.latency.mean() * 1e3,
+            self.latency_quantile(0.5) * 1e3,
+            self.latency_quantile(0.95) * 1e3,
+            self.partials,
             self.rejection_ratio.mean(),
             self.kept_features.mean(),
         )
@@ -75,5 +102,19 @@ mod tests {
         let mut m = ServiceMetrics::new();
         m.record_screen(5, 0, 0);
         assert_eq!(m.rejection_ratio.mean(), 1.0);
+    }
+
+    #[test]
+    fn latency_quantiles_and_partials() {
+        let mut m = ServiceMetrics::new();
+        for i in 1..=100 {
+            m.record_request(i as f64 * 1e-3);
+        }
+        m.record_partial();
+        assert_eq!(m.partials, 1);
+        let p50 = m.latency_quantile(0.5);
+        assert!((p50 - 0.0505).abs() < 1e-9, "p50 = {p50}");
+        assert!(m.latency_quantile(0.99) > p50);
+        assert!(m.summary().contains("partials=1"));
     }
 }

@@ -1,15 +1,37 @@
 //! L3 coordinator: the system layer that turns the path driver into a
-//! deployable service.
+//! deployable multi-tenant serving system (DESIGN.md §4).
 //!
-//! The paper's protocol averages 100 trials per dataset and sweeps many
-//! (rule × dataset × λ-grid) combinations; [`TrialScheduler`] fans trials
+//! Layer map:
+//!
+//! * [`protocol`] — the typed [`Request`]/[`Response`] grammar (Screen,
+//!   FitPath, Predict, Warm, SessionStats) with per-request options
+//!   (deadline, pipeline override, solver tolerance) and typed
+//!   [`RequestError`]s;
+//! * [`registry`] — [`SessionRegistry`]: one coordinator owns many named
+//!   sessions, each with its own backend, screening pipeline, sequential
+//!   anchor and warm-start cache;
+//! * [`service`] — the [`Coordinator`] router (per-session batches executed
+//!   concurrently on the shared [`crate::runtime::pool`], single-owner
+//!   state per session) and the legacy single-session
+//!   [`service::ScreeningService`] facade;
+//! * [`metrics`] — per-session latency/batching/rejection/partial metrics.
+//!
+//! The paper's protocol also averages 100 trials per dataset and sweeps
+//! many (rule × dataset × λ-grid) combinations; [`run_trials`] fans trials
 //! out over worker threads (std::thread + mpsc — tokio is not available in
-//! the offline image, DESIGN.md §4). [`service::ScreeningService`] exposes
-//! screening as a request/response loop with λ-descending batching, the
-//! shape a model-selection server would deploy.
+//! the offline image, DESIGN.md §5).
 
 pub mod metrics;
+pub mod protocol;
+pub mod registry;
 pub mod service;
+
+pub use protocol::{
+    PathSummary, Prediction, Request, RequestError, RequestOptions, Response,
+    ScreenResponse, SessionStats, WarmResponse,
+};
+pub use registry::{SessionRegistry, SessionSpec};
+pub use service::{Coordinator, PendingResponse, ScreeningService, SERVICE_SESSION};
 
 use std::sync::mpsc;
 use std::thread;

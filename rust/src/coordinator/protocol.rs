@@ -1,0 +1,256 @@
+//! The typed multi-tenant serving protocol (DESIGN.md §4): every question a
+//! client can ask a session, every answer a session can give, and the typed
+//! errors that replace the old loop's panics.
+//!
+//! The request grammar mirrors what large-scale model selection actually
+//! needs from DPP/EDPP screening (many λ-evaluations against many
+//! datasets): [`Request::Screen`] is the paper's workload, [`Request::Warm`]
+//! pre-tightens a session's sequential anchor, [`Request::Predict`] serves
+//! ŷ = xᵀβ*(λ) for a fresh sample, [`Request::FitPath`] runs a whole λ-grid,
+//! and [`Request::SessionStats`] snapshots the session. Per-request
+//! [`RequestOptions`] carry a deadline (gap-safe partial answers instead of
+//! blocking — Fercoq et al. 2015 give solves an *anytime* character), a
+//! pipeline override, and a solver-tolerance override.
+//!
+//! Validation discipline: anything that used to poison the worker thread —
+//! a NaN λ in the batch sort, a mismatched predict vector — is rejected at
+//! the API boundary (or inside the session) with a typed
+//! [`RequestError`], never a panic.
+
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use super::metrics::ServiceMetrics;
+use crate::screening::{ScreenPipeline, StageCount};
+
+/// Per-request knobs. `Default` is "no deadline, session defaults" — the
+/// exact behavior of the pre-protocol service.
+#[derive(Clone, Debug, Default)]
+pub struct RequestOptions {
+    /// Wall-clock deadline measured from submission. The queue wait counts:
+    /// the remaining budget when the solve starts is
+    /// `deadline − time_in_queue`. A solve that exhausts it returns a
+    /// *partial* response tagged with the achieved duality gap.
+    pub deadline: Option<Duration>,
+    /// Override the session's duality-gap tolerance for this request.
+    pub tol_gap: Option<f64>,
+    /// Screen through this pipeline instead of the session's. Overrides
+    /// anchor at λmax (a throwaway pipeline has no sequential history);
+    /// the session's own anchor still advances on the exact solution.
+    pub pipeline: Option<ScreenPipeline>,
+}
+
+impl RequestOptions {
+    /// Convenience: only a deadline.
+    pub fn with_deadline(deadline: Duration) -> RequestOptions {
+        RequestOptions { deadline: Some(deadline), ..Default::default() }
+    }
+}
+
+/// One question for one session.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Screen + solve at one λ — the paper's workload.
+    Screen { lam: f64, opts: RequestOptions },
+    /// Solve a full λ-grid path (`grid` points on λ/λmax ∈ [lo, 1]) on the
+    /// session's dataset. Independent of the session's sequential state; a
+    /// deadline's remaining budget is split evenly across the grid's
+    /// solves, so the whole fit stays request-deadline-bounded.
+    FitPath { grid: usize, lo: f64, opts: RequestOptions },
+    /// ŷ = featuresᵀ·β*(λ) for one fresh sample (features has length p).
+    Predict { features: Vec<f64>, lam: f64, opts: RequestOptions },
+    /// Pre-solve at λ to tighten the session's sequential anchor and warm
+    /// cache without shipping β back.
+    Warm { lam: f64 },
+    /// Snapshot the session: shape, pipeline, anchor, metrics.
+    SessionStats,
+}
+
+impl Request {
+    /// The λ this request targets, if any — validated at the API boundary
+    /// (a NaN λ used to panic the worker's batch sort).
+    pub fn lam(&self) -> Option<f64> {
+        match self {
+            Request::Screen { lam, .. }
+            | Request::Predict { lam, .. }
+            | Request::Warm { lam } => Some(*lam),
+            Request::FitPath { .. } | Request::SessionStats => None,
+        }
+    }
+
+    /// Batch-ordering key: λ-carrying requests sort descending (larger λ
+    /// solved first tightens θ for the rest — §4.1.1); path fits and stats
+    /// run after, in arrival order (the sort is stable).
+    pub(crate) fn sort_lam(&self) -> f64 {
+        self.lam().unwrap_or(f64::NEG_INFINITY)
+    }
+}
+
+/// Response to a [`Request::Screen`]: the surviving features and the
+/// solution at λ. `gap`/`partial` tag deadline-bounded answers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScreenResponse {
+    pub lam: f64,
+    pub kept: Vec<usize>,
+    pub beta: Vec<f64>,
+    pub discarded: usize,
+    pub true_zeros: usize,
+    pub latency_s: f64,
+    /// Per-pipeline-stage discard counts in stage order.
+    pub stage_discards: Vec<StageCount>,
+    /// Features additionally discarded in-solver by the gap-safe hook.
+    pub dynamic_discards: usize,
+    /// Final duality gap of the solve backing this response.
+    pub gap: f64,
+    /// True when a deadline stopped the solve before gap ≤ tol: `beta` is
+    /// the best gap-certified iterate, not the exact solution, and the
+    /// session's sequential anchor was *not* advanced with it.
+    pub partial: bool,
+}
+
+/// Summary of a [`Request::FitPath`] run.
+#[derive(Clone, Debug)]
+pub struct PathSummary {
+    pub rule: String,
+    pub solver: &'static str,
+    pub steps: usize,
+    pub mean_rejection: f64,
+    pub screen_secs: f64,
+    pub solve_secs: f64,
+    /// Worst per-step duality gap along the path.
+    pub max_gap: f64,
+    /// True when the request carried a deadline and at least one step
+    /// finished above tolerance (its per-step budget slice cut it short) —
+    /// the path's solutions are not all exact, mirroring
+    /// [`ScreenResponse::partial`].
+    pub partial: bool,
+    pub latency_s: f64,
+}
+
+/// Answer to a [`Request::Predict`].
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub lam: f64,
+    pub yhat: f64,
+    pub gap: f64,
+    pub partial: bool,
+    pub latency_s: f64,
+}
+
+/// Answer to a [`Request::Warm`].
+#[derive(Clone, Debug)]
+pub struct WarmResponse {
+    pub lam: f64,
+    pub gap: f64,
+    pub latency_s: f64,
+}
+
+/// Answer to a [`Request::SessionStats`].
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    pub session: String,
+    /// Backend label supplied at registration (`csc`, `sharded`, …).
+    pub backend: String,
+    pub pipeline: String,
+    pub n: usize,
+    pub p: usize,
+    pub lam_max: f64,
+    /// λ₀ of the session's current sequential anchor.
+    pub anchor_lam: f64,
+    pub metrics: ServiceMetrics,
+}
+
+/// One answer. Every variant corresponds to exactly one [`Request`] form,
+/// plus [`Response::Error`] for typed failures.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Screen(ScreenResponse),
+    Path(PathSummary),
+    Predict(Prediction),
+    Warmed(WarmResponse),
+    Stats(SessionStats),
+    Error(RequestError),
+}
+
+/// Typed request failures — the protocol replaces the old loop's panics
+/// (`partial_cmp(..).unwrap()` on NaN λ, `expect("service dropped")` on a
+/// dead worker) with these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestError {
+    /// λ must be finite and ≥ 0 (a NaN λ used to poison the batch sort).
+    InvalidLambda(f64),
+    /// No session registered under this name.
+    UnknownSession(String),
+    /// A session with this name already exists.
+    DuplicateSession(String),
+    /// The session's worker panicked; `reason` is the panic payload. All
+    /// later requests to the session get the same answer.
+    SessionClosed { session: String, reason: String },
+    /// Malformed request (mismatched predict vector, empty grid, …) or a
+    /// session spec the registry rejected.
+    InvalidRequest(String),
+    /// The coordinator router is gone (shutdown or crashed).
+    Disconnected(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::InvalidLambda(lam) => {
+                write!(f, "invalid λ = {lam} (must be finite and ≥ 0)")
+            }
+            RequestError::UnknownSession(s) => write!(f, "unknown session `{s}`"),
+            RequestError::DuplicateSession(s) => {
+                write!(f, "session `{s}` already registered")
+            }
+            RequestError::SessionClosed { session, reason } => {
+                write!(f, "session `{session}` closed: {reason}")
+            }
+            RequestError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            RequestError::Disconnected(msg) => {
+                write!(f, "coordinator disconnected: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// A submitted request waiting in a session's queue: what was asked, where
+/// the answer goes, and when it entered the system (deadlines and latency
+/// are measured from `t0`).
+pub(crate) struct PendingRequest {
+    pub request: Request,
+    pub reply: Sender<Response>,
+    pub t0: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_keys_put_stats_and_paths_last() {
+        let screen = Request::Screen { lam: 0.5, opts: RequestOptions::default() };
+        let warm = Request::Warm { lam: 0.9 };
+        let stats = Request::SessionStats;
+        let path =
+            Request::FitPath { grid: 5, lo: 0.1, opts: RequestOptions::default() };
+        assert!(warm.sort_lam() > screen.sort_lam());
+        assert_eq!(stats.sort_lam(), f64::NEG_INFINITY);
+        assert_eq!(path.sort_lam(), f64::NEG_INFINITY);
+        assert_eq!(screen.lam(), Some(0.5));
+        assert_eq!(stats.lam(), None);
+    }
+
+    #[test]
+    fn errors_display_their_context() {
+        let e = RequestError::SessionClosed {
+            session: "s1".to_string(),
+            reason: "boom".to_string(),
+        };
+        let text = e.to_string();
+        assert!(text.contains("s1") && text.contains("boom"));
+        assert!(RequestError::InvalidLambda(f64::NAN).to_string().contains("NaN"));
+    }
+}

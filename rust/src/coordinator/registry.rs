@@ -1,0 +1,680 @@
+//! Session registry: one [`super::Coordinator`] owns many named sessions,
+//! each a self-contained serving unit — its own boxed
+//! [`DesignMatrix`] backend, screening pipeline, sequential anchor and
+//! warm-start cache (DESIGN.md §4).
+//!
+//! Single-owner discipline: a session's state is only ever touched by the
+//! one pool job processing that session's batch (the router creates at most
+//! one job per session per tick), so the sequential θ*(λ₀) propagation and
+//! warm starts evolve exactly as in the old single-session worker thread —
+//! per-session responses are **bit-identical** to an isolated
+//! [`super::service::ScreeningService`] replaying the same requests
+//! (pinned in `tests/serve_protocol.rs`).
+//!
+//! Failure discipline: a panic while processing one request marks the
+//! session dead with the panic payload as the reason; the remaining batch
+//! and every later request get a typed
+//! [`RequestError::SessionClosed`] instead of a hung channel.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::metrics::ServiceMetrics;
+use super::protocol::{
+    PathSummary, PendingRequest, Prediction, Request, RequestError, RequestOptions,
+    Response, ScreenResponse, SessionStats, WarmResponse,
+};
+use crate::linalg::DesignMatrix;
+use crate::path::{solve_path_pipeline, LambdaGrid, PathConfig, SolverKind};
+use crate::runtime::pool::panic_message;
+use crate::screening::{
+    pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
+    ContextStats, GapSafeHook, ScreenContext, ScreenPipeline, Screener,
+};
+use crate::solver::LassoSolver;
+
+/// Everything needed to open a session: the dataset, how to screen it, how
+/// to solve it.
+pub struct SessionSpec {
+    pub name: String,
+    pub x: Box<dyn DesignMatrix + Send>,
+    pub y: Vec<f64>,
+    /// Human-readable backend label for stats/logs (`csc`, `sharded`, …).
+    pub backend: String,
+    pub pipeline: ScreenPipeline,
+    pub solver: SolverKind,
+    pub cfg: PathConfig,
+}
+
+impl SessionSpec {
+    /// Spec over any owned backend. The pipeline accepts whatever
+    /// [`crate::coordinator::service::ScreeningService::spawn`] accepts —
+    /// a bare [`crate::path::RuleKind`] converts implicitly.
+    pub fn new<M: DesignMatrix + Send + 'static>(
+        name: impl Into<String>,
+        x: M,
+        y: Vec<f64>,
+        pipeline: impl Into<ScreenPipeline>,
+        solver: SolverKind,
+        cfg: PathConfig,
+    ) -> SessionSpec {
+        Self::boxed(name, Box::new(x), y, pipeline, solver, cfg)
+    }
+
+    /// Spec from an already-boxed backend (the CLI picks the backend at
+    /// runtime and hands the box over).
+    pub fn boxed(
+        name: impl Into<String>,
+        x: Box<dyn DesignMatrix + Send>,
+        y: Vec<f64>,
+        pipeline: impl Into<ScreenPipeline>,
+        solver: SolverKind,
+        cfg: PathConfig,
+    ) -> SessionSpec {
+        SessionSpec {
+            name: name.into(),
+            x,
+            y,
+            backend: "unspecified".to_string(),
+            pipeline: pipeline.into(),
+            solver,
+            cfg,
+        }
+    }
+
+    /// Attach a backend label (shows up in [`SessionStats`]).
+    pub fn with_backend_label(mut self, label: impl Into<String>) -> SessionSpec {
+        self.backend = label.into();
+        self
+    }
+}
+
+/// Live state of one session. Field layout mirrors the old single-session
+/// worker's stack frame; `ContextStats` replaces the worker's one-shot
+/// `ScreenContext` so a borrowing context can be rebuilt per batch without
+/// re-paying the O(nnz) sweeps.
+pub(crate) struct SessionState {
+    name: String,
+    backend: String,
+    x: Box<dyn DesignMatrix + Send>,
+    y: Vec<f64>,
+    pipeline: ScreenPipeline,
+    solver: SolverKind,
+    cfg: PathConfig,
+    stats: ContextStats,
+    /// The session's long-lived pipeline; its anchor is the exact solution
+    /// at the smallest λ solved so far.
+    screener: Box<dyn Screener>,
+    /// Deepest λ with an exact solution (warm-start tracker; stays monotone
+    /// even for pipelines whose anchor never advances).
+    lam_state: f64,
+    /// Full-length solution at `lam_state`.
+    beta_state: Vec<f64>,
+    pub(crate) metrics: ServiceMetrics,
+    /// Panic reason once a request poisoned the session.
+    dead: Option<String>,
+}
+
+impl SessionState {
+    fn new(spec: SessionSpec) -> Result<SessionState, RequestError> {
+        let SessionSpec { name, x, y, backend, pipeline, solver, cfg } = spec;
+        if y.len() != x.n_rows() {
+            return Err(RequestError::InvalidRequest(format!(
+                "session `{name}`: y has {} entries, matrix has {} rows",
+                y.len(),
+                x.n_rows()
+            )));
+        }
+        if y.iter().any(|v| !v.is_finite()) {
+            return Err(RequestError::InvalidRequest(format!(
+                "session `{name}`: y contains a non-finite entry"
+            )));
+        }
+        let x_dyn: &dyn DesignMatrix = &*x;
+        let stats = ContextStats::compute(x_dyn, &y);
+        let mut screener = pipeline.build(x.n_rows(), cfg.sequential);
+        {
+            let ctx = stats.context(x_dyn, &y, cfg.safety_slack);
+            screener.init(&ctx);
+        }
+        let p = x.n_cols();
+        let lam_state = stats.lam_max;
+        Ok(SessionState {
+            name,
+            backend,
+            x,
+            y,
+            pipeline,
+            solver,
+            cfg,
+            stats,
+            screener,
+            lam_state,
+            beta_state: vec![0.0; p],
+            metrics: ServiceMetrics::new(),
+            dead: None,
+        })
+    }
+
+    /// Process one tick's batch for this session: λ-descending order for
+    /// the λ-carrying requests (the old service's batching trick — larger λ
+    /// solved first tightens θ for the rest), stats/paths after, in arrival
+    /// order. The borrowing [`ScreenContext`] is rebuilt once per *batch*
+    /// (its two O(p) statistic copies amortize over the batch), and a panic
+    /// in one request poisons the session, not the process.
+    pub(crate) fn process_batch(&mut self, mut batch: Vec<PendingRequest>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.metrics.record_batch(batch.len());
+        // total_cmp never panics; NaN λ is rejected at the API boundary and
+        // cannot reach this sort (the old loop's partial_cmp().unwrap() bug)
+        batch.sort_by(|a, b| b.request.sort_lam().total_cmp(&a.request.sort_lam()));
+        // split-borrow the session: the context borrows x/y, everything
+        // mutable travels in the core
+        let SessionState {
+            name,
+            backend,
+            x,
+            y,
+            pipeline,
+            solver,
+            cfg,
+            stats,
+            screener,
+            lam_state,
+            beta_state,
+            metrics,
+            dead,
+        } = self;
+        let x: &dyn DesignMatrix = &**x;
+        let ctx = stats.context(x, y, cfg.safety_slack);
+        let mut core = SessionCore {
+            name: name.as_str(),
+            backend: backend.as_str(),
+            ctx,
+            pipeline,
+            solver: *solver,
+            cfg,
+            screener,
+            lam_state,
+            beta_state,
+            metrics,
+        };
+        for PendingRequest { request, reply, t0 } in batch {
+            let resp = if let Some(reason) = dead.clone() {
+                Response::Error(RequestError::SessionClosed {
+                    session: name.clone(),
+                    reason,
+                })
+            } else {
+                match catch_unwind(AssertUnwindSafe(|| core.process_one(request, t0))) {
+                    Ok(resp) => resp,
+                    Err(payload) => {
+                        let reason = panic_message(payload);
+                        *dead = Some(reason.clone());
+                        Response::Error(RequestError::SessionClosed {
+                            session: name.clone(),
+                            reason,
+                        })
+                    }
+                }
+            };
+            let _ = reply.send(resp);
+        }
+    }
+}
+
+/// Split-borrowed view of one session while a batch is being processed:
+/// the per-batch context plus the mutable serving state. Exists so the
+/// context's O(p) statistic copies are paid once per batch, not once per
+/// request, while the borrow checker still sees disjoint fields.
+struct SessionCore<'s> {
+    name: &'s str,
+    backend: &'s str,
+    ctx: ScreenContext<'s>,
+    pipeline: &'s ScreenPipeline,
+    solver: SolverKind,
+    cfg: &'s PathConfig,
+    screener: &'s mut Box<dyn Screener>,
+    lam_state: &'s mut f64,
+    beta_state: &'s mut Vec<f64>,
+    metrics: &'s mut ServiceMetrics,
+}
+
+impl SessionCore<'_> {
+    fn process_one(&mut self, request: Request, t0: Instant) -> Response {
+        match request {
+            Request::Screen { lam, opts } => match self.solve_at(lam, &opts, t0) {
+                Ok(resp) => Response::Screen(resp),
+                Err(e) => Response::Error(e),
+            },
+            Request::Warm { lam } => {
+                match self.solve_at(lam, &RequestOptions::default(), t0) {
+                    Ok(resp) => Response::Warmed(WarmResponse {
+                        lam: resp.lam,
+                        gap: resp.gap,
+                        latency_s: resp.latency_s,
+                    }),
+                    Err(e) => Response::Error(e),
+                }
+            }
+            Request::Predict { features, lam, opts } => {
+                let p = self.ctx.x.n_cols();
+                if features.len() != p {
+                    return Response::Error(RequestError::InvalidRequest(format!(
+                        "predict features have length {}, matrix has {p} columns",
+                        features.len()
+                    )));
+                }
+                if features.iter().any(|v| !v.is_finite()) {
+                    return Response::Error(RequestError::InvalidRequest(
+                        "predict features contain a non-finite entry".to_string(),
+                    ));
+                }
+                match self.solve_at(lam, &opts, t0) {
+                    Ok(resp) => {
+                        let yhat = features
+                            .iter()
+                            .zip(resp.beta.iter())
+                            .map(|(f, b)| f * b)
+                            .sum();
+                        Response::Predict(Prediction {
+                            lam: resp.lam,
+                            yhat,
+                            gap: resp.gap,
+                            partial: resp.partial,
+                            latency_s: t0.elapsed().as_secs_f64(),
+                        })
+                    }
+                    Err(e) => Response::Error(e),
+                }
+            }
+            Request::FitPath { grid, lo, opts } => self.fit_path(grid, lo, &opts, t0),
+            Request::SessionStats => Response::Stats(self.stats_snapshot()),
+        }
+    }
+
+    /// Screen + solve at one λ — the old worker loop's per-request body,
+    /// extended with per-request tolerance/pipeline overrides and deadline
+    /// semantics. Requests without options follow the exact pre-protocol
+    /// code path (bit-identity contract).
+    fn solve_at(
+        &mut self,
+        lam: f64,
+        opts: &RequestOptions,
+        t0: Instant,
+    ) -> Result<ScreenResponse, RequestError> {
+        // belt and braces: the coordinator validates at the boundary, but
+        // the registry can also be driven directly
+        if !lam.is_finite() || lam < 0.0 {
+            return Err(RequestError::InvalidLambda(lam));
+        }
+        let SessionCore {
+            ctx,
+            pipeline,
+            solver,
+            cfg,
+            screener,
+            lam_state,
+            beta_state,
+            metrics,
+            ..
+        } = self;
+        let ctx: &ScreenContext = ctx;
+        let pipeline: &ScreenPipeline = pipeline;
+        let cfg: &PathConfig = cfg;
+        let solver: SolverKind = *solver;
+        let screener: &mut Box<dyn Screener> = screener;
+        let lam_state: &mut f64 = lam_state;
+        let beta_state: &mut Vec<f64> = beta_state;
+        let metrics: &mut ServiceMetrics = metrics;
+        let x = ctx.x;
+        let y = ctx.y;
+        let p = x.n_cols();
+        let lam = lam.min(ctx.lam_max);
+
+        // per-request overrides
+        let mut solve_opts = cfg.solve_opts.clone();
+        if let Some(tol) = opts.tol_gap {
+            solve_opts.tol_gap = tol;
+        }
+        let deadline_expired = |t0: Instant| opts.deadline.is_some_and(|d| t0.elapsed() >= d);
+
+        let mut keep = vec![true; p];
+        // screen from the best available anchor: the session pipeline if its
+        // λ₀ ≥ lam and no override, else a throwaway λmax-anchored pipeline
+        // (a sequential rule must never anchor below its target λ)
+        let mut fresh;
+        let scr: &mut dyn Screener = match &opts.pipeline {
+            Some(over) => {
+                fresh = over.build(x.n_rows(), cfg.sequential);
+                fresh.init(ctx);
+                fresh.as_mut()
+            }
+            None if screener.anchor_lam() >= lam => screener.as_mut(),
+            None => {
+                fresh = pipeline.build(x.n_rows(), cfg.sequential);
+                fresh.init(ctx);
+                fresh.as_mut()
+            }
+        };
+        let stage_discards = scr.screen_step(ctx, lam, &mut keep);
+        let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+        let is_safe = scr.is_safe();
+        let lasso = solver.make();
+        let mut hook = if scr.dynamic() { Some(GapSafeHook::new(ctx)) } else { None };
+        let mut dynamic_discards = 0usize;
+        // heuristic pipeline: hook drops certified against a possibly-
+        // unrepaired reduced problem must be re-validated by the KKT check
+        let mut hook_dropped: Vec<bool> =
+            if hook.is_some() && !is_safe { vec![false; p] } else { Vec::new() };
+        // set when the deadline cuts the KKT repair loop short: some
+        // heuristic discards may be unverified, so the answer is partial
+        // even if the last reduced solve converged
+        let mut repair_truncated = false;
+        let res = loop {
+            // re-derive the remaining budget each round: KKT-repair
+            // re-solves share the request's one deadline instead of each
+            // restarting a fresh full budget
+            if let Some(d) = opts.deadline {
+                solve_opts.time_budget = Some(d.saturating_sub(t0.elapsed()));
+            }
+            let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
+            let r = match hook.as_mut() {
+                Some(h) => lasso.solve_with_hook(
+                    x,
+                    y,
+                    &cols,
+                    lam,
+                    Some(&warm),
+                    &solve_opts,
+                    Some(h),
+                ),
+                None => lasso.solve(x, y, &cols, lam, Some(&warm), &solve_opts),
+            };
+            if let Some(h) = hook.as_mut() {
+                let revalidate = if is_safe { None } else { Some(&mut hook_dropped) };
+                dynamic_discards += h.fold_into(&mut keep, revalidate);
+            }
+            if is_safe || !cfg.kkt_repair {
+                break r;
+            }
+            if deadline_expired(t0) {
+                // no budget left to verify/repair the heuristic discards —
+                // hand back the gap-tagged iterate instead of blocking
+                repair_truncated = true;
+                break r;
+            }
+            let full = r.scatter(&cols, p);
+            let mut resid = y.to_vec();
+            for (j, b) in full.iter().enumerate() {
+                if *b != 0.0 {
+                    x.col_axpy_into(j, -b, &mut resid);
+                }
+            }
+            // only the pipeline's *uncertified* discards (plus any in-solver
+            // hook drops) need the KKT check (hybrid certification,
+            // DESIGN.md §3)
+            let viol = match scr.uncertified() {
+                Some(cand) if !hook_dropped.is_empty() => {
+                    let merged = merge_kkt_candidates(cand, &hook_dropped);
+                    kkt_violations_in(ctx, &resid, lam, &keep, &merged)
+                }
+                Some(cand) => kkt_violations_in(ctx, &resid, lam, &keep, cand),
+                None => kkt_violations(ctx, &resid, lam, &keep),
+            };
+            if viol.is_empty() {
+                break r;
+            }
+            for j in viol {
+                keep[j] = true;
+            }
+            cols = (0..p).filter(|&j| keep[j]).collect();
+        };
+        let beta = res.scatter(&cols, p);
+        let gap = res.gap;
+        // partial means the *deadline* cut the work short — a solver that
+        // merely hit max_iters without converging (clock never tripped) is
+        // not the deadline's doing and stays untagged, deadline or not
+        let partial = (repair_truncated || gap > solve_opts.tol_gap) && deadline_expired(t0);
+        let true_zeros = beta.iter().filter(|b| **b == 0.0).count();
+        let kept_cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
+        let discarded = p - kept_cols.len();
+        // advance the sequential pipeline only with a solution we can trust
+        // as exact: deepest λ so far, never a deadline-partial iterate,
+        // heuristic discards repaired to fixpoint, and the gap certified at
+        // the *session's* tolerance — a per-request loosened tol_gap or an
+        // unrepaired pipeline override must not poison the anchor every
+        // later request screens from
+        let repaired = is_safe || (cfg.kkt_repair && !repair_truncated);
+        if lam < *lam_state && !partial && repaired && gap <= cfg.solve_opts.tol_gap {
+            screener.observe(ctx, lam, &beta);
+            beta_state.copy_from_slice(&beta);
+            *lam_state = lam;
+        }
+        let latency = t0.elapsed().as_secs_f64();
+        metrics.record_request(latency);
+        metrics.record_screen(kept_cols.len(), discarded, true_zeros);
+        if partial {
+            metrics.record_partial();
+        }
+        Ok(ScreenResponse {
+            lam,
+            kept: kept_cols,
+            beta,
+            discarded,
+            true_zeros,
+            latency_s: latency,
+            stage_discards,
+            dynamic_discards,
+            gap,
+            partial,
+        })
+    }
+
+    /// Run a λ-grid path on the session's dataset. Independent of the
+    /// session's sequential state (its own fresh pipeline). A deadline is
+    /// honored at the *request* level: the remaining budget is split
+    /// evenly across the grid's solves, and the summary comes back tagged
+    /// partial when the deadline expired with some step above tolerance.
+    fn fit_path(
+        &mut self,
+        grid: usize,
+        lo: f64,
+        opts: &RequestOptions,
+        t0: Instant,
+    ) -> Response {
+        if grid == 0 || !(lo > 0.0 && lo <= 1.0) {
+            return Response::Error(RequestError::InvalidRequest(format!(
+                "fit-path needs grid ≥ 1 and lo ∈ (0, 1], got grid={grid} lo={lo}"
+            )));
+        }
+        let pipe = opts.pipeline.clone().unwrap_or_else(|| self.pipeline.clone());
+        let mut path_cfg = self.cfg.clone();
+        if let Some(tol) = opts.tol_gap {
+            path_cfg.solve_opts.tol_gap = tol;
+        }
+        if let Some(d) = opts.deadline {
+            // per-step slice of the remaining budget, so the whole fit
+            // stays bounded by the request deadline (not grid × deadline)
+            let remaining = d.saturating_sub(t0.elapsed());
+            let steps = grid.min(u32::MAX as usize).max(1) as u32;
+            path_cfg.solve_opts.time_budget = Some(remaining / steps);
+        }
+        let lam_grid = LambdaGrid::relative_to(self.ctx.lam_max, grid, lo, 1.0);
+        let out =
+            solve_path_pipeline(self.ctx.x, self.ctx.y, &lam_grid, &pipe, self.solver, &path_cfg);
+        let max_gap = out.records.iter().map(|r| r.gap).fold(0.0f64, f64::max);
+        // with a deadline set, any step left above tolerance was cut by its
+        // budget slice — the slices are the deadline, so a step can be
+        // truncated long before the total wall clock reaches it
+        let partial = opts.deadline.is_some() && max_gap > path_cfg.solve_opts.tol_gap;
+        let latency = t0.elapsed().as_secs_f64();
+        self.metrics.record_request(latency);
+        if partial {
+            self.metrics.record_partial();
+        }
+        Response::Path(PathSummary {
+            rule: out.rule.clone(),
+            solver: out.solver,
+            steps: out.records.len(),
+            mean_rejection: out.mean_rejection_ratio(),
+            screen_secs: out.total_screen_secs(),
+            solve_secs: out.total_solve_secs(),
+            max_gap,
+            partial,
+            latency_s: latency,
+        })
+    }
+
+    fn stats_snapshot(&self) -> SessionStats {
+        SessionStats {
+            session: self.name.to_string(),
+            backend: self.backend.to_string(),
+            pipeline: self.pipeline.name(),
+            n: self.ctx.x.n_rows(),
+            p: self.ctx.x.n_cols(),
+            lam_max: self.ctx.lam_max,
+            anchor_lam: self.screener.anchor_lam(),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+/// Named sessions owned by one coordinator. Lookup is by name; iteration
+/// (shutdown reporting) follows registration order.
+#[derive(Default)]
+pub struct SessionRegistry {
+    sessions: HashMap<String, Arc<Mutex<SessionState>>>,
+    order: Vec<String>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> SessionRegistry {
+        SessionRegistry::default()
+    }
+
+    /// Validate and open a session. A panicking backend (bad mmap shard,
+    /// hostile `DesignMatrix` impl) is caught and reported as a typed
+    /// error rather than killing the router.
+    pub fn register(&mut self, spec: SessionSpec) -> Result<(), RequestError> {
+        if self.sessions.contains_key(&spec.name) {
+            return Err(RequestError::DuplicateSession(spec.name));
+        }
+        let name = spec.name.clone();
+        let state = catch_unwind(AssertUnwindSafe(|| SessionState::new(spec)))
+            .map_err(|payload| {
+                RequestError::InvalidRequest(format!(
+                    "session `{name}` registration panicked: {}",
+                    panic_message(payload)
+                ))
+            })??;
+        self.order.push(name.clone());
+        self.sessions.insert(name, Arc::new(Mutex::new(state)));
+        Ok(())
+    }
+
+    pub(crate) fn get(&self, name: &str) -> Option<Arc<Mutex<SessionState>>> {
+        self.sessions.get(name).cloned()
+    }
+
+    /// Close one session, returning its metrics.
+    pub fn close(&mut self, name: &str) -> Option<ServiceMetrics> {
+        let state = self.sessions.remove(name)?;
+        self.order.retain(|n| n != name);
+        let metrics = state.lock().unwrap_or_else(|e| e.into_inner()).metrics.clone();
+        Some(metrics)
+    }
+
+    /// Tear everything down, returning (name, metrics) in registration
+    /// order.
+    pub fn drain_metrics(&mut self) -> Vec<(String, ServiceMetrics)> {
+        let order = std::mem::take(&mut self.order);
+        order
+            .into_iter()
+            .filter_map(|name| {
+                let state = self.sessions.remove(&name)?;
+                let metrics =
+                    state.lock().unwrap_or_else(|e| e.into_inner()).metrics.clone();
+                Some((name, metrics))
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Session names in registration order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::path::RuleKind;
+
+    fn spec(name: &str, seed: u64) -> SessionSpec {
+        let ds = synthetic::synthetic1(30, 100, 8, 0.1, seed);
+        SessionSpec::new(
+            name,
+            ds.x.clone(),
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        )
+        .with_backend_label("dense")
+    }
+
+    #[test]
+    fn register_close_and_duplicates() {
+        let mut reg = SessionRegistry::new();
+        assert!(reg.is_empty());
+        reg.register(spec("a", 1)).unwrap();
+        reg.register(spec("b", 2)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), ["a".to_string(), "b".to_string()]);
+        assert_eq!(
+            reg.register(spec("a", 3)).unwrap_err(),
+            RequestError::DuplicateSession("a".to_string())
+        );
+        assert!(reg.close("a").is_some());
+        assert!(reg.close("a").is_none());
+        assert_eq!(reg.len(), 1);
+        let drained = reg.drain_metrics();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, "b");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn register_rejects_shape_mismatch() {
+        let mut reg = SessionRegistry::new();
+        let ds = synthetic::synthetic1(20, 50, 4, 0.1, 9);
+        let bad = SessionSpec::new(
+            "bad",
+            ds.x.clone(),
+            vec![0.0; 7],
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        );
+        match reg.register(bad) {
+            Err(RequestError::InvalidRequest(msg)) => {
+                assert!(msg.contains("rows"), "{msg}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
+    }
+}

@@ -1,66 +1,279 @@
-//! Screening-as-a-service: a request/response loop around the sequential
-//! screening state machine.
+//! The multi-tenant serving coordinator and its single-session facade
+//! (DESIGN.md §4).
 //!
-//! Model-selection workloads (cross-validation, stability selection) issue
-//! many λ-evaluations against one dataset. The service owns the dataset and
-//! a stateful screening **pipeline** (DESIGN.md §3) whose sequential anchor
-//! is the exact solution at the smallest λ solved so far, **batches**
-//! concurrently-arriving requests, and processes each batch in descending-λ
-//! order so every request benefits from the tightest available θ*(λ₀) — the
-//! same trick that makes sequential rules dominate basic ones (§4.1.1).
-//! Requests above the anchor screen through a throwaway λmax-anchored
-//! pipeline (a sequential rule must never anchor below its target λ).
+//! [`Coordinator`] is the serving front door: a router thread accepts typed
+//! [`Request`]s addressed to named sessions (see
+//! [`super::registry::SessionRegistry`]), groups concurrently-arriving
+//! requests into per-session batches, and executes the batches concurrently
+//! on the shared [`crate::runtime::pool`] worker pool — one job per session
+//! per tick, so each session's sequential state stays single-owner and its
+//! responses stay bit-identical to a dedicated single-session worker.
+//! Within a batch, λ-carrying requests run in descending-λ order so every
+//! request benefits from the tightest available θ*(λ₀) — the same trick
+//! that makes sequential rules dominate basic ones (§4.1.1).
 //!
-//! Threading: one worker thread owns all state; clients talk over mpsc
-//! channels (the offline image has no tokio — DESIGN.md §4).
+//! [`ScreeningService`] is the legacy single-session surface, now a thin
+//! facade over one coordinator session: `spawn`/`screen`/`shutdown` keep
+//! working for existing callers, plus a `Result`-based
+//! [`ScreeningService::try_screen`] that surfaces typed errors (a dead
+//! worker's panic reason included) instead of panicking with "service
+//! dropped".
+//!
+//! Threading: std::thread + mpsc for routing, the [`crate::runtime::pool`]
+//! for execution (the offline image has no tokio — DESIGN.md §5).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::metrics::ServiceMetrics;
+use super::protocol::{
+    PendingRequest, Request, RequestError, RequestOptions, Response, ScreenResponse,
+};
+use super::registry::{SessionRegistry, SessionSpec};
 use crate::linalg::DesignMatrix;
 use crate::path::{PathConfig, SolverKind};
-use crate::screening::{
-    pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
-    GapSafeHook, ScreenContext, ScreenPipeline, Screener, StageCount,
-};
-use crate::solver::LassoSolver;
+use crate::runtime::pool::{self, WorkerPool};
+use crate::screening::ScreenPipeline;
 
-/// A screening/solve request at one λ.
-pub struct ScreenRequest {
-    pub lam: f64,
-    pub reply: Sender<ScreenResponse>,
+enum CoordMsg {
+    Submit { session: String, pending: PendingRequest },
+    Register { spec: SessionSpec, reply: Sender<Result<(), RequestError>> },
+    Close { session: String, reply: Sender<Option<ServiceMetrics>> },
+    Shutdown { reply: Sender<Vec<(String, ServiceMetrics)>> },
 }
 
-/// Response: the surviving features and the exact solution at λ.
-#[derive(Clone, Debug)]
-pub struct ScreenResponse {
-    pub lam: f64,
-    pub kept: Vec<usize>,
-    pub beta: Vec<f64>,
-    pub discarded: usize,
-    pub true_zeros: usize,
-    pub latency_s: f64,
-    /// Per-pipeline-stage discard counts in stage order.
-    pub stage_discards: Vec<StageCount>,
-    /// Features additionally discarded in-solver by the gap-safe hook.
-    pub dynamic_discards: usize,
+/// A submitted request's reply slot. `recv_response` blocks for the typed
+/// [`Response`]; `recv` is the screen-shaped convenience used by the
+/// facade and most clients.
+pub struct PendingResponse {
+    rx: Receiver<Response>,
 }
 
-enum Msg {
-    Request(ScreenRequest, Instant),
-    Shutdown(Sender<ServiceMetrics>),
+impl PendingResponse {
+    /// Block for the typed response.
+    pub fn recv_response(&self) -> Result<Response, RequestError> {
+        self.rx.recv().map_err(|_| {
+            RequestError::Disconnected("coordinator shut down before replying".to_string())
+        })
+    }
+
+    /// Block for a screen response; protocol errors come back as `Err`.
+    pub fn recv(&self) -> Result<ScreenResponse, RequestError> {
+        match self.recv_response()? {
+            Response::Screen(resp) => Ok(resp),
+            Response::Error(e) => Err(e),
+            other => Err(RequestError::InvalidRequest(format!(
+                "expected a screen response, got {other:?}"
+            ))),
+        }
+    }
 }
 
-/// Handle to a running screening service.
+/// Multi-tenant serving front door: owns the router thread and, through it,
+/// the session registry. Dropping the coordinator shuts the router down.
+pub struct Coordinator {
+    tx: Sender<CoordMsg>,
+    router: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Coordinator executing session batches on the process-wide pool
+    /// ([`pool::global`], sized by `DPP_POOL_THREADS`).
+    pub fn new() -> Coordinator {
+        Self::with_pool(None)
+    }
+
+    /// Coordinator with an explicit pool (benches and tests sweep thread
+    /// counts without touching the global pool).
+    pub fn with_pool(pool: Option<Arc<WorkerPool>>) -> Coordinator {
+        let (tx, rx) = channel::<CoordMsg>();
+        let router = std::thread::Builder::new()
+            .name("dpp-coordinator".to_string())
+            .spawn(move || router_loop(rx, pool))
+            .expect("spawning coordinator router");
+        Coordinator { tx, router: Some(router) }
+    }
+
+    /// Open a named session; blocks until the registry accepted (or
+    /// rejected) the spec, so a following [`Coordinator::submit`] always
+    /// finds it.
+    pub fn register(&self, spec: SessionSpec) -> Result<(), RequestError> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(CoordMsg::Register { spec, reply: rtx })
+            .map_err(|_| disconnected())?;
+        rrx.recv().map_err(|_| disconnected())?
+    }
+
+    /// Fire a request at a session. Never blocks: validation failures and
+    /// routing failures are delivered through the returned slot as typed
+    /// errors. λ is validated here, at the API boundary — a NaN λ used to
+    /// reach the worker's batch sort and panic it.
+    pub fn submit(&self, session: &str, request: Request) -> PendingResponse {
+        let (rtx, rrx) = channel();
+        if let Some(lam) = request.lam() {
+            if !lam.is_finite() || lam < 0.0 {
+                let _ = rtx.send(Response::Error(RequestError::InvalidLambda(lam)));
+                return PendingResponse { rx: rrx };
+            }
+        }
+        let msg = CoordMsg::Submit {
+            session: session.to_string(),
+            pending: PendingRequest { request, reply: rtx.clone(), t0: Instant::now() },
+        };
+        if self.tx.send(msg).is_err() {
+            let _ = rtx.send(Response::Error(disconnected()));
+        }
+        PendingResponse { rx: rrx }
+    }
+
+    /// Close one session, returning its metrics (None if unknown).
+    pub fn close_session(&self, session: &str) -> Option<ServiceMetrics> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(CoordMsg::Close { session: session.to_string(), reply: rtx })
+            .ok()?;
+        rrx.recv().ok().flatten()
+    }
+
+    /// Stop the router and collect per-session metrics in registration
+    /// order.
+    pub fn shutdown(mut self) -> Vec<(String, ServiceMetrics)> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(CoordMsg::Shutdown { reply: rtx });
+        let metrics = rrx.recv().unwrap_or_default();
+        if let Some(router) = self.router.take() {
+            let _ = router.join();
+        }
+        metrics
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(router) = self.router.take() {
+            let (rtx, _rrx) = channel();
+            let _ = self.tx.send(CoordMsg::Shutdown { reply: rtx });
+            let _ = router.join();
+        }
+    }
+}
+
+fn disconnected() -> RequestError {
+    RequestError::Disconnected("coordinator router is gone".to_string())
+}
+
+/// The router: drain whatever arrived into per-session batches, run one
+/// pool job per session (per-session affinity — single owner of the
+/// session's sequential state), repeat. Register/close/shutdown interleave
+/// with submits in arrival order, so a submit that follows a successful
+/// register (same client thread) always finds its session.
+///
+/// The tick is a barrier: messages arriving mid-tick wait for the slowest
+/// session's batch before dispatch, and that queue wait counts against
+/// their deadline (DESIGN.md §4 records the tradeoff; per-session dispatch
+/// queues are the ROADMAP follow-on). Every solve is budget-bounded, so a
+/// tick's length is bounded by its slowest deadline-free request.
+///
+/// Nested parallelism: when ≥2 session batches share a tick, each job runs
+/// on a pool worker, so a sharded backend's own `pool.run` sweeps execute
+/// inline (the pool's nested-dispatch guard) — results stay bit-identical
+/// (the pool's determinism contract), but a sharded session's sweeps are
+/// sequential until the tick has a worker to spare. A single-session tick
+/// runs inline on the router, keeping full shard parallelism.
+fn router_loop(rx: Receiver<CoordMsg>, pool: Option<Arc<WorkerPool>>) {
+    let pool_ref: &WorkerPool = match &pool {
+        Some(p) => p.as_ref(),
+        None => pool::global(),
+    };
+    let mut registry = SessionRegistry::new();
+    loop {
+        // block for one message, then drain whatever else arrived → a tick
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut msgs = vec![first];
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        let mut shutdown: Option<Sender<Vec<(String, ServiceMetrics)>>> = None;
+        // per-session batches for this tick, in first-seen order
+        let mut batches: Vec<(String, Vec<PendingRequest>)> = Vec::new();
+        for msg in msgs {
+            match msg {
+                CoordMsg::Register { spec, reply } => {
+                    let _ = reply.send(registry.register(spec));
+                }
+                CoordMsg::Close { session, reply } => {
+                    let _ = reply.send(registry.close(&session));
+                }
+                CoordMsg::Shutdown { reply } => shutdown = Some(reply),
+                CoordMsg::Submit { session, pending } => {
+                    if registry.get(&session).is_none() {
+                        let _ = pending.reply.send(Response::Error(
+                            RequestError::UnknownSession(session),
+                        ));
+                        continue;
+                    }
+                    match batches.iter_mut().find(|(name, _)| *name == session) {
+                        Some((_, batch)) => batch.push(pending),
+                        None => batches.push((session, vec![pending])),
+                    }
+                }
+            }
+        }
+        if !batches.is_empty() {
+            // one job per session: the pool provides the concurrency, the
+            // per-session batch keeps the state single-owner. Jobs only
+            // move Arcs and owned batches, and process_batch catches
+            // per-request panics, so a poisoned session cannot take the
+            // router (or the pool) down with it.
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (name, batch) in batches {
+                let Some(state) = registry.get(&name) else {
+                    // a Close later in the same tick removed the session
+                    for pending in batch {
+                        let _ = pending.reply.send(Response::Error(
+                            RequestError::UnknownSession(name.clone()),
+                        ));
+                    }
+                    continue;
+                };
+                jobs.push(Box::new(move || {
+                    state.lock().unwrap_or_else(|e| e.into_inner()).process_batch(batch);
+                }));
+            }
+            pool_ref.run(jobs);
+        }
+        if let Some(reply) = shutdown {
+            let _ = reply.send(registry.drain_metrics());
+            return;
+        }
+    }
+}
+
+/// Name of the facade's only session.
+pub const SERVICE_SESSION: &str = "service";
+
+/// Single-session facade over the serving protocol — the pre-protocol
+/// `ScreeningService` surface, unchanged for existing callers. Spawning
+/// registers one session named [`SERVICE_SESSION`] on a private
+/// [`Coordinator`]; `screen`/`request` submit [`Request::Screen`]s to it.
 pub struct ScreeningService {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    coord: Coordinator,
 }
 
 impl ScreeningService {
-    /// Spawn the service worker owning `x`, `y`. Accepts any matrix backend
+    /// Spawn the service owning `x`, `y`. Accepts any matrix backend
     /// (dense, CSC, …) and any screening pipeline — a bare
     /// [`crate::path::RuleKind`] converts implicitly, composed pipelines
     /// come from [`ScreenPipeline::parse`].
@@ -83,204 +296,55 @@ impl ScreeningService {
         solver: SolverKind,
         cfg: PathConfig,
     ) -> ScreeningService {
-        let pipeline = pipeline.into();
-        let (tx, rx) = channel::<Msg>();
-        let worker =
-            std::thread::spawn(move || worker_loop(x, y, pipeline, solver, cfg, rx));
-        ScreeningService { tx, worker: Some(worker) }
+        let coord = Coordinator::new();
+        coord
+            .register(SessionSpec::boxed(SERVICE_SESSION, x, y, pipeline, solver, cfg))
+            .unwrap_or_else(|e| panic!("spawning screening service: {e}"));
+        ScreeningService { coord }
     }
 
-    /// Fire a request; the response arrives on the returned receiver.
-    pub fn request(&self, lam: f64) -> Receiver<ScreenResponse> {
-        let (reply, rx) = channel();
-        let _ = self
-            .tx
-            .send(Msg::Request(ScreenRequest { lam, reply }, Instant::now()));
-        rx
+    /// Fire a screen request; the response arrives on the returned slot.
+    pub fn request(&self, lam: f64) -> PendingResponse {
+        self.request_with(lam, RequestOptions::default())
     }
 
-    /// Convenience: blocking request.
+    /// Screen request with per-request options (deadline, tolerance,
+    /// pipeline override).
+    pub fn request_with(&self, lam: f64, opts: RequestOptions) -> PendingResponse {
+        self.coord.submit(SERVICE_SESSION, Request::Screen { lam, opts })
+    }
+
+    /// Blocking request with typed errors: an invalid λ, a worker panic
+    /// (with its reason), and coordinator shutdown all come back as
+    /// [`RequestError`] instead of a panic.
+    pub fn try_screen(&self, lam: f64) -> Result<ScreenResponse, RequestError> {
+        self.request(lam).recv()
+    }
+
+    /// Convenience: blocking request. Panics on request failure — prefer
+    /// [`ScreeningService::try_screen`] when the caller can handle errors;
+    /// the panic message carries the typed reason (e.g. the worker's own
+    /// panic payload), not a bare "service dropped".
     pub fn screen(&self, lam: f64) -> ScreenResponse {
-        self.request(lam).recv().expect("service dropped")
+        self.try_screen(lam)
+            .unwrap_or_else(|e| panic!("screening service request failed: {e}"))
+    }
+
+    /// The underlying coordinator, for callers that want to grow the
+    /// single-session facade into a multi-tenant deployment (register more
+    /// sessions, submit typed requests to [`SERVICE_SESSION`]).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
     }
 
     /// Stop the worker and collect metrics.
-    pub fn shutdown(mut self) -> ServiceMetrics {
-        let (mtx, mrx) = channel();
-        let _ = self.tx.send(Msg::Shutdown(mtx));
-        let metrics = mrx.recv().unwrap_or_default();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        metrics
-    }
-}
-
-impl Drop for ScreeningService {
-    fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let (mtx, _mrx) = channel();
-            let _ = self.tx.send(Msg::Shutdown(mtx));
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop(
-    x: Box<dyn DesignMatrix + Send>,
-    y: Vec<f64>,
-    pipeline: ScreenPipeline,
-    solver_kind: SolverKind,
-    cfg: PathConfig,
-    rx: Receiver<Msg>,
-) {
-    let x: &dyn DesignMatrix = &*x;
-    // slack > 0 widens keep-decisions for reduced-precision backends
-    // (f32 shards) — same discipline as the PJRT sweep, DESIGN.md §1
-    let ctx = ScreenContext::with_sweep_slack(x, &y, x, cfg.safety_slack);
-    // the service's long-lived pipeline: its anchor is the exact solution
-    // at the smallest λ solved so far
-    let mut screener = pipeline.build(x.n_rows(), cfg.sequential);
-    screener.init(&ctx);
-    let solver: Box<dyn LassoSolver> = match solver_kind {
-        SolverKind::Cd => Box::new(crate::solver::cd::CdSolver),
-        SolverKind::Fista => Box::new(crate::solver::fista::FistaSolver),
-        SolverKind::Lars => Box::new(crate::solver::lars::LarsSolver),
-    };
-    let p = x.n_cols();
-    let mut metrics = ServiceMetrics::new();
-
-    // warm-start state: the solution at the deepest λ solved so far. The
-    // explicit tracker (rather than the screener's anchor) keeps warm
-    // starts monotone even for pipelines whose anchor never advances
-    // (`none`, basic mode).
-    let mut lam_state = ctx.lam_max;
-    let mut beta_state: Vec<f64> = vec![0.0; p];
-
-    loop {
-        // block for one message, then drain whatever else arrived → a batch
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => return,
-        };
-        let mut batch: Vec<(ScreenRequest, Instant)> = Vec::new();
-        let mut shutdown: Option<Sender<ServiceMetrics>> = None;
-        match first {
-            Msg::Request(r, t) => batch.push((r, t)),
-            Msg::Shutdown(s) => shutdown = Some(s),
-        }
-        while let Ok(m) = rx.try_recv() {
-            match m {
-                Msg::Request(r, t) => batch.push((r, t)),
-                Msg::Shutdown(s) => shutdown = Some(s),
-            }
-        }
-        if !batch.is_empty() {
-            metrics.record_batch(batch.len());
-            // λ-descending order: larger λ solved first tightens θ for the rest
-            batch.sort_by(|a, b| b.0.lam.partial_cmp(&a.0.lam).unwrap());
-            for (req, t0) in batch {
-                let lam = req.lam.min(ctx.lam_max);
-                let mut keep = vec![true; p];
-                // screen from the best available anchor: the sequential
-                // pipeline if its λ₀ ≥ lam, else a throwaway λmax-anchored
-                // pipeline (a sequential rule must never anchor below λ)
-                let mut fresh;
-                let scr: &mut dyn Screener = if screener.anchor_lam() >= lam {
-                    screener.as_mut()
-                } else {
-                    fresh = pipeline.build(x.n_rows(), cfg.sequential);
-                    fresh.init(&ctx);
-                    fresh.as_mut()
-                };
-                let stage_discards = scr.screen_step(&ctx, lam, &mut keep);
-                let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
-                let is_safe = scr.is_safe();
-                let mut hook =
-                    if scr.dynamic() { Some(GapSafeHook::new(&ctx)) } else { None };
-                let mut dynamic_discards = 0usize;
-                // heuristic pipeline: hook drops certified against a
-                // possibly-unrepaired reduced problem must be re-validated
-                // by the KKT check (see path::solve_path_with_screener)
-                let mut hook_dropped: Vec<bool> =
-                    if hook.is_some() && !is_safe { vec![false; p] } else { Vec::new() };
-                let res = loop {
-                    let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
-                    let r = match hook.as_mut() {
-                        Some(h) => solver.solve_with_hook(
-                            x,
-                            &y,
-                            &cols,
-                            lam,
-                            Some(&warm),
-                            &cfg.solve_opts,
-                            Some(h),
-                        ),
-                        None => solver.solve(x, &y, &cols, lam, Some(&warm), &cfg.solve_opts),
-                    };
-                    if let Some(h) = hook.as_mut() {
-                        let revalidate =
-                            if is_safe { None } else { Some(&mut hook_dropped) };
-                        dynamic_discards += h.fold_into(&mut keep, revalidate);
-                    }
-                    if is_safe || !cfg.kkt_repair {
-                        break r;
-                    }
-                    let full = r.scatter(&cols, p);
-                    let mut resid = y.to_vec();
-                    for (j, b) in full.iter().enumerate() {
-                        if *b != 0.0 {
-                            x.col_axpy_into(j, -b, &mut resid);
-                        }
-                    }
-                    // only the pipeline's *uncertified* discards (plus any
-                    // in-solver hook drops) need the KKT check (hybrid
-                    // certification, DESIGN.md §3)
-                    let viol = match scr.uncertified() {
-                        Some(cand) if !hook_dropped.is_empty() => {
-                            let merged = merge_kkt_candidates(cand, &hook_dropped);
-                            kkt_violations_in(&ctx, &resid, lam, &keep, &merged)
-                        }
-                        Some(cand) => kkt_violations_in(&ctx, &resid, lam, &keep, cand),
-                        None => kkt_violations(&ctx, &resid, lam, &keep),
-                    };
-                    if viol.is_empty() {
-                        break r;
-                    }
-                    for j in viol {
-                        keep[j] = true;
-                    }
-                    cols = (0..p).filter(|&j| keep[j]).collect();
-                };
-                let beta = res.scatter(&cols, p);
-                let true_zeros = beta.iter().filter(|b| **b == 0.0).count();
-                let kept_cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
-                let discarded = p - kept_cols.len();
-                // advance the sequential pipeline if this is the deepest λ
-                if lam < lam_state {
-                    screener.observe(&ctx, lam, &beta);
-                    beta_state.copy_from_slice(&beta);
-                    lam_state = lam;
-                }
-                let latency = t0.elapsed().as_secs_f64();
-                metrics.record_request(latency);
-                metrics.record_screen(kept_cols.len(), discarded, true_zeros);
-                let _ = req.reply.send(ScreenResponse {
-                    lam,
-                    kept: kept_cols,
-                    beta,
-                    discarded,
-                    true_zeros,
-                    latency_s: latency,
-                    stage_discards,
-                    dynamic_discards,
-                });
-            }
-        }
-        if let Some(s) = shutdown {
-            let _ = s.send(metrics.clone());
-            return;
-        }
+    pub fn shutdown(self) -> ServiceMetrics {
+        self.coord
+            .shutdown()
+            .into_iter()
+            .find(|(name, _)| name == SERVICE_SESSION)
+            .map(|(_, metrics)| metrics)
+            .unwrap_or_default()
     }
 }
 
@@ -289,7 +353,7 @@ mod tests {
     use super::*;
     use crate::data::synthetic;
     use crate::path::RuleKind;
-    use crate::solver::{cd::CdSolver, SolveOptions};
+    use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};
 
     fn service(seed: u64) -> (ScreeningService, crate::data::Dataset, f64) {
         let ds = synthetic::synthetic1(30, 120, 10, 0.1, seed);
@@ -308,6 +372,7 @@ mod tests {
     fn serves_exact_solutions() {
         let (svc, ds, lam_max) = service(1);
         let resp = svc.screen(0.5 * lam_max);
+        assert!(!resp.partial);
         // compare against direct solve
         let cols: Vec<usize> = (0..ds.p()).collect();
         let opts = SolveOptions { tol_gap: 1e-10, ..Default::default() };
@@ -408,5 +473,75 @@ mod tests {
         assert!(resp.beta.iter().all(|b| *b == 0.0));
         assert_eq!(resp.true_zeros, ds.p());
         svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_lambda_is_a_typed_error_not_a_poisoned_worker() {
+        let (svc, _ds, lam_max) = service(5);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.5] {
+            match svc.try_screen(bad) {
+                Err(RequestError::InvalidLambda(_)) => {}
+                other => panic!("λ={bad}: expected InvalidLambda, got {other:?}"),
+            }
+        }
+        // the worker survived and still answers
+        let resp = svc.try_screen(0.5 * lam_max).unwrap();
+        assert!(!resp.beta.is_empty());
+        let metrics = svc.shutdown();
+        // rejected requests never reached the session
+        assert_eq!(metrics.requests, 1);
+    }
+
+    #[test]
+    fn unknown_session_and_shutdown_are_typed() {
+        let (svc, _ds, lam_max) = service(6);
+        let err = svc
+            .coordinator()
+            .submit("nope", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+            .recv()
+            .unwrap_err();
+        assert_eq!(err, RequestError::UnknownSession("nope".to_string()));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coordinator_serves_multiple_sessions() {
+        let coord = Coordinator::new();
+        let mut lam_maxes = Vec::new();
+        for (i, seed) in [11u64, 12, 13].iter().enumerate() {
+            let ds = synthetic::synthetic1(25 + 5 * i, 80 + 20 * i, 8, 0.1, *seed);
+            lam_maxes.push(crate::solver::dual::lambda_max(&ds.x, &ds.y));
+            coord
+                .register(SessionSpec::new(
+                    format!("s{i}"),
+                    ds.x.clone(),
+                    ds.y.clone(),
+                    RuleKind::Edpp,
+                    SolverKind::Cd,
+                    PathConfig::default(),
+                ))
+                .unwrap();
+        }
+        // interleaved submissions across all three sessions
+        let mut slots = Vec::new();
+        for f in [0.7, 0.4] {
+            for (i, lm) in lam_maxes.iter().enumerate() {
+                slots.push(coord.submit(
+                    &format!("s{i}"),
+                    Request::Screen { lam: f * lm, opts: Default::default() },
+                ));
+            }
+        }
+        for slot in slots {
+            let resp = slot.recv().unwrap();
+            assert!(!resp.beta.is_empty());
+            assert!(!resp.partial);
+        }
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.len(), 3);
+        assert_eq!(metrics[0].0, "s0");
+        for (_, m) in &metrics {
+            assert_eq!(m.requests, 2);
+        }
     }
 }

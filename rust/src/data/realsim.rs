@@ -6,7 +6,7 @@
 //! the geometry of the problem — column-correlation structure, column-norm
 //! dispersion, and the alignment of y with the column space — not on semantic
 //! content, so each stand-in reproduces the paper's matrix shape and a
-//! matched statistical character (DESIGN.md §6):
+//! matched statistical character (DESIGN.md §7):
 //!
 //! * gene-expression sets (colon/lung/breast/leukemia/prostate): lognormal
 //!   magnitudes with co-expressed blocks driven by shared latent factors;

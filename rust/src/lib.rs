@@ -20,8 +20,16 @@
 //! * **Pathwise driver** ([`path`]): solves a Lasso problem along a λ-grid
 //!   with sequential screening and warm starts, collecting the paper's two
 //!   metrics — rejection ratio and speedup.
-//! * **L3 coordinator** ([`coordinator`]): multi-trial scheduler, a
-//!   request/response screening service with batching, and metrics.
+//! * **L3 coordinator** ([`coordinator`]): the multi-tenant serving
+//!   protocol (DESIGN.md §4) — a typed Request/Response grammar (Screen,
+//!   FitPath, Predict, Warm, SessionStats) with per-request deadlines and
+//!   overrides, a [`coordinator::SessionRegistry`] of named sessions (each
+//!   with its own backend, pipeline, sequential anchor and warm cache)
+//!   served concurrently by one [`coordinator::Coordinator`] on the shared
+//!   worker pool, deadline-aware gap-tagged partial responses, a
+//!   single-session [`coordinator::ScreeningService`] facade for the
+//!   classic batching-service shape, plus the multi-trial scheduler and
+//!   per-session metrics.
 //! * **PJRT runtime** ([`runtime`]): loads AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
@@ -32,7 +40,7 @@
 //!   generators matching the
 //!   paper's synthetic and (simulated) real datasets ([`data`]), and
 //!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
-//!   testing — hand-rolled because the build image is offline (DESIGN.md §4).
+//!   testing — hand-rolled because the build image is offline (DESIGN.md §5).
 //!
 //! Every rule, solver, path driver and the service is generic over
 //! [`linalg::DesignMatrix`] (`&dyn DesignMatrix` / `Box<dyn DesignMatrix +
@@ -77,6 +85,10 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::coordinator::{
+        Coordinator, Request, RequestError, RequestOptions, Response,
+        ScreeningService, SessionSpec,
+    };
     pub use crate::data::Dataset;
     pub use crate::linalg::{
         CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix,

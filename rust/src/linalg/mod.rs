@@ -103,9 +103,9 @@ impl DenseMatrix {
     }
 
     /// Screening sweep: `out[j] = xⱼᵀ w` for every column j. This is the
-    /// O(Np) hot spot of every screening rule (DESIGN.md §8 L3 target).
+    /// O(Np) hot spot of every screening rule (DESIGN.md §9 L3 target).
     ///
-    /// Eight columns per pass (perf iteration 2, DESIGN.md §8):
+    /// Eight columns per pass (perf iteration 2, DESIGN.md §9):
     /// `w` is re-used from L1/L2 across the column block, cutting its
     /// memory traffic 8×, and eight independent accumulators keep the FMA
     /// pipeline full.

@@ -5,16 +5,19 @@
 //!   path      --dataset … --rule … --solver …      run a screened λ-path
 //!   group     --ngroups …        run a group-Lasso screened path
 //!   service   --requests …       demo the batching screening service
+//!   serve     --sessions K --ops M   multi-tenant serving demo (DESIGN.md §4)
 //!   convert   --file in.svm --out shard.dppcsc [--f32]  stream to an on-disk shard
 //!   shard     --file shard.dppcsc --shards K   split into a row-range shard set
 //!   bench-screen                 perf harness → BENCH_screen.json
+//!   bench-serve                  serving perf harness → BENCH_serve.json
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
 //!
 //! `--rule` accepts the full screening-pipeline grammar (DESIGN.md §3):
 //! a plain rule (`edpp`, `strong`, …), `cascade:<r1>,<r2>[,…]`,
-//! `hybrid:<heuristic>+<safe>` (e.g. `hybrid:strong+edpp`), and a
+//! `hybrid:<heuristic>+<safe>` (e.g. `hybrid:strong+edpp`), a
 //! `dynamic:` prefix — or the `--dynamic` flag — for in-solver gap-safe
-//! refinement.
+//! refinement, and `auto`, which picks a pipeline from the loaded problem's
+//! shape (n, p, density, λ-grid size — `ScreenPipeline::auto`).
 //!
 //! `path` and `service` accept `--matrix dense|csc|mmap|sharded|auto`
 //! (default auto): auto keeps an already-sparse input sparse (a LIBSVM
@@ -51,25 +54,29 @@ fn main() {
         Some("path") => cmd_path(&args),
         Some("group") => cmd_group(&args),
         Some("service") => cmd_service(&args),
+        Some("serve") => cmd_serve(&args),
         Some("convert") => cmd_convert(&args),
         Some("shard") => cmd_shard(&args),
         Some("bench-screen") => cmd_bench_screen(&args),
+        Some("bench-serve") => cmd_bench_serve(&args),
         Some("exp") => cmd_exp(&args),
         _ => {
             eprintln!(
-                "usage: dpp <info|path|group|service|convert|shard|bench-screen|exp> [--options]\n\
+                "usage: dpp <info|path|group|service|serve|convert|shard|bench-screen|bench-serve|exp> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
                  dpp path --rule hybrid:strong+edpp --dynamic  # composed pipeline\n\
-                 dpp path --rule cascade:sis,edpp           # cheap stage first\n\
+                 dpp path --rule auto                       # shape-picked pipeline\n\
                  dpp convert --file data.svm --out data.dppcsc [--f32]\n\
                  dpp path --file data.dppcsc --matrix mmap  # out-of-core backend\n\
                  dpp shard --file data.dppcsc --out data.shards --shards 4\n\
                  dpp path --file data.shards --matrix sharded  # pool-parallel shard set\n\
                  dpp group --ngroups 100 --rule group-edpp\n\
                  dpp service --requests 20 --rule dynamic:edpp --matrix auto\n\
+                 dpp serve --sessions 3 --ops 24 --deadline-ms 50  # multi-tenant demo\n\
                  dpp bench-screen --p 4000   # perf baseline -> BENCH_screen.json\n\
+                 dpp bench-serve --ops 40    # serving baseline -> BENCH_serve.json\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
                  dpp exp all\n\
                  \n\
@@ -82,9 +89,29 @@ fn main() {
 }
 
 /// Parse `--rule` (+ `--dynamic`) into a screening pipeline, exiting with
-/// the full grammar on error.
-fn parse_pipeline(args: &Args, default: &str) -> ScreenPipeline {
+/// the full grammar on error. `--rule auto` resolves through
+/// [`ScreenPipeline::auto`] using the loaded problem's shape — (n, p,
+/// density) from the backend, `grid` = how many λ-evaluations the command
+/// is about to run — and reports the pick on stderr.
+fn parse_pipeline(
+    args: &Args,
+    default: &str,
+    shape: (usize, usize, f64),
+    grid: usize,
+) -> ScreenPipeline {
     let spec = args.get_or("rule", default);
+    if spec == "auto" {
+        let (n, p, density) = shape;
+        let mut pipe = ScreenPipeline::auto(n, p, density, grid);
+        if args.flag("dynamic") && !pipe.dynamic {
+            pipe = pipe.with_dynamic(true);
+        }
+        eprintln!(
+            "[dpp] --rule auto ({n}x{p}, density {density:.4}, {grid} λ) → {}",
+            pipe.name()
+        );
+        return pipe;
+    }
     match ScreenPipeline::parse(&spec) {
         Ok(p) => {
             if args.flag("dynamic") && !p.dynamic {
@@ -276,7 +303,7 @@ fn cmd_info() {
     println!("rules:    {} none", RuleKind::ALL_LASSO.map(|r| r.name()).join(" "));
     println!(
         "pipelines: cascade:<r1>,<r2>[,…]  hybrid:<heur>+<safe>  dynamic:<pipeline> \
-         (--dynamic)"
+         (--dynamic)  auto (shape-picked)"
     );
     println!("solvers:  cd fista lars");
     println!(
@@ -297,9 +324,10 @@ fn cmd_info() {
 
 fn cmd_path(args: &Args) {
     let ds = load_dataset(args);
-    let pipeline = parse_pipeline(args, "edpp");
     let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
     let k = args.get_parse("grid", grid_size(100));
+    let pipeline =
+        parse_pipeline(args, "edpp", (ds.n(), ds.p(), ds.x.density()), k);
     let lo = args.get_parse("lo", 0.05);
     let mut cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
     let name = ds.name.clone();
@@ -411,8 +439,10 @@ fn cmd_group(args: &Args) {
 
 fn cmd_service(args: &Args) {
     let ds = load_dataset(args);
-    let pipeline = parse_pipeline(args, "edpp");
     let n_req = args.get_parse("requests", 20usize);
+    // for `auto`, the request count plays the λ-grid-size role
+    let pipeline =
+        parse_pipeline(args, "edpp", (ds.n(), ds.p(), ds.x.density()), n_req.max(1));
     let y = ds.y.clone();
     // decided before pick_backend — see cmd_path
     let reduced_precision = ds.x.is_reduced_precision();
@@ -468,6 +498,291 @@ fn cmd_service(args: &Args) {
     }
     let m = svc.shutdown();
     println!("metrics: {}", m.summary());
+}
+
+/// Build the serving sessions for `dpp serve` / CI smoke runs: session 0
+/// optionally comes from `--file` (honoring `--matrix`, so a shard set
+/// runs the sharded backend — its sweeps parallelize when the tick leaves
+/// pool workers to spare, see `coordinator::service`), the rest are
+/// synthetic datasets with alternating dense/CSC backends — a genuinely
+/// mixed multi-dataset tenant set. Returns per-session (name, λmax, p).
+fn serve_register_sessions(
+    coord: &dpp_screen::coordinator::Coordinator,
+    args: &Args,
+    n_sessions: usize,
+    ops: usize,
+) -> Vec<(String, f64, usize)> {
+    let mut out = Vec::new();
+    for i in 0..n_sessions {
+        let name = format!("s{i}");
+        let (backend, y, cfg) = if i == 0 && args.get("file").is_some() {
+            let ds = load_dataset(args);
+            let y = ds.y.clone();
+            let reduced = ds.x.is_reduced_precision();
+            let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
+            let mut cfg = PathConfig::default();
+            if reduced {
+                cfg.safety_slack = ArtifactSweep::SAFETY_SLACK;
+            }
+            (backend, y, cfg)
+        } else {
+            let ds =
+                synthetic::synthetic1(50 + 10 * i, 300 + 120 * i, 16, 0.1, 1000 + i as u64);
+            let y = ds.y.clone();
+            let backend = if i % 2 == 0 {
+                DesignStore::Csc(ds.x.into_csc())
+            } else {
+                DesignStore::Dense(ds.x.into_dense())
+            };
+            (backend, y, PathConfig::default())
+        };
+        let (n, p, density) =
+            (backend.n_rows(), backend.n_cols(), backend.density());
+        let pipeline = parse_pipeline(args, "auto", (n, p, density), ops.max(1));
+        let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
+        let label = backend.backend_name().to_string();
+        println!(
+            "session {name}: {n}x{p} backend={label} pipeline={}",
+            pipeline.name()
+        );
+        if let Err(e) = coord.register(
+            dpp_screen::coordinator::SessionSpec::boxed(
+                name.clone(),
+                backend.into_boxed(),
+                y,
+                pipeline,
+                SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver"),
+                cfg,
+            )
+            .with_backend_label(label),
+        ) {
+            eprintln!("failed to register session {name}: {e}");
+            std::process::exit(2);
+        }
+        out.push((name, lam_max, p));
+    }
+    out
+}
+
+/// Multi-tenant serving demo: K concurrent sessions on one coordinator,
+/// driven by a mixed Screen/Predict/Warm/FitPath workload, with an optional
+/// deadline-bounded request demonstrating gap-tagged partial responses.
+fn cmd_serve(args: &Args) {
+    use dpp_screen::coordinator::{Request, RequestOptions, Response};
+
+    let n_sessions = args.get_parse("sessions", 3usize).max(1);
+    let ops = args.get_parse("ops", 24usize).max(1);
+    let deadline_ms = args.get_parse("deadline-ms", 0u64);
+    let coord = dpp_screen::coordinator::Coordinator::new();
+    let sessions = serve_register_sessions(&coord, args, n_sessions, ops);
+    println!(
+        "serving {n_sessions} session(s) on {} pool thread(s), {ops} mixed ops",
+        pool::configured_threads()
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut slots = Vec::new();
+    for k in 0..ops {
+        let (name, lam_max, p) = &sessions[k % sessions.len()];
+        let f = 0.05 + 0.9 * ((k * 7919) % ops) as f64 / ops as f64;
+        let lam = f * lam_max;
+        // the first op optionally carries a deadline (gap-tagged partial
+        // responses instead of blocking)
+        let opts = if deadline_ms > 0 && k == 0 {
+            RequestOptions::with_deadline(std::time::Duration::from_millis(deadline_ms))
+        } else {
+            RequestOptions::default()
+        };
+        let request = match k % 6 {
+            3 => Request::Predict { features: vec![1.0; *p], lam, opts },
+            4 => Request::Warm { lam },
+            5 => Request::FitPath { grid: 5, lo: 0.2, opts },
+            _ => Request::Screen { lam, opts },
+        };
+        slots.push((name.clone(), k, coord.submit(name, request)));
+    }
+    let mut partials = 0usize;
+    let mut errors = 0usize;
+    for (name, k, slot) in slots {
+        match slot.recv_response() {
+            Ok(Response::Screen(r)) => {
+                if r.partial {
+                    partials += 1;
+                }
+                println!(
+                    "op {k:3} {name}: screen λ={:.4} kept={} discarded={} gap={:.1e}{}",
+                    r.lam,
+                    r.kept.len(),
+                    r.discarded,
+                    r.gap,
+                    if r.partial { "  PARTIAL (deadline)" } else { "" }
+                );
+            }
+            Ok(Response::Predict(pr)) => {
+                if pr.partial {
+                    partials += 1;
+                }
+                println!(
+                    "op {k:3} {name}: predict λ={:.4} ŷ={:.4}{}",
+                    pr.lam,
+                    pr.yhat,
+                    if pr.partial { "  PARTIAL (deadline)" } else { "" }
+                );
+            }
+            Ok(Response::Warmed(w)) => {
+                println!("op {k:3} {name}: warm λ={:.4} gap={:.1e}", w.lam, w.gap);
+            }
+            Ok(Response::Path(ps)) => {
+                if ps.partial {
+                    partials += 1;
+                }
+                println!(
+                    "op {k:3} {name}: fit-path {} steps rule={} mean_rejection={:.3}{}",
+                    ps.steps,
+                    ps.rule,
+                    ps.mean_rejection,
+                    if ps.partial { "  PARTIAL (deadline)" } else { "" }
+                );
+            }
+            Ok(Response::Stats(_)) => {}
+            Ok(Response::Error(e)) | Err(e) => {
+                errors += 1;
+                println!("op {k:3} {name}: ERROR {e}");
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    for (name, _, _) in &sessions {
+        if let Ok(Response::Stats(st)) =
+            coord.submit(name, Request::SessionStats).recv_response()
+        {
+            println!(
+                "session {name} [{} {}x{} {}]: {}",
+                st.backend,
+                st.n,
+                st.p,
+                st.pipeline,
+                st.metrics.summary()
+            );
+        }
+    }
+    println!(
+        "served {ops} ops across sessions={n_sessions} in {wall:.3}s → {:.1} ops/s \
+         (partials={partials}, errors={errors})",
+        ops as f64 / wall
+    );
+    coord.shutdown();
+}
+
+/// Serving perf harness: throughput + latency percentiles per
+/// (session count × pipeline), written as `BENCH_serve.json` so future PRs
+/// diff serving changes against a pinned baseline (companion of
+/// `BENCH_screen.json`).
+fn cmd_bench_serve(args: &Args) {
+    use dpp_screen::coordinator::{Coordinator, Request, RequestOptions, SessionSpec};
+
+    let n = args.get_parse("n", 100usize);
+    let p = args.get_parse("p", 800usize);
+    let density = args.get_parse("density", 0.1f64);
+    let ops = args.get_parse("ops", 40usize).max(1);
+    let out_path = args.get_or("out", "BENCH_serve.json");
+    let max_sessions = args.get_parse("sessions", 3usize).max(1);
+
+    // one sparse synthetic regression problem per session slot (the shared
+    // bench fixture), reused across cells so rows are comparable
+    let mut datasets: Vec<(CscMatrix, Vec<f64>, f64)> = Vec::new();
+    for s in 0..max_sessions {
+        let (csc, y, _) = bench_problem(n, p, density, 7000 + s as u64);
+        let lam_max = dpp_screen::solver::dual::lambda_max(&csc, &y);
+        datasets.push((csc, y, lam_max));
+    }
+
+    let session_counts: Vec<usize> = (1..=max_sessions).collect();
+    let pipelines = ["edpp", "hybrid:strong+edpp", "dynamic:edpp"];
+    let mut cases: Vec<String> = Vec::new();
+    let mut rep = benchkit::Report::new(
+        "bench-serve (sessions × pipeline)",
+        &["sessions", "pipeline", "ops", "ops/s", "p50", "p95", "p99"],
+    );
+    for &sc in &session_counts {
+        for pipe_name in &pipelines {
+            let pipe = ScreenPipeline::parse(pipe_name).expect("bench pipeline");
+            let coord = Coordinator::new();
+            for (i, (csc, y, _)) in datasets.iter().take(sc).enumerate() {
+                coord
+                    .register(
+                        SessionSpec::new(
+                            format!("s{i}"),
+                            csc.clone(),
+                            y.clone(),
+                            pipe.clone(),
+                            SolverKind::Cd,
+                            PathConfig::default(),
+                        )
+                        .with_backend_label("csc"),
+                    )
+                    .expect("bench session");
+            }
+            let t0 = std::time::Instant::now();
+            let mut slots = Vec::with_capacity(ops);
+            for k in 0..ops {
+                let i = k % sc;
+                let f = 0.05 + 0.9 * ((k * 7919) % ops) as f64 / ops as f64;
+                let lam = f * datasets[i].2;
+                slots.push(coord.submit(
+                    &format!("s{i}"),
+                    Request::Screen { lam, opts: RequestOptions::default() },
+                ));
+            }
+            let mut latencies: Vec<f64> = Vec::with_capacity(ops);
+            for slot in slots {
+                let resp = slot.recv().expect("bench response");
+                latencies.push(resp.latency_s);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            coord.shutdown();
+            let throughput = ops as f64 / wall.max(1e-12);
+            let (p50, p95, p99) = (
+                dpp_screen::util::stats::quantile(&latencies, 0.50),
+                dpp_screen::util::stats::quantile(&latencies, 0.95),
+                dpp_screen::util::stats::quantile(&latencies, 0.99),
+            );
+            cases.push(format!(
+                "    {{\"sessions\": {sc}, \"pipeline\": \"{pipe_name}\", \"ops\": {ops}, \
+                 \"wall_secs\": {wall:.6}, \"throughput_rps\": {throughput:.3}, \
+                 \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            ));
+            rep.row(&[
+                sc.to_string(),
+                pipe_name.to_string(),
+                ops.to_string(),
+                format!("{throughput:.1}"),
+                format!("{:.2}ms", p50 * 1e3),
+                format!("{:.2}ms", p95 * 1e3),
+                format!("{:.2}ms", p99 * 1e3),
+            ]);
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"n\": {n},\n  \"p\": {p},\n  \
+         \"density\": {density},\n  \"ops\": {ops},\n  \
+         \"pool_threads\": {},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        pool::configured_threads(),
+        cases.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => {
+            rep.emit("bench_serve.md");
+            println!("wrote {out_path} ({} cases)", cases.len());
+        }
+        Err(e) => {
+            eprintln!("failed to write {out_path}: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_convert(args: &Args) {
@@ -541,21 +856,18 @@ fn cmd_shard(args: &Args) {
     }
 }
 
-/// Perf harness feeding the bench trajectory: screen-path wall-clock and
-/// rejection ratio per rule/backend/thread-count, plus raw `xt_w` sweep
-/// timings, written as `BENCH_screen.json` in the working directory (the
-/// repo root in CI) so future PRs diff against a pinned baseline.
-fn cmd_bench_screen(args: &Args) {
-    let n = args.get_parse("n", 200usize);
-    let p = args.get_parse("p", 2000usize);
-    let density = args.get_parse("density", 0.1f64);
-    let grid_k = args.get_parse("grid", 15usize);
-    let shards = args.get_parse("shards", 3usize);
-    let out_path = args.get_or("out", "BENCH_screen.json");
-
-    // sparse synthetic regression problem (same construction as the
-    // backend-parity fixtures)
-    let mut rng = dpp_screen::util::rng::Rng::new(args.get_parse("seed", 17u64));
+/// Sparse synthetic regression fixture shared by the bench harnesses
+/// (bench-screen and bench-serve use the same construction so their rows
+/// are comparable): random sparse X, planted β every `p/25 + 1` features,
+/// noisy y = Xβ + ε. Returns the RNG too, for callers that draw further
+/// vectors from the same stream.
+fn bench_problem(
+    n: usize,
+    p: usize,
+    density: f64,
+    seed: u64,
+) -> (CscMatrix, Vec<f64>, dpp_screen::util::rng::Rng) {
+    let mut rng = dpp_screen::util::rng::Rng::new(seed);
     let mut xd = dpp_screen::linalg::DenseMatrix::zeros(n, p);
     for j in 0..p {
         for v in xd.col_mut(j).iter_mut() {
@@ -574,6 +886,24 @@ fn cmd_bench_screen(args: &Args) {
     for v in y.iter_mut() {
         *v += 0.1 * rng.normal();
     }
+    (csc, y, rng)
+}
+
+/// Perf harness feeding the bench trajectory: screen-path wall-clock and
+/// rejection ratio per rule/backend/thread-count, plus raw `xt_w` sweep
+/// timings, written as `BENCH_screen.json` in the working directory (the
+/// repo root in CI) so future PRs diff against a pinned baseline.
+fn cmd_bench_screen(args: &Args) {
+    let n = args.get_parse("n", 200usize);
+    let p = args.get_parse("p", 2000usize);
+    let density = args.get_parse("density", 0.1f64);
+    let grid_k = args.get_parse("grid", 15usize);
+    let shards = args.get_parse("shards", 3usize);
+    let out_path = args.get_or("out", "BENCH_screen.json");
+
+    // sparse synthetic regression problem (same construction as the
+    // backend-parity fixtures; shared with bench-serve)
+    let (csc, y, mut rng) = bench_problem(n, p, density, args.get_parse("seed", 17u64));
     let mut w = vec![0.0; n];
     rng.fill_normal(&mut w);
 

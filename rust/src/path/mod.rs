@@ -152,7 +152,9 @@ impl SolverKind {
             .find(|k| k.name() == s)
     }
 
-    fn make(&self) -> Box<dyn LassoSolver> {
+    /// Instantiate the solver (unit structs — free). Shared with the
+    /// serving coordinator, which re-instantiates per batch.
+    pub(crate) fn make(&self) -> Box<dyn LassoSolver> {
         match self {
             SolverKind::Cd => Box::new(CdSolver),
             SolverKind::Fista => Box::new(FistaSolver),

@@ -1,6 +1,6 @@
 //! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
 //! (HLO **text** — the image's xla_extension 0.5.1 rejects jax≥0.5 protos,
-//! see DESIGN.md §4) and serves the fixed-shape screening sweep `Xᵀw`
+//! see DESIGN.md §5) and serves the fixed-shape screening sweep `Xᵀw`
 //! through XLA.
 //!
 //! Screening always runs on the *full* N×p matrix, so one executable per

@@ -1,5 +1,5 @@
 //! Persistent compute worker pool (std threads + mpsc — the offline image
-//! has no tokio or rayon, DESIGN.md §4).
+//! has no tokio or rayon, DESIGN.md §5).
 //!
 //! This is the first subsystem in the repo that owns threads for *compute*
 //! rather than for request routing: the sharded backend
@@ -182,8 +182,9 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Task>>>) {
 }
 
 /// Best-effort text of a caught panic payload (panics carry `&str` or
-/// `String` in practice).
-fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+/// `String` in practice). Shared with the coordinator, which catches
+/// per-request panics to keep a poisoned session diagnosable.
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {

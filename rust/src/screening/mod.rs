@@ -44,6 +44,71 @@ use crate::linalg::DesignMatrix;
 #[cfg(test)]
 use crate::solver::dual;
 
+/// Owned, backend-independent precomputed statistics of one (X, y) problem
+/// — exactly what [`ScreenContext::with_sweep`] derives with its two O(nnz)
+/// sweeps. Long-lived owners (the serving sessions in
+/// [`crate::coordinator::registry`]) keep one per dataset and rebuild a
+/// borrowing [`ScreenContext`] per request batch without re-sweeping;
+/// [`ContextStats::context`] reproduces `ScreenContext::with_sweep_slack`
+/// bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct ContextStats {
+    pub col_norms: Vec<f64>,
+    pub xty: Vec<f64>,
+    pub y_norm: f64,
+    pub lam_max: f64,
+    pub lam_max_arg: usize,
+}
+
+impl ContextStats {
+    /// The two sweeps (`col_norms`, `Xᵀy`) plus λmax — identical math to
+    /// [`ScreenContext::with_sweep`].
+    pub fn compute(x: &dyn DesignMatrix, y: &[f64]) -> ContextStats {
+        let col_norms = x.col_norms();
+        let mut xty = vec![0.0; x.n_cols()];
+        x.xt_w(y, &mut xty);
+        let mut lam_max = 0.0f64;
+        let mut lam_max_arg = 0usize;
+        for (j, v) in xty.iter().enumerate() {
+            if v.abs() > lam_max {
+                lam_max = v.abs();
+                lam_max_arg = j;
+            }
+        }
+        ContextStats {
+            col_norms,
+            xty,
+            y_norm: crate::linalg::nrm2(y),
+            lam_max,
+            lam_max_arg,
+        }
+    }
+
+    /// Materialize a borrowing context over `x`/`y` from the cached
+    /// statistics (two p-length copies, no sweeps). The values are the ones
+    /// `compute` produced, so the resulting context is bit-identical to
+    /// `ScreenContext::with_sweep_slack(x, y, x, safety_slack)`.
+    pub fn context<'a>(
+        &self,
+        x: &'a dyn DesignMatrix,
+        y: &'a [f64],
+        safety_slack: f64,
+    ) -> ScreenContext<'a> {
+        ScreenContext {
+            x,
+            y,
+            col_norms: self.col_norms.clone(),
+            xty: self.xty.clone(),
+            y_norm: self.y_norm,
+            lam_max: self.lam_max,
+            lam_max_arg: self.lam_max_arg,
+            sweep: x,
+            safety_slack,
+            scratch: RefCell::new(vec![0.0; x.n_cols()]),
+        }
+    }
+}
+
 /// Precomputed per-problem quantities shared by every rule along a path.
 pub struct ScreenContext<'a> {
     /// The design matrix, seen matrix-free.
@@ -100,26 +165,16 @@ impl<'a> ScreenContext<'a> {
         y: &'a [f64],
         sweep: &'a dyn DesignMatrix,
     ) -> Self {
-        let col_norms = x.col_norms();
-        let mut xty = vec![0.0; x.n_cols()];
-        x.xt_w(y, &mut xty);
-        let mut lam_max = 0.0f64;
-        let mut lam_max_arg = 0usize;
-        for (j, v) in xty.iter().enumerate() {
-            if v.abs() > lam_max {
-                lam_max = v.abs();
-                lam_max_arg = j;
-            }
-        }
+        let stats = ContextStats::compute(x, y);
         let p = x.n_cols();
         ScreenContext {
             x,
             y,
-            col_norms,
-            xty,
-            y_norm: crate::linalg::nrm2(y),
-            lam_max,
-            lam_max_arg,
+            col_norms: stats.col_norms,
+            xty: stats.xty,
+            y_norm: stats.y_norm,
+            lam_max: stats.lam_max,
+            lam_max_arg: stats.lam_max_arg,
             sweep,
             safety_slack: 0.0,
             scratch: RefCell::new(vec![0.0; p]),
@@ -150,7 +205,11 @@ pub struct StepInput<'a> {
 
 /// A feature-screening rule. `screen` fills `keep` (true = feature survives,
 /// false = discarded). Safe rules guarantee discarded ⇒ [β*(λ)]ᵢ = 0.
-pub trait ScreeningRule {
+///
+/// `Send` is a supertrait so pipelines built from rules can move across
+/// threads (the multi-tenant coordinator processes session batches on the
+/// shared [`crate::runtime::pool`]); every rule is plain owned data.
+pub trait ScreeningRule: Send {
     fn name(&self) -> &'static str;
     /// Whether discards are guaranteed correct (drives the KKT repair loop).
     fn is_safe(&self) -> bool;

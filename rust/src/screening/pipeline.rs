@@ -100,7 +100,11 @@ pub struct StageCount {
 ///    advances its own θ*(λ₀) state (λ must not exceed the current anchor
 ///    for the sequential rules to stay safe; drivers guarantee descending
 ///    order, the service re-`init`s when it must anchor above its state).
-pub trait Screener {
+///
+/// `Send` is a supertrait: a built pipeline is owned, thread-mobile state,
+/// which is what lets the multi-tenant coordinator pin each session's
+/// screener to whichever pool worker processes that session's batch.
+pub trait Screener: Send {
     /// Canonical pipeline name (`"edpp"`, `"cascade:sis,edpp"`, …).
     fn name(&self) -> String;
     /// All discards provably correct ⇒ the driver skips KKT repair.
@@ -650,6 +654,35 @@ impl ScreenPipeline {
         self
     }
 
+    /// `--rule auto`: pick a pipeline from problem shape (n samples, p
+    /// features, fill fraction, number of λ-evaluations expected). The
+    /// policy encodes the BENCH_screen.json trends pinned since PR 3/4:
+    ///
+    /// * p ≫ n (the paper's regime): `hybrid:strong+edpp` — the strong rule
+    ///   proposes aggressively, EDPP certifies, and KKT repair only sweeps
+    ///   the uncertified residual set, so the hybrid's rejection dominates
+    ///   plain EDPP at nearly the same cost;
+    /// * p ≲ 8n: plain `edpp` — with few inactive features the heuristic
+    ///   stage has nothing extra to discard and repair risk isn't worth it;
+    /// * a coarse λ-grid (< 10 evaluations) leaves the sequential anchor far
+    ///   from each target λ, and very sparse data (density ≤ 5%) makes the
+    ///   gap-sphere subset sweep nearly free — both tip the balance toward
+    ///   `dynamic:` in-solver refinement, which recovers the discards the
+    ///   loose static screen missed.
+    ///
+    /// Used as the default session pipeline by the serving coordinator and
+    /// exposed as `--rule auto` on the CLI (resolved after the dataset
+    /// loads, since it needs the shape).
+    pub fn auto(n: usize, p: usize, density: f64, grid: usize) -> ScreenPipeline {
+        let base = if p >= 8 * n.max(1) {
+            ScreenPipeline::parse("hybrid:strong+edpp").expect("auto policy pipeline")
+        } else {
+            ScreenPipeline::single("edpp")
+        };
+        let dynamic = grid < 10 || (density > 0.0 && density <= 0.05);
+        base.with_dynamic(dynamic)
+    }
+
     /// Canonical name (round-trips through [`Self::parse`]).
     pub fn name(&self) -> String {
         let base = match &self.spec {
@@ -833,6 +866,30 @@ mod tests {
         ] {
             let err = ScreenPipeline::parse(bad).unwrap_err();
             assert!(err.contains("grammar"), "error for `{bad}` lacks grammar: {err}");
+        }
+    }
+
+    /// The `--rule auto` policy picks shape-appropriate pipelines and only
+    /// ever returns parseable canonical names.
+    #[test]
+    fn auto_policy_tracks_problem_shape() {
+        // wide p ≫ n, dense-ish data, fine grid → hybrid without dynamic
+        assert_eq!(ScreenPipeline::auto(100, 1000, 0.3, 100).name(), "hybrid:strong+edpp");
+        // modest p/n ratio → plain edpp
+        assert_eq!(ScreenPipeline::auto(100, 400, 0.3, 100).name(), "edpp");
+        // coarse grid → dynamic refinement compensates the loose anchor
+        assert_eq!(ScreenPipeline::auto(100, 400, 0.3, 5).name(), "dynamic:edpp");
+        // very sparse data → dynamic (subset sweeps are nearly free)
+        assert_eq!(
+            ScreenPipeline::auto(100, 2000, 0.01, 50).name(),
+            "dynamic:hybrid:strong+edpp"
+        );
+        // every auto pick round-trips through the grammar
+        for (n, p, d, g) in
+            [(1usize, 10usize, 0.5f64, 1usize), (50, 50, 0.0, 20), (200, 5000, 0.1, 100)]
+        {
+            let pipe = ScreenPipeline::auto(n, p, d, g);
+            assert_eq!(ScreenPipeline::parse(&pipe.name()).unwrap(), pipe);
         }
     }
 

@@ -3,7 +3,7 @@
 //! The paper's intro cites SIS as the canonical *heuristic* marginal-
 //! correlation screen: keep the d features with the largest |xᵢᵀy|,
 //! irrespective of λ. Not safe and not λ-adaptive; included as the ablation
-//! baseline (DESIGN.md §5) and paired with KKT repair when used on a path.
+//! baseline (DESIGN.md §6) and paired with KKT repair when used on a path.
 
 use super::{ScreenContext, ScreeningRule, StepInput};
 

@@ -106,9 +106,20 @@ impl CdSolver {
             }
         };
 
+        // deadline-aware serving: resolve the wall-clock budget once; with
+        // no budget the clock is never read (bit-identical trajectories)
+        let deadline = opts.time_budget.and_then(|b| std::time::Instant::now().checked_add(b));
+        let out_of_time = || deadline.is_some_and(|d| std::time::Instant::now() >= d);
+
         let mut gap = f64::INFINITY;
         let mut epoch = 0;
         while epoch < opts.max_iters {
+            // budget check once per outer round (≈ gap_check_every epochs of
+            // resolution); certify whatever iterate we have and stop
+            if out_of_time() {
+                gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
+                break;
+            }
             // full verification sweep
             let delta_full =
                 Self::sweep(x, cols, &all, &alive, &sq_norms, lam, &mut beta, &mut r);
@@ -132,13 +143,13 @@ impl CdSolver {
             // convergence test: full-sweep stationarity + certified gap
             if delta_full <= 1e-10 * y_scale {
                 gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
-                if gap <= opts.tol_gap {
+                if gap <= opts.tol_gap || out_of_time() {
                     break;
                 }
                 refine(gap, &mut alive, &mut beta, &mut r);
             } else if epoch % opts.gap_check_every == 0 {
                 gap = dual::duality_gap(x, y, cols, &beta, &r, lam);
-                if gap <= opts.tol_gap {
+                if gap <= opts.tol_gap || out_of_time() {
                     break;
                 }
                 refine(gap, &mut alive, &mut beta, &mut r);
@@ -284,6 +295,24 @@ mod tests {
             let res = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &SolveOptions::default());
             assert!(res.gap <= 1e-6, "gap={}", res.gap);
         });
+    }
+
+    #[test]
+    fn time_budget_stops_early_with_finite_gap() {
+        let (x, y, lam) = small_problem(9, 60, 300, 0.1);
+        let cols: Vec<usize> = (0..300).collect();
+        // unreachable tolerance: only the budget (or max_iters) can stop it
+        let opts = SolveOptions {
+            tol_gap: 1e-300,
+            time_budget: Some(std::time::Duration::ZERO),
+            ..Default::default()
+        };
+        let res = CdSolver.solve(&x, &y, &cols, lam, None, &opts);
+        assert!(res.gap.is_finite());
+        assert!(res.gap > opts.tol_gap, "budget stop reports the achieved gap");
+        assert!(res.iters < opts.max_iters, "stopped on the clock, not the cap");
+        // an expired budget still yields a usable (if loose) iterate
+        assert!(res.beta.iter().all(|b| b.is_finite()));
     }
 
     #[test]

@@ -48,7 +48,19 @@ impl FistaSolver {
         let mut gap = f64::INFINITY;
         let mut iters = 0;
 
+        // deadline-aware serving: no budget ⇒ the clock is never read and
+        // the iterate sequence is untouched (same discipline as CD)
+        let deadline = opts.time_budget.and_then(|b| std::time::Instant::now().checked_add(b));
+        let out_of_time = || deadline.is_some_and(|d| std::time::Instant::now() >= d);
+
         while iters < opts.max_iters {
+            if out_of_time() {
+                // FISTA is non-monotone, so a gap from an earlier check
+                // does not certify the current iterate — force the
+                // end-of-loop recompute for the β we actually return
+                gap = f64::INFINITY;
+                break;
+            }
             let ml = cur_cols.len();
             // ∇f(w) = Xᵀ(Xw − y)
             xw.fill(0.0);
@@ -77,7 +89,7 @@ impl FistaSolver {
                     r[i] = y[i] - xw[i];
                 }
                 gap = dual::duality_gap(x, y, &cur_cols, &beta, &r, lam);
-                if gap <= opts.tol_gap {
+                if gap <= opts.tol_gap || out_of_time() {
                     break;
                 }
                 if let Some(h) = hook.as_deref_mut() {

@@ -33,11 +33,25 @@ pub struct SolveOptions {
     pub tol_gap: f64,
     /// Check the gap every this many epochs (gap costs one Xᵀr sweep).
     pub gap_check_every: usize,
+    /// Wall-clock budget for one solve, checked at the duality-gap checks
+    /// (deadline-aware serving, DESIGN.md §4). When the budget runs out the
+    /// solver stops with its best gap-certified iterate — callers read the
+    /// achieved `SolveResult::gap` to decide whether the answer is partial.
+    /// `None` (the default) is bit-identical to the unbudgeted solver: no
+    /// clock is read and the iterate sequence is untouched. First-order
+    /// solvers (CD, FISTA) honor the budget; LARS takes finitely many
+    /// kink steps and ignores it.
+    pub time_budget: Option<std::time::Duration>,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        SolveOptions { max_iters: 20_000, tol_gap: 1e-7, gap_check_every: 10 }
+        SolveOptions {
+            max_iters: 20_000,
+            tol_gap: 1e-7,
+            gap_check_every: 10,
+            time_budget: None,
+        }
     }
 }
 

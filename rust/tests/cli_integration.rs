@@ -390,3 +390,71 @@ fn service_command_runs() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("metrics:"));
 }
+
+#[test]
+fn rule_auto_resolves_from_problem_shape() {
+    let out = dpp()
+        .args(["path", "--dataset", "synthetic1", "--grid", "6", "--rule", "auto"])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--rule auto"), "auto pick not reported: {err}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mean rejection ratio"), "{text}");
+}
+
+#[test]
+fn serve_multi_session_with_deadline() {
+    let out = dpp()
+        .args([
+            "serve",
+            "--sessions",
+            "3",
+            "--ops",
+            "9",
+            "--deadline-ms",
+            "40",
+        ])
+        .env("DPP_POOL_THREADS", "2")
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("session s0:"), "{text}");
+    assert!(text.contains("session s2:"), "{text}");
+    assert!(text.contains("sessions=3"), "{text}");
+    assert!(text.contains("errors=0"), "{text}");
+    assert!(text.contains("ops/s"), "{text}");
+}
+
+#[test]
+fn bench_serve_emits_json_baseline() {
+    let dir = std::env::temp_dir().join("dpp-cli-bench-serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("BENCH_serve.json");
+    let out = dpp()
+        .args([
+            "bench-serve",
+            "--n",
+            "40",
+            "--p",
+            "160",
+            "--ops",
+            "6",
+            "--sessions",
+            "2",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn dpp");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&out_path).expect("BENCH_serve.json written");
+    assert!(json.contains("\"bench\": \"serve\""), "{json}");
+    assert!(json.contains("\"sessions\": 2"), "{json}");
+    assert!(json.contains("\"pipeline\": \"hybrid:strong+edpp\""), "{json}");
+    assert!(json.contains("\"throughput_rps\""), "{json}");
+    assert!(json.contains("\"p95_ms\""), "{json}");
+    let _ = std::fs::remove_file(&out_path);
+}

@@ -1,0 +1,462 @@
+//! Multi-tenant serving protocol tests (DESIGN.md §4): concurrent
+//! multi-session load is bit-identical to isolated single-session runs,
+//! deadline-bounded requests come back gap-tagged instead of blocking, and
+//! every failure mode that used to panic a worker is a typed error.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dpp_screen::coordinator::{
+    Coordinator, Request, RequestError, RequestOptions, Response, ScreeningService,
+    SessionSpec,
+};
+use dpp_screen::data::synthetic;
+use dpp_screen::linalg::{CscMatrix, DesignMatrix, ShardSetMatrix};
+use dpp_screen::path::{PathConfig, RuleKind, SolverKind};
+use dpp_screen::runtime::pool::WorkerPool;
+use dpp_screen::screening::ScreenPipeline;
+use dpp_screen::solver::dual;
+
+/// A sparse problem in CSC form plus its λmax.
+fn sparse_problem(n: usize, p: usize, seed: u64) -> (CscMatrix, Vec<f64>, f64) {
+    let ds = synthetic::synthetic1(n, p, p / 10, 0.1, seed);
+    let csc = ds.x.to_csc();
+    let lam_max = dual::lambda_max(&csc, &ds.y);
+    (csc, ds.y.clone(), lam_max)
+}
+
+/// The per-session request program used by the bit-identity test:
+/// descending screens, then a predict, then a path fit — mixed enough to
+/// exercise warm-start state, anchor propagation, and the non-λ requests.
+fn session_program(lam_max: f64, p: usize) -> Vec<Request> {
+    vec![
+        Request::Screen { lam: 0.8 * lam_max, opts: RequestOptions::default() },
+        Request::Screen { lam: 0.55 * lam_max, opts: RequestOptions::default() },
+        Request::Screen { lam: 0.3 * lam_max, opts: RequestOptions::default() },
+        Request::Predict {
+            features: (0..p).map(|j| ((j % 7) as f64 - 3.0) / 3.0).collect(),
+            lam: 0.25 * lam_max,
+            opts: RequestOptions::default(),
+        },
+        Request::FitPath { grid: 4, lo: 0.2, opts: RequestOptions::default() },
+    ]
+}
+
+/// ≥3 sessions (csc + sharded backends, different datasets and pipelines)
+/// served concurrently by one coordinator must answer every request
+/// bit-identically to an isolated single-session coordinator replaying the
+/// same per-session program.
+#[test]
+fn multi_session_responses_bit_identical_to_isolated() {
+    let (csc_a, y_a, lm_a) = sparse_problem(30, 120, 41);
+    let (csc_b, y_b, lm_b) = sparse_problem(35, 150, 42);
+    let (csc_c, y_c, lm_c) = sparse_problem(40, 100, 43);
+    let p_of = [csc_a.n_cols(), csc_b.n_cols(), csc_c.n_cols()];
+    let lam_maxes = [lm_a, lm_b, lm_c];
+    let pipelines = [
+        ScreenPipeline::single("edpp"),
+        ScreenPipeline::parse("hybrid:strong+edpp").unwrap(),
+        ScreenPipeline::parse("dynamic:edpp").unwrap(),
+    ];
+    // session 1 runs the pool-parallel sharded backend over dataset B
+    let make_backend = |i: usize| -> Box<dyn DesignMatrix + Send> {
+        match i {
+            0 => Box::new(csc_a.clone()),
+            1 => Box::new(ShardSetMatrix::split_csc(&csc_b, 3)),
+            _ => Box::new(csc_c.clone()),
+        }
+    };
+    let ys = [y_a.clone(), y_b.clone(), y_c.clone()];
+
+    let register_all = |coord: &Coordinator, only: Option<usize>| {
+        for i in 0..3 {
+            if only.is_some_and(|o| o != i) {
+                continue;
+            }
+            coord
+                .register(SessionSpec::boxed(
+                    format!("s{i}"),
+                    make_backend(i),
+                    ys[i].clone(),
+                    pipelines[i].clone(),
+                    SolverKind::Cd,
+                    PathConfig::default(),
+                ))
+                .unwrap();
+        }
+    };
+
+    // --- isolated reference runs: one coordinator per session, requests
+    // submitted one at a time ---
+    let mut reference: Vec<Vec<Response>> = Vec::new();
+    for i in 0..3 {
+        let coord = Coordinator::new();
+        register_all(&coord, Some(i));
+        let mut responses = Vec::new();
+        for req in session_program(lam_maxes[i], p_of[i]) {
+            responses.push(
+                coord.submit(&format!("s{i}"), req).recv_response().unwrap(),
+            );
+        }
+        coord.shutdown();
+        reference.push(responses);
+    }
+
+    // --- multi-tenant run: all three sessions on one coordinator with a
+    // 3-thread pool, requests interleaved round-robin and submitted
+    // up-front so per-session batches actually form ---
+    let coord = Coordinator::with_pool(Some(Arc::new(WorkerPool::new(3))));
+    register_all(&coord, None);
+    let programs: Vec<Vec<Request>> =
+        (0..3).map(|i| session_program(lam_maxes[i], p_of[i])).collect();
+    let mut slots: Vec<(usize, usize, dpp_screen::coordinator::PendingResponse)> =
+        Vec::new();
+    for step in 0..programs[0].len() {
+        for (i, program) in programs.iter().enumerate() {
+            slots.push((
+                i,
+                step,
+                coord.submit(&format!("s{i}"), program[step].clone()),
+            ));
+        }
+    }
+    for (i, step, slot) in slots {
+        let got = slot.recv_response().unwrap();
+        match (&reference[i][step], &got) {
+            (Response::Screen(want), Response::Screen(have)) => {
+                assert_eq!(want.lam, have.lam, "s{i} step {step} λ");
+                assert_eq!(want.kept, have.kept, "s{i} step {step} keep-set");
+                assert_eq!(want.beta, have.beta, "s{i} step {step} solution bits");
+                assert_eq!(want.discarded, have.discarded);
+                assert_eq!(want.true_zeros, have.true_zeros);
+                assert_eq!(want.stage_discards, have.stage_discards);
+                assert_eq!(want.dynamic_discards, have.dynamic_discards);
+                assert_eq!(want.gap, have.gap, "s{i} step {step} gap bits");
+                assert!(!have.partial);
+            }
+            (Response::Predict(want), Response::Predict(have)) => {
+                assert_eq!(want.yhat, have.yhat, "s{i} prediction bits");
+                assert_eq!(want.gap, have.gap);
+                assert!(!have.partial);
+            }
+            (Response::Path(want), Response::Path(have)) => {
+                assert_eq!(want.steps, have.steps);
+                assert_eq!(want.rule, have.rule);
+                assert_eq!(
+                    want.mean_rejection, have.mean_rejection,
+                    "s{i} path rejection bits"
+                );
+            }
+            (want, have) => {
+                panic!("s{i} step {step}: kind mismatch {want:?} vs {have:?}")
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+/// Multi-session responses must also be bit-identical to the *legacy*
+/// single-session facade (the pre-protocol `ScreeningService` surface).
+#[test]
+fn facade_matches_coordinator_session() {
+    let (csc, y, lam_max) = sparse_problem(30, 110, 44);
+    let svc = ScreeningService::spawn(
+        csc.clone(),
+        y.clone(),
+        RuleKind::Edpp,
+        SolverKind::Cd,
+        PathConfig::default(),
+    );
+    let coord = Coordinator::new();
+    coord
+        .register(SessionSpec::new(
+            "m",
+            csc.clone(),
+            y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    for f in [0.7, 0.45, 0.2] {
+        let a = svc.screen(f * lam_max);
+        let b = coord
+            .submit("m", Request::Screen { lam: f * lam_max, opts: Default::default() })
+            .recv()
+            .unwrap();
+        assert_eq!(a.kept, b.kept, "keep-set at {f}λmax");
+        assert_eq!(a.beta, b.beta, "solution bits at {f}λmax");
+        assert_eq!(a.stage_discards, b.stage_discards);
+    }
+    svc.shutdown();
+    coord.shutdown();
+}
+
+/// A deadline-bounded request returns a gap-tagged partial response instead
+/// of blocking, and partial iterates never advance the session's sequential
+/// anchor.
+#[test]
+fn deadline_returns_gap_tagged_partial() {
+    let ds = synthetic::synthetic1(80, 600, 40, 0.1, 45);
+    let csc = ds.x.to_csc();
+    let lam_max = dual::lambda_max(&csc, &ds.y);
+    let cfg = PathConfig {
+        solve_opts: dpp_screen::solver::SolveOptions {
+            tol_gap: 1e-10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = ScreeningService::spawn(
+        csc,
+        ds.y.clone(),
+        ScreenPipeline::parse("dynamic:edpp").unwrap(),
+        SolverKind::Cd,
+        cfg,
+    );
+    // exact request first: anchors the session at 0.5 λmax
+    let exact = svc.screen(0.5 * lam_max);
+    assert!(!exact.partial);
+    assert!(exact.gap <= 1e-10, "exact solve certifies its gap: {}", exact.gap);
+
+    // an (effectively expired) deadline: the solve stops at its first
+    // budget check and hands back the achieved duality gap
+    let partial = svc
+        .request_with(0.1 * lam_max, RequestOptions::with_deadline(Duration::from_micros(1)))
+        .recv()
+        .unwrap();
+    assert!(partial.partial, "deadline request must be tagged partial");
+    assert!(partial.gap.is_finite());
+    assert!(partial.gap > 1e-10, "partial gap reflects the unfinished solve");
+    assert_eq!(partial.beta.len(), 600);
+
+    // the partial iterate must not have advanced the sequential anchor
+    let stats = match svc
+        .coordinator()
+        .submit(dpp_screen::coordinator::SERVICE_SESSION, Request::SessionStats)
+        .recv_response()
+        .unwrap()
+    {
+        Response::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    assert_eq!(stats.anchor_lam, exact.lam, "partial advanced the anchor");
+    assert_eq!(stats.metrics.partials, 1);
+
+    // the same λ without a deadline still resolves exactly
+    let redo = svc.screen(0.1 * lam_max);
+    assert!(!redo.partial);
+    assert!(redo.gap <= 1e-10);
+    svc.shutdown();
+}
+
+/// CSC backend that forwards everything except `col_dot_w`, which panics —
+/// simulating a worker-side failure mid-solve. The coordinator must turn it
+/// into a typed `SessionClosed` carrying the panic payload instead of a
+/// poisoned channel.
+struct PanickyMatrix {
+    inner: CscMatrix,
+}
+
+impl DesignMatrix for PanickyMatrix {
+    fn n_rows(&self) -> usize {
+        self.inner.n_rows()
+    }
+    fn n_cols(&self) -> usize {
+        self.inner.n_cols()
+    }
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        self.inner.xt_w(w, out)
+    }
+    fn col_dot_w(&self, _j: usize, _w: &[f64]) -> f64 {
+        panic!("injected col_dot_w failure")
+    }
+    fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+        self.inner.col_axpy_into(j, a, out)
+    }
+    fn col_sq_norm(&self, j: usize) -> f64 {
+        self.inner.col_sq_norm(j)
+    }
+    fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        self.inner.col_dot_col(i, j)
+    }
+    fn col_into(&self, j: usize, out: &mut [f64]) {
+        self.inner.col_into(j, out)
+    }
+    fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        self.inner.col_gather(j, rows, out)
+    }
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+}
+
+#[test]
+fn worker_panic_becomes_typed_session_closed_with_reason() {
+    let (csc, y, lam_max) = sparse_problem(25, 80, 46);
+    let coord = Coordinator::new();
+    coord
+        .register(SessionSpec::new(
+            "bad",
+            PanickyMatrix { inner: csc.clone() },
+            y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    coord
+        .register(SessionSpec::new(
+            "good",
+            csc,
+            y,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    // first request trips the panic; the reason is the panic payload
+    let err = coord
+        .submit("bad", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+        .recv()
+        .unwrap_err();
+    match &err {
+        RequestError::SessionClosed { session, reason } => {
+            assert_eq!(session, "bad");
+            assert!(reason.contains("injected col_dot_w failure"), "reason: {reason}");
+        }
+        other => panic!("expected SessionClosed, got {other:?}"),
+    }
+    // the session stays closed with the same reason…
+    let again = coord
+        .submit("bad", Request::Screen { lam: 0.4 * lam_max, opts: Default::default() })
+        .recv()
+        .unwrap_err();
+    assert_eq!(err, again);
+    // …and the coordinator (plus its other sessions) survives
+    let ok = coord
+        .submit("good", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+        .recv()
+        .unwrap();
+    assert!(!ok.beta.is_empty());
+    coord.shutdown();
+}
+
+/// The facade's Result surface: NaN λ, worker death, and post-shutdown
+/// submission are all typed errors (the old loop panicked on all three).
+#[test]
+fn facade_try_screen_surfaces_worker_death() {
+    let (csc, y, lam_max) = sparse_problem(20, 60, 47);
+    let svc = ScreeningService::spawn(
+        PanickyMatrix { inner: csc },
+        y,
+        RuleKind::Edpp,
+        SolverKind::Cd,
+        PathConfig::default(),
+    );
+    match svc.try_screen(0.5 * lam_max) {
+        Err(RequestError::SessionClosed { reason, .. }) => {
+            assert!(reason.contains("injected"), "reason: {reason}")
+        }
+        other => panic!("expected SessionClosed, got {other:?}"),
+    }
+    svc.shutdown();
+}
+
+/// Warm / Predict / FitPath / SessionStats round-trips, including typed
+/// validation of malformed requests.
+#[test]
+fn protocol_roundtrip_and_validation() {
+    let (csc, y, lam_max) = sparse_problem(30, 90, 48);
+    let p = csc.n_cols();
+    let coord = Coordinator::new();
+    coord
+        .register(
+            SessionSpec::new(
+                "s",
+                csc,
+                y,
+                RuleKind::Edpp,
+                SolverKind::Cd,
+                PathConfig::default(),
+            )
+            .with_backend_label("csc"),
+        )
+        .unwrap();
+    let submit = |req: Request| coord.submit("s", req).recv_response().unwrap();
+
+    // warm tightens the anchor without shipping β
+    let warmed = match submit(Request::Warm { lam: 0.6 * lam_max }) {
+        Response::Warmed(w) => w,
+        other => panic!("expected warm, got {other:?}"),
+    };
+    assert!(warmed.gap <= 1e-7);
+    let stats = match submit(Request::SessionStats) {
+        Response::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    assert_eq!(stats.session, "s");
+    assert_eq!(stats.backend, "csc");
+    assert_eq!(stats.pipeline, "edpp");
+    assert_eq!(stats.anchor_lam, warmed.lam);
+    assert_eq!(stats.metrics.requests, 1);
+
+    // predict agrees with an explicit screen + dot product
+    let screen = match submit(Request::Screen {
+        lam: 0.4 * lam_max,
+        opts: Default::default(),
+    }) {
+        Response::Screen(s) => s,
+        other => panic!("expected screen, got {other:?}"),
+    };
+    let features: Vec<f64> = (0..p).map(|j| (j as f64).cos()).collect();
+    let want: f64 =
+        features.iter().zip(screen.beta.iter()).map(|(f, b)| f * b).sum();
+    let pred = match submit(Request::Predict {
+        features: features.clone(),
+        lam: 0.4 * lam_max,
+        opts: Default::default(),
+    }) {
+        Response::Predict(pr) => pr,
+        other => panic!("expected predict, got {other:?}"),
+    };
+    assert!(
+        (pred.yhat - want).abs() <= 1e-6 * (1.0 + want.abs()),
+        "ŷ {} vs screen·dot {want}",
+        pred.yhat
+    );
+
+    // a path fit reports its summary
+    let path = match submit(Request::FitPath {
+        grid: 5,
+        lo: 0.2,
+        opts: Default::default(),
+    }) {
+        Response::Path(ps) => ps,
+        other => panic!("expected path, got {other:?}"),
+    };
+    assert_eq!(path.steps, 5);
+    assert_eq!(path.rule, "edpp");
+    assert!(path.mean_rejection <= 1.0 + 1e-12);
+
+    // malformed requests are typed errors, not panics
+    match submit(Request::Predict {
+        features: vec![1.0; p + 1],
+        lam: 0.4 * lam_max,
+        opts: Default::default(),
+    }) {
+        Response::Error(RequestError::InvalidRequest(msg)) => {
+            assert!(msg.contains("length"), "{msg}")
+        }
+        other => panic!("expected InvalidRequest, got {other:?}"),
+    }
+    match submit(Request::FitPath { grid: 0, lo: 0.2, opts: Default::default() }) {
+        Response::Error(RequestError::InvalidRequest(_)) => {}
+        other => panic!("expected InvalidRequest, got {other:?}"),
+    }
+    match submit(Request::Screen { lam: f64::NAN, opts: Default::default() }) {
+        Response::Error(RequestError::InvalidLambda(_)) => {}
+        other => panic!("expected InvalidLambda, got {other:?}"),
+    }
+    coord.shutdown();
+}
