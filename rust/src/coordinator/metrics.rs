@@ -9,7 +9,7 @@ use crate::util::stats::{quantile, OnlineStats};
 const LATENCY_SAMPLE_CAP: usize = 4096;
 
 /// Aggregated metrics for one screening session.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServiceMetrics {
     pub requests: u64,
     pub batches: u64,
@@ -60,6 +60,39 @@ impl ServiceMetrics {
     /// q-th latency quantile (seconds) over the retained samples, q ∈ [0,1].
     pub fn latency_quantile(&self, q: f64) -> f64 {
         quantile(&self.latency_samples, q)
+    }
+
+    /// Retained latency samples (first [`LATENCY_SAMPLE_CAP`] requests) —
+    /// exposed so the wire codec can carry metrics across a socket intact.
+    pub fn latency_samples(&self) -> &[f64] {
+        &self.latency_samples
+    }
+
+    /// Rebuild metrics from transported parts (inverse of field access +
+    /// [`ServiceMetrics::latency_samples`]). Samples beyond the cap are
+    /// dropped, matching what a local recorder would have kept.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        requests: u64,
+        batches: u64,
+        latency: OnlineStats,
+        batch_size: OnlineStats,
+        rejection_ratio: OnlineStats,
+        kept_features: OnlineStats,
+        partials: u64,
+        mut latency_samples: Vec<f64>,
+    ) -> Self {
+        latency_samples.truncate(LATENCY_SAMPLE_CAP);
+        ServiceMetrics {
+            requests,
+            batches,
+            latency,
+            batch_size,
+            rejection_ratio,
+            kept_features,
+            partials,
+            latency_samples,
+        }
     }
 
     /// One-line human summary.

@@ -26,6 +26,7 @@ pub mod protocol;
 pub mod registry;
 pub mod service;
 
+pub use metrics::ServiceMetrics;
 pub use protocol::{
     PathSummary, Prediction, Request, RequestError, RequestOptions, Response,
     ScreenResponse, SessionStats, WarmResponse,

@@ -25,7 +25,7 @@ use crate::screening::{ScreenPipeline, StageCount};
 
 /// Per-request knobs. `Default` is "no deadline, session defaults" — the
 /// exact behavior of the pre-protocol service.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RequestOptions {
     /// Wall-clock deadline measured from submission. The queue wait counts:
     /// the remaining budget when the solve starts is
@@ -48,14 +48,15 @@ impl RequestOptions {
 }
 
 /// One question for one session.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Screen + solve at one λ — the paper's workload.
     Screen { lam: f64, opts: RequestOptions },
     /// Solve a full λ-grid path (`grid` points on λ/λmax ∈ [lo, 1]) on the
     /// session's dataset. Independent of the session's sequential state; a
-    /// deadline's remaining budget is split evenly across the grid's
-    /// solves, so the whole fit stays request-deadline-bounded.
+    /// deadline's remaining budget is re-split across the *remaining* grid
+    /// points after every solve (early finishers donate their slack
+    /// downstream), so the whole fit stays request-deadline-bounded.
     FitPath { grid: usize, lo: f64, opts: RequestOptions },
     /// ŷ = featuresᵀ·β*(λ) for one fresh sample (features has length p).
     Predict { features: Vec<f64>, lam: f64, opts: RequestOptions },
@@ -109,7 +110,7 @@ pub struct ScreenResponse {
 }
 
 /// Summary of a [`Request::FitPath`] run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PathSummary {
     pub rule: String,
     pub solver: &'static str,
@@ -128,7 +129,7 @@ pub struct PathSummary {
 }
 
 /// Answer to a [`Request::Predict`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Prediction {
     pub lam: f64,
     pub yhat: f64,
@@ -138,7 +139,7 @@ pub struct Prediction {
 }
 
 /// Answer to a [`Request::Warm`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WarmResponse {
     pub lam: f64,
     pub gap: f64,
@@ -146,7 +147,7 @@ pub struct WarmResponse {
 }
 
 /// Answer to a [`Request::SessionStats`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SessionStats {
     pub session: String,
     /// Backend label supplied at registration (`csc`, `sharded`, …).
@@ -162,7 +163,7 @@ pub struct SessionStats {
 
 /// One answer. Every variant corresponds to exactly one [`Request`] form,
 /// plus [`Response::Error`] for typed failures.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Screen(ScreenResponse),
     Path(PathSummary),

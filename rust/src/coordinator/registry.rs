@@ -477,9 +477,11 @@ impl SessionCore<'_> {
 
     /// Run a λ-grid path on the session's dataset. Independent of the
     /// session's sequential state (its own fresh pipeline). A deadline is
-    /// honored at the *request* level: the remaining budget is split
-    /// evenly across the grid's solves, and the summary comes back tagged
-    /// partial when the deadline expired with some step above tolerance.
+    /// honored at the *request* level: the path driver re-splits the
+    /// remaining budget across the remaining solves before every step
+    /// ([`crate::path::replan_step_budget`] — early finishers donate their
+    /// slack downstream), and the summary comes back tagged partial when
+    /// the deadline expired with some step above tolerance.
     fn fit_path(
         &mut self,
         grid: usize,
@@ -498,11 +500,10 @@ impl SessionCore<'_> {
             path_cfg.solve_opts.tol_gap = tol;
         }
         if let Some(d) = opts.deadline {
-            // per-step slice of the remaining budget, so the whole fit
-            // stays bounded by the request deadline (not grid × deadline)
-            let remaining = d.saturating_sub(t0.elapsed());
-            let steps = grid.min(u32::MAX as usize).max(1) as u32;
-            path_cfg.solve_opts.time_budget = Some(remaining / steps);
+            // hand the driver what's left of the request deadline; it
+            // re-plans per-step slices as the path progresses, so the whole
+            // fit stays bounded by the deadline (not grid × deadline)
+            path_cfg.path_budget = Some(d.saturating_sub(t0.elapsed()));
         }
         let lam_grid = LambdaGrid::relative_to(self.ctx.lam_max, grid, lo, 1.0);
         let out =

@@ -41,6 +41,7 @@ enum CoordMsg {
     Submit { session: String, pending: PendingRequest },
     Register { spec: SessionSpec, reply: Sender<Result<(), RequestError>> },
     Close { session: String, reply: Sender<Option<ServiceMetrics>> },
+    Sessions { reply: Sender<Vec<String>> },
     Shutdown { reply: Sender<Vec<(String, ServiceMetrics)>> },
 }
 
@@ -129,6 +130,17 @@ impl Coordinator {
         PendingResponse { rx: rrx }
     }
 
+    /// Names of the currently-open sessions, in registration order. The
+    /// network server advertises these in its hello so clients can address
+    /// sessions without out-of-band configuration.
+    pub fn sessions(&self) -> Vec<String> {
+        let (rtx, rrx) = channel();
+        if self.tx.send(CoordMsg::Sessions { reply: rtx }).is_err() {
+            return Vec::new();
+        }
+        rrx.recv().unwrap_or_default()
+    }
+
     /// Close one session, returning its metrics (None if unknown).
     pub fn close_session(&self, session: &str) -> Option<ServiceMetrics> {
         let (rtx, rrx) = channel();
@@ -215,6 +227,9 @@ fn router_loop(rx: Receiver<CoordMsg>, pool: Option<Arc<WorkerPool>>) {
                 }
                 CoordMsg::Close { session, reply } => {
                     let _ = reply.send(registry.close(&session));
+                }
+                CoordMsg::Sessions { reply } => {
+                    let _ = reply.send(registry.names().to_vec());
                 }
                 CoordMsg::Shutdown { reply } => shutdown = Some(reply),
                 CoordMsg::Submit { session, pending } => {

@@ -30,6 +30,14 @@
 //!   single-session [`coordinator::ScreeningService`] facade for the
 //!   classic batching-service shape, plus the multi-trial scheduler and
 //!   per-session metrics.
+//! * **L4 network layer** ([`net`]): the same serving protocol over TCP
+//!   with zero new dependencies (DESIGN.md §4b) — length-prefixed
+//!   checksummed framing ([`net::frame`]), a versioned binary wire grammar
+//!   covering every request/response/error shape ([`net::wire`]),
+//!   `dpp serve --listen` / [`net::NetClient`] for socket serving, and
+//!   `dpp shard-node` + [`net::RemoteShard`] for distributed
+//!   [`linalg::ShardSetMatrix`] shards whose fold results stay
+//!   bit-identical to local execution.
 //! * **PJRT runtime** ([`runtime`]): loads AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
@@ -77,6 +85,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod linalg;
+pub mod net;
 pub mod path;
 pub mod runtime;
 pub mod screening;
@@ -93,6 +102,7 @@ pub mod prelude {
     pub use crate::linalg::{
         CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix,
     };
+    pub use crate::net::{NetClient, NetServer, RemoteShard};
     pub use crate::path::{
         solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathOutput, RuleKind,
         SolverKind,

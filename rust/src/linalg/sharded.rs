@@ -33,6 +33,11 @@
 //! During a parallel sweep each worker takes a private window over every
 //! mmap shard (a [`Clone`] reopens the shard, DESIGN.md §2), so readers at
 //! different column offsets never thrash one shared pager.
+//!
+//! A shard may also live in another process entirely
+//! ([`ShardBackend::Remote`], DESIGN.md §4b): the fold RPCs carry each
+//! column's *running* accumulator to the node and back, so the reduce
+//! order — and therefore every bit of every sweep — is unchanged.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -40,6 +45,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::{CscMatrix, DesignMatrix, MmapCscMatrix};
+use crate::net::RemoteShard;
 use crate::runtime::pool::{self, WorkerPool};
 
 /// Manifest file tying a shard-set directory together.
@@ -50,13 +56,25 @@ pub const SHARDSET_FILE: &str = "shardset.txt";
 /// is a pure scheduling decision — never a numeric one).
 pub const PAR_MIN_COLS: usize = 64;
 
-/// One shard's storage: an in-RAM CSC slice or an out-of-core `dppcsc`
-/// directory. `n_rows` is the *local* row count of the slice; row indices
-/// inside are shard-local (global row − `row_start`).
+/// One shard's storage: an in-RAM CSC slice, an out-of-core `dppcsc`
+/// directory, or a connection to a `dpp shard-node` process hosting the
+/// slice (DESIGN.md §4b). `n_rows` is the *local* row count of the slice;
+/// row indices inside are shard-local (global row − `row_start`).
 #[derive(Clone, Debug)]
 pub enum ShardBackend {
     Csc(CscMatrix),
     Mmap(MmapCscMatrix),
+    Remote(RemoteShard),
+}
+
+/// A remote shard op can only fail if the node is lost mid-sweep; the
+/// sweep interface is infallible, so surface the line-actionable message
+/// as a panic the coordinator's per-request `catch_unwind` converts into
+/// `RequestError::SessionClosed` (never a hang, never a poisoned pool).
+macro_rules! remote_or_panic {
+    ($e:expr) => {
+        $e.unwrap_or_else(|err| panic!("{err:#}"))
+    };
 }
 
 impl ShardBackend {
@@ -65,6 +83,7 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => x.n_rows(),
             ShardBackend::Mmap(x) => x.n_rows(),
+            ShardBackend::Remote(x) => x.n_rows(),
         }
     }
 
@@ -73,6 +92,7 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => x.n_cols(),
             ShardBackend::Mmap(x) => x.n_cols(),
+            ShardBackend::Remote(x) => x.n_cols(),
         }
     }
 
@@ -81,6 +101,7 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => x.nnz(),
             ShardBackend::Mmap(x) => x.nnz(),
+            ShardBackend::Remote(x) => x.nnz(),
         }
     }
 
@@ -88,13 +109,15 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(_) => false,
             ShardBackend::Mmap(x) => x.is_f32(),
+            ShardBackend::Remote(x) => x.is_f32(),
         }
     }
 
     /// Continue `*acc += Σ w_local[i]·v` over column j's entries, in row
     /// order, with the caller's single running accumulator — the fold that
     /// keeps the shard-order reduction bit-identical to one flat CSC sweep.
-    fn fold_col_dot(&self, j: usize, w_local: &[f64], acc: &mut f64) {
+    /// `pub(crate)` so a `dpp shard-node` can serve it over the wire.
+    pub(crate) fn fold_col_dot(&self, j: usize, w_local: &[f64], acc: &mut f64) {
         match self {
             ShardBackend::Csc(x) => {
                 let (idx, vals) = x.col(j);
@@ -113,11 +136,35 @@ impl ShardBackend {
                 });
                 *acc = s;
             }
+            ShardBackend::Remote(rs) => {
+                let mut a = [*acc];
+                remote_or_panic!(rs.fold_cols_dot(&[j], w_local, &mut a));
+                *acc = a[0];
+            }
+        }
+    }
+
+    /// Continue the folds of a whole column block at once — semantically
+    /// `for k { fold_col_dot(cols.get(k), w_local, &mut accs[k]) }` (the
+    /// per-column accumulators are independent, so the FP sequence of each
+    /// is unchanged), but a remote shard serves the block in **one** RPC.
+    fn fold_cols_dot(&self, cols: ColBlock<'_>, w_local: &[f64], accs: &mut [f64]) {
+        match self {
+            ShardBackend::Remote(rs) => {
+                let cols: Vec<usize> = (0..accs.len()).map(|k| cols.get(k)).collect();
+                remote_or_panic!(rs.fold_cols_dot(&cols, w_local, accs));
+            }
+            _ => {
+                for (k, acc) in accs.iter_mut().enumerate() {
+                    self.fold_col_dot(cols.get(k), w_local, acc);
+                }
+            }
         }
     }
 
     /// Continue `*acc += Σ v²` over column j's entries in row order.
-    fn fold_col_sq_norm(&self, j: usize, acc: &mut f64) {
+    /// `pub(crate)` so a `dpp shard-node` can serve it over the wire.
+    pub(crate) fn fold_col_sq_norm(&self, j: usize, acc: &mut f64) {
         match self {
             ShardBackend::Csc(x) => {
                 let (_, vals) = x.col(j);
@@ -136,6 +183,27 @@ impl ShardBackend {
                 });
                 *acc = s;
             }
+            ShardBackend::Remote(rs) => {
+                let mut a = [*acc];
+                remote_or_panic!(rs.fold_cols_sq_norm(&[j], &mut a));
+                *acc = a[0];
+            }
+        }
+    }
+
+    /// Block form of [`ShardBackend::fold_col_sq_norm`], mirroring
+    /// `fold_cols_dot`.
+    fn fold_cols_sq_norm(&self, base: usize, accs: &mut [f64]) {
+        match self {
+            ShardBackend::Remote(rs) => {
+                let cols: Vec<usize> = (base..base + accs.len()).collect();
+                remote_or_panic!(rs.fold_cols_sq_norm(&cols, accs));
+            }
+            _ => {
+                for (k, acc) in accs.iter_mut().enumerate() {
+                    self.fold_col_sq_norm(base + k, acc);
+                }
+            }
         }
     }
 
@@ -146,6 +214,26 @@ impl ShardBackend {
             ShardBackend::Csc(x) => {
                 let (ai, av) = x.col(i);
                 let (bi, bv) = x.col(j);
+                let (mut a, mut b) = (0usize, 0usize);
+                let mut s = *acc;
+                while a < ai.len() && b < bi.len() {
+                    match ai[a].cmp(&bi[b]) {
+                        std::cmp::Ordering::Less => a += 1,
+                        std::cmp::Ordering::Greater => b += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += av[a] * bv[b];
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+                *acc = s;
+            }
+            ShardBackend::Remote(rs) => {
+                // fetch both sparse columns and re-run the exact CSC
+                // merge-join locally — same matches, same FP order
+                let (ai, av) = remote_or_panic!(rs.fetch_col(i));
+                let (bi, bv) = remote_or_panic!(rs.fetch_col(j));
                 let (mut a, mut b) = (0usize, 0usize);
                 let mut s = *acc;
                 while a < ai.len() && b < bi.len() {
@@ -192,6 +280,14 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => x.col_axpy(j, a, out_local),
             ShardBackend::Mmap(x) => DesignMatrix::col_axpy_into(x, j, a, out_local),
+            ShardBackend::Remote(rs) => {
+                // same per-entry `out[i] += a·v` sequence CscMatrix::col_axpy
+                // runs, on the fetched sparse column
+                let (idx, vals) = remote_or_panic!(rs.fetch_col(j));
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    out_local[*i as usize] += a * v;
+                }
+            }
         }
     }
 
@@ -200,6 +296,13 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => DesignMatrix::col_into(x, j, out_local),
             ShardBackend::Mmap(x) => DesignMatrix::col_into(x, j, out_local),
+            ShardBackend::Remote(rs) => {
+                let (idx, vals) = remote_or_panic!(rs.fetch_col(j));
+                out_local.fill(0.0);
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    out_local[*i as usize] = *v;
+                }
+            }
         }
     }
 
@@ -208,11 +311,23 @@ impl ShardBackend {
         match self {
             ShardBackend::Csc(x) => DesignMatrix::col_gather(x, j, rows_local, out),
             ShardBackend::Mmap(x) => DesignMatrix::col_gather(x, j, rows_local, out),
+            ShardBackend::Remote(rs) => {
+                // pure value copies (binary search per requested row) — no
+                // FP arithmetic, so exactness is trivial
+                let (idx, vals) = remote_or_panic!(rs.fetch_col(j));
+                for (o, &r) in out.iter_mut().zip(rows_local.iter()) {
+                    *o = match idx.binary_search(&(r as u32)) {
+                        Ok(k) => vals[k],
+                        Err(_) => 0.0,
+                    };
+                }
+            }
         }
     }
 
     /// Visit column j's `(local_row, value)` entries in row order.
-    fn for_col_entries(&self, j: usize, mut f: impl FnMut(u32, f64)) {
+    /// `pub(crate)` so a `dpp shard-node` can serve columns over the wire.
+    pub(crate) fn for_col_entries(&self, j: usize, mut f: impl FnMut(u32, f64)) {
         match self {
             ShardBackend::Csc(x) => {
                 let (idx, vals) = x.col(j);
@@ -225,6 +340,12 @@ impl ShardBackend {
                     f(*i, *v);
                 }
             }),
+            ShardBackend::Remote(rs) => {
+                let (idx, vals) = remote_or_panic!(rs.fetch_col(j));
+                for (i, v) in idx.iter().zip(vals.iter()) {
+                    f(*i, *v);
+                }
+            }
         }
     }
 
@@ -244,6 +365,10 @@ impl ShardBackend {
                     .ok()
                     .map(ShardBackend::Mmap)
             }
+            // independent socket per sweep worker; a failed dial degrades
+            // the worker to the shared mutexed connection — slower, never
+            // wrong
+            ShardBackend::Remote(rs) => rs.reconnect().map(ShardBackend::Remote),
         }
     }
 }
@@ -327,6 +452,7 @@ impl PartialEq for ShardSetMatrix {
                     (ShardBackend::Mmap(x), ShardBackend::Mmap(y)) => {
                         x.shard_dir() == y.shard_dir()
                     }
+                    (ShardBackend::Remote(x), ShardBackend::Remote(y)) => x == y,
                     _ => false,
                 })
     }
@@ -426,6 +552,58 @@ impl ShardSetMatrix {
     /// problems / maximum sweep throughput).
     pub fn open_in_ram(dir: impl AsRef<Path>) -> Result<ShardSetMatrix> {
         Self::open_impl(dir.as_ref(), super::mmap::DEFAULT_WINDOW_BYTES, true)
+    }
+
+    /// Assemble from already-connected [`RemoteShard`]s stacked in row
+    /// order — each one a `dpp shard-node` process hosting a row slice
+    /// (DESIGN.md §4b). Sweeps become scatter/gather RPCs with the same
+    /// shard-order reduce as local execution.
+    pub fn from_remote_shards(remotes: Vec<RemoteShard>) -> Result<ShardSetMatrix> {
+        if remotes.is_empty() {
+            bail!("a remote shard set needs at least one shard node");
+        }
+        let n_cols = remotes[0].n_cols();
+        let mut shards = Vec::with_capacity(remotes.len());
+        let mut row_starts = Vec::with_capacity(remotes.len() + 1);
+        row_starts.push(0);
+        let mut row = 0usize;
+        let mut nnz = 0usize;
+        let mut f32_values = false;
+        for rs in remotes {
+            if rs.n_cols() != n_cols {
+                bail!(
+                    "shard node {} spans {} columns, the first node spans {n_cols} \
+                     — all shards must cover the same columns",
+                    rs.addr(),
+                    rs.n_cols()
+                );
+            }
+            let start = row;
+            row += rs.n_rows();
+            nnz += rs.nnz();
+            row_starts.push(row);
+            f32_values |= rs.is_f32();
+            shards.push(RowShard { row_start: start, backend: ShardBackend::Remote(rs) });
+        }
+        Ok(ShardSetMatrix {
+            shards,
+            row_starts,
+            n_rows: row,
+            n_cols,
+            nnz,
+            dir: None,
+            f32_values,
+            pool: None,
+        })
+    }
+
+    /// Dial shard nodes (row order = address order) and assemble the set.
+    pub fn connect(addrs: &[String]) -> Result<ShardSetMatrix> {
+        let remotes = addrs
+            .iter()
+            .map(|a| RemoteShard::connect(a))
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_remote_shards(remotes)
     }
 
     fn open_impl(dir: &Path, budget_bytes: usize, in_ram: bool) -> Result<ShardSetMatrix> {
@@ -587,6 +765,12 @@ impl ShardSetMatrix {
 
     /// Compute `out[k] = x_{cols[k]}ᵀ w` for a column block, optionally
     /// through private mmap windows (parallel workers).
+    ///
+    /// The loop nest is shards-outer / columns-inner: every column's
+    /// accumulator is independent, so each still folds shard 0's entries,
+    /// then shard 1's, … — the identical per-column FP sequence the old
+    /// columns-outer nest produced — while a remote shard serves the whole
+    /// block in one scatter/gather RPC per shard instead of one per column.
     fn sweep_cols_into(
         &self,
         cols: ColBlock<'_>,
@@ -599,16 +783,12 @@ impl ShardSetMatrix {
         } else {
             self.shards.iter().map(|_| None).collect()
         };
-        for (k, o) in out.iter_mut().enumerate() {
-            let j = cols.get(k);
-            let mut acc = 0.0;
-            for ((s, win), ow) in
-                self.shards.iter().zip(self.row_starts.windows(2)).zip(owned.iter())
-            {
-                let b = ow.as_ref().unwrap_or(&s.backend);
-                b.fold_col_dot(j, &w[win[0]..win[1]], &mut acc);
-            }
-            *o = acc;
+        out.fill(0.0);
+        for ((s, win), ow) in
+            self.shards.iter().zip(self.row_starts.windows(2)).zip(owned.iter())
+        {
+            let b = ow.as_ref().unwrap_or(&s.backend);
+            b.fold_cols_dot(cols, &w[win[0]..win[1]], out);
         }
     }
 
@@ -662,19 +842,21 @@ impl ShardSetMatrix {
 
     /// Compute column ℓ2 norms for `out.len()` columns starting at `base`
     /// (the same shard-order fold as `CscMatrix::col_norms`, so the sums —
-    /// and their square roots — are bit-identical).
+    /// and their square roots — are bit-identical). Shards-outer like
+    /// `sweep_cols_into`; every sqrt still happens after its column's fold
+    /// is complete across all shards.
     fn norms_cols_into(&self, base: usize, out: &mut [f64], private_windows: bool) {
         let owned: Vec<Option<ShardBackend>> = if private_windows {
             self.shards.iter().map(|s| s.backend.private_window_clone()).collect()
         } else {
             self.shards.iter().map(|_| None).collect()
         };
-        for (k, o) in out.iter_mut().enumerate() {
-            let mut acc = 0.0;
-            for (s, ow) in self.shards.iter().zip(owned.iter()) {
-                ow.as_ref().unwrap_or(&s.backend).fold_col_sq_norm(base + k, &mut acc);
-            }
-            *o = acc.sqrt();
+        out.fill(0.0);
+        for (s, ow) in self.shards.iter().zip(owned.iter()) {
+            ow.as_ref().unwrap_or(&s.backend).fold_cols_sq_norm(base, out);
+        }
+        for o in out.iter_mut() {
+            *o = o.sqrt();
         }
     }
 }

@@ -6,10 +6,14 @@
 //!   group     --ngroups …        run a group-Lasso screened path
 //!   service   --requests …       demo the batching screening service
 //!   serve     --sessions K --ops M   multi-tenant serving demo (DESIGN.md §4)
+//!   serve     --listen ADDR [--shard-nodes A1,A2]  framed TCP server (DESIGN.md §4b)
+//!   client    --connect ADDR [--ops K] [--deadline-ms D] [--shutdown]  socket client
+//!   shard-node --listen ADDR --file shard.dppcsc [--in-ram]  host one remote shard
+//!   shard-node --connect ADDR --stop   stop a running shard node
 //!   convert   --file in.svm --out shard.dppcsc [--f32]  stream to an on-disk shard
 //!   shard     --file shard.dppcsc --shards K   split into a row-range shard set
 //!   bench-screen                 perf harness → BENCH_screen.json
-//!   bench-serve                  serving perf harness → BENCH_serve.json
+//!   bench-serve [--listen ADDR]  serving perf harness → BENCH_serve.json
 //!   exp       <fig1|fig2|fig3|fig4|fig5|fig6|all>  regenerate paper tables/figures
 //!
 //! `--rule` accepts the full screening-pipeline grammar (DESIGN.md §3):
@@ -55,6 +59,8 @@ fn main() {
         Some("group") => cmd_group(&args),
         Some("service") => cmd_service(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("shard-node") => cmd_shard_node(&args),
         Some("convert") => cmd_convert(&args),
         Some("shard") => cmd_shard(&args),
         Some("bench-screen") => cmd_bench_screen(&args),
@@ -62,7 +68,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         _ => {
             eprintln!(
-                "usage: dpp <info|path|group|service|serve|convert|shard|bench-screen|bench-serve|exp> [--options]\n\
+                "usage: dpp <info|path|group|service|serve|client|shard-node|convert|shard|bench-screen|bench-serve|exp> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
@@ -75,8 +81,15 @@ fn main() {
                  dpp group --ngroups 100 --rule group-edpp\n\
                  dpp service --requests 20 --rule dynamic:edpp --matrix auto\n\
                  dpp serve --sessions 3 --ops 24 --deadline-ms 50  # multi-tenant demo\n\
+                 dpp serve --listen 127.0.0.1:7700          # framed TCP server\n\
+                 dpp client --connect 127.0.0.1:7700 --ops 12 --deadline-ms 50\n\
+                 dpp client --connect 127.0.0.1:7700 --shutdown\n\
+                 dpp shard-node --listen 127.0.0.1:7701 --file data.shards/shard-0000\n\
+                 dpp serve --listen :7700 --shard-nodes 127.0.0.1:7701,127.0.0.1:7702 \\\n\
+                           --file data.shards   # distributed-shard session `remote`\n\
                  dpp bench-screen --p 4000   # perf baseline -> BENCH_screen.json\n\
                  dpp bench-serve --ops 40    # serving baseline -> BENCH_serve.json\n\
+                 dpp bench-serve --listen 127.0.0.1:0   # adds socket-transport rows\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
                  dpp exp all\n\
                  \n\
@@ -570,6 +583,9 @@ fn serve_register_sessions(
 fn cmd_serve(args: &Args) {
     use dpp_screen::coordinator::{Request, RequestOptions, Response};
 
+    if args.get("listen").is_some() {
+        return cmd_serve_listen(args);
+    }
     let n_sessions = args.get_parse("sessions", 3usize).max(1);
     let ops = args.get_parse("ops", 24usize).max(1);
     let deadline_ms = args.get_parse("deadline-ms", 0u64);
@@ -674,6 +690,284 @@ fn cmd_serve(args: &Args) {
     coord.shutdown();
 }
 
+/// `dpp serve --listen ADDR`: the multi-tenant coordinator behind the
+/// framed TCP protocol (DESIGN.md §4b.3). Sessions are registered exactly
+/// as in the in-process demo; `--shard-nodes A1,A2` adds a session named
+/// `remote` whose [`ShardSetMatrix`] shards live in `dpp shard-node`
+/// processes (the labels come from `--file <set.shards>`; the design
+/// matrix never leaves its nodes). Serves until a client sends shutdown,
+/// then prints per-session metrics and a `clean shutdown` line.
+fn cmd_serve_listen(args: &Args) {
+    let listen = args.get("listen").expect("--listen checked by caller");
+    let n_sessions = args.get_parse("sessions", 3usize).max(1);
+    let ops = args.get_parse("ops", 24usize).max(1);
+    let coord = dpp_screen::coordinator::Coordinator::new();
+    serve_register_sessions(&coord, args, n_sessions, ops);
+    if let Some(nodes) = args.get("shard-nodes") {
+        let addrs: Vec<String> = nodes
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        match register_remote_session(&coord, args, &addrs) {
+            Ok((n, p)) => println!(
+                "session remote: {n}x{p} backend=remote-shards across {} node(s)",
+                addrs.len()
+            ),
+            Err(e) => {
+                eprintln!("failed to register remote session: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let server = match dpp_screen::net::NetServer::bind(coord, listen) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve --listen failed: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let addr = server
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| listen.to_string());
+    println!(
+        "listening on {addr} ({} pool thread(s)) — stop with \
+         `dpp client --connect {addr} --shutdown`",
+        pool::configured_threads()
+    );
+    let metrics = server.run();
+    for (name, m) in &metrics {
+        println!("session {name}: {}", m.summary());
+    }
+    println!("clean shutdown");
+}
+
+/// Register the `remote` session for `--shard-nodes`: connect to every
+/// node, assemble the [`ShardSetMatrix`], and pair it with the labels from
+/// the local shard-set directory (`--file`), which is the only part of the
+/// dataset that leaves this process.
+fn register_remote_session(
+    coord: &dpp_screen::coordinator::Coordinator,
+    args: &Args,
+    addrs: &[String],
+) -> anyhow::Result<(usize, usize)> {
+    let x = ShardSetMatrix::connect(addrs)?;
+    let file = args.get("file").ok_or_else(|| {
+        anyhow::anyhow!(
+            "--shard-nodes needs --file <set.shards> for y.bin \
+             (the labels stay with the shard-set manifest)"
+        )
+    })?;
+    let y = convert::read_shard_y(file)?
+        .ok_or_else(|| anyhow::anyhow!("shard set {file} has no y.bin"))?;
+    if y.len() != x.n_rows() {
+        anyhow::bail!(
+            "shard nodes host {} row(s) total, y.bin at {file} has {} entries",
+            x.n_rows(),
+            y.len()
+        );
+    }
+    let (n, p, density) = (x.n_rows(), x.n_cols(), x.density());
+    let pipeline = parse_pipeline(args, "auto", (n, p, density), 8);
+    coord
+        .register(
+            dpp_screen::coordinator::SessionSpec::new(
+                "remote",
+                x,
+                y,
+                pipeline,
+                SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver"),
+                PathConfig::default(),
+            )
+            .with_backend_label("remote-shards"),
+        )
+        .map_err(|e| anyhow::anyhow!("registering remote session: {e}"))?;
+    Ok((n, p))
+}
+
+/// `dpp shard-node`: host one shard of a shard set for a remote
+/// [`ShardSetMatrix`] (DESIGN.md §4b.4), or stop a running node with
+/// `--connect ADDR --stop`. The shard serves its slice over the fold RPCs
+/// until stopped; `--in-ram` materializes the mmap shard as an in-RAM CSC
+/// (widening f32-stored values to f64).
+fn cmd_shard_node(args: &Args) {
+    use dpp_screen::linalg::sharded::ShardBackend;
+    use dpp_screen::net::{spawn_shard_node, stop_shard_node};
+
+    if let Some(addr) = args.get("connect") {
+        if args.flag("stop") {
+            match stop_shard_node(addr) {
+                Ok(()) => {
+                    println!("shard node at {addr} acknowledged shutdown");
+                    return;
+                }
+                Err(e) => {
+                    eprintln!("stopping shard node at {addr}: {e:#}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        eprintln!("dpp shard-node --connect only supports --stop");
+        std::process::exit(2);
+    }
+    let Some(listen) = args.get("listen") else {
+        eprintln!(
+            "usage: dpp shard-node --listen ADDR --file shard.dppcsc [--in-ram]\n\
+             \x20      dpp shard-node --connect ADDR --stop"
+        );
+        std::process::exit(2);
+    };
+    let Some(file) = args.get("file") else {
+        eprintln!(
+            "shard-node needs --file <shard dir> (one `shard-NNNN` directory \
+             from `dpp shard`, or any `dpp convert` output)"
+        );
+        std::process::exit(2);
+    };
+    let backend = match MmapCscMatrix::open(file) {
+        Ok(m) if args.flag("in-ram") => ShardBackend::Csc(m.to_csc()),
+        Ok(m) => ShardBackend::Mmap(m),
+        Err(e) => {
+            eprintln!("opening shard {file}: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let (n, p, nnz) = (backend.n_rows(), backend.n_cols(), backend.nnz());
+    match spawn_shard_node(backend, listen) {
+        Ok(handle) => {
+            let addr = handle.addr();
+            println!(
+                "shard node hosting {file} ({n}x{p}, nnz={nnz}) on {addr} — stop \
+                 with `dpp shard-node --connect {addr} --stop`"
+            );
+            handle.join();
+            println!("shard node stopped");
+        }
+        Err(e) => {
+            eprintln!("shard node failed to start: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `dpp client`: drive a `dpp serve --listen` server over the socket with
+/// the same mixed Screen/Predict/Warm/FitPath workload as the in-process
+/// demo, then optionally (`--shutdown`) stop the server. λ values come
+/// from the session's own `SessionStats` (λmax lives server-side).
+fn cmd_client(args: &Args) {
+    use dpp_screen::coordinator::{Request, RequestOptions, Response};
+    use dpp_screen::net::NetClient;
+
+    let Some(addr) = args.get("connect") else {
+        eprintln!(
+            "usage: dpp client --connect ADDR [--session NAME] [--ops K] \
+             [--deadline-ms D] [--shutdown]"
+        );
+        std::process::exit(2);
+    };
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(2);
+        }
+    };
+    println!("connected to {addr}; sessions: {}", client.sessions().join(" "));
+    let ops = args.get_parse("ops", if args.flag("shutdown") { 0usize } else { 12usize });
+    let deadline_ms = args.get_parse("deadline-ms", 0u64);
+    let mut partials = 0usize;
+    let mut errors = 0usize;
+    if ops > 0 {
+        let session = match args.get("session") {
+            Some(s) => s.to_string(),
+            None => match client.sessions().first() {
+                Some(s) => s.clone(),
+                None => {
+                    eprintln!("server advertises no sessions");
+                    std::process::exit(2);
+                }
+            },
+        };
+        let (lam_max, p) = match client.request(&session, Request::SessionStats) {
+            Ok(Response::Stats(st)) => (st.lam_max, st.p),
+            Ok(Response::Error(e)) | Err(e) => {
+                eprintln!("session stats for `{session}` failed: {e}");
+                std::process::exit(2);
+            }
+            Ok(other) => {
+                eprintln!("unexpected reply to SessionStats: {other:?}");
+                std::process::exit(2);
+            }
+        };
+        println!("driving session {session} (p={p}, λmax={lam_max:.4}) for {ops} ops");
+        for k in 0..ops {
+            let f = 0.05 + 0.9 * ((k * 7919) % ops) as f64 / ops as f64;
+            let lam = f * lam_max;
+            let opts = if deadline_ms > 0 && k == 0 {
+                RequestOptions::with_deadline(std::time::Duration::from_millis(
+                    deadline_ms,
+                ))
+            } else {
+                RequestOptions::default()
+            };
+            let request = match k % 6 {
+                3 => Request::Predict { features: vec![1.0; p], lam, opts },
+                4 => Request::Warm { lam },
+                5 => Request::FitPath { grid: 5, lo: 0.2, opts },
+                _ => Request::Screen { lam, opts },
+            };
+            match client.request(&session, request) {
+                Ok(Response::Screen(r)) => {
+                    if r.partial {
+                        partials += 1;
+                    }
+                    println!(
+                        "op {k:3}: screen λ={:.4} kept={} discarded={}{}",
+                        r.lam,
+                        r.kept.len(),
+                        r.discarded,
+                        if r.partial { "  PARTIAL (deadline)" } else { "" }
+                    );
+                }
+                Ok(Response::Predict(pr)) => {
+                    if pr.partial {
+                        partials += 1;
+                    }
+                    println!("op {k:3}: predict λ={:.4} ŷ={:.4}", pr.lam, pr.yhat);
+                }
+                Ok(Response::Warmed(w)) => {
+                    println!("op {k:3}: warm λ={:.4} gap={:.1e}", w.lam, w.gap);
+                }
+                Ok(Response::Path(ps)) => {
+                    if ps.partial {
+                        partials += 1;
+                    }
+                    println!(
+                        "op {k:3}: fit-path {} steps mean_rejection={:.3}",
+                        ps.steps, ps.mean_rejection
+                    );
+                }
+                Ok(Response::Stats(_)) => {}
+                Ok(Response::Error(e)) | Err(e) => {
+                    errors += 1;
+                    println!("op {k:3}: ERROR {e}");
+                }
+            }
+        }
+        println!("client ran {ops} ops on {session} (partials={partials}, errors={errors})");
+    }
+    if args.flag("shutdown") {
+        match client.shutdown_server() {
+            Ok(()) => println!("server acknowledged shutdown"),
+            Err(e) => {
+                eprintln!("shutdown failed: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
 /// Serving perf harness: throughput + latency percentiles per
 /// (session count × pipeline), written as `BENCH_serve.json` so future PRs
 /// diff serving changes against a pinned baseline (companion of
@@ -701,8 +995,8 @@ fn cmd_bench_serve(args: &Args) {
     let pipelines = ["edpp", "hybrid:strong+edpp", "dynamic:edpp"];
     let mut cases: Vec<String> = Vec::new();
     let mut rep = benchkit::Report::new(
-        "bench-serve (sessions × pipeline)",
-        &["sessions", "pipeline", "ops", "ops/s", "p50", "p95", "p99"],
+        "bench-serve (sessions × pipeline × transport)",
+        &["sessions", "pipeline", "transport", "ops", "ops/s", "p50", "p95", "p99"],
     );
     for &sc in &session_counts {
         for pipe_name in &pipelines {
@@ -748,7 +1042,8 @@ fn cmd_bench_serve(args: &Args) {
                 dpp_screen::util::stats::quantile(&latencies, 0.99),
             );
             cases.push(format!(
-                "    {{\"sessions\": {sc}, \"pipeline\": \"{pipe_name}\", \"ops\": {ops}, \
+                "    {{\"sessions\": {sc}, \"pipeline\": \"{pipe_name}\", \
+                 \"transport\": \"inproc\", \"ops\": {ops}, \
                  \"wall_secs\": {wall:.6}, \"throughput_rps\": {throughput:.3}, \
                  \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
                 p50 * 1e3,
@@ -758,12 +1053,110 @@ fn cmd_bench_serve(args: &Args) {
             rep.row(&[
                 sc.to_string(),
                 pipe_name.to_string(),
+                "inproc".to_string(),
                 ops.to_string(),
                 format!("{throughput:.1}"),
                 format!("{:.2}ms", p50 * 1e3),
                 format!("{:.2}ms", p95 * 1e3),
                 format!("{:.2}ms", p99 * 1e3),
             ]);
+        }
+    }
+
+    // --listen ADDR: the same grid again over the framed TCP transport (one
+    // server + one sequential blocking client per cell, so the socket rows
+    // price the full request→frame→wire→reply round trip). Prefer port 0 —
+    // each cell binds afresh, and a fixed port can sit in TIME_WAIT between
+    // cells.
+    if let Some(listen) = args.get("listen") {
+        use dpp_screen::net::{NetClient, NetServer};
+        for &sc in &session_counts {
+            for pipe_name in &pipelines {
+                let pipe = ScreenPipeline::parse(pipe_name).expect("bench pipeline");
+                let coord = Coordinator::new();
+                for (i, (csc, y, _)) in datasets.iter().take(sc).enumerate() {
+                    coord
+                        .register(
+                            SessionSpec::new(
+                                format!("s{i}"),
+                                csc.clone(),
+                                y.clone(),
+                                pipe.clone(),
+                                SolverKind::Cd,
+                                PathConfig::default(),
+                            )
+                            .with_backend_label("csc"),
+                        )
+                        .expect("bench session");
+                }
+                let server = match NetServer::bind(coord, listen) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("bench-serve --listen {listen}: {e:#} (try port 0)");
+                        std::process::exit(2);
+                    }
+                };
+                let addr = server
+                    .local_addr()
+                    .expect("bench server address")
+                    .to_string();
+                let handle = std::thread::spawn(move || server.run());
+                let mut client = match NetClient::connect(&addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("bench-serve client: {e:#}");
+                        std::process::exit(2);
+                    }
+                };
+                let t0 = std::time::Instant::now();
+                let mut latencies: Vec<f64> = Vec::with_capacity(ops);
+                for k in 0..ops {
+                    let i = k % sc;
+                    let f = 0.05 + 0.9 * ((k * 7919) % ops) as f64 / ops as f64;
+                    let lam = f * datasets[i].2;
+                    let t = std::time::Instant::now();
+                    let resp = client.request(
+                        &format!("s{i}"),
+                        Request::Screen { lam, opts: RequestOptions::default() },
+                    );
+                    latencies.push(t.elapsed().as_secs_f64());
+                    match resp {
+                        Ok(dpp_screen::coordinator::Response::Screen(_)) => {}
+                        other => {
+                            eprintln!("bench-serve socket op {k}: {other:?}");
+                            std::process::exit(2);
+                        }
+                    }
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                client.shutdown_server().expect("bench server shutdown");
+                let _ = handle.join();
+                let throughput = ops as f64 / wall.max(1e-12);
+                let (p50, p95, p99) = (
+                    dpp_screen::util::stats::quantile(&latencies, 0.50),
+                    dpp_screen::util::stats::quantile(&latencies, 0.95),
+                    dpp_screen::util::stats::quantile(&latencies, 0.99),
+                );
+                cases.push(format!(
+                    "    {{\"sessions\": {sc}, \"pipeline\": \"{pipe_name}\", \
+                     \"transport\": \"socket\", \"ops\": {ops}, \
+                     \"wall_secs\": {wall:.6}, \"throughput_rps\": {throughput:.3}, \
+                     \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+                    p50 * 1e3,
+                    p95 * 1e3,
+                    p99 * 1e3
+                ));
+                rep.row(&[
+                    sc.to_string(),
+                    pipe_name.to_string(),
+                    "socket".to_string(),
+                    ops.to_string(),
+                    format!("{throughput:.1}"),
+                    format!("{:.2}ms", p50 * 1e3),
+                    format!("{:.2}ms", p95 * 1e3),
+                    format!("{:.2}ms", p99 * 1e3),
+                ]);
+            }
         }
     }
     let json = format!(

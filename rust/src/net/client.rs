@@ -1,0 +1,125 @@
+//! Thin blocking client for the framed serving protocol (DESIGN.md §4b.3).
+//!
+//! [`NetClient::connect`] performs the hello handshake (version check +
+//! session discovery), then [`NetClient::request`] round-trips one typed
+//! [`Request`] per call. Pipelining callers use [`NetClient::submit`] /
+//! [`NetClient::recv_reply`] directly: submissions are answered in order,
+//! with ids to prove it. Transport failures mid-request surface as
+//! [`RequestError::Disconnected`] — the same typed error an in-process
+//! caller sees when the coordinator goes away, so callers handle a dead
+//! socket and a dead router identically.
+
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{decode_server_msg, encode_client_msg, ClientMsg, ServerMsg, WIRE_VERSION};
+use crate::coordinator::{Request, RequestError, Response};
+
+/// A connected client: one TCP stream, monotonically increasing request
+/// ids, and the session names the server advertised in its hello.
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+    server_sessions: Vec<String>,
+}
+
+impl NetClient {
+    /// Connect and shake hands. Fails with an actionable error when nobody
+    /// listens at `addr` or the server speaks a different wire version.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let mut stream = TcpStream::connect(addr).with_context(|| {
+            format!(
+                "connecting to dpp server at {addr} — is `dpp serve --listen {addr}` running?"
+            )
+        })?;
+        let hello = encode_client_msg(&ClientMsg::Hello { version: WIRE_VERSION });
+        write_frame(&mut stream, &hello)
+            .with_context(|| format!("sending hello to {addr}"))?;
+        let payload = read_frame(&mut stream)
+            .with_context(|| format!("reading hello reply from {addr}"))?;
+        let msg = decode_server_msg(&payload)
+            .with_context(|| format!("decoding hello reply from {addr}"))?;
+        match msg {
+            ServerMsg::Hello { version, sessions } => {
+                if version != WIRE_VERSION {
+                    bail!(
+                        "server at {addr} speaks wire version {version}, \
+                         this client speaks {WIRE_VERSION}"
+                    );
+                }
+                Ok(NetClient { stream, next_id: 0, server_sessions: sessions })
+            }
+            other => bail!("expected a hello from {addr}, got {other:?}"),
+        }
+    }
+
+    /// Session names the server advertised at connect time.
+    pub fn sessions(&self) -> &[String] {
+        &self.server_sessions
+    }
+
+    /// Send one request without waiting (pipelining). Returns the id the
+    /// server will echo in the matching [`Response`].
+    pub fn submit(&mut self, session: &str, request: Request) -> Result<u64, RequestError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let msg = encode_client_msg(&ClientMsg::Submit {
+            id,
+            session: session.to_string(),
+            request,
+        });
+        write_frame(&mut self.stream, &msg)
+            .map_err(|e| disconnected(format!("sending request: {e}")))?;
+        Ok(id)
+    }
+
+    /// Block for the next reply, in submission order.
+    pub fn recv_reply(&mut self) -> Result<(u64, Response), RequestError> {
+        let payload = read_frame(&mut self.stream)
+            .map_err(|e| disconnected(format!("reading reply: {e}")))?;
+        match decode_server_msg(&payload) {
+            Ok(ServerMsg::Reply { id, response }) => Ok((id, response)),
+            Ok(ServerMsg::ShuttingDown) => {
+                Err(disconnected("server is shutting down".to_string()))
+            }
+            Ok(ServerMsg::Hello { .. }) => {
+                Err(disconnected("unexpected mid-stream hello from server".to_string()))
+            }
+            Err(e) => Err(disconnected(format!("decoding reply: {e}"))),
+        }
+    }
+
+    /// Blocking round trip: submit, wait for that submission's reply.
+    pub fn request(&mut self, session: &str, request: Request) -> Result<Response, RequestError> {
+        let id = self.submit(session, request)?;
+        let (got, response) = self.recv_reply()?;
+        if got != id {
+            return Err(disconnected(format!(
+                "reply id {got} does not match request id {id}"
+            )));
+        }
+        Ok(response)
+    }
+
+    /// Ask the server to shut down; returns once it acknowledges (any
+    /// still-pipelined replies are drained first).
+    pub fn shutdown_server(mut self) -> Result<()> {
+        let msg = encode_client_msg(&ClientMsg::Shutdown);
+        write_frame(&mut self.stream, &msg).context("sending shutdown")?;
+        loop {
+            let payload =
+                read_frame(&mut self.stream).context("waiting for shutdown ack")?;
+            match decode_server_msg(&payload).context("decoding shutdown ack")? {
+                ServerMsg::ShuttingDown => return Ok(()),
+                ServerMsg::Reply { .. } => continue,
+                ServerMsg::Hello { .. } => bail!("unexpected mid-stream hello from server"),
+            }
+        }
+    }
+}
+
+fn disconnected(msg: String) -> RequestError {
+    RequestError::Disconnected(msg)
+}

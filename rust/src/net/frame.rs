@@ -1,0 +1,299 @@
+//! Length-prefixed, versioned, checksummed binary framing (DESIGN.md §4b).
+//!
+//! Every message on a `dpp` socket — coordinator requests, shard RPCs —
+//! travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"DPPN"
+//!      4     1  version (FRAME_VERSION)
+//!      5     1  reserved (0)
+//!      6     4  payload length, u32 LE
+//!     10     4  payload CRC-32 (IEEE), u32 LE
+//!     14     4  header CRC-32 over bytes [0, 14), u32 LE
+//!     18     …  payload
+//! ```
+//!
+//! The header checksum means a corrupt or misaligned length prefix is
+//! rejected *before* we trust it to size a read; the payload checksum
+//! catches torn writes. Oversized frames (beyond [`MAX_PAYLOAD`]) are
+//! refused without allocating. A peer that closes the socket cleanly
+//! between frames yields [`FrameError::Closed`]; one that dies mid-frame
+//! yields [`FrameError::Truncated`] — callers map both onto their own
+//! disconnect handling instead of panicking or hanging.
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Frame magic — first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"DPPN";
+/// Current frame-format version.
+pub const FRAME_VERSION: u8 = 1;
+/// Header size in bytes (fixed).
+pub const HEADER_LEN: usize = 18;
+/// Maximum accepted payload (64 MiB) — refuse anything larger up front.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Typed framing failure. Everything a hostile or dying peer can do to the
+/// byte stream maps to one of these; none of them panic or hang.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Frame version we don't speak.
+    BadVersion(u8),
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized { len: usize, cap: usize },
+    /// Header checksum mismatch — the length prefix cannot be trusted.
+    BadHeaderChecksum,
+    /// Payload checksum mismatch — torn or corrupted payload.
+    BadPayloadChecksum,
+    /// Peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// Peer disappeared mid-frame (EOF inside a header or payload).
+    Truncated,
+    /// Underlying socket error.
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (expected {FRAME_VERSION})")
+            }
+            FrameError::Oversized { len, cap } => {
+                write!(f, "frame payload of {len} bytes exceeds the {cap}-byte cap")
+            }
+            FrameError::BadHeaderChecksum => write!(f, "frame header checksum mismatch"),
+            FrameError::BadPayloadChecksum => write!(f, "frame payload checksum mismatch"),
+            FrameError::Closed => write!(f, "peer closed the connection"),
+            FrameError::Truncated => write!(f, "peer disconnected mid-frame"),
+            FrameError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320). Bitwise — framing is
+/// not the bottleneck next to a λ-path solve, and the build is offline so
+/// we keep it dependency-free.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), FrameError> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { len: payload.len(), cap: MAX_PAYLOAD });
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4] = FRAME_VERSION;
+    header[5] = 0;
+    header[6..10].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[10..14].copy_from_slice(&crc32(payload).to_le_bytes());
+    let hcrc = crc32(&header[0..14]);
+    header[14..18].copy_from_slice(&hcrc.to_le_bytes());
+    let io = |e: std::io::Error| FrameError::Io(e.to_string());
+    w.write_all(&header).map_err(io)?;
+    w.write_all(payload).map_err(io)?;
+    w.flush().map_err(io)
+}
+
+/// Read exactly `buf.len()` bytes. EOF before the first byte is a clean
+/// [`FrameError::Closed`]; EOF after is [`FrameError::Truncated`].
+fn read_exact_or_closed(r: &mut impl Read, buf: &mut [u8]) -> Result<(), FrameError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(if off == 0 { FrameError::Closed } else { FrameError::Truncated });
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, validating magic, header checksum, version, size cap
+/// and payload checksum — in that order, so the length prefix is never
+/// trusted before the header proves intact.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_or_closed(r, &mut header)?;
+    let mut magic = [0u8; 4];
+    magic.copy_from_slice(&header[0..4]);
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let hcrc = u32::from_le_bytes([header[14], header[15], header[16], header[17]]);
+    if crc32(&header[0..14]) != hcrc {
+        return Err(FrameError::BadHeaderChecksum);
+    }
+    if header[4] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(header[4]));
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { len, cap: MAX_PAYLOAD });
+    }
+    let pcrc = u32::from_le_bytes([header[10], header[11], header[12], header[13]]);
+    let mut payload = vec![0u8; len];
+    if let Err(e) = read_exact_or_closed(r, &mut payload) {
+        // EOF anywhere inside the payload is a truncation, even at offset 0:
+        // the header promised `len` more bytes.
+        return Err(match e {
+            FrameError::Closed => FrameError::Truncated,
+            other => other,
+        });
+    }
+    if crc32(&payload) != pcrc {
+        return Err(FrameError::BadPayloadChecksum);
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, payload).unwrap();
+        buf
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn round_trips_payloads() {
+        for payload in [&b""[..], b"x", b"hello frame", &[0u8; 4096][..]] {
+            let buf = frame_bytes(payload);
+            assert_eq!(buf.len(), HEADER_LEN + payload.len());
+            let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"one").unwrap();
+        write_frame(&mut buf, b"two").unwrap();
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"one");
+        assert_eq!(read_frame(&mut cur).unwrap(), b"two");
+        assert_eq!(read_frame(&mut cur), Err(FrameError::Closed));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = frame_bytes(b"payload");
+        buf[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(FrameError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_corrupt_length_via_header_checksum() {
+        let mut buf = frame_bytes(b"payload");
+        // Flip a length byte: the header CRC must catch it before the
+        // bogus length sizes a read.
+        buf[6] ^= 0xFF;
+        assert_eq!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(FrameError::BadHeaderChecksum)
+        );
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut buf = frame_bytes(b"payload");
+        buf[4] = 99;
+        // Re-seal the header so only the version is wrong.
+        let hcrc = crc32(&buf[0..14]);
+        buf[14..18].copy_from_slice(&hcrc.to_le_bytes());
+        assert_eq!(read_frame(&mut Cursor::new(&buf)), Err(FrameError::BadVersion(99)));
+    }
+
+    #[test]
+    fn rejects_oversized_declared_length() {
+        let mut buf = frame_bytes(b"p");
+        let big = (MAX_PAYLOAD as u32 + 1).to_le_bytes();
+        buf[6..10].copy_from_slice(&big);
+        let hcrc = crc32(&buf[0..14]);
+        buf[14..18].copy_from_slice(&hcrc.to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(FrameError::Oversized { len: MAX_PAYLOAD + 1, cap: MAX_PAYLOAD })
+        );
+    }
+
+    #[test]
+    fn oversized_write_is_refused() {
+        struct Sink;
+        impl std::io::Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let payload = vec![0u8; MAX_PAYLOAD + 1];
+        assert!(matches!(
+            write_frame(&mut Sink, &payload),
+            Err(FrameError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let mut buf = frame_bytes(b"payload");
+        let last = buf.len() - 1;
+        buf[last] ^= 0x01;
+        assert_eq!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(FrameError::BadPayloadChecksum)
+        );
+    }
+
+    #[test]
+    fn eof_mid_header_and_mid_payload_are_truncated() {
+        let buf = frame_bytes(b"payload");
+        // Cut inside the header (but after byte 0).
+        let cut = &buf[..HEADER_LEN / 2];
+        assert_eq!(read_frame(&mut Cursor::new(cut)), Err(FrameError::Truncated));
+        // Cut inside the payload.
+        let cut = &buf[..HEADER_LEN + 3];
+        assert_eq!(read_frame(&mut Cursor::new(cut)), Err(FrameError::Truncated));
+        // Header complete, zero payload bytes delivered.
+        let cut = &buf[..HEADER_LEN];
+        assert_eq!(read_frame(&mut Cursor::new(cut)), Err(FrameError::Truncated));
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        assert_eq!(read_frame(&mut Cursor::new(&[])), Err(FrameError::Closed));
+    }
+}

@@ -1,0 +1,31 @@
+//! L4 network layer: the serving protocol over TCP, with zero new
+//! dependencies (DESIGN.md §4b).
+//!
+//! * [`frame`] — length-prefixed, checksummed, versioned binary framing
+//!   over any `Read`/`Write` pair, with typed rejection of oversized,
+//!   truncated, or wrong-version frames;
+//! * [`wire`] — the byte-level encoding of the full
+//!   [`crate::coordinator::protocol`] grammar (requests, responses, every
+//!   error variant, gap/partial diagnostics) plus the connection-level
+//!   hello/submit/shutdown envelope;
+//! * [`server`] — [`NetServer`]: `dpp serve --listen` routes framed
+//!   requests into a [`crate::coordinator::Coordinator`] keyed by session
+//!   name, preserving batch formation for pipelined clients;
+//! * [`client`] — [`NetClient`]: blocking or pipelined typed requests with
+//!   [`crate::coordinator::RequestError::Disconnected`] on transport loss;
+//! * [`remote_shard`] — `dpp shard-node` hosts one shard of a
+//!   [`crate::linalg::ShardSetMatrix`]; [`RemoteShard`] runs the per-shard
+//!   sweep interface over a connection so the coordinator scatters fold
+//!   requests and gathers accumulators without the data ever leaving its
+//!   node — bit-identical to local execution by the chained-accumulator
+//!   contract (DESIGN.md §4b.4).
+
+pub mod client;
+pub mod frame;
+pub mod remote_shard;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use remote_shard::{spawn_shard_node, stop_shard_node, RemoteShard, ShardNodeHandle};
+pub use server::NetServer;

@@ -1,0 +1,174 @@
+//! Framed TCP front door for a [`Coordinator`] (DESIGN.md §4b.3).
+//!
+//! [`NetServer`] owns a listener and a coordinator; each accepted
+//! connection gets a reader thread (decodes [`ClientMsg`]s, submits to the
+//! coordinator) and a responder thread (blocks on each request's reply
+//! slot, writes [`ServerMsg::Reply`]s back in submission order). Because
+//! `Coordinator::submit` never blocks, a pipelining client's burst lands in
+//! the router as one tick and batches exactly as in-process submissions do
+//! — the serving semantics (and the responses, bit for bit) are those of
+//! the in-process coordinator; only the transport changes.
+//!
+//! Protocol per connection: the client speaks first with
+//! [`ClientMsg::Hello`]; the server answers [`ServerMsg::Hello`] carrying
+//! its wire version and session names, then closes if the versions differ
+//! (the client saw both versions and can report the mismatch). Any framing
+//! or grammar error afterwards drops that connection only — in-flight
+//! replies for a vanished peer are discarded, never panicked on.
+//! [`ClientMsg::Shutdown`] drains the connection's queued replies, answers
+//! [`ServerMsg::ShuttingDown`], and stops the accept loop.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{decode_client_msg, encode_server_msg, ClientMsg, ServerMsg, WIRE_VERSION};
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::{Coordinator, PendingResponse, Response};
+
+/// Accept-loop poll interval (the listener is non-blocking so the loop can
+/// observe the shutdown flag).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// A bound, not-yet-running server. Register sessions on the
+/// [`Coordinator`] first, then hand it over; [`NetServer::run`] serves
+/// until a client asks for shutdown and returns per-session metrics.
+pub struct NetServer {
+    listener: TcpListener,
+    coord: Arc<Mutex<Coordinator>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:7700`, or port 0 for an ephemeral
+    /// port — read it back with [`NetServer::local_addr`]).
+    pub fn bind(coord: Coordinator, listen: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding serve listener on {listen}"))?;
+        listener.set_nonblocking(true).context("setting serve listener non-blocking")?;
+        Ok(NetServer {
+            listener,
+            coord: Arc::new(Mutex::new(coord)),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading serve listener address")
+    }
+
+    /// Serve connections until a client sends [`ClientMsg::Shutdown`], then
+    /// close every session and return its metrics in registration order.
+    pub fn run(self) -> Vec<(String, ServiceMetrics)> {
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let coord = Arc::clone(&self.coord);
+                    let stop = Arc::clone(&self.stop);
+                    // detached: a connection thread blocked on an idle
+                    // peer's next frame exits on its own when the peer
+                    // hangs up; joining it here could wait forever
+                    std::thread::Builder::new()
+                        .name("dpp-serve-conn".to_string())
+                        .spawn(move || serve_connection(stream, coord, stop))
+                        .expect("spawning serve connection thread");
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => break,
+            }
+        }
+        let coord = self.coord.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::new();
+        for name in coord.sessions() {
+            if let Some(metrics) = coord.close_session(&name) {
+                out.push((name, metrics));
+            }
+        }
+        out
+    }
+}
+
+/// One queued reply slot (or the shutdown marker) handed from the reader
+/// to the responder thread.
+enum ConnReply {
+    Reply { id: u64, slot: PendingResponse },
+    Shutdown,
+}
+
+fn serve_connection(stream: TcpStream, coord: Arc<Mutex<Coordinator>>, stop: Arc<AtomicBool>) {
+    let Ok(mut reader) = stream.try_clone() else { return };
+    let mut writer = stream;
+    // hello-first: anything else on a fresh connection is not our client
+    let client_version = match read_frame(&mut reader).map(|p| decode_client_msg(&p)) {
+        Ok(Ok(ClientMsg::Hello { version })) => version,
+        _ => return,
+    };
+    let sessions = coord.lock().unwrap_or_else(|e| e.into_inner()).sessions();
+    let hello = encode_server_msg(&ServerMsg::Hello { version: WIRE_VERSION, sessions });
+    if write_frame(&mut writer, &hello).is_err() || client_version != WIRE_VERSION {
+        return;
+    }
+
+    let (rtx, rrx) = channel::<ConnReply>();
+    let responder = std::thread::Builder::new()
+        .name("dpp-serve-reply".to_string())
+        .spawn(move || respond_loop(writer, rrx))
+        .expect("spawning serve responder thread");
+    loop {
+        let Ok(payload) = read_frame(&mut reader) else {
+            break; // disconnect or corrupt frame → this connection only
+        };
+        match decode_client_msg(&payload) {
+            Ok(ClientMsg::Submit { id, session, request }) => {
+                let slot = coord
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .submit(&session, request);
+                if rtx.send(ConnReply::Reply { id, slot }).is_err() {
+                    break; // responder lost its socket
+                }
+            }
+            Ok(ClientMsg::Shutdown) => {
+                let _ = rtx.send(ConnReply::Shutdown);
+                break;
+            }
+            // a second hello or an undecodable frame is a protocol error
+            Ok(ClientMsg::Hello { .. }) | Err(_) => break,
+        }
+    }
+    drop(rtx);
+    if responder.join().unwrap_or(false) {
+        stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Write replies in submission order (FIFO through the channel), so a
+/// pipelining client can match `id`s without reordering. Returns true when
+/// the connection asked the whole server to shut down.
+fn respond_loop(mut writer: TcpStream, rrx: Receiver<ConnReply>) -> bool {
+    while let Ok(msg) = rrx.recv() {
+        match msg {
+            ConnReply::Reply { id, slot } => {
+                let response = slot.recv_response().unwrap_or_else(Response::Error);
+                let bytes = encode_server_msg(&ServerMsg::Reply { id, response });
+                if write_frame(&mut writer, &bytes).is_err() {
+                    return false; // peer hung up; drop remaining replies
+                }
+            }
+            ConnReply::Shutdown => {
+                let bytes = encode_server_msg(&ServerMsg::ShuttingDown);
+                let _ = write_frame(&mut writer, &bytes);
+                return true;
+            }
+        }
+    }
+    false
+}

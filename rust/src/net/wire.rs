@@ -1,0 +1,922 @@
+//! Wire encode/decode for the coordinator protocol (DESIGN.md §4b).
+//!
+//! One frame payload (see [`super::frame`]) carries one message. The codec
+//! covers the *full* [`crate::coordinator`] grammar — every [`Request`] and
+//! [`Response`] variant, every [`RequestError`], the deadline / tolerance /
+//! pipeline-override options, and the `gap`/`partial` tags that keep
+//! deadline-bounded answers meaningful remotely. All floats travel as raw
+//! IEEE-754 bits (`to_bits`/`from_bits`), so responses survive the socket
+//! hop **bit-exactly** — including NaN payloads and the duality-gap
+//! certificates the partial-answer contract leans on.
+//!
+//! Version negotiation: a connection opens with [`ClientMsg::Hello`]; the
+//! server answers [`ServerMsg::Hello`] carrying its [`WIRE_VERSION`] and
+//! session names, then closes if the versions differ. The frame layer has
+//! its own (lower) version byte; the wire version covers the grammar.
+
+use std::time::Duration;
+
+use crate::coordinator::{
+    PathSummary, Prediction, Request, RequestError, RequestOptions, Response,
+    ScreenResponse, ServiceMetrics, SessionStats, WarmResponse,
+};
+use crate::path::SolverKind;
+use crate::screening::{ScreenPipeline, StageCount};
+use crate::util::stats::OnlineStats;
+
+/// Version of the message grammar (negotiated via the hellos).
+pub const WIRE_VERSION: u32 = 1;
+
+/// Typed decode failure: truncated buffer, unknown tag, bad UTF-8, or a
+/// name (pipeline / solver) the receiving build doesn't know.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError(msg.into()))
+}
+
+/// First message on every connection (client → server).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// Open the conversation and state the client's grammar version.
+    Hello { version: u32 },
+    /// One request for one named session. `id` is echoed in the reply so a
+    /// pipelining client can match answers to questions.
+    Submit { id: u64, session: String, request: Request },
+    /// Ask the server to shut down (drains in-flight replies first).
+    Shutdown,
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// Hello reply: the server's version and its registered session names.
+    Hello { version: u32, sessions: Vec<String> },
+    /// Answer to the [`ClientMsg::Submit`] with the same `id`.
+    Reply { id: u64, response: Response },
+    /// Acknowledges [`ClientMsg::Shutdown`]; the server closes after this.
+    ShuttingDown,
+}
+
+// ---------------------------------------------------------------------------
+// primitive encoder / decoder
+
+/// Byte-buffer encoder. Integers are LE; floats travel as raw bits.
+pub struct Enc(pub Vec<u8>);
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc(Vec::new())
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+    pub fn usizes(&mut self, xs: &[usize]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.usize(x);
+        }
+    }
+    pub fn u32s(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    /// `Duration` as whole nanoseconds (u64 — caps at ~584 years).
+    pub fn duration(&mut self, d: Duration) {
+        self.u64(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Enc::new()
+    }
+}
+
+/// Cursor-style decoder over a received payload.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return err(format!(
+                "truncated message: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Fails unless every byte was consumed — trailing garbage is a
+    /// protocol error, not padding.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return err(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+    pub fn usize(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError(format!("{v} overflows usize")))
+    }
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| WireError(format!("bad UTF-8: {e}")))
+    }
+    pub fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+    pub fn usizes(&mut self) -> Result<Vec<usize>, WireError> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.usize()?);
+        }
+        Ok(v)
+    }
+    pub fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 4 + 1));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+    pub fn opt_f64(&mut self) -> Result<Option<f64>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => err(format!("bad Option tag {t}")),
+        }
+    }
+    pub fn duration(&mut self) -> Result<Duration, WireError> {
+        Ok(Duration::from_nanos(self.u64()?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol codecs
+
+fn enc_options(e: &mut Enc, o: &RequestOptions) {
+    match o.deadline {
+        Some(d) => {
+            e.u8(1);
+            e.duration(d);
+        }
+        None => e.u8(0),
+    }
+    e.opt_f64(o.tol_gap);
+    // A pipeline override travels by name: `name()` ↔ `parse()` round-trip
+    // for the whole grammar, including the `dynamic:` prefix.
+    match &o.pipeline {
+        Some(p) => {
+            e.u8(1);
+            e.str(&p.name());
+        }
+        None => e.u8(0),
+    }
+}
+
+fn dec_options(d: &mut Dec<'_>) -> Result<RequestOptions, WireError> {
+    let deadline = match d.u8()? {
+        0 => None,
+        1 => Some(d.duration()?),
+        t => return err(format!("bad deadline tag {t}")),
+    };
+    let tol_gap = d.opt_f64()?;
+    let pipeline = match d.u8()? {
+        0 => None,
+        1 => {
+            let name = d.str()?;
+            Some(
+                ScreenPipeline::parse(&name)
+                    .map_err(|e| WireError(format!("bad pipeline `{name}`: {e}")))?,
+            )
+        }
+        t => return err(format!("bad pipeline tag {t}")),
+    };
+    Ok(RequestOptions { deadline, tol_gap, pipeline })
+}
+
+/// Encode a [`Request`] into `e`.
+pub fn enc_request(e: &mut Enc, r: &Request) {
+    match r {
+        Request::Screen { lam, opts } => {
+            e.u8(0);
+            e.f64(*lam);
+            enc_options(e, opts);
+        }
+        Request::FitPath { grid, lo, opts } => {
+            e.u8(1);
+            e.usize(*grid);
+            e.f64(*lo);
+            enc_options(e, opts);
+        }
+        Request::Predict { features, lam, opts } => {
+            e.u8(2);
+            e.f64s(features);
+            e.f64(*lam);
+            enc_options(e, opts);
+        }
+        Request::Warm { lam } => {
+            e.u8(3);
+            e.f64(*lam);
+        }
+        Request::SessionStats => e.u8(4),
+    }
+}
+
+/// Decode a [`Request`] from `d`.
+pub fn dec_request(d: &mut Dec<'_>) -> Result<Request, WireError> {
+    Ok(match d.u8()? {
+        0 => Request::Screen { lam: d.f64()?, opts: dec_options(d)? },
+        1 => Request::FitPath { grid: d.usize()?, lo: d.f64()?, opts: dec_options(d)? },
+        2 => Request::Predict {
+            features: d.f64s()?,
+            lam: d.f64()?,
+            opts: dec_options(d)?,
+        },
+        3 => Request::Warm { lam: d.f64()? },
+        4 => Request::SessionStats,
+        t => return err(format!("bad Request tag {t}")),
+    })
+}
+
+fn enc_stage_counts(e: &mut Enc, xs: &[StageCount]) {
+    e.u32(xs.len() as u32);
+    for s in xs {
+        e.str(&s.stage);
+        e.usize(s.discarded);
+    }
+}
+
+fn dec_stage_counts(d: &mut Dec<'_>) -> Result<Vec<StageCount>, WireError> {
+    let n = d.u32()? as usize;
+    let mut v = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        v.push(StageCount { stage: d.str()?, discarded: d.usize()? });
+    }
+    Ok(v)
+}
+
+fn enc_online(e: &mut Enc, s: &OnlineStats) {
+    let (n, mean, m2, min, max) = s.to_raw();
+    e.u64(n);
+    e.f64(mean);
+    e.f64(m2);
+    e.f64(min);
+    e.f64(max);
+}
+
+fn dec_online(d: &mut Dec<'_>) -> Result<OnlineStats, WireError> {
+    Ok(OnlineStats::from_raw(d.u64()?, d.f64()?, d.f64()?, d.f64()?, d.f64()?))
+}
+
+fn enc_metrics(e: &mut Enc, m: &ServiceMetrics) {
+    e.u64(m.requests);
+    e.u64(m.batches);
+    enc_online(e, &m.latency);
+    enc_online(e, &m.batch_size);
+    enc_online(e, &m.rejection_ratio);
+    enc_online(e, &m.kept_features);
+    e.u64(m.partials);
+    e.f64s(m.latency_samples());
+}
+
+fn dec_metrics(d: &mut Dec<'_>) -> Result<ServiceMetrics, WireError> {
+    Ok(ServiceMetrics::from_parts(
+        d.u64()?,
+        d.u64()?,
+        dec_online(d)?,
+        dec_online(d)?,
+        dec_online(d)?,
+        dec_online(d)?,
+        d.u64()?,
+        d.f64s()?,
+    ))
+}
+
+fn enc_error(e: &mut Enc, re: &RequestError) {
+    match re {
+        RequestError::InvalidLambda(lam) => {
+            e.u8(0);
+            e.f64(*lam);
+        }
+        RequestError::UnknownSession(s) => {
+            e.u8(1);
+            e.str(s);
+        }
+        RequestError::DuplicateSession(s) => {
+            e.u8(2);
+            e.str(s);
+        }
+        RequestError::SessionClosed { session, reason } => {
+            e.u8(3);
+            e.str(session);
+            e.str(reason);
+        }
+        RequestError::InvalidRequest(msg) => {
+            e.u8(4);
+            e.str(msg);
+        }
+        RequestError::Disconnected(msg) => {
+            e.u8(5);
+            e.str(msg);
+        }
+    }
+}
+
+fn dec_error(d: &mut Dec<'_>) -> Result<RequestError, WireError> {
+    Ok(match d.u8()? {
+        0 => RequestError::InvalidLambda(d.f64()?),
+        1 => RequestError::UnknownSession(d.str()?),
+        2 => RequestError::DuplicateSession(d.str()?),
+        3 => RequestError::SessionClosed { session: d.str()?, reason: d.str()? },
+        4 => RequestError::InvalidRequest(d.str()?),
+        5 => RequestError::Disconnected(d.str()?),
+        t => return err(format!("bad RequestError tag {t}")),
+    })
+}
+
+/// Encode a [`Response`] into `e`.
+pub fn enc_response(e: &mut Enc, r: &Response) {
+    match r {
+        Response::Screen(s) => {
+            e.u8(0);
+            e.f64(s.lam);
+            e.usizes(&s.kept);
+            e.f64s(&s.beta);
+            e.usize(s.discarded);
+            e.usize(s.true_zeros);
+            e.f64(s.latency_s);
+            enc_stage_counts(e, &s.stage_discards);
+            e.usize(s.dynamic_discards);
+            e.f64(s.gap);
+            e.bool(s.partial);
+        }
+        Response::Path(p) => {
+            e.u8(1);
+            e.str(&p.rule);
+            e.str(p.solver);
+            e.usize(p.steps);
+            e.f64(p.mean_rejection);
+            e.f64(p.screen_secs);
+            e.f64(p.solve_secs);
+            e.f64(p.max_gap);
+            e.bool(p.partial);
+            e.f64(p.latency_s);
+        }
+        Response::Predict(p) => {
+            e.u8(2);
+            e.f64(p.lam);
+            e.f64(p.yhat);
+            e.f64(p.gap);
+            e.bool(p.partial);
+            e.f64(p.latency_s);
+        }
+        Response::Warmed(w) => {
+            e.u8(3);
+            e.f64(w.lam);
+            e.f64(w.gap);
+            e.f64(w.latency_s);
+        }
+        Response::Stats(s) => {
+            e.u8(4);
+            e.str(&s.session);
+            e.str(&s.backend);
+            e.str(&s.pipeline);
+            e.usize(s.n);
+            e.usize(s.p);
+            e.f64(s.lam_max);
+            e.f64(s.anchor_lam);
+            enc_metrics(e, &s.metrics);
+        }
+        Response::Error(re) => {
+            e.u8(5);
+            enc_error(e, re);
+        }
+    }
+}
+
+/// Decode a [`Response`] from `d`.
+pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
+    Ok(match d.u8()? {
+        0 => Response::Screen(ScreenResponse {
+            lam: d.f64()?,
+            kept: d.usizes()?,
+            beta: d.f64s()?,
+            discarded: d.usize()?,
+            true_zeros: d.usize()?,
+            latency_s: d.f64()?,
+            stage_discards: dec_stage_counts(d)?,
+            dynamic_discards: d.usize()?,
+            gap: d.f64()?,
+            partial: d.bool()?,
+        }),
+        1 => {
+            let rule = d.str()?;
+            let solver_name = d.str()?;
+            // `solver` is `&'static str`: map the wire name back onto the
+            // matching SolverKind's static name.
+            let solver = SolverKind::from_name(&solver_name)
+                .map(|k| k.name())
+                .ok_or_else(|| WireError(format!("unknown solver `{solver_name}`")))?;
+            Response::Path(PathSummary {
+                rule,
+                solver,
+                steps: d.usize()?,
+                mean_rejection: d.f64()?,
+                screen_secs: d.f64()?,
+                solve_secs: d.f64()?,
+                max_gap: d.f64()?,
+                partial: d.bool()?,
+                latency_s: d.f64()?,
+            })
+        }
+        2 => Response::Predict(Prediction {
+            lam: d.f64()?,
+            yhat: d.f64()?,
+            gap: d.f64()?,
+            partial: d.bool()?,
+            latency_s: d.f64()?,
+        }),
+        3 => Response::Warmed(WarmResponse {
+            lam: d.f64()?,
+            gap: d.f64()?,
+            latency_s: d.f64()?,
+        }),
+        4 => Response::Stats(SessionStats {
+            session: d.str()?,
+            backend: d.str()?,
+            pipeline: d.str()?,
+            n: d.usize()?,
+            p: d.usize()?,
+            lam_max: d.f64()?,
+            anchor_lam: d.f64()?,
+            metrics: dec_metrics(d)?,
+        }),
+        5 => Response::Error(dec_error(d)?),
+        t => return err(format!("bad Response tag {t}")),
+    })
+}
+
+/// Serialize a [`ClientMsg`] to one frame payload.
+pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
+    let mut e = Enc::new();
+    match m {
+        ClientMsg::Hello { version } => {
+            e.u8(0);
+            e.u32(*version);
+        }
+        ClientMsg::Submit { id, session, request } => {
+            e.u8(1);
+            e.u64(*id);
+            e.str(session);
+            enc_request(&mut e, request);
+        }
+        ClientMsg::Shutdown => e.u8(2),
+    }
+    e.0
+}
+
+/// Deserialize a [`ClientMsg`] from one frame payload.
+pub fn decode_client_msg(buf: &[u8]) -> Result<ClientMsg, WireError> {
+    let mut d = Dec::new(buf);
+    let m = match d.u8()? {
+        0 => ClientMsg::Hello { version: d.u32()? },
+        1 => ClientMsg::Submit {
+            id: d.u64()?,
+            session: d.str()?,
+            request: dec_request(&mut d)?,
+        },
+        2 => ClientMsg::Shutdown,
+        t => return err(format!("bad ClientMsg tag {t}")),
+    };
+    d.finish()?;
+    Ok(m)
+}
+
+/// Serialize a [`ServerMsg`] to one frame payload.
+pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
+    let mut e = Enc::new();
+    match m {
+        ServerMsg::Hello { version, sessions } => {
+            e.u8(0);
+            e.u32(*version);
+            e.u32(sessions.len() as u32);
+            for s in sessions {
+                e.str(s);
+            }
+        }
+        ServerMsg::Reply { id, response } => {
+            e.u8(1);
+            e.u64(*id);
+            enc_response(&mut e, response);
+        }
+        ServerMsg::ShuttingDown => e.u8(2),
+    }
+    e.0
+}
+
+/// Deserialize a [`ServerMsg`] from one frame payload.
+pub fn decode_server_msg(buf: &[u8]) -> Result<ServerMsg, WireError> {
+    let mut d = Dec::new(buf);
+    let m = match d.u8()? {
+        0 => {
+            let version = d.u32()?;
+            let n = d.u32()? as usize;
+            let mut sessions = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                sessions.push(d.str()?);
+            }
+            ServerMsg::Hello { version, sessions }
+        }
+        1 => ServerMsg::Reply { id: d.u64()?, response: dec_response(&mut d)? },
+        2 => ServerMsg::ShuttingDown,
+        t => return err(format!("bad ServerMsg tag {t}")),
+    };
+    d.finish()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn request_payload(r: &Request) -> Vec<u8> {
+        let mut e = Enc::new();
+        enc_request(&mut e, r);
+        e.0
+    }
+
+    fn response_payload(r: &Response) -> Vec<u8> {
+        let mut e = Enc::new();
+        enc_response(&mut e, r);
+        e.0
+    }
+
+    fn roundtrip_response(r: &Response) -> Response {
+        let buf = response_payload(r);
+        let mut d = Dec::new(&buf);
+        let got = dec_response(&mut d).unwrap();
+        d.finish().unwrap();
+        got
+    }
+
+    fn rand_options(rng: &mut Rng) -> RequestOptions {
+        let deadline = if rng.f64() < 0.5 {
+            Some(Duration::from_nanos(rng.next_u64() >> 20))
+        } else {
+            None
+        };
+        let tol_gap = if rng.f64() < 0.5 { Some(rng.f64() * 1e-3) } else { None };
+        let specs =
+            ["edpp", "hybrid:strong+edpp", "cascade:dome,edpp", "dynamic:edpp", "safe"];
+        let pipeline = if rng.f64() < 0.5 {
+            Some(ScreenPipeline::parse(specs[rng.usize(specs.len())]).unwrap())
+        } else {
+            None
+        };
+        RequestOptions { deadline, tol_gap, pipeline }
+    }
+
+    fn rand_request(rng: &mut Rng) -> Request {
+        match rng.usize(5) {
+            0 => Request::Screen { lam: rng.f64(), opts: rand_options(rng) },
+            1 => Request::FitPath {
+                grid: 1 + rng.usize(40),
+                lo: 0.01 + rng.f64() * 0.9,
+                opts: rand_options(rng),
+            },
+            2 => Request::Predict {
+                features: (0..rng.usize(20)).map(|_| rng.normal()).collect(),
+                lam: rng.f64(),
+                opts: rand_options(rng),
+            },
+            3 => Request::Warm { lam: rng.f64() },
+            _ => Request::SessionStats,
+        }
+    }
+
+    fn rand_online(rng: &mut Rng) -> OnlineStats {
+        let mut s = OnlineStats::new();
+        for _ in 0..rng.usize(8) {
+            s.push(rng.normal());
+        }
+        s
+    }
+
+    fn rand_metrics(rng: &mut Rng) -> ServiceMetrics {
+        ServiceMetrics::from_parts(
+            rng.next_u64() >> 40,
+            rng.next_u64() >> 40,
+            rand_online(rng),
+            rand_online(rng),
+            rand_online(rng),
+            rand_online(rng),
+            rng.next_u64() >> 40,
+            (0..rng.usize(16)).map(|_| rng.f64()).collect(),
+        )
+    }
+
+    fn rand_error(rng: &mut Rng) -> RequestError {
+        match rng.usize(6) {
+            0 => {
+                // exercise the non-finite λ payloads too
+                let lam = match rng.usize(3) {
+                    0 => f64::NAN,
+                    1 => f64::NEG_INFINITY,
+                    _ => -rng.f64(),
+                };
+                RequestError::InvalidLambda(lam)
+            }
+            1 => RequestError::UnknownSession("ghost".into()),
+            2 => RequestError::DuplicateSession("twin".into()),
+            3 => RequestError::SessionClosed {
+                session: "s1".into(),
+                reason: "worker panicked: boom".into(),
+            },
+            4 => RequestError::InvalidRequest("features.len() = 3 ≠ p = 5".into()),
+            _ => RequestError::Disconnected("router gone".into()),
+        }
+    }
+
+    fn rand_response(rng: &mut Rng) -> Response {
+        match rng.usize(6) {
+            0 => Response::Screen(ScreenResponse {
+                lam: rng.f64(),
+                kept: (0..rng.usize(12)).map(|_| rng.usize(500)).collect(),
+                beta: (0..rng.usize(12)).map(|_| rng.normal()).collect(),
+                discarded: rng.usize(500),
+                true_zeros: rng.usize(500),
+                latency_s: rng.f64(),
+                stage_discards: vec![
+                    StageCount { stage: "strong".into(), discarded: rng.usize(400) },
+                    StageCount { stage: "edpp".into(), discarded: rng.usize(100) },
+                ],
+                dynamic_discards: rng.usize(50),
+                gap: rng.f64() * 1e-6,
+                partial: rng.f64() < 0.5,
+            }),
+            1 => Response::Path(PathSummary {
+                rule: "hybrid:strong+edpp".into(),
+                solver: SolverKind::Cd.name(),
+                steps: rng.usize(40),
+                mean_rejection: rng.f64(),
+                screen_secs: rng.f64(),
+                solve_secs: rng.f64(),
+                max_gap: rng.f64() * 1e-5,
+                partial: rng.f64() < 0.5,
+                latency_s: rng.f64(),
+            }),
+            2 => Response::Predict(Prediction {
+                lam: rng.f64(),
+                yhat: rng.normal(),
+                gap: rng.f64() * 1e-7,
+                partial: rng.f64() < 0.5,
+                latency_s: rng.f64(),
+            }),
+            3 => Response::Warmed(WarmResponse {
+                lam: rng.f64(),
+                gap: rng.f64() * 1e-7,
+                latency_s: rng.f64(),
+            }),
+            4 => Response::Stats(SessionStats {
+                session: "s0".into(),
+                backend: "sharded".into(),
+                pipeline: "dynamic:edpp".into(),
+                n: rng.usize(1000),
+                p: rng.usize(5000),
+                lam_max: rng.f64() * 10.0,
+                anchor_lam: rng.f64(),
+                metrics: rand_metrics(rng),
+            }),
+            _ => Response::Error(rand_error(rng)),
+        }
+    }
+
+    #[test]
+    fn responses_round_trip_bit_exactly() {
+        prop::check("response-roundtrip", 0x31A7, 64, |rng| {
+            let r = rand_response(rng);
+            assert_eq!(roundtrip_response(&r), r);
+        });
+    }
+
+    #[test]
+    fn requests_round_trip_to_identical_bytes() {
+        // Byte-level comparison (encode → decode → re-encode) also pins
+        // encoder determinism, which value equality alone would not.
+        prop::check("request-roundtrip", 0x31A8, 64, |rng| {
+            let r = rand_request(rng);
+            let bytes = request_payload(&r);
+            let mut d = Dec::new(&bytes);
+            let back = dec_request(&mut d).unwrap();
+            d.finish().unwrap();
+            assert_eq!(request_payload(&back), bytes);
+        });
+    }
+
+    #[test]
+    fn every_error_variant_round_trips() {
+        let nan_lam = RequestError::InvalidLambda(f64::NAN);
+        let errors = [
+            nan_lam.clone(),
+            RequestError::InvalidLambda(-1.5),
+            RequestError::UnknownSession("ghost".into()),
+            RequestError::DuplicateSession("twin".into()),
+            RequestError::SessionClosed { session: "s".into(), reason: "r".into() },
+            RequestError::InvalidRequest("bad".into()),
+            RequestError::Disconnected("gone".into()),
+        ];
+        for e in &errors {
+            let got = roundtrip_response(&Response::Error(e.clone()));
+            if matches!(e, RequestError::InvalidLambda(l) if l.is_nan()) {
+                // NaN != NaN under PartialEq: check the bits came through.
+                match got {
+                    Response::Error(RequestError::InvalidLambda(l)) => {
+                        assert_eq!(l.to_bits(), f64::NAN.to_bits());
+                    }
+                    other => panic!("wrong decode: {other:?}"),
+                }
+            } else {
+                assert_eq!(got, Response::Error(e.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn gap_and_partial_tags_survive() {
+        let r = Response::Screen(ScreenResponse {
+            lam: 0.25,
+            kept: vec![1, 4],
+            beta: vec![0.5, -0.25],
+            discarded: 98,
+            true_zeros: 98,
+            latency_s: 0.012,
+            stage_discards: vec![StageCount { stage: "edpp".into(), discarded: 98 }],
+            dynamic_discards: 0,
+            gap: 3.5e-4,
+            partial: true,
+        });
+        match roundtrip_response(&r) {
+            Response::Screen(s) => {
+                assert!(s.partial);
+                assert_eq!(s.gap.to_bits(), (3.5e-4f64).to_bits());
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_and_control_messages_round_trip() {
+        let msgs = [
+            ClientMsg::Hello { version: WIRE_VERSION },
+            ClientMsg::Submit {
+                id: 7,
+                session: "s0".into(),
+                request: Request::Warm { lam: 0.5 },
+            },
+            ClientMsg::Shutdown,
+        ];
+        for m in &msgs {
+            let got = decode_client_msg(&encode_client_msg(m)).unwrap();
+            assert_eq!(&got, m);
+        }
+        let msgs = [
+            ServerMsg::Hello { version: WIRE_VERSION, sessions: vec!["s0".into(), "s1".into()] },
+            ServerMsg::Reply {
+                id: 7,
+                response: Response::Error(RequestError::UnknownSession("x".into())),
+            },
+            ServerMsg::ShuttingDown,
+        ];
+        for m in &msgs {
+            let got = decode_server_msg(&encode_server_msg(m)).unwrap();
+            assert_eq!(&got, m);
+        }
+    }
+
+    #[test]
+    fn corrupt_payloads_are_typed_errors() {
+        // unknown top-level tag
+        assert!(decode_client_msg(&[99]).is_err());
+        assert!(decode_server_msg(&[99]).is_err());
+        // truncated submit
+        let full = encode_client_msg(&ClientMsg::Submit {
+            id: 1,
+            session: "s0".into(),
+            request: Request::SessionStats,
+        });
+        for cut in 1..full.len() {
+            assert!(decode_client_msg(&full[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage
+        let mut noisy = encode_client_msg(&ClientMsg::Shutdown);
+        noisy.push(0);
+        assert!(decode_client_msg(&noisy).is_err());
+        // unknown solver name inside a Path response
+        let mut e = Enc::new();
+        e.u8(1);
+        e.str("edpp");
+        e.str("not-a-solver");
+        let errmsg = dec_response(&mut Dec::new(&e.0)).unwrap_err();
+        assert!(errmsg.0.contains("not-a-solver"), "{errmsg}");
+        // unknown pipeline name inside request options
+        let mut e = Enc::new();
+        e.u8(0); // Screen
+        e.f64(0.5);
+        e.u8(0); // no deadline
+        e.u8(0); // no tol override
+        e.u8(1); // pipeline present…
+        e.str("bogus:rule"); // …but unparseable
+        let errmsg = dec_request(&mut Dec::new(&e.0)).unwrap_err();
+        assert!(errmsg.0.contains("bogus"), "{errmsg}");
+    }
+}

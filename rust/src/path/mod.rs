@@ -13,6 +13,8 @@
 pub mod group;
 pub mod stability;
 
+use std::time::{Duration, Instant};
+
 use crate::linalg::DesignMatrix;
 use crate::screening::{
     pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
@@ -178,6 +180,13 @@ pub struct PathConfig {
     /// features, never discard an active one (DESIGN.md §1). 0.0 for the
     /// exact f64 backends.
     pub safety_slack: f64,
+    /// Wall-clock budget for the *whole* path. When set, the driver
+    /// re-splits the remaining budget across the remaining λ-grid before
+    /// every solve ([`replan_step_budget`]), so steps that finish early
+    /// donate their slack downstream instead of stranding it. `None` (the
+    /// default) leaves `solve_opts.time_budget` untouched — bit-identical
+    /// to the un-budgeted driver.
+    pub path_budget: Option<Duration>,
     pub solve_opts: SolveOptions,
 }
 
@@ -188,9 +197,20 @@ impl Default for PathConfig {
             kkt_repair: true,
             warm_start: true,
             safety_slack: 0.0,
+            path_budget: None,
             solve_opts: SolveOptions::default(),
         }
     }
+}
+
+/// The deadline re-plan: an even split of what's *left* over the steps
+/// still to run. Called before every step, this dominates the one-shot
+/// `total / steps` split: a step that uses less than its slice returns the
+/// difference to the pool, and a λ ≥ λmax trivial step (cost ≈ 0) donates
+/// its entire slice at the next re-plan. `steps_left == 0` is answered
+/// with the full remainder (defensive; the driver never asks).
+pub fn replan_step_budget(remaining: Duration, steps_left: usize) -> Duration {
+    remaining / steps_left.clamp(1, u32::MAX as usize) as u32
 }
 
 /// Per-λ record.
@@ -376,7 +396,22 @@ pub fn solve_path_with_screener(
     let mut keep = vec![true; p];
     let mut resid = vec![0.0; y.len()];
 
-    for &lam in &grid.values {
+    // deadline re-planning state: under a path budget each step's
+    // time_budget is re-derived from what actually remains, so early
+    // finishers donate slack downstream. KKT-repair re-solves within a
+    // step reuse that step's slice (a deliberate simplification: repairs
+    // are rare and cheap next to the main solve).
+    let path_t0 = Instant::now();
+    let total_steps = grid.values.len();
+    let mut solve_opts = cfg.solve_opts.clone();
+
+    for (step_idx, &lam) in grid.values.iter().enumerate() {
+        if let Some(budget) = cfg.path_budget {
+            solve_opts.time_budget = Some(replan_step_budget(
+                budget.saturating_sub(path_t0.elapsed()),
+                total_steps - step_idx,
+            ));
+        }
         if lam >= ctx.lam_max * (1.0 - 1e-12) {
             // trivial solution (eq. (8)); everything is screened by eq. (9)
             records.push(StepRecord {
@@ -431,10 +466,10 @@ pub fn solve_path_with_screener(
                         &cols,
                         lam,
                         warm.as_deref(),
-                        &cfg.solve_opts,
+                        &solve_opts,
                         Some(h),
                     ),
-                    None => solver.solve(x, y, &cols, lam, warm.as_deref(), &cfg.solve_opts),
+                    None => solver.solve(x, y, &cols, lam, warm.as_deref(), &solve_opts),
                 };
                 // fold in-solver gap-safe drops into the step's final mask
                 if let Some(h) = hook.as_mut() {
@@ -515,6 +550,73 @@ mod tests {
 
     fn grid_for(ds: &crate::data::Dataset, k: usize) -> LambdaGrid {
         LambdaGrid::relative(&ds.x, &ds.y, k, 0.05, 1.0)
+    }
+
+    #[test]
+    fn replan_first_slice_is_the_even_split() {
+        // before anything runs, the re-plan is exactly the old one-shot
+        // even split — the change only shows once slack appears
+        assert_eq!(
+            replan_step_budget(Duration::from_secs(10), 5),
+            Duration::from_secs(2)
+        );
+        // zero steps left never divides by zero (full remainder back)
+        assert_eq!(
+            replan_step_budget(Duration::from_secs(1), 0),
+            Duration::from_secs(1)
+        );
+        assert_eq!(replan_step_budget(Duration::ZERO, 3), Duration::ZERO);
+    }
+
+    #[test]
+    fn replan_donates_early_finisher_slack_downstream() {
+        // 1000 ms over 4 steps; the first two steps finish in a quarter of
+        // their slice. Under the re-plan, later steps inherit the slack;
+        // the one-shot even split would have pinned every slice at 250 ms.
+        let total = Duration::from_millis(1000);
+        let mut elapsed = Duration::ZERO;
+        let mut slices = Vec::new();
+        for step in 0..4usize {
+            let slice = replan_step_budget(total.saturating_sub(elapsed), 4 - step);
+            slices.push(slice);
+            elapsed += if step < 2 { slice / 4 } else { slice };
+        }
+        assert_eq!(slices[0], Duration::from_millis(250));
+        // 937.5 ms left over 3 steps
+        assert_eq!(slices[1], Duration::from_nanos(312_500_000));
+        // 859.375 ms left over 2 steps — well above the even split's 250 ms
+        assert_eq!(slices[2], Duration::from_nanos(429_687_500));
+        assert!(slices[2] > slices[0]);
+        assert_eq!(slices[3], slices[2]); // last step gets all that remains
+    }
+
+    #[test]
+    fn generous_path_budget_is_bit_identical_to_none() {
+        // path_budget only re-derives time_budget; with a budget no solve
+        // comes close to exhausting, trajectories must match exactly
+        let ds = synthetic::synthetic1(24, 60, 6, 0.1, 11);
+        let grid = grid_for(&ds, 6);
+        let base = solve_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            &PathConfig::default(),
+        );
+        let budgeted_cfg = PathConfig {
+            path_budget: Some(Duration::from_secs(600)),
+            ..Default::default()
+        };
+        let budgeted = solve_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            &budgeted_cfg,
+        );
+        assert_eq!(base.betas, budgeted.betas);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 }
 
 /// Streaming mean/variance (Welford) — used by the coordinator's metrics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct OnlineStats {
     n: u64,
     mean: f64,
@@ -91,6 +91,17 @@ impl OnlineStats {
     }
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Raw accumulator state `(n, mean, m2, min, max)` — used by the wire
+    /// codec so stats survive a socket hop bit-exactly.
+    pub fn to_raw(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max)
+    }
+
+    /// Rebuild from raw accumulator state (inverse of [`OnlineStats::to_raw`]).
+    pub fn from_raw(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        OnlineStats { n, mean, m2, min, max }
     }
 }
 

@@ -460,3 +460,266 @@ fn protocol_roundtrip_and_validation() {
     }
     coord.shutdown();
 }
+
+/// Field-wise equality of two responses, ignoring `latency_s` (wall-clock
+/// timings legitimately differ across transports — everything the solver
+/// computed must not).
+fn assert_same_payload(want: &Response, have: &Response, ctx: &str) {
+    match (want, have) {
+        (Response::Screen(w), Response::Screen(h)) => {
+            assert_eq!(w.lam, h.lam, "{ctx} λ");
+            assert_eq!(w.kept, h.kept, "{ctx} keep-set");
+            assert_eq!(w.beta, h.beta, "{ctx} solution bits");
+            assert_eq!(w.discarded, h.discarded, "{ctx} discarded");
+            assert_eq!(w.true_zeros, h.true_zeros, "{ctx} true zeros");
+            assert_eq!(w.stage_discards, h.stage_discards, "{ctx} stages");
+            assert_eq!(w.dynamic_discards, h.dynamic_discards, "{ctx} dynamic");
+            assert_eq!(w.gap, h.gap, "{ctx} gap bits");
+            assert_eq!(w.partial, h.partial, "{ctx} partial tag");
+        }
+        (Response::Predict(w), Response::Predict(h)) => {
+            assert_eq!(w.lam, h.lam, "{ctx} λ");
+            assert_eq!(w.yhat, h.yhat, "{ctx} prediction bits");
+            assert_eq!(w.gap, h.gap, "{ctx} gap bits");
+            assert_eq!(w.partial, h.partial, "{ctx} partial tag");
+        }
+        (Response::Path(w), Response::Path(h)) => {
+            assert_eq!(w.steps, h.steps, "{ctx} steps");
+            assert_eq!(w.rule, h.rule, "{ctx} rule");
+            assert_eq!(w.solver, h.solver, "{ctx} solver");
+            assert_eq!(w.mean_rejection, h.mean_rejection, "{ctx} rejection bits");
+            assert_eq!(w.max_gap, h.max_gap, "{ctx} max-gap bits");
+            assert_eq!(w.partial, h.partial, "{ctx} partial tag");
+        }
+        (w, h) => panic!("{ctx}: kind mismatch {w:?} vs {h:?}"),
+    }
+}
+
+/// The tentpole claim end-to-end: responses served over a loopback socket —
+/// including a session whose `ShardSetMatrix` shards live in shard-node
+/// threads behind real TCP connections — are bit-identical to the same
+/// program served by an in-process coordinator (the design matrix of the
+/// remote session never crosses into the serving process).
+#[test]
+fn socket_responses_bit_identical_to_in_process() {
+    use dpp_screen::net::{spawn_shard_node, NetClient, NetServer};
+
+    let (csc_a, y_a, lm_a) = sparse_problem(30, 120, 61);
+    let (csc_b, y_b, lm_b) = sparse_problem(35, 140, 62);
+    let (csc_c, y_c, lm_c) = sparse_problem(28, 100, 63);
+    let p_of = [csc_a.n_cols(), csc_b.n_cols(), csc_c.n_cols()];
+    let lam_maxes = [lm_a, lm_b, lm_c];
+    let ys = [y_a, y_b, y_c];
+    let pipelines = [
+        ScreenPipeline::single("edpp"),
+        ScreenPipeline::parse("hybrid:strong+edpp").unwrap(),
+        ScreenPipeline::parse("dynamic:edpp").unwrap(),
+    ];
+    // session 1's shards, split once so the local reference and the remote
+    // nodes hold the identical row ranges
+    let local_set = ShardSetMatrix::split_csc(&csc_b, 2);
+
+    // --- in-process reference: sequential per-session programs ---
+    let reference: Vec<Vec<Response>> = (0..3)
+        .map(|i| {
+            let coord = Coordinator::new();
+            let backend: Box<dyn DesignMatrix + Send> = match i {
+                0 => Box::new(csc_a.clone()),
+                1 => Box::new(ShardSetMatrix::split_csc(&csc_b, 2)),
+                _ => Box::new(csc_c.clone()),
+            };
+            coord
+                .register(SessionSpec::boxed(
+                    format!("s{i}"),
+                    backend,
+                    ys[i].clone(),
+                    pipelines[i].clone(),
+                    SolverKind::Cd,
+                    PathConfig::default(),
+                ))
+                .unwrap();
+            let out = session_program(lam_maxes[i], p_of[i])
+                .into_iter()
+                .map(|req| {
+                    coord.submit(&format!("s{i}"), req).recv_response().unwrap()
+                })
+                .collect();
+            coord.shutdown();
+            out
+        })
+        .collect();
+
+    // --- socket run: session 1 backed by two live shard-node listeners ---
+    let mut nodes = Vec::new();
+    let mut addrs = Vec::new();
+    for shard in local_set.shards() {
+        let node = spawn_shard_node(shard.backend().clone(), "127.0.0.1:0").unwrap();
+        addrs.push(node.addr().to_string());
+        nodes.push(node);
+    }
+    let coord = Coordinator::new();
+    for i in 0..3 {
+        let backend: Box<dyn DesignMatrix + Send> = match i {
+            0 => Box::new(csc_a.clone()),
+            1 => Box::new(ShardSetMatrix::connect(&addrs).unwrap()),
+            _ => Box::new(csc_c.clone()),
+        };
+        coord
+            .register(SessionSpec::boxed(
+                format!("s{i}"),
+                backend,
+                ys[i].clone(),
+                pipelines[i].clone(),
+                SolverKind::Cd,
+                PathConfig::default(),
+            ))
+            .unwrap();
+    }
+    let server = NetServer::bind(coord, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    let advertised: Vec<&str> = client.sessions().iter().map(|s| s.as_str()).collect();
+    assert_eq!(advertised, ["s0", "s1", "s2"], "hello advertises sessions");
+
+    // pipeline the whole interleaved burst, then read replies in order —
+    // exercising frame sequencing, batch formation, and id matching at once
+    let programs: Vec<Vec<Request>> =
+        (0..3).map(|i| session_program(lam_maxes[i], p_of[i])).collect();
+    let mut expected = Vec::new();
+    for step in 0..programs[0].len() {
+        for (i, program) in programs.iter().enumerate() {
+            let id = client
+                .submit(&format!("s{i}"), program[step].clone())
+                .unwrap();
+            expected.push((id, i, step));
+        }
+    }
+    for (id, i, step) in expected {
+        let (got_id, response) = client.recv_reply().unwrap();
+        assert_eq!(got_id, id, "replies arrive in submission order");
+        assert_same_payload(
+            &reference[i][step],
+            &response,
+            &format!("s{i} step {step} over socket"),
+        );
+    }
+
+    client.shutdown_server().unwrap();
+    let metrics = server_thread.join().unwrap();
+    assert_eq!(metrics.len(), 3, "shutdown reports every session's metrics");
+    for node in nodes {
+        node.stop();
+        node.join();
+    }
+}
+
+/// Deadline semantics survive the wire: a request with an (effectively
+/// expired) deadline comes back gap-tagged partial through the socket,
+/// and the following exact request is unaffected.
+#[test]
+fn deadline_over_socket_round_trips_partial() {
+    use dpp_screen::net::{NetClient, NetServer};
+
+    let ds = synthetic::synthetic1(80, 600, 40, 0.1, 64);
+    let csc = ds.x.to_csc();
+    let lam_max = dual::lambda_max(&csc, &ds.y);
+    let cfg = PathConfig {
+        solve_opts: dpp_screen::solver::SolveOptions {
+            tol_gap: 1e-10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::new();
+    coord
+        .register(SessionSpec::new(
+            "d",
+            csc,
+            ds.y.clone(),
+            ScreenPipeline::parse("dynamic:edpp").unwrap(),
+            SolverKind::Cd,
+            cfg,
+        ))
+        .unwrap();
+    let server = NetServer::bind(coord, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    let exact = match client
+        .request("d", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+        .unwrap()
+    {
+        Response::Screen(s) => s,
+        other => panic!("expected screen, got {other:?}"),
+    };
+    assert!(!exact.partial);
+    assert!(exact.gap <= 1e-10);
+
+    let partial = match client
+        .request(
+            "d",
+            Request::Screen {
+                lam: 0.1 * lam_max,
+                opts: RequestOptions::with_deadline(Duration::from_micros(1)),
+            },
+        )
+        .unwrap()
+    {
+        Response::Screen(s) => s,
+        other => panic!("expected screen, got {other:?}"),
+    };
+    assert!(partial.partial, "expired deadline must come back partial-tagged");
+    assert!(partial.gap.is_finite());
+    assert!(partial.gap > 1e-10, "partial gap reflects the unfinished solve");
+
+    client.shutdown_server().unwrap();
+    server_thread.join().unwrap();
+}
+
+/// A server that vanishes mid-request surfaces as the typed
+/// `RequestError::Disconnected` — no panic, no hang. The "server" here is
+/// a raw listener that completes the hello handshake, reads one request,
+/// and drops the socket without replying.
+#[test]
+fn peer_disconnect_mid_request_is_typed_disconnected() {
+    use dpp_screen::net::frame::{read_frame, write_frame};
+    use dpp_screen::net::wire::{
+        decode_client_msg, encode_server_msg, ClientMsg, ServerMsg, WIRE_VERSION,
+    };
+    use dpp_screen::net::NetClient;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake_server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let hello = read_frame(&mut stream).unwrap();
+        assert!(matches!(
+            decode_client_msg(&hello).unwrap(),
+            ClientMsg::Hello { version: WIRE_VERSION }
+        ));
+        let reply = encode_server_msg(&ServerMsg::Hello {
+            version: WIRE_VERSION,
+            sessions: vec!["s0".to_string()],
+        });
+        write_frame(&mut stream, &reply).unwrap();
+        // read the request, then hang up without answering
+        let _ = read_frame(&mut stream).unwrap();
+    });
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    assert_eq!(client.sessions().len(), 1);
+    assert_eq!(client.sessions()[0], "s0");
+    let err = client
+        .request("s0", Request::Screen { lam: 1.0, opts: Default::default() })
+        .unwrap_err();
+    match err {
+        RequestError::Disconnected(msg) => {
+            assert!(msg.contains("reading reply"), "actionable message: {msg}")
+        }
+        other => panic!("expected Disconnected, got {other:?}"),
+    }
+    fake_server.join().unwrap();
+}
