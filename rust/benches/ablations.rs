@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//! Ablation benches for the design choices DESIGN.md §7 calls out:
 //!
 //! · λ-grid density vs rejection (sequential rules tighten with density —
 //!   Remark 2's mechanism, quantified)

@@ -2,7 +2,7 @@
 //!
 //! · native gemv_t (unrolled) vs a naive per-column loop — L3 ablation
 //! · full EDPP screen step vs one bare sweep — the "screening overhead ≤
-//!   1.3× one sweep" target of DESIGN.md §9
+//!   1.3× one sweep" target of DESIGN.md §10
 //! · dense vs CSC backend for the sweep and a full EDPP path — the
 //!   `DesignMatrix` backend ablation
 //! · PJRT artifact sweep vs native — the AOT-vs-native ablation

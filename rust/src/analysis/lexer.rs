@@ -1,0 +1,308 @@
+//! Token-level source lexer for `dpp audit` (DESIGN.md §5).
+//!
+//! Deliberately not a parser: it only separates *code* from *non-code*
+//! (comments, string/char literals) so the lint scans can match raw tokens
+//! without tripping on their own names inside doc text, and it keeps the
+//! comment text per line so waivers (`// audit:allow(..)`) and `// SAFETY:`
+//! anchors stay findable. Blanking preserves byte offsets and line
+//! structure, so every token offset maps straight back to a source line.
+
+use std::collections::BTreeMap;
+
+/// Lexed view of one source file.
+pub struct Lexed {
+    /// The source with comment bodies and string/char-literal contents
+    /// blanked to spaces (newlines kept): same length, same line starts.
+    pub code: String,
+    /// Comment text concatenated per 0-based line.
+    pub comments: BTreeMap<usize, String>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn blank(code: &mut [u8], a: usize, b: usize) {
+    for c in code[a..b.min(code.len())].iter_mut() {
+        if *c != b'\n' {
+            *c = b' ';
+        }
+    }
+}
+
+fn note(comments: &mut BTreeMap<usize, String>, line: usize, text: &[u8]) {
+    comments
+        .entry(line)
+        .or_default()
+        .push_str(&String::from_utf8_lossy(text));
+}
+
+fn count_newlines(b: &[u8], a: usize, z: usize) -> usize {
+    b[a..z.min(b.len())].iter().filter(|&&c| c == b'\n').count()
+}
+
+/// Blank comments and literal contents out of `src`; collect comment text.
+pub fn strip_code(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = b.to_vec();
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut i = 0;
+    let mut line = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            note(&mut comments, line, &b[i..j]);
+            blank(&mut code, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (nesting, per-line comment text)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            let mut cur = line;
+            let mut seg = i;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    note(&mut comments, cur, &b[seg..j]);
+                    cur += 1;
+                    seg = j + 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            note(&mut comments, cur, &b[seg..j.min(n)]);
+            blank(&mut code, i, j);
+            line = cur;
+            i = j;
+            continue;
+        }
+        // raw string r"…" / r#"…"# / br"…"
+        if c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r') {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let mut end = n;
+                'outer: while j < n {
+                    if b[j] == b'"' {
+                        let mut k = 0;
+                        while k < hashes {
+                            if j + 1 + k >= n || b[j + 1 + k] != b'#' {
+                                j += 1;
+                                continue 'outer;
+                            }
+                            k += 1;
+                        }
+                        end = j + 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                line += count_newlines(b, i, end);
+                blank(&mut code, i, end);
+                i = end;
+                continue;
+            }
+        }
+        // byte string b"…" / byte char b'…': strip the prefix, re-dispatch
+        let (c, i0) = if c == b'b' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+            (b[i + 1], i + 1)
+        } else {
+            (c, i)
+        };
+        if c == b'"' {
+            let mut j = i0 + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            line += count_newlines(b, i, j);
+            blank(&mut code, i, j);
+            i = j;
+            continue;
+        }
+        if c == b'\'' {
+            // lifetime, or a char literal
+            if i0 + 1 < n && (b[i0 + 1].is_ascii_alphabetic() || b[i0 + 1] == b'_') {
+                let mut j = i0 + 2;
+                while j < n && is_ident(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    blank(&mut code, i, j + 1); // 'x' char literal
+                    i = j + 1;
+                } else {
+                    i = i0 + 1; // lifetime: keep the identifier as code
+                }
+                continue;
+            }
+            let mut j = i0 + 1;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                j += 1;
+            } else if j < n {
+                j += 2;
+            }
+            blank(&mut code, i, j);
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    Lexed { code: String::from_utf8_lossy(&code).into_owned(), comments }
+}
+
+/// 0-based lines covered by `#[cfg(test)]`-gated items (brace-balanced
+/// from the attribute to the matching close of the item it gates).
+pub fn test_lines(code: &str) -> Vec<bool> {
+    let n_lines = code.split('\n').count();
+    let mut out = vec![false; n_lines];
+    let b = code.as_bytes();
+    let marker = "#[cfg(test)]";
+    let mut idx = 0;
+    while let Some(at) = code[idx..].find(marker) {
+        let at = idx + at;
+        let start_line = count_newlines(b, 0, at);
+        let Some(open) = code[at..].find('{') else { break };
+        let open = at + open;
+        let mut depth = 0usize;
+        let mut k = open;
+        while k < b.len() {
+            if b[k] == b'{' {
+                depth += 1;
+            } else if b[k] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let end_line = count_newlines(b, 0, k.min(b.len()));
+        for flag in out
+            .iter_mut()
+            .skip(start_line)
+            .take(end_line - start_line + 1)
+        {
+            *flag = true;
+        }
+        idx = k.min(b.len() - 1).max(idx + marker.len());
+    }
+    out
+}
+
+/// Byte offsets of word-boundary occurrences of `needle` in `hay`.
+pub fn word_hits(hay: &str, needle: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let hb = hay.as_bytes();
+    let mut at = 0;
+    while let Some(pos) = hay[at..].find(needle) {
+        let pos = at + pos;
+        let before_ok = pos == 0 || !is_ident(hb[pos - 1]);
+        let end = pos + needle.len();
+        let after_ok = end >= hb.len() || !is_ident(hb[end]);
+        if before_ok && after_ok {
+            hits.push(pos);
+        }
+        at = pos + needle.len();
+    }
+    hits
+}
+
+/// 0-based line of byte offset `off` in `code`.
+pub fn line_of(code: &str, off: usize) -> usize {
+    count_newlines(code.as_bytes(), 0, off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_blanked_and_collected() {
+        let lx = strip_code("let a = 1; // unwrap() here\nlet b = 2;\n");
+        assert!(!lx.code.contains("unwrap"));
+        assert!(lx.comments[&0].contains("unwrap() here"));
+        assert!(lx.code.starts_with("let a = 1; "));
+    }
+
+    #[test]
+    fn strings_and_chars_are_blanked() {
+        let lx = strip_code(r#"let s = "partial_cmp"; let c = '"'; let t = s;"#);
+        assert!(!lx.code.contains("partial_cmp"));
+        assert!(lx.code.contains("let t = s;"));
+    }
+
+    #[test]
+    fn raw_and_byte_literals() {
+        let lx = strip_code("let m = *b\"DPPN\"; let r = r#\"HashMap\"#; let x = b'/';");
+        assert!(!lx.code.contains("DPPN"));
+        assert!(!lx.code.contains("HashMap"));
+        assert!(!lx.code.contains('/'));
+    }
+
+    #[test]
+    fn lifetimes_survive_blanking() {
+        let lx = strip_code("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(lx.code.contains("fn f<"));
+        assert!(lx.code.contains("a str"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lx = strip_code("a /* one /* two */ still */ b\n/* l1\nl2 SAFETY: x */ c\n");
+        assert!(lx.code.contains('a'));
+        assert!(lx.code.contains('b'));
+        assert!(lx.code.contains('c'));
+        assert!(!lx.code.contains("still"));
+        assert!(lx.comments[&2].contains("SAFETY:"));
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn prod() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn late() {}\n";
+        let lx = strip_code(src);
+        let tl = test_lines(&lx.code);
+        assert!(!tl[0]);
+        assert!(tl[1] && tl[2] && tl[3] && tl[4]);
+        assert!(!tl[5]);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert_eq!(word_hits("HashMap and MyHashMap and HashMap2", "HashMap"), vec![0]);
+        assert_eq!(word_hits("unsafe_sites unsafe", "unsafe"), vec![13]);
+    }
+}

@@ -1,0 +1,326 @@
+//! The lint families behind `dpp audit` (DESIGN.md §5).
+//!
+//! Every scan works on the blanked code from [`super::lexer`], skips
+//! `#[cfg(test)]` regions, and honours `// audit:allow(<lint>, reason)`
+//! waivers on the flagged line or the line above. A waiver with an empty
+//! reason is itself a finding (family `waiver`): the policy must be
+//! legible in-tree, not just silenced.
+
+use super::lexer::{line_of, strip_code, test_lines, word_hits, Lexed};
+use super::{Finding, UnsafeSite, Waiver};
+
+/// Files where wall-clock reads are the point (timers and the bench kit).
+const CLOCK_SANCTIONED: [&str; 2] = ["util/timer.rs", "util/benchkit.rs"];
+
+/// Directories whose float folds *define* the sanctioned FP sequences.
+const SUM_SANCTIONED_DIRS: [&str; 2] = ["linalg/", "experiments/"];
+
+/// Request-handling directories where panics are forbidden outside tests.
+const PANIC_DIRS: [&str; 2] = ["coordinator/", "net/"];
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Result of scanning one file.
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+enum WaiverState {
+    None,
+    Empty,
+    Reason(String),
+}
+
+/// Look for `audit:allow(code-or-family, reason)` on `line` or `line - 1`.
+fn find_waiver(lx: &Lexed, line: usize, code_id: &str) -> WaiverState {
+    let lines = [Some(line), line.checked_sub(1)];
+    for ln in lines.into_iter().flatten() {
+        let Some(text) = lx.comments.get(&ln) else { continue };
+        let Some(at) = text.find("audit:allow(") else { continue };
+        let inner = &text[at + "audit:allow(".len()..];
+        let Some(close) = inner.find(')') else { continue };
+        let inner = &inner[..close];
+        let (lint, reason) = match inner.find(',') {
+            Some(c) => (inner[..c].trim(), inner[c + 1..].trim()),
+            None => (inner.trim(), ""),
+        };
+        let family = code_id.split(':').next().unwrap_or(code_id);
+        if lint == code_id || lint == family {
+            if reason.is_empty() {
+                return WaiverState::Empty;
+            }
+            return WaiverState::Reason(reason.to_string());
+        }
+    }
+    WaiverState::None
+}
+
+struct Emitter<'a> {
+    rel: &'a str,
+    lx: &'a Lexed,
+    findings: Vec<Finding>,
+    waivers: Vec<Waiver>,
+}
+
+impl Emitter<'_> {
+    fn emit(&mut self, line: usize, code_id: &'static str, msg: &str) {
+        match find_waiver(self.lx, line, code_id) {
+            WaiverState::Empty => self.findings.push(Finding {
+                code: "waiver",
+                file: self.rel.to_string(),
+                line: line + 1,
+                message: format!("waiver for `{code_id}` has no reason"),
+            }),
+            WaiverState::Reason(reason) => self.waivers.push(Waiver {
+                code: code_id,
+                file: self.rel.to_string(),
+                line: line + 1,
+                reason,
+            }),
+            WaiverState::None => self.findings.push(Finding {
+                code: code_id,
+                file: self.rel.to_string(),
+                line: line + 1,
+                message: msg.to_string(),
+            }),
+        }
+    }
+}
+
+fn is_test_line(tests: &[bool], ln: usize) -> bool {
+    tests.get(ln).copied().unwrap_or(false)
+}
+
+/// Run every lint family over one file. `rel` is the path relative to the
+/// crate's `src/` root with `/` separators — the path policies key off it.
+pub fn scan_file(rel: &str, src: &str) -> FileScan {
+    let lx = strip_code(src);
+    let code = lx.code.clone();
+    let tests = test_lines(&code);
+    let mut em = Emitter { rel, lx: &lx, findings: Vec::new(), waivers: Vec::new() };
+    let mut unsafe_sites = Vec::new();
+
+    // determinism:float-sort — `partial_cmp(..).unwrap()` / `.expect(`
+    for off in word_hits(&code, "partial_cmp") {
+        let ln = line_of(&code, off);
+        if is_test_line(&tests, ln) {
+            continue;
+        }
+        let bytes = code.as_bytes();
+        let mut j = off + "partial_cmp".len();
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] != b'(' {
+            continue;
+        }
+        let mut depth = 0usize;
+        while j < bytes.len() {
+            if bytes[j] == b'(' {
+                depth += 1;
+            } else if bytes[j] == b')' {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let tail = &code[j.min(code.len())..];
+        if tail.starts_with(".unwrap(") || tail.starts_with(".expect(") {
+            em.emit(
+                ln,
+                "determinism:float-sort",
+                "float ordering via `partial_cmp(..).unwrap()` — use \
+                 `total_cmp` for a total, panic-free order",
+            );
+        }
+    }
+
+    // determinism:clock — wall-clock reads outside the sanctioned homes
+    if !CLOCK_SANCTIONED.contains(&rel) {
+        for tok in ["Instant::now", "SystemTime::now"] {
+            for off in word_hits(&code, tok) {
+                let ln = line_of(&code, off);
+                if is_test_line(&tests, ln) {
+                    continue;
+                }
+                em.emit(
+                    ln,
+                    "determinism:clock",
+                    "clock read outside util::timer — results must not \
+                     depend on wall time",
+                );
+            }
+        }
+    }
+
+    // determinism:float-sum — raw reductions outside the sanctioned folds
+    if !SUM_SANCTIONED_DIRS.iter().any(|d| rel.starts_with(d)) {
+        for tok in [".sum::<f64>()", ".sum::<f32>()"] {
+            let mut at = 0;
+            while let Some(pos) = code[at..].find(tok) {
+                let pos = at + pos;
+                let ln = line_of(&code, pos);
+                if !is_test_line(&tests, ln) {
+                    em.emit(
+                        ln,
+                        "determinism:float-sum",
+                        "raw float reduction — use the sanctioned \
+                         `linalg::ops::seq_sum` fold (exact FP sequence)",
+                    );
+                }
+                at = pos + tok.len();
+            }
+        }
+    }
+
+    // determinism:hash-iter — HashMap/HashSet near numeric state
+    for tok in ["HashMap", "HashSet"] {
+        for off in word_hits(&code, tok) {
+            let ln = line_of(&code, off);
+            if is_test_line(&tests, ln) {
+                continue;
+            }
+            em.emit(
+                ln,
+                "determinism:hash-iter",
+                "hashed collection in numeric code — iteration order is \
+                 nondeterministic; use BTreeMap/Vec or waive with the \
+                 reason iteration order cannot reach results",
+            );
+        }
+    }
+
+    // unsafe inventory — every non-test `unsafe` needs a SAFETY: comment
+    for off in word_hits(&code, "unsafe") {
+        let ln = line_of(&code, off);
+        if is_test_line(&tests, ln) {
+            continue;
+        }
+        unsafe_sites.push(UnsafeSite { file: rel.to_string(), line: ln + 1 });
+        let lo = ln.saturating_sub(10);
+        let documented = (lo..=ln)
+            .any(|k| em.lx.comments.get(&k).is_some_and(|c| c.contains("SAFETY:")));
+        if !documented {
+            em.emit(
+                ln,
+                "unsafe",
+                "`unsafe` without a `// SAFETY:` comment in the 10 lines above",
+            );
+        }
+    }
+
+    // panic surface — no panicking calls on request paths
+    if PANIC_DIRS.iter().any(|d| rel.starts_with(d)) {
+        for tok in PANIC_TOKENS {
+            let mut at = 0;
+            while let Some(pos) = code[at..].find(tok) {
+                let pos = at + pos;
+                let ln = line_of(&code, pos);
+                if !is_test_line(&tests, ln) {
+                    em.emit(
+                        ln,
+                        "panic",
+                        "panicking call on a request-handling path — \
+                         return a typed `RequestError` instead",
+                    );
+                }
+                at = pos + tok.len();
+            }
+        }
+    }
+
+    FileScan { findings: em.findings, waivers: em.waivers, unsafe_sites }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_file_yields_nothing() {
+        let s = scan_file("solver/x.rs", "fn f(v: &mut [f64]) { v.sort_by(f64::total_cmp); }\n");
+        assert!(s.findings.is_empty());
+        assert!(s.waivers.is_empty());
+    }
+
+    #[test]
+    fn float_sort_flagged_and_waivable() {
+        let bad = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let s = scan_file("solver/x.rs", bad);
+        assert_eq!(s.findings.len(), 1);
+        assert_eq!(s.findings[0].code, "determinism:float-sort");
+
+        let waived = format!("// audit:allow(determinism:float-sort, test fixture)\n{bad}");
+        let s = scan_file("solver/x.rs", &waived);
+        assert!(s.findings.is_empty());
+        assert_eq!(s.waivers.len(), 1);
+    }
+
+    #[test]
+    fn empty_waiver_reason_is_a_finding() {
+        let src = "// audit:allow(determinism:clock)\nfn f() { let t = std::time::Instant::now(); }\n";
+        let s = scan_file("solver/x.rs", src);
+        assert_eq!(s.findings.len(), 1);
+        assert_eq!(s.findings[0].code, "waiver");
+    }
+
+    #[test]
+    fn clock_sanctioned_in_timer() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert!(scan_file("util/timer.rs", src).findings.is_empty());
+        assert_eq!(scan_file("util/other.rs", src).findings.len(), 1);
+    }
+
+    #[test]
+    fn float_sum_sanctioned_in_linalg() {
+        let src = "fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n";
+        assert!(scan_file("linalg/ops.rs", src).findings.is_empty());
+        assert_eq!(scan_file("path/mod.rs", src).findings.len(), 1);
+    }
+
+    #[test]
+    fn panic_scoped_to_request_dirs() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert_eq!(scan_file("net/server.rs", src).findings.len(), 1);
+        assert!(scan_file("solver/cd.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let s = scan_file("runtime/x.rs", bad);
+        assert_eq!(s.findings.len(), 1);
+        assert_eq!(s.unsafe_sites.len(), 1);
+        let good = "// SAFETY: caller guarantees p is valid\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let s = scan_file("runtime/x.rs", good);
+        assert!(s.findings.is_empty());
+        assert_eq!(s.unsafe_sites.len(), 1);
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x: Option<u8> = None; x.unwrap(); }\n}\n";
+        assert!(scan_file("net/server.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_ignored() {
+        let src = "// the old partial_cmp().unwrap() bug\nfn f() -> &'static str { \"Instant::now\" }\n";
+        assert!(scan_file("path/mod.rs", src).findings.is_empty());
+    }
+}

@@ -1,0 +1,281 @@
+//! `dpp audit` — a zero-dependency, token-level static analyzer over this
+//! crate's own source tree (DESIGN.md §5).
+//!
+//! The bit-identity contract (identical results across dense/CSC/mmap/
+//! sharded/remote backends) and the serving protocol are defended
+//! dynamically by `backend_parity` and `serve_protocol`; this module
+//! defends them *statically*, before tests run. Four lint families:
+//!
+//! * **determinism** — float sorts via `partial_cmp(..).unwrap()`
+//!   (`total_cmp` required), wall-clock reads outside `util::timer`,
+//!   raw float reductions outside the sanctioned `linalg` folds, and
+//!   `HashMap`/`HashSet` in numeric code;
+//! * **unsafe** — every non-test `unsafe` needs a `// SAFETY:` comment,
+//!   and the full inventory is reported so new unsafe is visible in review;
+//! * **wire** — the tag/version constants in `net/wire.rs` and
+//!   `net/frame.rs` must match the committed `rust/wire.lock` golden
+//!   table ([`wirecheck`]);
+//! * **panic** — no panicking calls on request-handling paths in
+//!   `coordinator/` and `net/` outside tests.
+//!
+//! Policy exceptions are in-tree and searchable:
+//! `// audit:allow(<lint>, reason)` on the flagged line or the line above.
+//! An empty reason is itself a finding. The CLI entry point is
+//! `dpp audit [--json] [--write-wire-lock]`; the tier-1 test
+//! `tests/audit.rs` keeps the shipped tree at zero findings.
+
+pub mod lexer;
+pub mod lints;
+pub mod wirecheck;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation. `line` is 1-based (0 = whole-file/lock-level).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Lint code, e.g. `determinism:float-sort`, `unsafe`, `wire`, `panic`.
+    pub code: &'static str,
+    /// Path relative to the scanned source root (`/`-separated).
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// An accepted, reasoned policy exception found in-tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Waiver {
+    pub code: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// One `unsafe` occurrence (documented or not) — the review inventory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+}
+
+/// Everything one audit run produced.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render as a JSON object (hand-rolled — the audit must not pull in
+    /// dependencies it would then have to audit).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => {
+                        out.push_str(&format!("\\u{:04x}", c as u32));
+                    }
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let findings: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "{{\"code\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                    esc(f.code),
+                    esc(&f.file),
+                    f.line,
+                    esc(&f.message),
+                )
+            })
+            .collect();
+        let waivers: Vec<String> = self
+            .waivers
+            .iter()
+            .map(|w| {
+                format!(
+                    "{{\"code\":\"{}\",\"file\":\"{}\",\"line\":{},\"reason\":\"{}\"}}",
+                    esc(w.code),
+                    esc(&w.file),
+                    w.line,
+                    esc(&w.reason),
+                )
+            })
+            .collect();
+        let sites: Vec<String> = self
+            .unsafe_sites
+            .iter()
+            .map(|u| format!("{{\"file\":\"{}\",\"line\":{}}}", esc(&u.file), u.line))
+            .collect();
+        format!(
+            "{{\"findings\":[{}],\"waivers\":[{}],\"unsafe\":[{}]}}",
+            findings.join(","),
+            waivers.join(","),
+            sites.join(","),
+        )
+    }
+
+    /// Human-readable report lines (one per finding/waiver/unsafe site).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "audit[{}] {}:{}: {}\n",
+                f.code, f.file, f.line, f.message
+            ));
+        }
+        out.push_str(&format!(
+            "audit: {} finding(s), {} waiver(s), {} unsafe site(s)\n",
+            self.findings.len(),
+            self.waivers.len(),
+            self.unsafe_sites.len(),
+        ));
+        for w in &self.waivers {
+            out.push_str(&format!(
+                "  waived[{}] {}:{}: {}\n",
+                w.code, w.file, w.line, w.reason
+            ));
+        }
+        for u in &self.unsafe_sites {
+            out.push_str(&format!("  unsafe {}:{}\n", u.file, u.line));
+        }
+        out
+    }
+}
+
+/// Where to audit. `lock_path: None` skips the wire check (fixture trees).
+pub struct AuditConfig {
+    /// Root of the source tree to scan (the crate's `src/`).
+    pub src_root: PathBuf,
+    /// Path to the `wire.lock` golden table.
+    pub lock_path: Option<PathBuf>,
+}
+
+impl AuditConfig {
+    /// Audit this crate itself: `src/` and `wire.lock` next to the
+    /// manifest directory the binary was built from.
+    pub fn for_crate(manifest_dir: &str) -> AuditConfig {
+        let root = Path::new(manifest_dir);
+        AuditConfig {
+            src_root: root.join("src"),
+            lock_path: Some(root.join("wire.lock")),
+        }
+    }
+}
+
+/// Collect every `.rs` file under `root`, sorted, as (relative, absolute).
+fn rust_files(root: &Path) -> io::Result<Vec<(String, PathBuf)>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+    let mut out = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.push((rel, p));
+    }
+    // lexicographic on the *relative* path so nesting differences between
+    // platforms cannot reorder the report
+    out.sort();
+    Ok(out)
+}
+
+/// Run the full audit over `cfg.src_root` (+ the wire check if configured).
+pub fn run_audit(cfg: &AuditConfig) -> io::Result<AuditReport> {
+    let mut report = AuditReport::default();
+    for (rel, abs) in rust_files(&cfg.src_root)? {
+        let src = fs::read_to_string(&abs)?;
+        let scan = lints::scan_file(&rel, &src);
+        report.findings.extend(scan.findings);
+        report.waivers.extend(scan.waivers);
+        report.unsafe_sites.extend(scan.unsafe_sites);
+    }
+    if let Some(lock_path) = &cfg.lock_path {
+        report.findings.extend(run_wire_check(&cfg.src_root, lock_path));
+    }
+    report.findings.sort_by(|a, b| {
+        (&a.file, a.line, a.code).cmp(&(&b.file, b.line, b.code))
+    });
+    Ok(report)
+}
+
+/// Parse the current wire/frame constants from `src_root`.
+pub fn current_wire_consts(src_root: &Path) -> io::Result<Vec<wirecheck::ConstEntry>> {
+    let wire = fs::read_to_string(src_root.join("net/wire.rs"))?;
+    let frame = fs::read_to_string(src_root.join("net/frame.rs"))?;
+    let mut consts = wirecheck::parse_consts("wire", &wire);
+    consts.extend(wirecheck::parse_consts("frame", &frame));
+    Ok(consts)
+}
+
+fn run_wire_check(src_root: &Path, lock_path: &Path) -> Vec<Finding> {
+    let consts = match current_wire_consts(src_root) {
+        Ok(c) => c,
+        Err(e) => {
+            return vec![Finding {
+                code: "wire",
+                file: "net/wire.rs".to_string(),
+                line: 0,
+                message: format!("cannot read wire sources: {e}"),
+            }];
+        }
+    };
+    let lock_text = match fs::read_to_string(lock_path) {
+        Ok(t) => t,
+        Err(e) => {
+            return vec![Finding {
+                code: "wire",
+                file: lock_path.display().to_string(),
+                line: 0,
+                message: format!(
+                    "cannot read wire.lock ({e}) — regenerate with \
+                     `dpp audit --write-wire-lock > rust/wire.lock`"
+                ),
+            }];
+        }
+    };
+    let lock = match wirecheck::parse_lock(&lock_text) {
+        Ok(l) => l,
+        Err(e) => {
+            return vec![Finding {
+                code: "wire",
+                file: lock_path.display().to_string(),
+                line: 0,
+                message: e,
+            }];
+        }
+    };
+    wirecheck::check(&consts, &lock)
+}

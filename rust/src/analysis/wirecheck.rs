@@ -1,0 +1,299 @@
+//! Wire-compatibility audit: `net/wire.rs` + `net/frame.rs` against the
+//! committed `rust/wire.lock` golden table (DESIGN.md §5).
+//!
+//! The lock pins every tag/version constant of the wire grammar. The audit
+//! fails on (a) tag reuse inside a namespace (`REQ_*`, `RESP_*`, …— two
+//! constants with one byte value would silently re-mean frames), and
+//! (b) any drift between source and lock: a drifted entry with an
+//! *unchanged* `WIRE_VERSION` means the grammar changed silently; a
+//! drifted entry with a *changed* version means the lock needs
+//! regenerating (`dpp audit --write-wire-lock > rust/wire.lock`).
+//! Wire findings are not waivable — the lock update *is* the waiver.
+
+use std::collections::BTreeMap;
+
+use super::Finding;
+
+/// One `pub const NAME: TYPE = VALUE;` declaration (single-line form).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConstEntry {
+    /// Lock namespace: `wire` or `frame`.
+    pub table: &'static str,
+    pub name: String,
+    /// Type text, whitespace-stripped (`[u8;4]`).
+    pub ty: String,
+    /// Value text, whitespace-stripped (`64<<20`).
+    pub val: String,
+    /// 1-based source line (0 for lock-only entries).
+    pub line: usize,
+}
+
+fn squeeze(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Parse every single-line `pub const` in `src`. Comment lines never match
+/// (they don't start with `pub const` after trimming), which is all the
+/// lexing this needs.
+pub fn parse_consts(table: &'static str, src: &str) -> Vec<ConstEntry> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = raw.trim_start();
+        let Some(rest) = line.strip_prefix("pub const ") else { continue };
+        let Some((name, rest)) = rest.split_once(':') else { continue };
+        let Some((ty, rest)) = rest.split_once('=') else { continue };
+        let Some((val, _)) = rest.split_once(';') else { continue };
+        out.push(ConstEntry {
+            table,
+            name: name.trim().to_string(),
+            ty: squeeze(ty),
+            val: squeeze(val),
+            line: idx + 1,
+        });
+    }
+    out
+}
+
+/// Parse a `wire.lock` body: `<table> <NAME> <type> <value>` per line,
+/// `#` comments and blanks skipped.
+pub fn parse_lock(text: &str) -> Result<Vec<ConstEntry>, String> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(table), Some(name), Some(ty), Some(val)) =
+            (it.next(), it.next(), it.next(), it.next())
+        else {
+            return Err(format!("wire.lock:{}: malformed line `{line}`", idx + 1));
+        };
+        let table = match table {
+            "wire" => "wire",
+            "frame" => "frame",
+            other => {
+                return Err(format!("wire.lock:{}: unknown table `{other}`", idx + 1));
+            }
+        };
+        out.push(ConstEntry {
+            table,
+            name: name.to_string(),
+            ty: ty.to_string(),
+            val: val.to_string(),
+            line: 0,
+        });
+    }
+    Ok(out)
+}
+
+/// Render the canonical lock text for the given parsed constants — the
+/// exact bytes `dpp audit --write-wire-lock` prints and the round-trip
+/// test pins against the committed file.
+pub fn render_lock(consts: &[ConstEntry]) -> String {
+    let mut out = String::from(
+        "# rust/wire.lock — golden copy of the committed wire-grammar surface.\n\
+         #\n\
+         # One line per constant: <file> <NAME> <type> <value> (whitespace-stripped).\n\
+         # `dpp audit` re-parses net/wire.rs and net/frame.rs and fails on any drift:\n\
+         # a changed or reused tag, or a grammar change without a WIRE_VERSION bump.\n\
+         # After a deliberate change, bump WIRE_VERSION and regenerate:\n\
+         #\n\
+         #     dpp audit --write-wire-lock > rust/wire.lock\n\
+         \n",
+    );
+    for c in consts {
+        out.push_str(&format!("{} {} {} {}\n", c.table, c.name, c.ty, c.val));
+    }
+    out
+}
+
+fn src_file(table: &str) -> &'static str {
+    if table == "wire" { "net/wire.rs" } else { "net/frame.rs" }
+}
+
+/// Namespace of a tag constant: the prefix before the first `_`
+/// (`REQ_SCREEN` → `REQ`). Constants without `_` form their own namespace.
+fn namespace(name: &str) -> &str {
+    name.split('_').next().unwrap_or(name)
+}
+
+/// Check parsed source constants against the lock. Returns findings.
+pub fn check(consts: &[ConstEntry], lock: &[ConstEntry]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // (a) tag reuse: two u8 constants sharing a namespace and a value
+    let mut seen: BTreeMap<(&str, &str, &str), &ConstEntry> = BTreeMap::new();
+    for c in consts {
+        if c.ty != "u8" || !c.name.contains('_') {
+            continue;
+        }
+        let key = (c.table, namespace(&c.name), c.val.as_str());
+        if let Some(prev) = seen.get(&key) {
+            findings.push(Finding {
+                code: "wire",
+                file: src_file(c.table).to_string(),
+                line: c.line,
+                message: format!(
+                    "tag reuse: `{}` and `{}` both encode as {} in the `{}` \
+                     namespace — frames become ambiguous",
+                    prev.name,
+                    c.name,
+                    c.val,
+                    namespace(&c.name),
+                ),
+            });
+        } else {
+            seen.insert(key, c);
+        }
+    }
+
+    // (b) drift vs the lock
+    let key = |c: &ConstEntry| (c.table, c.name.clone());
+    let src_map: BTreeMap<_, _> = consts.iter().map(|c| (key(c), c)).collect();
+    let lock_map: BTreeMap<_, _> = lock.iter().map(|c| (key(c), c)).collect();
+    let version_key = ("wire", "WIRE_VERSION".to_string());
+    let version_bumped = match (src_map.get(&version_key), lock_map.get(&version_key)) {
+        (Some(s), Some(l)) => s.val != l.val,
+        _ => false,
+    };
+    let remedy = if version_bumped {
+        "WIRE_VERSION was bumped — regenerate the lock: \
+         `dpp audit --write-wire-lock > rust/wire.lock`"
+    } else {
+        "changing the grammar requires a WIRE_VERSION bump *and* a lock \
+         regeneration (`dpp audit --write-wire-lock > rust/wire.lock`)"
+    };
+
+    for (k, s) in &src_map {
+        match lock_map.get(k) {
+            None => findings.push(Finding {
+                code: "wire",
+                file: src_file(s.table).to_string(),
+                line: s.line,
+                message: format!("`{}` is not in wire.lock — {remedy}", s.name),
+            }),
+            Some(l) if l.ty != s.ty || l.val != s.val => findings.push(Finding {
+                code: "wire",
+                file: src_file(s.table).to_string(),
+                line: s.line,
+                message: format!(
+                    "`{}` drifted from wire.lock ({} {} ≠ locked {} {}) — {remedy}",
+                    s.name, s.ty, s.val, l.ty, l.val,
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+    for (k, l) in &lock_map {
+        if !src_map.contains_key(k) {
+            findings.push(Finding {
+                code: "wire",
+                file: src_file(l.table).to_string(),
+                line: 0,
+                message: format!(
+                    "`{}` is in wire.lock but gone from the source — {remedy}",
+                    l.name,
+                ),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE_SRC: &str = "\
+pub const WIRE_VERSION: u32 = 1;
+pub mod tag {
+    pub const REQ_SCREEN: u8 = 0;
+    pub const REQ_WARM: u8 = 1;
+    pub const RESP_SCREEN: u8 = 0;
+}
+";
+
+    fn lock_for(src: &str) -> Vec<ConstEntry> {
+        parse_consts("wire", src)
+            .into_iter()
+            .map(|mut c| {
+                c.line = 0;
+                c
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_skips_comments_and_strips_whitespace() {
+        let src = "// pub const FAKE: u8 = 9;\npub const MAGIC: [u8; 4] = *b\"DPPN\";\n";
+        let got = parse_consts("frame", src);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].name, "MAGIC");
+        assert_eq!(got[0].ty, "[u8;4]");
+        assert_eq!(got[0].val, "*b\"DPPN\"");
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn matching_lock_is_clean() {
+        let consts = parse_consts("wire", WIRE_SRC);
+        assert!(check(&consts, &lock_for(WIRE_SRC)).is_empty());
+    }
+
+    #[test]
+    fn tag_reuse_within_namespace_flagged() {
+        let src = WIRE_SRC.replace("REQ_WARM: u8 = 1", "REQ_WARM: u8 = 0");
+        let consts = parse_consts("wire", &src);
+        let f = check(&consts, &lock_for(&src));
+        assert_eq!(f.iter().filter(|f| f.message.contains("tag reuse")).count(), 1);
+    }
+
+    #[test]
+    fn cross_namespace_same_value_is_fine() {
+        // REQ_SCREEN and RESP_SCREEN both 0 — different namespaces
+        let consts = parse_consts("wire", WIRE_SRC);
+        assert!(check(&consts, &lock_for(WIRE_SRC)).is_empty());
+    }
+
+    #[test]
+    fn silent_change_demands_version_bump() {
+        let drifted = WIRE_SRC.replace("REQ_WARM: u8 = 1", "REQ_WARM: u8 = 7");
+        let f = check(&parse_consts("wire", &drifted), &lock_for(WIRE_SRC));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("requires a WIRE_VERSION bump"));
+    }
+
+    #[test]
+    fn bumped_version_points_at_lock_regeneration() {
+        let bumped = WIRE_SRC
+            .replace("WIRE_VERSION: u32 = 1", "WIRE_VERSION: u32 = 2")
+            .replace("REQ_WARM: u8 = 1", "REQ_WARM: u8 = 7");
+        let f = check(&parse_consts("wire", &bumped), &lock_for(WIRE_SRC));
+        // both the version const and the tag drifted
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|f| f.message.contains("regenerate the lock")));
+    }
+
+    #[test]
+    fn new_and_removed_tags_flagged() {
+        let grown = WIRE_SRC.replace(
+            "pub const RESP_SCREEN: u8 = 0;",
+            "pub const RESP_SCREEN: u8 = 0;\n    pub const RESP_EXTRA: u8 = 1;",
+        );
+        let f = check(&parse_consts("wire", &grown), &lock_for(WIRE_SRC));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("not in wire.lock"));
+
+        let f = check(&parse_consts("wire", WIRE_SRC), &lock_for(&grown));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("gone from the source"));
+    }
+
+    #[test]
+    fn lock_round_trips_through_render() {
+        let consts = lock_for(WIRE_SRC);
+        let parsed = parse_lock(&render_lock(&consts)).expect("well-formed lock");
+        assert_eq!(parsed, consts);
+    }
+}

@@ -16,6 +16,7 @@
 //! and every later request get a typed
 //! [`RequestError::SessionClosed`] instead of a hung channel.
 
+// audit:allow(determinism:hash-iter, lookup-only; iteration uses the registration-order Vec)
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
@@ -549,6 +550,7 @@ impl SessionCore<'_> {
 /// (shutdown reporting) follows registration order.
 #[derive(Default)]
 pub struct SessionRegistry {
+    // audit:allow(determinism:hash-iter, lookup-only; iteration uses the registration-order Vec)
     sessions: HashMap<String, Arc<Mutex<SessionState>>>,
     order: Vec<String>,
 }

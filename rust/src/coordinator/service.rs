@@ -20,7 +20,7 @@
 //! dropped".
 //!
 //! Threading: std::thread + mpsc for routing, the [`crate::runtime::pool`]
-//! for execution (the offline image has no tokio — DESIGN.md §5).
+//! for execution (the offline image has no tokio — DESIGN.md §6).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -93,6 +93,7 @@ impl Coordinator {
         let router = std::thread::Builder::new()
             .name("dpp-coordinator".to_string())
             .spawn(move || router_loop(rx, pool))
+            // audit:allow(panic, startup-fatal: no coordinator thread means no service)
             .expect("spawning coordinator router");
         Coordinator { tx, router: Some(router) }
     }
@@ -122,6 +123,7 @@ impl Coordinator {
         }
         let msg = CoordMsg::Submit {
             session: session.to_string(),
+            // audit:allow(determinism:clock, latency metric only; never feeds numerics)
             pending: PendingRequest { request, reply: rtx.clone(), t0: Instant::now() },
         };
         if self.tx.send(msg).is_err() {
@@ -314,6 +316,7 @@ impl ScreeningService {
         let coord = Coordinator::new();
         coord
             .register(SessionSpec::boxed(SERVICE_SESSION, x, y, pipeline, solver, cfg))
+            // audit:allow(panic, documented panicking constructor; typed path is Coordinator::register)
             .unwrap_or_else(|e| panic!("spawning screening service: {e}"));
         ScreeningService { coord }
     }
@@ -342,6 +345,7 @@ impl ScreeningService {
     /// panic payload), not a bare "service dropped".
     pub fn screen(&self, lam: f64) -> ScreenResponse {
         self.try_screen(lam)
+            // audit:allow(panic, documented panicking facade; typed path is try_screen)
             .unwrap_or_else(|e| panic!("screening service request failed: {e}"))
     }
 

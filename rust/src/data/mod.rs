@@ -1,5 +1,5 @@
 //! Datasets: the paper's synthetic problems and simulated stand-ins for its
-//! nine real datasets (substitution rationale in DESIGN.md §7).
+//! nine real datasets (substitution rationale in DESIGN.md §8).
 
 pub mod convert;
 pub mod io;
@@ -47,7 +47,7 @@ impl Dataset {
 }
 
 /// Identifier for the nine real datasets the paper evaluates on, simulated
-/// here (DESIGN.md §7). Shapes follow the paper; `full=false` scales them to
+/// here (DESIGN.md §8). Shapes follow the paper; `full=false` scales them to
 /// 1-core-friendly sizes while keeping N:p character.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RealDataset {

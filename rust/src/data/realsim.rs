@@ -6,7 +6,7 @@
 //! the geometry of the problem — column-correlation structure, column-norm
 //! dispersion, and the alignment of y with the column space — not on semantic
 //! content, so each stand-in reproduces the paper's matrix shape and a
-//! matched statistical character (DESIGN.md §7):
+//! matched statistical character (DESIGN.md §8):
 //!
 //! * gene-expression sets (colon/lung/breast/leukemia/prostate): lognormal
 //!   magnitudes with co-expressed blocks driven by shared latent factors;
@@ -63,7 +63,7 @@ pub fn generate(which: RealDataset, full: bool, seed: u64) -> Dataset {
 }
 
 fn center(v: &mut [f64]) {
-    let m = v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let m = if v.is_empty() { 0.0 } else { crate::linalg::ops::seq_sum(v) / v.len() as f64 };
     for x in v.iter_mut() {
         *x -= m;
     }

@@ -2,7 +2,7 @@
 //! evaluation (§2.3.3, §4). Each `figN` function prints the same
 //! rows/series the paper reports (markdown) and appends them to
 //! `results/*.md`; the benches in `rust/benches/` and `dpp exp …` both call
-//! into here (DESIGN.md §6 experiment index).
+//! into here (DESIGN.md §7 experiment index).
 //!
 //! Scale: `DPP_SCALE=full` uses the paper's exact shapes; the default uses
 //! the scaled-down shapes of `RealDataset::small_shape` so the whole suite

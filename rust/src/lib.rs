@@ -48,7 +48,11 @@
 //!   generators matching the
 //!   paper's synthetic and (simulated) real datasets ([`data`]), and
 //!   utilities ([`util`]) — RNG, stats, CLI, bench harness, property
-//!   testing — hand-rolled because the build image is offline (DESIGN.md §5).
+//!   testing — hand-rolled because the build image is offline (DESIGN.md §6).
+//! * **Invariant auditor** ([`analysis`]): `dpp audit` — a token-level
+//!   static analyzer over this crate's own source enforcing the
+//!   determinism, unsafe-hygiene, wire-compatibility (`rust/wire.lock`)
+//!   and panic-surface policies (DESIGN.md §5).
 //!
 //! Every rule, solver, path driver and the service is generic over
 //! [`linalg::DesignMatrix`] (`&dyn DesignMatrix` / `Box<dyn DesignMatrix +
@@ -81,6 +85,7 @@
 //! assert_eq!(out.records.len(), sparse_out.records.len());
 //! ```
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

@@ -18,7 +18,7 @@
 //! bit-identical between the two sparse backends.
 //!
 //! The offline build image has no mmap-capable dependency (only `anyhow`
-//! and the `xla` closure are vendored, DESIGN.md §5) and `std` exposes no
+//! and the `xla` closure are vendored, DESIGN.md §6) and `std` exposes no
 //! `mmap(2)` wrapper, so the window is filled with positioned
 //! `read_exact_at` calls; the OS page cache plays the role of the mapped
 //! pages. The behavioural contract is the same: X itself is never held in

@@ -25,7 +25,7 @@ pub mod store;
 
 pub use design::DesignMatrix;
 pub use mmap::MmapCscMatrix;
-pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale};
+pub use ops::{axpy, dist_sq_scaled, dot, nrm1, nrm2, scale, seq_mean, seq_sum};
 pub use sharded::ShardSetMatrix;
 pub use sparse::CscMatrix;
 pub use store::DesignStore;
@@ -103,9 +103,9 @@ impl DenseMatrix {
     }
 
     /// Screening sweep: `out[j] = xⱼᵀ w` for every column j. This is the
-    /// O(Np) hot spot of every screening rule (DESIGN.md §9 L3 target).
+    /// O(Np) hot spot of every screening rule (DESIGN.md §10 L3 target).
     ///
-    /// Eight columns per pass (perf iteration 2, DESIGN.md §9):
+    /// Eight columns per pass (perf iteration 2, DESIGN.md §10):
     /// `w` is re-used from L1/L2 across the column block, cutting its
     /// memory traffic 8×, and eight independent accumulators keep the FMA
     /// pipeline full.

@@ -23,6 +23,30 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     s
 }
 
+/// Sequential in-order sum — the sanctioned scalar fold (DESIGN.md §5).
+///
+/// One accumulator, slice order: this defines the exact FP sequence that
+/// the bit-identity contract pins. `dpp audit` flags raw `.sum::<f64>()`
+/// folds outside `linalg` so every reduction that can reach a numeric
+/// result shares this sequence (or carries an explicit waiver).
+#[inline]
+pub fn seq_sum(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &v in x {
+        s += v;
+    }
+    s
+}
+
+/// Mean via [`seq_sum`] (0.0 for empty input).
+#[inline]
+pub fn seq_mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    seq_sum(x) / x.len() as f64
+}
+
 /// `y += a·x`.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {

@@ -74,10 +74,14 @@ impl NetServer {
                     // detached: a connection thread blocked on an idle
                     // peer's next frame exits on its own when the peer
                     // hangs up; joining it here could wait forever
-                    std::thread::Builder::new()
+                    // spawn failure (thread exhaustion) drops this
+                    // connection; the listener keeps accepting
+                    if let Err(e) = std::thread::Builder::new()
                         .name("dpp-serve-conn".to_string())
                         .spawn(move || serve_connection(stream, coord, stop))
-                        .expect("spawning serve connection thread");
+                    {
+                        eprintln!("dpp-serve: connection thread spawn failed: {e}");
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(ACCEPT_POLL);
@@ -118,10 +122,17 @@ fn serve_connection(stream: TcpStream, coord: Arc<Mutex<Coordinator>>, stop: Arc
     }
 
     let (rtx, rrx) = channel::<ConnReply>();
-    let responder = std::thread::Builder::new()
+    let responder = match std::thread::Builder::new()
         .name("dpp-serve-reply".to_string())
         .spawn(move || respond_loop(writer, rrx))
-        .expect("spawning serve responder thread");
+    {
+        Ok(handle) => handle,
+        // no responder thread ⇒ we can never reply; drop the connection
+        Err(e) => {
+            eprintln!("dpp-serve: responder thread spawn failed: {e}");
+            return;
+        }
+    };
     loop {
         let Ok(payload) = read_frame(&mut reader) else {
             break; // disconnect or corrupt frame → this connection only

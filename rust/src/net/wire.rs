@@ -27,6 +27,41 @@ use crate::util::stats::OnlineStats;
 /// Version of the message grammar (negotiated via the hellos).
 pub const WIRE_VERSION: u32 = 1;
 
+/// Message tag bytes — the committed grammar surface. `rust/wire.lock` is
+/// the golden copy; `dpp audit` re-parses this module and fails on tag
+/// reuse within a namespace or any change not matched by a
+/// [`WIRE_VERSION`] bump plus a lock update (DESIGN.md §5).
+pub mod tag {
+    // Request (`enc_request`/`dec_request`)
+    pub const REQ_SCREEN: u8 = 0;
+    pub const REQ_FIT_PATH: u8 = 1;
+    pub const REQ_PREDICT: u8 = 2;
+    pub const REQ_WARM: u8 = 3;
+    pub const REQ_SESSION_STATS: u8 = 4;
+    // Response (`enc_response`/`dec_response`)
+    pub const RESP_SCREEN: u8 = 0;
+    pub const RESP_PATH: u8 = 1;
+    pub const RESP_PREDICT: u8 = 2;
+    pub const RESP_WARMED: u8 = 3;
+    pub const RESP_STATS: u8 = 4;
+    pub const RESP_ERROR: u8 = 5;
+    // RequestError (`enc_error`/`dec_error`)
+    pub const ERR_INVALID_LAMBDA: u8 = 0;
+    pub const ERR_UNKNOWN_SESSION: u8 = 1;
+    pub const ERR_DUPLICATE_SESSION: u8 = 2;
+    pub const ERR_SESSION_CLOSED: u8 = 3;
+    pub const ERR_INVALID_REQUEST: u8 = 4;
+    pub const ERR_DISCONNECTED: u8 = 5;
+    // ClientMsg (`encode_client_msg`/`decode_client_msg`)
+    pub const CLIENT_HELLO: u8 = 0;
+    pub const CLIENT_SUBMIT: u8 = 1;
+    pub const CLIENT_SHUTDOWN: u8 = 2;
+    // ServerMsg (`encode_server_msg`/`decode_server_msg`)
+    pub const SERVER_HELLO: u8 = 0;
+    pub const SERVER_REPLY: u8 = 1;
+    pub const SERVER_SHUTTING_DOWN: u8 = 2;
+}
+
 /// Typed decode failure: truncated buffer, unknown tag, bad UTF-8, or a
 /// name (pipeline / solver) the receiving build doesn't know.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -285,42 +320,44 @@ fn dec_options(d: &mut Dec<'_>) -> Result<RequestOptions, WireError> {
 pub fn enc_request(e: &mut Enc, r: &Request) {
     match r {
         Request::Screen { lam, opts } => {
-            e.u8(0);
+            e.u8(tag::REQ_SCREEN);
             e.f64(*lam);
             enc_options(e, opts);
         }
         Request::FitPath { grid, lo, opts } => {
-            e.u8(1);
+            e.u8(tag::REQ_FIT_PATH);
             e.usize(*grid);
             e.f64(*lo);
             enc_options(e, opts);
         }
         Request::Predict { features, lam, opts } => {
-            e.u8(2);
+            e.u8(tag::REQ_PREDICT);
             e.f64s(features);
             e.f64(*lam);
             enc_options(e, opts);
         }
         Request::Warm { lam } => {
-            e.u8(3);
+            e.u8(tag::REQ_WARM);
             e.f64(*lam);
         }
-        Request::SessionStats => e.u8(4),
+        Request::SessionStats => e.u8(tag::REQ_SESSION_STATS),
     }
 }
 
 /// Decode a [`Request`] from `d`.
 pub fn dec_request(d: &mut Dec<'_>) -> Result<Request, WireError> {
     Ok(match d.u8()? {
-        0 => Request::Screen { lam: d.f64()?, opts: dec_options(d)? },
-        1 => Request::FitPath { grid: d.usize()?, lo: d.f64()?, opts: dec_options(d)? },
-        2 => Request::Predict {
+        tag::REQ_SCREEN => Request::Screen { lam: d.f64()?, opts: dec_options(d)? },
+        tag::REQ_FIT_PATH => {
+            Request::FitPath { grid: d.usize()?, lo: d.f64()?, opts: dec_options(d)? }
+        }
+        tag::REQ_PREDICT => Request::Predict {
             features: d.f64s()?,
             lam: d.f64()?,
             opts: dec_options(d)?,
         },
-        3 => Request::Warm { lam: d.f64()? },
-        4 => Request::SessionStats,
+        tag::REQ_WARM => Request::Warm { lam: d.f64()? },
+        tag::REQ_SESSION_STATS => Request::SessionStats,
         t => return err(format!("bad Request tag {t}")),
     })
 }
@@ -382,28 +419,28 @@ fn dec_metrics(d: &mut Dec<'_>) -> Result<ServiceMetrics, WireError> {
 fn enc_error(e: &mut Enc, re: &RequestError) {
     match re {
         RequestError::InvalidLambda(lam) => {
-            e.u8(0);
+            e.u8(tag::ERR_INVALID_LAMBDA);
             e.f64(*lam);
         }
         RequestError::UnknownSession(s) => {
-            e.u8(1);
+            e.u8(tag::ERR_UNKNOWN_SESSION);
             e.str(s);
         }
         RequestError::DuplicateSession(s) => {
-            e.u8(2);
+            e.u8(tag::ERR_DUPLICATE_SESSION);
             e.str(s);
         }
         RequestError::SessionClosed { session, reason } => {
-            e.u8(3);
+            e.u8(tag::ERR_SESSION_CLOSED);
             e.str(session);
             e.str(reason);
         }
         RequestError::InvalidRequest(msg) => {
-            e.u8(4);
+            e.u8(tag::ERR_INVALID_REQUEST);
             e.str(msg);
         }
         RequestError::Disconnected(msg) => {
-            e.u8(5);
+            e.u8(tag::ERR_DISCONNECTED);
             e.str(msg);
         }
     }
@@ -411,12 +448,14 @@ fn enc_error(e: &mut Enc, re: &RequestError) {
 
 fn dec_error(d: &mut Dec<'_>) -> Result<RequestError, WireError> {
     Ok(match d.u8()? {
-        0 => RequestError::InvalidLambda(d.f64()?),
-        1 => RequestError::UnknownSession(d.str()?),
-        2 => RequestError::DuplicateSession(d.str()?),
-        3 => RequestError::SessionClosed { session: d.str()?, reason: d.str()? },
-        4 => RequestError::InvalidRequest(d.str()?),
-        5 => RequestError::Disconnected(d.str()?),
+        tag::ERR_INVALID_LAMBDA => RequestError::InvalidLambda(d.f64()?),
+        tag::ERR_UNKNOWN_SESSION => RequestError::UnknownSession(d.str()?),
+        tag::ERR_DUPLICATE_SESSION => RequestError::DuplicateSession(d.str()?),
+        tag::ERR_SESSION_CLOSED => {
+            RequestError::SessionClosed { session: d.str()?, reason: d.str()? }
+        }
+        tag::ERR_INVALID_REQUEST => RequestError::InvalidRequest(d.str()?),
+        tag::ERR_DISCONNECTED => RequestError::Disconnected(d.str()?),
         t => return err(format!("bad RequestError tag {t}")),
     })
 }
@@ -425,7 +464,7 @@ fn dec_error(d: &mut Dec<'_>) -> Result<RequestError, WireError> {
 pub fn enc_response(e: &mut Enc, r: &Response) {
     match r {
         Response::Screen(s) => {
-            e.u8(0);
+            e.u8(tag::RESP_SCREEN);
             e.f64(s.lam);
             e.usizes(&s.kept);
             e.f64s(&s.beta);
@@ -438,7 +477,7 @@ pub fn enc_response(e: &mut Enc, r: &Response) {
             e.bool(s.partial);
         }
         Response::Path(p) => {
-            e.u8(1);
+            e.u8(tag::RESP_PATH);
             e.str(&p.rule);
             e.str(p.solver);
             e.usize(p.steps);
@@ -450,7 +489,7 @@ pub fn enc_response(e: &mut Enc, r: &Response) {
             e.f64(p.latency_s);
         }
         Response::Predict(p) => {
-            e.u8(2);
+            e.u8(tag::RESP_PREDICT);
             e.f64(p.lam);
             e.f64(p.yhat);
             e.f64(p.gap);
@@ -458,13 +497,13 @@ pub fn enc_response(e: &mut Enc, r: &Response) {
             e.f64(p.latency_s);
         }
         Response::Warmed(w) => {
-            e.u8(3);
+            e.u8(tag::RESP_WARMED);
             e.f64(w.lam);
             e.f64(w.gap);
             e.f64(w.latency_s);
         }
         Response::Stats(s) => {
-            e.u8(4);
+            e.u8(tag::RESP_STATS);
             e.str(&s.session);
             e.str(&s.backend);
             e.str(&s.pipeline);
@@ -475,7 +514,7 @@ pub fn enc_response(e: &mut Enc, r: &Response) {
             enc_metrics(e, &s.metrics);
         }
         Response::Error(re) => {
-            e.u8(5);
+            e.u8(tag::RESP_ERROR);
             enc_error(e, re);
         }
     }
@@ -484,7 +523,7 @@ pub fn enc_response(e: &mut Enc, r: &Response) {
 /// Decode a [`Response`] from `d`.
 pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
     Ok(match d.u8()? {
-        0 => Response::Screen(ScreenResponse {
+        tag::RESP_SCREEN => Response::Screen(ScreenResponse {
             lam: d.f64()?,
             kept: d.usizes()?,
             beta: d.f64s()?,
@@ -496,7 +535,7 @@ pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
             gap: d.f64()?,
             partial: d.bool()?,
         }),
-        1 => {
+        tag::RESP_PATH => {
             let rule = d.str()?;
             let solver_name = d.str()?;
             // `solver` is `&'static str`: map the wire name back onto the
@@ -516,19 +555,19 @@ pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
                 latency_s: d.f64()?,
             })
         }
-        2 => Response::Predict(Prediction {
+        tag::RESP_PREDICT => Response::Predict(Prediction {
             lam: d.f64()?,
             yhat: d.f64()?,
             gap: d.f64()?,
             partial: d.bool()?,
             latency_s: d.f64()?,
         }),
-        3 => Response::Warmed(WarmResponse {
+        tag::RESP_WARMED => Response::Warmed(WarmResponse {
             lam: d.f64()?,
             gap: d.f64()?,
             latency_s: d.f64()?,
         }),
-        4 => Response::Stats(SessionStats {
+        tag::RESP_STATS => Response::Stats(SessionStats {
             session: d.str()?,
             backend: d.str()?,
             pipeline: d.str()?,
@@ -538,7 +577,7 @@ pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
             anchor_lam: d.f64()?,
             metrics: dec_metrics(d)?,
         }),
-        5 => Response::Error(dec_error(d)?),
+        tag::RESP_ERROR => Response::Error(dec_error(d)?),
         t => return err(format!("bad Response tag {t}")),
     })
 }
@@ -548,16 +587,16 @@ pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
     let mut e = Enc::new();
     match m {
         ClientMsg::Hello { version } => {
-            e.u8(0);
+            e.u8(tag::CLIENT_HELLO);
             e.u32(*version);
         }
         ClientMsg::Submit { id, session, request } => {
-            e.u8(1);
+            e.u8(tag::CLIENT_SUBMIT);
             e.u64(*id);
             e.str(session);
             enc_request(&mut e, request);
         }
-        ClientMsg::Shutdown => e.u8(2),
+        ClientMsg::Shutdown => e.u8(tag::CLIENT_SHUTDOWN),
     }
     e.0
 }
@@ -566,13 +605,13 @@ pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
 pub fn decode_client_msg(buf: &[u8]) -> Result<ClientMsg, WireError> {
     let mut d = Dec::new(buf);
     let m = match d.u8()? {
-        0 => ClientMsg::Hello { version: d.u32()? },
-        1 => ClientMsg::Submit {
+        tag::CLIENT_HELLO => ClientMsg::Hello { version: d.u32()? },
+        tag::CLIENT_SUBMIT => ClientMsg::Submit {
             id: d.u64()?,
             session: d.str()?,
             request: dec_request(&mut d)?,
         },
-        2 => ClientMsg::Shutdown,
+        tag::CLIENT_SHUTDOWN => ClientMsg::Shutdown,
         t => return err(format!("bad ClientMsg tag {t}")),
     };
     d.finish()?;
@@ -584,7 +623,7 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
     let mut e = Enc::new();
     match m {
         ServerMsg::Hello { version, sessions } => {
-            e.u8(0);
+            e.u8(tag::SERVER_HELLO);
             e.u32(*version);
             e.u32(sessions.len() as u32);
             for s in sessions {
@@ -592,11 +631,11 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
             }
         }
         ServerMsg::Reply { id, response } => {
-            e.u8(1);
+            e.u8(tag::SERVER_REPLY);
             e.u64(*id);
             enc_response(&mut e, response);
         }
-        ServerMsg::ShuttingDown => e.u8(2),
+        ServerMsg::ShuttingDown => e.u8(tag::SERVER_SHUTTING_DOWN),
     }
     e.0
 }
@@ -605,7 +644,7 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
 pub fn decode_server_msg(buf: &[u8]) -> Result<ServerMsg, WireError> {
     let mut d = Dec::new(buf);
     let m = match d.u8()? {
-        0 => {
+        tag::SERVER_HELLO => {
             let version = d.u32()?;
             let n = d.u32()? as usize;
             let mut sessions = Vec::with_capacity(n.min(1024));
@@ -614,8 +653,10 @@ pub fn decode_server_msg(buf: &[u8]) -> Result<ServerMsg, WireError> {
             }
             ServerMsg::Hello { version, sessions }
         }
-        1 => ServerMsg::Reply { id: d.u64()?, response: dec_response(&mut d)? },
-        2 => ServerMsg::ShuttingDown,
+        tag::SERVER_REPLY => {
+            ServerMsg::Reply { id: d.u64()?, response: dec_response(&mut d)? }
+        }
+        tag::SERVER_SHUTTING_DOWN => ServerMsg::ShuttingDown,
         t => return err(format!("bad ServerMsg tag {t}")),
     };
     d.finish()?;

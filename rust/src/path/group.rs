@@ -52,6 +52,7 @@ impl GroupPathOutput {
         if self.records.is_empty() {
             return 0.0;
         }
+        // audit:allow(determinism:float-sum, per-step summary ratio off the solve path)
         self.records.iter().map(|r| r.rejection_ratio()).sum::<f64>()
             / self.records.len() as f64
     }

@@ -268,6 +268,7 @@ impl PathOutput {
         if self.records.is_empty() {
             return 0.0;
         }
+        // audit:allow(determinism:float-sum, per-step summary ratio off the solve path)
         self.records.iter().map(|r| r.rejection_ratio()).sum::<f64>()
             / self.records.len() as f64
     }
@@ -401,6 +402,7 @@ pub fn solve_path_with_screener(
     // finishers donate slack downstream. KKT-repair re-solves within a
     // step reuse that step's slice (a deliberate simplification: repairs
     // are rare and cheap next to the main solve).
+    // audit:allow(determinism:clock, path-level deadline anchor; gates work, not values)
     let path_t0 = Instant::now();
     let total_steps = grid.values.len();
     let mut solve_opts = cfg.solve_opts.clone();

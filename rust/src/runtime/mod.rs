@@ -1,6 +1,6 @@
 //! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
 //! (HLO **text** — the image's xla_extension 0.5.1 rejects jax≥0.5 protos,
-//! see DESIGN.md §5) and serves the fixed-shape screening sweep `Xᵀw`
+//! see DESIGN.md §6) and serves the fixed-shape screening sweep `Xᵀw`
 //! through XLA.
 //!
 //! Screening always runs on the *full* N×p matrix, so one executable per
@@ -10,10 +10,18 @@
 //!
 //! Everything here is optional: when `artifacts/` is absent or no entry
 //! matches the problem shape, callers fall back to the native f64 sweep.
+//!
+//! The XLA bindings are gated behind the **`pjrt` cargo feature** so the
+//! default build is hermetic (the offline image bakes the bindings in, a
+//! fresh environment does not). Without the feature, [`ArtifactRuntime`]
+//! and [`ArtifactSweep`] compile as inert stubs: `load_default()` is
+//! `None`, every caller takes its native-fallback path, and the
+//! [`ArtifactSweep::SAFETY_SLACK`] contract stays available to the f32
+//! backends that reuse it. Enabling `pjrt` requires adding the `xla`
+//! bindings crate to `[dependencies]` by hand (see `rust/Cargo.toml`).
 
 pub mod pool;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -54,12 +62,15 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
 
 /// Loaded artifact store: a PJRT CPU client plus compiled executables keyed
 /// by `(name, n, p)`.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactRuntime {
     client: xla::PjRtClient,
-    exes: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+    // audit:allow(determinism:hash-iter, executable cache is lookup-only; the artifact listing is sorted)
+    exes: std::collections::HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactRuntime {
     /// Load and compile every artifact listed in `<dir>/manifest.tsv`.
     pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
@@ -69,7 +80,8 @@ impl ArtifactRuntime {
             .with_context(|| format!("reading {manifest_path:?}"))?;
         let entries = parse_manifest(&text)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = HashMap::new();
+        // audit:allow(determinism:hash-iter, executable cache is lookup-only; the artifact listing is sorted)
+        let mut exes = std::collections::HashMap::new();
         for e in entries {
             let path = dir.join(&e.file);
             let proto = xla::HloModuleProto::from_text_file(
@@ -156,6 +168,54 @@ impl ArtifactRuntime {
     }
 }
 
+/// Inert stand-in when the crate is built without the `pjrt` feature: the
+/// same API surface, but loading always reports "no artifacts" and the
+/// native f64 fallback carries every sweep. The private field keeps it
+/// unconstructible outside [`ArtifactRuntime::load`], which always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct ArtifactRuntime {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ArtifactRuntime {
+    /// Always an error: this build carries no XLA bindings.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        bail!("built without the `pjrt` feature: no PJRT runtime available")
+    }
+
+    /// Always `None` — callers take their native-fallback path.
+    pub fn load_default() -> Option<ArtifactRuntime> {
+        None
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn available(&self) -> Vec<(String, usize, usize)> {
+        Vec::new()
+    }
+
+    pub fn has(&self, _name: &str, _n: usize, _p: usize) -> bool {
+        false
+    }
+
+    pub fn execute_f32(
+        &self,
+        _name: &str,
+        _n: usize,
+        _p: usize,
+        _inputs: &[(&[f32], Vec<usize>)],
+    ) -> Result<Vec<Vec<f32>>> {
+        bail!("built without the `pjrt` feature: no PJRT runtime available")
+    }
+
+    pub fn sweep_for<'a>(&'a self, _x: &'a DenseMatrix) -> Option<ArtifactSweep<'a>> {
+        None
+    }
+}
+
 /// [`DesignMatrix`] backed by the AOT `xt_w` executable with the feature
 /// matrix resident on the device: the `Xᵀw` sweep dispatches to XLA, every
 /// other (column-local) operation delegates to the host matrix.
@@ -165,8 +225,11 @@ impl ArtifactRuntime {
 /// condition by [`ArtifactSweep::SAFETY_SLACK`] (ScreenContext applies it
 /// automatically via `with_sweep_slack`).
 pub struct ArtifactSweep<'a> {
+    #[cfg(feature = "pjrt")]
     client: &'a xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     exe: &'a xla::PjRtLoadedExecutable,
+    #[cfg(feature = "pjrt")]
     x_buf: xla::PjRtBuffer,
     host: &'a DenseMatrix,
     n: usize,
@@ -176,7 +239,8 @@ pub struct ArtifactSweep<'a> {
 impl ArtifactSweep<'_> {
     /// Conservative relative slack covering f32 accumulation error of the
     /// sweep (ULP ≈ 1.2e-7; a length-N dot accumulates ≲ N·ulp relative —
-    /// 1e-4 covers N up to ~10⁵ with two orders of margin).
+    /// 1e-4 covers N up to ~10⁵ with two orders of margin). Shared by the
+    /// f32 storage backends even in non-`pjrt` builds.
     pub const SAFETY_SLACK: f64 = 1e-4;
 
     pub fn shape(&self) -> (usize, usize) {
@@ -193,6 +257,7 @@ impl DesignMatrix for ArtifactSweep<'_> {
         self.p
     }
 
+    #[cfg(feature = "pjrt")]
     fn xt_w(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.n);
         assert_eq!(out.len(), self.p);
@@ -213,6 +278,12 @@ impl DesignMatrix for ArtifactSweep<'_> {
         // The artifact path is an accelerator; on any PJRT failure we must
         // not corrupt screening — panic loudly rather than return garbage.
         run().expect("PJRT sweep execution failed");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+        // no device in this build: the host matrix carries the sweep
+        self.host.xt_w(w, out);
     }
 
     fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
@@ -274,5 +345,5 @@ mod tests {
     }
 
     // PJRT round-trip tests live in rust/tests/runtime_integration.rs —
-    // they need `make artifacts` to have run first.
+    // they need the `pjrt` feature and `make artifacts` to have run first.
 }

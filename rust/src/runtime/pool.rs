@@ -1,5 +1,5 @@
 //! Persistent compute worker pool (std threads + mpsc — the offline image
-//! has no tokio or rayon, DESIGN.md §5).
+//! has no tokio or rayon, DESIGN.md §6).
 //!
 //! This is the first subsystem in the repo that owns threads for *compute*
 //! rather than for request routing: the sharded backend
@@ -320,6 +320,41 @@ mod tests {
             .collect();
         pool.run(jobs);
         assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    /// Miri target (CI runs `cargo +nightly miri test runtime::pool`): the
+    /// soundness argument for the `'scope → 'static` transmute in `run` is
+    /// that no erased job can run — or be dropped unrun — after `run`
+    /// returns. Exercise exactly that window: stack buffers that die right
+    /// after each `run` call, workers writing through the erased borrows,
+    /// several rounds so queue reuse is covered too. Under Miri a job
+    /// outliving its scope is a reported use-after-free, not a flake.
+    #[test]
+    fn job_lifetime_stays_within_run_scope() {
+        let pool = WorkerPool::new(2);
+        for round in 0..4usize {
+            let mut buf = vec![0usize; 8 + round];
+            {
+                let chunk = chunk_len(buf.len(), pool.threads());
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                let mut base = 0usize;
+                for part in buf.chunks_mut(chunk) {
+                    let start = base;
+                    base += part.len();
+                    jobs.push(Box::new(move || {
+                        for (k, v) in part.iter_mut().enumerate() {
+                            *v = round + start + k;
+                        }
+                    }));
+                }
+                pool.run(jobs);
+            }
+            for (k, v) in buf.iter().enumerate() {
+                assert_eq!(*v, round + k);
+            }
+            // `buf` drops here: any straggler job still holding the erased
+            // borrow would be a use-after-free Miri flags deterministically.
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::{ScreenContext, ScreeningRule, StepInput};
 /// Basic DOME test (requires unit-norm features; callers should
 /// `Dataset::normalize_features` first — asserted loosely at runtime).
 ///
-/// Perf (DESIGN.md §9): `a = Xᵀñ` is λ-independent (ñ is the
+/// Perf (DESIGN.md §10): `a = Xᵀñ` is λ-independent (ñ is the
 /// λmax-attaining feature), so it is computed once and cached across the
 /// whole path instead of re-sweeping at every λ — halving DOME's per-step
 /// cost from 2 sweeps to 1.
@@ -107,7 +107,7 @@ impl ScreeningRule for DomeRule {
         let mut xq = ctx.sweep_scratch();
         let q: Vec<f64> = ctx.y.iter().map(|v| v / lam).collect();
         ctx.sweep.xt_w(&q, &mut xq[..]);
-        // λ-independent second sweep, cached across the path (DESIGN.md §9)
+        // λ-independent second sweep, cached across the path (DESIGN.md §10)
         let mut cache = self.xn_cache.borrow_mut();
         let xn: &Vec<f64> = cache.get_or_insert_with(|| Self::compute_xn(ctx));
         for j in 0..p {

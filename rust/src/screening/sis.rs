@@ -3,7 +3,7 @@
 //! The paper's intro cites SIS as the canonical *heuristic* marginal-
 //! correlation screen: keep the d features with the largest |xᵢᵀy|,
 //! irrespective of λ. Not safe and not λ-adaptive; included as the ablation
-//! baseline (DESIGN.md §6) and paired with KKT repair when used on a path.
+//! baseline (DESIGN.md §7) and paired with KKT repair when used on a path.
 
 use super::{ScreenContext, ScreeningRule, StepInput};
 
@@ -34,8 +34,11 @@ impl ScreeningRule for SisRule {
         let p = ctx.p();
         let d = self.keep_count.min(p);
         let mut idx: Vec<usize> = (0..p).collect();
+        // total_cmp: identical order to the old partial_cmp().unwrap() for
+        // finite |xᵀy|; NaN (impossible for finite inputs) now ranks last
+        // instead of panicking mid-screen.
         idx.sort_by(|&a, &b| {
-            ctx.xty[b].abs().partial_cmp(&ctx.xty[a].abs()).unwrap()
+            ctx.xty[b].abs().total_cmp(&ctx.xty[a].abs())
         });
         keep.iter_mut().for_each(|k| *k = false);
         for &j in idx.iter().take(d) {
@@ -50,7 +53,7 @@ impl ScreeningRule for SisRule {
         let mut idx: Vec<usize> = (0..ctx.p()).filter(|&j| keep[j]).collect();
         let d = self.keep_count.min(idx.len());
         idx.sort_by(|&a, &b| {
-            ctx.xty[b].abs().partial_cmp(&ctx.xty[a].abs()).unwrap()
+            ctx.xty[b].abs().total_cmp(&ctx.xty[a].abs())
         });
         for &j in idx.iter().skip(d) {
             keep[j] = false;

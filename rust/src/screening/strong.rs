@@ -161,7 +161,7 @@ mod tests {
         let full = CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &opts).scatter(&cols, 80);
         // the feature with the largest |β| is certainly active
         let strongest = (0..80)
-            .max_by(|&a, &b| full[a].abs().partial_cmp(&full[b].abs()).unwrap())
+            .max_by(|&a, &b| full[a].abs().total_cmp(&full[b].abs()))
             .unwrap();
         assert!(full[strongest] != 0.0);
         let mut keep = vec![true; 80];

@@ -108,7 +108,9 @@ impl CdSolver {
 
         // deadline-aware serving: resolve the wall-clock budget once; with
         // no budget the clock is never read (bit-identical trajectories)
+        // audit:allow(determinism:clock, deadline plumbing: never read unless time_budget is Some)
         let deadline = opts.time_budget.and_then(|b| std::time::Instant::now().checked_add(b));
+        // audit:allow(determinism:clock, deadline plumbing: never read unless time_budget is Some)
         let out_of_time = || deadline.is_some_and(|d| std::time::Instant::now() >= d);
 
         let mut gap = f64::INFINITY;

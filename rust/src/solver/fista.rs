@@ -50,7 +50,9 @@ impl FistaSolver {
 
         // deadline-aware serving: no budget ⇒ the clock is never read and
         // the iterate sequence is untouched (same discipline as CD)
+        // audit:allow(determinism:clock, deadline plumbing: never read unless time_budget is Some)
         let deadline = opts.time_budget.and_then(|b| std::time::Instant::now().checked_add(b));
+        // audit:allow(determinism:clock, deadline plumbing: never read unless time_budget is Some)
         let out_of_time = || deadline.is_some_and(|d| std::time::Instant::now() >= d);
 
         while iters < opts.max_iters {

@@ -1,4 +1,4 @@
-//! Minimal CLI argument parser (clap is not available offline — DESIGN.md §5).
+//! Minimal CLI argument parser (clap is not available offline — DESIGN.md §6).
 //!
 //! Grammar: `dpp <subcommand> [--key value]... [--flag]... [positional]...`
 

@@ -4,7 +4,7 @@
 //! The build image has no network registry access and only the `xla` crate's
 //! dependency closure vendored, so `rand`, `clap`, `criterion`, and
 //! `proptest` are unavailable; these modules are the in-repo replacements
-//! (DESIGN.md §5 "Environment deviations").
+//! (DESIGN.md §6 "Environment deviations").
 
 pub mod benchkit;
 pub mod cli;
@@ -17,7 +17,7 @@ pub mod timer;
 ///
 /// `DPP_SCALE=full` makes dataset generators use the paper's exact shapes;
 /// anything else (default) uses scaled-down shapes that keep every bench
-/// minutes-scale on the 1-core image (DESIGN.md §6).
+/// minutes-scale on the 1-core image (DESIGN.md §7).
 pub fn full_scale() -> bool {
     std::env::var("DPP_SCALE").map(|v| v == "full").unwrap_or(false)
 }

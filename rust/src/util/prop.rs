@@ -1,4 +1,4 @@
-//! Property-test driver (proptest is unavailable offline — DESIGN.md §5).
+//! Property-test driver (proptest is unavailable offline — DESIGN.md §6).
 //!
 //! A property is a closure over a seeded [`Rng`]; the driver runs it for many
 //! derived seeds and, on failure, reports the exact failing seed so the case

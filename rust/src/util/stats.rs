@@ -1,11 +1,13 @@
 //! Small statistics helpers used by the bench harness and metrics.
 
+use crate::linalg::ops::seq_sum;
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.iter().sum::<f64>() / xs.len() as f64
+    seq_sum(xs) / xs.len() as f64
 }
 
 /// Sample standard deviation (0.0 for n < 2).
@@ -19,12 +21,16 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Median (sorts a copy; 0.0 for empty input).
+///
+/// Sorts with `total_cmp`: unlike the old `partial_cmp().unwrap()`, a NaN
+/// sample no longer panics — it sorts above +∞ (IEEE total order) and
+/// poisons the result visibly instead of aborting a metrics flush.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -39,7 +45,7 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

@@ -1,0 +1,182 @@
+//! Tier-1 gate for `dpp audit` (DESIGN.md §5).
+//!
+//! Three guarantees, in order of importance:
+//!
+//! 1. the shipped tree audits clean — every lint family at zero findings,
+//!    every policy exception a reasoned in-tree waiver;
+//! 2. the committed `rust/wire.lock` is byte-identical to what
+//!    `dpp audit --write-wire-lock` would emit from today's sources;
+//! 3. each lint family actually fires — a fixture tree under
+//!    `tests/fixtures/audit/` seeds one violation per family (plus the
+//!    waiver edge cases) and the counts here are exact, so a lint that
+//!    silently stops matching turns this test red, not the audit green.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use dpp_screen::analysis::{
+    current_wire_consts, run_audit, wirecheck, AuditConfig, AuditReport,
+};
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root() -> PathBuf {
+    crate_root().join("tests/fixtures/audit")
+}
+
+fn audit_fixtures(lock: Option<&str>) -> AuditReport {
+    let cfg = AuditConfig {
+        src_root: fixture_root().join("tree"),
+        lock_path: lock.map(|name| fixture_root().join(name)),
+    };
+    run_audit(&cfg).expect("fixture tree scans")
+}
+
+fn count_by_code(report: &AuditReport) -> BTreeMap<&'static str, usize> {
+    let mut by_code = BTreeMap::new();
+    for f in &report.findings {
+        *by_code.entry(f.code).or_insert(0) += 1;
+    }
+    by_code
+}
+
+/// Guarantee 1: the crate's own `src/` has zero findings. On failure the
+/// full report is printed — the same text `dpp audit` would show.
+#[test]
+fn shipped_tree_audits_clean() {
+    let cfg = AuditConfig::for_crate(env!("CARGO_MANIFEST_DIR"));
+    let report = run_audit(&cfg).expect("crate sources scan");
+    assert!(
+        report.clean(),
+        "`dpp audit` found violations in the shipped tree:\n{}",
+        report.render_text(),
+    );
+    // The waiver ledger and the unsafe inventory are part of the contract:
+    // both are known-nonempty today, and the sole unsafe block is the
+    // documented lifetime-erasing transmute in runtime/pool.rs.
+    assert!(!report.waivers.is_empty(), "waiver ledger unexpectedly empty");
+    assert!(report.waivers.iter().all(|w| !w.reason.is_empty()));
+    assert_eq!(
+        report.unsafe_sites.len(),
+        1,
+        "unsafe inventory changed — update this pin alongside the new \
+         SAFETY comment: {:?}",
+        report.unsafe_sites,
+    );
+    assert_eq!(report.unsafe_sites[0].file, "runtime/pool.rs");
+}
+
+/// Guarantee 2: `rust/wire.lock` round-trips — rendering today's parsed
+/// wire/frame constants reproduces the committed file byte-for-byte.
+#[test]
+fn wire_lock_matches_sources_exactly() {
+    let root = crate_root();
+    let consts = current_wire_consts(&root.join("src")).expect("wire sources parse");
+    let rendered = wirecheck::render_lock(&consts);
+    let committed = fs::read_to_string(root.join("wire.lock")).expect("wire.lock exists");
+    assert_eq!(
+        rendered, committed,
+        "rust/wire.lock is stale — after a deliberate grammar change, bump \
+         WIRE_VERSION and run `dpp audit --write-wire-lock > rust/wire.lock`",
+    );
+    // And the committed bytes parse back to the same entries.
+    let parsed = wirecheck::parse_lock(&committed).expect("committed lock parses");
+    assert_eq!(parsed.len(), consts.len());
+}
+
+/// Guarantee 3a: every lint family catches its seeded fixture violation,
+/// with exact counts (no lock configured — the wire table has its own
+/// fixtures below).
+#[test]
+fn fixture_tree_trips_every_lint_family() {
+    let report = audit_fixtures(None);
+    let by_code = count_by_code(&report);
+    let expect: BTreeMap<&str, usize> = [
+        ("determinism:float-sort", 1), // solver/bad_sort.rs
+        ("determinism:clock", 1),      // path/clock_sum.rs
+        ("determinism:float-sum", 1),  // path/clock_sum.rs
+        ("determinism:hash-iter", 1),  // path/clock_sum.rs
+        ("unsafe", 1),                 // runtime/raw.rs (undocumented one)
+        ("panic", 1),                  // coordinator/handler.rs
+        ("waiver", 1),                 // util/waived.rs (empty reason)
+    ]
+    .into_iter()
+    .collect();
+    assert_eq!(
+        by_code.iter().map(|(&k, &v)| (k, v)).collect::<BTreeMap<_, _>>(),
+        expect,
+        "fixture findings drifted:\n{}",
+        report.render_text(),
+    );
+    // The reasoned waiver silences its lint and lands in the ledger; both
+    // unsafe blocks (documented or not) land in the inventory.
+    assert_eq!(report.waivers.len(), 1);
+    assert_eq!(report.waivers[0].code, "determinism:clock");
+    assert_eq!(report.waivers[0].reason, "fixture-sanctioned timer shim");
+    assert_eq!(report.unsafe_sites.len(), 2);
+}
+
+/// Guarantee 3b: a matching lock audits the fixture wire table clean...
+#[test]
+fn fixture_wire_lock_match_is_clean() {
+    let report = audit_fixtures(Some("wire.lock.match"));
+    assert!(
+        !report.findings.iter().any(|f| f.code == "wire"),
+        "matching fixture lock produced wire findings:\n{}",
+        report.render_text(),
+    );
+}
+
+/// ...and a stale lock (tag drift, version unchanged) demands a bump.
+#[test]
+fn fixture_wire_lock_drift_demands_version_bump() {
+    let report = audit_fixtures(Some("wire.lock.stale"));
+    let wire: Vec<_> = report.findings.iter().filter(|f| f.code == "wire").collect();
+    assert_eq!(wire.len(), 1, "expected exactly one drift finding: {wire:?}");
+    assert!(wire[0].message.contains("REQ_ECHO"), "{}", wire[0].message);
+    assert!(
+        wire[0].message.contains("requires a WIRE_VERSION bump"),
+        "{}",
+        wire[0].message,
+    );
+    assert_eq!(wire[0].file, "net/wire.rs");
+}
+
+/// The JSON rendering stays shell-pipeline friendly: one object, the three
+/// arrays, and correctly escaped strings.
+#[test]
+fn json_report_shape() {
+    let report = audit_fixtures(None);
+    let json = report.to_json();
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    for key in ["\"findings\":[", "\"waivers\":[", "\"unsafe\":["] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert!(json.contains("determinism:float-sort"));
+    // No raw newlines may survive inside the single-line JSON document.
+    assert!(!json.contains('\n'));
+}
+
+/// The fixture tree is part of the test: if someone "fixes" the seeded
+/// violations the counts above go stale silently — so pin the files too.
+#[test]
+fn fixture_tree_layout_is_intact() {
+    let tree = fixture_root().join("tree");
+    for rel in [
+        "solver/bad_sort.rs",
+        "path/clock_sum.rs",
+        "runtime/raw.rs",
+        "coordinator/handler.rs",
+        "util/waived.rs",
+        "net/wire.rs",
+        "net/frame.rs",
+    ] {
+        assert!(
+            Path::new(&tree).join(rel).is_file(),
+            "fixture file missing: {rel}",
+        );
+    }
+}

@@ -1,0 +1,4 @@
+// Audit fixture (never compiled): one panicking call on a request path.
+pub fn handle(req: Option<u32>) -> u32 {
+    req.unwrap()
+}

@@ -1,0 +1,4 @@
+// Audit fixture (never compiled): framing constants for the wirecheck
+// tests.
+pub const MAGIC: [u8; 4] = *b"TEST";
+pub const FRAME_VERSION: u8 = 1;

@@ -1,0 +1,9 @@
+// Audit fixture (never compiled): a miniature wire grammar for the
+// wirecheck tests — see ../../wire.lock.match and wire.lock.stale.
+pub const WIRE_VERSION: u32 = 3;
+
+pub mod tag {
+    pub const REQ_PING: u8 = 0;
+    pub const REQ_ECHO: u8 = 1;
+    pub const RESP_PONG: u8 = 0;
+}

@@ -1,0 +1,10 @@
+// Audit fixture (never compiled): seeds one clock hit, one raw float-sum
+// hit and one hashed-collection hit, all outside their sanctioned homes.
+pub fn summarize(v: &[f64]) -> f64 {
+    let _t = std::time::Instant::now();
+    v.iter().sum::<f64>()
+}
+
+pub fn index(keys: &[u64]) -> std::collections::HashMap<u64, usize> {
+    keys.iter().copied().enumerate().map(|(i, k)| (k, i)).collect()
+}

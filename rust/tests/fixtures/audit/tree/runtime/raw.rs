@@ -1,0 +1,10 @@
+// Audit fixture (never compiled): two unsafe inventory entries, one of
+// them undocumented.
+pub fn first(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+// SAFETY: caller guarantees `p` points at two readable bytes.
+pub fn second(p: *const u8) -> u8 {
+    unsafe { *p.add(1) }
+}

@@ -1,0 +1,4 @@
+// Audit fixture (never compiled): seeds one determinism:float-sort hit.
+pub fn sort_desc(v: &mut [f64]) {
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}

@@ -1,0 +1,11 @@
+// Audit fixture (never compiled): one reasoned waiver that silences its
+// lint, and one empty-reason waiver that is itself a finding.
+pub fn timed() -> std::time::Instant {
+    // audit:allow(determinism:clock, fixture-sanctioned timer shim)
+    std::time::Instant::now()
+}
+
+pub fn stamp() -> std::time::Instant {
+    // audit:allow(determinism:clock)
+    std::time::Instant::now()
+}

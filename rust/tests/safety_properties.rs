@@ -1,5 +1,5 @@
 //! Cross-module property suite: the paper's correctness claims, checked on
-//! randomized problems across every rule × dataset family (DESIGN.md §8),
+//! randomized problems across every rule × dataset family (DESIGN.md §9),
 //! plus the composed-pipeline safety invariants (DESIGN.md §3).
 
 use dpp_screen::data::{synthetic, RealDataset};

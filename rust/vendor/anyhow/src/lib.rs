@@ -1,0 +1,183 @@
+//! Minimal in-tree `anyhow` shim (vendored, DESIGN.md §6).
+//!
+//! The offline build image bakes the real `anyhow` into its cargo cache,
+//! but a fresh clone has no network to fetch it — and a registry entry in
+//! `Cargo.lock` would pin a checksum this repo cannot verify offline. So
+//! the workspace path-depends on this shim instead: the subset of the
+//! `anyhow` 1.x API this crate actually uses, with the same semantics.
+//!
+//! Covered: [`Error`] (context chain, `{}`/`{:#}`/`{:?}` formatting,
+//! `From<E: std::error::Error>` capturing the source chain), the
+//! [`Result`] alias, the [`Context`] extension for `Result` and `Option`,
+//! and the [`anyhow!`]/[`bail!`] macros. Not covered (unused here):
+//! downcasting, backtraces, `ensure!`.
+
+use std::fmt;
+
+/// Error with an ordered context chain: `chain[0]` is the outermost
+/// context, the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error in an outer context layer (like
+    /// `anyhow::Error::context`).
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost context; `{:#}` the full `a: b: c` chain
+    /// (matching real `anyhow`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    /// `{:?}` (what `unwrap`/`expect` print) shows the cause chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, c) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {c}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// NOTE: deliberately NOT `impl std::error::Error for Error` — exactly like
+// real `anyhow`. That keeps the blanket `From` below coherent and lets
+// `Context` cover `Result<_, Error>` and `Result<_, E: std::error::Error>`
+// with one `Into<Error>` bound.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with `context`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap lazily — `f` runs only on the failure path.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `return Err(anyhow!(…))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let text = std::fs::read_to_string("/definitely/not/here")
+            .context("reading config")?;
+        Ok(text)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(format!("{err:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<u8> = None;
+        let err = missing.context("no byte").unwrap_err();
+        assert_eq!(format!("{err}"), "no byte");
+
+        let n = 3;
+        let err = anyhow!("bad count {n}");
+        assert_eq!(format!("{err}"), "bad count 3");
+        let err = anyhow!("bad {} of {}", 1, 2);
+        assert_eq!(format!("{err}"), "bad 1 of 2");
+
+        fn bails() -> Result<()> {
+            bail!("nope {}", 7)
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "nope 7");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root cause")
+        }
+        let err = inner().with_context(|| "outer layer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer layer");
+        assert_eq!(format!("{err:#}"), "outer layer: root cause");
+    }
+}
