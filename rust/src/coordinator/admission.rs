@@ -1,0 +1,310 @@
+//! Admission control and session lifecycle policy (DESIGN.md §4): the
+//! coordinator's defense against unbounded queueing.
+//!
+//! The scheduler ([`crate::runtime::scheduler`]) makes enqueueing free —
+//! which is exactly why it needs a policy on top: without one, a tenant
+//! outrunning the pool piles work into its dispatch queue forever and every
+//! deadline inside drowns. [`AdmissionController`] instead *sheds* load with
+//! a typed [`RequestError::Overloaded`] carrying a deterministic
+//! `retry_after_ms` hint, bounds the session count, and retires sessions
+//! idle past a TTL so their memory (the backend can be an entire dataset)
+//! comes back.
+//!
+//! Policy knobs ([`AdmissionConfig`], CLI `--admission`/`--max-sessions`):
+//!
+//! * `depth` — per-session pending cap: a session with this many requests
+//!   enqueued-but-unfinished sheds new ones;
+//! * `total` — coordinator-wide pending cap across all sessions (pool
+//!   saturation backstop);
+//! * `ttl-ms` — idle eviction: a session untouched this long is closed with
+//!   an eviction reason once its queue is idle;
+//! * `max_sessions` — registration cap.
+//!
+//! Everything here is bookkeeping over queue depths — admission decisions
+//! never read the matrices, so shedding cannot perturb what admitted
+//! requests compute (the bit-identity contract is untouched).
+
+use std::time::{Duration, Instant};
+
+use super::metrics::AdmissionStats;
+use super::protocol::RequestError;
+
+/// Retry-hint quantum: one queued-but-unfinished request is assumed to be
+/// worth this many milliseconds of backoff. Deterministic in the queue
+/// state, so identical load patterns shed with identical hints.
+const RETRY_QUANTUM_MS: u64 = 25;
+
+/// Longest retry hint ever issued (the hint is advice, not a lease).
+const RETRY_CAP_MS: u64 = 5_000;
+
+/// Admission policy knobs. `Default` is fully open — no caps, no TTL —
+/// which is the pre-admission behavior of the coordinator.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Maximum registered sessions; registrations beyond it are shed.
+    pub max_sessions: Option<usize>,
+    /// Per-session pending-request cap (scheduler queue depth).
+    pub max_session_pending: Option<usize>,
+    /// Coordinator-wide pending-request cap across all sessions.
+    pub max_total_pending: Option<usize>,
+    /// Idle eviction: sessions untouched this long are closed.
+    pub session_ttl: Option<Duration>,
+}
+
+impl AdmissionConfig {
+    /// Parse the CLI `--admission` spec: comma-separated `key=value` pairs
+    /// with keys `depth`, `total`, `ttl-ms` (e.g. `depth=8,total=64,
+    /// ttl-ms=30000`). The session cap rides the separate `--max-sessions`
+    /// flag and is left untouched here.
+    pub fn parse(spec: &str) -> Result<AdmissionConfig, String> {
+        let mut cfg = AdmissionConfig::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad --admission part `{part}`: expected key=value"))?;
+            let parsed: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad --admission value in `{part}`: expected an integer"))?;
+            match key.trim() {
+                "depth" => cfg.max_session_pending = Some(parsed as usize),
+                "total" => cfg.max_total_pending = Some(parsed as usize),
+                "ttl-ms" => cfg.session_ttl = Some(Duration::from_millis(parsed)),
+                other => {
+                    return Err(format!(
+                        "unknown --admission key `{other}` (expected depth, total, or ttl-ms)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// True when at least one knob is set (the router skips admission
+    /// bookkeeping entirely otherwise).
+    pub fn is_active(&self) -> bool {
+        self.max_sessions.is_some()
+            || self.max_session_pending.is_some()
+            || self.max_total_pending.is_some()
+            || self.session_ttl.is_some()
+    }
+}
+
+/// Deterministic backoff hint for a shed request: scale with how deep the
+/// offending queue already is, clamped to `[RETRY_QUANTUM_MS, RETRY_CAP_MS]`.
+fn retry_hint_ms(pending: usize) -> u64 {
+    (pending as u64).saturating_mul(RETRY_QUANTUM_MS).clamp(RETRY_QUANTUM_MS, RETRY_CAP_MS)
+}
+
+/// The coordinator-side policy state: per-session last-activity stamps plus
+/// shed/eviction counters. Owned by the router thread — no locking here.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Last-activity stamp per session, in registration order (a `Vec`
+    /// keeps eviction scans deterministic; session counts are small).
+    touched: Vec<(String, Instant)>,
+    stats: AdmissionStats,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController { cfg, touched: Vec::new(), stats: AdmissionStats::default() }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Gate a registration against the session cap.
+    pub fn admit_register(&mut self, current_sessions: usize) -> Result<(), RequestError> {
+        if let Some(cap) = self.cfg.max_sessions {
+            if current_sessions >= cap {
+                self.stats.shed += 1;
+                return Err(RequestError::Overloaded {
+                    retry_after_ms: retry_hint_ms(current_sessions),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Gate a request against the queue-depth caps. `session_pending` and
+    /// `total_pending` are the scheduler's depths *before* this request.
+    pub fn admit(
+        &mut self,
+        session_pending: usize,
+        total_pending: usize,
+    ) -> Result<(), RequestError> {
+        self.stats.submitted += 1;
+        if let Some(cap) = self.cfg.max_session_pending {
+            if session_pending >= cap {
+                self.stats.shed += 1;
+                return Err(RequestError::Overloaded {
+                    retry_after_ms: retry_hint_ms(session_pending),
+                });
+            }
+        }
+        if let Some(cap) = self.cfg.max_total_pending {
+            if total_pending >= cap {
+                self.stats.shed += 1;
+                return Err(RequestError::Overloaded {
+                    retry_after_ms: retry_hint_ms(total_pending),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Record session activity (registration or an admitted request) for
+    /// the TTL clock. No-op unless a TTL is configured.
+    pub fn touch(&mut self, session: &str) {
+        if self.cfg.session_ttl.is_none() {
+            return;
+        }
+        // audit:allow(determinism:clock, TTL bookkeeping only; never feeds numerics)
+        let now = Instant::now();
+        match self.touched.iter_mut().find(|(name, _)| name == session) {
+            Some((_, at)) => *at = now,
+            None => self.touched.push((session.to_string(), now)),
+        }
+    }
+
+    /// Drop a session from the TTL book (closed or evicted).
+    pub fn forget(&mut self, session: &str) {
+        self.touched.retain(|(name, _)| name != session);
+    }
+
+    /// Sessions idle past the TTL, in registration order. The caller must
+    /// still confirm the session's queue is idle before evicting — a
+    /// request in flight counts as activity it just hasn't seen yet.
+    pub fn expired(&self) -> Vec<String> {
+        let Some(ttl) = self.cfg.session_ttl else {
+            return Vec::new();
+        };
+        self.touched
+            .iter()
+            // audit:allow(determinism:clock, TTL bookkeeping only; never feeds numerics)
+            .filter(|(_, at)| at.elapsed() >= ttl)
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+
+    /// Human-readable reason attached to a TTL eviction's tombstone.
+    pub fn eviction_reason(&self) -> String {
+        let ttl_ms =
+            self.cfg.session_ttl.map(|d| d.as_millis() as u64).unwrap_or_default();
+        format!("evicted: idle past session-ttl ({ttl_ms}ms)")
+    }
+
+    /// Count one completed eviction.
+    pub fn record_eviction(&mut self) {
+        self.stats.evicted += 1;
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_admits_everything() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        assert!(!ctl.config().is_active());
+        for depth in [0usize, 10, 10_000] {
+            assert!(ctl.admit(depth, depth * 4).is_ok());
+        }
+        assert!(ctl.admit_register(1_000).is_ok());
+        assert!(ctl.expired().is_empty());
+        assert_eq!(ctl.stats().shed, 0);
+    }
+
+    #[test]
+    fn depth_and_total_caps_shed_with_retry_hint() {
+        let cfg = AdmissionConfig {
+            max_session_pending: Some(2),
+            max_total_pending: Some(3),
+            ..Default::default()
+        };
+        let mut ctl = AdmissionController::new(cfg);
+        assert!(ctl.admit(0, 0).is_ok());
+        assert!(ctl.admit(1, 1).is_ok());
+        match ctl.admit(2, 2) {
+            Err(RequestError::Overloaded { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 2 * RETRY_QUANTUM_MS);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // under the per-session cap but over the total cap
+        match ctl.admit(1, 3) {
+            Err(RequestError::Overloaded { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, 3 * RETRY_QUANTUM_MS);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let stats = ctl.stats();
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.shed, 2);
+    }
+
+    #[test]
+    fn session_cap_sheds_registrations() {
+        let cfg = AdmissionConfig { max_sessions: Some(2), ..Default::default() };
+        let mut ctl = AdmissionController::new(cfg);
+        assert!(ctl.admit_register(0).is_ok());
+        assert!(ctl.admit_register(1).is_ok());
+        assert!(matches!(
+            ctl.admit_register(2),
+            Err(RequestError::Overloaded { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_ttl_expires_touched_sessions() {
+        let cfg = AdmissionConfig {
+            session_ttl: Some(Duration::from_millis(0)),
+            ..Default::default()
+        };
+        let mut ctl = AdmissionController::new(cfg);
+        ctl.touch("a");
+        ctl.touch("b");
+        ctl.touch("a"); // re-touch keeps registration order
+        assert_eq!(ctl.expired(), vec!["a".to_string(), "b".to_string()]);
+        ctl.forget("a");
+        ctl.record_eviction();
+        assert_eq!(ctl.expired(), vec!["b".to_string()]);
+        assert_eq!(ctl.stats().evicted, 1);
+        assert!(ctl.eviction_reason().contains("session-ttl"));
+    }
+
+    #[test]
+    fn no_ttl_never_expires() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        ctl.touch("a"); // no-op without a TTL
+        assert!(ctl.expired().is_empty());
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        let cfg = AdmissionConfig::parse("depth=8, total=64, ttl-ms=30000").unwrap();
+        assert_eq!(cfg.max_session_pending, Some(8));
+        assert_eq!(cfg.max_total_pending, Some(64));
+        assert_eq!(cfg.session_ttl, Some(Duration::from_millis(30_000)));
+        assert!(cfg.is_active());
+        assert_eq!(AdmissionConfig::parse("").unwrap(), AdmissionConfig::default());
+        assert!(AdmissionConfig::parse("depth").is_err());
+        assert!(AdmissionConfig::parse("depth=abc").is_err());
+        assert!(AdmissionConfig::parse("bogus=1").is_err());
+    }
+
+    #[test]
+    fn retry_hint_is_clamped() {
+        assert_eq!(retry_hint_ms(0), RETRY_QUANTUM_MS);
+        assert_eq!(retry_hint_ms(1), RETRY_QUANTUM_MS);
+        assert_eq!(retry_hint_ms(4), 4 * RETRY_QUANTUM_MS);
+        assert_eq!(retry_hint_ms(1_000_000), RETRY_CAP_MS);
+    }
+}

@@ -8,6 +8,32 @@ use crate::util::stats::{quantile, OnlineStats};
 /// moments keep updating — serving benchmarks stay allocation-bounded.
 const LATENCY_SAMPLE_CAP: usize = 4096;
 
+/// Coordinator-wide admission counters (one per [`Coordinator`], not per
+/// session): how much load arrived, how much the admission policy shed with
+/// [`crate::coordinator::RequestError::Overloaded`], and how many sessions
+/// the TTL sweep evicted.
+///
+/// [`Coordinator`]: crate::coordinator::Coordinator
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests that reached the admission gate (admitted + shed).
+    pub submitted: u64,
+    /// Requests (or registrations) refused with `Overloaded`.
+    pub shed: u64,
+    /// Sessions closed by the idle-TTL sweep.
+    pub evicted: u64,
+}
+
+impl AdmissionStats {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} shed={} evicted_sessions={}",
+            self.submitted, self.shed, self.evicted
+        )
+    }
+}
+
 /// Aggregated metrics for one screening session.
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ServiceMetrics {

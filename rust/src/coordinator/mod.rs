@@ -14,19 +14,26 @@
 //!   concurrently on the shared [`crate::runtime::pool`], single-owner
 //!   state per session) and the legacy single-session
 //!   [`service::ScreeningService`] facade;
-//! * [`metrics`] — per-session latency/batching/rejection/partial metrics.
+//! * [`admission`] — the load-shedding and session-TTL policy
+//!   ([`AdmissionConfig`]/[`AdmissionController`]): queue-depth caps answer
+//!   with typed [`RequestError::Overloaded`] instead of queueing
+//!   unboundedly, idle sessions are evicted;
+//! * [`metrics`] — per-session latency/batching/rejection/partial metrics,
+//!   plus coordinator-wide [`AdmissionStats`].
 //!
 //! The paper's protocol also averages 100 trials per dataset and sweeps
 //! many (rule × dataset × λ-grid) combinations; [`run_trials`] fans trials
 //! out over worker threads (std::thread + mpsc — tokio is not available in
 //! the offline image, DESIGN.md §6).
 
+pub mod admission;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;
 pub mod service;
 
-pub use metrics::ServiceMetrics;
+pub use admission::{AdmissionConfig, AdmissionController};
+pub use metrics::{AdmissionStats, ServiceMetrics};
 pub use protocol::{
     PathSummary, Prediction, Request, RequestError, RequestOptions, Response,
     ScreenResponse, SessionStats, WarmResponse,

@@ -21,6 +21,7 @@ use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 use super::metrics::ServiceMetrics;
+use crate::path::SolverKind;
 use crate::screening::{ScreenPipeline, StageCount};
 
 /// Per-request knobs. `Default` is "no deadline, session defaults" — the
@@ -38,6 +39,11 @@ pub struct RequestOptions {
     /// anchor at λmax (a throwaway pipeline has no sequential history);
     /// the session's own anchor still advances on the exact solution.
     pub pipeline: Option<ScreenPipeline>,
+    /// Solve with this solver instead of the session's. The session's
+    /// warm-start cache stays solver-tagged ([`crate::solver::SolverState`]),
+    /// so switching solvers mid-session never replays another solver's
+    /// momentum state.
+    pub solver: Option<SolverKind>,
 }
 
 impl RequestOptions {
@@ -192,6 +198,11 @@ pub enum RequestError {
     InvalidRequest(String),
     /// The coordinator router is gone (shutdown or crashed).
     Disconnected(String),
+    /// The admission policy shed this request (or registration) instead of
+    /// queueing it unboundedly: a queue-depth or session cap tripped.
+    /// `retry_after_ms` is a deterministic backoff hint scaled to the
+    /// offending queue's depth — advice, not a reservation.
+    Overloaded { retry_after_ms: u64 },
 }
 
 impl std::fmt::Display for RequestError {
@@ -210,6 +221,9 @@ impl std::fmt::Display for RequestError {
             RequestError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
             RequestError::Disconnected(msg) => {
                 write!(f, "coordinator disconnected: {msg}")
+            }
+            RequestError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: shed by admission control, retry after {retry_after_ms}ms")
             }
         }
     }

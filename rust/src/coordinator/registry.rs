@@ -34,7 +34,7 @@ use crate::screening::{
     pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
     ContextStats, GapSafeHook, ScreenContext, ScreenPipeline, Screener,
 };
-use crate::solver::LassoSolver;
+use crate::solver::{LassoSolver, SolverHook, SolverState};
 
 /// Everything needed to open a session: the dataset, how to screen it, how
 /// to solve it.
@@ -113,6 +113,11 @@ pub(crate) struct SessionState {
     lam_state: f64,
     /// Full-length solution at `lam_state`.
     beta_state: Vec<f64>,
+    /// Solver resume state recorded by the most recent solve that ran the
+    /// *session's* solver (FISTA momentum etc.). Solver-tagged: a
+    /// per-request solver override threads a throwaway state instead, so it
+    /// can neither replay nor clobber another solver's momentum.
+    solver_state: SolverState,
     pub(crate) metrics: ServiceMetrics,
     /// Panic reason once a request poisoned the session.
     dead: Option<String>,
@@ -154,6 +159,7 @@ impl SessionState {
             screener,
             lam_state,
             beta_state: vec![0.0; p],
+            solver_state: SolverState::None,
             metrics: ServiceMetrics::new(),
             dead: None,
         })
@@ -170,6 +176,17 @@ impl SessionState {
             return;
         }
         self.metrics.record_batch(batch.len());
+        // the cached O(nnz) statistics must still describe the live backend
+        // (shape + data_version stamp): serving sweeps of data that no
+        // longer exists would be silently wrong, so a stale session dies
+        // with a typed reason instead
+        if self.dead.is_none() && !self.stats.is_valid(&*self.x) {
+            self.dead = Some(
+                "stale context statistics: backend data_version changed after \
+                 ContextStats::compute"
+                    .to_string(),
+            );
+        }
         // total_cmp never panics; NaN λ is rejected at the API boundary and
         // cannot reach this sort (the old loop's partial_cmp().unwrap() bug)
         batch.sort_by(|a, b| b.request.sort_lam().total_cmp(&a.request.sort_lam()));
@@ -187,6 +204,7 @@ impl SessionState {
             screener,
             lam_state,
             beta_state,
+            solver_state,
             metrics,
             dead,
         } = self;
@@ -202,6 +220,7 @@ impl SessionState {
             screener,
             lam_state,
             beta_state,
+            solver_state,
             metrics,
         };
         for PendingRequest { request, reply, t0 } in batch {
@@ -242,6 +261,7 @@ struct SessionCore<'s> {
     screener: &'s mut Box<dyn Screener>,
     lam_state: &'s mut f64,
     beta_state: &'s mut Vec<f64>,
+    solver_state: &'s mut SolverState,
     metrics: &'s mut ServiceMetrics,
 }
 
@@ -321,6 +341,7 @@ impl SessionCore<'_> {
             screener,
             lam_state,
             beta_state,
+            solver_state,
             metrics,
             ..
         } = self;
@@ -331,6 +352,7 @@ impl SessionCore<'_> {
         let screener: &mut Box<dyn Screener> = screener;
         let lam_state: &mut f64 = lam_state;
         let beta_state: &mut Vec<f64> = beta_state;
+        let solver_state: &mut SolverState = solver_state;
         let metrics: &mut ServiceMetrics = metrics;
         let x = ctx.x;
         let y = ctx.y;
@@ -365,7 +387,15 @@ impl SessionCore<'_> {
         let stage_discards = scr.screen_step(ctx, lam, &mut keep);
         let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
         let is_safe = scr.is_safe();
-        let lasso = solver.make();
+        // per-request solver override; the session's recorded resume state
+        // is threaded only when the request runs the session's own solver —
+        // an override gets a throwaway state, so switching solvers
+        // mid-session never replays (or clobbers) another solver's momentum
+        let req_solver = opts.solver.unwrap_or(solver);
+        let mut override_state = SolverState::None;
+        let resume_state: &mut SolverState =
+            if req_solver == solver { solver_state } else { &mut override_state };
+        let lasso = req_solver.make();
         let mut hook = if scr.dynamic() { Some(GapSafeHook::new(ctx)) } else { None };
         let mut dynamic_discards = 0usize;
         // heuristic pipeline: hook drops certified against a possibly-
@@ -384,18 +414,16 @@ impl SessionCore<'_> {
                 solve_opts.time_budget = Some(d.saturating_sub(t0.elapsed()));
             }
             let warm: Vec<f64> = cols.iter().map(|&j| beta_state[j]).collect();
-            let r = match hook.as_mut() {
-                Some(h) => lasso.solve_with_hook(
-                    x,
-                    y,
-                    &cols,
-                    lam,
-                    Some(&warm),
-                    &solve_opts,
-                    Some(h),
-                ),
-                None => lasso.solve(x, y, &cols, lam, Some(&warm), &solve_opts),
-            };
+            let r = lasso.solve_warm(
+                x,
+                y,
+                &cols,
+                lam,
+                Some(&warm),
+                &solve_opts,
+                hook.as_mut().map(|h| h as &mut dyn SolverHook),
+                resume_state,
+            );
             if let Some(h) = hook.as_mut() {
                 let revalidate = if is_safe { None } else { Some(&mut hook_dropped) };
                 dynamic_discards += h.fold_into(&mut keep, revalidate);
@@ -553,6 +581,13 @@ pub struct SessionRegistry {
     // audit:allow(determinism:hash-iter, lookup-only; iteration uses the registration-order Vec)
     sessions: HashMap<String, Arc<Mutex<SessionState>>>,
     order: Vec<String>,
+    /// Why an evicted session is gone. A request naming an evicted session
+    /// gets [`RequestError::SessionClosed`] with the eviction reason instead
+    /// of a bare `UnknownSession` — the client learns its session was
+    /// reclaimed, not that it never existed. Cleared if the name is
+    /// re-registered.
+    // audit:allow(determinism:hash-iter, lookup-only; never iterated)
+    tombstones: HashMap<String, String>,
 }
 
 impl SessionRegistry {
@@ -575,9 +610,24 @@ impl SessionRegistry {
                     panic_message(payload)
                 ))
             })??;
+        self.tombstones.remove(&name);
         self.order.push(name.clone());
         self.sessions.insert(name, Arc::new(Mutex::new(state)));
         Ok(())
+    }
+
+    /// Close a session because the admission policy reclaimed it (TTL
+    /// expiry), leaving a tombstone so late requests get the reason.
+    pub fn evict(&mut self, name: &str, reason: impl Into<String>) -> Option<ServiceMetrics> {
+        let metrics = self.close(name)?;
+        self.tombstones.insert(name.to_string(), reason.into());
+        Some(metrics)
+    }
+
+    /// The reason a session was evicted, if it was (explicitly closed or
+    /// never-registered names return `None`).
+    pub fn eviction_reason(&self, name: &str) -> Option<&str> {
+        self.tombstones.get(name).map(String::as_str)
     }
 
     pub(crate) fn get(&self, name: &str) -> Option<Arc<Mutex<SessionState>>> {
@@ -659,6 +709,151 @@ mod tests {
         assert_eq!(drained.len(), 1);
         assert_eq!(drained[0].0, "b");
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn eviction_leaves_a_tombstone_until_reregistration() {
+        let mut reg = SessionRegistry::new();
+        reg.register(spec("a", 1)).unwrap();
+        reg.register(spec("b", 2)).unwrap();
+        assert!(reg.evict("a", "evicted: idle past session-ttl (100ms)").is_some());
+        assert!(reg.get("a").is_none());
+        assert_eq!(reg.eviction_reason("a"), Some("evicted: idle past session-ttl (100ms)"));
+        // explicit close is not an eviction
+        reg.close("b");
+        assert_eq!(reg.eviction_reason("b"), None);
+        // evicting an unknown name is a no-op
+        assert!(reg.evict("ghost", "x").is_none());
+        assert_eq!(reg.eviction_reason("ghost"), None);
+        // re-registering the name clears the tombstone
+        reg.register(spec("a", 3)).unwrap();
+        assert_eq!(reg.eviction_reason("a"), None);
+    }
+
+    /// Immutable-backend wrapper whose `data_version` is test-controlled —
+    /// stands in for a future mutable backend (streaming appends, refreshed
+    /// shards) to exercise the ContextStats staleness guard.
+    struct VersionedMatrix {
+        inner: crate::linalg::DenseMatrix,
+        version: Arc<std::sync::atomic::AtomicU64>,
+    }
+
+    impl DesignMatrix for VersionedMatrix {
+        fn n_rows(&self) -> usize {
+            self.inner.n_rows()
+        }
+        fn n_cols(&self) -> usize {
+            self.inner.n_cols()
+        }
+        fn xt_w(&self, w: &[f64], out: &mut [f64]) {
+            self.inner.xt_w(w, out)
+        }
+        fn col_dot_w(&self, j: usize, w: &[f64]) -> f64 {
+            self.inner.col_dot_w(j, w)
+        }
+        fn col_axpy_into(&self, j: usize, a: f64, out: &mut [f64]) {
+            self.inner.col_axpy_into(j, a, out)
+        }
+        fn col_sq_norm(&self, j: usize) -> f64 {
+            self.inner.col_sq_norm(j)
+        }
+        fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+            self.inner.col_dot_col(i, j)
+        }
+        fn col_into(&self, j: usize, out: &mut [f64]) {
+            self.inner.col_into(j, out)
+        }
+        fn col_gather(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+            self.inner.col_gather(j, rows, out)
+        }
+        fn nnz(&self) -> usize {
+            self.inner.nnz()
+        }
+        fn data_version(&self) -> u64 {
+            self.version.load(std::sync::atomic::Ordering::SeqCst)
+        }
+    }
+
+    fn one_shot(state: &Arc<Mutex<SessionState>>, request: Request) -> Response {
+        let (tx, rx) = std::sync::mpsc::channel();
+        state.lock().unwrap().process_batch(vec![PendingRequest {
+            request,
+            reply: tx,
+            t0: Instant::now(),
+        }]);
+        rx.recv().unwrap()
+    }
+
+    #[test]
+    fn stale_backend_stats_close_the_session_with_a_typed_reason() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let ds = synthetic::synthetic1(25, 60, 5, 0.1, 11);
+        let version = Arc::new(AtomicU64::new(0));
+        let x = VersionedMatrix { inner: ds.x.into_dense(), version: Arc::clone(&version) };
+        let mut reg = SessionRegistry::new();
+        reg.register(SessionSpec::new(
+            "v",
+            x,
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+        let state = reg.get("v").unwrap();
+
+        // unchanged backend: served normally
+        assert!(matches!(one_shot(&state, Request::SessionStats), Response::Stats(_)));
+
+        // backend mutates under the session: the cached O(nnz) statistics
+        // are stale — the session dies with the typed reason instead of
+        // silently serving sweeps of data that no longer exists
+        version.fetch_add(1, Ordering::SeqCst);
+        match one_shot(&state, Request::SessionStats) {
+            Response::Error(RequestError::SessionClosed { session, reason }) => {
+                assert_eq!(session, "v");
+                assert!(reason.contains("stale context statistics"), "{reason}");
+            }
+            other => panic!("expected SessionClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fista_session_records_momentum_state_and_overrides_use_a_throwaway() {
+        let ds = synthetic::synthetic1(30, 80, 6, 0.1, 21);
+        let mut reg = SessionRegistry::new();
+        reg.register(SessionSpec::new(
+            "f",
+            ds.x.clone(),
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Fista,
+            PathConfig::default(),
+        ))
+        .unwrap();
+        let state = reg.get("f").unwrap();
+        let lam = state.lock().unwrap().stats.lam_max * 0.5;
+
+        match one_shot(&state, Request::Screen { lam, opts: RequestOptions::default() }) {
+            Response::Screen(r) => assert!(r.gap.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+        match &state.lock().unwrap().solver_state {
+            SolverState::Fista(fs) => assert_eq!(fs.lam, lam),
+            other => panic!("expected recorded FISTA state, got {other:?}"),
+        }
+
+        // a per-request CD override runs with a throwaway state: the
+        // session's recorded FISTA momentum survives untouched
+        let opts = RequestOptions { solver: Some(SolverKind::Cd), ..Default::default() };
+        match one_shot(&state, Request::Screen { lam: lam * 0.9, opts }) {
+            Response::Screen(r) => assert!(r.gap.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+        match &state.lock().unwrap().solver_state {
+            SolverState::Fista(fs) => assert_eq!(fs.lam, lam),
+            other => panic!("expected FISTA state to survive the override, got {other:?}"),
+        }
     }
 
     #[test]

@@ -3,14 +3,20 @@
 //!
 //! [`Coordinator`] is the serving front door: a router thread accepts typed
 //! [`Request`]s addressed to named sessions (see
-//! [`super::registry::SessionRegistry`]), groups concurrently-arriving
-//! requests into per-session batches, and executes the batches concurrently
-//! on the shared [`crate::runtime::pool`] worker pool — one job per session
-//! per tick, so each session's sequential state stays single-owner and its
-//! responses stay bit-identical to a dedicated single-session worker.
-//! Within a batch, λ-carrying requests run in descending-λ order so every
-//! request benefits from the tightest available θ*(λ₀) — the same trick
-//! that makes sequential rules dominate basic ones (§4.1.1).
+//! [`super::registry::SessionRegistry`]) and enqueues each one on the
+//! session's dispatch queue in the serving scheduler
+//! ([`crate::runtime::scheduler`]). Each session drains through its own
+//! detached dispatcher job on the shared [`crate::runtime::pool`] worker
+//! pool — at most one live dispatcher per session, so the sequential state
+//! stays single-owner and responses stay bit-identical to a dedicated
+//! single-session worker — while distinct sessions never wait on each
+//! other (the old tick barrier is gone). Batches form from backlog: within
+//! one, λ-carrying requests run in descending-λ order so every request
+//! benefits from the tightest available θ*(λ₀) — the same trick that makes
+//! sequential rules dominate basic ones (§4.1.1). An
+//! [`super::admission::AdmissionController`] in front of the queues sheds
+//! load with typed [`RequestError::Overloaded`] replies instead of queueing
+//! unboundedly, and retires sessions idle past a TTL.
 //!
 //! [`ScreeningService`] is the legacy single-session surface, now a thin
 //! facade over one coordinator session: `spawn`/`screen`/`shutdown` keep
@@ -22,19 +28,21 @@
 //! Threading: std::thread + mpsc for routing, the [`crate::runtime::pool`]
 //! for execution (the offline image has no tokio — DESIGN.md §6).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::metrics::ServiceMetrics;
+use super::admission::{AdmissionConfig, AdmissionController};
+use super::metrics::{AdmissionStats, ServiceMetrics};
 use super::protocol::{
     PendingRequest, Request, RequestError, RequestOptions, Response, ScreenResponse,
 };
-use super::registry::{SessionRegistry, SessionSpec};
+use super::registry::{SessionRegistry, SessionSpec, SessionState};
 use crate::linalg::DesignMatrix;
 use crate::path::{PathConfig, SolverKind};
-use crate::runtime::pool::{self, WorkerPool};
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::scheduler::{PoolHandle, Scheduler};
 use crate::screening::ScreenPipeline;
 
 enum CoordMsg {
@@ -42,6 +50,7 @@ enum CoordMsg {
     Register { spec: SessionSpec, reply: Sender<Result<(), RequestError>> },
     Close { session: String, reply: Sender<Option<ServiceMetrics>> },
     Sessions { reply: Sender<Vec<String>> },
+    AdmissionStats { reply: Sender<AdmissionStats> },
     Shutdown { reply: Sender<Vec<(String, ServiceMetrics)>> },
 }
 
@@ -87,12 +96,20 @@ impl Coordinator {
     }
 
     /// Coordinator with an explicit pool (benches and tests sweep thread
-    /// counts without touching the global pool).
+    /// counts without touching the global pool) and a fully open admission
+    /// policy.
     pub fn with_pool(pool: Option<Arc<WorkerPool>>) -> Coordinator {
+        Self::with_config(pool, AdmissionConfig::default())
+    }
+
+    /// Coordinator with an explicit pool and admission policy (the CLI's
+    /// `--admission`/`--max-sessions` knobs build one; the default config
+    /// admits everything and never evicts).
+    pub fn with_config(pool: Option<Arc<WorkerPool>>, admission: AdmissionConfig) -> Coordinator {
         let (tx, rx) = channel::<CoordMsg>();
         let router = std::thread::Builder::new()
             .name("dpp-coordinator".to_string())
-            .spawn(move || router_loop(rx, pool))
+            .spawn(move || router_loop(rx, pool, admission))
             // audit:allow(panic, startup-fatal: no coordinator thread means no service)
             .expect("spawning coordinator router");
         Coordinator { tx, router: Some(router) }
@@ -143,6 +160,16 @@ impl Coordinator {
         rrx.recv().unwrap_or_default()
     }
 
+    /// Admission counters since startup: requests submitted, requests and
+    /// registrations shed, sessions evicted.
+    pub fn admission_stats(&self) -> AdmissionStats {
+        let (rtx, rrx) = channel();
+        if self.tx.send(CoordMsg::AdmissionStats { reply: rtx }).is_err() {
+            return AdmissionStats::default();
+        }
+        rrx.recv().unwrap_or_default()
+    }
+
     /// Close one session, returning its metrics (None if unknown).
     pub fn close_session(&self, session: &str) -> Option<ServiceMetrics> {
         let (rtx, rrx) = channel();
@@ -185,95 +212,145 @@ fn disconnected() -> RequestError {
     RequestError::Disconnected("coordinator router is gone".to_string())
 }
 
-/// The router: drain whatever arrived into per-session batches, run one
-/// pool job per session (per-session affinity — single owner of the
-/// session's sequential state), repeat. Register/close/shutdown interleave
-/// with submits in arrival order, so a submit that follows a successful
-/// register (same client thread) always finds its session.
+/// One scheduled unit of work: the session's state travels with the
+/// request, so the executor needs no registry access — and a session closed
+/// *after* a request was admitted still answers it (the `Arc` keeps the
+/// state alive until the queue drains).
+type Unit = (Arc<Mutex<SessionState>>, PendingRequest);
+
+/// The router: admit each message as it arrives and enqueue admitted
+/// requests on the session's dispatch queue — per-session FIFO order, one
+/// live dispatcher per session ([`Scheduler`]), so the session's sequential
+/// state stays single-owner and distinct sessions never wait on each other.
+/// Register/close/shutdown interleave with submits in arrival order, so a
+/// submit that follows a successful register (same client thread) always
+/// finds its session.
 ///
-/// The tick is a barrier: messages arriving mid-tick wait for the slowest
-/// session's batch before dispatch, and that queue wait counts against
-/// their deadline (DESIGN.md §4 records the tradeoff; per-session dispatch
-/// queues are the ROADMAP follow-on). Every solve is budget-bounded, so a
-/// tick's length is bounded by its slowest deadline-free request.
+/// Batches form from backlog: whatever queues up behind a busy dispatcher
+/// becomes its next batch, and a session's responses are invariant to how
+/// its request stream is split into batches (λ-descending processing within
+/// each batch — the bit-identity contract). The admission controller gates
+/// every enqueue on the scheduler's queue depths, shedding with typed
+/// [`RequestError::Overloaded`] instead of queueing unboundedly, and the
+/// TTL sweep evicts sessions that have been idle past the configured TTL
+/// (only when their queue is quiescent — in-flight work is activity).
 ///
-/// Nested parallelism: when ≥2 session batches share a tick, each job runs
-/// on a pool worker, so a sharded backend's own `pool.run` sweeps execute
-/// inline (the pool's nested-dispatch guard) — results stay bit-identical
-/// (the pool's determinism contract), but a sharded session's sweeps are
-/// sequential until the tick has a worker to spare. A single-session tick
-/// runs inline on the router, keeping full shard parallelism.
-fn router_loop(rx: Receiver<CoordMsg>, pool: Option<Arc<WorkerPool>>) {
-    let pool_ref: &WorkerPool = match &pool {
-        Some(p) => p.as_ref(),
-        None => pool::global(),
+/// Nested parallelism: every batch runs on a pool worker, and a sharded
+/// backend's own `pool.run` sweeps *help* from inside the worker
+/// (work-stealing join) — idle workers execute the shard jobs instead of
+/// the whole sweep running inline, with results bit-identical by the pool's
+/// determinism contract.
+fn router_loop(rx: Receiver<CoordMsg>, pool: Option<Arc<WorkerPool>>, admission: AdmissionConfig) {
+    let handle = match pool {
+        Some(p) => PoolHandle::Owned(p),
+        None => PoolHandle::Global,
     };
     let mut registry = SessionRegistry::new();
+    let mut admission = AdmissionController::new(admission);
+    // Wake up at a fraction of the TTL even when no messages arrive, so
+    // idle sessions are actually evicted on time.
+    let ttl_tick = admission
+        .config()
+        .session_ttl
+        .map(|ttl| ttl.clamp(Duration::from_millis(5), Duration::from_millis(100)));
+    let sched: Scheduler<Unit> = Scheduler::new(handle, |_key, batch: Vec<Unit>| {
+        // every unit of one key carries the same session Arc (a Close
+        // removes the key's queue before the name can be re-registered)
+        let Some((state, _)) = batch.first() else { return };
+        let state = Arc::clone(state);
+        let batch: Vec<PendingRequest> = batch.into_iter().map(|(_, p)| p).collect();
+        // process_batch catches per-request panics, so a poisoned session
+        // cannot take its dispatcher (or the pool) down with it
+        state.lock().unwrap_or_else(|e| e.into_inner()).process_batch(batch);
+    });
     loop {
-        // block for one message, then drain whatever else arrived → a tick
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => return,
+        let msg = match ttl_tick {
+            Some(tick) => match rx.recv_timeout(tick) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
+            },
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            },
         };
-        let mut msgs = vec![first];
-        while let Ok(m) = rx.try_recv() {
-            msgs.push(m);
-        }
-        let mut shutdown: Option<Sender<Vec<(String, ServiceMetrics)>>> = None;
-        // per-session batches for this tick, in first-seen order
-        let mut batches: Vec<(String, Vec<PendingRequest>)> = Vec::new();
-        for msg in msgs {
-            match msg {
-                CoordMsg::Register { spec, reply } => {
-                    let _ = reply.send(registry.register(spec));
+        match msg {
+            None => {}
+            Some(CoordMsg::Register { spec, reply }) => {
+                let name = spec.name.clone();
+                let res = admission
+                    .admit_register(registry.len())
+                    .and_then(|()| registry.register(spec));
+                if res.is_ok() {
+                    admission.touch(&name);
                 }
-                CoordMsg::Close { session, reply } => {
-                    let _ = reply.send(registry.close(&session));
-                }
-                CoordMsg::Sessions { reply } => {
-                    let _ = reply.send(registry.names().to_vec());
-                }
-                CoordMsg::Shutdown { reply } => shutdown = Some(reply),
-                CoordMsg::Submit { session, pending } => {
-                    if registry.get(&session).is_none() {
-                        let _ = pending.reply.send(Response::Error(
-                            RequestError::UnknownSession(session),
-                        ));
-                        continue;
-                    }
-                    match batches.iter_mut().find(|(name, _)| *name == session) {
-                        Some((_, batch)) => batch.push(pending),
-                        None => batches.push((session, vec![pending])),
-                    }
-                }
+                let _ = reply.send(res);
             }
-        }
-        if !batches.is_empty() {
-            // one job per session: the pool provides the concurrency, the
-            // per-session batch keeps the state single-owner. Jobs only
-            // move Arcs and owned batches, and process_batch catches
-            // per-request panics, so a poisoned session cannot take the
-            // router (or the pool) down with it.
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
-            for (name, batch) in batches {
-                let Some(state) = registry.get(&name) else {
-                    // a Close later in the same tick removed the session
-                    for pending in batch {
-                        let _ = pending.reply.send(Response::Error(
-                            RequestError::UnknownSession(name.clone()),
-                        ));
-                    }
-                    continue;
-                };
-                jobs.push(Box::new(move || {
-                    state.lock().unwrap_or_else(|e| e.into_inner()).process_batch(batch);
-                }));
+            Some(CoordMsg::Close { session, reply }) => {
+                // drain the queue first (waits out an in-flight batch):
+                // every undelivered request gets a typed reply, then the
+                // registry drops the session
+                for (_, pending) in sched.remove(&session) {
+                    let _ = pending.reply.send(Response::Error(
+                        RequestError::SessionClosed {
+                            session: session.clone(),
+                            reason: "session closed with the request still queued"
+                                .to_string(),
+                        },
+                    ));
+                }
+                admission.forget(&session);
+                let _ = reply.send(registry.close(&session));
             }
-            pool_ref.run(jobs);
+            Some(CoordMsg::Sessions { reply }) => {
+                let _ = reply.send(registry.names().to_vec());
+            }
+            Some(CoordMsg::AdmissionStats { reply }) => {
+                let _ = reply.send(admission.stats());
+            }
+            Some(CoordMsg::Shutdown { reply }) => {
+                // every admitted request is answered before teardown
+                sched.quiesce();
+                let _ = reply.send(registry.drain_metrics());
+                return;
+            }
+            Some(CoordMsg::Submit { session, pending }) => match registry.get(&session) {
+                None => {
+                    let err = match registry.eviction_reason(&session) {
+                        Some(reason) => RequestError::SessionClosed {
+                            session: session.clone(),
+                            reason: reason.to_string(),
+                        },
+                        None => RequestError::UnknownSession(session),
+                    };
+                    let _ = pending.reply.send(Response::Error(err));
+                }
+                Some(state) => {
+                    match admission.admit(sched.depth(&session), sched.total_pending()) {
+                        Err(e) => {
+                            let _ = pending.reply.send(Response::Error(e));
+                        }
+                        Ok(()) => {
+                            admission.touch(&session);
+                            sched.enqueue(&session, (state, pending));
+                        }
+                    }
+                }
+            },
         }
-        if let Some(reply) = shutdown {
-            let _ = reply.send(registry.drain_metrics());
-            return;
+        // TTL sweep: evict sessions idle past the TTL. Only quiescent
+        // queues are evicted — queued or in-flight work counts as activity
+        // the TTL book just hasn't seen yet.
+        for name in admission.expired() {
+            if !sched.is_idle(&name) {
+                admission.touch(&name);
+                continue;
+            }
+            if registry.evict(&name, admission.eviction_reason()).is_some() {
+                admission.record_eviction();
+            }
+            admission.forget(&name);
         }
     }
 }
@@ -521,6 +598,81 @@ mod tests {
             .unwrap_err();
         assert_eq!(err, RequestError::UnknownSession("nope".to_string()));
         svc.shutdown();
+    }
+
+    fn session_spec(name: &str, seed: u64) -> SessionSpec {
+        let ds = synthetic::synthetic1(25, 60, 5, 0.1, seed);
+        SessionSpec::new(
+            name,
+            ds.x.clone(),
+            ds.y.clone(),
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        )
+    }
+
+    #[test]
+    fn admission_depth_cap_sheds_with_typed_overloaded() {
+        // depth cap 0: every request sheds — deterministic, no racing the
+        // solver
+        let cfg = AdmissionConfig { max_session_pending: Some(0), ..Default::default() };
+        let coord = Coordinator::with_config(None, cfg);
+        coord.register(session_spec("s", 31)).unwrap();
+        let err = coord
+            .submit("s", Request::Screen { lam: 1.0, opts: Default::default() })
+            .recv()
+            .unwrap_err();
+        match err {
+            RequestError::Overloaded { retry_after_ms } => assert!(retry_after_ms >= 25),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let stats = coord.admission_stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.shed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn max_sessions_cap_sheds_registrations() {
+        let cfg = AdmissionConfig { max_sessions: Some(1), ..Default::default() };
+        let coord = Coordinator::with_config(None, cfg);
+        coord.register(session_spec("a", 41)).unwrap();
+        match coord.register(session_spec("b", 42)) {
+            Err(RequestError::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(coord.sessions(), vec!["a".to_string()]);
+        assert_eq!(coord.admission_stats().shed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn ttl_eviction_is_a_typed_session_closed() {
+        let cfg = AdmissionConfig {
+            session_ttl: Some(std::time::Duration::from_millis(0)),
+            ..Default::default()
+        };
+        let coord = Coordinator::with_config(None, cfg);
+        coord.register(session_spec("s", 33)).unwrap();
+        // zero TTL: the next router sweep evicts the idle session
+        let t0 = std::time::Instant::now();
+        while !coord.sessions().is_empty() {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "session was never evicted"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        match coord.submit("s", Request::SessionStats).recv_response().unwrap() {
+            Response::Error(RequestError::SessionClosed { session, reason }) => {
+                assert_eq!(session, "s");
+                assert!(reason.contains("evicted"), "{reason}");
+            }
+            other => panic!("expected SessionClosed, got {other:?}"),
+        }
+        assert_eq!(coord.admission_stats().evicted, 1);
+        coord.shutdown();
     }
 
     #[test]

@@ -62,6 +62,17 @@ pub trait DesignMatrix {
         self.nnz() as f64 / (self.n_rows() * self.n_cols()).max(1) as f64
     }
 
+    /// Monotone version stamp of the matrix *values*. Every shipped backend
+    /// is immutable after construction and returns the default `0`; a
+    /// future mutable backend (streaming appends, refreshed shards) must
+    /// bump this on every change so long-lived caches of derived statistics
+    /// ([`crate::screening::ContextStats`] in the serving sessions) can
+    /// detect staleness instead of silently serving sweeps of data that no
+    /// longer exists.
+    fn data_version(&self) -> u64 {
+        0
+    }
+
     /// ℓ2 norm of every column.
     fn col_norms(&self) -> Vec<f64> {
         (0..self.n_cols()).map(|j| self.col_sq_norm(j).sqrt()).collect()

@@ -286,6 +286,10 @@ impl DesignMatrix for DesignStore {
         self.as_design().nnz()
     }
 
+    fn data_version(&self) -> u64 {
+        self.as_design().data_version()
+    }
+
     fn density(&self) -> f64 {
         self.as_design().density()
     }

@@ -7,6 +7,9 @@
 //!   service   --requests …       demo the batching screening service
 //!   serve     --sessions K --ops M   multi-tenant serving demo (DESIGN.md §4)
 //!   serve     --listen ADDR [--shard-nodes A1,A2]  framed TCP server (DESIGN.md §4b)
+//!   serve/bench-serve --max-sessions K --admission depth=D,total=T,ttl-ms=MS
+//!             admission control: registration cap, queue-depth load shedding
+//!             (typed `Overloaded` replies with a retry hint), idle-session TTL
 //!   client    --connect ADDR [--ops K] [--deadline-ms D] [--shutdown]  socket client
 //!   shard-node --listen ADDR --file shard.dppcsc [--in-ram]  host one remote shard
 //!   shard-node --connect ADDR --stop   stop a running shard node
@@ -83,6 +86,7 @@ fn main() {
                  dpp group --ngroups 100 --rule group-edpp\n\
                  dpp service --requests 20 --rule dynamic:edpp --matrix auto\n\
                  dpp serve --sessions 3 --ops 24 --deadline-ms 50  # multi-tenant demo\n\
+                 dpp serve --sessions 3 --max-sessions 8 --admission depth=8,ttl-ms=30000\n\
                  dpp serve --listen 127.0.0.1:7700          # framed TCP server\n\
                  dpp client --connect 127.0.0.1:7700 --ops 12 --deadline-ms 50\n\
                  dpp client --connect 127.0.0.1:7700 --shutdown\n\
@@ -581,6 +585,30 @@ fn serve_register_sessions(
     out
 }
 
+/// Parse the admission knobs shared by `dpp serve` and `dpp bench-serve`:
+/// `--admission depth=D,total=T,ttl-ms=MS` (queue-depth caps + idle TTL,
+/// see `coordinator::admission`) plus the standalone `--max-sessions K`
+/// registration cap. Defaults to fully open — the pre-admission behavior.
+fn admission_from_args(args: &Args) -> dpp_screen::coordinator::AdmissionConfig {
+    use dpp_screen::coordinator::AdmissionConfig;
+    let mut cfg = match args.get("admission").map(AdmissionConfig::parse) {
+        Some(Ok(cfg)) => cfg,
+        Some(Err(e)) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        None => AdmissionConfig::default(),
+    };
+    if let Some(cap) = args.get("max-sessions") {
+        let Ok(k) = cap.parse::<usize>() else {
+            eprintln!("bad --max-sessions `{cap}`: expected an integer");
+            std::process::exit(2);
+        };
+        cfg.max_sessions = Some(k);
+    }
+    cfg
+}
+
 /// Multi-tenant serving demo: K concurrent sessions on one coordinator,
 /// driven by a mixed Screen/Predict/Warm/FitPath workload, with an optional
 /// deadline-bounded request demonstrating gap-tagged partial responses.
@@ -593,7 +621,9 @@ fn cmd_serve(args: &Args) {
     let n_sessions = args.get_parse("sessions", 3usize).max(1);
     let ops = args.get_parse("ops", 24usize).max(1);
     let deadline_ms = args.get_parse("deadline-ms", 0u64);
-    let coord = dpp_screen::coordinator::Coordinator::new();
+    let admission = admission_from_args(args);
+    let coord =
+        dpp_screen::coordinator::Coordinator::with_config(None, admission.clone());
     let sessions = serve_register_sessions(&coord, args, n_sessions, ops);
     println!(
         "serving {n_sessions} session(s) on {} pool thread(s), {ops} mixed ops",
@@ -692,6 +722,13 @@ fn cmd_serve(args: &Args) {
          (partials={partials}, errors={errors})",
         ops as f64 / wall
     );
+    if admission.is_active() {
+        let a = coord.admission_stats();
+        println!(
+            "admission: submitted={} shed={} evicted={}",
+            a.submitted, a.shed, a.evicted
+        );
+    }
     coord.shutdown();
 }
 
@@ -706,7 +743,10 @@ fn cmd_serve_listen(args: &Args) {
     let listen = args.get("listen").expect("--listen checked by caller");
     let n_sessions = args.get_parse("sessions", 3usize).max(1);
     let ops = args.get_parse("ops", 24usize).max(1);
-    let coord = dpp_screen::coordinator::Coordinator::new();
+    let coord = dpp_screen::coordinator::Coordinator::with_config(
+        None,
+        admission_from_args(args),
+    );
     serve_register_sessions(&coord, args, n_sessions, ops);
     if let Some(nodes) = args.get("shard-nodes") {
         let addrs: Vec<String> = nodes
@@ -978,7 +1018,9 @@ fn cmd_client(args: &Args) {
 /// diff serving changes against a pinned baseline (companion of
 /// `BENCH_screen.json`).
 fn cmd_bench_serve(args: &Args) {
-    use dpp_screen::coordinator::{Coordinator, Request, RequestOptions, SessionSpec};
+    use dpp_screen::coordinator::{
+        Coordinator, Request, RequestError, RequestOptions, SessionSpec,
+    };
 
     let n = args.get_parse("n", 100usize);
     let p = args.get_parse("p", 800usize);
@@ -986,6 +1028,7 @@ fn cmd_bench_serve(args: &Args) {
     let ops = args.get_parse("ops", 40usize).max(1);
     let out_path = args.get_or("out", "BENCH_serve.json");
     let max_sessions = args.get_parse("sessions", 3usize).max(1);
+    let admission = admission_from_args(args);
 
     // one sparse synthetic regression problem per session slot (the shared
     // bench fixture), reused across cells so rows are comparable
@@ -1006,7 +1049,7 @@ fn cmd_bench_serve(args: &Args) {
     for &sc in &session_counts {
         for pipe_name in &pipelines {
             let pipe = ScreenPipeline::parse(pipe_name).expect("bench pipeline");
-            let coord = Coordinator::new();
+            let coord = Coordinator::with_config(None, admission.clone());
             for (i, (csc, y, _)) in datasets.iter().take(sc).enumerate() {
                 coord
                     .register(
@@ -1036,8 +1079,16 @@ fn cmd_bench_serve(args: &Args) {
             }
             let mut latencies: Vec<f64> = Vec::with_capacity(ops);
             for slot in slots {
-                let resp = slot.recv().expect("bench response");
-                latencies.push(resp.latency_s);
+                match slot.recv() {
+                    Ok(resp) => latencies.push(resp.latency_s),
+                    // shed ops don't produce a latency sample (only
+                    // possible when --admission caps are set)
+                    Err(RequestError::Overloaded { .. }) => {}
+                    Err(e) => {
+                        eprintln!("bench-serve op failed: {e}");
+                        std::process::exit(2);
+                    }
+                }
             }
             let wall = t0.elapsed().as_secs_f64();
             coord.shutdown();
@@ -1079,7 +1130,7 @@ fn cmd_bench_serve(args: &Args) {
         for &sc in &session_counts {
             for pipe_name in &pipelines {
                 let pipe = ScreenPipeline::parse(pipe_name).expect("bench pipeline");
-                let coord = Coordinator::new();
+                let coord = Coordinator::with_config(None, admission.clone());
                 for (i, (csc, y, _)) in datasets.iter().take(sc).enumerate() {
                     coord
                         .register(
@@ -1130,6 +1181,10 @@ fn cmd_bench_serve(args: &Args) {
                     latencies.push(t.elapsed().as_secs_f64());
                     match resp {
                         Ok(dpp_screen::coordinator::Response::Screen(_)) => {}
+                        Ok(dpp_screen::coordinator::Response::Error(
+                            RequestError::Overloaded { .. },
+                        ))
+                        | Err(RequestError::Overloaded { .. }) => {}
                         other => {
                             eprintln!("bench-serve socket op {k}: {other:?}");
                             std::process::exit(2);
@@ -1167,6 +1222,111 @@ fn cmd_bench_serve(args: &Args) {
             }
         }
     }
+    // Heavy-tenant scenario: one sharded session with ~10× the work of each
+    // light session, all driven concurrently. Per-session dispatch queues
+    // keep the heavy tenant's batches from head-of-line-blocking the light
+    // tenants (its nested fork/join borrows idle pool workers instead), so
+    // the light-class p99 row is the one to watch across baselines.
+    {
+        let light = datasets.len().min(3);
+        let (heavy_csc, heavy_y, _) = bench_problem(n, 10 * p, density, 7900);
+        let heavy_lam = dpp_screen::solver::dual::lambda_max(&heavy_csc, &heavy_y);
+        let coord = Coordinator::with_config(None, admission.clone());
+        coord
+            .register(
+                SessionSpec::new(
+                    "heavy",
+                    ShardSetMatrix::split_csc(&heavy_csc, 4),
+                    heavy_y,
+                    ScreenPipeline::parse("edpp").expect("bench pipeline"),
+                    SolverKind::Cd,
+                    PathConfig::default(),
+                )
+                .with_backend_label("sharded"),
+            )
+            .expect("bench session");
+        for (i, (csc, y, _)) in datasets.iter().take(light).enumerate() {
+            coord
+                .register(
+                    SessionSpec::new(
+                        format!("s{i}"),
+                        csc.clone(),
+                        y.clone(),
+                        ScreenPipeline::parse("edpp").expect("bench pipeline"),
+                        SolverKind::Cd,
+                        PathConfig::default(),
+                    )
+                    .with_backend_label("csc"),
+                )
+                .expect("bench session");
+        }
+        let total_ops = 2 * ops;
+        // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+        let t0 = std::time::Instant::now();
+        let mut slots = Vec::with_capacity(total_ops);
+        for k in 0..total_ops {
+            let slot = k % (light + 1);
+            let (name, lam_max) = if slot == 0 {
+                ("heavy".to_string(), heavy_lam)
+            } else {
+                (format!("s{}", slot - 1), datasets[slot - 1].2)
+            };
+            let f = 0.05 + 0.9 * ((k * 7919) % total_ops) as f64 / total_ops as f64;
+            slots.push((
+                slot == 0,
+                coord.submit(
+                    &name,
+                    Request::Screen { lam: f * lam_max, opts: RequestOptions::default() },
+                ),
+            ));
+        }
+        let mut heavy_lat: Vec<f64> = Vec::new();
+        let mut light_lat: Vec<f64> = Vec::new();
+        let mut shed = 0usize;
+        for (is_heavy, slot) in slots {
+            match slot.recv() {
+                Ok(r) if is_heavy => heavy_lat.push(r.latency_s),
+                Ok(r) => light_lat.push(r.latency_s),
+                Err(RequestError::Overloaded { .. }) => shed += 1,
+                Err(e) => {
+                    eprintln!("bench-serve heavy-tenant op: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        for (class, lat) in [("heavy", &heavy_lat), ("light", &light_lat)] {
+            let (p50, p95, p99) = (
+                dpp_screen::util::stats::quantile(lat, 0.50),
+                dpp_screen::util::stats::quantile(lat, 0.95),
+                dpp_screen::util::stats::quantile(lat, 0.99),
+            );
+            cases.push(format!(
+                "    {{\"scenario\": \"heavy-tenant\", \"class\": \"{class}\", \
+                 \"sessions\": {}, \"pipeline\": \"edpp\", \
+                 \"transport\": \"inproc\", \"ops\": {}, \"shed\": {shed}, \
+                 \"wall_secs\": {wall:.6}, \
+                 \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+                light + 1,
+                lat.len(),
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            ));
+            rep.row(&[
+                format!("1+{light}"),
+                format!("heavy-tenant:{class}"),
+                "inproc".to_string(),
+                lat.len().to_string(),
+                format!("{:.1}", lat.len() as f64 / wall.max(1e-12)),
+                format!("{:.2}ms", p50 * 1e3),
+                format!("{:.2}ms", p95 * 1e3),
+                format!("{:.2}ms", p99 * 1e3),
+            ]);
+        }
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"n\": {n},\n  \"p\": {p},\n  \
          \"density\": {density},\n  \"ops\": {ops},\n  \

@@ -25,7 +25,11 @@ use crate::screening::{ScreenPipeline, StageCount};
 use crate::util::stats::OnlineStats;
 
 /// Version of the message grammar (negotiated via the hellos).
-pub const WIRE_VERSION: u32 = 1;
+///
+/// v2: `RequestOptions` gained the per-request solver override, and
+/// `RequestError` gained `Overloaded` (tag 6) for admission-control load
+/// shedding.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Message tag bytes — the committed grammar surface. `rust/wire.lock` is
 /// the golden copy; `dpp audit` re-parses this module and fails on tag
@@ -52,6 +56,7 @@ pub mod tag {
     pub const ERR_SESSION_CLOSED: u8 = 3;
     pub const ERR_INVALID_REQUEST: u8 = 4;
     pub const ERR_DISCONNECTED: u8 = 5;
+    pub const ERR_OVERLOADED: u8 = 6;
     // ClientMsg (`encode_client_msg`/`decode_client_msg`)
     pub const CLIENT_HELLO: u8 = 0;
     pub const CLIENT_SUBMIT: u8 = 1;
@@ -293,6 +298,14 @@ fn enc_options(e: &mut Enc, o: &RequestOptions) {
         }
         None => e.u8(0),
     }
+    // A solver override travels by name (`SolverKind::name` ↔ `from_name`).
+    match o.solver {
+        Some(k) => {
+            e.u8(1);
+            e.str(k.name());
+        }
+        None => e.u8(0),
+    }
 }
 
 fn dec_options(d: &mut Dec<'_>) -> Result<RequestOptions, WireError> {
@@ -313,7 +326,18 @@ fn dec_options(d: &mut Dec<'_>) -> Result<RequestOptions, WireError> {
         }
         t => return err(format!("bad pipeline tag {t}")),
     };
-    Ok(RequestOptions { deadline, tol_gap, pipeline })
+    let solver = match d.u8()? {
+        0 => None,
+        1 => {
+            let name = d.str()?;
+            Some(
+                SolverKind::from_name(&name)
+                    .ok_or_else(|| WireError(format!("unknown solver `{name}`")))?,
+            )
+        }
+        t => return err(format!("bad solver tag {t}")),
+    };
+    Ok(RequestOptions { deadline, tol_gap, pipeline, solver })
 }
 
 /// Encode a [`Request`] into `e`.
@@ -443,6 +467,10 @@ fn enc_error(e: &mut Enc, re: &RequestError) {
             e.u8(tag::ERR_DISCONNECTED);
             e.str(msg);
         }
+        RequestError::Overloaded { retry_after_ms } => {
+            e.u8(tag::ERR_OVERLOADED);
+            e.u64(*retry_after_ms);
+        }
     }
 }
 
@@ -456,6 +484,7 @@ fn dec_error(d: &mut Dec<'_>) -> Result<RequestError, WireError> {
         }
         tag::ERR_INVALID_REQUEST => RequestError::InvalidRequest(d.str()?),
         tag::ERR_DISCONNECTED => RequestError::Disconnected(d.str()?),
+        tag::ERR_OVERLOADED => RequestError::Overloaded { retry_after_ms: d.u64()? },
         t => return err(format!("bad RequestError tag {t}")),
     })
 }
@@ -704,7 +733,13 @@ mod tests {
         } else {
             None
         };
-        RequestOptions { deadline, tol_gap, pipeline }
+        let solvers = [SolverKind::Cd, SolverKind::Fista, SolverKind::Lars];
+        let solver = if rng.f64() < 0.5 {
+            Some(solvers[rng.usize(solvers.len())])
+        } else {
+            None
+        };
+        RequestOptions { deadline, tol_gap, pipeline, solver }
     }
 
     fn rand_request(rng: &mut Rng) -> Request {
@@ -747,7 +782,7 @@ mod tests {
     }
 
     fn rand_error(rng: &mut Rng) -> RequestError {
-        match rng.usize(6) {
+        match rng.usize(7) {
             0 => {
                 // exercise the non-finite λ payloads too
                 let lam = match rng.usize(3) {
@@ -764,6 +799,7 @@ mod tests {
                 reason: "worker panicked: boom".into(),
             },
             4 => RequestError::InvalidRequest("features.len() = 3 ≠ p = 5".into()),
+            5 => RequestError::Overloaded { retry_after_ms: rng.next_u64() >> 32 },
             _ => RequestError::Disconnected("router gone".into()),
         }
     }
@@ -855,6 +891,7 @@ mod tests {
             RequestError::SessionClosed { session: "s".into(), reason: "r".into() },
             RequestError::InvalidRequest("bad".into()),
             RequestError::Disconnected("gone".into()),
+            RequestError::Overloaded { retry_after_ms: 125 },
         ];
         for e in &errors {
             let got = roundtrip_response(&Response::Error(e.clone()));
@@ -959,5 +996,16 @@ mod tests {
         e.str("bogus:rule"); // …but unparseable
         let errmsg = dec_request(&mut Dec::new(&e.0)).unwrap_err();
         assert!(errmsg.0.contains("bogus"), "{errmsg}");
+        // unknown solver override name inside request options
+        let mut e = Enc::new();
+        e.u8(0); // Screen
+        e.f64(0.5);
+        e.u8(0); // no deadline
+        e.u8(0); // no tol override
+        e.u8(0); // no pipeline
+        e.u8(1); // solver present…
+        e.str("not-a-solver"); // …but unknown
+        let errmsg = dec_request(&mut Dec::new(&e.0)).unwrap_err();
+        assert!(errmsg.0.contains("not-a-solver"), "{errmsg}");
     }
 }

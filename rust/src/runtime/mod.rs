@@ -21,6 +21,7 @@
 //! bindings crate to `[dependencies]` by hand (see `rust/Cargo.toml`).
 
 pub mod pool;
+pub mod scheduler;
 
 use std::path::{Path, PathBuf};
 

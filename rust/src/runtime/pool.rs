@@ -1,14 +1,25 @@
-//! Persistent compute worker pool (std threads + mpsc — the offline image
-//! has no tokio or rayon, DESIGN.md §6).
+//! Persistent two-level compute worker pool (std threads + mpsc — the
+//! offline image has no tokio or rayon, DESIGN.md §6).
 //!
-//! This is the first subsystem in the repo that owns threads for *compute*
-//! rather than for request routing: the sharded backend
+//! The pool owns threads for *compute*: the sharded backend
 //! ([`crate::linalg::ShardSetMatrix`]) dispatches its `Xᵀw` sweeps, subset
 //! sweeps and `gemv` partial sweeps here, one job per column block or per
-//! row shard. The pool is deliberately dumb — fixed thread count, one
-//! shared injector queue, blocking scoped execution — because every caller
-//! in the crate follows the same fork/join shape: split a sweep into
-//! disjoint jobs, run them, continue single-threaded.
+//! row shard, and the serving scheduler
+//! ([`crate::runtime::scheduler`]) runs its per-session dispatchers here as
+//! detached level-0 jobs ([`WorkerPool::spawn`]). Fixed thread count, one
+//! shared injector queue — every compute caller follows the same fork/join
+//! shape: split a sweep into disjoint jobs, run them, continue
+//! single-threaded.
+//!
+//! Two-level dispatch: a [`WorkerPool::run`] issued *from a pool worker*
+//! (a session dispatcher forking a sharded sweep) no longer runs its jobs
+//! inline. It enqueues them on the shared injector like any other caller
+//! and then **helps**: the calling worker drains tasks from the queue while
+//! waiting for its own completions, so idle workers pick up the nested jobs
+//! and a sharded session keeps its sweep parallelism even while other
+//! sessions occupy workers. The help loop makes nested fork/join
+//! deadlock-free by construction — the caller itself executes queued tasks
+//! whenever its own jobs are not all in flight.
 //!
 //! Determinism contract: the pool never changes *what* is computed, only
 //! *where*. Callers must partition work so that each output element is
@@ -44,8 +55,9 @@ struct Task {
 }
 
 thread_local! {
-    /// Set inside pool workers so a nested `run` call executes inline
-    /// instead of deadlocking a fully-busy pool.
+    /// Set inside pool workers so a nested `run` call takes the helping
+    /// join path (submit + drain the shared queue) instead of blocking on
+    /// a queue it may itself be starving.
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
@@ -58,6 +70,9 @@ thread_local! {
 pub struct WorkerPool {
     /// `None` only during shutdown (Drop takes it to close the channel).
     tx: Mutex<Option<Sender<Task>>>,
+    /// The shared injector's receiving end — workers block on it, and a
+    /// nested `run`'s help loop steals from it while joining.
+    rx: Arc<Mutex<Receiver<Task>>>,
     threads: usize,
     workers: Vec<JoinHandle<()>>,
 }
@@ -77,7 +92,7 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { tx: Mutex::new(Some(tx)), threads, workers }
+        WorkerPool { tx: Mutex::new(Some(tx)), rx, threads, workers }
     }
 
     /// Number of worker threads.
@@ -85,13 +100,40 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Enqueue one detached (level-0) job and return immediately. No
+    /// completion signal: the caller observes progress through the job's
+    /// own side effects (the serving scheduler's dispatchers track their
+    /// queues themselves). A panic inside the job is caught by the worker
+    /// and dropped — detached callers that care must catch their own.
+    ///
+    /// Falls back to running the job inline if the pool is shutting down,
+    /// so a detached job is never silently lost.
+    pub fn spawn(&self, job: Box<dyn FnOnce() + Send + 'static>) {
+        let (done_tx, _done_rx) = channel::<Option<String>>();
+        let tx = {
+            let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.as_ref().cloned()
+        };
+        match tx {
+            Some(tx) => {
+                if let Err(std::sync::mpsc::SendError(t)) = tx.send(Task { job, done: done_tx }) {
+                    (t.job)();
+                }
+            }
+            None => job(),
+        }
+    }
+
     /// Execute every job, blocking until all have completed. Jobs may
     /// borrow from the caller's stack (`'scope`), because this function
     /// does not return until the last job has run.
     ///
-    /// Runs inline (no dispatch) when the pool has one thread, there is a
-    /// single job, or the caller is itself a pool worker (nested fork/join
-    /// must not wait on a queue it is blocking).
+    /// Runs inline (no dispatch) when the pool has one thread or there is a
+    /// single job. A call from a pool worker (nested fork/join) enqueues on
+    /// the shared injector like any other caller and then *helps*: the
+    /// calling worker executes queued tasks while waiting, so idle workers
+    /// borrow into the nested work and the caller can never deadlock on a
+    /// queue it is blocking.
     ///
     /// Panics if any job panicked (after all jobs have settled, so borrowed
     /// data is never observed mid-write by an unwinding caller).
@@ -99,12 +141,13 @@ impl WorkerPool {
         if jobs.is_empty() {
             return;
         }
-        if self.threads <= 1 || jobs.len() == 1 || IN_POOL_WORKER.with(|f| f.get()) {
+        if self.threads <= 1 || jobs.len() == 1 {
             for job in jobs {
                 job();
             }
             return;
         }
+        let nested = IN_POOL_WORKER.with(|f| f.get());
         let n = jobs.len();
         let (done_tx, done_rx) = channel::<Option<String>>();
         let tx = {
@@ -113,13 +156,15 @@ impl WorkerPool {
         };
         for job in jobs {
             // SAFETY: the only lifetime-erasing cast in the crate. The job
-            // borrows data that outlives `'scope`; we block below until
-            // every job has signalled completion (worker panics are caught
-            // and still signal), so no job can run — or be dropped unrun
-            // later — after `run` returns and the borrows expire. We hold a
-            // live sender, so the queue cannot close with jobs stranded in
-            // it; if a worker thread dies anyway, `done_rx.recv()` errors
-            // and we panic here rather than return borrows to live jobs.
+            // borrows data that outlives `'scope`; we block below (in the
+            // plain join or the helping join) until every job has signalled
+            // completion (panics are caught and still signal — by workers
+            // and by helping joiners alike), so no job can run — or be
+            // dropped unrun later — after `run` returns and the borrows
+            // expire. We hold a live sender, so the queue cannot close with
+            // jobs stranded in it; if a worker thread dies anyway,
+            // `done_rx.recv()` errors and we panic here rather than return
+            // borrows to live jobs.
             let job: Job =
                 unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job) };
             let task = Task { job, done: done_tx.clone() };
@@ -131,24 +176,80 @@ impl WorkerPool {
         }
         drop(tx);
         drop(done_tx);
-        let mut first_panic: Option<String> = None;
-        for _ in 0..n {
-            match done_rx.recv() {
-                Ok(None) => {}
-                Ok(Some(msg)) => {
-                    first_panic.get_or_insert(msg);
-                }
-                Err(_) => {
-                    first_panic
-                        .get_or_insert_with(|| "worker thread died mid-batch".to_string());
-                    break;
-                }
-            }
-        }
+        let first_panic = if nested {
+            self.join_helping(n, &done_rx)
+        } else {
+            join_blocking(n, &done_rx)
+        };
         if let Some(msg) = first_panic {
             panic!("worker pool job panicked: {msg}");
         }
     }
+
+    /// Join path for a nested `run` (caller is a pool worker): instead of
+    /// blocking — which would idle a worker the queued jobs may need — keep
+    /// executing tasks from the shared injector until all `n` of our jobs
+    /// have signalled. Stolen tasks may belong to any caller; executing
+    /// them is always global progress, and their `done` channels keep their
+    /// own `run` calls sound. Only blocks on `done_rx` when the queue is
+    /// momentarily empty, i.e. every remaining job of ours is already in
+    /// flight on some worker and is guaranteed to signal.
+    fn join_helping(&self, n: usize, done_rx: &Receiver<Option<String>>) -> Option<String> {
+        let mut pending = n;
+        let mut first_panic: Option<String> = None;
+        let mut record = |sig: Option<String>, pending: &mut usize| {
+            *pending -= 1;
+            if let Some(msg) = sig {
+                first_panic.get_or_insert(msg);
+            }
+        };
+        while pending > 0 {
+            while let Ok(sig) = done_rx.try_recv() {
+                record(sig, &mut pending);
+            }
+            if pending == 0 {
+                break;
+            }
+            let stolen = {
+                let guard = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+                guard.try_recv()
+            };
+            match stolen {
+                Ok(task) => {
+                    let payload =
+                        catch_unwind(AssertUnwindSafe(task.job)).err().map(panic_message);
+                    let _ = task.done.send(payload);
+                }
+                Err(_) => match done_rx.recv() {
+                    Ok(sig) => record(sig, &mut pending),
+                    Err(_) => {
+                        first_panic
+                            .get_or_insert_with(|| "worker thread died mid-batch".to_string());
+                        break;
+                    }
+                },
+            }
+        }
+        first_panic
+    }
+}
+
+/// Join path for a top-level `run`: block for all `n` completion signals.
+fn join_blocking(n: usize, done_rx: &Receiver<Option<String>>) -> Option<String> {
+    let mut first_panic: Option<String> = None;
+    for _ in 0..n {
+        match done_rx.recv() {
+            Ok(None) => {}
+            Ok(Some(msg)) => {
+                first_panic.get_or_insert(msg);
+            }
+            Err(_) => {
+                first_panic.get_or_insert_with(|| "worker thread died mid-batch".to_string());
+                break;
+            }
+        }
+    }
+    first_panic
 }
 
 impl Drop for WorkerPool {
@@ -292,6 +393,45 @@ mod tests {
             .collect();
         pool.run(jobs);
         assert_eq!(total.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn spawn_runs_detached_jobs() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for v in 0..6usize {
+            let tx = tx.clone();
+            pool.spawn(Box::new(move || {
+                let _ = tx.send(v);
+            }));
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawned_job_can_run_nested_fork_join() {
+        // a detached dispatcher job forking back into its own pool must
+        // help/borrow idle workers rather than deadlock — the serving
+        // scheduler's exact shape
+        let pool = Arc::new(WorkerPool::new(2));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let p = Arc::clone(&pool);
+        pool.spawn(Box::new(move || {
+            let total = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            p.run(jobs);
+            let _ = tx.send(total.load(Ordering::Relaxed));
+        }));
+        assert_eq!(rx.recv().unwrap(), 5);
     }
 
     #[test]

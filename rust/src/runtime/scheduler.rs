@@ -1,0 +1,330 @@
+//! Per-key dispatch queues over the worker pool — the serving scheduler
+//! (DESIGN.md §4).
+//!
+//! The coordinator's router used to execute session batches itself: drain
+//! the inbox into per-session batches, run one pool job per session, and
+//! *block* until the slowest finished — a tick barrier where one heavy
+//! tenant's batch delayed everyone's next dispatch. The scheduler replaces
+//! the barrier with one FIFO [`DispatchQueue`] per key (session): enqueuing
+//! work never blocks the caller, and each queue drains through its own
+//! detached dispatcher job ([`super::pool::WorkerPool::spawn`]) that runs
+//! batches back-to-back until the queue is empty.
+//!
+//! Ordering contract: at most one dispatcher is ever live per key, and a
+//! dispatcher drains its queue in arrival order — so per-key work keeps the
+//! exact sequencing a dedicated single-session worker would give it (the
+//! bit-identity contract leans on this), while distinct keys never wait on
+//! each other. Batches form naturally from backlog: whatever arrives while
+//! a dispatcher is busy becomes its next batch.
+//!
+//! Backpressure surface: the scheduler counts pending items per key and in
+//! total (enqueued but not yet executed), which is exactly what the
+//! admission policy ([`crate::coordinator::admission`]) needs to shed load
+//! instead of queueing unboundedly.
+
+// audit:allow(determinism:hash-iter, lookup-only; the scheduler never iterates the map)
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::pool::{self, WorkerPool};
+
+/// Which pool the dispatchers run on: the process-wide pool or an
+/// explicitly owned one (tests and benches sweep thread counts).
+#[derive(Clone, Debug)]
+pub enum PoolHandle {
+    /// The lazily-spawned process-wide pool ([`pool::global`]).
+    Global,
+    /// An explicitly owned pool.
+    Owned(Arc<WorkerPool>),
+}
+
+impl PoolHandle {
+    /// Resolve to the underlying pool.
+    pub fn get(&self) -> &WorkerPool {
+        match self {
+            PoolHandle::Global => pool::global(),
+            PoolHandle::Owned(p) => p,
+        }
+    }
+
+    /// Worker count of the resolved pool.
+    pub fn threads(&self) -> usize {
+        self.get().threads()
+    }
+}
+
+/// One key's FIFO queue plus its dispatcher state.
+struct DispatchQueue<T> {
+    items: VecDeque<T>,
+    /// True while a dispatcher job for this key is live (queued on the
+    /// pool or draining) — the single-dispatcher-per-key invariant.
+    running: bool,
+    /// Items enqueued but not yet *executed* (queued + in the dispatcher's
+    /// current batch). This is the admission-control depth: it only drops
+    /// once work actually completed.
+    pending: usize,
+}
+
+impl<T> Default for DispatchQueue<T> {
+    fn default() -> Self {
+        DispatchQueue { items: VecDeque::new(), running: false, pending: 0 }
+    }
+}
+
+struct SchedState<T> {
+    // audit:allow(determinism:hash-iter, lookup-only; the scheduler never iterates the map)
+    queues: HashMap<String, DispatchQueue<T>>,
+    /// Live dispatcher jobs across all keys.
+    active: usize,
+    /// Pending items across all keys.
+    pending_total: usize,
+}
+
+struct Shared<T> {
+    pool: PoolHandle,
+    exec: Box<dyn Fn(&str, Vec<T>) + Send + Sync>,
+    state: Mutex<SchedState<T>>,
+    /// Signalled on every dispatcher/queue transition; `quiesce` and
+    /// `remove` wait on it.
+    quiet: Condvar,
+}
+
+/// The scheduler: per-key dispatch queues executing on a worker pool.
+///
+/// `T` is one unit of work; the executor closure receives each drained
+/// batch together with its key. Cloning is shallow (shared state).
+pub struct Scheduler<T: Send + 'static> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T: Send + 'static> Scheduler<T> {
+    /// Build a scheduler whose dispatchers run `exec` on `pool`.
+    pub fn new(
+        pool: PoolHandle,
+        exec: impl Fn(&str, Vec<T>) + Send + Sync + 'static,
+    ) -> Scheduler<T> {
+        Scheduler {
+            shared: Arc::new(Shared {
+                pool,
+                exec: Box::new(exec),
+                state: Mutex::new(SchedState {
+                    // audit:allow(determinism:hash-iter, lookup-only; the scheduler never iterates the map)
+                    queues: HashMap::new(),
+                    active: 0,
+                    pending_total: 0,
+                }),
+                quiet: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Append one item to `key`'s queue, starting a dispatcher for the key
+    /// if none is live. Never blocks on work: the enqueue itself is a map
+    /// push under a short lock.
+    pub fn enqueue(&self, key: &str, item: T) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        let q = st.queues.entry(key.to_string()).or_default();
+        q.items.push_back(item);
+        q.pending += 1;
+        st.pending_total += 1;
+        let start = !q.running;
+        if start {
+            q.running = true;
+            st.active += 1;
+        }
+        drop(st);
+        if start {
+            let shared = Arc::clone(&self.shared);
+            let key = key.to_string();
+            self.shared.pool.get().spawn(Box::new(move || dispatch(shared, key)));
+        }
+    }
+
+    /// Pending items for one key (enqueued but not yet executed). Zero for
+    /// unknown keys.
+    pub fn depth(&self, key: &str) -> usize {
+        let st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.queues.get(key).map_or(0, |q| q.pending)
+    }
+
+    /// Pending items across every key.
+    pub fn total_pending(&self) -> usize {
+        let st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.pending_total
+    }
+
+    /// True when `key` has no pending items and no live dispatcher — i.e.
+    /// evicting it now cannot drop in-flight work.
+    pub fn is_idle(&self, key: &str) -> bool {
+        let st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        match st.queues.get(key) {
+            None => true,
+            Some(q) => !q.running && q.pending == 0,
+        }
+    }
+
+    /// Remove `key`'s queue, returning any undelivered items. Waits for the
+    /// key's live dispatcher (if any) to finish its current batch first, so
+    /// the caller can safely tear down whatever the executor touches.
+    pub fn remove(&self, key: &str) -> Vec<T> {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match st.queues.get(key) {
+                None => return Vec::new(),
+                Some(q) if !q.running => {
+                    let q = st.queues.remove(key).unwrap_or_default();
+                    st.pending_total -= q.pending;
+                    return q.items.into();
+                }
+                Some(_) => {
+                    st = self.shared.quiet.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+
+    /// Block until every queue is drained and every dispatcher has exited.
+    pub fn quiesce(&self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.active > 0 || st.pending_total > 0 {
+            st = self.shared.quiet.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// A key's dispatcher: drain the queue batch-by-batch until it is empty,
+/// then retire. Exactly one dispatcher is live per key at any instant
+/// (enforced by `running`), which is what keeps per-key execution ordered.
+fn dispatch<T: Send + 'static>(shared: Arc<Shared<T>>, key: String) {
+    loop {
+        let batch: Vec<T> = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            match st.queues.get_mut(&key) {
+                Some(q) if !q.items.is_empty() => q.items.drain(..).collect(),
+                // empty (or removed mid-batch): retire this dispatcher
+                other => {
+                    if let Some(q) = other {
+                        q.running = false;
+                    }
+                    st.active -= 1;
+                    shared.quiet.notify_all();
+                    return;
+                }
+            }
+        };
+        let n = batch.len();
+        (shared.exec)(&key, batch);
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(q) = st.queues.get_mut(&key) {
+            q.pending -= n;
+        }
+        st.pending_total -= n;
+        shared.quiet.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex as StdMutex;
+
+    fn sched_with(
+        threads: usize,
+        exec: impl Fn(&str, Vec<u32>) + Send + Sync + 'static,
+    ) -> Scheduler<u32> {
+        Scheduler::new(PoolHandle::Owned(Arc::new(WorkerPool::new(threads))), exec)
+    }
+
+    #[test]
+    fn per_key_order_is_fifo_at_any_thread_count() {
+        for threads in [1usize, 2, 4] {
+            let log: Arc<StdMutex<Vec<(String, u32)>>> = Arc::default();
+            let l = Arc::clone(&log);
+            let sched = sched_with(threads, move |key, batch| {
+                let mut g = l.lock().unwrap();
+                for v in batch {
+                    g.push((key.to_string(), v));
+                }
+            });
+            for v in 0..50u32 {
+                sched.enqueue("a", v);
+                sched.enqueue("b", 100 + v);
+            }
+            sched.quiesce();
+            let g = log.lock().unwrap();
+            let a: Vec<u32> =
+                g.iter().filter(|(k, _)| k == "a").map(|(_, v)| *v).collect();
+            let b: Vec<u32> =
+                g.iter().filter(|(k, _)| k == "b").map(|(_, v)| *v).collect();
+            assert_eq!(a, (0..50).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(b, (100..150).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn slow_key_does_not_block_fast_key() {
+        // With ≥2 workers, a long-running batch on `slow` must not delay
+        // `fast`'s dispatch: fast's 10 items complete while slow's first
+        // batch is still sleeping.
+        let done_fast = Arc::new(AtomicUsize::new(0));
+        let df = Arc::clone(&done_fast);
+        let sched = sched_with(2, move |key, batch| {
+            if key == "slow" {
+                std::thread::sleep(std::time::Duration::from_millis(150));
+            } else {
+                df.fetch_add(batch.len(), Ordering::SeqCst);
+            }
+        });
+        sched.enqueue("slow", 0);
+        for v in 0..10u32 {
+            sched.enqueue("fast", v);
+        }
+        // fast should finish well inside slow's first 150ms batch
+        let t0 = std::time::Instant::now();
+        while done_fast.load(Ordering::SeqCst) < 10 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_millis(120),
+                "fast key starved behind slow key"
+            );
+            std::thread::yield_now();
+        }
+        sched.quiesce();
+    }
+
+    #[test]
+    fn depth_tracks_pending_and_remove_returns_leftovers() {
+        let gate = Arc::new(StdMutex::new(()));
+        let hold = gate.lock().unwrap();
+        let g = Arc::clone(&gate);
+        let sched = sched_with(2, move |_, _| {
+            let _g = g.lock().unwrap();
+        });
+        sched.enqueue("a", 1);
+        // dispatcher is now blocked on the gate with item 1 in its batch;
+        // two more items back up in the queue
+        while sched.depth("a") != 1 || !sched.is_idle("missing") {
+            std::thread::yield_now();
+        }
+        sched.enqueue("a", 2);
+        sched.enqueue("a", 3);
+        assert_eq!(sched.depth("a"), 3);
+        assert_eq!(sched.total_pending(), 3);
+        assert!(!sched.is_idle("a"));
+        drop(hold);
+        sched.quiesce();
+        assert_eq!(sched.depth("a"), 0);
+        assert!(sched.is_idle("a"));
+        // leftovers: queue items behind a gate, remove while they wait
+        let leftovers = sched.remove("a");
+        assert!(leftovers.is_empty());
+    }
+
+    #[test]
+    fn quiesce_on_empty_scheduler_returns() {
+        let sched = sched_with(2, |_, _| {});
+        sched.quiesce();
+        assert_eq!(sched.total_pending(), 0);
+    }
+}

@@ -58,6 +58,13 @@ pub struct ContextStats {
     pub y_norm: f64,
     pub lam_max: f64,
     pub lam_max_arg: usize,
+    /// Identity stamp of the backend the statistics were computed from:
+    /// (n, p, [`DesignMatrix::data_version`]). Long-lived owners check
+    /// [`ContextStats::is_valid`] before rebuilding a context — cached
+    /// O(nnz) statistics must never silently outlive the data they
+    /// summarize (every shipped backend is immutable, so today this only
+    /// guards future mutable backends).
+    stamp: (usize, usize, u64),
 }
 
 impl ContextStats {
@@ -81,7 +88,15 @@ impl ContextStats {
             y_norm: crate::linalg::nrm2(y),
             lam_max,
             lam_max_arg,
+            stamp: (x.n_rows(), x.n_cols(), x.data_version()),
         }
+    }
+
+    /// True when these statistics still describe `x`: same shape, same
+    /// [`DesignMatrix::data_version`]. O(1) — cheap enough to check per
+    /// batch.
+    pub fn is_valid(&self, x: &dyn DesignMatrix) -> bool {
+        self.stamp == (x.n_rows(), x.n_cols(), x.data_version())
     }
 
     /// Materialize a borrowing context over `x`/`y` from the cached

@@ -5,20 +5,30 @@
 //! exists both as a cross-check and because its epoch structure (two dense
 //! matvecs) is what the L2 JAX `fista_epoch` artifact mirrors.
 
-use super::{dual, LassoSolver, SolveOptions, SolveResult, SolverHook};
+use super::{
+    dual, FistaWarmState, LassoSolver, SolveOptions, SolveResult, SolverHook, SolverState,
+};
 use crate::linalg::{axpy, ops::soft_threshold, DesignMatrix};
 
 /// FISTA with constant step 1/L and duality-gap stopping.
 pub struct FistaSolver;
 
 impl FistaSolver {
-    /// Shared body of `solve` / `solve_with_hook`. The dynamic hook runs at
-    /// gap checks; dropped coordinates are *compacted out* of the live
-    /// problem (the two dense matvecs per iteration shrink with them) and
-    /// momentum restarts (t = 1), which keeps the constant-step analysis
-    /// valid — `lip` over the original column set upper-bounds every
-    /// subset. With `hook = None` the live set never changes and the
-    /// iterate sequence is identical to the pre-hook solver.
+    /// Shared body of `solve` / `solve_with_hook` / `solve_warm`. The
+    /// dynamic hook runs at gap checks; dropped coordinates are *compacted
+    /// out* of the live problem (the two dense matvecs per iteration shrink
+    /// with them) and momentum restarts (t = 1), which keeps the
+    /// constant-step analysis valid — `lip` over the original column set
+    /// upper-bounds every subset. With `hook = None` the live set never
+    /// changes and the iterate sequence is identical to the pre-hook solver.
+    ///
+    /// `warm`, when given, carries momentum across solves: a recorded
+    /// [`FistaWarmState`] matching (λ bit-for-bit, identical column subset)
+    /// seeds `w`/`t` instead of the cold `w = β₀, t = 1` start — paired with
+    /// a β₀ equal to the recorded exit iterate this *continues* the exact
+    /// interrupted trajectory (pinned bitwise in the tests below). On exit
+    /// the current state is recorded back. Without `warm` the behavior is
+    /// byte-for-byte the stateless solver.
     #[allow(clippy::too_many_arguments)]
     fn solve_impl(
         &self,
@@ -29,9 +39,13 @@ impl FistaSolver {
         beta0: Option<&[f64]>,
         opts: &SolveOptions,
         mut hook: Option<&mut dyn SolverHook>,
+        mut warm: Option<&mut SolverState>,
     ) -> SolveResult {
         let m = cols.len();
         if m == 0 {
+            if let Some(st) = warm {
+                *st = SolverState::None;
+            }
             return SolveResult { beta: vec![], iters: 0, gap: 0.0 };
         }
         let lip = x.op_norm_sq_subset(cols, 30, 0xF157A).max(1e-12) * 1.01;
@@ -42,6 +56,15 @@ impl FistaSolver {
         let mut cur_cols: Vec<usize> = cols.to_vec();
         let mut w = beta.clone(); // extrapolated point
         let mut t = 1.0f64;
+        // momentum-restart-aware resume: only a state recorded for exactly
+        // this (λ, cols) problem may seed w/t — anything else cold-starts,
+        // which is always valid
+        if let Some(SolverState::Fista(fs)) = warm.as_deref() {
+            if fs.lam.to_bits() == lam.to_bits() && fs.cols == cols && fs.w.len() == m {
+                w.copy_from_slice(&fs.w);
+                t = fs.t;
+            }
+        }
         let mut xw = vec![0.0; x.n_rows()]; // X·w
         let mut grad = vec![0.0; m];
         let mut r = vec![0.0; x.n_rows()];
@@ -124,6 +147,17 @@ impl FistaSolver {
             axpy(-1.0, &xw, &mut rr);
             gap = dual::duality_gap(x, y, &cur_cols, &beta, &rr, lam);
         }
+        // record exit state for a momentum-aware resume (the recorded cols
+        // are the *live* set, so a post-compaction state only resumes a
+        // matching compacted problem)
+        if let Some(st) = warm {
+            *st = SolverState::Fista(FistaWarmState {
+                lam,
+                cols: cur_cols.clone(),
+                w: w.clone(),
+                t,
+            });
+        }
         // scatter the live coefficients back to the original alignment
         if pos.len() == m {
             SolveResult { beta, iters, gap }
@@ -147,7 +181,7 @@ impl LassoSolver for FistaSolver {
         beta0: Option<&[f64]>,
         opts: &SolveOptions,
     ) -> SolveResult {
-        self.solve_impl(x, y, cols, lam, beta0, opts, None)
+        self.solve_impl(x, y, cols, lam, beta0, opts, None, None)
     }
 
     fn solve_with_hook(
@@ -160,7 +194,21 @@ impl LassoSolver for FistaSolver {
         opts: &SolveOptions,
         hook: Option<&mut dyn SolverHook>,
     ) -> SolveResult {
-        self.solve_impl(x, y, cols, lam, beta0, opts, hook)
+        self.solve_impl(x, y, cols, lam, beta0, opts, hook, None)
+    }
+
+    fn solve_warm(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        hook: Option<&mut dyn SolverHook>,
+        state: &mut SolverState,
+    ) -> SolveResult {
+        self.solve_impl(x, y, cols, lam, beta0, opts, hook, Some(state))
     }
 
     fn name(&self) -> &'static str {
@@ -208,5 +256,86 @@ mod tests {
         let res = FistaSolver.solve(&x, &y, &[], lam, None, &SolveOptions::default());
         assert_eq!(res.iters, 0);
         assert!(res.beta.is_empty());
+    }
+
+    /// The warm-state contract: an interrupted solve resumed with its
+    /// recorded momentum state continues the *exact* trajectory — 30 + 30
+    /// iterations through the state carrier are bit-identical to 60
+    /// uninterrupted ones. A β-only warm start (cold momentum) cannot make
+    /// this guarantee; the recorded w/t are what carry it.
+    #[test]
+    fn interrupted_resume_matches_uninterrupted_bitwise() {
+        let (x, y, lam) = small_problem(15, 30, 60, 0.3);
+        let cols: Vec<usize> = (0..60).collect();
+        // tolerance far below what 60 iterations reach, so neither run
+        // stops early and the gap checks stay aligned (both multiples of 10)
+        let base = SolveOptions { tol_gap: 1e-300, gap_check_every: 10, ..Default::default() };
+        let full = FistaSolver.solve(
+            &x,
+            &y,
+            &cols,
+            lam,
+            None,
+            &SolveOptions { max_iters: 60, ..base.clone() },
+        );
+        let mut state = SolverState::None;
+        let first = FistaSolver.solve_warm(
+            &x,
+            &y,
+            &cols,
+            lam,
+            None,
+            &SolveOptions { max_iters: 30, ..base.clone() },
+            None,
+            &mut state,
+        );
+        match &state {
+            SolverState::Fista(fs) => {
+                assert_eq!(fs.lam.to_bits(), lam.to_bits());
+                assert_eq!(fs.cols, cols);
+                assert!(fs.t > 1.0, "momentum was recorded, t = {}", fs.t);
+            }
+            other => panic!("expected recorded FISTA state, got {other:?}"),
+        }
+        let resumed = FistaSolver.solve_warm(
+            &x,
+            &y,
+            &cols,
+            lam,
+            Some(&first.beta),
+            &SolveOptions { max_iters: 30, ..base },
+            None,
+            &mut state,
+        );
+        assert_eq!(full.beta.len(), resumed.beta.len());
+        for (j, (a, b)) in full.beta.iter().zip(resumed.beta.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "feature {j}: {a} vs {b}");
+        }
+    }
+
+    /// A recorded state for a different λ (or column set) must not seed the
+    /// resume — mismatches cold-start and still converge.
+    #[test]
+    fn mismatched_state_cold_starts() {
+        let (x, y, lam) = small_problem(16, 25, 50, 0.3);
+        let cols: Vec<usize> = (0..50).collect();
+        let opts = SolveOptions { tol_gap: 1e-8, ..Default::default() };
+        let mut state = SolverState::None;
+        let a = FistaSolver.solve_warm(&x, &y, &cols, lam, None, &opts, None, &mut state);
+        assert!(a.gap <= 1e-8);
+        // different λ: the stale state is ignored and overwritten
+        let b = FistaSolver
+            .solve_warm(&x, &y, &cols, 0.9 * lam, Some(&a.beta), &opts, None, &mut state);
+        assert!(b.gap <= 1e-8);
+        match &state {
+            SolverState::Fista(fs) => assert_eq!(fs.lam.to_bits(), (0.9 * lam).to_bits()),
+            other => panic!("expected FISTA state, got {other:?}"),
+        }
+        // the stateless entry points are unaffected by any of this
+        let c = FistaSolver.solve(&x, &y, &cols, lam, None, &opts);
+        let d = FistaSolver.solve(&x, &y, &cols, lam, None, &opts);
+        for (u, v) in c.beta.iter().zip(d.beta.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 }

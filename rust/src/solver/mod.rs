@@ -78,6 +78,44 @@ impl SolveResult {
     }
 }
 
+/// Cross-solve solver state carried by a warm-start cache (the serving
+/// sessions in [`crate::coordinator::registry`] keep one per session):
+/// whatever a solver needs, beyond β itself, to *continue* rather than
+/// restart. A β-only warm start hands FISTA the right point but cold
+/// momentum (t = 1), so a resumed session replays the slow early
+/// iterations; [`FistaWarmState`] carries the extrapolation state so an
+/// interrupted solve resumes its exact trajectory.
+///
+/// The state is solver-tagged: [`LassoSolver::solve_warm`]'s default
+/// implementation resets it to [`SolverState::None`], so a solver that
+/// keeps no state can never leave another solver's stale state behind.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum SolverState {
+    /// No recorded state — resume is a plain (β-only) warm start.
+    #[default]
+    None,
+    /// FISTA momentum state at exit ([`fista::FistaSolver`]).
+    Fista(FistaWarmState),
+}
+
+/// FISTA's resume state: the extrapolated point and momentum scalar at the
+/// moment the previous solve stopped, tagged with the (λ, column-subset)
+/// problem they belong to. [`fista::FistaSolver`] resumes from it only when
+/// λ matches bit-for-bit and the column subset is identical — anything else
+/// falls back to a cold (t = 1) start, which is always valid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FistaWarmState {
+    /// λ of the recorded solve (resume requires bit-equality).
+    pub lam: f64,
+    /// The live column subset at exit (after any dynamic-screening
+    /// compaction), in solver order.
+    pub cols: Vec<usize>,
+    /// Extrapolated point w, aligned with `cols`.
+    pub w: Vec<f64>,
+    /// Momentum scalar t (t = 1 is a cold start).
+    pub t: f64,
+}
+
 /// In-solver dynamic-screening hook (gap-safe screening): the solver calls
 /// it at its duality-gap checks with the current reduced-problem state.
 ///
@@ -134,6 +172,30 @@ pub trait LassoSolver {
     ) -> SolveResult {
         let _ = hook;
         self.solve(x, y, cols, lam, beta0, opts)
+    }
+
+    /// Like [`LassoSolver::solve_with_hook`] but threading a caller-owned
+    /// [`SolverState`] through the solve: the solver may *resume* from a
+    /// matching recorded state (instead of warm-starting cold) and records
+    /// its exit state back into `state` for the next call. Default
+    /// implementation keeps no state — it resets `state` to
+    /// [`SolverState::None`] (so stale state from another solver never
+    /// survives a solver switch) and delegates; the iterate sequence is
+    /// identical to [`LassoSolver::solve_with_hook`].
+    #[allow(clippy::too_many_arguments)]
+    fn solve_warm(
+        &self,
+        x: &dyn DesignMatrix,
+        y: &[f64],
+        cols: &[usize],
+        lam: f64,
+        beta0: Option<&[f64]>,
+        opts: &SolveOptions,
+        hook: Option<&mut dyn SolverHook>,
+        state: &mut SolverState,
+    ) -> SolveResult {
+        *state = SolverState::None;
+        self.solve_with_hook(x, y, cols, lam, beta0, opts, hook)
     }
 
     fn name(&self) -> &'static str;

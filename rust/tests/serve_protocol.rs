@@ -1,14 +1,16 @@
 //! Multi-tenant serving protocol tests (DESIGN.md §4): concurrent
 //! multi-session load is bit-identical to isolated single-session runs,
 //! deadline-bounded requests come back gap-tagged instead of blocking, and
-//! every failure mode that used to panic a worker is a typed error.
+//! every failure mode that used to panic a worker is a typed error —
+//! including admission-control shedding (`Overloaded`) and idle-session
+//! eviction (`SessionClosed` with the eviction reason).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use dpp_screen::coordinator::{
-    Coordinator, Request, RequestError, RequestOptions, Response, ScreeningService,
-    SessionSpec,
+    AdmissionConfig, Coordinator, Request, RequestError, RequestOptions, Response,
+    ScreeningService, SessionSpec,
 };
 use dpp_screen::data::synthetic;
 use dpp_screen::linalg::{CscMatrix, DesignMatrix, ShardSetMatrix};
@@ -722,4 +724,217 @@ fn peer_disconnect_mid_request_is_typed_disconnected() {
         other => panic!("expected Disconnected, got {other:?}"),
     }
     fake_server.join().unwrap();
+}
+
+/// Heavy-tenant fairness must not cost determinism: one sharded session
+/// with ~10× the work of each light session, served concurrently at 1, 2,
+/// and 4 pool threads, answers every request bit-identically to isolated
+/// single-session runs. The scheduler only changes *where* a session's
+/// batches execute (and which idle workers its nested fork/join borrows) —
+/// never *what* they compute.
+#[test]
+fn heavy_tenant_bit_identical_across_thread_counts() {
+    let (heavy_csc, heavy_y, heavy_lm) = sparse_problem(60, 500, 71);
+    let lights: Vec<(CscMatrix, Vec<f64>, f64)> =
+        (0..3).map(|i| sparse_problem(30, 100, 72 + i)).collect();
+
+    let name_of = |i: usize| -> String {
+        if i == 0 { "heavy".to_string() } else { format!("light{}", i - 1) }
+    };
+    let make_spec = |i: usize| -> SessionSpec {
+        if i == 0 {
+            SessionSpec::new(
+                name_of(i),
+                ShardSetMatrix::split_csc(&heavy_csc, 3),
+                heavy_y.clone(),
+                ScreenPipeline::single("edpp"),
+                SolverKind::Cd,
+                PathConfig::default(),
+            )
+        } else {
+            let (csc, y, _) = &lights[i - 1];
+            SessionSpec::new(
+                name_of(i),
+                csc.clone(),
+                y.clone(),
+                ScreenPipeline::single("edpp"),
+                SolverKind::Cd,
+                PathConfig::default(),
+            )
+        }
+    };
+    let program_of = |i: usize| -> Vec<Request> {
+        if i == 0 {
+            session_program(heavy_lm, heavy_csc.n_cols())
+        } else {
+            let (csc, _, lm) = &lights[i - 1];
+            session_program(*lm, csc.n_cols())
+        }
+    };
+
+    // isolated references: one coordinator per session, sequential requests
+    let reference: Vec<Vec<Response>> = (0..4)
+        .map(|i| {
+            let coord = Coordinator::new();
+            coord.register(make_spec(i)).unwrap();
+            let out = program_of(i)
+                .into_iter()
+                .map(|req| coord.submit(&name_of(i), req).recv_response().unwrap())
+                .collect();
+            coord.shutdown();
+            out
+        })
+        .collect();
+
+    for threads in [1usize, 2, 4] {
+        let coord =
+            Coordinator::with_pool(Some(Arc::new(WorkerPool::new(threads))));
+        for i in 0..4 {
+            coord.register(make_spec(i)).unwrap();
+        }
+        let programs: Vec<Vec<Request>> = (0..4).map(program_of).collect();
+        let mut slots = Vec::new();
+        for step in 0..programs[0].len() {
+            for (i, program) in programs.iter().enumerate() {
+                slots.push((
+                    i,
+                    step,
+                    coord.submit(&name_of(i), program[step].clone()),
+                ));
+            }
+        }
+        for (i, step, slot) in slots {
+            let got = slot.recv_response().unwrap();
+            assert_same_payload(
+                &reference[i][step],
+                &got,
+                &format!("{} step {step} at {threads} threads", name_of(i)),
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+/// The admission depth cap sheds protocol-level load with the typed
+/// `Overloaded` error and a deterministic retry hint — requests never
+/// queue unboundedly. (`depth=0` makes every submit shed, so the test
+/// never races the solver.)
+#[test]
+fn admission_cap_sheds_with_typed_overloaded() {
+    let (csc, y, lam_max) = sparse_problem(25, 80, 75);
+    let coord = Coordinator::with_config(
+        None,
+        AdmissionConfig { max_session_pending: Some(0), ..Default::default() },
+    );
+    coord
+        .register(SessionSpec::new(
+            "s",
+            csc,
+            y,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    let err = coord
+        .submit("s", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+        .recv()
+        .unwrap_err();
+    match err {
+        RequestError::Overloaded { retry_after_ms } => {
+            assert!(retry_after_ms >= 25, "retry hint: {retry_after_ms}")
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    let stats = coord.admission_stats();
+    assert_eq!(stats.shed, 1);
+    coord.shutdown();
+}
+
+/// An idle session past its TTL is evicted by the router's sweep; later
+/// requests to it get the typed `SessionClosed` carrying the eviction
+/// reason — not the anonymous `UnknownSession`.
+#[test]
+fn evicted_session_requests_get_typed_eviction_reason() {
+    let (csc, y, lam_max) = sparse_problem(25, 80, 76);
+    let coord = Coordinator::with_config(
+        None,
+        AdmissionConfig {
+            session_ttl: Some(Duration::from_millis(0)),
+            ..Default::default()
+        },
+    );
+    coord
+        .register(SessionSpec::new(
+            "tmp",
+            csc,
+            y,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    // the sweep runs on the router's TTL tick; poll until it fires
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while !coord.sessions().is_empty() {
+        assert!(std::time::Instant::now() < deadline, "eviction never fired");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let err = coord
+        .submit("tmp", Request::Screen { lam: 0.5 * lam_max, opts: Default::default() })
+        .recv()
+        .unwrap_err();
+    match err {
+        RequestError::SessionClosed { session, reason } => {
+            assert_eq!(session, "tmp");
+            assert!(reason.contains("evicted"), "reason: {reason}");
+        }
+        other => panic!("expected SessionClosed, got {other:?}"),
+    }
+    assert_eq!(coord.admission_stats().evicted, 1);
+    coord.shutdown();
+}
+
+/// A FISTA-backed session serves certified answers over the protocol, and
+/// the per-request solver override (`RequestOptions::solver`) runs without
+/// disturbing the session. The first screen's keep-set is anchor-determined
+/// (computed before any solve), so it must agree bit-for-bit with a CD
+/// session on the identical problem.
+#[test]
+fn fista_session_serves_and_solver_override_round_trips() {
+    let (csc, y, lam_max) = sparse_problem(30, 110, 77);
+    let coord = Coordinator::new();
+    for (name, solver) in [("f", SolverKind::Fista), ("c", SolverKind::Cd)] {
+        coord
+            .register(SessionSpec::new(
+                name,
+                csc.clone(),
+                y.clone(),
+                RuleKind::Edpp,
+                solver,
+                PathConfig::default(),
+            ))
+            .unwrap();
+    }
+    let screen = |name: &str, lam: f64, opts: RequestOptions| {
+        match coord.submit(name, Request::Screen { lam, opts }).recv_response().unwrap()
+        {
+            Response::Screen(s) => s,
+            other => panic!("expected screen, got {other:?}"),
+        }
+    };
+    let fista = screen("f", 0.5 * lam_max, RequestOptions::default());
+    let cd = screen("c", 0.5 * lam_max, RequestOptions::default());
+    assert!(fista.gap <= 1e-6, "FISTA gap certifies: {}", fista.gap);
+    assert_eq!(fista.kept, cd.kept, "anchor-determined keep-set is solver-independent");
+
+    // per-request CD override on the FISTA session: typed, certified, and
+    // the session keeps serving afterwards (momentum state is untouched —
+    // pinned down in the registry unit tests)
+    let opts = RequestOptions { solver: Some(SolverKind::Cd), ..Default::default() };
+    let overridden = screen("f", 0.4 * lam_max, opts);
+    assert!(overridden.gap <= 1e-6);
+    let after = screen("f", 0.3 * lam_max, RequestOptions::default());
+    assert!(after.gap <= 1e-6);
+    coord.shutdown();
 }
