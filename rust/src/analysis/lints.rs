@@ -16,7 +16,7 @@ const CLOCK_SANCTIONED: [&str; 2] = ["util/timer.rs", "util/benchkit.rs"];
 const SUM_SANCTIONED_DIRS: [&str; 2] = ["linalg/", "experiments/"];
 
 /// Request-handling directories where panics are forbidden outside tests.
-const PANIC_DIRS: [&str; 2] = ["coordinator/", "net/"];
+const PANIC_DIRS: [&str; 3] = ["coordinator/", "net/", "front/"];
 
 const PANIC_TOKENS: [&str; 6] = [
     ".unwrap()",
@@ -297,6 +297,7 @@ mod tests {
     fn panic_scoped_to_request_dirs() {
         let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
         assert_eq!(scan_file("net/server.rs", src).findings.len(), 1);
+        assert_eq!(scan_file("front/server.rs", src).findings.len(), 1);
         assert!(scan_file("solver/cd.rs", src).findings.is_empty());
     }
 

@@ -1,0 +1,286 @@
+//! One persistent connection from the front to a backend `dpp serve`
+//! process (DESIGN.md §4c).
+//!
+//! A [`BackendLink`] multiplexes every session placed on its backend over
+//! a single TCP connection: forwarding writes a `Submit` frame under the
+//! link lock (so per-session FIFO order is exactly the arrival order at
+//! the front), and a dedicated reply thread routes each `Reply` back to
+//! the waiting forwarder by id. Control-plane probes travel on the same
+//! connection — a `Stats` answer refreshes the load view the placement
+//! rule biases on, and doubles as the health check.
+//!
+//! Failure semantics: any connect/IO error, protocol error, or a budget of
+//! unanswered probes marks the link **down** with a reason. Marking down
+//! fails every in-flight request with a typed
+//! [`RequestError::SessionClosed`] naming the backend, and every later
+//! forward for a session placed here gets the same typed error — sessions
+//! are stateful, so the front never silently re-homes them; only *new*
+//! sessions route around a down backend.
+
+use std::collections::BTreeMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Request, RequestError, Response};
+use crate::net::frame::{read_frame, write_frame};
+use crate::net::wire::{
+    decode_server_msg, encode_client_msg, ClientMsg, ServerMsg, StatsReport, WIRE_VERSION,
+};
+
+struct LinkState {
+    /// Write half of the persistent connection; `None` once down.
+    writer: Option<TcpStream>,
+    next_id: u64,
+    /// In-flight forwards by backend-assigned id: the session name (for
+    /// typed errors) and the slot the responder is blocked on.
+    pending: BTreeMap<u64, (String, Sender<Response>)>,
+    /// Down reason, once marked down (never cleared — links do not heal).
+    down: Option<String>,
+    /// Session names the backend advertised in its hello.
+    advertised: Vec<String>,
+    /// Probe-refreshed load/health row for this backend.
+    report: StatsReport,
+    /// Probes sent but not yet answered (reset by every `Stats` reply).
+    unanswered_probes: u32,
+}
+
+/// A live (or down) backend: address, persistent connection, load view.
+pub struct BackendLink {
+    addr: String,
+    state: Arc<Mutex<LinkState>>,
+}
+
+impl BackendLink {
+    /// Connect and shake hands with `dpp serve --listen addr`, then start
+    /// the reply-routing thread.
+    pub fn connect(addr: &str) -> Result<BackendLink> {
+        let mut stream = TcpStream::connect(addr).with_context(|| {
+            format!("connecting to backend {addr} — is `dpp serve --listen {addr}` running?")
+        })?;
+        let hello = encode_client_msg(&ClientMsg::Hello { version: WIRE_VERSION });
+        write_frame(&mut stream, &hello)
+            .with_context(|| format!("sending hello to backend {addr}"))?;
+        let payload = read_frame(&mut stream)
+            .with_context(|| format!("reading hello reply from backend {addr}"))?;
+        let advertised = match decode_server_msg(&payload)
+            .with_context(|| format!("decoding hello reply from backend {addr}"))?
+        {
+            ServerMsg::Hello { version, sessions } => {
+                if version != WIRE_VERSION {
+                    bail!(
+                        "backend {addr} speaks wire version {version}, \
+                         this front speaks {WIRE_VERSION}"
+                    );
+                }
+                sessions
+            }
+            other => bail!("expected a hello from backend {addr}, got {other:?}"),
+        };
+        let reader = stream
+            .try_clone()
+            .with_context(|| format!("cloning backend {addr} stream"))?;
+        let report = StatsReport {
+            backend: addr.to_string(),
+            up: true,
+            sessions: advertised.len() as u64,
+            admission: Default::default(),
+        };
+        let state = Arc::new(Mutex::new(LinkState {
+            writer: Some(stream),
+            next_id: 0,
+            pending: BTreeMap::new(),
+            down: None,
+            advertised,
+            report,
+            unanswered_probes: 0,
+        }));
+        let thread_state = Arc::clone(&state);
+        let thread_addr = addr.to_string();
+        // reply router: detached; exits when the link goes down (it owns
+        // marking it down on read errors, so it never outlives the socket)
+        if let Err(e) = std::thread::Builder::new()
+            .name("dpp-front-link".to_string())
+            .spawn(move || reply_loop(reader, thread_addr, thread_state))
+        {
+            bail!("spawning reply thread for backend {addr}: {e}");
+        }
+        Ok(BackendLink { addr: addr.to_string(), state })
+    }
+
+    /// Backend address (placement hashes on it).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// True until the link is marked down.
+    pub fn is_up(&self) -> bool {
+        self.lock().down.is_none()
+    }
+
+    /// Did the backend advertise `session` in its hello?
+    pub fn advertises(&self, session: &str) -> bool {
+        self.lock().advertised.iter().any(|s| s == session)
+    }
+
+    /// Session names from the backend's hello (connect-time snapshot).
+    pub fn advertised(&self) -> Vec<String> {
+        self.lock().advertised.clone()
+    }
+
+    /// Load for the placement bias: the probed live-session count.
+    pub fn session_load(&self) -> u64 {
+        self.lock().report.sessions
+    }
+
+    /// Current load/health row (the `up` flag reflects down-marking).
+    pub fn report(&self) -> StatsReport {
+        self.lock().report.clone()
+    }
+
+    /// Forward one request, returning the slot its reply will arrive on.
+    /// The frame is written under the link lock, so concurrent client
+    /// connections serialize here and per-session FIFO order is the
+    /// front's arrival order.
+    pub fn forward(
+        &self,
+        session: &str,
+        request: &Request,
+    ) -> Result<Receiver<Response>, RequestError> {
+        let mut st = self.lock();
+        if let Some(reason) = &st.down {
+            return Err(self.closed(session, reason));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        let msg = encode_client_msg(&ClientMsg::Submit {
+            id,
+            session: session.to_string(),
+            request: request.clone(),
+        });
+        let Some(writer) = st.writer.as_mut() else {
+            return Err(self.closed(session, "connection closed"));
+        };
+        if let Err(e) = write_frame(writer, &msg) {
+            drop(st);
+            let reason = format!("write failed: {e}");
+            self.mark_down(&reason);
+            return Err(self.closed(session, &reason));
+        }
+        let (tx, rx) = channel();
+        st.pending.insert(id, (session.to_string(), tx));
+        Ok(rx)
+    }
+
+    /// Send one health/load probe. A backend that has not answered
+    /// `unanswered_down` earlier probes — or whose socket rejects the
+    /// write — is marked down.
+    pub fn probe(&self, unanswered_down: u32) {
+        let mut st = self.lock();
+        if st.down.is_some() {
+            return;
+        }
+        if st.unanswered_probes >= unanswered_down {
+            let n = st.unanswered_probes;
+            drop(st);
+            self.mark_down(&format!("{n} unanswered health probes"));
+            return;
+        }
+        st.unanswered_probes += 1;
+        let msg = encode_client_msg(&ClientMsg::Stats);
+        let Some(writer) = st.writer.as_mut() else {
+            return;
+        };
+        if let Err(e) = write_frame(writer, &msg) {
+            drop(st);
+            self.mark_down(&format!("probe write failed: {e}"));
+        }
+    }
+
+    /// Mark the link down: fail all in-flight requests with a typed
+    /// `SessionClosed` naming this backend, close the socket so the reply
+    /// thread exits, and flip the report's `up` flag. Idempotent.
+    pub fn mark_down(&self, why: &str) {
+        mark_down(&self.state, &self.addr, why);
+    }
+
+    fn closed(&self, session: &str, reason: &str) -> RequestError {
+        RequestError::SessionClosed {
+            session: session.to_string(),
+            reason: format!("backend {} down: {reason}", self.addr),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, LinkState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+fn mark_down(state: &Arc<Mutex<LinkState>>, addr: &str, why: &str) {
+    let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
+    if st.down.is_some() {
+        return;
+    }
+    st.down = Some(why.to_string());
+    st.report.up = false;
+    if let Some(writer) = st.writer.take() {
+        let _ = writer.shutdown(Shutdown::Both);
+    }
+    let pending = std::mem::take(&mut st.pending);
+    drop(st);
+    for (_, (session, tx)) in pending {
+        let _ = tx.send(Response::Error(RequestError::SessionClosed {
+            session,
+            reason: format!("backend {addr} down: {why}"),
+        }));
+    }
+}
+
+/// Per-link reply router: `Reply` frames complete pending forwards in
+/// order; `Stats` frames refresh the load view. Any read or protocol
+/// error takes the link down with a typed reason.
+fn reply_loop(mut reader: TcpStream, addr: String, state: Arc<Mutex<LinkState>>) {
+    loop {
+        let payload = match read_frame(&mut reader) {
+            Ok(p) => p,
+            Err(e) => {
+                mark_down(&state, &addr, &format!("read failed: {e}"));
+                return;
+            }
+        };
+        match decode_server_msg(&payload) {
+            Ok(ServerMsg::Reply { id, response }) => {
+                let slot = {
+                    let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
+                    st.pending.remove(&id)
+                };
+                if let Some((_, tx)) = slot {
+                    let _ = tx.send(response);
+                }
+            }
+            Ok(ServerMsg::Stats { backends }) => {
+                let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
+                st.unanswered_probes = 0;
+                // a backend reports one row about itself
+                if let Some(row) = backends.into_iter().next() {
+                    st.report.sessions = row.sessions;
+                    st.report.admission = row.admission;
+                }
+            }
+            Ok(ServerMsg::ShuttingDown) => {
+                mark_down(&state, &addr, "backend shutting down");
+                return;
+            }
+            Ok(ServerMsg::Hello { .. }) => {
+                mark_down(&state, &addr, "unexpected mid-stream hello");
+                return;
+            }
+            Err(e) => {
+                mark_down(&state, &addr, &format!("undecodable reply: {e}"));
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Front tier: session-affine routing across `dpp serve` processes
+//! (DESIGN.md §4c).
+//!
+//! `dpp front --listen ADDR --backend A1,A2,…` speaks the client-facing
+//! protocol of `net::NetServer` but owns no coordinator: every session is
+//! *placed* on exactly one backend process and all of its frames forward
+//! over that backend's persistent connection in arrival order — so the
+//! per-session FIFO + descending-λ contract that makes socket responses
+//! bit-identical to in-process ones (DESIGN.md §4b.3) extends across
+//! processes for free.
+//!
+//! The three pieces:
+//!
+//! * [`placement`] — deterministic rendezvous hashing by session name,
+//!   biased by the load view (no RNG, no clock: pure function of name and
+//!   candidates).
+//! * [`BackendLink`] (in `backend`) — one persistent connection per
+//!   backend: id-multiplexed forwarding, reply routing, the control-plane
+//!   `Stats` probe as health check, and typed down-marking.
+//! * [`Front`] (in `server`) — the accept loop, the per-connection
+//!   reader/responder pair, and bounded `Overloaded`-honoring retries.
+//!
+//! Failure semantics are typed end-to-end: a dead backend fails its
+//! sessions with `SessionClosed { reason: "backend … down: …" }` (in
+//! flight and ever after — stateful sessions are never silently
+//! re-homed), while *new* sessions route around it; an exhausted retry
+//! budget propagates `Overloaded { retry_after_ms }` unchanged.
+
+mod backend;
+pub mod placement;
+mod server;
+
+pub use backend::BackendLink;
+pub use server::{Front, FrontConfig, FrontSummary};

@@ -1,0 +1,152 @@
+//! Deterministic session placement — rendezvous hashing with a load bias
+//! (DESIGN.md §4c).
+//!
+//! Every (backend, session) pair gets a pseudo-random score from FNV-1a
+//! over `addr \0 session`; the session goes to the highest *biased* score,
+//! where the bias divides the raw score by `1 + load`. The hash makes
+//! placement independent of backend list order and of every other session;
+//! the integer division makes a backend's win probability shrink roughly
+//! as `1/(1 + load)` without any floating point or RNG — the whole rule is
+//! a pure function of (session name, candidate list), so two fronts with
+//! the same load view place identically, and replacing a candidate only
+//! ever moves the sessions that candidate had won (minimal disruption).
+//!
+//! Placement runs once per session: the front pins the winner in its
+//! routing table and never silently re-homes a stateful session (a dead
+//! backend surfaces as a typed error instead — see [`super::Front`]).
+
+/// One placement candidate: a backend address plus its current load
+/// (live session count from the probe-refreshed view, plus sessions this
+/// front has already placed there between probes).
+#[derive(Debug, Clone)]
+pub struct Candidate<'a> {
+    /// Backend address — the stable identity hashed against the session.
+    pub addr: &'a str,
+    /// Current load; higher load shrinks the candidate's win probability.
+    pub load: u64,
+}
+
+/// FNV-1a 64-bit over `addr \0 session` — the raw rendezvous score.
+pub fn score(addr: &str, session: &str) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in addr.as_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    // separator byte: "ab"+"c" must not collide with "a"+"bc"
+    h = h.wrapping_mul(PRIME);
+    for &b in session.as_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Pick the winning candidate for `session`: highest load-biased score,
+/// first index winning ties. Returns an index into `candidates`, or
+/// `None` when the list is empty.
+pub fn pick(session: &str, candidates: &[Candidate<'_>]) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        let biased = score(c.addr, session) / (1 + c.load);
+        match best {
+            Some((_, b)) if b >= biased => {}
+            _ => best = Some((i, biased)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs() -> Vec<String> {
+        (0..4).map(|i| format!("10.0.0.{i}:7700")).collect()
+    }
+
+    fn even(addrs: &[String]) -> Vec<Candidate<'_>> {
+        addrs.iter().map(|a| Candidate { addr: a, load: 0 }).collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_order_independent() {
+        let addrs = addrs();
+        let cands = even(&addrs);
+        let mut reversed: Vec<Candidate<'_>> = cands.clone();
+        reversed.reverse();
+        for s in 0..100 {
+            let session = format!("tenant-{s}");
+            let a = pick(&session, &cands).unwrap();
+            let b = pick(&session, &reversed).unwrap();
+            assert_eq!(cands[a].addr, reversed[b].addr, "{session}");
+        }
+    }
+
+    #[test]
+    fn every_backend_wins_some_sessions() {
+        let addrs = addrs();
+        let cands = even(&addrs);
+        let mut hits = vec![0usize; cands.len()];
+        for s in 0..200 {
+            hits[pick(&format!("s{s}"), &cands).unwrap()] += 1;
+        }
+        for (i, &h) in hits.iter().enumerate() {
+            assert!(h > 0, "backend {i} never chosen: {hits:?}");
+        }
+    }
+
+    #[test]
+    fn removing_a_loser_does_not_move_a_winner() {
+        // rendezvous minimal disruption: a session placed on A among
+        // {A,B,C,D} stays on A in any subset that still contains A.
+        let addrs = addrs();
+        let cands = even(&addrs);
+        for s in 0..100 {
+            let session = format!("s{s}");
+            let winner = cands[pick(&session, &cands).unwrap()].addr;
+            for drop_idx in 0..cands.len() {
+                if cands[drop_idx].addr == winner {
+                    continue;
+                }
+                let subset: Vec<Candidate<'_>> = cands
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != drop_idx)
+                    .map(|(_, c)| c.clone())
+                    .collect();
+                let now = subset[pick(&session, &subset).unwrap()].addr;
+                assert_eq!(now, winner, "{session} moved when a loser left");
+            }
+        }
+    }
+
+    #[test]
+    fn load_bias_sheds_new_sessions_off_a_loaded_backend() {
+        let addrs = addrs();
+        let balanced = even(&addrs);
+        let mut skewed = even(&addrs);
+        skewed[0].load = 50;
+        let (mut before, mut after) = (0usize, 0usize);
+        for s in 0..300 {
+            let session = format!("s{s}");
+            if balanced[pick(&session, &balanced).unwrap()].addr == addrs[0] {
+                before += 1;
+            }
+            if skewed[pick(&session, &skewed).unwrap()].addr == addrs[0] {
+                after += 1;
+            }
+        }
+        assert!(before > 0);
+        // with a 1/(1+50) bias the loaded backend should win almost nothing
+        assert!(
+            after * 10 < before,
+            "load bias too weak: {after} wins vs {before} unbiased"
+        );
+    }
+
+    #[test]
+    fn empty_candidate_list_yields_none() {
+        assert_eq!(pick("s0", &[]), None);
+    }
+}

@@ -1,0 +1,385 @@
+//! The routing tier itself: `dpp front --listen --backend …`
+//! (DESIGN.md §4c).
+//!
+//! [`Front`] accepts the same framed client protocol as a backend server
+//! and forwards each `Submit` to the one backend its session lives on.
+//! Placement is rendezvous hashing ([`super::placement`]) over the live
+//! backends — preferring, for sessions that already exist somewhere, the
+//! backends that advertised them — biased by the probe-refreshed load
+//! view, and pinned in a routing table on first use: a stateful session
+//! is never silently re-homed.
+//!
+//! Per connection the shape mirrors `net::NetServer`: a reader thread
+//! forwards frames in arrival order (per-backend writes are serialized by
+//! the link lock, so per-session FIFO survives the hop — and with it the
+//! bit-identity contract), and a responder thread completes replies in
+//! submission order. The responder is also where `Overloaded` answers are
+//! retried: each retry waits the backend's deterministic `retry_after_ms`
+//! hint (capped) and re-forwards, up to a bounded budget, after which the
+//! typed error propagates to the client unchanged.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::BackendLink;
+use super::placement::{pick, Candidate};
+use crate::coordinator::{Request, RequestError, Response};
+use crate::net::frame::{read_frame, write_frame};
+use crate::net::wire::{
+    decode_client_msg, encode_server_msg, ClientMsg, ServerMsg, StatsReport, WIRE_VERSION,
+};
+use crate::runtime::timer::Ticker;
+
+/// Accept-loop poll interval (mirrors `net::NetServer`).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Tunables for probing and retry behaviour.
+#[derive(Debug, Clone)]
+pub struct FrontConfig {
+    /// Health/load probe period per backend.
+    pub probe_interval: Duration,
+    /// Consecutive unanswered probes before a backend is marked down.
+    pub unanswered_probes_down: u32,
+    /// `Overloaded` answers retried per request before the error
+    /// propagates typed to the client.
+    pub retry_budget: u32,
+    /// Cap on each retry wait, bounding worst-case added latency to
+    /// `retry_budget × retry_wait_cap_ms` (the backend hint itself is
+    /// deterministic but grows with queue depth).
+    pub retry_wait_cap_ms: u64,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig {
+            probe_interval: Duration::from_millis(500),
+            unanswered_probes_down: 3,
+            retry_budget: 3,
+            retry_wait_cap_ms: 250,
+        }
+    }
+}
+
+/// Counters and final backend rows returned by [`Front::run`].
+#[derive(Debug, Clone)]
+pub struct FrontSummary {
+    /// Submits forwarded (first attempts, not counting retries).
+    pub forwarded: u64,
+    /// Re-forwards triggered by `Overloaded` answers.
+    pub retries: u64,
+    /// Final load/health row per backend, in `--backend` order.
+    pub backends: Vec<StatsReport>,
+}
+
+struct FrontShared {
+    links: Vec<BackendLink>,
+    /// session name → index into `links`; pinned at first placement.
+    placement: Mutex<BTreeMap<String, usize>>,
+    cfg: FrontConfig,
+    forwarded: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl FrontShared {
+    /// Resolve (or make) the placement for `session`. A session already
+    /// pinned keeps its backend even when that backend is down — the
+    /// typed backend-down error surfaces at forward time instead.
+    fn place(&self, session: &str) -> Result<usize, RequestError> {
+        let mut map = self.placement.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(&i) = map.get(session) {
+            return Ok(i);
+        }
+        let up: Vec<usize> =
+            (0..self.links.len()).filter(|&i| self.links[i].is_up()).collect();
+        if up.is_empty() {
+            return Err(RequestError::Disconnected(
+                "front: no live backends".to_string(),
+            ));
+        }
+        // sessions that already live somewhere must route to a holder;
+        // brand-new sessions may go to any live backend
+        let holders: Vec<usize> = up
+            .iter()
+            .copied()
+            .filter(|&i| self.links[i].advertises(session))
+            .collect();
+        let pool = if holders.is_empty() { &up } else { &holders };
+        // load = probed session count + sessions we placed since the probe
+        let mut placed = vec![0u64; self.links.len()];
+        for &i in map.values() {
+            placed[i] += 1;
+        }
+        let cands: Vec<Candidate<'_>> = pool
+            .iter()
+            .map(|&i| Candidate {
+                addr: self.links[i].addr(),
+                load: self.links[i].session_load() + placed[i],
+            })
+            .collect();
+        let Some(k) = pick(session, &cands) else {
+            return Err(RequestError::Disconnected(
+                "front: no live backends".to_string(),
+            ));
+        };
+        let idx = pool[k];
+        map.insert(session.to_string(), idx);
+        Ok(idx)
+    }
+
+    fn forward(
+        &self,
+        session: &str,
+        request: &Request,
+    ) -> Result<Receiver<Response>, RequestError> {
+        let idx = self.place(session)?;
+        self.links[idx].forward(session, request)
+    }
+
+    fn stats_rows(&self) -> Vec<StatsReport> {
+        self.links.iter().map(|l| l.report()).collect()
+    }
+
+    fn probe_all(&self) {
+        for l in &self.links {
+            l.probe(self.cfg.unanswered_probes_down);
+        }
+    }
+
+    /// Union of the backends' advertised sessions, sorted + deduped (the
+    /// front's own hello payload).
+    fn advertised_union(&self) -> Vec<String> {
+        let mut all: Vec<String> =
+            self.links.iter().flat_map(|l| l.advertised()).collect();
+        all.sort();
+        all.dedup();
+        all
+    }
+}
+
+/// A bound, not-yet-running front tier.
+pub struct Front {
+    listener: TcpListener,
+    shared: Arc<FrontShared>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Front {
+    /// Connect to every backend (fail fast if one refuses at startup —
+    /// backends dying *later* are handled by down-marking) and bind the
+    /// client-facing listener.
+    pub fn bind(listen: &str, backends: &[String], cfg: FrontConfig) -> Result<Front> {
+        if backends.is_empty() {
+            bail!("dpp front needs at least one --backend address");
+        }
+        let mut links = Vec::with_capacity(backends.len());
+        for addr in backends {
+            links.push(BackendLink::connect(addr)?);
+        }
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding front listener on {listen}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting front listener non-blocking")?;
+        Ok(Front {
+            listener,
+            shared: Arc::new(FrontShared {
+                links,
+                placement: Mutex::new(BTreeMap::new()),
+                cfg,
+                forwarded: AtomicU64::new(0),
+                retries: AtomicU64::new(0),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound client-facing address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading front listener address")
+    }
+
+    /// Route until a client sends `Shutdown` (which stops the front only —
+    /// backends keep serving and keep their sessions). Returns forwarding
+    /// counters and the final per-backend load view.
+    pub fn run(self) -> FrontSummary {
+        let probe_shared = Arc::clone(&self.shared);
+        let ticker = Ticker::spawn(
+            "dpp-front-probe",
+            self.shared.cfg.probe_interval,
+            move || probe_shared.probe_all(),
+        );
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    let stop = Arc::clone(&self.stop);
+                    if let Err(e) = std::thread::Builder::new()
+                        .name("dpp-front-conn".to_string())
+                        .spawn(move || serve_front_connection(stream, shared, stop))
+                    {
+                        eprintln!("dpp-front: connection thread spawn failed: {e}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => break,
+            }
+        }
+        ticker.stop();
+        FrontSummary {
+            forwarded: self.shared.forwarded.load(Ordering::SeqCst),
+            retries: self.shared.retries.load(Ordering::SeqCst),
+            backends: self.shared.stats_rows(),
+        }
+    }
+}
+
+/// One queued reply handed from the connection's reader to its responder.
+enum FrontReply {
+    /// A forwarded submit: the responder blocks on `rx` (retrying
+    /// `Overloaded` answers) and writes the reply with the client's id.
+    Forwarded { id: u64, session: String, request: Request, rx: Receiver<Response> },
+    /// A submit that failed before reaching a backend (typed error).
+    Ready { id: u64, response: Response },
+    /// Control-plane stats: answered from the front's own load view.
+    Stats,
+    Shutdown,
+}
+
+fn serve_front_connection(
+    stream: TcpStream,
+    shared: Arc<FrontShared>,
+    stop: Arc<AtomicBool>,
+) {
+    let Ok(mut reader) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let client_version = match read_frame(&mut reader).map(|p| decode_client_msg(&p)) {
+        Ok(Ok(ClientMsg::Hello { version })) => version,
+        _ => return,
+    };
+    let hello = encode_server_msg(&ServerMsg::Hello {
+        version: WIRE_VERSION,
+        sessions: shared.advertised_union(),
+    });
+    if write_frame(&mut writer, &hello).is_err() || client_version != WIRE_VERSION {
+        return;
+    }
+
+    let (rtx, rrx) = channel::<FrontReply>();
+    let resp_shared = Arc::clone(&shared);
+    let responder = match std::thread::Builder::new()
+        .name("dpp-front-reply".to_string())
+        .spawn(move || front_respond_loop(writer, rrx, resp_shared))
+    {
+        Ok(handle) => handle,
+        Err(e) => {
+            eprintln!("dpp-front: responder thread spawn failed: {e}");
+            return;
+        }
+    };
+    loop {
+        let Ok(payload) = read_frame(&mut reader) else {
+            break;
+        };
+        match decode_client_msg(&payload) {
+            Ok(ClientMsg::Submit { id, session, request }) => {
+                shared.forwarded.fetch_add(1, Ordering::SeqCst);
+                let item = match shared.forward(&session, &request) {
+                    Ok(rx) => FrontReply::Forwarded { id, session, request, rx },
+                    Err(e) => FrontReply::Ready { id, response: Response::Error(e) },
+                };
+                if rtx.send(item).is_err() {
+                    break;
+                }
+            }
+            Ok(ClientMsg::Stats) => {
+                if rtx.send(FrontReply::Stats).is_err() {
+                    break;
+                }
+            }
+            Ok(ClientMsg::Shutdown) => {
+                let _ = rtx.send(FrontReply::Shutdown);
+                break;
+            }
+            Ok(ClientMsg::Hello { .. }) | Err(_) => break,
+        }
+    }
+    drop(rtx);
+    if responder.join().unwrap_or(false) {
+        stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Complete replies in submission order. `Overloaded` answers are retried
+/// here — the wait honours the backend's deterministic hint (capped), the
+/// attempt budget bounds the total, and exhaustion propagates the typed
+/// error unchanged. Returns true when the connection asked the front to
+/// shut down.
+fn front_respond_loop(
+    mut writer: TcpStream,
+    rrx: Receiver<FrontReply>,
+    shared: Arc<FrontShared>,
+) -> bool {
+    while let Ok(item) = rrx.recv() {
+        match item {
+            FrontReply::Forwarded { id, session, request, mut rx } => {
+                let mut budget = shared.cfg.retry_budget;
+                let response = loop {
+                    let resp = rx.recv().unwrap_or_else(|_| {
+                        Response::Error(RequestError::Disconnected(
+                            "front: backend reply slot vanished".to_string(),
+                        ))
+                    });
+                    let hint = match &resp {
+                        Response::Error(RequestError::Overloaded { retry_after_ms })
+                            if budget > 0 =>
+                        {
+                            *retry_after_ms
+                        }
+                        _ => break resp,
+                    };
+                    budget -= 1;
+                    shared.retries.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(
+                        hint.min(shared.cfg.retry_wait_cap_ms),
+                    ));
+                    match shared.forward(&session, &request) {
+                        Ok(new_rx) => rx = new_rx,
+                        Err(e) => break Response::Error(e),
+                    }
+                };
+                let bytes = encode_server_msg(&ServerMsg::Reply { id, response });
+                if write_frame(&mut writer, &bytes).is_err() {
+                    return false;
+                }
+            }
+            FrontReply::Ready { id, response } => {
+                let bytes = encode_server_msg(&ServerMsg::Reply { id, response });
+                if write_frame(&mut writer, &bytes).is_err() {
+                    return false;
+                }
+            }
+            FrontReply::Stats => {
+                let bytes = encode_server_msg(&ServerMsg::Stats {
+                    backends: shared.stats_rows(),
+                });
+                if write_frame(&mut writer, &bytes).is_err() {
+                    return false;
+                }
+            }
+            FrontReply::Shutdown => {
+                let bytes = encode_server_msg(&ServerMsg::ShuttingDown);
+                let _ = write_frame(&mut writer, &bytes);
+                return true;
+            }
+        }
+    }
+    false
+}

@@ -38,6 +38,13 @@
 //!   `dpp shard-node` + [`net::RemoteShard`] for distributed
 //!   [`linalg::ShardSetMatrix`] shards whose fold results stay
 //!   bit-identical to local execution.
+//! * **Front tier** ([`front`]): `dpp front` — session-affine routing
+//!   across `dpp serve` processes (DESIGN.md §4c): deterministic
+//!   rendezvous placement biased by a probe-refreshed load view
+//!   (`AdmissionStats` over the v3 control-plane `Stats` message),
+//!   per-session FIFO forwarding over persistent backend connections
+//!   (responses stay bit-identical to direct backends), bounded
+//!   `Overloaded`-honoring retries, and typed backend-down semantics.
 //! * **PJRT runtime** ([`runtime`]): loads AOT artifacts (`artifacts/*.hlo.txt`,
 //!   lowered from the JAX/Pallas layers at build time) and executes the
 //!   fixed-shape screening sweep through XLA, with a native fallback.
@@ -89,6 +96,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod front;
 pub mod linalg;
 pub mod net;
 pub mod path;
@@ -107,6 +115,7 @@ pub mod prelude {
     pub use crate::linalg::{
         CscMatrix, DenseMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix,
     };
+    pub use crate::front::{Front, FrontConfig};
     pub use crate::net::{NetClient, NetServer, RemoteShard};
     pub use crate::path::{
         solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathOutput, RuleKind,

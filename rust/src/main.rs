@@ -10,7 +10,11 @@
 //!   serve/bench-serve --max-sessions K --admission depth=D,total=T,ttl-ms=MS
 //!             admission control: registration cap, queue-depth load shedding
 //!             (typed `Overloaded` replies with a retry hint), idle-session TTL
-//!   client    --connect ADDR [--ops K] [--deadline-ms D] [--shutdown]  socket client
+//!   front     --listen ADDR --backend A1,A2,…  session-affine routing tier
+//!             (DESIGN.md §4c): rendezvous placement biased by probed load,
+//!             per-session FIFO forwarding, bounded Overloaded retries
+//!   client    --connect ADDR [--ops K] [--deadline-ms D] [--retry R]
+//!             [--stats] [--shutdown]  socket client (server or front)
 //!   shard-node --listen ADDR --file shard.dppcsc [--in-ram]  host one remote shard
 //!   shard-node --connect ADDR --stop   stop a running shard node
 //!   convert   --file in.svm --out shard.dppcsc [--f32]  stream to an on-disk shard
@@ -63,6 +67,7 @@ fn main() {
         Some("group") => cmd_group(&args),
         Some("service") => cmd_service(&args),
         Some("serve") => cmd_serve(&args),
+        Some("front") => cmd_front(&args),
         Some("client") => cmd_client(&args),
         Some("shard-node") => cmd_shard_node(&args),
         Some("convert") => cmd_convert(&args),
@@ -73,7 +78,7 @@ fn main() {
         Some("audit") => cmd_audit(&args),
         _ => {
             eprintln!(
-                "usage: dpp <info|path|group|service|serve|client|shard-node|convert|shard|bench-screen|bench-serve|exp|audit> [--options]\n\
+                "usage: dpp <info|path|group|service|serve|front|client|shard-node|convert|shard|bench-screen|bench-serve|exp|audit> [--options]\n\
                  \n\
                  dpp path --dataset pie --rule edpp --solver cd --grid 100\n\
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
@@ -89,13 +94,18 @@ fn main() {
                  dpp serve --sessions 3 --max-sessions 8 --admission depth=8,ttl-ms=30000\n\
                  dpp serve --listen 127.0.0.1:7700          # framed TCP server\n\
                  dpp client --connect 127.0.0.1:7700 --ops 12 --deadline-ms 50\n\
+                 dpp client --connect 127.0.0.1:7700 --retry 3   # honor Overloaded hints\n\
+                 dpp client --connect 127.0.0.1:7700 --stats  # per-backend admission stats\n\
                  dpp client --connect 127.0.0.1:7700 --shutdown\n\
+                 dpp front --listen 127.0.0.1:7790 \\\n\
+                           --backend 127.0.0.1:7700,127.0.0.1:7701  # session-affine router\n\
                  dpp shard-node --listen 127.0.0.1:7701 --file data.shards/shard-0000\n\
                  dpp serve --listen :7700 --shard-nodes 127.0.0.1:7701,127.0.0.1:7702 \\\n\
                            --file data.shards   # distributed-shard session `remote`\n\
                  dpp bench-screen --p 4000   # perf baseline -> BENCH_screen.json\n\
                  dpp bench-serve --ops 40    # serving baseline -> BENCH_serve.json\n\
                  dpp bench-serve --listen 127.0.0.1:0   # adds socket-transport rows\n\
+                 dpp bench-serve --front     # adds front-tier routing rows\n\
                  dpp exp fig1        # regenerate a paper figure/table\n\
                  dpp exp all\n\
                  dpp audit           # invariant auditor: determinism/unsafe/wire/panic\n\
@@ -831,6 +841,76 @@ fn register_remote_session(
     Ok((n, p))
 }
 
+/// `dpp front`: the session-affine routing tier (DESIGN.md §4c). Connects
+/// to every `--backend` `dpp serve --listen` process, then routes client
+/// connections: each session is placed on one backend by load-biased
+/// rendezvous hashing and all of its frames forward there in FIFO order
+/// (responses stay bit-identical to a direct backend). Health/load probes
+/// run every `--probe-ms`; `Overloaded` answers are retried up to
+/// `--retry` times per request. Runs until a client sends shutdown —
+/// which stops the front only; backends keep their sessions.
+fn cmd_front(args: &Args) {
+    use dpp_screen::front::{Front, FrontConfig};
+
+    let Some(listen) = args.get("listen") else {
+        eprintln!(
+            "usage: dpp front --listen ADDR --backend A1,A2,… \
+             [--probe-ms MS] [--retry R]"
+        );
+        std::process::exit(2);
+    };
+    let backends: Vec<String> = args
+        .get_or("backend", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if backends.is_empty() {
+        eprintln!("dpp front needs --backend ADDR1[,ADDR2,…]");
+        std::process::exit(2);
+    }
+    let cfg = FrontConfig {
+        probe_interval: std::time::Duration::from_millis(
+            args.get_parse("probe-ms", 500u64).max(1),
+        ),
+        retry_budget: args.get_parse("retry", 3u32),
+        ..FrontConfig::default()
+    };
+    let front = match Front::bind(&listen, &backends, cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("front failed to start: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let addr = front
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| listen.to_string());
+    println!(
+        "front listening on {addr} routing {} backend(s): {} — stop with \
+         `dpp client --connect {addr} --shutdown`",
+        backends.len(),
+        backends.join(" ")
+    );
+    let summary = front.run();
+    for b in &summary.backends {
+        println!(
+            "backend {}: up={} sessions={} {}",
+            b.backend,
+            b.up,
+            b.sessions,
+            b.admission.summary()
+        );
+    }
+    println!(
+        "front forwarded {} request(s), {} overload retr{} — clean shutdown",
+        summary.forwarded,
+        summary.retries,
+        if summary.retries == 1 { "y" } else { "ies" }
+    );
+}
+
 /// `dpp shard-node`: host one shard of a shard set for a remote
 /// [`ShardSetMatrix`] (DESIGN.md §4b.4), or stop a running node with
 /// `--connect ADDR --stop`. The shard serves its slice over the fold RPCs
@@ -896,18 +976,22 @@ fn cmd_shard_node(args: &Args) {
     }
 }
 
-/// `dpp client`: drive a `dpp serve --listen` server over the socket with
-/// the same mixed Screen/Predict/Warm/FitPath workload as the in-process
-/// demo, then optionally (`--shutdown`) stop the server. λ values come
-/// from the session's own `SessionStats` (λmax lives server-side).
+/// `dpp client`: drive a `dpp serve --listen` server (or a `dpp front`
+/// router — the protocol is identical) over the socket with the same mixed
+/// Screen/Predict/Warm/FitPath workload as the in-process demo, then
+/// optionally (`--shutdown`) stop it. λ values come from the session's own
+/// `SessionStats` (λmax lives server-side). `--stats` prints one
+/// control-plane row per backend (a plain server reports itself as
+/// `self`); `--retry R` re-submits `Overloaded` answers up to R times,
+/// waiting the server's deterministic hint when a deadline budget exists.
 fn cmd_client(args: &Args) {
-    use dpp_screen::coordinator::{Request, RequestOptions, Response};
+    use dpp_screen::coordinator::{Request, RequestError, RequestOptions, Response};
     use dpp_screen::net::NetClient;
 
     let Some(addr) = args.get("connect") else {
         eprintln!(
             "usage: dpp client --connect ADDR [--session NAME] [--ops K] \
-             [--deadline-ms D] [--shutdown]"
+             [--deadline-ms D] [--retry R] [--stats] [--shutdown]"
         );
         std::process::exit(2);
     };
@@ -919,7 +1003,29 @@ fn cmd_client(args: &Args) {
         }
     };
     println!("connected to {addr}; sessions: {}", client.sessions().join(" "));
-    let ops = args.get_parse("ops", if args.flag("shutdown") { 0usize } else { 12usize });
+    if args.flag("stats") {
+        match client.stats() {
+            Ok(rows) => {
+                for r in &rows {
+                    let who = if r.backend.is_empty() { "self" } else { r.backend.as_str() };
+                    println!(
+                        "backend {who}: up={} sessions={} {}",
+                        r.up,
+                        r.sessions,
+                        r.admission.summary()
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("stats failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let default_ops =
+        if args.flag("shutdown") || args.flag("stats") { 0usize } else { 12usize };
+    let ops = args.get_parse("ops", default_ops);
+    let retries = args.get_parse("retry", 0u32);
     let deadline_ms = args.get_parse("deadline-ms", 0u64);
     let mut partials = 0usize;
     let mut errors = 0usize;
@@ -934,8 +1040,21 @@ fn cmd_client(args: &Args) {
                 }
             },
         };
-        let (lam_max, p) = match client.request(&session, Request::SessionStats) {
+        let (lam_max, p) = match client.request_with_retry(
+            &session,
+            Request::SessionStats,
+            retries,
+        ) {
             Ok(Response::Stats(st)) => (st.lam_max, st.p),
+            // a server shedding everything still gets driven: each op
+            // surfaces the typed error below instead of aborting here
+            Ok(Response::Error(RequestError::Overloaded { .. })) => {
+                println!(
+                    "session stats for `{session}` shed by admission control; \
+                     driving anyway"
+                );
+                (1.0, 1)
+            }
             Ok(Response::Error(e)) | Err(e) => {
                 eprintln!("session stats for `{session}` failed: {e}");
                 std::process::exit(2);
@@ -962,7 +1081,7 @@ fn cmd_client(args: &Args) {
                 5 => Request::FitPath { grid: 5, lo: 0.2, opts },
                 _ => Request::Screen { lam, opts },
             };
-            match client.request(&session, request) {
+            match client.request_with_retry(&session, request, retries) {
                 Ok(Response::Screen(r)) => {
                     if r.partial {
                         partials += 1;
@@ -1318,6 +1437,277 @@ fn cmd_bench_serve(args: &Args) {
                 format!("1+{light}"),
                 format!("heavy-tenant:{class}"),
                 "inproc".to_string(),
+                lat.len().to_string(),
+                format!("{:.1}", lat.len() as f64 / wall.max(1e-12)),
+                format!("{:.2}ms", p50 * 1e3),
+                format!("{:.2}ms", p95 * 1e3),
+                format!("{:.2}ms", p99 * 1e3),
+            ]);
+        }
+    }
+
+    // --front: the same workloads again through the routing tier
+    // (DESIGN.md §4c). The one-backend rows price the extra hop against a
+    // direct socket client on the *same* server process; the two-backend
+    // rows rerun the heavy-tenant scenario with the heavy session on its
+    // own backend process, where the light-class p99 shows what
+    // cross-process placement buys on top of per-session queues.
+    if args.flag("front") {
+        use dpp_screen::front::{Front, FrontConfig};
+        use dpp_screen::net::{NetClient, NetServer};
+
+        // one backend: direct socket vs through the front
+        let sc = max_sessions;
+        let pipe = ScreenPipeline::parse("edpp").expect("bench pipeline");
+        let coord = Coordinator::with_config(None, admission.clone());
+        for (i, (csc, y, _)) in datasets.iter().take(sc).enumerate() {
+            coord
+                .register(
+                    SessionSpec::new(
+                        format!("s{i}"),
+                        csc.clone(),
+                        y.clone(),
+                        pipe.clone(),
+                        SolverKind::Cd,
+                        PathConfig::default(),
+                    )
+                    .with_backend_label("csc"),
+                )
+                .expect("bench session");
+        }
+        let server =
+            NetServer::bind(coord, "127.0.0.1:0").expect("bench front backend");
+        let backend_addr =
+            server.local_addr().expect("bench backend address").to_string();
+        let backend = std::thread::spawn(move || server.run());
+        let front =
+            Front::bind("127.0.0.1:0", &[backend_addr.clone()], FrontConfig::default())
+                .expect("bench front");
+        let front_addr = front.local_addr().expect("bench front address").to_string();
+        let router = std::thread::spawn(move || front.run());
+        for (transport, dial) in
+            [("socket-direct", backend_addr.clone()), ("front", front_addr.clone())]
+        {
+            let mut client = match NetClient::connect(&dial) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("bench-serve front client: {e:#}");
+                    std::process::exit(2);
+                }
+            };
+            // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+            let t0 = std::time::Instant::now();
+            let mut latencies: Vec<f64> = Vec::with_capacity(ops);
+            for k in 0..ops {
+                let i = k % sc;
+                let f = 0.05 + 0.9 * ((k * 7919) % ops) as f64 / ops as f64;
+                let lam = f * datasets[i].2;
+                // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+                let t = std::time::Instant::now();
+                let resp = client.request(
+                    &format!("s{i}"),
+                    Request::Screen { lam, opts: RequestOptions::default() },
+                );
+                latencies.push(t.elapsed().as_secs_f64());
+                match resp {
+                    Ok(dpp_screen::coordinator::Response::Screen(_)) => {}
+                    Ok(dpp_screen::coordinator::Response::Error(
+                        RequestError::Overloaded { .. },
+                    ))
+                    | Err(RequestError::Overloaded { .. }) => {}
+                    other => {
+                        eprintln!("bench-serve front op {k}: {other:?}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            drop(client); // keep the server up for the next transport
+            let throughput = ops as f64 / wall.max(1e-12);
+            let (p50, p95, p99) = (
+                dpp_screen::util::stats::quantile(&latencies, 0.50),
+                dpp_screen::util::stats::quantile(&latencies, 0.95),
+                dpp_screen::util::stats::quantile(&latencies, 0.99),
+            );
+            cases.push(format!(
+                "    {{\"scenario\": \"front\", \"backends\": 1, \
+                 \"sessions\": {sc}, \"pipeline\": \"edpp\", \
+                 \"transport\": \"{transport}\", \"ops\": {ops}, \
+                 \"wall_secs\": {wall:.6}, \"throughput_rps\": {throughput:.3}, \
+                 \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            ));
+            rep.row(&[
+                sc.to_string(),
+                "edpp".to_string(),
+                transport.to_string(),
+                ops.to_string(),
+                format!("{throughput:.1}"),
+                format!("{:.2}ms", p50 * 1e3),
+                format!("{:.2}ms", p95 * 1e3),
+                format!("{:.2}ms", p99 * 1e3),
+            ]);
+        }
+        match NetClient::connect(&front_addr) {
+            Ok(c) => c.shutdown_server().expect("bench front shutdown"),
+            Err(e) => {
+                eprintln!("bench-serve front shutdown: {e:#}");
+                std::process::exit(2);
+            }
+        }
+        let _ = router.join();
+        match NetClient::connect(&backend_addr) {
+            Ok(c) => c.shutdown_server().expect("bench backend shutdown"),
+            Err(e) => {
+                eprintln!("bench-serve backend shutdown: {e:#}");
+                std::process::exit(2);
+            }
+        }
+        let _ = backend.join();
+
+        // two backends: heavy tenant on its own process, light sessions on
+        // the other; one pipelined client drives both through the front
+        let light = datasets.len().min(3);
+        let (heavy_csc, heavy_y, _) = bench_problem(n, 10 * p, density, 7900);
+        let heavy_lam = dpp_screen::solver::dual::lambda_max(&heavy_csc, &heavy_y);
+        let coord_a = Coordinator::with_config(None, admission.clone());
+        coord_a
+            .register(
+                SessionSpec::new(
+                    "heavy",
+                    ShardSetMatrix::split_csc(&heavy_csc, 4),
+                    heavy_y,
+                    ScreenPipeline::parse("edpp").expect("bench pipeline"),
+                    SolverKind::Cd,
+                    PathConfig::default(),
+                )
+                .with_backend_label("sharded"),
+            )
+            .expect("bench session");
+        let coord_b = Coordinator::with_config(None, admission.clone());
+        for (i, (csc, y, _)) in datasets.iter().take(light).enumerate() {
+            coord_b
+                .register(
+                    SessionSpec::new(
+                        format!("s{i}"),
+                        csc.clone(),
+                        y.clone(),
+                        ScreenPipeline::parse("edpp").expect("bench pipeline"),
+                        SolverKind::Cd,
+                        PathConfig::default(),
+                    )
+                    .with_backend_label("csc"),
+                )
+                .expect("bench session");
+        }
+        let srv_a =
+            NetServer::bind(coord_a, "127.0.0.1:0").expect("bench front backend");
+        let addr_a = srv_a.local_addr().expect("bench backend address").to_string();
+        let join_a = std::thread::spawn(move || srv_a.run());
+        let srv_b =
+            NetServer::bind(coord_b, "127.0.0.1:0").expect("bench front backend");
+        let addr_b = srv_b.local_addr().expect("bench backend address").to_string();
+        let join_b = std::thread::spawn(move || srv_b.run());
+        let front = Front::bind(
+            "127.0.0.1:0",
+            &[addr_a.clone(), addr_b.clone()],
+            FrontConfig::default(),
+        )
+        .expect("bench front");
+        let front_addr = front.local_addr().expect("bench front address").to_string();
+        let router = std::thread::spawn(move || front.run());
+        let mut client = match NetClient::connect(&front_addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("bench-serve front client: {e:#}");
+                std::process::exit(2);
+            }
+        };
+        let total_ops = 2 * ops;
+        // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+        let t0 = std::time::Instant::now();
+        let mut classes = Vec::with_capacity(total_ops);
+        for k in 0..total_ops {
+            let slot = k % (light + 1);
+            let (name, lam_max) = if slot == 0 {
+                ("heavy".to_string(), heavy_lam)
+            } else {
+                (format!("s{}", slot - 1), datasets[slot - 1].2)
+            };
+            let f = 0.05 + 0.9 * ((k * 7919) % total_ops) as f64 / total_ops as f64;
+            match client.submit(
+                &name,
+                Request::Screen { lam: f * lam_max, opts: RequestOptions::default() },
+            ) {
+                Ok(_) => classes.push(slot == 0),
+                Err(e) => {
+                    eprintln!("bench-serve front heavy-tenant submit: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        let mut heavy_lat: Vec<f64> = Vec::new();
+        let mut light_lat: Vec<f64> = Vec::new();
+        let mut shed = 0usize;
+        for &is_heavy in &classes {
+            match client.recv_reply() {
+                Ok((_, dpp_screen::coordinator::Response::Screen(r))) => {
+                    if is_heavy {
+                        heavy_lat.push(r.latency_s);
+                    } else {
+                        light_lat.push(r.latency_s);
+                    }
+                }
+                Ok((
+                    _,
+                    dpp_screen::coordinator::Response::Error(
+                        RequestError::Overloaded { .. },
+                    ),
+                )) => shed += 1,
+                other => {
+                    eprintln!("bench-serve front heavy-tenant reply: {other:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        client.shutdown_server().expect("bench front shutdown");
+        let _ = router.join();
+        for addr in [addr_a, addr_b] {
+            match NetClient::connect(&addr) {
+                Ok(c) => c.shutdown_server().expect("bench backend shutdown"),
+                Err(e) => {
+                    eprintln!("bench-serve backend shutdown: {e:#}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        let _ = join_a.join();
+        let _ = join_b.join();
+        for (class, lat) in [("heavy", &heavy_lat), ("light", &light_lat)] {
+            let (p50, p95, p99) = (
+                dpp_screen::util::stats::quantile(lat, 0.50),
+                dpp_screen::util::stats::quantile(lat, 0.95),
+                dpp_screen::util::stats::quantile(lat, 0.99),
+            );
+            cases.push(format!(
+                "    {{\"scenario\": \"heavy-tenant\", \"class\": \"{class}\", \
+                 \"backends\": 2, \"sessions\": {}, \"pipeline\": \"edpp\", \
+                 \"transport\": \"front\", \"ops\": {}, \"shed\": {shed}, \
+                 \"wall_secs\": {wall:.6}, \
+                 \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+                light + 1,
+                lat.len(),
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            ));
+            rep.row(&[
+                format!("1+{light}"),
+                format!("heavy-tenant:{class}"),
+                "front".to_string(),
                 lat.len().to_string(),
                 format!("{:.1}", lat.len() as f64 / wall.max(1e-12)),
                 format!("{:.2}ms", p50 * 1e3),

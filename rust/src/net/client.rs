@@ -10,11 +10,14 @@
 //! socket and a dead router identically.
 
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use super::frame::{read_frame, write_frame};
-use super::wire::{decode_server_msg, encode_client_msg, ClientMsg, ServerMsg, WIRE_VERSION};
+use super::wire::{
+    decode_server_msg, encode_client_msg, ClientMsg, ServerMsg, StatsReport, WIRE_VERSION,
+};
 use crate::coordinator::{Request, RequestError, Response};
 
 /// A connected client: one TCP stream, monotonically increasing request
@@ -87,6 +90,9 @@ impl NetClient {
             Ok(ServerMsg::Hello { .. }) => {
                 Err(disconnected("unexpected mid-stream hello from server".to_string()))
             }
+            Ok(ServerMsg::Stats { .. }) => {
+                Err(disconnected("unsolicited stats report from server".to_string()))
+            }
             Err(e) => Err(disconnected(format!("decoding reply: {e}"))),
         }
     }
@@ -103,6 +109,69 @@ impl NetClient {
         Ok(response)
     }
 
+    /// Blocking round trip with admission-shed retries: a typed
+    /// `Overloaded { retry_after_ms }` answer is retried up to
+    /// `max_retries` times, then propagates typed to the caller.
+    ///
+    /// The retry is deterministic and bounded: the attempt count is the
+    /// budget, and the server's `retry_after_ms` hint is itself a pure
+    /// function of queue depth. Wall time is spent **only** when the
+    /// request already carries a deadline budget — a clock-free request
+    /// (no deadline) retries immediately, so the clock-free path stays
+    /// clock-free; with a deadline, each wait is the hint capped by that
+    /// deadline.
+    pub fn request_with_retry(
+        &mut self,
+        session: &str,
+        request: Request,
+        max_retries: u32,
+    ) -> Result<Response, RequestError> {
+        let budget = match &request {
+            Request::Screen { opts, .. }
+            | Request::FitPath { opts, .. }
+            | Request::Predict { opts, .. } => opts.deadline,
+            Request::Warm { .. } | Request::SessionStats => None,
+        };
+        let mut attempt = 0u32;
+        loop {
+            let response = self.request(session, request.clone())?;
+            let hint = match &response {
+                Response::Error(RequestError::Overloaded { retry_after_ms }) => {
+                    *retry_after_ms
+                }
+                _ => return Ok(response),
+            };
+            if attempt >= max_retries {
+                return Ok(response); // typed Overloaded propagates to the caller
+            }
+            attempt += 1;
+            if let Some(deadline) = budget {
+                std::thread::sleep(Duration::from_millis(hint).min(deadline));
+            }
+        }
+    }
+
+    /// Control-plane probe: ask the server for its load/health rows
+    /// ([`StatsReport`] per backend — one row from a `dpp serve` process,
+    /// one per configured backend from a `dpp front`). Must not be called
+    /// with pipelined submissions outstanding: replies are FIFO, so the
+    /// next frame after the probe is its answer.
+    pub fn stats(&mut self) -> Result<Vec<StatsReport>, RequestError> {
+        let msg = encode_client_msg(&ClientMsg::Stats);
+        write_frame(&mut self.stream, &msg)
+            .map_err(|e| disconnected(format!("sending stats probe: {e}")))?;
+        let payload = read_frame(&mut self.stream)
+            .map_err(|e| disconnected(format!("reading stats report: {e}")))?;
+        match decode_server_msg(&payload) {
+            Ok(ServerMsg::Stats { backends }) => Ok(backends),
+            Ok(other) => Err(disconnected(format!(
+                "expected a stats report, got {other:?} — \
+                 stats() with pipelined submissions outstanding?"
+            ))),
+            Err(e) => Err(disconnected(format!("decoding stats report: {e}"))),
+        }
+    }
+
     /// Ask the server to shut down; returns once it acknowledges (any
     /// still-pipelined replies are drained first).
     pub fn shutdown_server(mut self) -> Result<()> {
@@ -113,7 +182,7 @@ impl NetClient {
                 read_frame(&mut self.stream).context("waiting for shutdown ack")?;
             match decode_server_msg(&payload).context("decoding shutdown ack")? {
                 ServerMsg::ShuttingDown => return Ok(()),
-                ServerMsg::Reply { .. } => continue,
+                ServerMsg::Reply { .. } | ServerMsg::Stats { .. } => continue,
                 ServerMsg::Hello { .. } => bail!("unexpected mid-stream hello from server"),
             }
         }

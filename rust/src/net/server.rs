@@ -27,7 +27,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::frame::{read_frame, write_frame};
-use super::wire::{decode_client_msg, encode_server_msg, ClientMsg, ServerMsg, WIRE_VERSION};
+use super::wire::{
+    decode_client_msg, encode_server_msg, ClientMsg, ServerMsg, StatsReport, WIRE_VERSION,
+};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::coordinator::{Coordinator, PendingResponse, Response};
 
@@ -64,11 +66,18 @@ impl NetServer {
     }
 
     /// Serve connections until a client sends [`ClientMsg::Shutdown`], then
-    /// close every session and return its metrics in registration order.
+    /// sever every remaining connection (so peers holding persistent links —
+    /// a `dpp front` in particular — observe the shutdown as EOF instead of
+    /// blocking on a zombie socket), close every session, and return its
+    /// metrics in registration order.
     pub fn run(self) -> Vec<(String, ServiceMetrics)> {
+        let conns: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
         while !self.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
+                    if let Ok(dup) = stream.try_clone() {
+                        conns.lock().unwrap_or_else(|e| e.into_inner()).push(dup);
+                    }
                     let coord = Arc::clone(&self.coord);
                     let stop = Arc::clone(&self.stop);
                     // detached: a connection thread blocked on an idle
@@ -89,6 +98,11 @@ impl NetServer {
                 Err(_) => break,
             }
         }
+        // the handles accumulate for the server's lifetime (already-closed
+        // sockets just fail the shutdown call harmlessly)
+        for s in conns.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
         let coord = self.coord.lock().unwrap_or_else(|e| e.into_inner());
         let mut out = Vec::new();
         for name in coord.sessions() {
@@ -104,6 +118,9 @@ impl NetServer {
 /// to the responder thread.
 enum ConnReply {
     Reply { id: u64, slot: PendingResponse },
+    /// Control-plane stats row, snapshotted at decode time; queued through
+    /// the same channel so it stays FIFO with pipelined replies.
+    Stats(StatsReport),
     Shutdown,
 }
 
@@ -147,6 +164,20 @@ fn serve_connection(stream: TcpStream, coord: Arc<Mutex<Coordinator>>, stop: Arc
                     break; // responder lost its socket
                 }
             }
+            Ok(ClientMsg::Stats) => {
+                let report = {
+                    let c = coord.lock().unwrap_or_else(|e| e.into_inner());
+                    StatsReport {
+                        backend: String::new(), // "" = this process
+                        up: true,
+                        sessions: c.sessions().len() as u64,
+                        admission: c.admission_stats(),
+                    }
+                };
+                if rtx.send(ConnReply::Stats(report)).is_err() {
+                    break;
+                }
+            }
             Ok(ClientMsg::Shutdown) => {
                 let _ = rtx.send(ConnReply::Shutdown);
                 break;
@@ -172,6 +203,12 @@ fn respond_loop(mut writer: TcpStream, rrx: Receiver<ConnReply>) -> bool {
                 let bytes = encode_server_msg(&ServerMsg::Reply { id, response });
                 if write_frame(&mut writer, &bytes).is_err() {
                     return false; // peer hung up; drop remaining replies
+                }
+            }
+            ConnReply::Stats(report) => {
+                let bytes = encode_server_msg(&ServerMsg::Stats { backends: vec![report] });
+                if write_frame(&mut writer, &bytes).is_err() {
+                    return false;
                 }
             }
             ConnReply::Shutdown => {

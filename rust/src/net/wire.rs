@@ -17,8 +17,8 @@
 use std::time::Duration;
 
 use crate::coordinator::{
-    PathSummary, Prediction, Request, RequestError, RequestOptions, Response,
-    ScreenResponse, ServiceMetrics, SessionStats, WarmResponse,
+    AdmissionStats, PathSummary, Prediction, Request, RequestError, RequestOptions,
+    Response, ScreenResponse, ServiceMetrics, SessionStats, WarmResponse,
 };
 use crate::path::SolverKind;
 use crate::screening::{ScreenPipeline, StageCount};
@@ -29,7 +29,12 @@ use crate::util::stats::OnlineStats;
 /// v2: `RequestOptions` gained the per-request solver override, and
 /// `RequestError` gained `Overloaded` (tag 6) for admission-control load
 /// shedding.
-pub const WIRE_VERSION: u32 = 2;
+///
+/// v3: control plane — `ClientMsg::Stats` (tag 3) and `ServerMsg::Stats`
+/// (tag 3) carry per-backend [`StatsReport`] rows (`AdmissionStats` +
+/// session count + liveness), the load/health signal the front tier
+/// routes on.
+pub const WIRE_VERSION: u32 = 3;
 
 /// Message tag bytes — the committed grammar surface. `rust/wire.lock` is
 /// the golden copy; `dpp audit` re-parses this module and fails on tag
@@ -61,10 +66,12 @@ pub mod tag {
     pub const CLIENT_HELLO: u8 = 0;
     pub const CLIENT_SUBMIT: u8 = 1;
     pub const CLIENT_SHUTDOWN: u8 = 2;
+    pub const CLIENT_STATS: u8 = 3;
     // ServerMsg (`encode_server_msg`/`decode_server_msg`)
     pub const SERVER_HELLO: u8 = 0;
     pub const SERVER_REPLY: u8 = 1;
     pub const SERVER_SHUTTING_DOWN: u8 = 2;
+    pub const SERVER_STATS: u8 = 3;
 }
 
 /// Typed decode failure: truncated buffer, unknown tag, bad UTF-8, or a
@@ -94,6 +101,27 @@ pub enum ClientMsg {
     Submit { id: u64, session: String, request: Request },
     /// Ask the server to shut down (drains in-flight replies first).
     Shutdown,
+    /// Control-plane probe (v3): ask for admission counters and session
+    /// count. Doubles as the health check — a backend that cannot answer
+    /// it is down. Answered in FIFO order with the pipelined replies.
+    Stats,
+}
+
+/// One serving process's load/health row inside [`ServerMsg::Stats`].
+///
+/// A backend answering directly reports one row about itself with an
+/// empty `backend` name; the front tier answers one row per configured
+/// backend, named by address, from its probe-refreshed load view.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatsReport {
+    /// Backend address ("" when a server reports about itself).
+    pub backend: String,
+    /// False once the reporter has marked this backend down.
+    pub up: bool,
+    /// Registered (live) session count.
+    pub sessions: u64,
+    /// Admission counters (submitted / shed / evicted sessions).
+    pub admission: AdmissionStats,
 }
 
 /// Server → client messages.
@@ -105,6 +133,8 @@ pub enum ServerMsg {
     Reply { id: u64, response: Response },
     /// Acknowledges [`ClientMsg::Shutdown`]; the server closes after this.
     ShuttingDown,
+    /// Answer to [`ClientMsg::Stats`] (v3): one row per known backend.
+    Stats { backends: Vec<StatsReport> },
 }
 
 // ---------------------------------------------------------------------------
@@ -626,6 +656,7 @@ pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
             enc_request(&mut e, request);
         }
         ClientMsg::Shutdown => e.u8(tag::CLIENT_SHUTDOWN),
+        ClientMsg::Stats => e.u8(tag::CLIENT_STATS),
     }
     e.0
 }
@@ -641,6 +672,7 @@ pub fn decode_client_msg(buf: &[u8]) -> Result<ClientMsg, WireError> {
             request: dec_request(&mut d)?,
         },
         tag::CLIENT_SHUTDOWN => ClientMsg::Shutdown,
+        tag::CLIENT_STATS => ClientMsg::Stats,
         t => return err(format!("bad ClientMsg tag {t}")),
     };
     d.finish()?;
@@ -665,6 +697,18 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
             enc_response(&mut e, response);
         }
         ServerMsg::ShuttingDown => e.u8(tag::SERVER_SHUTTING_DOWN),
+        ServerMsg::Stats { backends } => {
+            e.u8(tag::SERVER_STATS);
+            e.u32(backends.len() as u32);
+            for b in backends {
+                e.str(&b.backend);
+                e.bool(b.up);
+                e.u64(b.sessions);
+                e.u64(b.admission.submitted);
+                e.u64(b.admission.shed);
+                e.u64(b.admission.evicted);
+            }
+        }
     }
     e.0
 }
@@ -686,6 +730,23 @@ pub fn decode_server_msg(buf: &[u8]) -> Result<ServerMsg, WireError> {
             ServerMsg::Reply { id: d.u64()?, response: dec_response(&mut d)? }
         }
         tag::SERVER_SHUTTING_DOWN => ServerMsg::ShuttingDown,
+        tag::SERVER_STATS => {
+            let n = d.u32()? as usize;
+            let mut backends = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                backends.push(StatsReport {
+                    backend: d.str()?,
+                    up: d.bool()?,
+                    sessions: d.u64()?,
+                    admission: AdmissionStats {
+                        submitted: d.u64()?,
+                        shed: d.u64()?,
+                        evicted: d.u64()?,
+                    },
+                });
+            }
+            ServerMsg::Stats { backends }
+        }
         t => return err(format!("bad ServerMsg tag {t}")),
     };
     d.finish()?;
@@ -942,6 +1003,7 @@ mod tests {
                 request: Request::Warm { lam: 0.5 },
             },
             ClientMsg::Shutdown,
+            ClientMsg::Stats,
         ];
         for m in &msgs {
             let got = decode_client_msg(&encode_client_msg(m)).unwrap();
@@ -954,6 +1016,22 @@ mod tests {
                 response: Response::Error(RequestError::UnknownSession("x".into())),
             },
             ServerMsg::ShuttingDown,
+            ServerMsg::Stats {
+                backends: vec![
+                    StatsReport {
+                        backend: String::new(),
+                        up: true,
+                        sessions: 3,
+                        admission: AdmissionStats { submitted: 41, shed: 2, evicted: 1 },
+                    },
+                    StatsReport {
+                        backend: "127.0.0.1:7711".into(),
+                        up: false,
+                        sessions: 0,
+                        admission: AdmissionStats::default(),
+                    },
+                ],
+            },
         ];
         for m in &msgs {
             let got = decode_server_msg(&encode_server_msg(m)).unwrap();

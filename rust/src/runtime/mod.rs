@@ -22,6 +22,7 @@
 
 pub mod pool;
 pub mod scheduler;
+pub mod timer;
 
 use std::path::{Path, PathBuf};
 

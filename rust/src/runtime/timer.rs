@@ -1,0 +1,102 @@
+//! Repeating background timer — the front tier's probe clock.
+//!
+//! [`Ticker::spawn`] runs a callback every `interval` on a named thread
+//! until the ticker is dropped (or [`Ticker::stop`] is called). The wait is
+//! a `recv_timeout` on the stop channel, so shutdown is immediate — a stop
+//! never waits out the remainder of an interval — and the module never
+//! reads a wall clock itself (the interval is the only time input), so it
+//! stays out of the determinism lint's way.
+
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A background thread invoking a callback at a fixed period.
+pub struct Ticker {
+    stop: Option<Sender<()>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Ticker {
+    /// Start a ticker thread named `name` calling `tick` every `interval`.
+    /// The first call happens one full interval after spawn.
+    pub fn spawn(
+        name: &str,
+        interval: Duration,
+        mut tick: impl FnMut() + Send + 'static,
+    ) -> Ticker {
+        let (stop, rx) = channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || loop {
+                match rx.recv_timeout(interval) {
+                    Err(RecvTimeoutError::Timeout) => tick(),
+                    // explicit stop or the Ticker was dropped
+                    Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+                }
+            })
+            .ok();
+        Ticker { stop: Some(stop), handle }
+    }
+
+    /// Stop the ticker and join its thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if let Some(stop) = self.stop.take() {
+            let _ = stop.send(());
+        }
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Ticker {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::channel as mk_channel;
+    use std::sync::Arc;
+
+    #[test]
+    fn ticks_repeatedly_until_stopped() {
+        let (tx, rx) = mk_channel();
+        let ticker = Ticker::spawn("test-ticker", Duration::from_millis(5), move || {
+            let _ = tx.send(());
+        });
+        // at least three ticks arrive
+        for _ in 0..3 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        ticker.stop();
+        // after stop + drain, no further ticks
+        while rx.try_recv().is_ok() {}
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(rx.try_recv().is_err(), "ticker kept firing after stop");
+    }
+
+    #[test]
+    fn drop_stops_the_thread() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        let ticker = Ticker::spawn("test-drop", Duration::from_millis(5), move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        while count.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        drop(ticker); // joins: no tick can be in flight afterwards
+        let after = count.load(Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(count.load(Ordering::SeqCst), after);
+    }
+}

@@ -938,3 +938,346 @@ fn fista_session_serves_and_solver_override_round_trips() {
     assert!(after.gap <= 1e-6);
     coord.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// Front tier (DESIGN.md §4c): session-affine routing across server processes
+// ---------------------------------------------------------------------------
+
+/// Register three standard sessions (distinct datasets and pipelines) on a
+/// fresh coordinator, keeping the fixtures identical across backends.
+fn front_fixture() -> Vec<(CscMatrix, Vec<f64>, f64)> {
+    vec![sparse_problem(30, 120, 81), sparse_problem(35, 140, 82), sparse_problem(28, 100, 83)]
+}
+
+fn front_register(coord: &Coordinator, fixtures: &[(CscMatrix, Vec<f64>, f64)], which: &[usize]) {
+    let pipelines = [
+        ScreenPipeline::single("edpp"),
+        ScreenPipeline::parse("hybrid:strong+edpp").unwrap(),
+        ScreenPipeline::parse("dynamic:edpp").unwrap(),
+    ];
+    for &i in which {
+        let (csc, y, _) = &fixtures[i];
+        coord
+            .register(SessionSpec::new(
+                format!("s{i}"),
+                csc.clone(),
+                y.clone(),
+                pipelines[i].clone(),
+                SolverKind::Cd,
+                PathConfig::default(),
+            ))
+            .unwrap();
+    }
+}
+
+/// One backend: the interleaved multi-session program answered through a
+/// `Front` is bit-identical, reply for reply, to the same program against
+/// an identical backend over a direct socket — the routing hop adds no
+/// observable behaviour.
+#[test]
+fn front_single_backend_bit_identical_to_direct_socket() {
+    use dpp_screen::front::{Front, FrontConfig};
+    use dpp_screen::net::{NetClient, NetServer};
+
+    let fixtures = front_fixture();
+    let programs: Vec<Vec<Request>> = fixtures
+        .iter()
+        .map(|(csc, _, lm)| session_program(*lm, csc.n_cols()))
+        .collect();
+
+    let run = |mut client: NetClient| -> Vec<Response> {
+        let mut order = Vec::new();
+        for step in 0..programs[0].len() {
+            for (i, program) in programs.iter().enumerate() {
+                let id = client.submit(&format!("s{i}"), program[step].clone()).unwrap();
+                order.push(id);
+            }
+        }
+        let out: Vec<Response> = order
+            .iter()
+            .map(|&id| {
+                let (got, response) = client.recv_reply().unwrap();
+                assert_eq!(got, id, "replies arrive in submission order");
+                response
+            })
+            .collect();
+        client.shutdown_server().unwrap();
+        out
+    };
+
+    // direct: client → backend socket
+    let direct = Coordinator::new();
+    front_register(&direct, &fixtures, &[0, 1, 2]);
+    let server = NetServer::bind(direct, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let want = run(NetClient::connect(&addr).unwrap());
+    server_thread.join().unwrap();
+
+    // routed: client → front → identical backend
+    let behind = Coordinator::new();
+    front_register(&behind, &fixtures, &[0, 1, 2]);
+    let server = NetServer::bind(behind, "127.0.0.1:0").unwrap();
+    let backend_addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let front =
+        Front::bind("127.0.0.1:0", &[backend_addr.clone()], FrontConfig::default()).unwrap();
+    let front_addr = front.local_addr().unwrap().to_string();
+    let front_thread = std::thread::spawn(move || front.run());
+
+    let client = NetClient::connect(&front_addr).unwrap();
+    let advertised: Vec<&str> = client.sessions().iter().map(|s| s.as_str()).collect();
+    assert_eq!(advertised, ["s0", "s1", "s2"], "front hello advertises the union");
+    let have = run(client);
+    let summary = front_thread.join().unwrap();
+    assert_eq!(summary.forwarded, want.len() as u64);
+    NetClient::connect(&backend_addr).unwrap().shutdown_server().unwrap();
+    server_thread.join().unwrap();
+
+    assert_eq!(want.len(), have.len());
+    for (k, (w, h)) in want.iter().zip(&have).enumerate() {
+        assert_same_payload(w, h, &format!("reply {k} through 1-backend front"));
+    }
+}
+
+/// Two backends: sessions split across processes, traffic interleaved over
+/// one front connection. Every reply is bit-identical to an isolated
+/// in-process run, session-affinity keeps each session on the backend that
+/// advertised it, and the front's stats rows show both backends up.
+#[test]
+fn front_two_backends_bit_identical_and_session_affine() {
+    use dpp_screen::front::{Front, FrontConfig};
+    use dpp_screen::net::{NetClient, NetServer};
+
+    let fixtures = front_fixture();
+    let programs: Vec<Vec<Request>> = fixtures
+        .iter()
+        .map(|(csc, _, lm)| session_program(*lm, csc.n_cols()))
+        .collect();
+
+    // isolated in-process references, one coordinator per session
+    let reference: Vec<Vec<Response>> = (0..3)
+        .map(|i| {
+            let coord = Coordinator::new();
+            front_register(&coord, &fixtures, &[i]);
+            let out = programs[i]
+                .iter()
+                .map(|req| {
+                    coord.submit(&format!("s{i}"), req.clone()).recv_response().unwrap()
+                })
+                .collect();
+            coord.shutdown();
+            out
+        })
+        .collect();
+
+    // backend A hosts s0+s1, backend B hosts s2
+    let coord_a = Coordinator::new();
+    front_register(&coord_a, &fixtures, &[0, 1]);
+    let srv_a = NetServer::bind(coord_a, "127.0.0.1:0").unwrap();
+    let addr_a = srv_a.local_addr().unwrap().to_string();
+    let join_a = std::thread::spawn(move || srv_a.run());
+    let coord_b = Coordinator::new();
+    front_register(&coord_b, &fixtures, &[2]);
+    let srv_b = NetServer::bind(coord_b, "127.0.0.1:0").unwrap();
+    let addr_b = srv_b.local_addr().unwrap().to_string();
+    let join_b = std::thread::spawn(move || srv_b.run());
+
+    let front = Front::bind(
+        "127.0.0.1:0",
+        &[addr_a.clone(), addr_b.clone()],
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let front_addr = front.local_addr().unwrap().to_string();
+    let front_thread = std::thread::spawn(move || front.run());
+
+    let mut client = NetClient::connect(&front_addr).unwrap();
+    let advertised: Vec<&str> = client.sessions().iter().map(|s| s.as_str()).collect();
+    assert_eq!(advertised, ["s0", "s1", "s2"], "union of both backends' hellos");
+    let rows = client.stats().unwrap();
+    assert_eq!(rows.len(), 2, "one stats row per backend");
+    assert_eq!(rows[0].backend, addr_a);
+    assert_eq!(rows[1].backend, addr_b);
+    assert!(rows[0].up && rows[1].up);
+    assert_eq!(rows[0].sessions, 2, "hello-seeded load view");
+    assert_eq!(rows[1].sessions, 1);
+
+    let mut expected = Vec::new();
+    for step in 0..programs[0].len() {
+        for (i, program) in programs.iter().enumerate() {
+            let id = client.submit(&format!("s{i}"), program[step].clone()).unwrap();
+            expected.push((id, i, step));
+        }
+    }
+    for (id, i, step) in expected {
+        let (got, response) = client.recv_reply().unwrap();
+        assert_eq!(got, id, "replies arrive in submission order");
+        assert_same_payload(
+            &reference[i][step],
+            &response,
+            &format!("s{i} step {step} through 2-backend front"),
+        );
+    }
+
+    client.shutdown_server().unwrap();
+    let summary = front_thread.join().unwrap();
+    assert!(summary.backends.iter().all(|r| r.up), "both backends stayed up");
+    // session-affinity: each backend only ever answered its own sessions,
+    // so its admission counter matches its sessions' share of the program
+    for (addr, join, want_ops) in
+        [(addr_a, join_a, 2 * programs[0].len()), (addr_b, join_b, programs[0].len())]
+    {
+        let mut direct = NetClient::connect(&addr).unwrap();
+        let row = direct.stats().unwrap();
+        assert_eq!(row.len(), 1);
+        assert_eq!(
+            row[0].admission.submitted, want_ops as u64,
+            "backend {addr} answered exactly its sessions' requests"
+        );
+        direct.shutdown_server().unwrap();
+        join.join().unwrap();
+    }
+}
+
+/// Killing a backend mid-run surfaces typed errors through the front — no
+/// hang, no panic, no silent re-homing: the dead backend's session answers
+/// `SessionClosed { reason: backend … down }` from then on, while sessions
+/// on the surviving backend keep serving bit-identically.
+#[test]
+fn front_backend_death_is_typed_and_scoped_to_its_sessions() {
+    use dpp_screen::front::{Front, FrontConfig};
+    use dpp_screen::net::{NetClient, NetServer};
+
+    let fixtures = front_fixture();
+    let coord_a = Coordinator::new();
+    front_register(&coord_a, &fixtures, &[0]);
+    let srv_a = NetServer::bind(coord_a, "127.0.0.1:0").unwrap();
+    let addr_a = srv_a.local_addr().unwrap().to_string();
+    let join_a = std::thread::spawn(move || srv_a.run());
+    let coord_b = Coordinator::new();
+    front_register(&coord_b, &fixtures, &[1]);
+    let srv_b = NetServer::bind(coord_b, "127.0.0.1:0").unwrap();
+    let addr_b = srv_b.local_addr().unwrap().to_string();
+    let join_b = std::thread::spawn(move || srv_b.run());
+
+    let front = Front::bind(
+        "127.0.0.1:0",
+        &[addr_a.clone(), addr_b.clone()],
+        FrontConfig::default(),
+    )
+    .unwrap();
+    let front_addr = front.local_addr().unwrap().to_string();
+    let front_thread = std::thread::spawn(move || front.run());
+    let mut client = NetClient::connect(&front_addr).unwrap();
+
+    let screen = |c: &mut NetClient, i: usize, f: f64| {
+        let lam = f * fixtures[i].2;
+        c.request(&format!("s{i}"), Request::Screen { lam, opts: Default::default() })
+    };
+    // both sessions serve through the front before the failure
+    assert!(matches!(screen(&mut client, 0, 0.6), Ok(Response::Screen(_))));
+    assert!(matches!(screen(&mut client, 1, 0.6), Ok(Response::Screen(_))));
+
+    // kill backend B out from under the front
+    NetClient::connect(&addr_b).unwrap().shutdown_server().unwrap();
+    join_b.join().unwrap();
+    // the link notices from its own socket; poll the front's view until the
+    // row flips (bounded — this is failure detection, not a timing claim)
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let rows = client.stats().unwrap();
+        if rows.iter().any(|r| r.backend == addr_b && !r.up) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "front never marked {addr_b} down");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the dead backend's session: typed SessionClosed naming the backend
+    match screen(&mut client, 1, 0.5) {
+        Ok(Response::Error(RequestError::SessionClosed { session, reason })) => {
+            assert_eq!(session, "s1");
+            assert!(reason.contains("down"), "reason names the failure: {reason}");
+        }
+        other => panic!("expected typed SessionClosed through front, got {other:?}"),
+    }
+    // the survivor keeps serving — same request twice stays deterministic
+    let w = screen(&mut client, 0, 0.4).unwrap();
+    let h = screen(&mut client, 0, 0.4).unwrap();
+    assert_same_payload(&w, &h, "surviving backend after peer death");
+
+    client.shutdown_server().unwrap();
+    let summary = front_thread.join().unwrap();
+    let down: Vec<&str> = summary
+        .backends
+        .iter()
+        .filter(|r| !r.up)
+        .map(|r| r.backend.as_str())
+        .collect();
+    assert_eq!(down, vec![addr_b.as_str()], "exactly the killed backend is down");
+    NetClient::connect(&addr_a).unwrap().shutdown_server().unwrap();
+    join_a.join().unwrap();
+}
+
+/// `NetClient::request_with_retry` against a shed-everything backend: every
+/// attempt is answered `Overloaded` with the deterministic hint, the retry
+/// budget bounds the attempts exactly, and exhaustion propagates the typed
+/// error (not a panic, not an anonymous failure). The server's own
+/// admission counters — read over the new control-plane stats probe —
+/// prove the retry count.
+#[test]
+fn client_retry_budget_is_bounded_and_typed_on_shed_everything_backend() {
+    use dpp_screen::net::{NetClient, NetServer};
+
+    let (csc, y, lam_max) = sparse_problem(25, 80, 84);
+    let coord = Coordinator::with_config(
+        None,
+        AdmissionConfig { max_session_pending: Some(0), ..Default::default() },
+    );
+    coord
+        .register(SessionSpec::new(
+            "s",
+            csc,
+            y,
+            RuleKind::Edpp,
+            SolverKind::Cd,
+            PathConfig::default(),
+        ))
+        .unwrap();
+    let server = NetServer::bind(coord, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    // deadline budget present → retries wait the (capped) hint; 2 retries
+    // means exactly 3 attempts hit the admission gate
+    let opts = RequestOptions::with_deadline(Duration::from_millis(1));
+    let resp = client
+        .request_with_retry("s", Request::Screen { lam: 0.5 * lam_max, opts }, 2)
+        .unwrap();
+    match resp {
+        Response::Error(RequestError::Overloaded { retry_after_ms }) => {
+            assert!(retry_after_ms >= 25, "deterministic hint: {retry_after_ms}")
+        }
+        other => panic!("expected typed Overloaded after budget, got {other:?}"),
+    }
+    let rows = client.stats().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].backend, "", "a server reports itself");
+    assert_eq!(rows[0].admission.shed, 3, "budget of 2 retries = 3 attempts");
+
+    // no deadline → clock-free immediate retries, same typed exhaustion
+    let resp = client
+        .request_with_retry(
+            "s",
+            Request::Screen { lam: 0.5 * lam_max, opts: Default::default() },
+            1,
+        )
+        .unwrap();
+    assert!(matches!(resp, Response::Error(RequestError::Overloaded { .. })));
+    assert_eq!(client.stats().unwrap()[0].admission.shed, 5);
+
+    client.shutdown_server().unwrap();
+    server_thread.join().unwrap();
+}
