@@ -126,6 +126,14 @@ pub struct PathSummary {
     pub solve_secs: f64,
     /// Worst per-step duality gap along the path.
     pub max_gap: f64,
+    /// Mean working-set size across steps (under the screen-first strategy
+    /// this is the mean post-repair kept-set size). Local diagnostics only —
+    /// not carried on the wire.
+    pub mean_working_set: f64,
+    /// Total complement KKT sweeps across the path. Under the working-set
+    /// strategy a warm session certifies in one pass per λ, so repeat
+    /// FitPath requests show this shrinking. Not carried on the wire.
+    pub kkt_passes: usize,
     /// True when the request carried a deadline and at least one step
     /// finished above tolerance (its per-step budget slice cut it short) —
     /// the path's solutions are not all exact, mirroring

@@ -28,13 +28,19 @@ use super::protocol::{
     Response, ScreenResponse, SessionStats, WarmResponse,
 };
 use crate::linalg::DesignMatrix;
-use crate::path::{solve_path_pipeline, LambdaGrid, PathConfig, SolverKind};
+use crate::path::{
+    solve_path_pipeline, solve_path_with_screener_warm, LambdaGrid, PathConfig,
+    PathStrategy, SolverKind,
+};
 use crate::runtime::pool::panic_message;
 use crate::screening::{
     pipeline::merge_kkt_candidates, strong::kkt_violations, strong::kkt_violations_in,
     ContextStats, GapSafeHook, ScreenContext, ScreenPipeline, Screener,
 };
-use crate::solver::{LassoSolver, SolverHook, SolverState};
+use crate::solver::{
+    working_set::{solve_working_set, WorkingSetState},
+    LassoSolver, SolverHook, SolverState,
+};
 
 /// Everything needed to open a session: the dataset, how to screen it, how
 /// to solve it.
@@ -118,6 +124,11 @@ pub(crate) struct SessionState {
     /// per-request solver override threads a throwaway state instead, so it
     /// can neither replay nor clobber another solver's momentum.
     solver_state: SolverState,
+    /// The session's working-set warm start ([`PathStrategy::WorkingSet`]
+    /// only): the union of every active set solved so far plus the last
+    /// certified β. Repeat Screen/FitPath requests seed from it and certify
+    /// in one complement sweep per λ — O(active set), not O(p).
+    ws_state: WorkingSetState,
     pub(crate) metrics: ServiceMetrics,
     /// Panic reason once a request poisoned the session.
     dead: Option<String>,
@@ -160,6 +171,7 @@ impl SessionState {
             lam_state,
             beta_state: vec![0.0; p],
             solver_state: SolverState::None,
+            ws_state: WorkingSetState::default(),
             metrics: ServiceMetrics::new(),
             dead: None,
         })
@@ -205,6 +217,7 @@ impl SessionState {
             lam_state,
             beta_state,
             solver_state,
+            ws_state,
             metrics,
             dead,
         } = self;
@@ -221,6 +234,7 @@ impl SessionState {
             lam_state,
             beta_state,
             solver_state,
+            ws_state,
             metrics,
         };
         for PendingRequest { request, reply, t0 } in batch {
@@ -262,6 +276,7 @@ struct SessionCore<'s> {
     lam_state: &'s mut f64,
     beta_state: &'s mut Vec<f64>,
     solver_state: &'s mut SolverState,
+    ws_state: &'s mut WorkingSetState,
     metrics: &'s mut ServiceMetrics,
 }
 
@@ -342,6 +357,7 @@ impl SessionCore<'_> {
             lam_state,
             beta_state,
             solver_state,
+            ws_state,
             metrics,
             ..
         } = self;
@@ -353,6 +369,7 @@ impl SessionCore<'_> {
         let lam_state: &mut f64 = lam_state;
         let beta_state: &mut Vec<f64> = beta_state;
         let solver_state: &mut SolverState = solver_state;
+        let ws_state: &mut WorkingSetState = ws_state;
         let metrics: &mut ServiceMetrics = metrics;
         let x = ctx.x;
         let y = ctx.y;
@@ -385,6 +402,66 @@ impl SessionCore<'_> {
             }
         };
         let stage_discards = scr.screen_step(ctx, lam, &mut keep);
+
+        if cfg.strategy == PathStrategy::WorkingSet {
+            // working-set solve: the survivors are only a *seed* — the
+            // engine certifies against the full-problem gap, so heuristic
+            // pipelines need no KKT-repair loop here. The session's
+            // accumulated working set and β make a repeat request certify
+            // in one complement sweep (O(active set), not O(p)).
+            if let Some(d) = opts.deadline {
+                solve_opts.time_budget = Some(d.saturating_sub(t0.elapsed()));
+            }
+            let req_solver = opts.solver.unwrap_or(solver);
+            let lasso = req_solver.make();
+            // a per-request solver override must not replay or clobber the
+            // session solver's momentum: run on a throwaway copy of the
+            // cached set and leave the session state untouched
+            let mut throwaway;
+            let ws: &mut WorkingSetState = if req_solver == solver {
+                ws_state
+            } else {
+                throwaway = WorkingSetState {
+                    cols: ws_state.cols.clone(),
+                    beta: ws_state.beta.clone(),
+                    solver_state: SolverState::None,
+                };
+                &mut throwaway
+            };
+            let wres = solve_working_set(ctx, lam, &keep, lasso.as_ref(), &solve_opts, ws);
+            let gap = wres.gap;
+            let partial = gap > solve_opts.tol_gap && deadline_expired(t0);
+            let beta = wres.beta;
+            let true_zeros = beta.iter().filter(|b| **b == 0.0).count();
+            let kept_cols = ws.cols.clone();
+            let discarded = p - kept_cols.len();
+            // the answer is full-problem certified, so the anchor-advance
+            // guard only needs the session tolerance (no repair bookkeeping)
+            if lam < *lam_state && !partial && gap <= cfg.solve_opts.tol_gap {
+                screener.observe(ctx, lam, &beta);
+                beta_state.copy_from_slice(&beta);
+                *lam_state = lam;
+            }
+            let latency = t0.elapsed().as_secs_f64();
+            metrics.record_request(latency);
+            metrics.record_screen(kept_cols.len(), discarded, true_zeros);
+            if partial {
+                metrics.record_partial();
+            }
+            return Ok(ScreenResponse {
+                lam,
+                kept: kept_cols,
+                beta,
+                discarded,
+                true_zeros,
+                latency_s: latency,
+                stage_discards,
+                dynamic_discards: 0,
+                gap,
+                partial,
+            });
+        }
+
         let mut cols: Vec<usize> = (0..p).filter(|&j| keep[j]).collect();
         let is_safe = scr.is_safe();
         // per-request solver override; the session's recorded resume state
@@ -535,8 +612,22 @@ impl SessionCore<'_> {
             path_cfg.path_budget = Some(d.saturating_sub(t0.elapsed()));
         }
         let lam_grid = LambdaGrid::relative_to(self.ctx.lam_max, grid, lo, 1.0);
-        let out =
-            solve_path_pipeline(self.ctx.x, self.ctx.y, &lam_grid, &pipe, self.solver, &path_cfg);
+        let out = if path_cfg.strategy == PathStrategy::WorkingSet {
+            // thread the session's persistent working-set warm start: a
+            // repeat FitPath seeds every λ from the union of all active
+            // sets solved so far and certifies in one sweep per λ
+            let mut screener = pipe.build(self.ctx.x.n_rows(), path_cfg.sequential);
+            solve_path_with_screener_warm(
+                &self.ctx,
+                &lam_grid,
+                screener.as_mut(),
+                self.solver,
+                &path_cfg,
+                self.ws_state,
+            )
+        } else {
+            solve_path_pipeline(self.ctx.x, self.ctx.y, &lam_grid, &pipe, self.solver, &path_cfg)
+        };
         let max_gap = out.records.iter().map(|r| r.gap).fold(0.0f64, f64::max);
         // with a deadline set, any step left above tolerance was cut by its
         // budget slice — the slices are the deadline, so a step can be
@@ -555,6 +646,8 @@ impl SessionCore<'_> {
             screen_secs: out.total_screen_secs(),
             solve_secs: out.total_solve_secs(),
             max_gap,
+            mean_working_set: out.mean_working_set(),
+            kkt_passes: out.total_kkt_passes(),
             partial,
             latency_s: latency,
         })

@@ -118,8 +118,8 @@ pub mod prelude {
     pub use crate::front::{Front, FrontConfig};
     pub use crate::net::{NetClient, NetServer, RemoteShard};
     pub use crate::path::{
-        solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathOutput, RuleKind,
-        SolverKind,
+        solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathOutput,
+        PathStrategy, RuleKind, SolverKind,
     };
     pub use crate::screening::{ScreenContext, ScreenPipeline, Screener, ScreeningRule};
     pub use crate::solver::{cd::CdSolver, LassoSolver, SolveOptions};

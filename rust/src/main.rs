@@ -31,6 +31,13 @@
 //! refinement, and `auto`, which picks a pipeline from the loaded problem's
 //! shape (n, p, density, λ-grid size — `ScreenPipeline::auto`).
 //!
+//! `path`, `service` and `serve` also accept `--strategy screen|working-set`
+//! (DESIGN.md §3b): `working-set` grows a restricted subproblem from the
+//! pipeline survivors and certifies every answer against the full-problem
+//! duality gap. Default `screen`; `--rule auto` picks `working-set` itself
+//! on very wide problems (p ≥ 8n) with long λ-grids, and an explicit
+//! `--strategy` always wins.
+//!
 //! `path` and `service` accept `--matrix dense|csc|mmap|sharded|auto`
 //! (default auto): auto keeps an already-sparse input sparse (a LIBSVM
 //! file loads as CSC, a shard directory as the out-of-core mmap backend, a
@@ -47,9 +54,11 @@ use std::sync::Arc;
 use dpp_screen::coordinator::service::ScreeningService;
 use dpp_screen::data::{convert, synthetic, Dataset, RealDataset};
 use dpp_screen::linalg::{CscMatrix, DesignMatrix, DesignStore, MmapCscMatrix, ShardSetMatrix};
-use dpp_screen::path::group::{solve_group_path, GroupRuleKind};
+use dpp_screen::path::group::{
+    solve_group_path, solve_group_path_working_set, GroupRuleKind,
+};
 use dpp_screen::path::{
-    solve_path_pipeline, LambdaGrid, PathConfig, RuleKind, SolverKind,
+    solve_path_pipeline, LambdaGrid, PathConfig, PathStrategy, RuleKind, SolverKind,
 };
 use dpp_screen::runtime::pool::{self, WorkerPool};
 use dpp_screen::runtime::{ArtifactRuntime, ArtifactSweep};
@@ -84,6 +93,7 @@ fn main() {
                  dpp path --dataset mnist --matrix csc      # sparse backend\n\
                  dpp path --rule hybrid:strong+edpp --dynamic  # composed pipeline\n\
                  dpp path --rule auto                       # shape-picked pipeline\n\
+                 dpp path --strategy working-set            # working-set solve engine\n\
                  dpp convert --file data.svm --out data.dppcsc [--f32]\n\
                  dpp path --file data.dppcsc --matrix mmap  # out-of-core backend\n\
                  dpp shard --file data.dppcsc --out data.shards --shards 4\n\
@@ -119,31 +129,45 @@ fn main() {
     }
 }
 
-/// Parse `--rule` (+ `--dynamic`) into a screening pipeline, exiting with
-/// the full grammar on error. `--rule auto` resolves through
-/// [`ScreenPipeline::auto`] using the loaded problem's shape — (n, p,
-/// density) from the backend, `grid` = how many λ-evaluations the command
-/// is about to run — and reports the pick on stderr.
+/// Parse `--rule` (+ `--dynamic`) into a screening pipeline and
+/// `--strategy screen|working-set` into the per-λ solve strategy, exiting
+/// with the full grammar on error. `--rule auto` resolves through
+/// [`ScreenPipeline::auto_with_strategy`] using the loaded problem's shape
+/// — (n, p, density) from the backend, `grid` = how many λ-evaluations the
+/// command is about to run — and reports both picks on stderr. An explicit
+/// `--strategy` always wins over the auto pick.
 fn parse_pipeline(
     args: &Args,
     default: &str,
     shape: (usize, usize, f64),
     grid: usize,
-) -> ScreenPipeline {
+) -> (ScreenPipeline, PathStrategy) {
+    let explicit = args.get("strategy").map(|s| match PathStrategy::from_name(s) {
+        Some(st) => st,
+        None => {
+            eprintln!("unknown --strategy `{s}` (screen | working-set)");
+            std::process::exit(2);
+        }
+    });
     let spec = args.get_or("rule", default);
     if spec == "auto" {
         let (n, p, density) = shape;
-        let mut pipe = ScreenPipeline::auto(n, p, density, grid);
+        let (mut pipe, auto_strategy) =
+            ScreenPipeline::auto_with_strategy(n, p, density, grid);
         if args.flag("dynamic") && !pipe.dynamic {
             pipe = pipe.with_dynamic(true);
         }
+        let strategy = explicit.unwrap_or(auto_strategy);
         eprintln!(
-            "[dpp] --rule auto ({n}x{p}, density {density:.4}, {grid} λ) → {}",
-            pipe.name()
+            "[dpp] --rule auto ({n}x{p}, density {density:.4}, {grid} λ) → {}, \
+             strategy {}{}",
+            pipe.name(),
+            strategy.name(),
+            if explicit.is_some() { " (forced by --strategy)" } else { "" }
         );
-        return pipe;
+        return (pipe, strategy);
     }
-    match ScreenPipeline::parse(&spec) {
+    let pipe = match ScreenPipeline::parse(&spec) {
         Ok(p) => {
             if args.flag("dynamic") && !p.dynamic {
                 p.with_dynamic(true)
@@ -155,7 +179,8 @@ fn parse_pipeline(
             eprintln!("bad --rule: {e}");
             std::process::exit(2);
         }
-    }
+    };
+    (pipe, explicit.unwrap_or_default())
 }
 
 /// Auto-pick threshold: below this fill fraction the O(nnz) CSC sweep beats
@@ -357,10 +382,11 @@ fn cmd_path(args: &Args) {
     let ds = load_dataset(args);
     let solver = SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver");
     let k = args.get_parse("grid", grid_size(100));
-    let pipeline =
+    let (pipeline, strategy) =
         parse_pipeline(args, "edpp", (ds.n(), ds.p(), ds.x.density()), k);
     let lo = args.get_parse("lo", 0.05);
-    let mut cfg = PathConfig { sequential: !args.flag("basic"), ..Default::default() };
+    let mut cfg =
+        PathConfig { sequential: !args.flag("basic"), strategy, ..Default::default() };
     let name = ds.name.clone();
     let (n, p) = (ds.n(), ds.p());
     let y = ds.y.clone();
@@ -382,13 +408,15 @@ fn cmd_path(args: &Args) {
     let x = backend.as_design();
     let grid = LambdaGrid::relative(x, &y, k, lo, 1.0);
     println!(
-        "dataset={} ({}x{}), matrix={}, rule={}, solver={}, grid={}x[{}..1.0]·λmax",
+        "dataset={} ({}x{}), matrix={}, rule={}, solver={}, strategy={}, \
+         grid={}x[{}..1.0]·λmax",
         name,
         n,
         p,
         backend.backend_name(),
         pipeline.name(),
         solver.name(),
+        cfg.strategy.name(),
         k,
         lo
     );
@@ -425,6 +453,13 @@ fn cmd_path(args: &Args) {
         out.total_screen_secs(),
         out.total_solve_secs()
     );
+    if cfg.strategy == PathStrategy::WorkingSet {
+        println!(
+            "working-set: mean size {:.1} of p={p}   total kkt passes {}",
+            out.mean_working_set(),
+            out.total_kkt_passes()
+        );
+    }
     let stages = out.mean_stage_rejections();
     if stages.len() > 1 || out.total_dynamic_discards() > 0 {
         let parts: Vec<String> =
@@ -456,12 +491,34 @@ fn cmd_group(args: &Args) {
             std::process::exit(2);
         }
     };
-    let out = solve_group_path(&ds.x, &ds.y, &groups, &grid, rule, &SolveOptions::default());
+    let strategy = args
+        .get("strategy")
+        .map(|s| match PathStrategy::from_name(s) {
+            Some(st) => st,
+            None => {
+                eprintln!("unknown --strategy `{s}` (screen | working-set)");
+                std::process::exit(2);
+            }
+        })
+        .unwrap_or_default();
+    let out = if strategy == PathStrategy::WorkingSet {
+        solve_group_path_working_set(
+            &ds.x,
+            &ds.y,
+            &groups,
+            &grid,
+            rule,
+            &SolveOptions::default(),
+        )
+    } else {
+        solve_group_path(&ds.x, &ds.y, &groups, &grid, rule, &SolveOptions::default())
+    };
     println!(
-        "group path: {} groups of size {}, rule={} → mean rejection {:.4}, screen {:.3}s, solve {:.3}s",
+        "group path: {} groups of size {}, rule={}, strategy={} → mean rejection {:.4}, screen {:.3}s, solve {:.3}s",
         ngroups,
         p / ngroups,
         out.rule,
+        strategy.name(),
         out.mean_rejection_ratio(),
         out.total_screen_secs(),
         out.total_solve_secs()
@@ -472,14 +529,14 @@ fn cmd_service(args: &Args) {
     let ds = load_dataset(args);
     let n_req = args.get_parse("requests", 20usize);
     // for `auto`, the request count plays the λ-grid-size role
-    let pipeline =
+    let (pipeline, strategy) =
         parse_pipeline(args, "edpp", (ds.n(), ds.p(), ds.x.density()), n_req.max(1));
     let y = ds.y.clone();
     // decided before pick_backend — see cmd_path
     let reduced_precision = ds.x.is_reduced_precision();
     let backend = pick_backend(ds.x, &args.get_or("matrix", "auto"));
     report_backend("service", &backend);
-    let mut cfg = PathConfig::default();
+    let mut cfg = PathConfig { strategy, ..PathConfig::default() };
     if reduced_precision {
         cfg.safety_slack = ArtifactSweep::SAFETY_SLACK;
         eprintln!(
@@ -546,7 +603,7 @@ fn serve_register_sessions(
     let mut out = Vec::new();
     for i in 0..n_sessions {
         let name = format!("s{i}");
-        let (backend, y, cfg) = if i == 0 && args.get("file").is_some() {
+        let (backend, y, mut cfg) = if i == 0 && args.get("file").is_some() {
             let ds = load_dataset(args);
             let y = ds.y.clone();
             let reduced = ds.x.is_reduced_precision();
@@ -569,12 +626,15 @@ fn serve_register_sessions(
         };
         let (n, p, density) =
             (backend.n_rows(), backend.n_cols(), backend.density());
-        let pipeline = parse_pipeline(args, "auto", (n, p, density), ops.max(1));
+        let (pipeline, strategy) =
+            parse_pipeline(args, "auto", (n, p, density), ops.max(1));
+        cfg.strategy = strategy;
         let lam_max = dpp_screen::solver::dual::lambda_max(backend.as_design(), &y);
         let label = backend.backend_name().to_string();
         println!(
-            "session {name}: {n}x{p} backend={label} pipeline={}",
-            pipeline.name()
+            "session {name}: {n}x{p} backend={label} pipeline={} strategy={}",
+            pipeline.name(),
+            cfg.strategy.name()
         );
         if let Err(e) = coord.register(
             dpp_screen::coordinator::SessionSpec::boxed(
@@ -824,7 +884,7 @@ fn register_remote_session(
         );
     }
     let (n, p, density) = (x.n_rows(), x.n_cols(), x.density());
-    let pipeline = parse_pipeline(args, "auto", (n, p, density), 8);
+    let (pipeline, strategy) = parse_pipeline(args, "auto", (n, p, density), 8);
     coord
         .register(
             dpp_screen::coordinator::SessionSpec::new(
@@ -833,7 +893,7 @@ fn register_remote_session(
                 y,
                 pipeline,
                 SolverKind::from_name(&args.get_or("solver", "cd")).expect("bad --solver"),
-                PathConfig::default(),
+                PathConfig { strategy, ..PathConfig::default() },
             )
             .with_backend_label("remote-shards"),
         )
@@ -1885,13 +1945,26 @@ fn cmd_bench_screen(args: &Args) {
     .iter()
     .map(|s| ScreenPipeline::parse(s).expect("bench pipeline"))
     .collect();
+    // working-set comparison rows: same pipeline, same backend, same thread
+    // count — the screen-first row with the matching key is the direct
+    // wall-clock baseline the strategy must beat at p ≥ 8n, grid ≥ 50
+    let ws_pipelines: Vec<ScreenPipeline> = ["strong", "cascade:sis,edpp"]
+        .iter()
+        .map(|s| ScreenPipeline::parse(s).expect("bench pipeline"))
+        .collect();
+    let ws_cfg =
+        PathConfig { strategy: PathStrategy::WorkingSet, ..PathConfig::default() };
     let mut cases: Vec<String> = Vec::new();
     let mut rep = benchkit::Report::new(
-        "bench-screen (pipeline × backend × threads)",
-        &["pipeline", "backend", "threads", "xt_w", "path", "rejection", "stages/dyn"],
+        "bench-screen (pipeline × strategy × backend × threads)",
+        &[
+            "pipeline", "strategy", "backend", "threads", "xt_w", "path", "rejection",
+            "stages/dyn",
+        ],
     );
 
     let mut record = |pipe_name: &str,
+                      strategy: &str,
                       backend: &str,
                       threads: usize,
                       xt_w_secs: f64,
@@ -1905,10 +1978,14 @@ fn cmd_bench_screen(args: &Args) {
             .map(|(s, v)| format!("{{\"stage\": \"{s}\", \"rejection\": {v:.6}}}"))
             .collect();
         cases.push(format!(
-            "    {{\"rule\": \"{pipe_name}\", \"backend\": \"{backend}\", \"threads\": {threads}, \
+            "    {{\"rule\": \"{pipe_name}\", \"strategy\": \"{strategy}\", \
+             \"backend\": \"{backend}\", \"threads\": {threads}, \
              \"xt_w_secs\": {xt_w_secs:.9}, \"path_secs\": {path_secs:.6}, \
-             \"rejection_ratio\": {rejection:.6}, \"dynamic_discards\": {}, \
+             \"rejection_ratio\": {rejection:.6}, \"mean_working_set\": {:.3}, \
+             \"kkt_passes\": {}, \"dynamic_discards\": {}, \
              \"stages\": [{}]}}",
+            run.mean_working_set(),
+            run.total_kkt_passes(),
             run.total_dynamic_discards(),
             stage_json.join(", ")
         ));
@@ -1916,6 +1993,7 @@ fn cmd_bench_screen(args: &Args) {
             stages.iter().map(|(s, v)| format!("{s}={v:.3}")).collect();
         rep.row(&[
             pipe_name.to_string(),
+            strategy.to_string(),
             backend.to_string(),
             threads.to_string(),
             format!("{:.3}ms", xt_w_secs * 1e3),
@@ -1937,6 +2015,22 @@ fn cmd_bench_screen(args: &Args) {
         let run = solve_path_pipeline(&csc, &y, &grid, pipe, SolverKind::Cd, &cfg);
         record(
             &pipe.name(),
+            "screen",
+            "csc",
+            1,
+            m_sweep.mean_s,
+            t0.elapsed().as_secs_f64(),
+            &run,
+            &mut rep,
+        );
+    }
+    for pipe in &ws_pipelines {
+        // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+        let t0 = std::time::Instant::now();
+        let run = solve_path_pipeline(&csc, &y, &grid, pipe, SolverKind::Cd, &ws_cfg);
+        record(
+            &pipe.name(),
+            "working-set",
             "csc",
             1,
             m_sweep.mean_s,
@@ -1961,6 +2055,22 @@ fn cmd_bench_screen(args: &Args) {
             let run = solve_path_pipeline(&sh, &y, &grid, pipe, SolverKind::Cd, &cfg);
             record(
                 &pipe.name(),
+                "screen",
+                "sharded",
+                threads,
+                m_sweep.mean_s,
+                t0.elapsed().as_secs_f64(),
+                &run,
+                &mut rep,
+            );
+        }
+        for pipe in &ws_pipelines {
+            // audit:allow(determinism:clock, CLI timing report only; never feeds numerics)
+            let t0 = std::time::Instant::now();
+            let run = solve_path_pipeline(&sh, &y, &grid, pipe, SolverKind::Cd, &ws_cfg);
+            record(
+                &pipe.name(),
+                "working-set",
                 "sharded",
                 threads,
                 m_sweep.mean_s,

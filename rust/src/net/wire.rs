@@ -610,6 +610,9 @@ pub fn dec_response(d: &mut Dec<'_>) -> Result<Response, WireError> {
                 screen_secs: d.f64()?,
                 solve_secs: d.f64()?,
                 max_gap: d.f64()?,
+                // local working-set diagnostics — not carried on the wire
+                mean_working_set: 0.0,
+                kkt_passes: 0,
                 partial: d.bool()?,
                 latency_s: d.f64()?,
             })
@@ -890,6 +893,9 @@ mod tests {
                 screen_secs: rng.f64(),
                 solve_secs: rng.f64(),
                 max_gap: rng.f64() * 1e-5,
+                // zero on both sides: these diagnostics never hit the wire
+                mean_working_set: 0.0,
+                kkt_passes: 0,
                 partial: rng.f64() < 0.5,
                 latency_s: rng.f64(),
             }),

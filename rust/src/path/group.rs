@@ -4,11 +4,13 @@
 //! screener owns the group θ-propagation (DESIGN.md §3).
 
 use super::StepRecord;
-use crate::linalg::DesignMatrix;
+use crate::linalg::{nrm2, DesignMatrix};
 use crate::screening::group_edpp::{GroupEdppRule, GroupScreenContext};
-use crate::screening::group_strong::{group_kkt_violations, GroupStrongRule};
+use crate::screening::group_strong::{
+    group_kkt_sweep_scored, group_kkt_violations, GroupStrongRule,
+};
 use crate::screening::pipeline::{GroupRuleScreener, GroupScreener};
-use crate::solver::{group::GroupBcdSolver, SolveOptions};
+use crate::solver::{dual, group::GroupBcdSolver, SolveOptions};
 use crate::util::timer::timed;
 
 /// Group-screening rule selector.
@@ -108,6 +110,8 @@ pub fn solve_group_path(
                 gap: 0.0,
                 stage_discards: Vec::new(),
                 dynamic_discards: 0,
+                working_set_size: 0,
+                kkt_passes: 0,
             });
             betas.push(vec![0.0; p]);
             screener.init(&ctx);
@@ -124,6 +128,7 @@ pub fn solve_group_path(
 
         let is_safe = screener.is_safe();
         let mut kkt_repairs = 0usize;
+        let mut kkt_passes = 0usize;
         let mut result: Option<crate::solver::group::GroupSolveResult> = None;
         let (res, solve_secs) = timed(|| {
             loop {
@@ -150,6 +155,7 @@ pub fn solve_group_path(
                         x.col_axpy_into(j, -b, &mut r);
                     }
                 }
+                kkt_passes += 1;
                 let viol = group_kkt_violations(&ctx, &r, lam, &keep);
                 if viol.is_empty() {
                     break;
@@ -183,6 +189,8 @@ pub fn solve_group_path(
             gap: res.gap,
             stage_discards,
             dynamic_discards: 0,
+            working_set_size: active.len(),
+            kkt_passes,
         });
 
         // advance the screener's sequential state; keep the warm starts
@@ -190,6 +198,200 @@ pub fn solve_group_path(
         for (g, &(start, len)) in groups.iter().enumerate() {
             beta_prev[g].copy_from_slice(&full[start..start + len]);
         }
+        betas.push(full);
+    }
+
+    GroupPathOutput { rule: screener.name(), records, betas }
+}
+
+/// Outer-loop safety valve for the group working-set driver (same rationale
+/// as the Lasso engine's cap in [`crate::solver::working_set`]).
+const WS_MAX_ROUNDS: usize = 64;
+
+/// Active warm start for the group working-set path: the accumulated working
+/// set of *groups* and the last certified full-length β. `Default` is the
+/// cold start.
+#[derive(Clone, Debug, Default)]
+pub struct GroupWorkingSetState {
+    /// Accumulated working set (group indices, ascending): the union of
+    /// every group ever admitted across λ steps.
+    pub active: Vec<usize>,
+    /// Full-length β from the last solve (support ⊆ `active`'s columns).
+    pub beta: Vec<f64>,
+}
+
+impl GroupWorkingSetState {
+    /// Drop everything — the next solve is a cold start.
+    pub fn reset(&mut self) {
+        self.active.clear();
+        self.beta.clear();
+    }
+}
+
+/// Group working-set path driver: the group analogue of the Lasso engine in
+/// [`crate::solver::working_set`]. Per λ, seed a working set of groups from
+/// the screening survivors plus the accumulated active set, solve the
+/// restricted group subproblem (BCD over W's groups) to a tightened inner
+/// gap, then pay one sweep over all groups computing the ellipsoid ratios
+/// `‖X_gᵀr‖/√n_g` ([`group_kkt_sweep_scored`]) — complement violators
+/// (ratio > λ) join W in doubling batches, and the global max ratio prices
+/// the **full-problem** group duality gap
+/// ([`dual::duality_gap_from_parts`]). Certification is exact-to-tolerance
+/// on the original problem, never heuristic, even from an empty or unsafe
+/// seed.
+pub fn solve_group_path_working_set(
+    x: &dyn DesignMatrix,
+    y: &[f64],
+    groups: &[(usize, usize)],
+    grid: &super::LambdaGrid,
+    rule_kind: GroupRuleKind,
+    opts: &SolveOptions,
+) -> GroupPathOutput {
+    let ctx = GroupScreenContext::new(x, y, groups);
+    let mut screener = rule_kind.build();
+    let n_groups = groups.len();
+    let p = x.n_cols();
+
+    let mut records = Vec::with_capacity(grid.values.len());
+    let mut betas = Vec::with_capacity(grid.values.len());
+
+    screener.init(&ctx);
+    let mut state = GroupWorkingSetState::default();
+    state.beta.resize(p, 0.0);
+
+    for &lam in &grid.values {
+        if lam >= ctx.lam_max * (1.0 - 1e-12) {
+            records.push(StepRecord {
+                lam,
+                kept: 0,
+                discarded: n_groups,
+                true_zeros: n_groups,
+                screen_secs: 0.0,
+                solve_secs: 0.0,
+                solver_iters: 0,
+                kkt_repairs: 0,
+                gap: 0.0,
+                stage_discards: Vec::new(),
+                dynamic_discards: 0,
+                working_set_size: 0,
+                kkt_passes: 0,
+            });
+            betas.push(vec![0.0; p]);
+            screener.init(&ctx);
+            // the accumulated working set is kept — it only seeds, never
+            // constrains, the next λ's solve
+            continue;
+        }
+
+        let mut keep = vec![true; n_groups];
+        let (stage_discards, screen_secs) =
+            timed(|| screener.screen_step(&ctx, lam, &mut keep));
+        let kept0 = keep.iter().filter(|k| **k).count();
+
+        // W₀ = screening survivors ∪ accumulated active groups
+        let mut in_ws = keep;
+        for &g in &state.active {
+            in_ws[g] = true;
+        }
+        let mut ws: Vec<usize> = (0..n_groups).filter(|&g| in_ws[g]).collect();
+
+        // tightened inner tolerance (same contract as the Lasso engine)
+        let mut inner = opts.clone();
+        inner.tol_gap = 0.5 * opts.tol_gap;
+
+        let mut full = vec![0.0; p];
+        let mut r = vec![0.0; y.len()];
+        let mut iters = 0usize;
+        let mut kkt_passes = 0usize;
+        let mut expansions = 0usize;
+        let mut gap = f64::INFINITY;
+        let mut batch = 4usize;
+
+        let ((), solve_secs) = timed(|| {
+            for _round in 0..WS_MAX_ROUNDS {
+                // ---- restricted group solve over W ----
+                let mut budget_hit = false;
+                if ws.is_empty() {
+                    full.fill(0.0);
+                    r.copy_from_slice(y);
+                } else {
+                    let warm: Vec<Vec<f64>> = ws
+                        .iter()
+                        .map(|&g| {
+                            let (start, len) = groups[g];
+                            state.beta[start..start + len].to_vec()
+                        })
+                        .collect();
+                    let res = GroupBcdSolver
+                        .solve(x, y, groups, &ws, lam, Some(&warm), &inner);
+                    iters += res.iters;
+                    budget_hit =
+                        inner.time_budget.is_some() && res.gap > inner.tol_gap;
+                    full = res.scatter(groups, &ws, p);
+                    r.copy_from_slice(y);
+                    for (j, b) in full.iter().enumerate() {
+                        if *b != 0.0 {
+                            x.col_axpy_into(j, -b, &mut r);
+                        }
+                    }
+                }
+
+                // ---- one shared sweep: ellipsoid ratios for every group ----
+                let (viol, max_ratio) = group_kkt_sweep_scored(&ctx, &r, lam, &in_ws);
+                kkt_passes += 1;
+                let mut pen = 0.0;
+                for &g in &ws {
+                    let (start, len) = groups[g];
+                    pen += (len as f64).sqrt() * nrm2(&full[start..start + len]);
+                }
+                gap = dual::duality_gap_from_parts(y, &r, pen, max_ratio, lam);
+                if gap <= opts.tol_gap || budget_hit {
+                    break;
+                }
+                if viol.is_empty() {
+                    // complement clean: the gap is inner-solve slack
+                    if inner.tol_gap <= 1e-15 {
+                        break;
+                    }
+                    inner.tol_gap *= 0.25;
+                    continue;
+                }
+                expansions += 1;
+                for &(g, _) in viol.iter().take(batch) {
+                    in_ws[g] = true;
+                }
+                batch = batch.saturating_mul(2);
+                ws = (0..n_groups).filter(|&g| in_ws[g]).collect();
+            }
+        });
+
+        // persist the active warm start (ws already contains the previous
+        // state.active, so assigning it is the union)
+        state.beta.copy_from_slice(&full);
+        state.active = ws.clone();
+
+        let true_zeros = groups
+            .iter()
+            .filter(|&&(start, len)| full[start..start + len].iter().all(|v| *v == 0.0))
+            .count();
+
+        records.push(StepRecord {
+            lam,
+            kept: kept0,
+            discarded: n_groups - ws.len(),
+            true_zeros,
+            screen_secs,
+            solve_secs,
+            solver_iters: iters,
+            kkt_repairs: expansions,
+            gap,
+            stage_discards,
+            dynamic_discards: 0,
+            working_set_size: ws.len(),
+            kkt_passes,
+        });
+
+        screener.observe(&ctx, lam, &full);
         betas.push(full);
     }
 
@@ -259,5 +461,42 @@ mod tests {
         let total_kept: usize = edpp.records.iter().map(|r| r.kept).sum();
         let total_possible = groups.len() * edpp.records.len();
         assert!(total_kept * 2 < total_possible, "kept {total_kept}/{total_possible}");
+    }
+
+    #[test]
+    fn working_set_group_path_exact_vs_baseline() {
+        let (ds, groups, grid) = setup(4);
+        let opts = SolveOptions::default();
+        let ws = solve_group_path_working_set(
+            &ds.x,
+            &ds.y,
+            &groups,
+            &grid,
+            GroupRuleKind::Strong,
+            &opts,
+        );
+        let base =
+            solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::None, &opts);
+        for (bw, bb) in ws.betas.iter().zip(base.betas.iter()) {
+            for j in 0..ds.p() {
+                assert!(
+                    (bw[j] - bb[j]).abs() < 5e-3 * (1.0 + bb[j].abs()),
+                    "feature {j}: {} vs {}",
+                    bw[j],
+                    bb[j]
+                );
+            }
+        }
+        // every non-trivial step is certified on the *full* problem and
+        // actually restricted its solver work to a working set of groups
+        for rec in ws.records.iter().filter(|r| r.kkt_passes > 0) {
+            assert!(rec.gap <= opts.tol_gap, "λ={} gap {}", rec.lam, rec.gap);
+            assert!(rec.working_set_size + rec.discarded == groups.len());
+        }
+        let restricted = ws
+            .records
+            .iter()
+            .any(|r| r.kkt_passes > 0 && r.working_set_size < groups.len());
+        assert!(restricted, "no step ran on a restricted group working set");
     }
 }

@@ -21,7 +21,11 @@ use crate::screening::{
     GapSafeHook, ScreenContext, ScreenPipeline, Screener, StageCount,
 };
 use crate::solver::{
-    cd::CdSolver, fista::FistaSolver, lars::LarsSolver, LassoSolver, SolveOptions,
+    cd::CdSolver,
+    fista::FistaSolver,
+    lars::LarsSolver,
+    working_set::{solve_working_set, WorkingSetState},
+    LassoSolver, SolveOptions,
 };
 use crate::util::timer::timed;
 
@@ -165,6 +169,37 @@ impl SolverKind {
     }
 }
 
+/// How the path driver solves each λ step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PathStrategy {
+    /// Screen-first (the paper's protocol): shrink from p with the
+    /// pipeline, solve the survivors, KKT-repair heuristic discards.
+    #[default]
+    Screen,
+    /// Working-set: *grow* a restricted problem from the pipeline
+    /// survivors and certify against the **full-problem** duality gap
+    /// ([`crate::solver::working_set`], DESIGN.md §3b). Tolerance-exact —
+    /// same gap contract, not bit-identical to screen-first.
+    WorkingSet,
+}
+
+impl PathStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PathStrategy::Screen => "screen",
+            PathStrategy::WorkingSet => "working-set",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PathStrategy> {
+        match s {
+            "screen" => Some(PathStrategy::Screen),
+            "working-set" | "ws" => Some(PathStrategy::WorkingSet),
+            _ => None,
+        }
+    }
+}
+
 /// Path-run configuration.
 #[derive(Clone, Debug)]
 pub struct PathConfig {
@@ -187,6 +222,9 @@ pub struct PathConfig {
     /// default) leaves `solve_opts.time_budget` untouched — bit-identical
     /// to the un-budgeted driver.
     pub path_budget: Option<Duration>,
+    /// Per-λ solve strategy: screen-first (default, bit-identical to the
+    /// historical driver) or the working-set engine.
+    pub strategy: PathStrategy,
     pub solve_opts: SolveOptions,
 }
 
@@ -198,6 +236,7 @@ impl Default for PathConfig {
             warm_start: true,
             safety_slack: 0.0,
             path_budget: None,
+            strategy: PathStrategy::Screen,
             solve_opts: SolveOptions::default(),
         }
     }
@@ -236,6 +275,14 @@ pub struct StepRecord {
     /// Features additionally discarded *inside* the solver by the gap-safe
     /// hook (`dynamic:` pipelines only).
     pub dynamic_discards: usize,
+    /// Size of the reduced problem actually solved at this λ — the final
+    /// working set under [`PathStrategy::WorkingSet`], the post-repair
+    /// survivor count under screen-first. How much of p this λ touched.
+    pub working_set_size: usize,
+    /// Complement/full KKT sweeps paid at this λ (certification +
+    /// expansion rounds under working-set, repair checks under
+    /// screen-first; 0 for safe screen-first steps, which need none).
+    pub kkt_passes: usize,
 }
 
 impl StepRecord {
@@ -320,6 +367,20 @@ impl PathOutput {
     pub fn total_kkt_repairs(&self) -> usize {
         self.records.iter().map(|r| r.kkt_repairs).sum()
     }
+
+    /// Mean reduced-problem size across steps — the "how much of p did
+    /// each λ pay" number the bench and `PathSummary` surface.
+    pub fn mean_working_set(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.working_set_size).sum::<usize>() as f64
+            / self.records.len() as f64
+    }
+
+    pub fn total_kkt_passes(&self) -> usize {
+        self.records.iter().map(|r| r.kkt_passes).sum()
+    }
 }
 
 /// Solve the Lasso along `grid` with screening `rule` and solver `solver`.
@@ -371,13 +432,36 @@ pub fn solve_path_with_ctx(
 /// The lifecycle driver every other entry point funnels into: `init` the
 /// pipeline, `screen_step` each λ, solve (with the gap-safe hook when the
 /// pipeline asks for it), KKT-repair the *uncertified* discards, and
-/// `observe` the exact solution back into the pipeline.
+/// `observe` the exact solution back into the pipeline. Under
+/// [`PathStrategy::WorkingSet`] the per-λ solve instead grows a working set
+/// from the survivors and certifies the full-problem gap (DESIGN.md §3b);
+/// this entry point runs it with a fresh (path-local) warm-start state —
+/// long-lived callers thread their own via
+/// [`solve_path_with_screener_warm`].
 pub fn solve_path_with_screener(
     ctx: &ScreenContext,
     grid: &LambdaGrid,
     screener: &mut dyn Screener,
     solver_kind: SolverKind,
     cfg: &PathConfig,
+) -> PathOutput {
+    let mut ws_state = WorkingSetState::default();
+    solve_path_with_screener_warm(ctx, grid, screener, solver_kind, cfg, &mut ws_state)
+}
+
+/// [`solve_path_with_screener`] with a caller-owned working-set warm-start
+/// state: the accumulated working set, β and solver momentum persist across
+/// calls, so a serving session's repeat `FitPath` seeds every λ from the
+/// union of all active sets it has ever solved — its complement sweeps find
+/// no violators and certify in one pass (O(active set) per λ, not O(p)).
+/// Ignored (never read or written) under [`PathStrategy::Screen`].
+pub fn solve_path_with_screener_warm(
+    ctx: &ScreenContext,
+    grid: &LambdaGrid,
+    screener: &mut dyn Screener,
+    solver_kind: SolverKind,
+    cfg: &PathConfig,
+    ws_state: &mut WorkingSetState,
 ) -> PathOutput {
     let x = ctx.x;
     let y = ctx.y;
@@ -415,7 +499,9 @@ pub fn solve_path_with_screener(
             ));
         }
         if lam >= ctx.lam_max * (1.0 - 1e-12) {
-            // trivial solution (eq. (8)); everything is screened by eq. (9)
+            // trivial solution (eq. (8)); everything is screened by eq. (9).
+            // The working-set warm state is *kept*: β = 0 here says nothing
+            // about the active sets accumulated at smaller λ.
             records.push(StepRecord {
                 lam,
                 kept: 0,
@@ -428,6 +514,8 @@ pub fn solve_path_with_screener(
                 gap: 0.0,
                 stage_discards: Vec::new(),
                 dynamic_discards: 0,
+                working_set_size: 0,
+                kkt_passes: 0,
             });
             betas.push(vec![0.0; p]);
             screener.init(ctx); // reset every stage to the λmax anchor
@@ -441,9 +529,38 @@ pub fn solve_path_with_screener(
             timed(|| screener.screen_step(ctx, lam, &mut keep));
         let kept0 = keep.iter().filter(|k| **k).count();
 
+        if cfg.strategy == PathStrategy::WorkingSet {
+            // ---- working-set solve: grow from the survivors, certify the
+            // full-problem gap (the screen mask is only a seed here) ----
+            let (wres, solve_secs) = timed(|| {
+                solve_working_set(ctx, lam, &keep, solver.as_ref(), &solve_opts, ws_state)
+            });
+            let true_zeros = wres.beta.iter().filter(|b| **b == 0.0).count();
+            records.push(StepRecord {
+                lam,
+                kept: kept0,
+                discarded: p - wres.working_set_size,
+                true_zeros,
+                screen_secs,
+                solve_secs,
+                solver_iters: wres.iters,
+                kkt_repairs: wres.expansions,
+                gap: wres.gap,
+                stage_discards,
+                dynamic_discards: 0,
+                working_set_size: wres.working_set_size,
+                kkt_passes: wres.kkt_passes,
+            });
+            screener.observe(ctx, lam, &wres.beta);
+            beta_prev.copy_from_slice(&wres.beta);
+            betas.push(wres.beta);
+            continue;
+        }
+
         // ---- reduced solve (+ KKT repair on the uncertified discards) ----
         let is_safe = screener.is_safe();
         let mut kkt_repairs = 0usize;
+        let mut kkt_passes = 0usize;
         let mut dynamic_discards = 0usize;
         let mut hook =
             if screener.dynamic() { Some(GapSafeHook::new(ctx)) } else { None };
@@ -491,6 +608,7 @@ pub fn solve_path_with_screener(
                         x.col_axpy_into(j, -res.beta[k], &mut resid);
                     }
                 }
+                kkt_passes += 1;
                 let viol = match screener.uncertified() {
                     Some(cand) if !hook_dropped.is_empty() => {
                         // hook drops are not in the certifier's candidate
@@ -529,6 +647,8 @@ pub fn solve_path_with_screener(
             gap: res.gap,
             stage_discards,
             dynamic_discards,
+            working_set_size: cols.len(),
+            kkt_passes,
         });
 
         // advance the pipeline's sequential state with the exact solution
@@ -669,6 +789,47 @@ mod tests {
         }
     }
 
+    /// Working-set strategy end to end: same solutions as the screen-first
+    /// driver to gap tolerance, every step certified, counters populated.
+    #[test]
+    fn working_set_path_matches_screen_first() {
+        let ds = synthetic::synthetic1(25, 200, 10, 0.1, 12);
+        let g = grid_for(&ds, 10);
+        let base = solve_path(
+            &ds.x,
+            &ds.y,
+            &g,
+            RuleKind::None,
+            SolverKind::Cd,
+            &PathConfig::default(),
+        );
+        let ws_cfg = PathConfig { strategy: PathStrategy::WorkingSet, ..Default::default() };
+        let ws = solve_path(&ds.x, &ds.y, &g, RuleKind::Strong, SolverKind::Cd, &ws_cfg);
+        assert_eq!(ws.betas.len(), base.betas.len());
+        for (k, (bs, bb)) in ws.betas.iter().zip(base.betas.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (bs[j] - bb[j]).abs() < 2e-4 * (1.0 + bb[j].abs()),
+                    "λ-index {k}, feature {j}: {} vs {}",
+                    bs[j],
+                    bb[j]
+                );
+            }
+        }
+        // every non-trivial step is full-problem certified and reports the
+        // reduced size it actually paid
+        let tol = PathConfig::default().solve_opts.tol_gap;
+        for r in ws.records.iter().skip(1) {
+            assert!(r.gap <= tol, "uncertified step at λ={}: gap {}", r.lam, r.gap);
+            assert!(r.kkt_passes >= 1, "no certification sweep at λ={}", r.lam);
+            assert!(r.working_set_size + r.discarded == ds.p());
+        }
+        let last = ws.records.last().unwrap();
+        assert!(last.working_set_size >= 1);
+        assert!(ws.mean_working_set() < ds.p() as f64);
+        assert!(ws.total_kkt_passes() >= ws.records.len() - 1);
+    }
+
     #[test]
     fn basic_mode_weaker_than_sequential() {
         // §4.1: sequential rules dominate their basic versions
@@ -746,6 +907,8 @@ mod tests {
             gap: 0.0,
             stage_discards: Vec::new(),
             dynamic_discards: 0,
+            working_set_size: 0,
+            kkt_passes: 0,
         };
         assert_eq!(zero.rejection_ratio(), 0.0);
         assert!(!zero.rejection_ratio().is_nan());

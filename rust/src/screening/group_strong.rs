@@ -52,6 +52,35 @@ pub fn group_kkt_violations(
         .collect()
 }
 
+/// The group working-set loop's shared sweep: one pass over every group
+/// computing the ellipsoid ratio `‖X_gᵀr‖/√n_g` — complement violators
+/// (ratio > λ, the *certification* threshold, no repair slack) sorted
+/// worst-first for the doubling expansion batches, plus the global max
+/// ratio that prices the full-problem group dual scale
+/// ([`crate::solver::dual::duality_gap_from_parts`]). One O(nnz) sweep per
+/// outer round instead of separate violation/scale/gap passes.
+pub fn group_kkt_sweep_scored(
+    ctx: &GroupScreenContext,
+    r: &[f64],
+    lam: f64,
+    in_set: &[bool],
+) -> (Vec<(usize, f64)>, f64) {
+    debug_assert_eq!(in_set.len(), ctx.n_groups());
+    let mut viol: Vec<(usize, f64)> = Vec::new();
+    let mut max_ratio = 0.0f64;
+    for g in 0..ctx.n_groups() {
+        let (_, len) = ctx.groups[g];
+        let ratio = ctx.group_corr_norm(g, r) / (len as f64).sqrt();
+        max_ratio = max_ratio.max(ratio);
+        if !in_set[g] && ratio > lam {
+            viol.push((g, ratio));
+        }
+    }
+    // worst first; stable sort keeps ties deterministic (ascending group id)
+    viol.sort_by(|a, b| b.1.total_cmp(&a.1));
+    (viol, max_ratio)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -683,6 +683,28 @@ impl ScreenPipeline {
         base.with_dynamic(dynamic)
     }
 
+    /// `--rule auto` strategy companion: pick the pipeline (exactly
+    /// [`Self::auto`]'s choice) *and* the path strategy. The working-set
+    /// engine (DESIGN.md §3b) wins when the problem is wide enough that
+    /// growing a set from a seed beats shrinking from p (p ≥ 8n) **and**
+    /// the λ-grid is fine enough (≥ 10 evaluations) for the accumulated
+    /// active set to amortise across steps; otherwise screen-first. The
+    /// CLI resolves this after the dataset loads and reports the pick on
+    /// stderr (an explicit `--strategy` always wins).
+    pub fn auto_with_strategy(
+        n: usize,
+        p: usize,
+        density: f64,
+        grid: usize,
+    ) -> (ScreenPipeline, crate::path::PathStrategy) {
+        let strategy = if p >= 8 * n.max(1) && grid >= 10 {
+            crate::path::PathStrategy::WorkingSet
+        } else {
+            crate::path::PathStrategy::Screen
+        };
+        (Self::auto(n, p, density, grid), strategy)
+    }
+
     /// Canonical name (round-trips through [`Self::parse`]).
     pub fn name(&self) -> String {
         let base = match &self.spec {
@@ -890,6 +912,27 @@ mod tests {
         {
             let pipe = ScreenPipeline::auto(n, p, d, g);
             assert_eq!(ScreenPipeline::parse(&pipe.name()).unwrap(), pipe);
+        }
+    }
+
+    /// `auto_with_strategy` decision table: the working-set engine needs
+    /// BOTH the wide regime (p ≥ 8n) and a fine grid (≥ 10 λ-evaluations);
+    /// the pipeline half is always exactly `auto`'s pick.
+    #[test]
+    fn auto_strategy_decision_table() {
+        use crate::path::PathStrategy;
+        let cases = [
+            (100usize, 1000usize, 0.3f64, 100usize, PathStrategy::WorkingSet),
+            (100, 800, 0.3, 10, PathStrategy::WorkingSet), // boundary: p = 8n, grid = 10
+            (100, 799, 0.3, 100, PathStrategy::Screen),    // just under 8n
+            (100, 1000, 0.3, 9, PathStrategy::Screen),     // grid too coarse
+            (100, 400, 0.3, 100, PathStrategy::Screen),    // modest p/n ratio
+            (0, 7, 0.3, 50, PathStrategy::Screen),         // degenerate n → n.max(1)
+        ];
+        for (n, p, d, g, want) in cases {
+            let (pipe, strat) = ScreenPipeline::auto_with_strategy(n, p, d, g);
+            assert_eq!(strat, want, "n={n} p={p} grid={g}");
+            assert_eq!(pipe, ScreenPipeline::auto(n, p, d, g));
         }
     }
 

@@ -74,7 +74,8 @@ pub fn kkt_violations(
 /// pipeline's *uncertified* discards. Sweeps only the candidate columns
 /// (one `xt_w_subset` over the residual set) instead of all p, which is the
 /// point of safe certification: the repair check shrinks with the
-/// certifier's coverage.
+/// certifier's coverage. The X_jᵀr products land in the context's reusable
+/// sweep scratch — repair rounds pay no per-call allocation.
 pub fn kkt_violations_in(
     ctx: &ScreenContext,
     r: &[f64],
@@ -88,8 +89,8 @@ pub fn kkt_violations_in(
     if cand.is_empty() {
         return Vec::new();
     }
-    let mut corr = vec![0.0; cand.len()];
-    ctx.sweep.xt_w_subset(&cand, r, &mut corr);
+    let mut corr = ctx.sweep_scratch();
+    ctx.sweep.xt_w_subset(&cand, r, &mut corr[..cand.len()]);
     let tol = lam * (1.0 + 1e-7);
     let mut viol = Vec::new();
     for (k, &j) in cand.iter().enumerate() {
@@ -98,6 +99,41 @@ pub fn kkt_violations_in(
         }
     }
     viol
+}
+
+/// The working-set outer loop's shared sweep: **one** full `Xᵀr` pass (into
+/// the context's scratch buffer) that yields everything the loop needs per
+/// round — the complement KKT violators with their scores (worst-first, for
+/// the doubling expansion batches), and the global ‖Xᵀr‖∞ that prices the
+/// full-problem dual scale. Violation here is the *certification* threshold
+/// `|xⱼᵀr| > λ` (no repair slack): a clean complement plus a tight
+/// restricted solve makes β full-problem optimal, so near-boundary
+/// coordinates are admitted rather than left to stall the gap.
+pub fn kkt_sweep_scored(
+    ctx: &ScreenContext,
+    r: &[f64],
+    lam: f64,
+    in_set: &[bool],
+) -> (Vec<(usize, f64)>, f64) {
+    let p = ctx.p();
+    debug_assert_eq!(in_set.len(), p);
+    let mut viol: Vec<(usize, f64)> = Vec::new();
+    let mut xtr_inf = 0.0f64;
+    {
+        let mut corr = ctx.sweep_scratch();
+        ctx.sweep.xt_w(r, &mut corr[..]);
+        for (j, c) in corr.iter().enumerate().take(p) {
+            let a = c.abs();
+            xtr_inf = xtr_inf.max(a);
+            if !in_set[j] && a > lam {
+                viol.push((j, a));
+            }
+        }
+    }
+    // worst violators first; stable sort keeps ties in ascending-index
+    // order, so expansion batches are deterministic
+    viol.sort_by(|a, b| b.1.total_cmp(&a.1));
+    (viol, xtr_inf)
 }
 
 #[cfg(test)]

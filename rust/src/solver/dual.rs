@@ -75,6 +75,31 @@ pub fn duality_gap(
     ((primal - dual) / scale).max(0.0)
 }
 
+/// Duality gap from precomputed parts — the working-set outer loop's form.
+/// The loop's single complement sweep already produced the penalty-dual
+/// norm (`inf_norm` = ‖Xᵀr‖∞ for the Lasso, max_g ‖X_gᵀr‖/√n_g for
+/// groups) and the caller knows its penalty value (`penalty` = ‖β‖₁ resp.
+/// Σ_g √n_g‖β_g‖), so no second O(nnz) sweep is paid. Same math and the
+/// same `max(1, ½‖y‖²)` relative scale as [`duality_gap`] /
+/// [`group_duality_gap`].
+pub fn duality_gap_from_parts(
+    y: &[f64],
+    r: &[f64],
+    penalty: f64,
+    inf_norm: f64,
+    lam: f64,
+) -> f64 {
+    let s = if inf_norm <= lam || inf_norm == 0.0 { 1.0 / lam } else { 1.0 / inf_norm };
+    let rr = dot(r, r);
+    let ry = dot(r, y);
+    let yy = dot(y, y);
+    let primal = 0.5 * rr + lam * penalty;
+    let dist = s * s * rr - 2.0 * s / lam * ry + yy / (lam * lam);
+    let dual = 0.5 * yy - 0.5 * lam * lam * dist;
+    let scale = (0.5 * yy).max(1.0);
+    ((primal - dual) / scale).max(0.0)
+}
+
 /// The exact dual optimum at λ from the exact primal solution:
 /// `θ*(λ) = (y − Xβ*(λ))/λ` (KKT eq. (3)). Screening rules consume this.
 pub fn dual_point_from_beta(
@@ -221,6 +246,36 @@ mod tests {
             let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
             let gap = duality_gap(&ds.x, &ds.y, &cols, &beta, &r, lam);
             assert!(gap >= 0.0);
+        });
+    }
+
+    #[test]
+    fn gap_from_parts_matches_duality_gap() {
+        // the precomputed-parts form is the same formula with the sweep
+        // hoisted out — on identical inputs it must agree to round-off
+        prop::check("gap_from_parts == duality_gap", 0xD7, 20, |rng| {
+            let n = 5 + rng.usize(15);
+            let p = 5 + rng.usize(25);
+            let ds = synthetic::synthetic1(n, p, p / 4, 0.1, rng.next_u64());
+            let cols: Vec<usize> = (0..p).collect();
+            let mut beta = vec![0.0; p];
+            for b in beta.iter_mut() {
+                if rng.f64() < 0.3 {
+                    *b = rng.uniform(-1.0, 1.0);
+                }
+            }
+            let mut r = ds.y.clone();
+            for (k, &j) in cols.iter().enumerate() {
+                crate::linalg::axpy(-beta[k], ds.x.dense().unwrap().col(j), &mut r);
+            }
+            let lam = rng.uniform(0.05, 1.0) * lambda_max(&ds.x, &ds.y);
+            let mut xtr_inf = 0.0f64;
+            for &j in &cols {
+                xtr_inf = xtr_inf.max(ds.x.col_dot_w(j, &r).abs());
+            }
+            let a = duality_gap(&ds.x, &ds.y, &cols, &beta, &r, lam);
+            let b = duality_gap_from_parts(&ds.y, &r, nrm1(&beta), xtr_inf, lam);
+            assert!((a - b).abs() <= 1e-12 * (1.0 + a.abs()), "{a} vs {b}");
         });
     }
 

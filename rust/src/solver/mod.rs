@@ -21,6 +21,7 @@ pub mod enet;
 pub mod fista;
 pub mod group;
 pub mod lars;
+pub mod working_set;
 
 use crate::linalg::DesignMatrix;
 

@@ -1,0 +1,288 @@
+//! Working-set solve engine (ROADMAP item 3, "Gap Safe ++"): grow the
+//! restricted problem from a screening seed instead of shrinking from p.
+//!
+//! Screening (DPP/EDPP) works *down* from all p features; the fastest path
+//! solvers invert the direction (Fercoq–Gramfort–Salmon '15, Zeng '17, the
+//! `GAPSAFE_pp` "active warm start" variants): seed a working set W from the
+//! pipeline survivors plus the session's cached active set, solve the
+//! W-restricted subproblem with any inner [`LassoSolver`] to a *scaled*
+//! inner gap tolerance, then pay one O(nnz) sweep that serves three purposes
+//! at once — KKT violator detection on W's complement, the global ‖Xᵀr‖∞
+//! dual scale, and the **full-problem** duality gap
+//! ([`kkt_sweep_scored`] + [`dual::duality_gap_from_parts`]). If the full
+//! gap certifies (≤ `tol_gap`) the answer is exact-to-tolerance on the
+//! original p-dimensional problem — never heuristic; otherwise the worst
+//! violators join W in doubling batches and the loop repeats. Termination is
+//! structural: W grows monotonically (bounded by p) and a KKT-clean
+//! complement plus a tightened inner solve drives the full gap to zero.
+//!
+//! [`WorkingSetState`] is the *active warm start*: the accumulated working
+//! set, the full-length β and the inner solver's momentum state survive
+//! across λ steps **and** across serving requests (the session registry in
+//! [`crate::coordinator::registry`] keeps one per session), so a
+//! repeat-`FitPath`/`Screen` tenant pays O(active set), not O(p), per λ —
+//! its first complement sweep finds no violators and certifies immediately.
+
+use crate::linalg::DesignMatrix;
+use crate::screening::strong::kkt_sweep_scored;
+use crate::screening::ScreenContext;
+
+use super::{dual, LassoSolver, SolveOptions, SolverState};
+
+/// Outer-loop safety valve: W grows every round it fails to certify, so on
+/// any real problem the loop ends long before this; the cap only bounds
+/// pathological non-convergence of the *inner* solver (e.g. `max_iters` far
+/// too small), where each round still makes warm-started progress.
+const MAX_ROUNDS: usize = 64;
+
+/// The active warm start a working-set caller carries across solves: the
+/// accumulated working set, the last certified full-length β, and the inner
+/// solver's resume state. `Default` is the cold start (empty set, zero β).
+#[derive(Clone, Debug, Default)]
+pub struct WorkingSetState {
+    /// Accumulated working set (sorted ascending, deduped): the union of
+    /// every coordinate ever admitted, so a later solve at any λ seeds a
+    /// superset of every active set seen so far.
+    pub cols: Vec<usize>,
+    /// Full-length β from the last solve (support ⊆ `cols`); gathered as
+    /// the restricted warm start of the next solve.
+    pub beta: Vec<f64>,
+    /// Inner-solver resume state (FISTA momentum); [`SolverState::None`]
+    /// for stateless solvers.
+    pub solver_state: SolverState,
+}
+
+impl WorkingSetState {
+    /// Drop everything — the next solve is a cold start.
+    pub fn reset(&mut self) {
+        self.cols.clear();
+        self.beta.clear();
+        self.solver_state = SolverState::None;
+    }
+}
+
+/// Outcome of one certified working-set solve.
+#[derive(Clone, Debug)]
+pub struct WorkingSetResult {
+    /// Full-length solution (exact-to-tolerance on the *full* problem when
+    /// `gap ≤ tol_gap`).
+    pub beta: Vec<f64>,
+    /// Total inner-solver iterations across all outer rounds.
+    pub iters: usize,
+    /// Final **full-problem** relative duality gap (same scale as
+    /// [`dual::duality_gap`]).
+    pub gap: f64,
+    /// Final working-set size |W| — how much of p this λ actually touched.
+    pub working_set_size: usize,
+    /// Complement KKT sweeps paid (≥ 1: every certification is a sweep).
+    pub kkt_passes: usize,
+    /// Expansion rounds (sweeps that found violators and grew W).
+    pub expansions: usize,
+}
+
+/// Solve `min ½‖y − Xβ‖² + λ‖β‖₁` over the **full** problem by growing a
+/// working set from `seed_keep` (the screening pipeline's survivor mask)
+/// and `state` (the caller's accumulated active set).
+///
+/// The returned β is certified against the full-problem duality gap — the
+/// screen seed is only a guess here, so an unsafe (heuristic) or even empty
+/// seed still yields a correct answer; it just costs more expansion rounds.
+/// Under a `time_budget` the loop stops after the first inner solve that
+/// exhausts its budget, returning its best gap-tagged iterate (same anytime
+/// contract as the inner solvers).
+pub fn solve_working_set(
+    ctx: &ScreenContext,
+    lam: f64,
+    seed_keep: &[bool],
+    solver: &dyn LassoSolver,
+    opts: &SolveOptions,
+    state: &mut WorkingSetState,
+) -> WorkingSetResult {
+    let x = ctx.x;
+    let y = ctx.y;
+    let p = x.n_cols();
+    assert_eq!(seed_keep.len(), p);
+    if state.beta.len() != p {
+        // fresh session (or the dataset changed shape): cold start
+        state.reset();
+        state.beta.resize(p, 0.0);
+    }
+
+    // W₀ = screening survivors ∪ the accumulated active set
+    let mut in_ws = seed_keep.to_vec();
+    for &j in &state.cols {
+        in_ws[j] = true;
+    }
+    let mut ws: Vec<usize> = (0..p).filter(|&j| in_ws[j]).collect();
+
+    // the restricted subproblems run at a tightened tolerance so their
+    // leftover slack cannot by itself push the full gap past `tol_gap`
+    let mut inner = opts.clone();
+    inner.tol_gap = 0.5 * opts.tol_gap;
+
+    let mut beta_full = vec![0.0; p];
+    let mut r = vec![0.0; y.len()];
+    let mut iters = 0usize;
+    let mut kkt_passes = 0usize;
+    let mut expansions = 0usize;
+    let mut gap = f64::INFINITY;
+    let mut batch = 8usize;
+
+    for _round in 0..MAX_ROUNDS {
+        // ---- restricted solve over W (empty W: β = 0, r = y) ----
+        let mut budget_hit = false;
+        if ws.is_empty() {
+            beta_full.fill(0.0);
+            r.copy_from_slice(y);
+        } else {
+            let warm: Vec<f64> = ws.iter().map(|&j| state.beta[j]).collect();
+            let res = solver.solve_warm(
+                x,
+                y,
+                &ws,
+                lam,
+                Some(&warm),
+                &inner,
+                None,
+                &mut state.solver_state,
+            );
+            iters += res.iters;
+            budget_hit = inner.time_budget.is_some() && res.gap > inner.tol_gap;
+            beta_full.fill(0.0);
+            r.copy_from_slice(y);
+            for (k, &j) in ws.iter().enumerate() {
+                beta_full[j] = res.beta[k];
+                if res.beta[k] != 0.0 {
+                    x.col_axpy_into(j, -res.beta[k], &mut r);
+                }
+            }
+        }
+
+        // ---- one shared complement sweep: violators, scores, ‖Xᵀr‖∞ ----
+        let (viol, xtr_inf) = kkt_sweep_scored(ctx, &r, lam, &in_ws);
+        kkt_passes += 1;
+        gap = dual::duality_gap_from_parts(
+            y,
+            &r,
+            crate::linalg::nrm1(&beta_full),
+            xtr_inf,
+            lam,
+        );
+        if gap <= opts.tol_gap || budget_hit {
+            break;
+        }
+        if viol.is_empty() {
+            // complement is KKT-clean, so the residual gap is pure inner-
+            // solve slack: tighten and re-solve the same W (warm-started,
+            // so each pass continues the previous descent)
+            if inner.tol_gap <= 1e-15 {
+                break;
+            }
+            inner.tol_gap *= 0.25;
+            continue;
+        }
+        // ---- admit the worst violators, doubling the batch per round ----
+        expansions += 1;
+        for &(j, _) in viol.iter().take(batch) {
+            in_ws[j] = true;
+        }
+        batch = batch.saturating_mul(2);
+        ws = (0..p).filter(|&j| in_ws[j]).collect();
+    }
+
+    // persist the active warm start: β, accumulated set, momentum. `ws`
+    // already contains the previous `state.cols` (seeded above), so
+    // assigning it *is* the union.
+    state.beta.copy_from_slice(&beta_full);
+    state.cols = ws.clone();
+
+    WorkingSetResult {
+        beta: beta_full,
+        iters,
+        gap,
+        working_set_size: ws.len(),
+        kkt_passes,
+        expansions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solver::cd::CdSolver;
+
+    #[test]
+    fn certifies_full_problem_from_empty_seed() {
+        // adversarial seed: nothing survives "screening" — the engine must
+        // still return a full-problem-certified solution
+        let ds = synthetic::synthetic1(30, 240, 12, 0.1, 42);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.3 * ctx.lam_max;
+        let opts = SolveOptions::default();
+        let seed = vec![false; 240];
+        let mut state = WorkingSetState::default();
+        let res = solve_working_set(&ctx, lam, &seed, &CdSolver, &opts, &mut state);
+        assert!(res.gap <= opts.tol_gap, "gap {}", res.gap);
+        assert!(res.kkt_passes >= 2, "empty seed must expand");
+        assert!(res.working_set_size < 240, "working set stayed restricted");
+
+        let cols: Vec<usize> = (0..240).collect();
+        let tight = SolveOptions { tol_gap: 1e-12, ..Default::default() };
+        let full =
+            CdSolver.solve(&ds.x, &ds.y, &cols, lam, None, &tight).scatter(&cols, 240);
+        for j in 0..240 {
+            assert!(
+                (res.beta[j] - full[j]).abs() < 2e-4 * (1.0 + full[j].abs()),
+                "feature {j}: {} vs {}",
+                res.beta[j],
+                full[j]
+            );
+        }
+        // no false exclusions: every truly-active coordinate is in W
+        for j in 0..240 {
+            if full[j].abs() > 1e-6 {
+                assert!(state.cols.contains(&j), "active {j} missing from W");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_state_certifies_in_one_pass() {
+        let ds = synthetic::synthetic1(30, 240, 12, 0.1, 7);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.3 * ctx.lam_max;
+        let opts = SolveOptions::default();
+        let seed = vec![false; 240];
+        let mut state = WorkingSetState::default();
+        let first = solve_working_set(&ctx, lam, &seed, &CdSolver, &opts, &mut state);
+        let second = solve_working_set(&ctx, lam, &seed, &CdSolver, &opts, &mut state);
+        assert!(first.kkt_passes >= 2);
+        assert_eq!(second.kkt_passes, 1, "cached W must skip every expansion");
+        assert!(second.kkt_passes < first.kkt_passes);
+        assert!(second.gap <= opts.tol_gap);
+    }
+
+    #[test]
+    fn state_reset_on_shape_change() {
+        let ds = synthetic::synthetic1(20, 60, 6, 0.1, 9);
+        let ctx = ScreenContext::new(&ds.x, &ds.y);
+        let lam = 0.4 * ctx.lam_max;
+        let mut state = WorkingSetState {
+            cols: vec![3, 5],
+            beta: vec![1.0; 10], // stale: wrong p
+            solver_state: SolverState::None,
+        };
+        let seed = vec![true; 60];
+        let res = solve_working_set(
+            &ctx,
+            lam,
+            &seed,
+            &CdSolver,
+            &SolveOptions::default(),
+            &mut state,
+        );
+        assert_eq!(state.beta.len(), 60);
+        assert!(res.gap <= SolveOptions::default().tol_gap);
+    }
+}

@@ -544,3 +544,75 @@ fn group_path_runs_on_csc() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Working-set strategy parity (DESIGN.md §3b): the working-set engine is
+// built entirely from backend-agnostic kernels — restricted CD solves plus
+// complement KKT sweeps through `DesignMatrix` — so its certified paths
+// inherit the same contract as screen-first: gap-certified and β-close on
+// dense vs CSC, and **bit-identical** on CSC vs the row-sharded pool
+// backend (whose fold is a deterministic shard-order reduce).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn working_set_path_on_csc_matches_dense_to_tolerance() {
+    use dpp_screen::path::{solve_path_pipeline, PathStrategy};
+    use dpp_screen::screening::ScreenPipeline;
+
+    let ds = sparse_problem(30, 260, 0.2, 27);
+    let csc = ds.x.to_csc();
+    let grid = LambdaGrid::relative(&csc, &ds.y, 10, 0.05, 1.0);
+    let cfg = PathConfig { strategy: PathStrategy::WorkingSet, ..PathConfig::default() };
+    let pipe = ScreenPipeline::single("strong");
+    let dense = solve_path_pipeline(&ds.x, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    let sparse = solve_path_pipeline(&csc, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    // every non-trivial step must carry the full-problem certificate on
+    // both backends — the engine never returns a heuristic solution
+    let tol = cfg.solve_opts.tol_gap;
+    for (k, (rd, rs)) in dense.records.iter().zip(sparse.records.iter()).enumerate() {
+        if rd.kkt_passes > 0 {
+            assert!(rd.gap <= tol, "dense step {k} uncertified: gap {}", rd.gap);
+        }
+        if rs.kkt_passes > 0 {
+            assert!(rs.gap <= tol, "csc step {k} uncertified: gap {}", rs.gap);
+        }
+    }
+    for (k, (bd, bs)) in dense.betas.iter().zip(sparse.betas.iter()).enumerate() {
+        for j in 0..ds.p() {
+            assert!(
+                (bs[j] - bd[j]).abs() < 1e-4 * (1.0 + bd[j].abs()),
+                "λ-index {k}, feature {j}: csc {} vs dense {}",
+                bs[j],
+                bd[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn working_set_path_on_sharded_matches_csc_bit_identical() {
+    use dpp_screen::path::{solve_path_pipeline, PathStrategy};
+    use dpp_screen::screening::ScreenPipeline;
+
+    let ds = sparse_problem(30, 260, 0.2, 28);
+    let csc = ds.x.to_csc();
+    let grid = LambdaGrid::relative(&csc, &ds.y, 10, 0.05, 1.0);
+    let cfg = PathConfig { strategy: PathStrategy::WorkingSet, ..PathConfig::default() };
+    let pipe = ScreenPipeline::single("strong");
+    let base = solve_path_pipeline(&csc, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    let sh = ShardSetMatrix::split_csc(&csc, 3).with_pool(Arc::new(WorkerPool::new(2)));
+    let paged = solve_path_pipeline(&sh, &ds.y, &grid, &pipe, SolverKind::Cd, &cfg);
+    // identical sweep bits ⇒ identical violator scores ⇒ the expansion
+    // trajectory itself (not just the final β) is required to match
+    for (k, (rb, rp)) in base.records.iter().zip(paged.records.iter()).enumerate() {
+        assert_eq!(rb.kept, rp.kept, "kept diverged at λ-index {k}");
+        assert_eq!(
+            rb.working_set_size, rp.working_set_size,
+            "working-set size diverged at λ-index {k}"
+        );
+        assert_eq!(rb.kkt_passes, rp.kkt_passes, "kkt passes diverged at λ-index {k}");
+    }
+    for (k, (bb, bp)) in base.betas.iter().zip(paged.betas.iter()).enumerate() {
+        assert_eq!(bb, bp, "β diverged at λ-index {k}");
+    }
+}

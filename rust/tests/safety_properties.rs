@@ -3,8 +3,12 @@
 //! plus the composed-pipeline safety invariants (DESIGN.md §3).
 
 use dpp_screen::data::{synthetic, RealDataset};
+use dpp_screen::path::group::{
+    solve_group_path, solve_group_path_working_set, GroupRuleKind,
+};
 use dpp_screen::path::{
-    solve_path, solve_path_pipeline, LambdaGrid, PathConfig, RuleKind, SolverKind,
+    solve_path, solve_path_pipeline, LambdaGrid, PathConfig, PathStrategy, RuleKind,
+    SolverKind,
 };
 use dpp_screen::screening::{
     dome::DomeRule, dpp::DppRule, edpp::EdppRule, edpp::Improvement1Rule,
@@ -290,6 +294,110 @@ fn dynamic_pipeline_safe_along_paths() {
                 r.lam
             );
         }
+    }
+}
+
+/// Working-set equivalence suite (DESIGN.md §3b): along full paths on
+/// randomized problems, the working-set engine's solutions are within the
+/// duality-gap tolerance of the unscreened reference, every non-trivial
+/// step carries a certified full-problem gap, and no truly-active feature
+/// is ever excluded from the final working set (zero false exclusions —
+/// the engine's analogue of the safe-rule guarantee, earned by
+/// certification rather than geometry).
+#[test]
+fn working_set_paths_equivalent_and_never_exclude_active() {
+    prop::check("working-set equivalence", 0x3B5E7, 5, |rng| {
+        let n = 20 + rng.usize(15);
+        let p = 80 + rng.usize(80);
+        let ds = if rng.usize(2) == 0 {
+            synthetic::synthetic1(n, p, p / 8 + 1, 0.1, rng.next_u64())
+        } else {
+            synthetic::synthetic2(n, p, p / 8 + 1, 0.1, rng.next_u64())
+        };
+        let grid = LambdaGrid::relative(&ds.x, &ds.y, 6, 0.1, 1.0);
+        let cfg = PathConfig::default();
+        let reference =
+            solve_path(&ds.x, &ds.y, &grid, RuleKind::None, SolverKind::Cd, &cfg);
+        let ws_cfg =
+            PathConfig { strategy: PathStrategy::WorkingSet, ..Default::default() };
+        let spec = if rng.usize(2) == 0 { "strong" } else { "cascade:sis,edpp" };
+        let pipe = ScreenPipeline::parse(spec).unwrap();
+        let ws = solve_path_pipeline(&ds.x, &ds.y, &grid, &pipe, SolverKind::Cd, &ws_cfg);
+        let tol = cfg.solve_opts.tol_gap;
+        for (k, (bw, br)) in ws.betas.iter().zip(reference.betas.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (bw[j] - br[j]).abs() < 2e-4 * (1.0 + br[j].abs()),
+                    "{spec}: working-set diverged at λ-index {k}, feature {j}: {} vs {}",
+                    bw[j],
+                    br[j]
+                );
+                // zero false exclusions: a clearly-active reference feature
+                // must sit inside the final working set (nonzero in bw —
+                // excluded features are exactly zero by construction)
+                if br[j].abs() > 1e-3 {
+                    assert!(
+                        bw[j] != 0.0,
+                        "{spec}: active feature {j} excluded at λ-index {k} (ref β={})",
+                        br[j]
+                    );
+                }
+            }
+            let r = &ws.records[k];
+            if r.kkt_passes > 0 {
+                assert!(r.gap <= tol, "{spec}: uncertified λ-index {k}: gap {}", r.gap);
+                assert_eq!(r.working_set_size + r.discarded, ds.p());
+            }
+        }
+    });
+}
+
+/// Group working-set equivalence: restricted group subproblems certified by
+/// the full-problem max_g ‖X_gᵀr‖/√n_g check reproduce the unscreened
+/// group-BCD path and never exclude a group with nonzero reference energy.
+#[test]
+fn group_working_set_equivalent_to_baseline() {
+    let ds = synthetic::group_synthetic(40, 240, 48, 0x6AB5);
+    let groups = ds.groups.clone().unwrap();
+    let (glm, _) = dual::group_lambda_max(&ds.x, &ds.y, &groups);
+    let grid = LambdaGrid::relative_to(glm, 8, 0.1, 1.0);
+    let opts = SolveOptions::default();
+    let base =
+        solve_group_path(&ds.x, &ds.y, &groups, &grid, GroupRuleKind::None, &opts);
+    let ws = solve_group_path_working_set(
+        &ds.x,
+        &ds.y,
+        &groups,
+        &grid,
+        GroupRuleKind::Strong,
+        &opts,
+    );
+    for (k, (bw, bb)) in ws.betas.iter().zip(base.betas.iter()).enumerate() {
+        for j in 0..bw.len() {
+            assert!(
+                (bw[j] - bb[j]).abs() < 5e-3 * (1.0 + bb[j].abs()),
+                "group working-set diverged at λ-index {k}, coeff {j}: {} vs {}",
+                bw[j],
+                bb[j]
+            );
+        }
+        // zero false exclusions at group granularity
+        for (g, &(start, len)) in groups.iter().enumerate() {
+            let ref_nrm = bb[start..start + len]
+                .iter()
+                .fold(0.0f64, |acc, v| acc + v * v)
+                .sqrt();
+            if ref_nrm > 1e-3 {
+                let ws_nrm = bw[start..start + len]
+                    .iter()
+                    .fold(0.0f64, |acc, v| acc + v * v)
+                    .sqrt();
+                assert!(ws_nrm > 0.0, "active group {g} excluded at λ-index {k}");
+            }
+        }
+    }
+    for r in ws.records.iter().filter(|r| r.kkt_passes > 0) {
+        assert!(r.gap <= opts.tol_gap, "uncertified group step λ={}: {}", r.lam, r.gap);
     }
 }
 

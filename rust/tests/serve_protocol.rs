@@ -14,7 +14,7 @@ use dpp_screen::coordinator::{
 };
 use dpp_screen::data::synthetic;
 use dpp_screen::linalg::{CscMatrix, DesignMatrix, ShardSetMatrix};
-use dpp_screen::path::{PathConfig, RuleKind, SolverKind};
+use dpp_screen::path::{PathConfig, PathStrategy, RuleKind, SolverKind};
 use dpp_screen::runtime::pool::WorkerPool;
 use dpp_screen::screening::ScreenPipeline;
 use dpp_screen::solver::dual;
@@ -936,6 +936,61 @@ fn fista_session_serves_and_solver_override_round_trips() {
     assert!(overridden.gap <= 1e-6);
     let after = screen("f", 0.3 * lam_max, RequestOptions::default());
     assert!(after.gap <= 1e-6);
+    coord.shutdown();
+}
+
+/// Under the working-set strategy a session's accumulated working set is
+/// serving state: the first FitPath pays expansion rounds growing each λ's
+/// restricted problem from the (deliberately tight) SIS seed, and a repeat
+/// of the identical request seeds every λ from the active sets already
+/// discovered — one complement sweep per λ certifies, so the second
+/// request's total KKT passes are *strictly* smaller.
+#[test]
+fn repeat_fitpath_reuses_cached_working_set() {
+    let (csc, y, _lam_max) = sparse_problem(30, 300, 85);
+    let p = csc.n_cols();
+    let coord = Coordinator::new();
+    coord
+        .register(SessionSpec::new(
+            "w",
+            csc,
+            y,
+            ScreenPipeline::single("sis"),
+            SolverKind::Cd,
+            PathConfig { strategy: PathStrategy::WorkingSet, ..PathConfig::default() },
+        ))
+        .unwrap();
+    let fit = || match coord
+        .submit("w", Request::FitPath { grid: 6, lo: 0.1, opts: Default::default() })
+        .recv_response()
+        .unwrap()
+    {
+        Response::Path(ps) => ps,
+        other => panic!("expected path summary, got {other:?}"),
+    };
+    let first = fit();
+    let second = fit();
+    // both fits are exact-to-tolerance — the strategy never trades the gap
+    // contract for speed
+    let tol = PathConfig::default().solve_opts.tol_gap;
+    assert!(!first.partial && !second.partial);
+    assert!(first.max_gap <= tol, "first fit uncertified: {}", first.max_gap);
+    assert!(second.max_gap <= tol, "second fit uncertified: {}", second.max_gap);
+    // the cold fit needed expansion sweeps beyond one-per-λ; the warm fit
+    // certifies from the cached working set in exactly one sweep per λ
+    assert!(
+        second.kkt_passes < first.kkt_passes,
+        "repeat FitPath did not reuse the session working set: {} vs {} passes",
+        second.kkt_passes,
+        first.kkt_passes
+    );
+    // and it really ran restricted: the mean working set is a small slice
+    // of p, not the full problem
+    assert!(second.mean_working_set > 0.0);
+    assert!(
+        second.mean_working_set < p as f64,
+        "working set degenerated to the full problem"
+    );
     coord.shutdown();
 }
 
